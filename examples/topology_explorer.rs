@@ -1,0 +1,71 @@
+//! Topology explorer: evaluate every overlay in the repo on the paper's
+//! three metrics (§II-B) at a chosen size — an interactive version of
+//! Fig. 3.
+//!
+//! ```bash
+//! cargo run --release --example topology_explorer -- 200
+//! ```
+
+use fedlay::baselines;
+use fedlay::bench_util::Table;
+use fedlay::metrics;
+use fedlay::topology::fedlay_graph;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(200);
+    let seed = 1;
+    let mut t = Table::new(&[
+        "topology", "avg deg", "lambda", "conv.factor", "diameter", "aspl", "connected",
+    ]);
+    let names = [
+        "ring", "chain", "grid", "torus", "hypercube", "complete", "chord", "viceroy",
+        "waxman", "delaunay", "social",
+    ];
+    for name in names {
+        let g = baselines::by_name(name, n, seed)?;
+        let m = metrics::evaluate(&g, seed);
+        t.row(&[
+            name.to_string(),
+            format!("{:.1}", m.avg_degree),
+            format!("{:.4}", m.lambda),
+            if m.convergence_factor.is_finite() {
+                format!("{:.1}", m.convergence_factor)
+            } else {
+                "inf".into()
+            },
+            m.diameter.to_string(),
+            format!("{:.2}", m.avg_shortest_path),
+            m.connected.to_string(),
+        ]);
+    }
+    for l in [2usize, 3, 5, 7] {
+        let g = fedlay_graph(n, l);
+        let m = metrics::evaluate(&g, seed);
+        t.row(&[
+            format!("fedlay-L{l}"),
+            format!("{:.1}", m.avg_degree),
+            format!("{:.4}", m.lambda),
+            format!("{:.1}", m.convergence_factor),
+            m.diameter.to_string(),
+            format!("{:.2}", m.avg_shortest_path),
+            m.connected.to_string(),
+        ]);
+    }
+    // the "Best of 100 random regular graphs" reference row (paper §II-C)
+    let trials = if n <= 200 { 20 } else { 5 };
+    let best = baselines::best_of_regular(n, 6, trials, seed);
+    t.row(&[
+        format!("best-of-{trials} RRG d=6"),
+        "6.0".into(),
+        format!("{:.4}", best.best_lambda),
+        format!("{:.1}", best.best_convergence_factor),
+        best.best_diameter.to_string(),
+        format!("{:.2}", best.best_aspl),
+        "true".into(),
+    ]);
+    print!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,81 @@
+"""AOT compiler: lower the L2 model zoo to HLO-text artifacts for Rust.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. For every task in ``model.TASKS`` this emits::
+
+    artifacts/<task>_init.hlo.txt
+    artifacts/<task>_train.hlo.txt
+    artifacts/<task>_eval.hlo.txt
+    artifacts/<task>_agg.hlo.txt
+
+plus ``artifacts/manifest.txt`` — a key=value description of every artifact
+(shapes, dtypes, param counts) parsed by ``rust/src/runtime/artifacts.rs``.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (return_tuple ABI)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_task(spec: model.TaskSpec, outdir: str, manifest: list) -> None:
+    fns = model.make_fns(spec)
+    args = model.example_args(spec)
+    for kind in ("init", "train", "eval", "agg"):
+        lowered = jax.jit(fns[kind]).lower(*args[kind])
+        text = to_hlo_text(lowered)
+        fname = f"{spec.name}_{kind}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append(f"artifact.{spec.name}.{kind} = {fname}")
+        print(f"  {fname}: {len(text)} chars")
+    manifest.extend([
+        f"task.{spec.name}.param_count = {spec.param_count}",
+        f"task.{spec.name}.batch = {spec.batch}",
+        f"task.{spec.name}.x_len = {spec.x_shape[1]}",
+        f"task.{spec.name}.x_dtype = {spec.x_dtype}",
+        f"task.{spec.name}.classes = {spec.num_classes}",
+    ])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower the model zoo to HLO text")
+    ap.add_argument("--out", default="../artifacts/manifest.txt",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--tasks", default=",".join(model.TASKS))
+    args = ap.parse_args()
+
+    outdir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(outdir, exist_ok=True)
+    manifest = [f"k_max = {model.K_MAX}"]
+    tasks = [t for t in args.tasks.split(",") if t]
+    manifest.append(f"tasks = {','.join(tasks)}")
+    for name in tasks:
+        spec = model.build_task(name)
+        print(f"lowering task {name} (P={spec.param_count})")
+        lower_task(spec, outdir, manifest)
+    with open(args.out, "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} entries to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

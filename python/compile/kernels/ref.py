@@ -1,0 +1,49 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact (up to float re-association)
+reference implementation here. pytest (``python/tests/test_kernel.py``)
+sweeps shapes/dtypes with hypothesis and asserts ``assert_allclose`` between
+the kernel and the oracle, so the oracle *is* the correctness contract.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Guard against an all-zero weight vector (e.g. a node with no neighbors and
+# a zeroed self weight). Matches the kernel's epsilon exactly.
+EPS = 1e-12
+
+
+def weighted_agg_ref(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Confidence-weighted model aggregation (MEP, paper §III-C2).
+
+    omega_u = sum_j c_j * omega_j / sum_j c_j
+
+    Args:
+      stack:   ``[K, P]`` — K flat model parameter vectors (self + neighbors,
+               padded rows carry ``weights == 0``).
+      weights: ``[K]`` — confidence values ``c_j >= 0``.
+
+    Returns:
+      ``[P]`` aggregated flat parameter vector, same dtype as ``stack``.
+    """
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), EPS)
+    num = jnp.einsum("k,kp->p", w, stack.astype(jnp.float32))
+    return (num / denom).astype(stack.dtype)
+
+
+def sgd_step_ref(params: jnp.ndarray, grads: jnp.ndarray, lr: jnp.ndarray) -> jnp.ndarray:
+    """Fused SGD parameter update: ``params - lr * grads``.
+
+    Args:
+      params: ``[P]`` flat parameters.
+      grads:  ``[P]`` flat gradient.
+      lr:     scalar learning rate (0-d or ``[1]`` array).
+
+    Returns:
+      ``[P]`` updated parameters, dtype of ``params``.
+    """
+    lr32 = jnp.asarray(lr, jnp.float32).reshape(())
+    out = params.astype(jnp.float32) - lr32 * grads.astype(jnp.float32)
+    return out.astype(params.dtype)

@@ -1,0 +1,54 @@
+"""Pallas kernel: fused SGD parameter update ``params - lr * grads``.
+
+Used inside every L2 train step so the parameter update is a single fused
+pass over the flat parameter vector (one read of params, one of grads, one
+write) instead of separate scale + subtract HLO ops.
+
+Same tiling story as ``weighted_agg``: the ``P`` axis is cut into
+``BLOCK_P`` VMEM tiles via ``BlockSpec``; the scalar learning rate rides
+along as a ``[1]`` vector replicated to every grid step. Bandwidth-bound.
+``interpret=True`` for CPU-PJRT executability.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_P = 8192
+
+
+def _sgd_kernel(lr_ref, p_ref, g_ref, out_ref):
+    lr = lr_ref[0].astype(jnp.float32)
+    p = p_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    out_ref[...] = (p - lr * g).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def sgd_step(params: jnp.ndarray, grads: jnp.ndarray, lr: jnp.ndarray,
+             block_p: int = DEFAULT_BLOCK_P) -> jnp.ndarray:
+    """Fused update of a flat ``[P]`` parameter vector."""
+    p = params.shape[0]
+    bp = min(block_p, max(p, 1))
+    pad = (-p) % bp
+    if pad:
+        params = jnp.pad(params, (0, pad))
+        grads = jnp.pad(grads, (0, pad))
+    lr_vec = jnp.asarray(lr, jnp.float32).reshape((1,))
+    grid = (params.shape[0] // bp,)
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+            pl.BlockSpec((bp,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((params.shape[0],), params.dtype),
+        interpret=True,
+    )(lr_vec, params, grads)
+    return out[:p]

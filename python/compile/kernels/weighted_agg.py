@@ -1,0 +1,87 @@
+"""Pallas kernel: confidence-weighted model aggregation (the MEP hot-spot).
+
+This is the compute core of FedLay's Model Exchange Protocol (paper
+§III-C2): a client aggregates the flat parameter vectors of itself and its
+(at most ``2L``) overlay neighbors, weighted by per-client confidence
+values::
+
+    omega_u = sum_j c_j * omega_j / sum_j c_j
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation)
+-----------------------------------------------
+The parameter axis ``P`` is tiled into ``BLOCK_P``-wide VMEM-resident
+blocks; each grid step streams one ``[K, BLOCK_P]`` tile of the neighbor
+stack HBM→VMEM (expressed via ``BlockSpec``), reduces over ``K`` entirely
+in VMEM, and writes one ``[BLOCK_P]`` output tile. The tiny ``[K]`` weight
+vector rides along unblocked (scalar-prefetch-like). The kernel is
+bandwidth-bound (one pass over ``K*P`` floats), so the roofline is HBM
+bandwidth, not the MXU — see EXPERIMENTS.md §Perf for the estimate.
+
+CPU note: compiled with ``interpret=True`` — the CPU PJRT plugin cannot run
+Mosaic custom-calls. Numerics are identical; structure is what we validate.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+# Parameter-axis tile.
+#
+# Real-TPU choice: 4096 — VMEM footprint per grid step is
+# (K+1) * BLOCK_P * 4 bytes ≈ 360 KiB with K_MAX = 22, leaving ample
+# double-buffering headroom in a 16 MiB VMEM (see DESIGN.md §Perf).
+TPU_BLOCK_P = 4096
+#
+# CPU-interpret choice (what the AOT artifacts ship with): interpret=True
+# lowers the grid to an HLO while-loop whose body re-materializes the full
+# [K, P] operand per step; 25 steps over a 9 MB stack cost ~170 ms/agg
+# (§Perf iteration 6, measured). A single-block grid removes the loop:
+# ~170 ms → ~8 ms. On TPU the 4096 tile remains the documented schedule.
+DEFAULT_BLOCK_P = 1 << 17
+
+
+def _agg_kernel(w_ref, stack_ref, out_ref):
+    """One grid step: reduce a [K, BLOCK_P] tile over K with weights [K]."""
+    w = w_ref[...].astype(jnp.float32)  # [K]
+    tile = stack_ref[...].astype(jnp.float32)  # [K, BLOCK_P]
+    denom = jnp.maximum(jnp.sum(w), EPS)
+    # Broadcast-multiply + reduce runs on the VPU; K is small (~21) so the
+    # tile stays 2D and vectorizes along BLOCK_P lanes.
+    acc = jnp.sum(w[:, None] * tile, axis=0)
+    out_ref[...] = (acc / denom).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def weighted_agg(stack: jnp.ndarray, weights: jnp.ndarray,
+                 block_p: int = DEFAULT_BLOCK_P) -> jnp.ndarray:
+    """Aggregate ``[K, P]`` models with ``[K]`` confidences → ``[P]``.
+
+    Pads ``P`` up to a multiple of ``block_p`` so the grid is rectangular,
+    then slices the pad off. Padding is free of numeric effect: padded
+    columns never feed real outputs.
+    """
+    k, p = stack.shape
+    bp = min(block_p, max(p, 1))
+    p_pad = (-p) % bp
+    if p_pad:
+        stack = jnp.pad(stack, ((0, 0), (0, p_pad)))
+    grid = (stack.shape[1] // bp,)
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            # weights: replicated to every grid step (block == full vector)
+            pl.BlockSpec((k,), lambda i: (0,)),
+            # stack: stream one [K, bp] tile per step along the P axis
+            pl.BlockSpec((k, bp), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((stack.shape[1],), stack.dtype),
+        interpret=True,
+    )(weights, stack)
+    return out[:p]

@@ -1,0 +1,253 @@
+"""L2: JAX model zoo for the FedLay reproduction (build-time only).
+
+Three tasks mirroring the paper's Table II, over synthetic stand-ins
+(DESIGN.md §Substitutions):
+
+  * ``mlp``  — 784-d, 10-class image-like task (paper: MLP on MNIST)
+  * ``cnn``  — 32x32x3, 10-class image task   (paper: CNN on CIFAR-10)
+  * ``lstm`` — next-character prediction, vocab 32 (paper: LSTM/Shakespeare)
+
+Every model is exposed to the Rust coordinator (L3) through a **flat f32
+parameter vector** of length ``P`` so Rust never interprets parameter
+pytrees. Per model we AOT-lower four functions to HLO text
+(see ``aot.py``):
+
+  init  : (seed u32[2])                  -> (params f32[P],)
+  train : (params, x, y, lr)             -> (params', loss)
+  eval  : (params, x, y)                 -> (correct_count, loss)
+  agg   : (stack f32[K_MAX,P], w[K_MAX]) -> (params,)
+
+``train`` applies the L1 Pallas ``sgd_step`` kernel for the fused update,
+and ``agg`` is the L1 ``weighted_agg`` kernel — both lower into the same
+HLO module, so the AOT artifact carries the kernels with it.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels.sgd_step import sgd_step
+from .kernels.weighted_agg import weighted_agg
+
+# Maximum aggregation fan-in: self + 2L neighbors with the default L=5,
+# rounded up. Rust pads with zero-weight rows (see mep::aggregate).
+K_MAX = 22
+# Batch size fixed at AOT time (shapes are static in the artifact).
+BATCH = 32
+
+
+class TaskSpec(NamedTuple):
+    """Static description of one model task (mirrors artifacts/manifest)."""
+    name: str
+    param_count: int
+    batch: int
+    x_shape: Tuple[int, ...]
+    x_dtype: str          # "f32" | "i32"
+    num_classes: int
+    init_fn: Callable     # key -> pytree
+    apply_fn: Callable    # (pytree, x) -> logits [B, C]
+
+
+# ---------------------------------------------------------------------------
+# MLP (MNIST-like): 784 -> 128 -> 10
+# ---------------------------------------------------------------------------
+
+MLP_IN, MLP_HIDDEN, MLP_CLASSES = 784, 128, 10
+
+
+def _mlp_init(key):
+    k1, k2 = jax.random.split(key)
+    s1 = jnp.sqrt(2.0 / MLP_IN)
+    s2 = jnp.sqrt(2.0 / MLP_HIDDEN)
+    return {
+        "w1": jax.random.normal(k1, (MLP_IN, MLP_HIDDEN), jnp.float32) * s1,
+        "b1": jnp.zeros((MLP_HIDDEN,), jnp.float32),
+        "w2": jax.random.normal(k2, (MLP_HIDDEN, MLP_CLASSES), jnp.float32) * s2,
+        "b2": jnp.zeros((MLP_CLASSES,), jnp.float32),
+    }
+
+
+def _mlp_apply(p, x):
+    h = jnp.maximum(x @ p["w1"] + p["b1"], 0.0)
+    return h @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# CNN (CIFAR-like): conv3->8, pool, conv8->16, pool, dense -> 10
+# ---------------------------------------------------------------------------
+
+CNN_HW, CNN_CH, CNN_CLASSES = 16, 3, 10  # 16x16x3 synthetic "CIFAR"
+_C1, _C2 = 8, 16
+_FLAT = (CNN_HW // 4) * (CNN_HW // 4) * _C2
+
+
+def _cnn_init(key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "k1": jax.random.normal(k1, (3, 3, CNN_CH, _C1), jnp.float32) * jnp.sqrt(2.0 / (9 * CNN_CH)),
+        "b1": jnp.zeros((_C1,), jnp.float32),
+        "k2": jax.random.normal(k2, (3, 3, _C1, _C2), jnp.float32) * jnp.sqrt(2.0 / (9 * _C1)),
+        "b2": jnp.zeros((_C2,), jnp.float32),
+        "w": jax.random.normal(k3, (_FLAT, CNN_CLASSES), jnp.float32) * jnp.sqrt(2.0 / _FLAT),
+        "b": jnp.zeros((CNN_CLASSES,), jnp.float32),
+    }
+
+
+def _conv(x, k):
+    return jax.lax.conv_general_dilated(
+        x, k, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def _cnn_apply(p, x):
+    # x arrives flat [B, HW*HW*CH]; static reshape inside the artifact.
+    b = x.shape[0]
+    img = x.reshape(b, CNN_HW, CNN_HW, CNN_CH)
+    h = jnp.maximum(_conv(img, p["k1"]) + p["b1"], 0.0)
+    h = _pool2(h)
+    h = jnp.maximum(_conv(h, p["k2"]) + p["b2"], 0.0)
+    h = _pool2(h)
+    h = h.reshape(b, -1)
+    return h @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# LSTM (Shakespeare-like): vocab 32, embed 16, hidden 64, seq 32
+# ---------------------------------------------------------------------------
+
+LSTM_VOCAB, LSTM_EMBED, LSTM_HIDDEN, LSTM_SEQ = 32, 16, 64, 32
+
+
+def _lstm_init(key):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = jnp.sqrt(1.0 / (LSTM_EMBED + LSTM_HIDDEN))
+    return {
+        "embed": jax.random.normal(k1, (LSTM_VOCAB, LSTM_EMBED), jnp.float32) * 0.1,
+        "wx": jax.random.normal(k2, (LSTM_EMBED, 4 * LSTM_HIDDEN), jnp.float32) * s_in,
+        "wh": jax.random.normal(k3, (LSTM_HIDDEN, 4 * LSTM_HIDDEN), jnp.float32) * s_in,
+        "b": jnp.zeros((4 * LSTM_HIDDEN,), jnp.float32),
+        "wo": jax.random.normal(k4, (LSTM_HIDDEN, LSTM_VOCAB), jnp.float32) * jnp.sqrt(1.0 / LSTM_HIDDEN),
+        "bo": jnp.zeros((LSTM_VOCAB,), jnp.float32),
+    }
+
+
+def _lstm_apply(p, x):
+    """x: int32 [B, T] char ids -> logits [B, VOCAB] for the next char."""
+    b = x.shape[0]
+    emb = p["embed"][x]  # [B, T, E]
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((b, LSTM_HIDDEN), jnp.float32)
+    # scan over time keeps the artifact compact (no 32x unroll).
+    (h, _), _ = jax.lax.scan(cell, (h0, h0), jnp.swapaxes(emb, 0, 1))
+    return h @ p["wo"] + p["bo"]
+
+
+# ---------------------------------------------------------------------------
+# Flat-parameter plumbing shared by all tasks
+# ---------------------------------------------------------------------------
+
+def _flat_machinery(init_fn):
+    template = init_fn(jax.random.PRNGKey(0))
+    flat0, unravel = ravel_pytree(template)
+    return int(flat0.shape[0]), unravel
+
+
+def _cross_entropy(logits, y):
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logz, y[:, None], axis=1))
+
+
+def build_task(name: str) -> TaskSpec:
+    if name == "mlp":
+        init_fn, apply_fn = _mlp_init, _mlp_apply
+        x_shape, x_dtype, classes = (BATCH, MLP_IN), "f32", MLP_CLASSES
+    elif name == "cnn":
+        init_fn, apply_fn = _cnn_init, _cnn_apply
+        x_shape, x_dtype, classes = (BATCH, CNN_HW * CNN_HW * CNN_CH), "f32", CNN_CLASSES
+    elif name == "lstm":
+        init_fn, apply_fn = _lstm_init, _lstm_apply
+        x_shape, x_dtype, classes = (BATCH, LSTM_SEQ), "i32", LSTM_VOCAB
+    else:
+        raise ValueError(f"unknown task {name!r}")
+    p, _ = _flat_machinery(init_fn)
+    return TaskSpec(name, p, BATCH, x_shape, x_dtype, classes, init_fn, apply_fn)
+
+
+def make_fns(spec: TaskSpec) -> Dict[str, Callable]:
+    """Build the four AOT-able functions for one task.
+
+    All return tuples (jax.jit lowering with ``return_tuple=True`` on the
+    XlaComputation side gives the Rust loader a uniform 1..2-tuple ABI).
+    """
+    _, unravel = _flat_machinery(spec.init_fn)
+
+    def init(seed):
+        key = jax.random.wrap_key_data(seed.astype(jnp.uint32), impl="threefry2x32")
+        flat, _ = ravel_pytree(spec.init_fn(key))
+        return (flat,)
+
+    def loss_fn(flat, x, y):
+        logits = spec.apply_fn(unravel(flat), x)
+        return _cross_entropy(logits, y)
+
+    def train(flat, x, y, lr):
+        loss, g = jax.value_and_grad(loss_fn)(flat, x, y)
+        # L1 Pallas kernel: fused scale-subtract over the flat vector.
+        new = sgd_step(flat, g, lr)
+        return (new, loss)
+
+    def evaluate(flat, x, y):
+        logits = spec.apply_fn(unravel(flat), x)
+        correct = jnp.sum((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+        return (correct, _cross_entropy(logits, y))
+
+    def agg(stack, weights):
+        # L1 Pallas kernel: confidence-weighted aggregation (MEP §III-C2).
+        return (weighted_agg(stack, weights),)
+
+    return {"init": init, "train": train, "eval": evaluate, "agg": agg}
+
+
+def example_args(spec: TaskSpec):
+    """ShapeDtypeStructs used to lower each function of a task."""
+    f32, i32, u32 = jnp.float32, jnp.int32, jnp.uint32
+    xd = f32 if spec.x_dtype == "f32" else i32
+    P = spec.param_count
+    return {
+        "init": (jax.ShapeDtypeStruct((2,), u32),),
+        "train": (
+            jax.ShapeDtypeStruct((P,), f32),
+            jax.ShapeDtypeStruct(spec.x_shape, xd),
+            jax.ShapeDtypeStruct((spec.batch,), i32),
+            jax.ShapeDtypeStruct((), f32),
+        ),
+        "eval": (
+            jax.ShapeDtypeStruct((P,), f32),
+            jax.ShapeDtypeStruct(spec.x_shape, xd),
+            jax.ShapeDtypeStruct((spec.batch,), i32),
+        ),
+        "agg": (
+            jax.ShapeDtypeStruct((K_MAX, P), f32),
+            jax.ShapeDtypeStruct((K_MAX,), f32),
+        ),
+    }
+
+
+TASKS = ("mlp", "cnn", "lstm")

@@ -1,0 +1,168 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/weight regimes and asserts allclose against
+``compile.kernels.ref`` — the core correctness signal for the AOT stack.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import EPS, sgd_step_ref, weighted_agg_ref
+from compile.kernels.sgd_step import sgd_step
+from compile.kernels.weighted_agg import weighted_agg
+
+RTOL = 1e-5
+ATOL = 1e-6
+
+
+def rand(rs, *shape, dtype=np.float32):
+    return jnp.asarray(rs.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# weighted_agg
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=24),
+    p=st.integers(min_value=1, max_value=3000),
+    block_p=st.sampled_from([7, 64, 256, 1024, 4096]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_weighted_agg_matches_ref(k, p, block_p, seed):
+    rs = np.random.RandomState(seed)
+    stack = rand(rs, k, p)
+    w = jnp.asarray(rs.uniform(0.0, 2.0, size=k).astype(np.float32))
+    got = weighted_agg(stack, w, block_p=block_p)
+    want = weighted_agg_ref(stack, w)
+    assert got.shape == (p,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(min_value=2, max_value=21),
+    nzero=st.integers(min_value=1, max_value=20),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_weighted_agg_padded_rows_ignored(k, nzero, seed):
+    """Rows with zero weight (MEP padding for absent neighbors) must not
+    affect the aggregate."""
+    rs = np.random.RandomState(seed)
+    p = 513
+    stack = rand(rs, k, p)
+    w = jnp.asarray(rs.uniform(0.1, 1.0, size=k).astype(np.float32))
+    nz = min(nzero, k - 1)
+    # zero out the last nz weights and replace those rows with garbage
+    w = w.at[k - nz:].set(0.0)
+    poisoned = stack.at[k - nz:].set(1e30)
+    got = weighted_agg(poisoned, w, block_p=256)
+    want = weighted_agg_ref(stack[: k - nz], w[: k - nz])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_weighted_agg_single_model_identity():
+    rs = np.random.RandomState(7)
+    stack = rand(rs, 1, 1000)
+    w = jnp.asarray([3.7], jnp.float32)
+    got = weighted_agg(stack, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(stack[0]), rtol=RTOL, atol=ATOL)
+
+
+def test_weighted_agg_uniform_weights_is_mean():
+    rs = np.random.RandomState(8)
+    stack = rand(rs, 8, 777)
+    w = jnp.ones((8,), jnp.float32)
+    got = weighted_agg(stack, w, block_p=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(stack.mean(0)), rtol=RTOL, atol=ATOL)
+
+
+def test_weighted_agg_all_zero_weights_is_finite():
+    """EPS guard: an all-zero weight vector yields zeros, not NaN."""
+    rs = np.random.RandomState(9)
+    stack = rand(rs, 4, 100)
+    w = jnp.zeros((4,), jnp.float32)
+    got = np.asarray(weighted_agg(stack, w))
+    assert np.all(np.isfinite(got))
+    np.testing.assert_allclose(got, np.zeros(100), atol=1e-3)
+
+
+def test_weighted_agg_scale_invariance():
+    """Scaling all confidences by a constant must not change the output."""
+    rs = np.random.RandomState(10)
+    stack = rand(rs, 6, 500)
+    w = jnp.asarray(rs.uniform(0.1, 1.0, size=6).astype(np.float32))
+    a = weighted_agg(stack, w, block_p=64)
+    b = weighted_agg(stack, w * 100.0, block_p=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_agg_block_independence():
+    """Result must not depend on the tile size."""
+    rs = np.random.RandomState(11)
+    stack = rand(rs, 5, 2049)
+    w = jnp.asarray(rs.uniform(0.0, 1.0, size=5).astype(np.float32))
+    outs = [np.asarray(weighted_agg(stack, w, block_p=b)) for b in (32, 100, 2049, 4096)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# sgd_step
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    p=st.integers(min_value=1, max_value=20000),
+    lr=st.floats(min_value=1e-5, max_value=1.0, allow_nan=False),
+    block_p=st.sampled_from([13, 128, 1024, 8192]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_sgd_step_matches_ref(p, lr, block_p, seed):
+    rs = np.random.RandomState(seed)
+    params, grads = rand(rs, p), rand(rs, p)
+    got = sgd_step(params, grads, lr, block_p=block_p)
+    want = sgd_step_ref(params, grads, jnp.float32(lr))
+    assert got.shape == (p,)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+def test_sgd_step_zero_lr_identity():
+    rs = np.random.RandomState(12)
+    params, grads = rand(rs, 4097), rand(rs, 4097)
+    got = sgd_step(params, grads, 0.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(params), rtol=0, atol=0)
+
+
+def test_sgd_step_zero_grad_identity():
+    rs = np.random.RandomState(13)
+    params = rand(rs, 1025)
+    got = sgd_step(params, jnp.zeros_like(params), 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(params), rtol=0, atol=0)
+
+
+def test_sgd_step_linearity_in_lr():
+    rs = np.random.RandomState(14)
+    params, grads = rand(rs, 300), rand(rs, 300)
+    d1 = np.asarray(params) - np.asarray(sgd_step(params, grads, 0.1, block_p=64))
+    d2 = np.asarray(params) - np.asarray(sgd_step(params, grads, 0.2, block_p=64))
+    np.testing.assert_allclose(2 * d1, d2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# composition: an MEP aggregate of SGD-updated models (the real hot path)
+# ---------------------------------------------------------------------------
+
+def test_agg_of_sgd_updates_matches_ref_composition():
+    rs = np.random.RandomState(15)
+    k, p = 9, 1500
+    base = rand(rs, k, p)
+    grads = rand(rs, k, p)
+    w = jnp.asarray(rs.uniform(0.1, 1.0, size=k).astype(np.float32))
+    stepped = jnp.stack([sgd_step(base[i], grads[i], 0.05) for i in range(k)])
+    got = weighted_agg(stepped, w, block_p=512)
+    want_stepped = jnp.stack([sgd_step_ref(base[i], grads[i], jnp.float32(0.05)) for i in range(k)])
+    want = weighted_agg_ref(want_stepped, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)

@@ -1,0 +1,85 @@
+//! E8 — Paper Fig. 10 + Table III: medium-scale accuracy comparison —
+//! FedLay (d=10) vs FedAvg (centralized upper bound) vs Gaia vs DFL-DDS vs
+//! Chord.
+//!
+//! Paper (100 clients, MNIST): FedAvg 92.1 > FedLay 90.2 > Gaia 89.2 >
+//! Chord 88.9 > DFL-DDS 87.4 — FedLay within ~2% of the centralized upper
+//! bound and above every decentralized comparator. We assert that ordering
+//! shape (FedAvg >= FedLay >= others - eps) at reduced scale.
+
+use fedlay::bench_util::{scaled, Table};
+use fedlay::config::DflConfig;
+use fedlay::dfl::harness::{curves_table, final_acc, run_method};
+use fedlay::dfl::MethodSpec;
+use fedlay::runtime::{find_artifacts_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let clients = scaled(20usize, 100);
+    let minutes = scaled(240u64, 2_000);
+    let sample = minutes / 6;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients,
+        local_steps: 3,
+        shards_per_client: 8,
+        ..DflConfig::default()
+    };
+
+    println!("=== Fig. 10 / Table III: {clients} clients, mlp task ===");
+    let fed = run_method(&engine, MethodSpec::fedlay(clients, 5), &cfg, minutes, sample)?;
+    let fedavg = run_method(&engine, MethodSpec::fedavg(), &cfg, minutes, sample)?;
+    let gaia = run_method(&engine, MethodSpec::gaia(clients, 5), &cfg, minutes, sample)?;
+    let chord = run_method(&engine, MethodSpec::chord(clients), &cfg, minutes, sample)?;
+    let dds = run_method(&engine, MethodSpec::dfl_dds(7), &cfg, minutes, sample)?;
+
+    let t = curves_table(&[
+        ("fedlay d=10", &fed.samples),
+        ("fedavg", &fedavg.samples),
+        ("gaia", &gaia.samples),
+        ("chord", &chord.samples),
+        ("dfl-dds", &dds.samples),
+    ]);
+    print!("{}", t.render());
+
+    println!("\n=== Table III: accuracy at convergence ===");
+    let mut t3 = Table::new(&["method", "accuracy", "gap to fedavg"]);
+    let fa = final_acc(&fedavg);
+    for (name, tr) in [
+        ("fedlay", &fed),
+        ("fedavg", &fedavg),
+        ("gaia", &gaia),
+        ("chord", &chord),
+        ("dfl-dds", &dds),
+    ] {
+        let a = final_acc(tr);
+        t3.row(&[
+            name.to_string(),
+            format!("{:.1}%", a * 100.0),
+            format!("{:+.1}%", (a - fa) * 100.0),
+        ]);
+    }
+    print!("{}", t3.render());
+
+    // Paper-shape assertions: FedAvg is the upper bound; FedLay is within
+    // a few points of it and not behind the decentralized comparators.
+    let f = final_acc(&fed);
+    assert!(fa >= f - 0.02, "fedavg should upper-bound fedlay");
+    assert!(
+        fa - f < 0.15,
+        "fedlay should be within striking distance of fedavg ({fa:.3} vs {f:.3})"
+    );
+    // Gaia is excluded from the ordering assertion at reduced scale: with
+    // 20 clients its 5 regions + global sync are effectively FedAvg (the
+    // paper's 100-client regime separates them; see EXPERIMENTS.md E8).
+    for (name, tr) in [("chord", &chord), ("dfl-dds", &dds)] {
+        assert!(
+            f >= final_acc(tr) - 0.05,
+            "fedlay should not lose to {name} ({f:.3} vs {:.3})",
+            final_acc(tr)
+        );
+    }
+    println!("\nfig10/table3 shape checks OK");
+    Ok(())
+}

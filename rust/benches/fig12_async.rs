@@ -1,0 +1,57 @@
+//! E10 — Paper Fig. 12: synchronous vs asynchronous MEP communication.
+//!
+//! Expected shape: with heterogeneous clients (60/20/20 medium/high/low,
+//! low = 2x medium period), asynchronous exchange converges faster because
+//! high-capacity clients never wait for stragglers; synchronous rounds run
+//! at the slowest client's period.
+
+use fedlay::bench_util::{scaled, Table};
+use fedlay::config::DflConfig;
+use fedlay::dfl::harness::{curves_table, final_acc, minutes_to_accuracy, run_method};
+use fedlay::dfl::MethodSpec;
+use fedlay::runtime::{find_artifacts_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let tasks: Vec<&str> = scaled(vec!["mlp"], vec!["mlp", "cnn", "lstm"]);
+    let clients = 16;
+    let minutes = scaled(240u64, 1_500);
+    let dir = find_artifacts_dir(None)?;
+    let mut summary = Table::new(&["task", "async acc", "sync acc", "async t->0.5", "sync t->0.5"]);
+    for task in tasks {
+        let engine = Engine::load(&dir, &[task])?;
+        let cfg = DflConfig {
+            task: task.into(),
+            clients,
+            local_steps: 3,
+            ..DflConfig::default()
+        };
+        let a = run_method(&engine, MethodSpec::fedlay(clients, 3), &cfg, minutes, minutes / 6)?;
+        let s = run_method(&engine, MethodSpec::fedlay_sync(clients, 3), &cfg, minutes, minutes / 6)?;
+        println!("=== Fig. 12 ({task}) ===");
+        print!(
+            "{}",
+            curves_table(&[("async", &a.samples), ("sync", &s.samples)]).render()
+        );
+        let fmt_t = |o: Option<f64>| o.map(|m| format!("{m:.0}m")).unwrap_or("-".into());
+        summary.row(&[
+            task.to_string(),
+            format!("{:.3}", final_acc(&a)),
+            format!("{:.3}", final_acc(&s)),
+            fmt_t(minutes_to_accuracy(&a.samples, 0.5)),
+            fmt_t(minutes_to_accuracy(&s.samples, 0.5)),
+        ]);
+        // Deviation note (EXPERIMENTS.md): on the synthetic substrate the
+        // two modes end close; async's paper advantage is wall-clock
+        // time-to-accuracy for high-capacity clients under stragglers,
+        // which our round model only partially captures. We require the
+        // two to be in the same band rather than asserting a direction.
+        assert!(
+            (final_acc(&a) - final_acc(&s)).abs() < 0.25,
+            "{task}: async vs sync diverged unexpectedly"
+        );
+    }
+    println!("\n=== Fig. 12 summary ===");
+    print!("{}", summary.render());
+    println!("fig12 OK");
+    Ok(())
+}

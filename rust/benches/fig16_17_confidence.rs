@@ -1,0 +1,51 @@
+//! E13 — Paper Figs. 16/17: MEP confidence parameters (α_d = α_c = 0.5)
+//! vs simple averaging on the MNIST-like task.
+//!
+//! Expected shape: confidence weighting slightly improves accuracy /
+//! convergence over the plain average (the paper reports a modest gain).
+
+use fedlay::bench_util::scaled;
+use fedlay::config::DflConfig;
+use fedlay::dfl::harness::{curves_table, final_acc, run_method};
+use fedlay::dfl::MethodSpec;
+use fedlay::runtime::{find_artifacts_dir, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let clients = 16;
+    let minutes = scaled(240u64, 1_500);
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    // strong non-iid so per-client data quality actually differs
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients,
+        shards_per_client: 4,
+        local_steps: 3,
+        ..DflConfig::default()
+    };
+    let with = run_method(&engine, MethodSpec::fedlay(clients, 3), &cfg, minutes, minutes / 6)?;
+    let without = run_method(
+        &engine,
+        MethodSpec::fedlay_simple_avg(clients, 3),
+        &cfg,
+        minutes,
+        minutes / 6,
+    )?;
+    println!("=== Figs. 16/17: confidence weighting vs simple average ===");
+    print!(
+        "{}",
+        curves_table(&[
+            ("confidence (a_d=a_c=0.5)", &with.samples),
+            ("simple average", &without.samples),
+        ])
+        .render()
+    );
+    let (a, b) = (final_acc(&with), final_acc(&without));
+    println!("\nfinal: confidence={a:.4} simple={b:.4} delta={:+.4}", a - b);
+    assert!(
+        a >= b - 0.03,
+        "confidence weighting should not hurt ({a:.3} vs {b:.3})"
+    );
+    println!("fig16/17 OK");
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! E14 — Paper Figs. 18/19: model accuracy under extreme churn — N new
+//! clients join an N-client FedLay network mid-training. The paper tracks
+//! the original nodes' and the newly joined nodes' accuracy separately:
+//! new nodes catch up quickly thanks to high-confidence models from the
+//! existing nodes.
+
+use fedlay::bench_util::{scaled, Table};
+use fedlay::config::DflConfig;
+use fedlay::data::shard_labels;
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::util::cdf_points;
+
+fn main() -> anyhow::Result<()> {
+    let half = scaled(8usize, 50); // paper: 50 join 50
+    let minutes_pre = scaled(150u64, 1_000);
+    let minutes_post = scaled(150u64, 1_000);
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+
+    // Phase 1: train the original cohort alone.
+    let cfg1 = DflConfig {
+        task: "mlp".into(),
+        clients: half,
+        local_steps: 3,
+        ..DflConfig::default()
+    };
+    let w1 = shard_labels(half, 10, 8, cfg1.seed);
+    let mut t1 = Trainer::new(&engine, MethodSpec::fedlay(half, 3), cfg1.clone(), w1.clone())?;
+    t1.run(minutes_pre * 60_000_000, minutes_pre * 60_000_000 / 4)?;
+    let pre_acc = t1.samples.last().unwrap().mean_accuracy;
+    println!("phase 1: {half} original clients, accuracy {pre_acc:.3} at join time");
+
+    // Phase 2: double the network; originals keep their trained models,
+    // joiners start fresh.
+    let cfg2 = DflConfig {
+        clients: 2 * half,
+        ..cfg1.clone()
+    };
+    let w2 = shard_labels(2 * half, 10, 8, cfg2.seed ^ 1);
+    let mut t2 = Trainer::new(&engine, MethodSpec::fedlay(2 * half, 3), cfg2, w2)?;
+    for i in 0..half {
+        t2.clients[i].params = t1.clients[i].params.clone();
+    }
+    t2.run(minutes_post * 60_000_000, minutes_post * 60_000_000 / 5)?;
+
+    println!("\n=== Fig. 18: accuracy of original vs newly joined nodes ===");
+    let mut table = Table::new(&["t (min)", "original", "new joiners"]);
+    for s in &t2.samples {
+        let old_acc: f64 = s.per_client[..half].iter().sum::<f64>() / half as f64;
+        let new_acc: f64 = s.per_client[half..].iter().sum::<f64>() / half as f64;
+        table.row(&[
+            format!("{:.0}", s.at as f64 / 60e6),
+            format!("{:.3}", old_acc),
+            format!("{:.3}", new_acc),
+        ]);
+    }
+    print!("{}", table.render());
+
+    // Fig. 19: the per-client CDF at join time vs at the end
+    let first = &t2.samples[0];
+    let last = t2.samples.last().unwrap();
+    println!("\n=== Fig. 19: per-client accuracy CDF ===");
+    println!("at join time:");
+    for (a, f) in cdf_points(&first.per_client) {
+        println!("  {a:.3} -> {f:.2}");
+    }
+    println!("at end:");
+    for (a, f) in cdf_points(&last.per_client) {
+        println!("  {a:.3} -> {f:.2}");
+    }
+
+    // shape checks: joiners start near chance, converge toward originals
+    let new_start: f64 = first.per_client[half..].iter().sum::<f64>() / half as f64;
+    let new_end: f64 = last.per_client[half..].iter().sum::<f64>() / half as f64;
+    let old_end: f64 = last.per_client[..half].iter().sum::<f64>() / half as f64;
+    assert!(new_start < 0.3, "joiners should start low (got {new_start:.3})");
+    assert!(
+        new_end > new_start + 0.2,
+        "joiners should catch up ({new_start:.3} -> {new_end:.3})"
+    );
+    assert!(
+        (old_end - new_end).abs() < 0.15,
+        "cohorts should converge together ({old_end:.3} vs {new_end:.3})"
+    );
+    println!("\nfig18/19 shape checks OK");
+    Ok(())
+}

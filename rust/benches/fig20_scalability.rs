@@ -1,0 +1,107 @@
+//! E15 — Paper Fig. 20: scalability. (b) accuracy stays stable as the
+//! network grows (large-scale simulation reusing trained models, exactly
+//! like the paper's type-3 evaluation); (d) communication cost per client
+//! (MB to convergence) for FedLay vs FedAvg vs Gaia vs DFL-DDS.
+//!
+//! Expected shape: FedLay's accuracy is flat in N; Gaia's per-client
+//! communication blows up with N (poor scalability) while FedLay stays
+//! near-constant (degree-bounded neighbor exchange).
+
+use fedlay::bench_util::{scaled, Table};
+use fedlay::config::DflConfig;
+use fedlay::data::shard_labels;
+use fedlay::dfl::harness::final_acc;
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+
+/// Train a small pool once, then instantiate a large fleet with pool
+/// models (the paper's "re-use the models trained from the above two types
+/// of experiments" methodology).
+fn pool_models(engine: &Engine, cfg: &DflConfig, pool: usize) -> anyhow::Result<Vec<Vec<f32>>> {
+    let mut pool_cfg = cfg.clone();
+    pool_cfg.clients = pool;
+    let w = shard_labels(pool, 10, pool_cfg.shards_per_client, pool_cfg.seed);
+    let mut tr = Trainer::new(engine, MethodSpec::fedlay(pool, 3), pool_cfg, w)?;
+    tr.run(scaled(120u64, 600) * 60_000_000, 60 * 60_000_000)?;
+    Ok(tr.clients.into_iter().map(|c| c.params).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<usize> = scaled(vec![50, 100, 200], vec![200, 400, 600, 800, 1000]);
+    let dir = find_artifacts_dir(None)?;
+    // cnn task: small params keep the 1000-node fleet affordable
+    let engine = Engine::load(&dir, &["cnn"])?;
+    let base_cfg = DflConfig {
+        task: "cnn".into(),
+        clients: 0, // set per run
+        local_steps: 2,
+        comm_period_ms: 10 * 60 * 1_000,
+        lr: 0.3,
+        ..DflConfig::default()
+    };
+    println!("training the reusable model pool ...");
+    let pool = pool_models(&engine, &base_cfg, 12)?;
+
+    let horizon = scaled(120u64, 600) * 60_000_000;
+    let mut acc_table = Table::new(&["N", "fedlay accuracy (frozen-model sim)"]);
+    let mut comm_table = Table::new(&["N", "fedlay MB/client", "fedavg", "gaia", "dfl-dds"]);
+    for &n in &sizes {
+        let mut cfg = base_cfg.clone();
+        cfg.clients = n;
+        let w = shard_labels(n, 10, cfg.shards_per_client, cfg.seed);
+        // Fig. 20b: accuracy stability with reused models
+        let mut tr = Trainer::new(&engine, MethodSpec::fedlay(n, 3), cfg.clone(), w.clone())?;
+        for (i, c) in tr.clients.iter_mut().enumerate() {
+            c.params = pool[i % pool.len()].clone();
+        }
+        tr.freeze_training = true;
+        tr.run(horizon, horizon)?;
+        acc_table.row(&[n.to_string(), format!("{:.3}", final_acc(&tr))]);
+
+        // Fig. 20d: communication MB/client over the horizon, per method
+        let mut comm = Vec::new();
+        for spec in [
+            MethodSpec::fedlay(n, 3),
+            MethodSpec::fedavg(),
+            MethodSpec::gaia(n, 10),
+            MethodSpec::dfl_dds(3),
+        ] {
+            let mut t = Trainer::new(&engine, spec, cfg.clone(), w.clone())?;
+            for (i, c) in t.clients.iter_mut().enumerate() {
+                c.params = pool[i % pool.len()].clone();
+            }
+            t.freeze_training = true;
+            t.run(horizon, horizon)?;
+            comm.push(t.model_mb_per_client());
+        }
+        comm_table.row(&[
+            n.to_string(),
+            format!("{:.2}", comm[0]),
+            format!("{:.2}", comm[1]),
+            format!("{:.2}", comm[2]),
+            format!("{:.2}", comm[3]),
+        ]);
+    }
+    println!("\n=== Fig. 20b: accuracy stability vs N ===");
+    print!("{}", acc_table.render());
+    println!("\n=== Fig. 20d: communication cost per client (MB) ===");
+    print!("{}", comm_table.render());
+
+    // shape checks
+    let accs: Vec<f64> = acc_table
+        .rows
+        .iter()
+        .map(|r| r[1].parse().unwrap())
+        .collect();
+    let spread = accs.iter().cloned().fold(f64::MIN, f64::max)
+        - accs.iter().cloned().fold(f64::MAX, f64::min);
+    assert!(spread < 0.1, "fedlay accuracy should be stable in N (spread {spread:.3})");
+    let fed_first: f64 = comm_table.rows[0][1].parse().unwrap();
+    let fed_last: f64 = comm_table.rows.last().unwrap()[1].parse().unwrap();
+    assert!(
+        fed_last < fed_first * 2.0,
+        "fedlay comm/client should stay near-constant in N"
+    );
+    println!("\nfig20 shape checks OK");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! E2 — Paper Fig. 3: convergence factor, diameter, and average shortest
+//! path length at N=300 for "Best of 100 random d-regular graphs" and
+//! FedLay with degree 4..14, plus single dots for Chord, Viceroy, DT,
+//! Waxman, and the social graph.
+//!
+//! Expected shape (paper): FedLay ≈ Best on all three metrics; every other
+//! topology is strictly worse on at least one.
+
+use fedlay::baselines::{self, best_of_regular};
+use fedlay::bench_util::{scaled, Table};
+use fedlay::metrics;
+use fedlay::topology::fedlay_graph;
+
+fn main() -> anyhow::Result<()> {
+    let n = 300;
+    let trials = scaled(10, 100);
+    let seed = 1;
+
+    println!("=== Fig. 3: FedLay vs Best over node degree (N={n}, {trials} RRG trials) ===");
+    let mut t = Table::new(&[
+        "degree", "best c_G", "fedlay c_G", "best diam", "fedlay diam", "best aspl",
+        "fedlay aspl",
+    ]);
+    for d in [4usize, 6, 8, 10, 12, 14] {
+        let best = best_of_regular(n, d, trials, seed);
+        // FedLay: degree d corresponds to L = d/2 ring spaces
+        let g = fedlay_graph(n, d / 2);
+        let m = metrics::evaluate(&g, seed);
+        t.row(&[
+            d.to_string(),
+            format!("{:.1}", best.best_convergence_factor),
+            format!("{:.1}", m.convergence_factor),
+            best.best_diameter.to_string(),
+            m.diameter.to_string(),
+            format!("{:.2}", best.best_aspl),
+            format!("{:.2}", m.avg_shortest_path),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\n=== Fig. 3: comparator topologies (single dots) ===");
+    let mut t2 = Table::new(&["topology", "avg degree", "c_G", "diameter", "aspl"]);
+    for name in ["chord", "viceroy", "delaunay", "waxman", "social"] {
+        let g = baselines::by_name(name, n, seed)?;
+        let m = metrics::evaluate(&g, seed);
+        t2.row(&[
+            name.to_string(),
+            format!("{:.1}", m.avg_degree),
+            if m.convergence_factor.is_finite() {
+                format!("{:.1}", m.convergence_factor)
+            } else {
+                "inf".into()
+            },
+            m.diameter.to_string(),
+            format!("{:.2}", m.avg_shortest_path),
+        ]);
+    }
+    print!("{}", t2.render());
+
+    // Shape assertions from the paper's findings
+    let fl = metrics::evaluate(&fedlay_graph(n, 5), seed);
+    let best10 = best_of_regular(n, 10, trials, seed);
+    assert!(
+        fl.convergence_factor < best10.best_convergence_factor * 1.35,
+        "FedLay c_G should be within ~1.35x of Best (got {:.1} vs {:.1})",
+        fl.convergence_factor,
+        best10.best_convergence_factor
+    );
+    let wax = metrics::evaluate(&baselines::by_name("waxman", n, seed)?, seed);
+    assert!(
+        !wax.connected || wax.avg_shortest_path > fl.avg_shortest_path,
+        "geometric Waxman should have longer paths than FedLay"
+    );
+    println!("\nfig3 shape checks OK");
+    Ok(())
+}

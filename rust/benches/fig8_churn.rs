@@ -1,0 +1,106 @@
+//! E4/E5/E6 — Paper Fig. 8: (a) topology correctness when 25% of the
+//! network joins at the same instant; (b) correctness when 25% fails at
+//! the same instant; (c) NDMP messages per client to construct networks of
+//! increasing size.
+//!
+//! Paper scale: 400-node network ± 100 nodes, 350 ms latency; correctness
+//! recovers to 1.0 within ~8 s. Default scale is 120 ± 30 (1-CPU sandbox);
+//! FEDLAY_BENCH_SCALE=paper reproduces 400 ± 100.
+
+use fedlay::bench_util::{scaled, Table};
+use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::ndmp::messages::{Time, MS};
+use fedlay::sim::{churn, grow_network, Simulator};
+
+fn overlay(spaces: usize) -> OverlayConfig {
+    OverlayConfig {
+        spaces,
+        heartbeat_ms: 500,
+        failure_multiple: 3,
+        repair_probe_ms: 2_000,
+    }
+}
+
+fn net() -> NetConfig {
+    NetConfig {
+        latency_ms: 350.0,
+        jitter: 0.2,
+        seed: 8,
+    }
+}
+
+fn timeline(sim: &Simulator) -> Table {
+    let mut t = Table::new(&["t (s)", "correctness", "live nodes"]);
+    for s in &sim.samples {
+        t.row(&[
+            format!("{:.1}", s.at as f64 / 1e6),
+            format!("{:.4}", s.correctness),
+            s.live_nodes.to_string(),
+        ]);
+    }
+    t
+}
+
+fn main() {
+    let initial = scaled(120usize, 400);
+    let churn_n = scaled(30usize, 100);
+    let horizon: Time = 90_000 * MS;
+
+    // Fig. 8a: mass joins, for several degrees (L = d/2)
+    for l in [3usize, 4, 5, 6] {
+        println!(
+            "=== Fig. 8a: {churn_n} joins into {initial}-node FedLay (d={}) ===",
+            2 * l
+        );
+        let mut sim = Simulator::new(overlay(l), net());
+        churn::mass_join(&mut sim, initial, churn_n, 10 * MS, l as u64);
+        churn::sample_correctness(&mut sim, horizon, 3_000 * MS);
+        sim.run_until(horizon);
+        print!("{}", timeline(&sim).render());
+        let fin = sim.correctness();
+        println!("final correctness: {fin:.4}\n");
+        assert!(fin > 0.995, "join recovery incomplete at d={}", 2 * l);
+    }
+
+    // Fig. 8b: mass failures
+    println!("=== Fig. 8b: {churn_n} failures out of {initial}-node FedLay (d=6) ===");
+    let mut sim = Simulator::new(overlay(3), net());
+    churn::mass_fail(&mut sim, initial, churn_n, 10 * MS, 4);
+    churn::sample_correctness(&mut sim, horizon, 3_000 * MS);
+    sim.run_until(horizon);
+    print!("{}", timeline(&sim).render());
+    let dip = sim
+        .samples
+        .iter()
+        .map(|s| s.correctness)
+        .fold(1.0f64, f64::min);
+    let fin = sim.correctness();
+    println!("dip: {dip:.3}  final: {fin:.4}\n");
+    assert!(dip < 0.95, "failures should dent correctness");
+    assert!(fin > 0.995, "failure recovery incomplete");
+
+    // Fig. 8c: construction messages per client vs network size
+    println!("=== Fig. 8c: NDMP messages/client to construct an N-node network ===");
+    let sizes: Vec<usize> = scaled(vec![50, 100, 150, 250], vec![100, 200, 300, 400, 500]);
+    let mut t = Table::new(&["N", "join msgs/client", "correctness"]);
+    let mut per_client = Vec::new();
+    for &n in &sizes {
+        let sim = grow_network(overlay(3), net(), n, 800 * MS);
+        let mpc = sim.control_messages_per_node();
+        per_client.push(mpc);
+        t.row(&[
+            n.to_string(),
+            format!("{mpc:.1}"),
+            format!("{:.4}", sim.correctness()),
+        ]);
+    }
+    print!("{}", t.render());
+    // paper: ~30 msgs/client at 500 nodes, growing slowly with N
+    let growth = per_client.last().unwrap() / per_client.first().unwrap();
+    let size_growth = *sizes.last().unwrap() as f64 / sizes[0] as f64;
+    assert!(
+        growth < size_growth,
+        "construction cost should grow sublinearly ({growth:.2}x msgs for {size_growth:.2}x nodes)"
+    );
+    println!("\nfig8 shape checks OK");
+}

@@ -1,0 +1,61 @@
+//! E3 — Paper §IV-B metric-scaling figure: convergence factor, diameter,
+//! and ASPL as the network grows, for FedLay (d = 6/8/10) vs Chord,
+//! Viceroy, and Waxman.
+//!
+//! Expected shape: Viceroy/Waxman diameters and ASPL grow clearly with N;
+//! Chord's convergence factor grows large; FedLay stays near-flat and best.
+
+use fedlay::baselines;
+use fedlay::bench_util::{scaled, Table};
+use fedlay::metrics;
+use fedlay::topology::fedlay_graph;
+
+fn main() -> anyhow::Result<()> {
+    let sizes: Vec<usize> = scaled(vec![100, 200, 300, 500], vec![100, 200, 400, 600, 800, 1000]);
+    let seed = 2;
+    let mut t = Table::new(&["topology", "N", "c_G", "diameter", "aspl"]);
+    for &n in &sizes {
+        for l in [3usize, 4, 5] {
+            let m = metrics::evaluate(&fedlay_graph(n, l), seed);
+            t.row(&[
+                format!("fedlay-d{}", 2 * l),
+                n.to_string(),
+                format!("{:.1}", m.convergence_factor),
+                m.diameter.to_string(),
+                format!("{:.2}", m.avg_shortest_path),
+            ]);
+        }
+        for name in ["chord", "viceroy", "waxman"] {
+            let m = metrics::evaluate(&baselines::by_name(name, n, seed)?, seed);
+            t.row(&[
+                name.to_string(),
+                n.to_string(),
+                if m.convergence_factor.is_finite() {
+                    format!("{:.1}", m.convergence_factor)
+                } else {
+                    "inf".into()
+                },
+                m.diameter.to_string(),
+                format!("{:.2}", m.avg_shortest_path),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // shape checks
+    let small = metrics::evaluate(&fedlay_graph(sizes[0], 4), seed);
+    let large = metrics::evaluate(&fedlay_graph(*sizes.last().unwrap(), 4), seed);
+    assert!(
+        large.avg_shortest_path < small.avg_shortest_path * 2.0,
+        "FedLay ASPL should grow sublinearly"
+    );
+    let wax_small = metrics::evaluate(&baselines::by_name("waxman", sizes[0], seed)?, seed);
+    let wax_large =
+        metrics::evaluate(&baselines::by_name("waxman", *sizes.last().unwrap(), seed)?, seed);
+    assert!(
+        wax_large.avg_shortest_path > wax_small.avg_shortest_path,
+        "Waxman paths should grow with N"
+    );
+    println!("\nmetric scaling shape checks OK");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Chord DHT overlay (Stoica et al. [30]) as a topology baseline.
+//!
+//! Nodes are hashed onto a 2^m identifier ring; each node keeps its
+//! successor and m fingers (successor of `id + 2^i`). The undirected
+//! overlay graph has degree ~2·log2(n) (fingers + reverse fingers), which
+//! is why paper Fig. 3 shows Chord with low diameter but a high
+//! convergence factor relative to its degree.
+
+use crate::graph::Graph;
+use sha2::{Digest, Sha256};
+
+const M: usize = 32; // identifier bits
+
+fn chord_id(node: u64) -> u64 {
+    let mut h = Sha256::new();
+    h.update(b"chord");
+    h.update(node.to_be_bytes());
+    let d = h.finalize();
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&d[..8]);
+    u64::from_be_bytes(b) & ((1u64 << M) - 1)
+}
+
+/// Build the Chord overlay over `n` nodes (indices 0..n are hashed to the
+/// identifier ring; duplicate ids are perturbed deterministically).
+pub fn chord(n: usize) -> Graph {
+    assert!(n >= 2);
+    // (ring id, node index), sorted along the identifier circle
+    let mut pts: Vec<(u64, usize)> = (0..n).map(|i| (chord_id(i as u64), i)).collect();
+    pts.sort();
+    // perturb exact duplicates (astronomically rare, but keep total order)
+    for i in 1..pts.len() {
+        if pts[i].0 == pts[i - 1].0 {
+            pts[i].0 = pts[i].0.wrapping_add(1) & ((1u64 << M) - 1);
+        }
+    }
+    pts.sort();
+
+    // successor of an identifier: first point with id >= x (wrapping)
+    let successor = |x: u64| -> usize {
+        match pts.binary_search_by(|p| p.0.cmp(&x)) {
+            Ok(i) => pts[i].1,
+            Err(i) => pts[i % pts.len()].1,
+        }
+    };
+
+    let mut g = Graph::new(n);
+    for &(id, node) in &pts {
+        // successor link
+        let succ = successor((id + 1) & ((1u64 << M) - 1));
+        if succ != node {
+            g.add_edge(node, succ);
+        }
+        // finger links: successor(id + 2^i)
+        for i in 0..M {
+            let target = (id.wrapping_add(1u64 << i)) & ((1u64 << M) - 1);
+            let f = successor(target);
+            if f != node {
+                g.add_edge(node, f);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::is_connected;
+    use crate::metrics::path_metrics;
+
+    #[test]
+    fn chord_connected_and_log_degree() {
+        let n = 300;
+        let g = chord(n);
+        assert!(is_connected(&g));
+        let avg = g.avg_degree();
+        let log2n = (n as f64).log2();
+        // paper: node degree ≈ 2 log n
+        assert!(avg > log2n && avg < 4.0 * log2n, "avg degree {avg}");
+    }
+
+    #[test]
+    fn chord_low_diameter() {
+        let g = chord(300);
+        let m = path_metrics(&g);
+        assert!(m.diameter <= 8, "diameter {}", m.diameter);
+    }
+
+    #[test]
+    fn chord_deterministic() {
+        let a = chord(64);
+        let b = chord(64);
+        assert_eq!(a.edges(), b.edges());
+    }
+}

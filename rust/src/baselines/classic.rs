@@ -1,0 +1,153 @@
+//! Classic DFL topologies from paper Table I: ring, 2D grid, complete
+//! graph, (dynamic) chain, hypercube, and torus.
+
+use crate::graph::Graph;
+
+/// Ring: degree 2 (He et al. [11]).
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    if n >= 2 {
+        for i in 0..n {
+            g.add_edge(i, (i + 1) % n);
+        }
+    }
+    g
+}
+
+/// Chain (path): the GADMM "dynamic chain" static skeleton.
+pub fn chain(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for i in 1..n {
+        g.add_edge(i - 1, i);
+    }
+    g
+}
+
+/// Complete graph: degree N-1.
+pub fn complete(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            g.add_edge(u, v);
+        }
+    }
+    g
+}
+
+/// 2D grid, as square as possible (degree <= 4, no wraparound).
+pub fn grid2d(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    if n == 0 {
+        return g;
+    }
+    let cols = (n as f64).sqrt().ceil() as usize;
+    for i in 0..n {
+        let (r, c) = (i / cols, i % cols);
+        if c + 1 < cols && i + 1 < n {
+            g.add_edge(i, i + 1);
+        }
+        if (r + 1) * cols + c < n {
+            g.add_edge(i, (r + 1) * cols + c);
+        }
+    }
+    g
+}
+
+/// 2D torus (grid with wraparound, degree 4). Requires n = rows*cols with
+/// rows, cols >= 3 for a simple graph; we pick the most square factoring.
+pub fn torus(n: usize) -> Graph {
+    let mut g = Graph::new(n);
+    if n < 9 {
+        return ring(n); // degenerate: fall back
+    }
+    let mut rows = (n as f64).sqrt() as usize;
+    while rows > 1 && n % rows != 0 {
+        rows -= 1;
+    }
+    let cols = n / rows;
+    if rows < 3 || cols < 3 {
+        return ring(n);
+    }
+    for r in 0..rows {
+        for c in 0..cols {
+            let i = r * cols + c;
+            g.add_edge(i, r * cols + (c + 1) % cols);
+            g.add_edge(i, ((r + 1) % rows) * cols + c);
+        }
+    }
+    g
+}
+
+/// Hypercube over n = 2^k nodes (degree k = log2 n). Panics otherwise.
+pub fn hypercube(n: usize) -> Graph {
+    assert!(n.is_power_of_two(), "hypercube needs a power of two, got {n}");
+    let mut g = Graph::new(n);
+    let k = n.trailing_zeros() as usize;
+    for u in 0..n {
+        for b in 0..k {
+            g.add_edge(u, u ^ (1 << b));
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::is_connected;
+    use crate::metrics::path_metrics;
+
+    #[test]
+    fn ring_properties() {
+        let g = ring(10);
+        assert!(is_connected(&g));
+        assert!((0..10).all(|u| g.degree(u) == 2));
+        assert_eq!(path_metrics(&g).diameter, 5);
+    }
+
+    #[test]
+    fn chain_properties() {
+        let g = chain(10);
+        assert!(is_connected(&g));
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(5), 2);
+        assert_eq!(path_metrics(&g).diameter, 9);
+    }
+
+    #[test]
+    fn complete_properties() {
+        let g = complete(8);
+        assert_eq!(g.m(), 28);
+        assert!((0..8).all(|u| g.degree(u) == 7));
+    }
+
+    #[test]
+    fn grid_properties() {
+        let g = grid2d(16);
+        assert!(is_connected(&g));
+        assert!(g.max_degree() <= 4);
+        assert_eq!(path_metrics(&g).diameter, 6); // 4x4 grid: (3+3)
+    }
+
+    #[test]
+    fn torus_properties() {
+        let g = torus(36);
+        assert!(is_connected(&g));
+        assert!((0..36).all(|u| g.degree(u) == 4));
+        assert_eq!(path_metrics(&g).diameter, 6); // 6x6 torus: 3+3
+    }
+
+    #[test]
+    fn hypercube_properties() {
+        let g = hypercube(32);
+        assert!(is_connected(&g));
+        assert!((0..32).all(|u| g.degree(u) == 5));
+        assert_eq!(path_metrics(&g).diameter, 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn hypercube_rejects_non_power() {
+        hypercube(20);
+    }
+}

@@ -1,0 +1,84 @@
+//! Distributed-Delaunay-triangulation-style overlay (Lee & Lam [19],
+//! Lam & Qian [17]) as a topology baseline.
+//!
+//! A full Delaunay triangulation implementation is overkill for the
+//! metric study: what the paper exercises is its *geometric locality*
+//! (constant degree, greedy-routable, neighbors are spatially close). We
+//! build the standard planar proxy: connect each node to its k nearest
+//! neighbors in the unit square and symmetrize, then add a Gabriel-graph
+//! pruning pass to keep the planar, short-edge character. This reproduces
+//! DT's qualitative position in Fig. 3 (long paths across the space).
+
+use crate::graph::Graph;
+use crate::util::Rng;
+
+pub fn delaunay_like(n: usize, k: usize, seed: u64) -> Graph {
+    assert!(n > k);
+    let mut rng = Rng::new(seed ^ 0xDE1A);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+    let d2 = |u: usize, v: usize| -> f64 {
+        let dx = pts[u].0 - pts[v].0;
+        let dy = pts[u].1 - pts[v].1;
+        dx * dx + dy * dy
+    };
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        // k nearest neighbors of u
+        let mut others: Vec<usize> = (0..n).filter(|&v| v != u).collect();
+        others.sort_by(|&a, &b| d2(u, a).partial_cmp(&d2(u, b)).unwrap());
+        for &v in others.iter().take(k) {
+            // Gabriel condition: no third point inside the circle with
+            // diameter (u,v). Keeps edges locally minimal like a DT.
+            let mid = ((pts[u].0 + pts[v].0) / 2.0, (pts[u].1 + pts[v].1) / 2.0);
+            let r2 = d2(u, v) / 4.0;
+            let blocked = (0..n).any(|w| {
+                if w == u || w == v {
+                    return false;
+                }
+                let dx = pts[w].0 - mid.0;
+                let dy = pts[w].1 - mid.1;
+                dx * dx + dy * dy < r2
+            });
+            if !blocked {
+                g.add_edge(u, v);
+            }
+        }
+        // guarantee minimum connectivity: always keep the single nearest
+        if g.degree(u) == 0 {
+            g.add_edge(u, others[0]);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::num_components;
+    use crate::metrics::path_metrics;
+
+    #[test]
+    fn dt_like_constant_degree() {
+        let g = delaunay_like(300, 6, 5);
+        assert!(g.avg_degree() < 8.0);
+        assert!((0..300).all(|u| g.degree(u) >= 1));
+    }
+
+    #[test]
+    fn dt_like_mostly_connected_with_long_paths() {
+        let g = delaunay_like(300, 6, 6);
+        assert!(num_components(&g) <= 3);
+        // geometric locality => diameter grows like sqrt(n), much larger
+        // than an expander's log(n)
+        let m = path_metrics(&g);
+        assert!(m.diameter >= 10, "diameter {}", m.diameter);
+    }
+
+    #[test]
+    fn dt_deterministic() {
+        assert_eq!(
+            delaunay_like(100, 5, 1).edges(),
+            delaunay_like(100, 5, 1).edges()
+        );
+    }
+}

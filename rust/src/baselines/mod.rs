@@ -1,0 +1,104 @@
+//! Baseline overlay topologies from the paper's Table I and Fig. 3
+//! comparators, plus the "Best of 100 random d-regular graphs" generator.
+
+pub mod chord;
+pub mod classic;
+pub mod delaunay;
+pub mod social;
+pub mod viceroy;
+pub mod waxman;
+
+pub use chord::chord;
+pub use classic::{chain, complete, grid2d, hypercube, ring, torus};
+pub use delaunay::delaunay_like;
+pub use social::social;
+pub use viceroy::viceroy;
+pub use waxman::{waxman, WaxmanParams};
+
+use crate::graph::gen::random_regular;
+use crate::graph::Graph;
+use crate::metrics::{self, TopologyMetrics};
+use crate::util::Rng;
+
+/// "Best": generate `trials` random d-regular graphs and keep, per metric,
+/// the best value observed (paper §II-C(1)). Returns the per-metric optima
+/// — note these may come from *different* graphs, exactly like the paper's
+/// plotted "Best" curve.
+pub struct BestOfRegular {
+    pub best_convergence_factor: f64,
+    pub best_lambda: f64,
+    pub best_diameter: u32,
+    pub best_aspl: f64,
+}
+
+pub fn best_of_regular(n: usize, d: usize, trials: usize, seed: u64) -> BestOfRegular {
+    let mut rng = Rng::new(seed ^ 0xBE57);
+    let mut best = BestOfRegular {
+        best_convergence_factor: f64::INFINITY,
+        best_lambda: f64::INFINITY,
+        best_diameter: u32::MAX,
+        best_aspl: f64::INFINITY,
+    };
+    for t in 0..trials {
+        let g = random_regular(n, d, &mut rng);
+        let m = metrics::evaluate(&g, seed.wrapping_add(t as u64));
+        if !m.connected {
+            continue;
+        }
+        best.best_convergence_factor = best.best_convergence_factor.min(m.convergence_factor);
+        best.best_lambda = best.best_lambda.min(m.lambda);
+        best.best_diameter = best.best_diameter.min(m.diameter);
+        best.best_aspl = best.best_aspl.min(m.avg_shortest_path);
+    }
+    best
+}
+
+/// Named topology constructor used by the CLI and the Fig. 3 harness.
+pub fn by_name(name: &str, n: usize, seed: u64) -> anyhow::Result<Graph> {
+    Ok(match name {
+        "ring" => ring(n),
+        "chain" => chain(n),
+        "complete" => complete(n),
+        "grid" => grid2d(n),
+        "torus" => torus(n),
+        "hypercube" => hypercube(n.next_power_of_two() / 2),
+        "chord" => chord(n),
+        "viceroy" => viceroy(n, seed),
+        "waxman" => waxman(n, &WaxmanParams::default(), seed),
+        "delaunay" => delaunay_like(n, 6, seed),
+        "social" => social(n, seed),
+        "fedlay" => crate::topology::fedlay_graph(n, 3),
+        other => anyhow::bail!("unknown topology {other:?}"),
+    })
+}
+
+/// Evaluate a named topology (CLI `topology` subcommand).
+pub fn evaluate_named(name: &str, n: usize, seed: u64) -> anyhow::Result<TopologyMetrics> {
+    Ok(metrics::evaluate(&by_name(name, n, seed)?, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_of_regular_sane() {
+        let b = best_of_regular(60, 6, 5, 3);
+        assert!(b.best_lambda > 0.0 && b.best_lambda < 1.0);
+        assert!(b.best_convergence_factor >= 1.0);
+        assert!(b.best_diameter >= 2 && b.best_diameter < 10);
+        assert!(b.best_aspl > 1.0);
+    }
+
+    #[test]
+    fn by_name_covers_all() {
+        for name in [
+            "ring", "chain", "complete", "grid", "torus", "hypercube", "chord", "viceroy",
+            "waxman", "delaunay", "social", "fedlay",
+        ] {
+            let g = by_name(name, 64, 1).unwrap();
+            assert!(g.n() >= 32, "{name}");
+        }
+        assert!(by_name("nope", 10, 1).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Social-network topology baseline.
+//!
+//! The paper samples 300 nodes of the Facebook ego-network dataset [22];
+//! that dataset is unavailable offline, so we generate a Barabási–Albert
+//! preferential-attachment graph (same heavy-tailed degree family, strong
+//! local clustering added via triad closure) — see DESIGN.md
+//! §Substitutions. The comparator's role in Fig. 3 is "overlay from another
+//! application channel with skewed degrees", which BA+triads reproduces.
+
+use crate::graph::gen::barabasi_albert;
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// BA graph with an extra triad-closure pass (clustering like a social
+/// graph): for each node, with probability `p_triad` connect two of its
+/// neighbors.
+pub fn social(n: usize, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0x50C1A1);
+    let mut g = barabasi_albert(n, 3, &mut rng);
+    let p_triad = 0.3;
+    for u in 0..n {
+        let nbrs: Vec<usize> = g.neighbors(u).collect();
+        if nbrs.len() >= 2 && rng.chance(p_triad) {
+            let a = nbrs[rng.index(nbrs.len())];
+            let b = nbrs[rng.index(nbrs.len())];
+            if a != b {
+                g.add_edge(a, b);
+            }
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::is_connected;
+
+    #[test]
+    fn social_connected_heavy_tail() {
+        let g = social(300, 11);
+        assert!(is_connected(&g));
+        assert!(g.max_degree() > 3 * g.avg_degree() as usize);
+    }
+
+    #[test]
+    fn social_deterministic() {
+        assert_eq!(social(100, 2).edges(), social(100, 2).edges());
+    }
+}

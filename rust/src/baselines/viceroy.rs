@@ -1,0 +1,89 @@
+//! Viceroy overlay (Malkhi, Naor, Ratajczak [21]): a constant-degree
+//! butterfly-network emulation.
+//!
+//! We follow the classic construction: each node draws a random level
+//! `l ∈ {1..log n}` and a random ring position; links are (a) ring
+//! successor/predecessor, (b) level-ring neighbors, (c) butterfly "down"
+//! links to level l+1 at distance ~1/2^l and ~0, and (d) an "up" link to
+//! level l-1. Degree is O(1); routing diameter is O(log n) in expectation
+//! — matching the qualitative dot the paper plots in Fig. 3.
+
+use crate::graph::Graph;
+use crate::util::Rng;
+
+pub fn viceroy(n: usize, seed: u64) -> Graph {
+    assert!(n >= 4);
+    let mut rng = Rng::new(seed ^ 0x51CE_B00C);
+    let levels = ((n as f64).log2().floor() as usize).max(1);
+    // random ring positions in [0,1), unique by construction of f64 draws
+    let pos: Vec<f64> = (0..n).map(|_| rng.next_f64()).collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| pos[a].partial_cmp(&pos[b]).unwrap());
+    let level: Vec<usize> = (0..n).map(|_| 1 + rng.index(levels)).collect();
+
+    let mut g = Graph::new(n);
+    // (a) general ring
+    for i in 0..n {
+        g.add_edge(order[i], order[(i + 1) % n]);
+    }
+    // helper: node at smallest position >= x (wrapping), by binary search
+    let mut sorted_pos: Vec<(f64, usize)> = order.iter().map(|&i| (pos[i], i)).collect();
+    sorted_pos.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let successor_at = |x: f64, pred: &dyn Fn(usize) -> bool| -> Option<usize> {
+        let start = sorted_pos.partition_point(|p| p.0 < x);
+        for k in 0..n {
+            let cand = sorted_pos[(start + k) % n].1;
+            if pred(cand) {
+                return Some(cand);
+            }
+        }
+        None
+    };
+    for u in 0..n {
+        let l = level[u];
+        let x = pos[u];
+        // (b) level ring: next node on the same level
+        if let Some(v) = successor_at(x + 1e-9, &|c| c != u && level[c] == l) {
+            g.add_edge(u, v);
+        }
+        // (c) down links to level l+1: one "close", one at distance 1/2^l
+        if l < levels {
+            if let Some(v) = successor_at(x, &|c| c != u && level[c] == l + 1) {
+                g.add_edge(u, v);
+            }
+            let far = (x + 1.0 / (1u64 << l) as f64).fract();
+            if let Some(v) = successor_at(far, &|c| c != u && level[c] == l + 1) {
+                g.add_edge(u, v);
+            }
+        }
+        // (d) up link to level l-1
+        if l > 1 {
+            if let Some(v) = successor_at(x, &|c| c != u && level[c] == l - 1) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    // fix the degenerate case where level filtering left pieces: the
+    // general ring already guarantees connectivity.
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::is_connected;
+
+    #[test]
+    fn viceroy_connected_constant_degree() {
+        let g = viceroy(300, 42);
+        assert!(is_connected(&g));
+        // butterfly emulation: constant average degree, way below log n
+        assert!(g.avg_degree() < 12.0, "avg {}", g.avg_degree());
+    }
+
+    #[test]
+    fn viceroy_deterministic_per_seed() {
+        assert_eq!(viceroy(100, 7).edges(), viceroy(100, 7).edges());
+        assert_ne!(viceroy(100, 7).edges(), viceroy(100, 8).edges());
+    }
+}

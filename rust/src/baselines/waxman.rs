@@ -1,0 +1,88 @@
+//! Waxman random geometric network (Waxman [36]): nodes placed in the unit
+//! square; edge probability decays with Euclidean distance,
+//! `P(u,v) = α · exp(-d(u,v) / (β·D))` with `D = max distance`.
+//! Models physical-proximity overlays — the paper uses it to show that
+//! geographic locality hurts DFL propagation (Fig. 3).
+
+use crate::graph::Graph;
+use crate::util::Rng;
+
+pub struct WaxmanParams {
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+impl Default for WaxmanParams {
+    fn default() -> Self {
+        // Locality-emphasizing values: sparse, connected at n~300, with the
+        // long-path geometric character the paper contrasts against.
+        Self { alpha: 0.4, beta: 0.06 }
+    }
+}
+
+pub fn waxman(n: usize, params: &WaxmanParams, seed: u64) -> Graph {
+    let mut rng = Rng::new(seed ^ 0x0A0A_BEEF);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+    let dmax = 2f64.sqrt();
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let dx = pts[u].0 - pts[v].0;
+            let dy = pts[u].1 - pts[v].1;
+            let d = (dx * dx + dy * dy).sqrt();
+            let p = params.alpha * (-d / (params.beta * dmax)).exp();
+            if rng.chance(p) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    // Waxman graphs can leave isolated nodes; attach each to its nearest
+    // neighbor so metric computations see one component (the paper's
+    // comparator is implicitly connected).
+    for u in 0..n {
+        if g.degree(u) == 0 {
+            let mut best = usize::MAX;
+            let mut bd = f64::INFINITY;
+            for v in 0..n {
+                if v == u {
+                    continue;
+                }
+                let dx = pts[u].0 - pts[v].0;
+                let dy = pts[u].1 - pts[v].1;
+                let d = dx * dx + dy * dy;
+                if d < bd {
+                    bd = d;
+                    best = v;
+                }
+            }
+            g.add_edge(u, best);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn waxman_no_isolated_nodes() {
+        let g = waxman(200, &WaxmanParams::default(), 3);
+        assert!((0..200).all(|u| g.degree(u) >= 1));
+    }
+
+    #[test]
+    fn waxman_prefers_short_edges() {
+        // with beta small, graph should be sparse relative to complete
+        let g = waxman(200, &WaxmanParams::default(), 4);
+        assert!(g.m() < 200 * 199 / 8, "too dense: {}", g.m());
+        assert!(g.m() > 100, "too sparse: {}", g.m());
+    }
+
+    #[test]
+    fn waxman_deterministic() {
+        let a = waxman(100, &WaxmanParams::default(), 9);
+        let b = waxman(100, &WaxmanParams::default(), 9);
+        assert_eq!(a.edges(), b.edges());
+    }
+}

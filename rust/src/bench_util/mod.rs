@@ -1,0 +1,176 @@
+//! Bench harness substrate (criterion is not in the vendored dependency
+//! set): warmup + timed repetitions with mean/stddev/percentiles, plus
+//! aligned table printing for the per-figure experiment harnesses.
+
+use crate::util::{percentile, Summary};
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_s > 0.0 {
+            1.0 / self.mean_s
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    let mut summary = Summary::new();
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let dt = t0.elapsed().as_secs_f64();
+        times.push(dt);
+        summary.add(dt);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: iters.max(1),
+        mean_s: summary.mean(),
+        stddev_s: summary.stddev(),
+        p50_s: percentile(&times, 0.5),
+        p95_s: percentile(&times, 0.95),
+    }
+}
+
+/// Render bench results as an aligned table.
+pub fn render_results(results: &[BenchResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
+        "benchmark", "iters", "mean", "p50", "p95", "throughput/s"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14.1}\n",
+            r.name,
+            r.iters,
+            fmt_time(r.mean_s),
+            fmt_time(r.p50_s),
+            fmt_time(r.p95_s),
+            r.throughput_per_s()
+        ));
+    }
+    out
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Simple aligned table printer for experiment harnesses.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len().saturating_sub(1))));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Scale knob: benches run scaled-down by default on the 1-CPU sandbox;
+/// `FEDLAY_BENCH_SCALE=paper` switches to paper-scale parameters.
+pub fn paper_scale() -> bool {
+    std::env::var("FEDLAY_BENCH_SCALE").map(|v| v == "paper").unwrap_or(false)
+}
+
+/// Pick `small` normally, `paper` under FEDLAY_BENCH_SCALE=paper.
+pub fn scaled<T>(small: T, paper: T) -> T {
+    if paper_scale() {
+        paper
+    } else {
+        small
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", 1, 5, || (0..10_000).sum::<u64>());
+        assert!(r.mean_s > 0.0);
+        assert!(r.p95_s >= r.p50_s);
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["long-name".into(), "2.5".into()]);
+        let s = t.render();
+        assert!(s.contains("long-name"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn fmt_time_ranges() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("µs"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+}

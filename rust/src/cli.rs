@@ -1,0 +1,141 @@
+//! Command-line launcher (substrate: clap is not in the vendored set).
+//!
+//! Subcommands:
+//!   topology  — evaluate a named overlay on the §II-B metrics
+//!   churn     — mass join/fail resilience simulation (Fig. 8)
+//!   train     — run a DFL method over the AOT runtime (Figs. 9-19)
+//!   node      — run one real TCP FedLay client (prototype mode)
+//!
+//! Global flags: `--config <file>` and repeatable `--set key=value`.
+
+use crate::config::Config;
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub sets: Vec<String>,
+}
+
+pub fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
+    let mut args = Args::default();
+    let mut it = argv.iter().peekable();
+    match it.next() {
+        Some(cmd) if !cmd.starts_with("--") => args.command = cmd.clone(),
+        Some(flag) => anyhow::bail!("expected a subcommand before {flag:?}"),
+        None => anyhow::bail!("usage: fedlay <topology|churn|train|node> [flags]"),
+    }
+    while let Some(a) = it.next() {
+        let Some(name) = a.strip_prefix("--") else {
+            anyhow::bail!("unexpected positional argument {a:?}");
+        };
+        if name == "set" {
+            let v = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--set needs key=value"))?;
+            args.sets.push(v.clone());
+            continue;
+        }
+        // flags may be --k v or --k=v; bare --k is boolean true
+        if let Some((k, v)) = name.split_once('=') {
+            args.flags.insert(k.to_string(), v.to_string());
+        } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+            args.flags.insert(name.to_string(), it.next().unwrap().clone());
+        } else {
+            args.flags.insert(name.to_string(), "true".to_string());
+        }
+    }
+    Ok(args)
+}
+
+impl Args {
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn config(&self) -> anyhow::Result<Config> {
+        let path = self.flags.get("config").map(std::path::PathBuf::from);
+        Config::load(path.as_deref(), &self.sets)
+    }
+}
+
+pub const USAGE: &str = "\
+fedlay — practical overlay networks for decentralized federated learning
+
+USAGE:
+  fedlay topology --name <fedlay|chord|viceroy|waxman|delaunay|social|ring|...>
+                  [--nodes N] [--seed S]
+  fedlay churn    [--initial N] [--joins J] [--fails F] [--until-ms T]
+                  [--set overlay.spaces=L] [--set net.latency_ms=350]
+  fedlay train    [--method fedlay|fedavg|gaia|dfl-dds|chord]
+                  [--set dfl.task=mlp] [--set dfl.clients=16]
+                  [--minutes M] [--sample-minutes S]
+  fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
+                  (one real TCP client; spawn several for a live network)
+
+GLOBAL FLAGS:
+  --config <file>     TOML-subset config file
+  --set key=value     override any config key (repeatable)
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse_args(&sv(&["train", "--method", "fedlay", "--minutes=30", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.str("method", ""), "fedlay");
+        assert_eq!(a.usize("minutes", 0).unwrap(), 30);
+        assert!(a.bool("verbose"));
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn collects_set_overrides() {
+        let a = parse_args(&sv(&["churn", "--set", "overlay.spaces=4", "--set", "net.seed=9"]))
+            .unwrap();
+        assert_eq!(a.sets, vec!["overlay.spaces=4", "net.seed=9"]);
+        let cfg = a.config().unwrap();
+        assert_eq!(cfg.overlay.spaces, 4);
+        assert_eq!(cfg.net.seed, 9);
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(parse_args(&sv(&[])).is_err());
+        assert!(parse_args(&sv(&["--flag-first"])).is_err());
+        assert!(parse_args(&sv(&["train", "stray"])).is_err());
+        let a = parse_args(&sv(&["train", "--minutes", "abc"])).unwrap();
+        assert!(a.usize("minutes", 1).is_err());
+    }
+}

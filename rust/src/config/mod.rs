@@ -1,0 +1,7 @@
+//! Config system: a TOML-subset parser plus typed experiment schemas.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{CapacityConfig, Config, DflConfig, NetConfig, OverlayConfig};
+pub use toml::{Doc, ParseError, Value};

@@ -1,0 +1,262 @@
+//! Typed experiment configuration, loaded from the TOML-subset files under
+//! `configs/` (or built programmatically by benches/examples) with CLI
+//! overrides applied on top (`--set key=value`).
+
+use super::toml::{Doc, Value};
+
+/// FedLay overlay parameters (paper §II-C).
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverlayConfig {
+    /// Number of virtual ring spaces `L`; node degree is at most `2L`.
+    pub spaces: usize,
+    /// Heartbeat period `T` in milliseconds (maintenance §III-B3).
+    pub heartbeat_ms: u64,
+    /// A neighbor is declared failed after `failure_multiple * T` silence.
+    pub failure_multiple: u32,
+    /// Period of the proactive bidirectional `Neighbor_repair` probes.
+    pub repair_probe_ms: u64,
+}
+
+impl Default for OverlayConfig {
+    fn default() -> Self {
+        Self {
+            spaces: 3,
+            heartbeat_ms: 1_000,
+            failure_multiple: 3,
+            repair_probe_ms: 4_000,
+        }
+    }
+}
+
+/// Simulated network parameters (evaluation types 2-3, §IV-A1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetConfig {
+    /// Mean one-way message latency in ms (paper uses 350ms in Fig. 8).
+    pub latency_ms: f64,
+    /// Latency jitter fraction (exponential tail added to the mean).
+    pub jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            latency_ms: 350.0,
+            jitter: 0.2,
+            seed: 7,
+        }
+    }
+}
+
+/// Client capacity tiers (paper §IV-A2: 60% medium / 20% high / 20% low;
+/// high = 2/3 of medium's times, low = 2x medium's).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CapacityConfig {
+    pub frac_high: f64,
+    pub frac_low: f64,
+    pub high_scale: f64,
+    pub low_scale: f64,
+}
+
+impl Default for CapacityConfig {
+    fn default() -> Self {
+        Self {
+            frac_high: 0.2,
+            frac_low: 0.2,
+            high_scale: 2.0 / 3.0,
+            low_scale: 2.0,
+        }
+    }
+}
+
+/// DFL training run parameters (§III-C, §IV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DflConfig {
+    /// Task name: "mlp" | "cnn" | "lstm" (must exist in the manifest).
+    pub task: String,
+    pub clients: usize,
+    /// Label shards per client (non-iid level; paper default 8).
+    pub shards_per_client: usize,
+    /// Local SGD steps per communication period.
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Base communication period for medium-capacity clients, in sim ms.
+    pub comm_period_ms: u64,
+    /// MEP confidence weights (paper: 0.5 / 0.5).
+    pub alpha_d: f64,
+    pub alpha_c: f64,
+    /// Asynchronous exchange (paper default) vs synchronous rounds.
+    pub asynchronous: bool,
+    /// Use confidence-weighted aggregation (vs simple average ablation).
+    pub confidence: bool,
+    pub capacity: CapacityConfig,
+    pub seed: u64,
+}
+
+impl Default for DflConfig {
+    fn default() -> Self {
+        Self {
+            task: "mlp".into(),
+            clients: 16,
+            shards_per_client: 8,
+            local_steps: 4,
+            lr: 0.5,
+            comm_period_ms: 5 * 60 * 1_000,
+            alpha_d: 0.5,
+            alpha_c: 0.5,
+            asynchronous: true,
+            confidence: true,
+            capacity: CapacityConfig::default(),
+            seed: 17,
+        }
+    }
+}
+
+/// Top-level experiment config.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    pub overlay: OverlayConfig,
+    pub net: NetConfig,
+    pub dfl: DflConfig,
+    /// Directory holding the AOT artifacts + manifest.
+    pub artifacts_dir: String,
+}
+
+fn d_usize(doc: &Doc, key: &str, default: usize) -> usize {
+    doc.int(key).map(|i| i as usize).unwrap_or(default)
+}
+
+fn d_u64(doc: &Doc, key: &str, default: u64) -> u64 {
+    doc.int(key).map(|i| i as u64).unwrap_or(default)
+}
+
+fn d_f64(doc: &Doc, key: &str, default: f64) -> f64 {
+    doc.float(key).unwrap_or(default)
+}
+
+impl Config {
+    /// Build a config from a parsed document; absent keys keep defaults.
+    pub fn from_doc(doc: &Doc) -> Config {
+        let od = OverlayConfig::default();
+        let nd = NetConfig::default();
+        let dd = DflConfig::default();
+        let cd = CapacityConfig::default();
+        Config {
+            overlay: OverlayConfig {
+                spaces: d_usize(doc, "overlay.spaces", od.spaces),
+                heartbeat_ms: d_u64(doc, "overlay.heartbeat_ms", od.heartbeat_ms),
+                failure_multiple: d_u64(doc, "overlay.failure_multiple", od.failure_multiple as u64)
+                    as u32,
+                repair_probe_ms: d_u64(doc, "overlay.repair_probe_ms", od.repair_probe_ms),
+            },
+            net: NetConfig {
+                latency_ms: d_f64(doc, "net.latency_ms", nd.latency_ms),
+                jitter: d_f64(doc, "net.jitter", nd.jitter),
+                seed: d_u64(doc, "net.seed", nd.seed),
+            },
+            dfl: DflConfig {
+                task: doc.str("dfl.task").unwrap_or(&dd.task).to_string(),
+                clients: d_usize(doc, "dfl.clients", dd.clients),
+                shards_per_client: d_usize(doc, "dfl.shards_per_client", dd.shards_per_client),
+                local_steps: d_usize(doc, "dfl.local_steps", dd.local_steps),
+                lr: d_f64(doc, "dfl.lr", dd.lr as f64) as f32,
+                comm_period_ms: d_u64(doc, "dfl.comm_period_ms", dd.comm_period_ms),
+                alpha_d: d_f64(doc, "dfl.alpha_d", dd.alpha_d),
+                alpha_c: d_f64(doc, "dfl.alpha_c", dd.alpha_c),
+                asynchronous: doc.bool("dfl.asynchronous").unwrap_or(dd.asynchronous),
+                confidence: doc.bool("dfl.confidence").unwrap_or(dd.confidence),
+                capacity: CapacityConfig {
+                    frac_high: d_f64(doc, "dfl.capacity.frac_high", cd.frac_high),
+                    frac_low: d_f64(doc, "dfl.capacity.frac_low", cd.frac_low),
+                    high_scale: d_f64(doc, "dfl.capacity.high_scale", cd.high_scale),
+                    low_scale: d_f64(doc, "dfl.capacity.low_scale", cd.low_scale),
+                },
+                seed: d_u64(doc, "dfl.seed", dd.seed),
+            },
+            artifacts_dir: doc.str("artifacts_dir").unwrap_or("artifacts").to_string(),
+        }
+    }
+
+    /// Load a file and apply `key=value` override strings on top.
+    pub fn load(path: Option<&std::path::Path>, overrides: &[String]) -> anyhow::Result<Config> {
+        let mut doc = match path {
+            Some(p) => Doc::parse_file(p)?,
+            None => Doc::default(),
+        };
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override {ov:?} is not key=value"))?;
+            let parsed = Doc::parse(&format!("{} = {}", k.trim(), v.trim()))
+                .map_err(|e| anyhow::anyhow!("override {ov:?}: {e}"))?;
+            doc.merge_from(parsed);
+        }
+        let cfg = Config::from_doc(&doc);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
+        anyhow::ensure!(self.overlay.heartbeat_ms > 0, "heartbeat must be positive");
+        anyhow::ensure!(self.dfl.clients >= 1, "dfl.clients must be >= 1");
+        anyhow::ensure!(self.dfl.lr > 0.0, "dfl.lr must be positive");
+        anyhow::ensure!(
+            self.dfl.alpha_d >= 0.0 && self.dfl.alpha_c >= 0.0,
+            "confidence weights must be non-negative"
+        );
+        anyhow::ensure!(
+            self.dfl.capacity.frac_high + self.dfl.capacity.frac_low <= 1.0,
+            "capacity fractions exceed 1"
+        );
+        Ok(())
+    }
+}
+
+/// Helper for benches: set a numeric override on a `Doc`.
+pub fn set_num(doc: &mut Doc, key: &str, v: f64) {
+    if v.fract() == 0.0 && v.abs() < i64::MAX as f64 {
+        doc.set(key, Value::Int(v as i64));
+    } else {
+        doc.set(key, Value::Float(v));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_overrides_defaults() {
+        let doc = Doc::parse(
+            "overlay.spaces = 5\ndfl.task = \"cnn\"\ndfl.clients = 100\nnet.latency_ms = 350",
+        )
+        .unwrap();
+        let cfg = Config::from_doc(&doc);
+        assert_eq!(cfg.overlay.spaces, 5);
+        assert_eq!(cfg.dfl.task, "cnn");
+        assert_eq!(cfg.dfl.clients, 100);
+        assert_eq!(cfg.net.latency_ms, 350.0);
+        // untouched defaults survive
+        assert_eq!(cfg.overlay.heartbeat_ms, 1_000);
+    }
+
+    #[test]
+    fn cli_overrides_win() {
+        let cfg = Config::load(None, &["dfl.clients=64".into(), "overlay.spaces=4".into()]).unwrap();
+        assert_eq!(cfg.dfl.clients, 64);
+        assert_eq!(cfg.overlay.spaces, 4);
+    }
+
+    #[test]
+    fn invalid_rejected() {
+        assert!(Config::load(None, &["overlay.spaces=0".into()]).is_err());
+        assert!(Config::load(None, &["dfl.lr=-1".into()]).is_err());
+        assert!(Config::load(None, &["garbage".into()]).is_err());
+    }
+}

@@ -1,0 +1,338 @@
+//! Minimal TOML-subset parser (substrate: serde/toml are unavailable in the
+//! vendored dependency set, so the config system parses its own files).
+//!
+//! Supported syntax — everything the FedLay configs need:
+//!   * `# comments` and blank lines
+//!   * `[section]` and `[dotted.section]` headers
+//!   * `key = value` with string ("..."), integer, float, bool values
+//!   * flat arrays of scalars: `[1, 2, 3]`, `["a", "b"]`
+//!
+//! Keys are flattened to dotted paths (`section.key`), matching the
+//! `artifacts/manifest.txt` convention so one parser serves both.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// A parsed document: dotted-path -> value, with source ordering discarded.
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| ParseError {
+                line: lineno + 1,
+                msg: msg.to_string(),
+            };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let value = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+            let path = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            entries.insert(path, value);
+        }
+        Ok(Doc { entries })
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Doc> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        Ok(Doc::parse(&text)?)
+    }
+
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        self.entries.get(path)
+    }
+
+    pub fn str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(Value::as_str)
+    }
+
+    pub fn int(&self, path: &str) -> Option<i64> {
+        self.get(path).and_then(Value::as_int)
+    }
+
+    pub fn float(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(Value::as_float)
+    }
+
+    pub fn bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(Value::as_bool)
+    }
+
+    /// All keys under a dotted prefix (e.g. `task.mlp.`).
+    pub fn keys_with_prefix<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> {
+        self.entries
+            .range(prefix.to_string()..)
+            .take_while(move |(k, _)| k.starts_with(prefix))
+            .map(|(k, _)| k.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Merge `other` over `self` (CLI overrides > file values).
+    pub fn merge_from(&mut self, other: Doc) {
+        self.entries.extend(other.entries);
+    }
+
+    pub fn set(&mut self, path: &str, value: Value) {
+        self.entries.insert(path.to_string(), value);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        if inner.contains('"') {
+            return Err("embedded quote in string".into());
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            items.push(parse_value(part.trim())?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    // Bare strings (manifest.txt style: `key = mlp_train.hlo.txt`).
+    if s.chars().all(|c| {
+        c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.' | '/' | ',' | ':')
+    }) {
+        return Ok(Value::Str(s.to_string()));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = Doc::parse(
+            r#"
+            # experiment config
+            seed = 42
+            [overlay]
+            spaces = 3          # L
+            degree_cap = 10
+            name = "fedlay"
+            frac = 0.25
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.int("seed"), Some(42));
+        assert_eq!(doc.int("overlay.spaces"), Some(3));
+        assert_eq!(doc.str("overlay.name"), Some("fedlay"));
+        assert_eq!(doc.float("overlay.frac"), Some(0.25));
+        assert_eq!(doc.bool("overlay.enabled"), Some(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = Doc::parse("degrees = [4, 6, 8]\nnames = [\"a\", \"b\"]").unwrap();
+        let arr = doc.get("degrees").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_int(), Some(6));
+        let names = doc.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[0].as_str(), Some("a"));
+    }
+
+    #[test]
+    fn parses_manifest_style_bare_strings() {
+        let doc = Doc::parse("artifact.mlp.train = mlp_train.hlo.txt\ntasks = mlp,cnn").unwrap();
+        assert_eq!(doc.str("artifact.mlp.train"), Some("mlp_train.hlo.txt"));
+        assert_eq!(doc.str("tasks"), Some("mlp,cnn"));
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let doc = Doc::parse("x = 3").unwrap();
+        assert_eq!(doc.float("x"), Some(3.0));
+    }
+
+    #[test]
+    fn reports_line_numbers() {
+        let err = Doc::parse("ok = 1\nbroken").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(Doc::parse("x = \"abc").is_err());
+        assert!(Doc::parse("[sec").is_err());
+        assert!(Doc::parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = Doc::parse("x = \"a#b\"").unwrap();
+        assert_eq!(doc.str("x"), Some("a#b"));
+    }
+
+    #[test]
+    fn merge_overrides() {
+        let mut a = Doc::parse("x = 1\ny = 2").unwrap();
+        let b = Doc::parse("y = 3\nz = 4").unwrap();
+        a.merge_from(b);
+        assert_eq!(a.int("x"), Some(1));
+        assert_eq!(a.int("y"), Some(3));
+        assert_eq!(a.int("z"), Some(4));
+    }
+
+    #[test]
+    fn prefix_iteration() {
+        let doc = Doc::parse("a.b = 1\na.c = 2\nb.a = 3").unwrap();
+        let keys: Vec<_> = doc.keys_with_prefix("a.").collect();
+        assert_eq!(keys, vec!["a.b", "a.c"]);
+    }
+}

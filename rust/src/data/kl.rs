@@ -1,0 +1,76 @@
+//! Kullback–Leibler divergence of a label histogram against the assumed
+//! iid (uniform) distribution — feeds the MEP data confidence `c_d`
+//! (paper §III-C2, refs [16], [42], [28]).
+
+/// `KL(D_loc || uniform)` from raw label counts. Empty classes contribute
+/// zero (the 0·log 0 limit). Returns 0 for an empty histogram.
+pub fn kl_divergence_vs_uniform(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    let k = counts.len();
+    if total == 0 || k == 0 {
+        return 0.0;
+    }
+    let q = 1.0 / k as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / total as f64;
+            p * (p / q).ln()
+        })
+        .sum()
+}
+
+/// General discrete KL(P||Q) with the usual conventions; `f64::INFINITY`
+/// when P has mass where Q does not.
+pub fn kl_divergence(p: &[f64], q: &[f64]) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let mut s = 0.0;
+    for (&pi, &qi) in p.iter().zip(q) {
+        if pi == 0.0 {
+            continue;
+        }
+        if qi == 0.0 {
+            return f64::INFINITY;
+        }
+        s += pi * (pi / qi).ln();
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_zero() {
+        assert!(kl_divergence_vs_uniform(&[5, 5, 5, 5]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn point_mass_is_log_k() {
+        let kl = kl_divergence_vs_uniform(&[100, 0, 0, 0]);
+        assert!((kl - 4.0f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_shards_less_divergence() {
+        // the paper's non-iid knob: fewer shards -> larger KL
+        let one = kl_divergence_vs_uniform(&[90, 0, 0, 0, 0, 0, 0, 0, 0, 0]);
+        let four = kl_divergence_vs_uniform(&[30, 30, 30, 30, 0, 0, 0, 0, 0, 0]);
+        let all = kl_divergence_vs_uniform(&[12; 10]);
+        assert!(one > four && four > all);
+    }
+
+    #[test]
+    fn general_kl_infinite_when_unsupported() {
+        assert!(kl_divergence(&[0.5, 0.5], &[1.0, 0.0]).is_infinite());
+        assert!(kl_divergence(&[1.0, 0.0], &[0.5, 0.5]).is_finite());
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        assert_eq!(kl_divergence_vs_uniform(&[]), 0.0);
+        assert_eq!(kl_divergence_vs_uniform(&[0, 0]), 0.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Synthetic data substrate: class-conditional Gaussian tasks, the Markov
+//! character stream, non-iid sharding, and KL-divergence utilities.
+
+pub mod kl;
+pub mod shard;
+pub mod stream;
+pub mod synth;
+
+pub use kl::{kl_divergence, kl_divergence_vs_uniform};
+pub use shard::{expected_histogram, locality_groups, shard_labels};
+pub use stream::{CharStream, VOCAB};
+pub use synth::{Batch, GaussianTask};

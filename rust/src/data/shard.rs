@@ -1,0 +1,144 @@
+//! Non-iid data sharding (paper §IV-A2).
+//!
+//! * `shard_labels` — the paper's sharding method: each shard carries one
+//!   label; each client holds `shards_per_client` shards, so fewer shards
+//!   ⇒ stronger non-iid skew (Fig. 11's 4/8/12-shard sweep).
+//! * `locality_groups` — the biased-locality design of Fig. 13/14: clients
+//!   are split into 10 groups; group `g` holds labels `g..g+6 (mod 10)`.
+
+use crate::util::Rng;
+
+/// Per-client label weights from the sharding method. Returns a
+/// `clients x classes` weight matrix (rows unnormalized; zero weight means
+/// the client never sees that label).
+pub fn shard_labels(
+    clients: usize,
+    classes: usize,
+    shards_per_client: usize,
+    seed: u64,
+) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed ^ 0x54A2D);
+    let mut out = Vec::with_capacity(clients);
+    for _ in 0..clients {
+        let mut w = vec![0.0f64; classes];
+        if shards_per_client >= classes {
+            // enough shards to cover all labels: iid-ish but still integer
+            // shard counts per label
+            let per = shards_per_client / classes;
+            let extra = shards_per_client % classes;
+            for (c, wc) in w.iter_mut().enumerate() {
+                *wc = per as f64 + if c < extra { 1.0 } else { 0.0 };
+            }
+        } else {
+            // pick distinct labels for this client's shards
+            let labels = rng.sample_indices(classes, shards_per_client);
+            for l in labels {
+                w[l] += 1.0;
+            }
+        }
+        out.push(w);
+    }
+    out
+}
+
+/// Fig. 13/14 locality layout: `groups` groups; group `g` holds
+/// `labels_per_group` consecutive labels starting at `g` (mod classes).
+/// Each group differs from its ring-neighbor group by exactly one label.
+pub fn locality_groups(
+    clients: usize,
+    classes: usize,
+    groups: usize,
+    labels_per_group: usize,
+) -> Vec<Vec<f64>> {
+    assert!(groups > 0 && labels_per_group <= classes);
+    let mut out = Vec::with_capacity(clients);
+    for i in 0..clients {
+        let g = i * groups / clients; // even split into groups
+        let mut w = vec![0.0f64; classes];
+        for k in 0..labels_per_group {
+            w[(g + k) % classes] = 1.0;
+        }
+        out.push(w);
+    }
+    out
+}
+
+/// Label histogram (expected counts) from weights — used for the KL-based
+/// confidence, mirroring what a real client computes over its local data.
+pub fn expected_histogram(weights: &[f64], samples: u64) -> Vec<u64> {
+    let total: f64 = weights.iter().sum();
+    if total == 0.0 {
+        return vec![0; weights.len()];
+    }
+    weights
+        .iter()
+        .map(|w| ((w / total) * samples as f64).round() as u64)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_counts_respected() {
+        let w = shard_labels(50, 10, 4, 1);
+        assert_eq!(w.len(), 50);
+        for row in &w {
+            let nz = row.iter().filter(|&&x| x > 0.0).count();
+            assert_eq!(nz, 4);
+            assert_eq!(row.iter().sum::<f64>(), 4.0);
+        }
+    }
+
+    #[test]
+    fn many_shards_cover_all_labels() {
+        let w = shard_labels(10, 10, 12, 2);
+        for row in &w {
+            assert!(row.iter().all(|&x| x > 0.0));
+            assert_eq!(row.iter().sum::<f64>() as usize, 12);
+        }
+    }
+
+    #[test]
+    fn fewer_shards_more_skew() {
+        use crate::data::kl::kl_divergence_vs_uniform;
+        let avg_kl = |shards: usize| -> f64 {
+            let w = shard_labels(40, 10, shards, 3);
+            w.iter()
+                .map(|row| {
+                    let h = expected_histogram(row, 1000);
+                    kl_divergence_vs_uniform(&h)
+                })
+                .sum::<f64>()
+                / 40.0
+        };
+        let k4 = avg_kl(4);
+        let k8 = avg_kl(8);
+        let k12 = avg_kl(12);
+        assert!(k4 > k8 && k8 > k12, "{k4} {k8} {k12}");
+    }
+
+    #[test]
+    fn locality_matches_paper_layout() {
+        // 100 clients, 10 groups, 6 of 10 labels each (paper §IV-C)
+        let w = locality_groups(100, 10, 10, 6);
+        // group 0 = clients 0..10 -> labels 0..6
+        assert_eq!(w[0].iter().filter(|&&x| x > 0.0).count(), 6);
+        assert!(w[0][0] > 0.0 && w[0][5] > 0.0 && w[0][6] == 0.0);
+        // last group wraps (labels 9,0,1,2,3,4)
+        let last = &w[99];
+        assert!(last[9] > 0.0 && last[0] > 0.0 && last[4] > 0.0 && last[5] == 0.0);
+        // neighboring groups differ by exactly 2 labels (one in, one out)
+        let diff: usize = (0..10)
+            .filter(|&c| (w[0][c] > 0.0) != (w[10][c] > 0.0))
+            .count();
+        assert_eq!(diff, 2);
+    }
+
+    #[test]
+    fn histogram_matches_weights() {
+        let h = expected_histogram(&[1.0, 1.0, 2.0], 400);
+        assert_eq!(h, vec![100, 100, 200]);
+    }
+}

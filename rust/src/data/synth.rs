@@ -1,0 +1,225 @@
+//! Synthetic datasets standing in for MNIST / CIFAR-10 / Shakespeare
+//! (DESIGN.md §Substitutions).
+//!
+//! * `GaussianTask` — class-conditional Gaussians in `D` dims, `C`
+//!   classes: each class has a deterministic unit-ish mean vector; samples
+//!   are `mean + σ·N(0, I)`. Separable but noisy, so SGD accuracy climbs
+//!   smoothly from chance toward ~1 like the paper's image tasks.
+//! * `CharStream` (in `stream.rs`) — Markov character stream for the
+//!   LSTM task.
+//!
+//! All generation is seeded and reproducible; train and test draws come
+//! from disjoint RNG streams.
+
+use crate::util::Rng;
+
+/// A labeled batch: features flattened row-major `[B, D]`, labels `[B]`.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub batch: usize,
+    pub dim: usize,
+}
+
+/// Class-conditional Gaussian classification task.
+#[derive(Debug, Clone)]
+pub struct GaussianTask {
+    pub dim: usize,
+    pub classes: usize,
+    pub sigma: f32,
+    /// `classes x dim` mean matrix (deterministic from the task seed).
+    means: Vec<f32>,
+}
+
+impl GaussianTask {
+    pub fn new(dim: usize, classes: usize, sigma: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xDA7A);
+        // Random unit-norm means scaled so classes overlap at sigma~1.
+        let mut means = vec![0.0f32; classes * dim];
+        for c in 0..classes {
+            let row = &mut means[c * dim..(c + 1) * dim];
+            let mut norm = 0.0f64;
+            for v in row.iter_mut() {
+                *v = rng.gaussian() as f32;
+                norm += (*v as f64) * (*v as f64);
+            }
+            let scale = (2.5 / norm.sqrt()) as f32;
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+        Self {
+            dim,
+            classes,
+            sigma,
+            means,
+        }
+    }
+
+    /// The standard MNIST-like task (784-d, 10 classes) for the `mlp`
+    /// artifact.
+    pub fn mnist_like(seed: u64) -> Self {
+        Self::new(784, 10, 1.0, seed)
+    }
+
+    /// The CIFAR-like task (16x16x3 = 768-d, 10 classes) for the `cnn`
+    /// artifact. Class means are *smooth* low-frequency images (a coarse
+    /// random grid bilinearly upsampled), so convolution + pooling can
+    /// actually extract them — a Gaussian mean with no spatial structure
+    /// would defeat a conv net by construction.
+    pub fn cifar_like(seed: u64) -> Self {
+        Self::new_smooth_image(16, 3, 10, 1.0, seed)
+    }
+
+    /// Class-conditional Gaussians whose means are smooth `hw x hw x ch`
+    /// images: a `coarse x coarse` random grid per channel, bilinearly
+    /// upsampled, then normalized to a fixed energy.
+    pub fn new_smooth_image(hw: usize, ch: usize, classes: usize, sigma: f32, seed: u64) -> Self {
+        let dim = hw * hw * ch;
+        let coarse = 4usize;
+        let mut rng = Rng::new(seed ^ 0xC1FA);
+        let mut means = vec![0.0f32; classes * dim];
+        for c in 0..classes {
+            for k in 0..ch {
+                // coarse random field
+                let grid: Vec<f32> = (0..coarse * coarse)
+                    .map(|_| rng.gaussian() as f32)
+                    .collect();
+                // bilinear upsample onto hw x hw (NHWC layout)
+                for y in 0..hw {
+                    for x in 0..hw {
+                        let fy = y as f32 / (hw - 1) as f32 * (coarse - 1) as f32;
+                        let fx = x as f32 / (hw - 1) as f32 * (coarse - 1) as f32;
+                        let (y0, x0) = (fy as usize, fx as usize);
+                        let (y1, x1) = ((y0 + 1).min(coarse - 1), (x0 + 1).min(coarse - 1));
+                        let (dy, dx) = (fy - y0 as f32, fx - x0 as f32);
+                        let v = grid[y0 * coarse + x0] * (1.0 - dy) * (1.0 - dx)
+                            + grid[y0 * coarse + x1] * (1.0 - dy) * dx
+                            + grid[y1 * coarse + x0] * dy * (1.0 - dx)
+                            + grid[y1 * coarse + x1] * dy * dx;
+                        means[c * dim + (y * hw + x) * ch + k] = v;
+                    }
+                }
+            }
+            // normalize class mean energy like the plain constructor
+            let row = &mut means[c * dim..(c + 1) * dim];
+            let norm: f64 = row.iter().map(|v| (*v as f64) * (*v as f64)).sum();
+            let scale = (7.0 / norm.sqrt()) as f32;
+            for v in row.iter_mut() {
+                *v *= scale;
+            }
+        }
+        Self {
+            dim,
+            classes,
+            sigma,
+            means,
+        }
+    }
+
+    /// Sample one data point of class `label` into `out`.
+    pub fn sample_into(&self, label: usize, rng: &mut Rng, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        let mean = &self.means[label * self.dim..(label + 1) * self.dim];
+        for (o, &m) in out.iter_mut().zip(mean) {
+            *o = m + self.sigma * rng.gaussian() as f32;
+        }
+    }
+
+    /// Draw a batch with labels sampled from `label_weights` (unnormalized;
+    /// this is how non-iid client shards are expressed).
+    pub fn batch(&self, batch: usize, label_weights: &[f64], rng: &mut Rng) -> Batch {
+        assert_eq!(label_weights.len(), self.classes);
+        let mut x = vec![0.0f32; batch * self.dim];
+        let mut y = Vec::with_capacity(batch);
+        for b in 0..batch {
+            let label = rng.weighted_index(label_weights);
+            y.push(label as i32);
+            self.sample_into(label, rng, &mut x[b * self.dim..(b + 1) * self.dim]);
+        }
+        Batch {
+            x,
+            y,
+            batch,
+            dim: self.dim,
+        }
+    }
+
+    /// An iid test batch (uniform labels) from a dedicated stream.
+    pub fn test_batch(&self, batch: usize, seed: u64) -> Batch {
+        let mut rng = Rng::new(seed ^ 0x7E57);
+        let w = vec![1.0; self.classes];
+        self.batch(batch, &w, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let t = GaussianTask::new(16, 4, 1.0, 9);
+        let mut r1 = Rng::new(1);
+        let mut r2 = Rng::new(1);
+        let w = vec![1.0; 4];
+        let a = t.batch(8, &w, &mut r1);
+        let b = t.batch(8, &w, &mut r2);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+
+    #[test]
+    fn labels_respect_weights() {
+        let t = GaussianTask::new(8, 4, 1.0, 9);
+        let mut rng = Rng::new(2);
+        let w = vec![1.0, 0.0, 0.0, 1.0];
+        let b = t.batch(200, &w, &mut rng);
+        assert!(b.y.iter().all(|&y| y == 0 || y == 3));
+        assert!(b.y.iter().any(|&y| y == 0) && b.y.iter().any(|&y| y == 3));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // nearest-mean classification on fresh samples should beat chance
+        // by a wide margin (validates the task is learnable)
+        let t = GaussianTask::new(32, 5, 1.0, 3);
+        let mut rng = Rng::new(4);
+        let mut correct = 0;
+        let n = 500;
+        let mut buf = vec![0.0f32; 32];
+        for i in 0..n {
+            let label = i % 5;
+            t.sample_into(label, &mut rng, &mut buf);
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for c in 0..5 {
+                let mean = &t.means[c * 32..(c + 1) * 32];
+                let d: f64 = buf
+                    .iter()
+                    .zip(mean)
+                    .map(|(a, m)| ((a - m) as f64).powi(2))
+                    .sum();
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if best == label {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        assert!(acc > 0.8, "nearest-mean accuracy {acc}");
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let t = GaussianTask::mnist_like(1);
+        let b = t.test_batch(32, 5);
+        assert_eq!(b.x.len(), 32 * 784);
+        assert_eq!(b.y.len(), 32);
+        assert!(b.y.iter().all(|&y| (0..10).contains(&y)));
+    }
+}

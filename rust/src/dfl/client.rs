@@ -1,0 +1,103 @@
+//! Per-client DFL state: local data distribution, capacity tier, exchange
+//! schedule, confidence parameters, model version and fingerprint cache.
+
+use crate::data::{expected_histogram, kl_divergence_vs_uniform};
+use crate::mep::{Capacity, ExchangeSchedule, FingerprintCache};
+use crate::ndmp::messages::Time;
+use crate::util::Rng;
+
+#[derive(Debug, Clone)]
+pub struct ClientState {
+    pub id: usize,
+    pub capacity: Capacity,
+    pub schedule: ExchangeSchedule,
+    /// Unnormalized label weights of the local shard (non-iid spec).
+    pub label_weights: Vec<f64>,
+    /// Flat model parameters (artifact ABI).
+    pub params: Vec<f32>,
+    /// Raw data confidence `c_d` (computed once from the shard).
+    pub c_d: f64,
+    /// Raw communication confidence `c_c = 1/T_u`.
+    pub c_c: f64,
+    /// Monotone model version (bumped on every local update/aggregate).
+    pub version: u64,
+    pub fingerprints: FingerprintCache,
+    pub rng: Rng,
+    /// Next time this client wakes to train+exchange.
+    pub next_wake: Time,
+    /// Telemetry: bytes of model payload sent, exchanges skipped by dedup.
+    pub model_bytes_sent: u64,
+    pub dedup_skips: u64,
+    pub exchanges: u64,
+    pub train_steps: u64,
+}
+
+impl ClientState {
+    pub fn new(
+        id: usize,
+        capacity: Capacity,
+        base_period: Time,
+        label_weights: Vec<f64>,
+        params: Vec<f32>,
+        seed: u64,
+    ) -> Self {
+        let schedule = ExchangeSchedule::coarse(base_period, capacity);
+        let hist = expected_histogram(&label_weights, 10_000);
+        let c_d = (-kl_divergence_vs_uniform(&hist)).exp();
+        let c_c = 1.0 / schedule.period as f64;
+        // stagger wake-ups like real unsynchronized clients
+        let mut rng = Rng::new(seed ^ (id as u64).wrapping_mul(0x9E37_79B9));
+        let next_wake = (rng.next_f64() * schedule.period as f64 * 0.1) as Time;
+        Self {
+            id,
+            capacity,
+            schedule,
+            label_weights,
+            params,
+            c_d,
+            c_c,
+            version: 0,
+            fingerprints: FingerprintCache::new(),
+            rng,
+            next_wake,
+            model_bytes_sent: 0,
+            dedup_skips: 0,
+            exchanges: 0,
+            train_steps: 0,
+        }
+    }
+
+    /// Raw confidence pair `(c_d, c_c)` used in neighborhood normalization.
+    pub fn raw_confidence(&self) -> (f64, f64) {
+        (self.c_d, self.c_c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confidence_reflects_shard_skew() {
+        let iid = ClientState::new(0, Capacity::Medium, 1_000, vec![1.0; 10], vec![], 1);
+        let mut skewed_w = vec![0.0; 10];
+        skewed_w[0] = 1.0;
+        let skewed = ClientState::new(1, Capacity::Medium, 1_000, skewed_w, vec![], 1);
+        assert!(iid.c_d > skewed.c_d);
+        assert!((iid.c_d - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn capacity_affects_comm_confidence() {
+        let fast = ClientState::new(0, Capacity::High, 9_000, vec![1.0; 4], vec![], 2);
+        let slow = ClientState::new(1, Capacity::Low, 9_000, vec![1.0; 4], vec![], 2);
+        assert!(fast.c_c > slow.c_c);
+        assert!(fast.schedule.period < slow.schedule.period);
+    }
+
+    #[test]
+    fn wake_is_staggered_within_a_fraction_of_period() {
+        let c = ClientState::new(3, Capacity::Medium, 100_000, vec![1.0; 4], vec![], 5);
+        assert!(c.next_wake < 10_000);
+    }
+}

@@ -1,0 +1,110 @@
+//! Shared experiment harness helpers for the per-figure bench binaries.
+
+use super::methods::MethodSpec;
+use super::trainer::{AccuracySample, Trainer};
+use crate::bench_util::Table;
+use crate::config::DflConfig;
+use crate::data::shard_labels;
+use crate::runtime::Engine;
+use anyhow::Result;
+
+/// Run one method for `minutes` of simulated time, sampling every
+/// `sample_minutes`. Returns the trainer (samples + telemetry inside).
+pub fn run_method<'e>(
+    engine: &'e Engine,
+    spec: MethodSpec,
+    cfg: &DflConfig,
+    minutes: u64,
+    sample_minutes: u64,
+) -> Result<Trainer<'e>> {
+    let classes = engine.manifest.task(&cfg.task)?.classes;
+    let weights = shard_labels(cfg.clients, classes, cfg.shards_per_client, cfg.seed);
+    run_method_with_weights(engine, spec, cfg, weights, minutes, sample_minutes)
+}
+
+/// Same, with explicit per-client label weights (locality experiments).
+pub fn run_method_with_weights<'e>(
+    engine: &'e Engine,
+    spec: MethodSpec,
+    cfg: &DflConfig,
+    weights: Vec<Vec<f64>>,
+    minutes: u64,
+    sample_minutes: u64,
+) -> Result<Trainer<'e>> {
+    let mut trainer = Trainer::new(engine, spec, cfg.clone(), weights)?;
+    trainer.run(minutes * 60_000_000, sample_minutes * 60_000_000)?;
+    Ok(trainer)
+}
+
+/// Render several methods' accuracy curves side by side.
+pub fn curves_table(named: &[(&str, &[AccuracySample])]) -> Table {
+    let mut headers: Vec<String> = vec!["t (min)".into()];
+    headers.extend(named.iter().map(|(n, _)| n.to_string()));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    let rows = named.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+    for r in 0..rows {
+        let mut cells = Vec::with_capacity(named.len() + 1);
+        let at = named
+            .iter()
+            .filter_map(|(_, s)| s.get(r))
+            .map(|s| s.at)
+            .next()
+            .unwrap_or(0);
+        cells.push(format!("{:.0}", at as f64 / 60e6));
+        for (_, s) in named {
+            cells.push(
+                s.get(r)
+                    .map(|x| format!("{:.4}", x.mean_accuracy))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&cells);
+    }
+    t
+}
+
+/// Final mean accuracy of a run.
+pub fn final_acc(t: &Trainer) -> f64 {
+    t.samples.last().map(|s| s.mean_accuracy).unwrap_or(0.0)
+}
+
+/// Simulated minutes needed to first reach `target` accuracy, if ever.
+pub fn minutes_to_accuracy(samples: &[AccuracySample], target: f64) -> Option<f64> {
+    samples
+        .iter()
+        .find(|s| s.mean_accuracy >= target)
+        .map(|s| s.at as f64 / 60e6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dfl::trainer::AccuracySample;
+
+    fn s(at_min: u64, acc: f64) -> AccuracySample {
+        AccuracySample {
+            at: at_min * 60_000_000,
+            mean_accuracy: acc,
+            mean_loss: 1.0,
+            per_client: vec![acc],
+        }
+    }
+
+    #[test]
+    fn minutes_to_accuracy_finds_first() {
+        let xs = [s(0, 0.1), s(10, 0.4), s(20, 0.6), s(30, 0.7)];
+        assert_eq!(minutes_to_accuracy(&xs, 0.5), Some(20.0));
+        assert_eq!(minutes_to_accuracy(&xs, 0.9), None);
+    }
+
+    #[test]
+    fn curves_table_aligns_methods() {
+        let a = [s(0, 0.1), s(10, 0.5)];
+        let b = [s(0, 0.2)];
+        let t = curves_table(&[("a", &a), ("b", &b)]);
+        let text = t.render();
+        assert!(text.contains("0.5000"));
+        assert!(text.lines().count() == 4);
+    }
+}

@@ -1,0 +1,235 @@
+//! DFL method specifications (paper §IV-A4): FedLay and the comparators
+//! (FedAvg, Gaia, DFL-DDS, Chord-DFL), expressed as (neighborhood
+//! structure, aggregation weighting, synchrony) triples consumed by the
+//! trainer.
+
+use crate::baselines;
+use crate::graph::Graph;
+use crate::topology::fedlay_graph;
+use crate::util::Rng;
+
+/// Who aggregates with whom at each exchange.
+#[derive(Debug, Clone)]
+pub enum Neighborhood {
+    /// Fixed overlay graph (FedLay, Chord, complete, ...).
+    Static(Graph),
+    /// Central server: every client averages with everyone (FedAvg).
+    Star,
+    /// Gaia's geo-regions: complete graph inside a region, region servers
+    /// synchronize as a complete graph. `assignment[i]` = region of i.
+    Regions { assignment: Vec<usize>, regions: usize },
+    /// DFL-DDS mobility: nodes move (random waypoint on the unit square)
+    /// and connect to their `k` nearest at each exchange.
+    Mobility { k: usize, speed: f64, seed: u64 },
+}
+
+#[derive(Debug, Clone)]
+pub struct MethodSpec {
+    pub name: String,
+    pub neighborhood: Neighborhood,
+    /// MEP confidence weighting (false = simple average, the comparators).
+    pub confidence: bool,
+    /// Asynchronous per-client periods (false = global synchronous rounds).
+    pub asynchronous: bool,
+}
+
+impl MethodSpec {
+    pub fn fedlay(n: usize, spaces: usize) -> Self {
+        Self {
+            name: format!("fedlay-L{spaces}"),
+            neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
+            confidence: true,
+            asynchronous: true,
+        }
+    }
+
+    /// FedLay over an explicit (e.g. NDMP-built) overlay graph.
+    pub fn fedlay_with_graph(g: Graph) -> Self {
+        Self {
+            name: "fedlay".into(),
+            neighborhood: Neighborhood::Static(g),
+            confidence: true,
+            asynchronous: true,
+        }
+    }
+
+    /// Ablation: FedLay topology with plain averaging (Figs. 16/17).
+    pub fn fedlay_simple_avg(n: usize, spaces: usize) -> Self {
+        Self {
+            name: format!("fedlay-avg-L{spaces}"),
+            neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
+            confidence: false,
+            asynchronous: true,
+        }
+    }
+
+    /// Ablation: synchronous FedLay (Fig. 12).
+    pub fn fedlay_sync(n: usize, spaces: usize) -> Self {
+        Self {
+            name: format!("fedlay-sync-L{spaces}"),
+            neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
+            confidence: true,
+            asynchronous: false,
+        }
+    }
+
+    pub fn chord(n: usize) -> Self {
+        Self {
+            name: "chord".into(),
+            neighborhood: Neighborhood::Static(baselines::chord(n)),
+            confidence: false,
+            asynchronous: true,
+        }
+    }
+
+    /// The fully-connected "theoretical upper bound" (paper Fig. 13).
+    /// Synchronous rounds: with asynchronous gossip a complete graph
+    /// over-dilutes each client's fresh update by 1/N per wake, which is
+    /// *not* the bound the paper means.
+    pub fn complete(n: usize) -> Self {
+        Self {
+            name: "complete".into(),
+            neighborhood: Neighborhood::Static(baselines::complete(n)),
+            confidence: false,
+            asynchronous: false,
+        }
+    }
+
+    pub fn fedavg() -> Self {
+        Self {
+            name: "fedavg".into(),
+            neighborhood: Neighborhood::Star,
+            confidence: false,
+            asynchronous: false, // central rounds are synchronous
+        }
+    }
+
+    pub fn gaia(n: usize, regions: usize) -> Self {
+        // contiguous geographic regions
+        let assignment = (0..n).map(|i| i * regions / n).collect();
+        Self {
+            name: format!("gaia-{regions}r"),
+            neighborhood: Neighborhood::Regions { assignment, regions },
+            confidence: false,
+            asynchronous: false,
+        }
+    }
+
+    pub fn dfl_dds(seed: u64) -> Self {
+        Self {
+            name: "dfl-dds".into(),
+            neighborhood: Neighborhood::Mobility {
+                k: 4,
+                speed: 0.05,
+                seed,
+            },
+            confidence: false,
+            asynchronous: true,
+        }
+    }
+}
+
+/// Random-waypoint mobility state for DFL-DDS.
+#[derive(Debug, Clone)]
+pub struct Mobility {
+    pos: Vec<(f64, f64)>,
+    dst: Vec<(f64, f64)>,
+    speed: f64,
+    k: usize,
+    rng: Rng,
+}
+
+impl Mobility {
+    pub fn new(n: usize, k: usize, speed: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xDD5);
+        let pos: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+        let dst: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+        Self {
+            pos,
+            dst,
+            speed,
+            k,
+            rng,
+        }
+    }
+
+    /// Advance one epoch of movement and return the k-NN contact graph.
+    pub fn step(&mut self) -> Graph {
+        let n = self.pos.len();
+        for i in 0..n {
+            let (px, py) = self.pos[i];
+            let (dx, dy) = self.dst[i];
+            let dist = ((dx - px).powi(2) + (dy - py).powi(2)).sqrt();
+            if dist < self.speed {
+                self.pos[i] = self.dst[i];
+                self.dst[i] = (self.rng.next_f64(), self.rng.next_f64());
+            } else {
+                let t = self.speed / dist;
+                self.pos[i] = (px + (dx - px) * t, py + (dy - py) * t);
+            }
+        }
+        let mut g = Graph::new(n);
+        for i in 0..n {
+            let mut others: Vec<usize> = (0..n).filter(|&j| j != i).collect();
+            others.sort_by(|&a, &b| {
+                let da = (self.pos[a].0 - self.pos[i].0).powi(2)
+                    + (self.pos[a].1 - self.pos[i].1).powi(2);
+                let db = (self.pos[b].0 - self.pos[i].0).powi(2)
+                    + (self.pos[b].1 - self.pos[i].1).powi(2);
+                da.partial_cmp(&db).unwrap()
+            });
+            for &j in others.iter().take(self.k) {
+                g.add_edge(i, j);
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_have_expected_shapes() {
+        let f = MethodSpec::fedlay(40, 3);
+        assert!(f.confidence && f.asynchronous);
+        match &f.neighborhood {
+            Neighborhood::Static(g) => assert_eq!(g.n(), 40),
+            _ => panic!(),
+        }
+        let fa = MethodSpec::fedavg();
+        assert!(!fa.asynchronous);
+        let g = MethodSpec::gaia(100, 10);
+        match &g.neighborhood {
+            Neighborhood::Regions { assignment, regions } => {
+                assert_eq!(*regions, 10);
+                assert_eq!(assignment.len(), 100);
+                assert_eq!(assignment[0], 0);
+                assert_eq!(assignment[99], 9);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn mobility_moves_and_connects() {
+        let mut m = Mobility::new(30, 4, 0.05, 1);
+        let before = m.pos.clone();
+        let g1 = m.step();
+        assert!(g1.n() == 30 && g1.m() > 0);
+        assert!((0..30).all(|u| g1.degree(u) >= 4));
+        let moved = m
+            .pos
+            .iter()
+            .zip(&before)
+            .any(|(a, b)| (a.0 - b.0).abs() + (a.1 - b.1).abs() > 1e-9);
+        assert!(moved);
+        // graph changes over time
+        for _ in 0..20 {
+            m.step();
+        }
+        let g2 = m.step();
+        assert_ne!(g1.edges(), g2.edges());
+    }
+}

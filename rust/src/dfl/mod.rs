@@ -1,0 +1,12 @@
+//! DFL methods and the training driver: FedLay (MEP over the FedLay
+//! overlay) plus the paper's comparators (FedAvg, Gaia, DFL-DDS, Chord)
+//! executing the AOT model artifacts through the PJRT runtime.
+
+pub mod client;
+pub mod methods;
+pub mod trainer;
+
+pub use client::ClientState;
+pub use methods::{MethodSpec, Mobility, Neighborhood};
+pub use trainer::{AccuracySample, TaskData, Trainer};
+pub mod harness;

@@ -1,0 +1,479 @@
+//! The DFL training driver: runs any `MethodSpec` (FedLay or a comparator)
+//! over the AOT runtime, with the paper's client heterogeneity, non-iid
+//! shards, MEP confidence weighting, fingerprint de-dup accounting, and
+//! accuracy sampling. Powers every accuracy figure (Figs. 9–19) and the
+//! scalability/communication study (Fig. 20).
+
+use super::client::ClientState;
+use super::methods::{MethodSpec, Mobility, Neighborhood};
+use crate::config::DflConfig;
+use crate::data::{CharStream, GaussianTask};
+use crate::mep::{
+    aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams,
+};
+use crate::ndmp::messages::Time;
+use crate::runtime::{Engine, XInput};
+
+use anyhow::Result;
+
+/// Client-local dataset generator.
+pub enum TaskData {
+    Gaussian(GaussianTask),
+    /// One Markov stream per client (built from its shard labels as roles).
+    Char(Vec<CharStream>),
+}
+
+/// One recorded accuracy sample.
+#[derive(Debug, Clone)]
+pub struct AccuracySample {
+    pub at: Time,
+    pub mean_accuracy: f64,
+    pub mean_loss: f64,
+    pub per_client: Vec<f64>,
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub task_name: String,
+    pub spec: MethodSpec,
+    pub cfg: DflConfig,
+    pub clients: Vec<ClientState>,
+    pub samples: Vec<AccuracySample>,
+    data: TaskData,
+    mobility: Option<Mobility>,
+    conf: ConfidenceParams,
+    pub now: Time,
+    /// Evaluation batches (cached: same test set for every sample).
+    eval_x: Vec<Vec<f32>>,
+    eval_xi: Vec<Vec<i32>>,
+    eval_y: Vec<Vec<i32>>,
+    /// Skip real training (scalability mode: reuse pre-trained params).
+    pub freeze_training: bool,
+}
+
+impl<'e> Trainer<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        spec: MethodSpec,
+        cfg: DflConfig,
+        label_weights: Vec<Vec<f64>>,
+    ) -> Result<Self> {
+        let info = engine.manifest.task(&cfg.task)?.clone();
+        let n = cfg.clients;
+        anyhow::ensure!(label_weights.len() == n, "weights per client mismatch");
+        let base_period = cfg.comm_period_ms * 1_000;
+        let mut clients = Vec::with_capacity(n);
+        // All clients share one initialization (standard DFL practice:
+        // averaging independently-initialized nets cancels their features
+        // due to permutation symmetry).
+        let init_params = engine.init(&cfg.task, [cfg.seed as u32, 0])?;
+        for (i, w) in label_weights.iter().enumerate() {
+            let cap = Capacity::assign(i, n);
+            let params = init_params.clone();
+            clients.push(ClientState::new(
+                i,
+                cap,
+                base_period,
+                w.clone(),
+                params,
+                cfg.seed ^ 0xC11E,
+            ));
+        }
+        // synchronous mode: everyone runs at the slowest tier's period
+        if !spec.asynchronous {
+            let max_period = clients.iter().map(|c| c.schedule.period).max().unwrap();
+            for c in &mut clients {
+                c.schedule.period = max_period;
+                c.schedule.synchronous = true;
+                c.next_wake = 0;
+            }
+        }
+        let data = match cfg.task.as_str() {
+            "lstm" => {
+                let streams = label_weights
+                    .iter()
+                    .enumerate()
+                    .map(|(i, w)| {
+                        // each nonzero label acts as a Shakespeare "role"
+                        let roles: Vec<u64> = w
+                            .iter()
+                            .enumerate()
+                            .filter(|(_, &x)| x > 0.0)
+                            .map(|(l, _)| cfg.seed ^ (l as u64 + 1))
+                            .collect();
+                        let roles = if roles.is_empty() { vec![cfg.seed] } else { roles };
+                        CharStream::new(&roles, cfg.seed ^ (i as u64) << 8)
+                    })
+                    .collect();
+                TaskData::Char(streams)
+            }
+            "cnn" => TaskData::Gaussian(GaussianTask::cifar_like(cfg.seed)),
+            _ => TaskData::Gaussian(GaussianTask::mnist_like(cfg.seed)),
+        };
+        let mobility = match &spec.neighborhood {
+            Neighborhood::Mobility { k, speed, seed } => {
+                Some(Mobility::new(n, *k, *speed, *seed))
+            }
+            _ => None,
+        };
+        // fixed iid eval set: 2 batches
+        let mut eval_x = Vec::new();
+        let mut eval_xi = Vec::new();
+        let mut eval_y = Vec::new();
+        for e in 0..2u64 {
+            match &data {
+                TaskData::Gaussian(t) => {
+                    let b = t.test_batch(info.batch, cfg.seed ^ (0xE0 + e));
+                    eval_x.push(b.x);
+                    eval_y.push(b.y);
+                }
+                TaskData::Char(_) => {
+                    let roles: Vec<u64> = (0..10).map(|l| cfg.seed ^ (l + 1)).collect();
+                    let mut s = CharStream::new(&roles, cfg.seed ^ (0xE0 + e));
+                    let (x, y) = s.batch(info.batch, info.x_len);
+                    eval_xi.push(x);
+                    eval_y.push(y);
+                }
+            }
+        }
+        Ok(Self {
+            engine,
+            task_name: cfg.task.clone(),
+            spec,
+            cfg,
+            clients,
+            samples: Vec::new(),
+            data,
+            mobility,
+            conf: ConfidenceParams::default(),
+            now: 0,
+            eval_x,
+            eval_xi,
+            eval_y,
+            freeze_training: false,
+        })
+    }
+
+    fn info_batch(&self) -> (usize, usize) {
+        let info = self.engine.manifest.task(&self.task_name).unwrap();
+        (info.batch, info.x_len)
+    }
+
+    /// Draw a local training batch for client `i`.
+    fn draw_batch(&mut self, i: usize) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+        let (batch, x_len) = self.info_batch();
+        match &mut self.data {
+            TaskData::Gaussian(t) => {
+                let w = self.clients[i].label_weights.clone();
+                let b = t.batch(batch, &w, &mut self.clients[i].rng);
+                (b.x, Vec::new(), b.y)
+            }
+            TaskData::Char(streams) => {
+                let (x, y) = streams[i].batch(batch, x_len);
+                (Vec::new(), x, y)
+            }
+        }
+    }
+
+    fn local_train(&mut self, i: usize) -> Result<()> {
+        if self.freeze_training {
+            return Ok(());
+        }
+        for _ in 0..self.cfg.local_steps {
+            let (xf, xi, y) = self.draw_batch(i);
+            let x = if xf.is_empty() {
+                XInput::I32(&xi)
+            } else {
+                XInput::F32(&xf)
+            };
+            let (new, _loss) =
+                self.engine
+                    .train_step(&self.task_name, &self.clients[i].params, &x, &y, self.cfg.lr)?;
+            self.clients[i].params = new;
+            self.clients[i].train_steps += 1;
+        }
+        self.clients[i].version += 1;
+        Ok(())
+    }
+
+    /// Neighbor ids of client `i` at the current time.
+    fn neighbors_of(&mut self, i: usize) -> Vec<usize> {
+        match &self.spec.neighborhood {
+            Neighborhood::Static(g) => g.neighbors(i).collect(),
+            Neighborhood::Star => (0..self.clients.len()).filter(|&j| j != i).collect(),
+            Neighborhood::Regions { assignment, .. } => {
+                let r = assignment[i];
+                (0..self.clients.len())
+                    .filter(|&j| j != i && assignment[j] == r)
+                    .collect()
+            }
+            Neighborhood::Mobility { .. } => {
+                let g = self.mobility.as_mut().expect("mobility state").step();
+                g.neighbors(i).collect()
+            }
+        }
+    }
+
+    /// MEP aggregation for client `i` over `nbrs` (paper §III-C2), with
+    /// fingerprint de-dup accounting (§III-C3).
+    fn aggregate(&mut self, i: usize, nbrs: &[usize]) -> Result<()> {
+        if nbrs.is_empty() {
+            return Ok(());
+        }
+        // fingerprint / transfer accounting: i "pulls" each neighbor's
+        // latest model unless the fingerprint matches the last pull
+        let p_bytes = (self.clients[i].params.len() * 4) as u64;
+        for &j in nbrs {
+            let fp = fingerprint(&self.clients[j].params);
+            if self.clients[i].fingerprints.is_duplicate(j as u64, fp) {
+                self.clients[i].dedup_skips += 1;
+            } else {
+                self.clients[i].fingerprints.record(j as u64, fp);
+                // sender j pays the payload bytes
+                self.clients[j].model_bytes_sent += p_bytes;
+            }
+        }
+        // confidence weights normalized over the neighborhood ∪ {i}
+        let hood: Vec<(f64, f64)> = std::iter::once(self.clients[i].raw_confidence())
+            .chain(nbrs.iter().map(|&j| self.clients[j].raw_confidence()))
+            .collect();
+        let weights: Vec<f64> = if self.spec.confidence {
+            hood.iter().map(|&own| self.conf.combine(own, &hood)).collect()
+        } else {
+            vec![1.0; hood.len()]
+        };
+        let k_max = self.engine.manifest.k_max;
+        let new = if hood.len() <= k_max {
+            // hot path: the L1 Pallas kernel inside the agg artifact
+            let models: Vec<&[f32]> = std::iter::once(self.clients[i].params.as_slice())
+                .chain(nbrs.iter().map(|&j| self.clients[j].params.as_slice()))
+                .collect();
+            let (stack, w) = pack_for_artifact(&models, &weights, k_max);
+            self.engine.aggregate(&self.task_name, &stack, &w)?
+        } else {
+            // oversized neighborhood (complete graph / star): CPU fallback
+            let models: Vec<&[f32]> = std::iter::once(self.clients[i].params.as_slice())
+                .chain(nbrs.iter().map(|&j| self.clients[j].params.as_slice()))
+                .collect();
+            aggregate_cpu(&models, &weights)
+        };
+        self.clients[i].params = new;
+        self.clients[i].version += 1;
+        self.clients[i].exchanges += 1;
+        Ok(())
+    }
+
+    /// Centralized FedAvg round: global average, broadcast to everyone.
+    fn fedavg_round(&mut self) -> Result<()> {
+        let models: Vec<&[f32]> = self.clients.iter().map(|c| c.params.as_slice()).collect();
+        let weights = vec![1.0; models.len()];
+        let global = aggregate_cpu(&models, &weights);
+        let p_bytes = (global.len() * 4) as u64;
+        for c in &mut self.clients {
+            c.params = global.clone();
+            c.version += 1;
+            c.exchanges += 1;
+            // upload + download through the server
+            c.model_bytes_sent += 2 * p_bytes;
+        }
+        Ok(())
+    }
+
+    /// Gaia round: average within each region, then across region servers.
+    fn gaia_round(&mut self, assignment: &[usize], regions: usize) -> Result<()> {
+        let p = self.clients[0].params.len();
+        let mut region_models = vec![vec![0.0f32; p]; regions];
+        for r in 0..regions {
+            let members: Vec<&[f32]> = self
+                .clients
+                .iter()
+                .filter(|c| assignment[c.id] == r)
+                .map(|c| c.params.as_slice())
+                .collect();
+            if members.is_empty() {
+                continue;
+            }
+            region_models[r] = aggregate_cpu(&members, &vec![1.0; members.len()]);
+        }
+        // inter-region complete-graph averaging (region sizes equal)
+        let refs: Vec<&[f32]> = region_models.iter().map(|m| m.as_slice()).collect();
+        let global = aggregate_cpu(&refs, &vec![1.0; refs.len()]);
+        let p_bytes = (p * 4) as u64;
+        let members_per_region = (self.clients.len() / regions.max(1)).max(1) as u64;
+        for c in &mut self.clients {
+            c.params = global.clone();
+            c.version += 1;
+            c.exchanges += 1;
+            // client <-> region server, plus the servers' complete-graph
+            // exchange amortized over members
+            c.model_bytes_sent += 2 * p_bytes + (regions as u64 - 1) * p_bytes / members_per_region;
+        }
+        Ok(())
+    }
+
+    /// Evaluate all clients on the fixed iid test set.
+    pub fn evaluate(&mut self) -> Result<AccuracySample> {
+        let (batch, _) = self.info_batch();
+        let mut per_client = Vec::with_capacity(self.clients.len());
+        let mut losses = 0.0;
+        for c in &self.clients {
+            let mut correct = 0.0f64;
+            let mut loss = 0.0f64;
+            let nb = self.eval_y.len();
+            for e in 0..nb {
+                let x = if !self.eval_x.is_empty() {
+                    XInput::F32(&self.eval_x[e])
+                } else {
+                    XInput::I32(&self.eval_xi[e])
+                };
+                let (cr, lo) = self
+                    .engine
+                    .eval_step(&self.task_name, &c.params, &x, &self.eval_y[e])?;
+                correct += cr as f64;
+                loss += lo as f64;
+            }
+            per_client.push(correct / (nb * batch) as f64);
+            losses += loss / nb as f64;
+        }
+        let sample = AccuracySample {
+            at: self.now,
+            mean_accuracy: per_client.iter().sum::<f64>() / per_client.len() as f64,
+            mean_loss: losses / self.clients.len() as f64,
+            per_client,
+        };
+        Ok(sample)
+    }
+
+    pub fn record_sample(&mut self) -> Result<()> {
+        let s = self.evaluate()?;
+        self.samples.push(s);
+        Ok(())
+    }
+
+    /// Run until `until` (µs of simulated time), sampling accuracy every
+    /// `sample_every`. Returns the final sample.
+    pub fn run(&mut self, until: Time, sample_every: Time) -> Result<AccuracySample> {
+        self.record_sample()?; // t = 0 baseline
+        let mut next_sample = sample_every;
+        match (&self.spec.neighborhood, self.spec.asynchronous) {
+            // synchronous / centralized methods advance in global rounds
+            (Neighborhood::Star, _) | (Neighborhood::Regions { .. }, _) | (_, false) => {
+                let period = self.clients[0].schedule.period;
+                let mut t = period;
+                while t <= until {
+                    self.now = t;
+                    for i in 0..self.clients.len() {
+                        self.local_train(i)?;
+                    }
+                    match self.spec.neighborhood.clone() {
+                        Neighborhood::Star => self.fedavg_round()?,
+                        Neighborhood::Regions { assignment, regions } => {
+                            self.gaia_round(&assignment, regions)?
+                        }
+                        _ => {
+                            // synchronous decentralized: everyone
+                            // aggregates against pre-round snapshots
+                            let snapshot: Vec<Vec<f32>> =
+                                self.clients.iter().map(|c| c.params.clone()).collect();
+                            for i in 0..self.clients.len() {
+                                let nbrs = self.neighbors_of(i);
+                                self.aggregate_snapshot(i, &nbrs, &snapshot)?;
+                            }
+                        }
+                    }
+                    while next_sample <= t {
+                        self.record_sample()?;
+                        next_sample += sample_every;
+                    }
+                    t += period;
+                }
+            }
+            // asynchronous gossip: clients wake on their own periods
+            _ => {
+                loop {
+                    let (idx, wake) = self
+                        .clients
+                        .iter()
+                        .map(|c| c.next_wake)
+                        .enumerate()
+                        .min_by_key(|&(_, w)| w)
+                        .unwrap();
+                    if wake > until {
+                        break;
+                    }
+                    while next_sample <= wake {
+                        self.now = next_sample;
+                        self.record_sample()?;
+                        next_sample += sample_every;
+                    }
+                    self.now = wake;
+                    self.local_train(idx)?;
+                    let nbrs = self.neighbors_of(idx);
+                    self.aggregate(idx, &nbrs)?;
+                    let period = self.clients[idx].schedule.period;
+                    self.clients[idx].next_wake = wake + period;
+                }
+            }
+        }
+        self.now = until;
+        self.record_sample()?;
+        Ok(self.samples.last().unwrap().clone())
+    }
+
+    /// Synchronous-round aggregation against a pre-round snapshot.
+    fn aggregate_snapshot(
+        &mut self,
+        i: usize,
+        nbrs: &[usize],
+        snapshot: &[Vec<f32>],
+    ) -> Result<()> {
+        if nbrs.is_empty() {
+            return Ok(());
+        }
+        let p_bytes = (snapshot[i].len() * 4) as u64;
+        for &j in nbrs {
+            let fp = fingerprint(&snapshot[j]);
+            if self.clients[i].fingerprints.is_duplicate(j as u64, fp) {
+                self.clients[i].dedup_skips += 1;
+            } else {
+                self.clients[i].fingerprints.record(j as u64, fp);
+                self.clients[j].model_bytes_sent += p_bytes;
+            }
+        }
+        let hood: Vec<(f64, f64)> = std::iter::once(self.clients[i].raw_confidence())
+            .chain(nbrs.iter().map(|&j| self.clients[j].raw_confidence()))
+            .collect();
+        let weights: Vec<f64> = if self.spec.confidence {
+            hood.iter().map(|&own| self.conf.combine(own, &hood)).collect()
+        } else {
+            vec![1.0; hood.len()]
+        };
+        let models: Vec<&[f32]> = std::iter::once(snapshot[i].as_slice())
+            .chain(nbrs.iter().map(|&j| snapshot[j].as_slice()))
+            .collect();
+        let k_max = self.engine.manifest.k_max;
+        let new = if models.len() <= k_max {
+            let (stack, w) = pack_for_artifact(&models, &weights, k_max);
+            self.engine.aggregate(&self.task_name, &stack, &w)?
+        } else {
+            aggregate_cpu(&models, &weights)
+        };
+        self.clients[i].params = new;
+        self.clients[i].version += 1;
+        self.clients[i].exchanges += 1;
+        Ok(())
+    }
+
+    /// Total model payload bytes sent, per client (Fig. 20d metric).
+    pub fn model_mb_per_client(&self) -> f64 {
+        let total: u64 = self.clients.iter().map(|c| c.model_bytes_sent).sum();
+        total as f64 / (1024.0 * 1024.0) / self.clients.len() as f64
+    }
+
+    /// Total training compute (train steps) per client — Fig. 15's
+    /// relative-computation-cost metric numerator.
+    pub fn train_steps_per_client(&self) -> f64 {
+        let total: u64 = self.clients.iter().map(|c| c.train_steps).sum();
+        total as f64 / self.clients.len() as f64
+    }
+}

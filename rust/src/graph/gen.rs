@@ -1,0 +1,168 @@
+//! Random-graph generators used by "Best" (random d-regular, paper §II-C)
+//! and auxiliary models (Erdős–Rényi, Barabási–Albert for the social-graph
+//! stand-in).
+
+use super::Graph;
+use crate::util::Rng;
+
+/// Random d-regular graph via the pairing/configuration model with
+/// rejection of self-loops and multi-edges (retry until simple).
+///
+/// This is the centralized "Best of 100" generator from paper §II-C(1):
+/// `n * d` must be even and `d < n`.
+pub fn random_regular(n: usize, d: usize, rng: &mut Rng) -> Graph {
+    assert!(d < n, "degree {d} >= n {n}");
+    assert!(n * d % 2 == 0, "n*d must be even");
+    'outer: for _attempt in 0..100 {
+        // stubs: node i appears d times
+        let mut stubs: Vec<u32> = Vec::with_capacity(n * d);
+        for i in 0..n {
+            for _ in 0..d {
+                stubs.push(i as u32);
+            }
+        }
+        rng.shuffle(&mut stubs);
+        let mut g = Graph::new(n);
+        let mut conflicts: Vec<(usize, usize)> = Vec::new();
+        for pair in stubs.chunks(2) {
+            let (u, v) = (pair[0] as usize, pair[1] as usize);
+            if u == v || g.has_edge(u, v) {
+                conflicts.push((u, v)); // defer; repair below by edge swaps
+            } else {
+                g.add_edge(u, v);
+            }
+        }
+        // Repair each conflicting stub pair (u,v) by breaking a random
+        // accepted edge (x,y) and rewiring to (u,x),(v,y) — a standard
+        // 2-swap that preserves all degrees and keeps the pairing uniform
+        // enough for the near-RRG role (cf. Jellyfish's incremental swap).
+        for (u, v) in conflicts {
+            let mut done = false;
+            for _try in 0..10_000 {
+                let edges = g.edges();
+                if edges.is_empty() {
+                    break;
+                }
+                let (x, y) = edges[rng.index(edges.len())];
+                let (a, b) = if rng.chance(0.5) { (x, y) } else { (y, x) };
+                if a == u || a == v || b == u || b == v {
+                    continue;
+                }
+                if !g.has_edge(u, a) && !g.has_edge(v, b) {
+                    g.remove_edge(a, b);
+                    g.add_edge(u, a);
+                    g.add_edge(v, b);
+                    done = true;
+                    break;
+                }
+            }
+            if !done {
+                continue 'outer; // pathological; rebuild from scratch
+            }
+        }
+        return g;
+    }
+    panic!("random_regular({n},{d}): repair failed after 100 attempts");
+}
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, rng: &mut Rng) -> Graph {
+    let mut g = Graph::new(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.chance(p) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    g
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new node.
+/// Heavy-tailed degree distribution — our stand-in for the Facebook social
+/// graph comparator of paper Fig. 3 (DESIGN.md §Substitutions).
+pub fn barabasi_albert(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    assert!(m >= 1 && n > m, "need n > m >= 1");
+    let mut g = Graph::new(n);
+    // seed: complete graph over the first m+1 nodes
+    for u in 0..=m {
+        for v in (u + 1)..=m {
+            g.add_edge(u, v);
+        }
+    }
+    // repeated-endpoint list implements preferential attachment
+    let mut endpoints: Vec<u32> = Vec::new();
+    for (u, v) in g.edges() {
+        endpoints.push(u as u32);
+        endpoints.push(v as u32);
+    }
+    for u in (m + 1)..n {
+        let mut targets = Vec::with_capacity(m);
+        let mut guard = 0;
+        while targets.len() < m {
+            let t = endpoints[rng.index(endpoints.len())] as usize;
+            if t != u && !targets.contains(&t) {
+                targets.push(t);
+            }
+            guard += 1;
+            assert!(guard < 10_000, "BA attachment stuck");
+        }
+        for &t in &targets {
+            g.add_edge(u, t);
+            endpoints.push(u as u32);
+            endpoints.push(t as u32);
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::is_connected;
+
+    #[test]
+    fn regular_graph_is_regular() {
+        let mut rng = Rng::new(1);
+        for &(n, d) in &[(20, 4), (50, 6), (101, 8)] {
+            let g = random_regular(n, d, &mut rng);
+            assert_eq!(g.n(), n);
+            for u in 0..n {
+                assert_eq!(g.degree(u), d, "node {u} in ({n},{d})");
+            }
+        }
+    }
+
+    #[test]
+    fn regular_graph_usually_connected() {
+        // d >= 3 random regular graphs are a.a.s. connected.
+        let mut rng = Rng::new(2);
+        let g = random_regular(100, 4, &mut rng);
+        assert!(is_connected(&g));
+    }
+
+    #[test]
+    #[should_panic]
+    fn regular_rejects_odd_product() {
+        let mut rng = Rng::new(3);
+        random_regular(5, 3, &mut rng);
+    }
+
+    #[test]
+    fn er_density() {
+        let mut rng = Rng::new(4);
+        let g = erdos_renyi(100, 0.1, &mut rng);
+        let expect = 0.1 * (100.0 * 99.0 / 2.0);
+        assert!((g.m() as f64 - expect).abs() < expect * 0.35);
+    }
+
+    #[test]
+    fn ba_has_heavy_tail() {
+        let mut rng = Rng::new(5);
+        let g = barabasi_albert(300, 3, &mut rng);
+        assert!(is_connected(&g));
+        // minimum degree is m, hubs much larger
+        assert!((0..300).all(|u| g.degree(u) >= 3));
+        assert!(g.max_degree() > 15, "max degree {}", g.max_degree());
+    }
+}

@@ -1,0 +1,129 @@
+//! Graph substrate: an undirected simple graph with adjacency lists,
+//! traversals and generators. Every overlay topology in the repo (FedLay
+//! and all baselines) lowers to this representation before the metric
+//! pipeline (`metrics::`) runs on it.
+
+pub mod gen;
+pub mod traversal;
+
+use std::collections::BTreeSet;
+
+/// Undirected simple graph over node ids `0..n`.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    adj: Vec<BTreeSet<u32>>,
+}
+
+impl Graph {
+    pub fn new(n: usize) -> Self {
+        Self {
+            adj: vec![BTreeSet::new(); n],
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Number of undirected edges.
+    pub fn m(&self) -> usize {
+        self.adj.iter().map(|s| s.len()).sum::<usize>() / 2
+    }
+
+    /// Add an undirected edge; self-loops and duplicates are ignored.
+    /// Returns true if the edge was new.
+    pub fn add_edge(&mut self, u: usize, v: usize) -> bool {
+        assert!(u < self.n() && v < self.n(), "edge ({u},{v}) out of range");
+        if u == v {
+            return false;
+        }
+        let new = self.adj[u].insert(v as u32);
+        self.adj[v].insert(u as u32);
+        new
+    }
+
+    pub fn remove_edge(&mut self, u: usize, v: usize) -> bool {
+        let had = self.adj[u].remove(&(v as u32));
+        self.adj[v].remove(&(u as u32));
+        had
+    }
+
+    pub fn has_edge(&self, u: usize, v: usize) -> bool {
+        self.adj[u].contains(&(v as u32))
+    }
+
+    pub fn degree(&self, u: usize) -> usize {
+        self.adj[u].len()
+    }
+
+    pub fn neighbors(&self, u: usize) -> impl Iterator<Item = usize> + '_ {
+        self.adj[u].iter().map(|&v| v as usize)
+    }
+
+    pub fn max_degree(&self) -> usize {
+        self.adj.iter().map(|s| s.len()).max().unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n() == 0 {
+            return 0.0;
+        }
+        2.0 * self.m() as f64 / self.n() as f64
+    }
+
+    /// All edges as (u, v) with u < v.
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.m());
+        for (u, s) in self.adj.iter().enumerate() {
+            for &v in s {
+                let v = v as usize;
+                if u < v {
+                    out.push((u, v));
+                }
+            }
+        }
+        out
+    }
+
+    /// Build from an edge list over `n` nodes.
+    pub fn from_edges(n: usize, edges: &[(usize, usize)]) -> Self {
+        let mut g = Graph::new(n);
+        for &(u, v) in edges {
+            g.add_edge(u, v);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn add_remove_edges() {
+        let mut g = Graph::new(4);
+        assert!(g.add_edge(0, 1));
+        assert!(!g.add_edge(1, 0)); // duplicate
+        assert!(!g.add_edge(2, 2)); // self-loop
+        g.add_edge(1, 2);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.degree(1), 2);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(g.remove_edge(0, 1));
+        assert!(!g.remove_edge(0, 1));
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn edges_are_canonical() {
+        let g = Graph::from_edges(5, &[(3, 1), (0, 4), (1, 3)]);
+        assert_eq!(g.edges(), vec![(0, 4), (1, 3)]);
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(g.max_degree(), 3);
+        assert!((g.avg_degree() - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,96 @@
+//! BFS-based traversals: shortest paths, connectivity, components.
+
+use super::Graph;
+use crate::util::BitSet;
+use std::collections::VecDeque;
+
+/// BFS distances from `src`; unreachable nodes get `u32::MAX`.
+pub fn bfs_distances(g: &Graph, src: usize) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; g.n()];
+    let mut q = VecDeque::new();
+    dist[src] = 0;
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        let du = dist[u];
+        for v in g.neighbors(u) {
+            if dist[v] == u32::MAX {
+                dist[v] = du + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+pub fn is_connected(g: &Graph) -> bool {
+    if g.n() == 0 {
+        return true;
+    }
+    bfs_distances(g, 0).iter().all(|&d| d != u32::MAX)
+}
+
+/// Connected components as a label vector (component id per node).
+pub fn components(g: &Graph) -> Vec<usize> {
+    let n = g.n();
+    let mut label = vec![usize::MAX; n];
+    let mut seen = BitSet::new(n);
+    let mut next = 0;
+    let mut q = VecDeque::new();
+    for s in 0..n {
+        if seen.get(s) {
+            continue;
+        }
+        seen.set(s);
+        label[s] = next;
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for v in g.neighbors(u) {
+                if !seen.get(v) {
+                    seen.set(v);
+                    label[v] = next;
+                    q.push_back(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    label
+}
+
+pub fn num_components(g: &Graph) -> usize {
+    components(g).iter().copied().max().map_or(0, |m| m + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bfs_on_path() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2, 3]);
+        assert_eq!(bfs_distances(&g, 2), vec![2, 1, 0, 1]);
+    }
+
+    #[test]
+    fn connectivity_and_components() {
+        let g = Graph::from_edges(5, &[(0, 1), (2, 3)]);
+        assert!(!is_connected(&g));
+        let c = components(&g);
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[2], c[3]);
+        assert_ne!(c[0], c[2]);
+        assert_ne!(c[4], c[0]);
+        assert_eq!(num_components(&g), 3);
+        let g2 = Graph::from_edges(3, &[(0, 1), (1, 2)]);
+        assert!(is_connected(&g2));
+        assert_eq!(num_components(&g2), 1);
+    }
+
+    #[test]
+    fn unreachable_is_max() {
+        let g = Graph::from_edges(3, &[(0, 1)]);
+        let d = bfs_distances(&g, 0);
+        assert_eq!(d[2], u32::MAX);
+    }
+}

@@ -1,0 +1,37 @@
+//! # FedLay — practical overlay networks for decentralized federated learning
+//!
+//! A reproduction of *"Towards Practical Overlay Networks for Decentralized
+//! Federated Learning"* (Hua et al., 2024) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the FedLay coordinator: the overlay topology
+//!   built from random virtual coordinates (`topology`), the decentralized
+//!   Neighbor Discovery and Maintenance Protocols (`ndmp`), the Model
+//!   Exchange Protocol (`mep`), a deterministic discrete-event simulator
+//!   (`sim`), a real TCP transport (`net`), all baseline topologies and
+//!   DFL methods from the paper's evaluation (`baselines`, `dfl`), and the
+//!   topology-metric pipeline (`metrics`).
+//! * **L2 (python/compile/model.py)** — the JAX model zoo (MLP/CNN/LSTM),
+//!   AOT-lowered once to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the MEP
+//!   aggregation and fused SGD update, embedded in the L2 artifacts.
+//!
+//! The `runtime` module loads the AOT artifacts via the PJRT CPU client;
+//! Python never runs on the request path.
+
+pub mod baselines;
+pub mod bench_util;
+pub mod config;
+pub mod data;
+pub mod dfl;
+pub mod graph;
+pub mod mep;
+pub mod metrics;
+pub mod ndmp;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod topology;
+pub mod util;
+pub mod cli;

@@ -1,0 +1,195 @@
+//! FedLay launcher: the L3 binary entrypoint.
+
+use fedlay::baselines;
+use fedlay::bench_util::Table;
+use fedlay::cli::{parse_args, Args, USAGE};
+use fedlay::config::OverlayConfig;
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::ndmp::messages::MS;
+use fedlay::net::{spawn, ClientNodeConfig};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::sim::{churn, Simulator};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match parse_args(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "topology" => cmd_topology(&args),
+        "churn" => cmd_churn(&args),
+        "train" => cmd_train(&args),
+        "node" => cmd_node(&args),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `fedlay topology`: §II-B metrics for one named overlay.
+fn cmd_topology(args: &Args) -> anyhow::Result<()> {
+    let name = args.str("name", "fedlay");
+    let n = args.usize("nodes", 300)?;
+    let seed = args.u64("seed", 1)?;
+    let m = baselines::evaluate_named(&name, n, seed)?;
+    let mut t = Table::new(&[
+        "topology", "nodes", "lambda", "conv.factor", "diameter", "aspl", "avg.deg",
+    ]);
+    t.row(&[
+        name,
+        n.to_string(),
+        format!("{:.4}", m.lambda),
+        format!("{:.1}", m.convergence_factor),
+        m.diameter.to_string(),
+        format!("{:.2}", m.avg_shortest_path),
+        format!("{:.1}", m.avg_degree),
+    ]);
+    print!("{}", t.render());
+    if !m.connected {
+        println!("warning: topology is disconnected");
+    }
+    Ok(())
+}
+
+/// `fedlay churn`: Fig. 8-style resilience run with a correctness timeline.
+fn cmd_churn(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.config()?;
+    let initial = args.usize("initial", 100)?;
+    let joins = args.usize("joins", 25)?;
+    let fails = args.usize("fails", 0)?;
+    let until = args.u64("until-ms", 120_000)? * MS;
+    let mut sim = Simulator::new(cfg.overlay.clone(), cfg.net.clone());
+    if joins > 0 {
+        churn::mass_join(&mut sim, initial, joins, 10 * MS, cfg.net.seed);
+    } else {
+        churn::mass_fail(&mut sim, initial, fails, 10 * MS, cfg.net.seed);
+    }
+    churn::sample_correctness(&mut sim, until, until / 40);
+    sim.run_until(until);
+    let mut t = Table::new(&["t (s)", "correctness", "live nodes"]);
+    for s in &sim.samples {
+        t.row(&[
+            format!("{:.1}", s.at as f64 / 1e6),
+            format!("{:.4}", s.correctness),
+            s.live_nodes.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "control messages/node: {:.1}   delivered: {}",
+        sim.control_messages_per_node(),
+        sim.delivered
+    );
+    Ok(())
+}
+
+/// `fedlay train`: one DFL method over the AOT runtime.
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.config()?;
+    let method = args.str("method", "fedlay");
+    let minutes = args.u64("minutes", 30)?;
+    let sample_minutes = args.u64("sample-minutes", 5)?;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &[&cfg.dfl.task])?;
+    let n = cfg.dfl.clients;
+    let spec = match method.as_str() {
+        "fedlay" => MethodSpec::fedlay(n, cfg.overlay.spaces),
+        "fedlay-sync" => MethodSpec::fedlay_sync(n, cfg.overlay.spaces),
+        "fedlay-avg" => MethodSpec::fedlay_simple_avg(n, cfg.overlay.spaces),
+        "fedavg" => MethodSpec::fedavg(),
+        "gaia" => MethodSpec::gaia(n, 4),
+        "dfl-dds" => MethodSpec::dfl_dds(cfg.dfl.seed),
+        "chord" => MethodSpec::chord(n),
+        "complete" => MethodSpec::complete(n),
+        other => anyhow::bail!("unknown method {other:?}"),
+    };
+    let classes = engine.manifest.task(&cfg.dfl.task)?.classes;
+    let weights =
+        fedlay::data::shard_labels(n, classes, cfg.dfl.shards_per_client, cfg.dfl.seed);
+    let mut trainer = Trainer::new(&engine, spec, cfg.dfl.clone(), weights)?;
+    let until = minutes * 60 * 1_000_000;
+    let every = (sample_minutes * 60 * 1_000_000).max(1);
+    trainer.run(until, every)?;
+    let mut t = Table::new(&["t (min)", "mean acc", "mean loss"]);
+    for s in &trainer.samples {
+        t.row(&[
+            format!("{:.1}", s.at as f64 / 60e6),
+            format!("{:.4}", s.mean_accuracy),
+            format!("{:.4}", s.mean_loss),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "method={}  clients={}  model MB/client: {:.2}  train steps/client: {:.1}",
+        method,
+        n,
+        trainer.model_mb_per_client(),
+        trainer.train_steps_per_client()
+    );
+    Ok(())
+}
+
+/// `fedlay node`: one real TCP client (prototype building block).
+fn cmd_node(args: &Args) -> anyhow::Result<()> {
+    let cfg = args.config()?;
+    let id = args.u64("id", 0)?;
+    let base_port = args.u64("base-port", 7400)? as u16;
+    let bootstrap = args.flags.get("bootstrap").map(|v| v.parse::<u64>()).transpose()?;
+    let run_ms = args.u64("run-ms", 30_000)?;
+    let dir = find_artifacts_dir(None)?;
+    let classes = 10;
+    let weights = fedlay::data::shard_labels(
+        (id + 1) as usize,
+        classes,
+        cfg.dfl.shards_per_client,
+        cfg.dfl.seed,
+    )
+    .pop()
+    .unwrap();
+    let node_cfg = ClientNodeConfig {
+        id,
+        base_port,
+        bootstrap,
+        overlay: OverlayConfig {
+            heartbeat_ms: 500,
+            repair_probe_ms: 2_000,
+            ..cfg.overlay.clone()
+        },
+        artifacts_dir: dir,
+        task: cfg.dfl.task.clone(),
+        label_weights: weights,
+        lr: cfg.dfl.lr,
+        local_steps: cfg.dfl.local_steps,
+        period_ms: 2_000,
+        seed: cfg.dfl.seed,
+    };
+    println!("node {id} listening on port {}", base_port + id as u16);
+    let handle = spawn(node_cfg)?;
+    std::thread::sleep(std::time::Duration::from_millis(run_ms));
+    let report = handle.stop_and_join()?;
+    println!(
+        "node {} done: acc={:.3} loss={:.3} neighbors={} joined={} ctrl={} data={} dedup={}",
+        report.id,
+        report.accuracy,
+        report.loss,
+        report.neighbor_count,
+        report.joined,
+        report.control_sent,
+        report.data_sent,
+        report.dedup_skips
+    );
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! MEP model aggregation (paper §III-C2):
+//!
+//!   ω_u = Σ_{j ∈ N ∪ {u}} c_j ω_j / Σ c_j
+//!
+//! Two interchangeable implementations:
+//! * `aggregate_cpu` — pure Rust (used by large-scale simulations where
+//!   the model vectors are small or synthetic);
+//! * the AOT path — `runtime::Engine::aggregate` executes the L1 Pallas
+//!   `weighted_agg` kernel inside the `<task>_agg` HLO artifact. The
+//!   integration test `tests/runtime_integration.rs` pins the two
+//!   implementations together.
+//!
+//! This module also owns the padding convention shared with L2:
+//! `K_MAX` rows, zero weight ⇒ row ignored.
+
+/// Aggregate models row-major `[k][p]` with weights `[k]` on the CPU.
+pub fn aggregate_cpu(models: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty(), "aggregate of nothing");
+    let p = models[0].len();
+    assert!(models.iter().all(|m| m.len() == p), "ragged model stack");
+    let denom: f64 = weights.iter().sum::<f64>().max(1e-12);
+    let mut out = vec![0.0f64; p];
+    for (m, &w) in models.iter().zip(weights) {
+        if w == 0.0 {
+            continue;
+        }
+        for (o, &x) in out.iter_mut().zip(m.iter()) {
+            *o += w * x as f64;
+        }
+    }
+    out.into_iter().map(|x| (x / denom) as f32).collect()
+}
+
+/// Pack a model stack into the fixed `[K_MAX, P]` buffer + `[K_MAX]`
+/// weights the AOT `agg` artifact expects (extra rows zero-weighted).
+pub fn pack_for_artifact(
+    models: &[&[f32]],
+    weights: &[f64],
+    k_max: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert!(models.len() <= k_max, "{} models > K_MAX {k_max}", models.len());
+    assert!(!models.is_empty());
+    let p = models[0].len();
+    let mut stack = vec![0.0f32; k_max * p];
+    let mut w = vec![0.0f32; k_max];
+    for (i, (m, &wi)) in models.iter().zip(weights).enumerate() {
+        stack[i * p..(i + 1) * p].copy_from_slice(m);
+        w[i] = wi as f32;
+    }
+    (stack, w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_model_identity() {
+        let m = vec![1.0f32, -2.0, 3.5];
+        let out = aggregate_cpu(&[&m], &[0.7]);
+        for (a, b) in out.iter().zip(&m) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let out = aggregate_cpu(&[&a, &b], &[1.0, 1.0]);
+        assert!((out[0] - 2.0).abs() < 1e-6);
+        assert!((out[1] - 4.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_weight_ignored() {
+        let a = vec![1.0f32; 4];
+        let junk = vec![1e30f32; 4];
+        let out = aggregate_cpu(&[&a, &junk], &[1.0, 0.0]);
+        assert!(out.iter().all(|&x| (x - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn weight_scale_invariant() {
+        let a = vec![2.0f32, 0.0];
+        let b = vec![0.0f32, 2.0];
+        let x = aggregate_cpu(&[&a, &b], &[0.3, 0.7]);
+        let y = aggregate_cpu(&[&a, &b], &[3.0, 7.0]);
+        for (p, q) in x.iter().zip(&y) {
+            assert!((p - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pack_layout_matches_artifact_abi() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 4.0];
+        let (stack, w) = pack_for_artifact(&[&a, &b], &[0.5, 0.25], 4);
+        assert_eq!(stack.len(), 8);
+        assert_eq!(&stack[..4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(&stack[4..], &[0.0; 4]);
+        assert_eq!(w, vec![0.5, 0.25, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pack_rejects_overflow() {
+        let a = vec![0.0f32; 2];
+        let ms: Vec<&[f32]> = vec![&a; 5];
+        pack_for_artifact(&ms, &[1.0; 5], 4);
+    }
+}

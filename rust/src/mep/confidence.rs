@@ -1,0 +1,111 @@
+//! MEP confidence parameters (paper §III-C2).
+//!
+//! Each client self-evaluates its model quality along two axes:
+//!
+//! * **data divergence confidence** `c_d = 1 / exp(KL(D_loc || D_std))`
+//!   where `D_loc` is the local label distribution and `D_std` the assumed
+//!   iid (uniform) distribution;
+//! * **communication confidence** `c_c = 1 / T_u` — clients that exchange
+//!   more often carry fresher models.
+//!
+//! The overall confidence normalizes both against the *neighborhood*
+//! maxima: `c = α_d · c_d/max(c_d) + α_c · c_c/max(c_c)`.
+
+use crate::data::kl::kl_divergence_vs_uniform;
+
+/// Data-divergence confidence from a local label histogram.
+pub fn data_confidence(label_counts: &[u64]) -> f64 {
+    let kl = kl_divergence_vs_uniform(label_counts);
+    (-kl).exp()
+}
+
+/// Communication confidence from the exchange period (any time unit —
+/// normalization cancels it).
+pub fn comm_confidence(period: f64) -> f64 {
+    assert!(period > 0.0, "period must be positive");
+    1.0 / period
+}
+
+/// Combined confidence of one client relative to its neighborhood
+/// (paper: `max(c_d)`, `max(c_c)` over `u`'s neighbors ∪ {u}).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConfidenceParams {
+    pub alpha_d: f64,
+    pub alpha_c: f64,
+}
+
+impl Default for ConfidenceParams {
+    fn default() -> Self {
+        // paper: "the specific values of α_d and α_c can just be 0.5, 0.5"
+        Self {
+            alpha_d: 0.5,
+            alpha_c: 0.5,
+        }
+    }
+}
+
+impl ConfidenceParams {
+    /// Normalized confidence of client `u` within its neighborhood.
+    ///
+    /// `own` and `neighborhood` carry `(c_d, c_c)` raw values; the
+    /// neighborhood slice must include the client itself.
+    pub fn combine(&self, own: (f64, f64), neighborhood: &[(f64, f64)]) -> f64 {
+        let max_d = neighborhood.iter().map(|p| p.0).fold(f64::MIN, f64::max);
+        let max_c = neighborhood.iter().map(|p| p.1).fold(f64::MIN, f64::max);
+        let nd = if max_d > 0.0 { own.0 / max_d } else { 0.0 };
+        let nc = if max_c > 0.0 { own.1 / max_c } else { 0.0 };
+        self.alpha_d * nd + self.alpha_c * nc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_data_has_max_confidence() {
+        let c = data_confidence(&[10, 10, 10, 10]);
+        assert!((c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_data_lowers_confidence() {
+        let balanced = data_confidence(&[10, 10, 10, 10]);
+        let skewed = data_confidence(&[40, 0, 0, 0]);
+        let mild = data_confidence(&[25, 15, 10, 10]);
+        assert!(skewed < mild && mild < balanced);
+        assert!(skewed > 0.0 && skewed <= 1.0);
+    }
+
+    #[test]
+    fn comm_confidence_inverse() {
+        assert!(comm_confidence(5.0) > comm_confidence(10.0));
+        assert_eq!(comm_confidence(2.0), 0.5);
+    }
+
+    #[test]
+    fn combine_normalizes_to_unit_interval() {
+        let p = ConfidenceParams::default();
+        let hood = [(1.0, 0.2), (0.5, 0.1), (0.8, 0.05)];
+        for &own in &hood {
+            let c = p.combine(own, &hood);
+            assert!(c > 0.0 && c <= 1.0, "c={c}");
+        }
+        // the best-on-both-axes client gets exactly alpha_d + alpha_c
+        let best = p.combine((1.0, 0.2), &hood);
+        assert!((best - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alphas_weight_the_axes() {
+        let d_only = ConfidenceParams {
+            alpha_d: 1.0,
+            alpha_c: 0.0,
+        };
+        let hood = [(1.0, 0.01), (0.25, 1.0)];
+        // client 0 has the best data, worst comm
+        let c0 = d_only.combine(hood[0], &hood);
+        let c1 = d_only.combine(hood[1], &hood);
+        assert!(c0 > c1);
+    }
+}

@@ -1,0 +1,80 @@
+//! Model fingerprinting for de-duplication (paper §III-C3): before sending
+//! a model, a client offers its fingerprint; the receiver skips the
+//! transfer when the fingerprint matches the copy it already holds.
+
+use sha2::{Digest, Sha256};
+
+/// 64-bit fingerprint of a flat parameter vector (truncated SHA-256 of the
+//  raw little-endian f32 bytes — "a public hash function" per the paper).
+pub fn fingerprint(params: &[f32]) -> u64 {
+    let mut h = Sha256::new();
+    // §Perf iteration 2: fixed stack buffer instead of a Vec per chunk
+    // (~1.7× on 100k-param models).
+    let mut buf = [0u8; 4096 * 4];
+    for chunk in params.chunks(4096) {
+        for (i, f) in chunk.iter().enumerate() {
+            buf[i * 4..i * 4 + 4].copy_from_slice(&f.to_le_bytes());
+        }
+        h.update(&buf[..chunk.len() * 4]);
+    }
+    let d = h.finalize();
+    u64::from_le_bytes(d[..8].try_into().unwrap())
+}
+
+/// Per-neighbor fingerprint cache deciding whether a transfer is needed.
+#[derive(Debug, Clone, Default)]
+pub struct FingerprintCache {
+    entries: std::collections::BTreeMap<u64, u64>, // neighbor -> fp
+}
+
+impl FingerprintCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record the fingerprint of the model we last received from (or sent
+    /// to) `neighbor`.
+    pub fn record(&mut self, neighbor: u64, fp: u64) {
+        self.entries.insert(neighbor, fp);
+    }
+
+    /// Would sending a model with fingerprint `fp` to `neighbor` be a
+    /// duplicate of what they already have?
+    pub fn is_duplicate(&self, neighbor: u64, fp: u64) -> bool {
+        self.entries.get(&neighbor) == Some(&fp)
+    }
+
+    pub fn forget(&mut self, neighbor: u64) {
+        self.entries.remove(&neighbor);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_deterministic_and_sensitive() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![1.0f32, 2.0, 3.0];
+        let c = vec![1.0f32, 2.0, 3.001];
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        assert_ne!(fingerprint(&a), fingerprint(&a[..2].to_vec()));
+    }
+
+    #[test]
+    fn cache_dedup_flow() {
+        let mut cache = FingerprintCache::new();
+        let model = vec![0.5f32; 100];
+        let fp = fingerprint(&model);
+        assert!(!cache.is_duplicate(7, fp));
+        cache.record(7, fp);
+        assert!(cache.is_duplicate(7, fp));
+        // model changed -> transfer needed again
+        let fp2 = fingerprint(&vec![0.6f32; 100]);
+        assert!(!cache.is_duplicate(7, fp2));
+        cache.forget(7);
+        assert!(!cache.is_duplicate(7, fp));
+    }
+}

@@ -1,0 +1,13 @@
+//! Model Exchange Protocol (paper §III-C): asynchronous per-client
+//! exchange periods, confidence-weighted aggregation, and fingerprint
+//! de-duplication.
+
+pub mod aggregate;
+pub mod confidence;
+pub mod fingerprint;
+pub mod schedule;
+
+pub use aggregate::{aggregate_cpu, pack_for_artifact};
+pub use confidence::{comm_confidence, data_confidence, ConfidenceParams};
+pub use fingerprint::{fingerprint, FingerprintCache};
+pub use schedule::{Capacity, ExchangeSchedule};

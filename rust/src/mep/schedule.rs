@@ -1,0 +1,129 @@
+//! Asynchronous exchange scheduling (paper §III-C1).
+//!
+//! Each client has its own communication period `T_u` derived from its
+//! capacity tier (coarse-grained setting) or a measured minimum times a
+//! safety factor η (fine-grained). Two neighbors exchange at
+//! `max(T_u, T_v)`, so one client can run different periods per neighbor.
+
+use crate::ndmp::messages::Time;
+
+/// Client capacity tiers (paper §IV-A2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Capacity {
+    High,
+    Medium,
+    Low,
+}
+
+impl Capacity {
+    /// Time scale factor relative to a medium-capacity client
+    /// (high = 2/3×, low = 2×; paper §IV-A2).
+    pub fn scale(self) -> f64 {
+        match self {
+            Capacity::High => 2.0 / 3.0,
+            Capacity::Medium => 1.0,
+            Capacity::Low => 2.0,
+        }
+    }
+
+    /// Deterministic tier assignment with the paper's 60/20/20 split.
+    pub fn assign(index: usize, total: usize) -> Capacity {
+        // interleave deterministically: every 5th is high, every 5th+1 low
+        let _ = total;
+        match index % 5 {
+            0 => Capacity::High,
+            1 => Capacity::Low,
+            _ => Capacity::Medium,
+        }
+    }
+}
+
+/// Per-client schedule state.
+#[derive(Debug, Clone)]
+pub struct ExchangeSchedule {
+    /// Own communication period `T_u` (µs).
+    pub period: Time,
+    /// Synchronous mode runs everyone at the max period instead.
+    pub synchronous: bool,
+}
+
+impl ExchangeSchedule {
+    /// Coarse-grained: base period scaled by capacity tier.
+    pub fn coarse(base_period: Time, cap: Capacity) -> Self {
+        Self {
+            period: (base_period as f64 * cap.scale()) as Time,
+            synchronous: false,
+        }
+    }
+
+    /// Fine-grained: measured minimum duration × η (η > 1).
+    pub fn fine(t_min: Time, eta: f64) -> Self {
+        assert!(eta > 1.0, "η must exceed 1");
+        Self {
+            period: (t_min as f64 * eta) as Time,
+            synchronous: false,
+        }
+    }
+
+    /// The pairwise exchange period with a neighbor of period `other`
+    /// (paper: `max(T_u, T_v)`).
+    pub fn pair_period(&self, other: Time) -> Time {
+        self.period.max(other)
+    }
+
+    /// Next exchange deadline for a neighbor given the last exchange time.
+    pub fn next_exchange(&self, last: Time, neighbor_period: Time) -> Time {
+        last + self.pair_period(neighbor_period)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacity_scales() {
+        assert!(Capacity::High.scale() < Capacity::Medium.scale());
+        assert!(Capacity::Low.scale() > Capacity::Medium.scale());
+    }
+
+    #[test]
+    fn assignment_matches_paper_split() {
+        let n = 100;
+        let mut counts = [0usize; 3];
+        for i in 0..n {
+            match Capacity::assign(i, n) {
+                Capacity::High => counts[0] += 1,
+                Capacity::Low => counts[1] += 1,
+                Capacity::Medium => counts[2] += 1,
+            }
+        }
+        assert_eq!(counts, [20, 20, 60]); // 20% high, 20% low, 60% medium
+    }
+
+    #[test]
+    fn pair_period_is_max() {
+        let s = ExchangeSchedule::coarse(10_000, Capacity::High); // ~6667
+        assert_eq!(s.pair_period(20_000), 20_000);
+        assert_eq!(s.pair_period(1_000), s.period);
+    }
+
+    #[test]
+    fn fine_grained_applies_eta() {
+        let s = ExchangeSchedule::fine(9_000, 1.5);
+        assert_eq!(s.period, 13_500);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fine_grained_rejects_eta_below_one() {
+        ExchangeSchedule::fine(1_000, 0.9);
+    }
+
+    #[test]
+    fn next_exchange_advances() {
+        let s = ExchangeSchedule::coarse(5_000, Capacity::Medium);
+        assert_eq!(s.next_exchange(100, 5_000), 5_100);
+        assert_eq!(s.next_exchange(100, 8_000), 8_100);
+    }
+}

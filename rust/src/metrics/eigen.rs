@@ -1,0 +1,158 @@
+//! Dense symmetric eigensolver (cyclic Jacobi rotations).
+//!
+//! Serves as the *oracle* for the fast matrix-free spectral-gap estimator
+//! in `spectral.rs`: tests cross-check the power-iteration λ against the
+//! full Jacobi spectrum on small graphs. Also usable directly for N up to
+//! a few hundred (the paper's Fig. 3 uses N = 300).
+
+/// Dense symmetric matrix in row-major storage.
+#[derive(Debug, Clone)]
+pub struct SymMatrix {
+    pub n: usize,
+    pub a: Vec<f64>,
+}
+
+impl SymMatrix {
+    pub fn zeros(n: usize) -> Self {
+        Self {
+            n,
+            a: vec![0.0; n * n],
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.a[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.a[i * self.n + j] = v;
+        self.a[j * self.n + i] = v;
+    }
+
+    fn off_diag_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                let x = self.get(i, j);
+                s += 2.0 * x * x;
+            }
+        }
+        s.sqrt()
+    }
+}
+
+/// All eigenvalues of a symmetric matrix, sorted descending.
+///
+/// Cyclic Jacobi: O(n^3) per sweep, quadratic convergence; plenty for the
+/// oracle role (n <= ~400 in tests and Fig. 3 harnesses).
+pub fn eigenvalues_sym(m: &SymMatrix) -> Vec<f64> {
+    let n = m.n;
+    let mut a = m.clone();
+    if n == 0 {
+        return vec![];
+    }
+    if n == 1 {
+        return vec![a.get(0, 0)];
+    }
+    let tol = 1e-12 * (1.0 + a.off_diag_norm());
+    for _sweep in 0..100 {
+        if a.off_diag_norm() < tol {
+            break;
+        }
+        for p in 0..n - 1 {
+            for q in (p + 1)..n {
+                let apq = a.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a.get(p, p);
+                let aqq = a.get(q, q);
+                let theta = (aqq - app) / (2.0 * apq);
+                // stable tangent of the rotation angle
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // apply the rotation G(p,q,theta) on both sides
+                for k in 0..n {
+                    let akp = a.get(k, p);
+                    let akq = a.get(k, q);
+                    a.set(k, p, c * akp - s * akq);
+                    a.set(k, q, s * akp + c * akq);
+                }
+                // fix the 2x2 block analytically (numerically cleaner)
+                let new_pp = app - t * apq;
+                let new_qq = aqq + t * apq;
+                a.a[p * n + p] = new_pp;
+                a.a[q * n + q] = new_qq;
+                a.set(p, q, 0.0);
+            }
+        }
+    }
+    let mut eig: Vec<f64> = (0..n).map(|i| a.get(i, i)).collect();
+    eig.sort_by(|x, y| y.partial_cmp(x).unwrap());
+    eig
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-8
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let mut m = SymMatrix::zeros(3);
+        m.set(0, 0, 3.0);
+        m.set(1, 1, -1.0);
+        m.set(2, 2, 2.0);
+        let e = eigenvalues_sym(&m);
+        assert!(close(e[0], 3.0) && close(e[1], 2.0) && close(e[2], -1.0));
+    }
+
+    #[test]
+    fn two_by_two_known() {
+        // [[2,1],[1,2]] -> eigenvalues 3, 1
+        let mut m = SymMatrix::zeros(2);
+        m.set(0, 0, 2.0);
+        m.set(1, 1, 2.0);
+        m.set(0, 1, 1.0);
+        let e = eigenvalues_sym(&m);
+        assert!(close(e[0], 3.0) && close(e[1], 1.0));
+    }
+
+    #[test]
+    fn cycle_graph_adjacency_spectrum() {
+        // adjacency eigenvalues of C_n are 2cos(2πk/n)
+        let n = 8;
+        let mut m = SymMatrix::zeros(n);
+        for i in 0..n {
+            m.set(i, (i + 1) % n, 1.0);
+        }
+        let mut want: Vec<f64> = (0..n)
+            .map(|k| 2.0 * (2.0 * std::f64::consts::PI * k as f64 / n as f64).cos())
+            .collect();
+        want.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let got = eigenvalues_sym(&m);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(close(*g, *w), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let mut m = SymMatrix::zeros(5);
+        let mut rng = crate::util::Rng::new(9);
+        for i in 0..5 {
+            for j in i..5 {
+                m.set(i, j, rng.gaussian());
+            }
+        }
+        let trace: f64 = (0..5).map(|i| m.get(i, i)).sum();
+        let sum: f64 = eigenvalues_sym(&m).iter().sum();
+        assert!((trace - sum).abs() < 1e-8);
+    }
+}

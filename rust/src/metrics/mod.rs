@@ -1,0 +1,63 @@
+//! Topology metric pipeline (paper §II-B): convergence factor (spectral),
+//! diameter, and average shortest path length.
+
+pub mod eigen;
+pub mod paths;
+pub mod spectral;
+
+pub use paths::{path_metrics, PathMetrics};
+pub use spectral::{convergence_factor, lambda, lambda_dense, MixingMatrix, DEFAULT_POWER_ITERS};
+
+use crate::graph::Graph;
+
+/// The three paper metrics for one topology, in one struct.
+#[derive(Debug, Clone, Copy)]
+pub struct TopologyMetrics {
+    pub lambda: f64,
+    pub convergence_factor: f64,
+    pub diameter: u32,
+    pub avg_shortest_path: f64,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub connected: bool,
+}
+
+/// Evaluate all §II-B metrics on a graph.
+pub fn evaluate(g: &Graph, seed: u64) -> TopologyMetrics {
+    let l = lambda(g, DEFAULT_POWER_ITERS, seed);
+    let p = path_metrics(g);
+    TopologyMetrics {
+        lambda: l,
+        convergence_factor: if l >= 1.0 - 1e-12 {
+            f64::INFINITY
+        } else {
+            1.0 / ((1.0 - l) * (1.0 - l))
+        },
+        diameter: p.diameter,
+        avg_shortest_path: p.avg_shortest_path,
+        avg_degree: g.avg_degree(),
+        max_degree: g.max_degree(),
+        connected: p.connected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::random_regular;
+    use crate::util::Rng;
+
+    #[test]
+    fn evaluate_reports_consistent_bundle() {
+        let mut rng = Rng::new(8);
+        let g = random_regular(50, 6, &mut rng);
+        let m = evaluate(&g, 1);
+        assert!(m.connected);
+        assert!(m.lambda > 0.0 && m.lambda < 1.0);
+        assert!(m.convergence_factor >= 1.0);
+        assert!(m.diameter >= 2);
+        assert!(m.avg_shortest_path > 1.0);
+        assert!((m.avg_degree - 6.0).abs() < 1e-9);
+        assert_eq!(m.max_degree, 6);
+    }
+}

@@ -1,0 +1,98 @@
+//! Path-based topology metrics (paper §II-B2,3): network diameter and
+//! average shortest path length (ASPL), via all-sources BFS — O(N·E).
+
+use crate::graph::traversal::bfs_distances;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PathMetrics {
+    pub diameter: u32,
+    pub avg_shortest_path: f64,
+    pub connected: bool,
+}
+
+/// Compute diameter + ASPL over all ordered reachable pairs.
+/// A disconnected graph reports `connected = false` and metrics over the
+/// reachable pairs only (the harnesses treat that as a failed topology).
+pub fn path_metrics(g: &Graph) -> PathMetrics {
+    let n = g.n();
+    if n <= 1 {
+        return PathMetrics {
+            diameter: 0,
+            avg_shortest_path: 0.0,
+            connected: true,
+        };
+    }
+    let mut diameter = 0u32;
+    let mut total = 0u64;
+    let mut pairs = 0u64;
+    let mut connected = true;
+    for src in 0..n {
+        let dist = bfs_distances(g, src);
+        for (v, &d) in dist.iter().enumerate() {
+            if v == src {
+                continue;
+            }
+            if d == u32::MAX {
+                connected = false;
+                continue;
+            }
+            diameter = diameter.max(d);
+            total += d as u64;
+            pairs += 1;
+        }
+    }
+    PathMetrics {
+        diameter,
+        avg_shortest_path: if pairs == 0 {
+            f64::INFINITY
+        } else {
+            total as f64 / pairs as f64
+        },
+        connected,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_graph() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let m = path_metrics(&g);
+        assert!(m.connected);
+        assert_eq!(m.diameter, 3);
+        // pairs (ordered): dists 1,2,3,1,1,2 doubled -> mean = 20/12
+        assert!((m.avg_shortest_path - 20.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_diameter_one() {
+        let mut g = Graph::new(5);
+        for u in 0..5 {
+            for v in (u + 1)..5 {
+                g.add_edge(u, v);
+            }
+        }
+        let m = path_metrics(&g);
+        assert_eq!(m.diameter, 1);
+        assert_eq!(m.avg_shortest_path, 1.0);
+    }
+
+    #[test]
+    fn disconnected_flagged() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3)]);
+        let m = path_metrics(&g);
+        assert!(!m.connected);
+    }
+
+    #[test]
+    fn ring_diameter() {
+        let mut g = Graph::new(10);
+        for i in 0..10 {
+            g.add_edge(i, (i + 1) % 10);
+        }
+        assert_eq!(path_metrics(&g).diameter, 5);
+    }
+}

@@ -1,0 +1,233 @@
+//! Spectral topology metrics (paper §II-B1).
+//!
+//! The mixing matrix `M` of an overlay graph is its Metropolis–Hastings
+//! matrix: `M_uv = 1/(1+max(d_u,d_v))` for edges, rows re-normalized onto
+//! the diagonal. `M` is symmetric doubly-stochastic, so `λ₁ = 1` with the
+//! uniform eigenvector; the paper's contraction constant is
+//! `λ = max(|λ₂|, |λ_N|)` and the **convergence factor** is
+//! `c_G = 1/(1-λ)²`.
+//!
+//! We compute λ matrix-free: λ is the spectral norm of the deflated
+//! operator `B = M - 1·1ᵀ/N`, obtained by power iteration with the uniform
+//! component projected out each step — O(iters · |E|), which handles the
+//! paper's 1000-node scalability sweep in milliseconds. The dense Jacobi
+//! solver (`eigen.rs`) is the test oracle.
+
+use super::eigen::{eigenvalues_sym, SymMatrix};
+use crate::graph::Graph;
+use crate::util::Rng;
+
+/// Metropolis–Hastings mixing weights as a sparse row representation.
+#[derive(Debug, Clone)]
+pub struct MixingMatrix {
+    n: usize,
+    /// (neighbor, weight) lists per node; diagonal stored separately.
+    rows: Vec<Vec<(u32, f64)>>,
+    diag: Vec<f64>,
+}
+
+impl MixingMatrix {
+    /// Build the MH matrix of `g` (paper [5]: Boyd–Diaconis–Xiao).
+    pub fn metropolis_hastings(g: &Graph) -> Self {
+        let n = g.n();
+        let mut rows = Vec::with_capacity(n);
+        let mut diag = vec![0.0; n];
+        for u in 0..n {
+            let mut row = Vec::with_capacity(g.degree(u));
+            let mut off = 0.0;
+            for v in g.neighbors(u) {
+                let w = 1.0 / (1.0 + g.degree(u).max(g.degree(v)) as f64);
+                row.push((v as u32, w));
+                off += w;
+            }
+            diag[u] = 1.0 - off;
+            rows.push(row);
+        }
+        Self { n, rows, diag }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// y = M x
+    pub fn mul(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for u in 0..self.n {
+            let mut acc = self.diag[u] * x[u];
+            for &(v, w) in &self.rows[u] {
+                acc += w * x[v as usize];
+            }
+            y[u] = acc;
+        }
+    }
+
+    /// Dense copy (oracle / small-N paths).
+    pub fn to_dense(&self) -> SymMatrix {
+        let mut m = SymMatrix::zeros(self.n);
+        for u in 0..self.n {
+            m.set(u, u, self.diag[u]);
+            for &(v, w) in &self.rows[u] {
+                m.set(u, v as usize, w);
+            }
+        }
+        m
+    }
+
+    /// Row-stochasticity check (used by tests and debug assertions).
+    pub fn max_row_error(&self) -> f64 {
+        (0..self.n)
+            .map(|u| {
+                let s: f64 = self.diag[u] + self.rows[u].iter().map(|&(_, w)| w).sum::<f64>();
+                (s - 1.0).abs()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+fn project_out_uniform(x: &mut [f64]) {
+    let mean = x.iter().sum::<f64>() / x.len() as f64;
+    for v in x.iter_mut() {
+        *v -= mean;
+    }
+}
+
+fn norm(x: &[f64]) -> f64 {
+    x.iter().map(|v| v * v).sum::<f64>().sqrt()
+}
+
+/// λ = max(|λ₂|, |λ_N|) via power iteration on the deflated operator.
+///
+/// Requires a connected graph (disconnected graphs have λ = 1 exactly; we
+/// return 1.0 in that case by detecting stagnation at eigenvalue 1).
+pub fn lambda(g: &Graph, iters: usize, seed: u64) -> f64 {
+    let n = g.n();
+    if n <= 1 {
+        return 0.0;
+    }
+    let m = MixingMatrix::metropolis_hastings(g);
+    let mut rng = Rng::new(seed ^ 0x5eed_1a3b);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    project_out_uniform(&mut x);
+    let mut y = vec![0.0; n];
+    let mut est = 0.0;
+    for _ in 0..iters {
+        let nx = norm(&x);
+        if nx < 1e-300 {
+            return 0.0; // x in the uniform space only: λ₂ ≈ 0
+        }
+        for v in x.iter_mut() {
+            *v /= nx;
+        }
+        m.mul(&x, &mut y);
+        project_out_uniform(&mut y);
+        est = norm(&y);
+        std::mem::swap(&mut x, &mut y);
+    }
+    est.min(1.0)
+}
+
+/// Convergence factor `c_G = 1/(1-λ)²` (paper §II-B1).
+pub fn convergence_factor(g: &Graph, iters: usize, seed: u64) -> f64 {
+    let l = lambda(g, iters, seed);
+    if l >= 1.0 - 1e-12 {
+        f64::INFINITY
+    } else {
+        1.0 / ((1.0 - l) * (1.0 - l))
+    }
+}
+
+/// Oracle λ from the dense Jacobi spectrum (small N only).
+pub fn lambda_dense(g: &Graph) -> f64 {
+    let m = MixingMatrix::metropolis_hastings(g).to_dense();
+    let eig = eigenvalues_sym(&m);
+    if eig.len() < 2 {
+        return 0.0;
+    }
+    // eig[0] == 1 (uniform); contraction is the next-largest magnitude.
+    eig[1].abs().max(eig.last().unwrap().abs())
+}
+
+pub const DEFAULT_POWER_ITERS: usize = 300;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::random_regular;
+    use crate::graph::Graph;
+
+    fn ring(n: usize) -> Graph {
+        let mut g = Graph::new(n);
+        for i in 0..n {
+            g.add_edge(i, (i + 1) % n);
+        }
+        g
+    }
+
+    fn complete(n: usize) -> Graph {
+        let mut g = Graph::new(n);
+        for u in 0..n {
+            for v in (u + 1)..n {
+                g.add_edge(u, v);
+            }
+        }
+        g
+    }
+
+    #[test]
+    fn mh_rows_are_stochastic() {
+        let mut rng = Rng::new(3);
+        let g = random_regular(60, 6, &mut rng);
+        let m = MixingMatrix::metropolis_hastings(&g);
+        assert!(m.max_row_error() < 1e-12);
+    }
+
+    #[test]
+    fn power_matches_dense_oracle() {
+        let mut rng = Rng::new(4);
+        for &(n, d) in &[(20usize, 4usize), (40, 6), (60, 4)] {
+            let g = random_regular(n, d, &mut rng);
+            let fast = lambda(&g, 2_000, 11);
+            let oracle = lambda_dense(&g);
+            assert!(
+                (fast - oracle).abs() < 1e-3,
+                "n={n} d={d}: {fast} vs {oracle}"
+            );
+        }
+    }
+
+    #[test]
+    fn ring_lambda_close_to_one() {
+        // rings mix slowly: λ = (1 + 2cos(2π/n))/3 for MH on C_n -> ~1
+        let g = ring(100);
+        let l = lambda(&g, 3_000, 5);
+        assert!(l > 0.99, "ring λ {l}");
+    }
+
+    #[test]
+    fn complete_graph_mixes_fast() {
+        let g = complete(20);
+        let l = lambda(&g, 500, 5);
+        assert!(l < 0.1, "complete λ {l}");
+    }
+
+    #[test]
+    fn expander_beats_ring() {
+        let mut rng = Rng::new(6);
+        let rrg = random_regular(100, 8, &mut rng);
+        let l_rrg = lambda(&rrg, 1_000, 5);
+        let l_ring = lambda(&ring(100), 1_000, 5);
+        assert!(l_rrg < l_ring - 0.1, "rrg {l_rrg} ring {l_ring}");
+    }
+
+    #[test]
+    fn convergence_factor_monotone_in_lambda() {
+        let mut rng = Rng::new(7);
+        let good = random_regular(80, 10, &mut rng);
+        let bad = ring(80);
+        let cf_good = convergence_factor(&good, 1_000, 3);
+        let cf_bad = convergence_factor(&bad, 1_000, 3);
+        assert!(cf_good < cf_bad);
+        assert!(cf_good >= 1.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! NDMP / MEP wire messages (paper §III).
+//!
+//! One enum covers both protocol sets so a single transport carries them:
+//! the discrete-event simulator passes `Msg` values directly; the TCP
+//! prototype serializes them with `net::codec`.
+
+use crate::topology::NodeId;
+
+/// Simulation / protocol time in microseconds.
+pub type Time = u64;
+
+pub const MS: Time = 1_000;
+pub const SEC: Time = 1_000_000;
+
+/// Ring travel direction for directional repair routing (§III-B3).
+/// `Cw` = clockwise = increasing coordinate; `Ccw` = decreasing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dir {
+    Cw,
+    Ccw,
+}
+
+impl Dir {
+    pub fn flip(self) -> Dir {
+        match self {
+            Dir::Cw => Dir::Ccw,
+            Dir::Ccw => Dir::Cw,
+        }
+    }
+}
+
+/// Which ring side of a node an update applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Side {
+    Prev, // counterclockwise adjacent
+    Next, // clockwise adjacent
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    // ---- NDMP control protocol (§III-B) ----
+    /// Greedy-routed toward the joiner's coordinate in `space`; the node
+    /// closest to that coordinate answers (join protocol, §III-B1).
+    /// Coordinates are derived from `joiner` by hashing, so they never
+    /// ride in the message.
+    NeighborDiscovery { joiner: NodeId, space: u32 },
+    /// Terminal node's answer to the joiner: its ring-adjacent pair.
+    DiscoveryResult { space: u32, prev: NodeId, next: NodeId },
+    /// Terminal node tells the displaced old adjacent about the joiner.
+    AdjacentUpdate { space: u32, side: Side, node: NodeId },
+    /// Planned leave (§III-B2): "link with `other` on `side`".
+    Leave { space: u32, side: Side, other: NodeId },
+    /// Periodic liveness (§III-B3).
+    Heartbeat,
+    /// Directionally greedy-routed repair probe toward `target`'s
+    /// coordinate in `space`; stops at the surviving adjacent (§III-B3).
+    NeighborRepair {
+        origin: NodeId,
+        target: NodeId,
+        space: u32,
+        dir: Dir,
+    },
+    /// Stop node's answer to the repair origin: "I am your `dir`-side
+    /// adjacent in `space`".
+    RepairStop { space: u32, dir: Dir },
+
+    // ---- MEP application protocol (§III-C) ----
+    /// Fingerprint-first offer (model de-duplication, §III-C3).
+    ModelOffer {
+        fingerprint: u64,
+        confidence: f32,
+        version: u64,
+    },
+    /// "Your fingerprint is new to me — send the parameters."
+    ModelRequest { version: u64 },
+    /// Flat model parameters + sender confidence.
+    ModelPayload {
+        version: u64,
+        confidence: f32,
+        params: Vec<f32>,
+    },
+}
+
+impl Msg {
+    /// Is this an NDMP control message (counted in Fig. 8c)?
+    pub fn is_control(&self) -> bool {
+        !matches!(
+            self,
+            Msg::ModelOffer { .. } | Msg::ModelRequest { .. } | Msg::ModelPayload { .. }
+        )
+    }
+
+    /// Approximate wire size in bytes (for communication-cost metrics;
+    /// matches what `net::codec` actually produces within a few bytes).
+    pub fn wire_size(&self) -> usize {
+        match self {
+            Msg::NeighborDiscovery { .. } => 21,
+            Msg::DiscoveryResult { .. } => 25,
+            Msg::AdjacentUpdate { .. } => 18,
+            Msg::Leave { .. } => 18,
+            Msg::Heartbeat => 5,
+            Msg::NeighborRepair { .. } => 26,
+            Msg::RepairStop { .. } => 10,
+            Msg::ModelOffer { .. } => 25,
+            Msg::ModelRequest { .. } => 13,
+            Msg::ModelPayload { params, .. } => 17 + 4 * params.len(),
+        }
+    }
+}
+
+/// An outbound message from a protocol handler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Outgoing {
+    pub to: NodeId,
+    pub msg: Msg,
+}
+
+impl Outgoing {
+    pub fn new(to: NodeId, msg: Msg) -> Self {
+        Self { to, msg }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_classification() {
+        assert!(Msg::Heartbeat.is_control());
+        assert!(Msg::NeighborDiscovery { joiner: 1, space: 0 }.is_control());
+        assert!(!Msg::ModelRequest { version: 1 }.is_control());
+        assert!(!Msg::ModelPayload {
+            version: 0,
+            confidence: 1.0,
+            params: vec![]
+        }
+        .is_control());
+    }
+
+    #[test]
+    fn payload_size_scales_with_params() {
+        let small = Msg::ModelPayload {
+            version: 0,
+            confidence: 1.0,
+            params: vec![0.0; 10],
+        };
+        let big = Msg::ModelPayload {
+            version: 0,
+            confidence: 1.0,
+            params: vec![0.0; 1000],
+        };
+        assert_eq!(big.wire_size() - small.wire_size(), 4 * 990);
+    }
+
+    #[test]
+    fn dir_flip() {
+        assert_eq!(Dir::Cw.flip(), Dir::Ccw);
+        assert_eq!(Dir::Ccw.flip(), Dir::Cw);
+    }
+}

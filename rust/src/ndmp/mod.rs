@@ -1,0 +1,10 @@
+//! Neighbor Discovery and Maintenance Protocols (paper §III-B): the fully
+//! decentralized join / leave / maintenance suite with greedy routing over
+//! virtual ring coordinates.
+
+pub mod messages;
+pub mod node;
+pub mod routing;
+
+pub use messages::{Dir, Msg, Outgoing, Side, Time, MS, SEC};
+pub use node::{NodeCounters, NodeState, PeerInfo, SpaceView};

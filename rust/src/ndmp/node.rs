@@ -1,0 +1,673 @@
+//! NDMP node state machine (paper §III-B).
+//!
+//! `NodeState` is a pure protocol engine: it consumes `(from, Msg, now)`
+//! and timer ticks, and emits `Outgoing` messages. It performs no I/O —
+//! the discrete-event simulator (`crate::sim`) and the TCP prototype
+//! (`crate::net`) both drive the *same* engine, which is the point of the
+//! paper's "prototype + simulation use one protocol suite" methodology.
+
+use super::messages::{Dir, Msg, Outgoing, Side, Time};
+use super::routing::{coord_of, directional_next_hop, dir_arc, greedy_next_hop};
+use crate::config::OverlayConfig;
+use crate::topology::NodeId;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Ring adjacency in one virtual space as known by this node.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpaceView {
+    /// Counterclockwise adjacent (smaller-coordinate direction).
+    pub prev: Option<NodeId>,
+    /// Clockwise adjacent (larger-coordinate direction).
+    pub next: Option<NodeId>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PeerInfo {
+    pub last_seen: Time,
+}
+
+/// Message/telemetry counters (feeds Fig. 8c and the comm-cost figures).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeCounters {
+    /// Join/leave traffic: NeighborDiscovery, DiscoveryResult,
+    /// AdjacentUpdate, Leave — the Fig. 8c "construction messages".
+    pub control_sent: u64,
+    pub control_bytes: u64,
+    pub data_sent: u64,
+    pub data_bytes: u64,
+    /// Heartbeats counted separately: Fig. 8c reports *construction*
+    /// messages, which exclude steady-state liveness traffic.
+    pub heartbeats_sent: u64,
+    /// Repair probes + stops (maintenance, also excluded from Fig. 8c).
+    pub repair_sent: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct NodeState {
+    pub id: NodeId,
+    pub cfg: OverlayConfig,
+    pub views: Vec<SpaceView>,
+    pub peers: BTreeMap<NodeId, PeerInfo>,
+    pub joined: bool,
+    pub counters: NodeCounters,
+    next_heartbeat: Time,
+    next_probe: Time,
+}
+
+impl NodeState {
+    pub fn new(id: NodeId, cfg: OverlayConfig, now: Time) -> Self {
+        let spaces = cfg.spaces;
+        // Stagger periodic timers by id so a simulated fleet doesn't tick
+        // in lockstep (mirrors real deployments' unsynchronized clocks).
+        let stagger = (id.wrapping_mul(0x9E37_79B9)) % (cfg.heartbeat_ms * 1_000);
+        Self {
+            id,
+            views: vec![SpaceView::default(); spaces],
+            peers: BTreeMap::new(),
+            joined: false,
+            counters: NodeCounters::default(),
+            next_heartbeat: now + stagger,
+            next_probe: now + stagger + cfg.repair_probe_ms * 500,
+            cfg,
+        }
+    }
+
+    /// The node's current neighbor set (union of all space views plus any
+    /// peers learned through repair), i.e. `N_u` of Definition 1.
+    pub fn neighbor_ids(&self) -> BTreeSet<NodeId> {
+        let mut s: BTreeSet<NodeId> = self.peers.keys().copied().collect();
+        for v in &self.views {
+            if let Some(p) = v.prev {
+                s.insert(p);
+            }
+            if let Some(n) = v.next {
+                s.insert(n);
+            }
+        }
+        s.remove(&self.id);
+        s
+    }
+
+    /// Neighbors used for routing = peers we believe are alive.
+    fn routing_neighbors(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.peers.keys().copied().filter(move |&p| p != self.id)
+    }
+
+    fn track_peer(&mut self, id: NodeId, now: Time) {
+        if id == self.id {
+            return;
+        }
+        self.peers
+            .entry(id)
+            .and_modify(|p| p.last_seen = now)
+            .or_insert(PeerInfo { last_seen: now });
+    }
+
+    fn count(&mut self, msg: &Msg) {
+        if matches!(msg, Msg::Heartbeat) {
+            self.counters.heartbeats_sent += 1;
+            self.counters.control_bytes += msg.wire_size() as u64;
+        } else if matches!(msg, Msg::NeighborRepair { .. } | Msg::RepairStop { .. }) {
+            self.counters.repair_sent += 1;
+            self.counters.control_bytes += msg.wire_size() as u64;
+        } else if msg.is_control() {
+            self.counters.control_sent += 1;
+            self.counters.control_bytes += msg.wire_size() as u64;
+        } else {
+            self.counters.data_sent += 1;
+            self.counters.data_bytes += msg.wire_size() as u64;
+        }
+    }
+
+    fn send(&mut self, out: &mut Vec<Outgoing>, to: NodeId, msg: Msg) {
+        debug_assert_ne!(to, self.id, "node sending to itself: {msg:?}");
+        self.count(&msg);
+        out.push(Outgoing::new(to, msg));
+    }
+
+    // ------------------------------------------------------------------
+    // Join protocol (§III-B1)
+    // ------------------------------------------------------------------
+
+    /// Start joining an existing network through `bootstrap` (the paper's
+    /// minimal assumption: a joiner knows one live node). Returns the
+    /// initial `Neighbor_discovery` messages, one per virtual space.
+    pub fn start_join(&mut self, bootstrap: NodeId, now: Time) -> Vec<Outgoing> {
+        self.track_peer(bootstrap, now);
+        let mut out = Vec::new();
+        for space in 0..self.cfg.spaces as u32 {
+            self.send(
+                &mut out,
+                bootstrap,
+                Msg::NeighborDiscovery {
+                    joiner: self.id,
+                    space,
+                },
+            );
+        }
+        out
+    }
+
+    /// Bootstrap a brand-new network (first node): immediately "joined".
+    pub fn bootstrap_first(&mut self) {
+        self.joined = true;
+    }
+
+    fn handle_discovery(&mut self, joiner: NodeId, space: u32, now: Time) -> Vec<Outgoing> {
+        let mut out = Vec::new();
+        if joiner == self.id {
+            return out; // own probe echoed back; ignore
+        }
+        let target = coord_of(joiner, space);
+        let nbrs: Vec<NodeId> = self.routing_neighbors().filter(|&w| w != joiner).collect();
+        if let Some(w) = greedy_next_hop(self.id, target, space, nbrs.into_iter()) {
+            self.send(&mut out, w, Msg::NeighborDiscovery { joiner, space });
+            return out;
+        }
+        // Terminal (Theorem 1): we are the closest node to the joiner's
+        // coordinate. Insert the joiner between us and the proper adjacent.
+        let s = space as usize;
+        let view = self.views[s];
+        self.track_peer(joiner, now);
+        match (view.prev, view.next) {
+            (None, None) => {
+                // singleton network: the 2-ring is joiner <-> me
+                self.views[s].prev = Some(joiner);
+                self.views[s].next = Some(joiner);
+                self.send(
+                    &mut out,
+                    joiner,
+                    Msg::DiscoveryResult {
+                        space,
+                        prev: self.id,
+                        next: self.id,
+                    },
+                );
+            }
+            _ => {
+                let my_x = coord_of(self.id, space);
+                let next = view.next.unwrap_or(self.id);
+                let next_x = coord_of(next, space);
+                // Is the joiner on our clockwise arc (me -> next)?
+                let on_next_side = dir_arc(Dir::Cw, my_x, target) <= dir_arc(Dir::Cw, my_x, next_x);
+                if on_next_side {
+                    self.views[s].next = Some(joiner);
+                    if next != self.id {
+                        self.send(
+                            &mut out,
+                            next,
+                            Msg::AdjacentUpdate {
+                                space,
+                                side: Side::Prev,
+                                node: joiner,
+                            },
+                        );
+                    }
+                    self.send(
+                        &mut out,
+                        joiner,
+                        Msg::DiscoveryResult {
+                            space,
+                            prev: self.id,
+                            next,
+                        },
+                    );
+                } else {
+                    let prev = view.prev.unwrap_or(self.id);
+                    self.views[s].prev = Some(joiner);
+                    if prev != self.id {
+                        self.send(
+                            &mut out,
+                            prev,
+                            Msg::AdjacentUpdate {
+                                space,
+                                side: Side::Next,
+                                node: joiner,
+                            },
+                        );
+                    }
+                    self.send(
+                        &mut out,
+                        joiner,
+                        Msg::DiscoveryResult {
+                            space,
+                            prev,
+                            next: self.id,
+                        },
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Leave protocol (§III-B2)
+    // ------------------------------------------------------------------
+
+    /// Graceful departure: tell both adjacents in every space to link with
+    /// each other. After emitting these, the node can be shut down.
+    pub fn start_leave(&mut self) -> Vec<Outgoing> {
+        let mut out = Vec::new();
+        for space in 0..self.cfg.spaces as u32 {
+            let v = self.views[space as usize];
+            if let (Some(p), Some(n)) = (v.prev, v.next) {
+                if p != self.id {
+                    // prev's NEXT side becomes our next
+                    self.send(
+                        &mut out,
+                        p,
+                        Msg::Leave {
+                            space,
+                            side: Side::Next,
+                            other: n,
+                        },
+                    );
+                }
+                if n != self.id && n != p {
+                    self.send(
+                        &mut out,
+                        n,
+                        Msg::Leave {
+                            space,
+                            side: Side::Prev,
+                            other: p,
+                        },
+                    );
+                }
+            }
+        }
+        out
+    }
+
+    fn handle_leave(&mut self, from: NodeId, space: u32, side: Side, other: NodeId, now: Time) {
+        let s = space as usize;
+        // `from` is departing: replace it on the named side with `other`.
+        match side {
+            Side::Next => {
+                if self.views[s].next == Some(from) {
+                    self.views[s].next = if other == self.id { None } else { Some(other) };
+                }
+            }
+            Side::Prev => {
+                if self.views[s].prev == Some(from) {
+                    self.views[s].prev = if other == self.id { None } else { Some(other) };
+                }
+            }
+        }
+        if other != self.id {
+            self.track_peer(other, now);
+        }
+        self.forget_if_unreferenced(from);
+    }
+
+    /// Drop a peer from the table when no space view references it.
+    fn forget_if_unreferenced(&mut self, id: NodeId) {
+        let referenced = self
+            .views
+            .iter()
+            .any(|v| v.prev == Some(id) || v.next == Some(id));
+        if !referenced {
+            self.peers.remove(&id);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Maintenance protocol (§III-B3)
+    // ------------------------------------------------------------------
+
+    /// Monotone adjacency update: adopt `cand` as the `side` adjacent in
+    /// `space` only if it is strictly closer (by directional arc) than the
+    /// incumbent. Keeps stale repair probes from un-fixing the ring.
+    fn maybe_adopt(&mut self, space: u32, side: Side, cand: NodeId, now: Time) {
+        if cand == self.id {
+            return;
+        }
+        let s = space as usize;
+        let my_x = coord_of(self.id, space);
+        let cand_x = coord_of(cand, space);
+        let (dir, incumbent) = match side {
+            Side::Next => (Dir::Cw, self.views[s].next),
+            Side::Prev => (Dir::Ccw, self.views[s].prev),
+        };
+        let adopt = match incumbent {
+            None => true,
+            Some(inc) if inc == cand => false,
+            Some(inc) => {
+                let cand_arc = dir_arc(dir, my_x, cand_x);
+                let inc_arc = dir_arc(dir, my_x, coord_of(inc, space));
+                cand_arc < inc_arc || (cand_arc == inc_arc && cand < inc)
+            }
+        };
+        if adopt {
+            let old = match side {
+                Side::Next => self.views[s].next.replace(cand),
+                Side::Prev => self.views[s].prev.replace(cand),
+            };
+            self.track_peer(cand, now);
+            if let Some(o) = old {
+                self.forget_if_unreferenced(o);
+            }
+        } else {
+            self.track_peer(cand, now);
+        }
+    }
+
+    fn handle_repair(
+        &mut self,
+        origin: NodeId,
+        target: NodeId,
+        space: u32,
+        dir: Dir,
+        now: Time,
+    ) -> Vec<Outgoing> {
+        let mut out = Vec::new();
+        let t = coord_of(target, space);
+        let nbrs: Vec<NodeId> = self
+            .routing_neighbors()
+            .filter(|&w| w != target && w != origin)
+            .collect();
+        match directional_next_hop(self.id, t, space, dir, nbrs.into_iter()) {
+            Some(w) => {
+                self.send(
+                    &mut out,
+                    w,
+                    Msg::NeighborRepair {
+                        origin,
+                        target,
+                        space,
+                        dir,
+                    },
+                );
+            }
+            None => {
+                // Theorem 2: we are the surviving adjacent on the far side
+                // of `target` from `origin`. The probe travelled `dir`, so
+                // the origin sits on our `dir` side.
+                if origin != self.id {
+                    let my_side = match dir {
+                        Dir::Ccw => Side::Prev, // probe moved ccw; origin is ccw of us
+                        Dir::Cw => Side::Next,
+                    };
+                    self.maybe_adopt(space, my_side, origin, now);
+                    self.send(&mut out, origin, Msg::RepairStop { space, dir });
+                }
+            }
+        }
+        out
+    }
+
+    /// Declare `dead` failed: purge from views/peers and emit directional
+    /// repair probes for every space where it was an adjacent.
+    fn fail_neighbor(&mut self, dead: NodeId, _now: Time) -> Vec<Outgoing> {
+        let mut out = Vec::new();
+        self.peers.remove(&dead);
+        for space in 0..self.cfg.spaces as u32 {
+            let s = space as usize;
+            let was_next = self.views[s].next == Some(dead);
+            let was_prev = self.views[s].prev == Some(dead);
+            if was_next {
+                self.views[s].next = None;
+            }
+            if was_prev {
+                self.views[s].prev = None;
+            }
+            if was_next {
+                // dead was clockwise of us: probe counterclockwise (paper
+                // Fig. 7: A's clockwise adjacent G fails -> ccw routing).
+                let probe = Msg::NeighborRepair {
+                    origin: self.id,
+                    target: dead,
+                    space,
+                    dir: Dir::Ccw,
+                };
+                let first = self.first_repair_hop(dead, space, Dir::Ccw);
+                if let Some(w) = first {
+                    self.send(&mut out, w, probe);
+                }
+            }
+            if was_prev {
+                let probe = Msg::NeighborRepair {
+                    origin: self.id,
+                    target: dead,
+                    space,
+                    dir: Dir::Cw,
+                };
+                let first = self.first_repair_hop(dead, space, Dir::Cw);
+                if let Some(w) = first {
+                    self.send(&mut out, w, probe);
+                }
+            }
+        }
+        out
+    }
+
+    /// First hop of a repair probe we originate (we route from ourselves).
+    fn first_repair_hop(&self, target: NodeId, space: u32, dir: Dir) -> Option<NodeId> {
+        let t = coord_of(target, space);
+        let nbrs: Vec<NodeId> = self
+            .routing_neighbors()
+            .filter(|&w| w != target)
+            .collect();
+        directional_next_hop(self.id, t, space, dir, nbrs.into_iter())
+    }
+
+    /// First hop of a proactive *self*-probe. Our own arc to our own
+    /// coordinate is 0, so the normal stop rule would never let the probe
+    /// leave — instead we hand it to the neighbor with the smallest
+    /// remaining `dir`-arc and let directional routing take over.
+    fn first_self_probe_hop(&self, space: u32, dir: Dir) -> Option<NodeId> {
+        let t = coord_of(self.id, space);
+        self.routing_neighbors()
+            .map(|w| {
+                let a = dir_arc(dir, coord_of(w, space), t);
+                (a, w)
+            })
+            .min_by(|(a1, w1), (a2, w2)| a1.partial_cmp(a2).unwrap().then(w1.cmp(w2)))
+            .map(|(_, w)| w)
+    }
+
+    /// Periodic driver: heartbeats, failure detection, and the proactive
+    /// bidirectional self-probes that handle concurrent churn (§III-B3,
+    /// "Neighbor repair for concurrent joins and failures").
+    pub fn tick(&mut self, now: Time) -> Vec<Outgoing> {
+        let mut out = Vec::new();
+        let hb_period = self.cfg.heartbeat_ms * 1_000;
+        if now >= self.next_heartbeat {
+            self.next_heartbeat = now + hb_period;
+            for id in self.neighbor_ids() {
+                self.send(&mut out, id, Msg::Heartbeat);
+            }
+            // failure detection: silence for failure_multiple * T
+            let deadline = (self.cfg.failure_multiple as u64) * hb_period;
+            let dead: Vec<NodeId> = self
+                .peers
+                .iter()
+                .filter(|(_, p)| now.saturating_sub(p.last_seen) > deadline)
+                .map(|(&id, _)| id)
+                .collect();
+            for d in dead {
+                out.extend(self.fail_neighbor(d, now));
+            }
+        }
+        if now >= self.next_probe {
+            self.next_probe = now + self.cfg.repair_probe_ms * 1_000;
+            // proactive self-probes in both directions, every space
+            for space in 0..self.cfg.spaces as u32 {
+                for dir in [Dir::Ccw, Dir::Cw] {
+                    if let Some(w) = self.first_self_probe_hop(space, dir) {
+                        self.send(
+                            &mut out,
+                            w,
+                            Msg::NeighborRepair {
+                                origin: self.id,
+                                target: self.id,
+                                space,
+                                dir,
+                            },
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Dispatch
+    // ------------------------------------------------------------------
+
+    /// Handle one inbound NDMP message. MEP messages are routed by the
+    /// caller to `mep::ExchangeState` instead.
+    pub fn handle(&mut self, from: NodeId, msg: Msg, now: Time) -> Vec<Outgoing> {
+        self.track_peer(from, now);
+        match msg {
+            Msg::NeighborDiscovery { joiner, space } => self.handle_discovery(joiner, space, now),
+            Msg::DiscoveryResult { space, prev, next } => {
+                let s = space as usize;
+                self.maybe_adopt(space, Side::Prev, prev, now);
+                self.maybe_adopt(space, Side::Next, next, now);
+                // On first join the view was empty, so adopt always fires;
+                // record completion once every space has an adjacency.
+                if self.views.iter().all(|v| v.prev.is_some() || v.next.is_some()) {
+                    self.joined = true;
+                }
+                let _ = s;
+                Vec::new()
+            }
+            Msg::AdjacentUpdate { space, side, node } => {
+                self.maybe_adopt(space, side, node, now);
+                Vec::new()
+            }
+            Msg::Leave {
+                space,
+                side,
+                other,
+            } => {
+                self.handle_leave(from, space, side, other, now);
+                Vec::new()
+            }
+            Msg::Heartbeat => Vec::new(),
+            Msg::NeighborRepair {
+                origin,
+                target,
+                space,
+                dir,
+            } => self.handle_repair(origin, target, space, dir, now),
+            Msg::RepairStop { space, dir } => {
+                // Our probe travelled `dir` and stopped at the node with
+                // the smallest remaining `dir`-arc to the target — which
+                // lies just *beyond* the target on the opposite side. A
+                // Ccw probe (fired when our NEXT died, paper Fig. 7) stops
+                // at the node clockwise of the target: our new NEXT.
+                let side = match dir {
+                    Dir::Ccw => Side::Next,
+                    Dir::Cw => Side::Prev,
+                };
+                self.maybe_adopt(space, side, from, now);
+                Vec::new()
+            }
+            Msg::ModelOffer { .. } | Msg::ModelRequest { .. } | Msg::ModelPayload { .. } => {
+                Vec::new() // MEP handled by the exchange layer
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(spaces: usize) -> OverlayConfig {
+        OverlayConfig {
+            spaces,
+            ..OverlayConfig::default()
+        }
+    }
+
+    #[test]
+    fn singleton_accepts_joiner() {
+        let mut a = NodeState::new(1, cfg(2), 0);
+        a.bootstrap_first();
+        let mut b = NodeState::new(2, cfg(2), 0);
+        let join_msgs = b.start_join(1, 0);
+        assert_eq!(join_msgs.len(), 2); // one discovery per space
+        let mut replies = Vec::new();
+        for m in join_msgs {
+            assert_eq!(m.to, 1);
+            replies.extend(a.handle(2, m.msg, 1));
+        }
+        // a adopted b in both spaces
+        assert_eq!(a.views[0].prev, Some(2));
+        assert_eq!(a.views[0].next, Some(2));
+        for r in replies {
+            assert_eq!(r.to, 2);
+            b.handle(1, r.msg, 2);
+        }
+        assert!(b.joined);
+        assert_eq!(b.views[0].prev, Some(1));
+        assert_eq!(b.views[0].next, Some(1));
+        assert_eq!(b.neighbor_ids().len(), 1);
+    }
+
+    #[test]
+    fn repair_stop_adopts_origin_side() {
+        let mut n = NodeState::new(5, cfg(1), 0);
+        n.bootstrap_first();
+        // a RepairStop from node 9 after our Ccw probe: a Ccw probe fires
+        // when our NEXT died, and stops at our new NEXT.
+        n.handle(9, Msg::RepairStop { space: 0, dir: Dir::Ccw }, 1);
+        assert_eq!(n.views[0].next, Some(9));
+        assert_eq!(n.views[0].prev, None);
+    }
+
+    #[test]
+    fn leave_rewires_sides() {
+        let mut n = NodeState::new(5, cfg(1), 0);
+        n.views[0].prev = Some(3);
+        n.views[0].next = Some(7);
+        n.track_peer(3, 0);
+        n.track_peer(7, 0);
+        // 7 leaves; we are 7's prev, so it tells us our NEXT becomes 9
+        n.handle(
+            7,
+            Msg::Leave {
+                space: 0,
+                side: Side::Next,
+                other: 9,
+            },
+            1,
+        );
+        assert_eq!(n.views[0].next, Some(9));
+        assert!(!n.neighbor_ids().contains(&7));
+    }
+
+    #[test]
+    fn counters_track_messages() {
+        let mut b = NodeState::new(2, cfg(3), 0);
+        b.start_join(1, 0);
+        assert_eq!(b.counters.control_sent, 3);
+        assert!(b.counters.control_bytes > 0);
+        assert_eq!(b.counters.data_sent, 0);
+    }
+
+    #[test]
+    fn tick_emits_heartbeats_and_detects_failure() {
+        let mut n = NodeState::new(1, cfg(1), 0);
+        n.bootstrap_first();
+        n.views[0].prev = Some(2);
+        n.views[0].next = Some(2);
+        n.track_peer(2, 0);
+        // first tick: heartbeat to 2
+        let out = n.tick(n.next_heartbeat);
+        assert!(out.iter().any(|o| o.to == 2 && o.msg == Msg::Heartbeat));
+        // long silence -> failure detection; with no other peers there is
+        // no repair hop, but 2 must be purged
+        let much_later = 1_000 * SEC_LIKE;
+        let _ = n.tick(much_later);
+        assert!(n.peers.is_empty());
+        assert_eq!(n.views[0].prev, None);
+    }
+
+    const SEC_LIKE: Time = 1_000_000;
+}

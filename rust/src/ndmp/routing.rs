@@ -1,0 +1,218 @@
+//! Greedy routing primitives (paper §III-B1 and §III-B3).
+//!
+//! * `greedy_next_hop` — circular-distance greedy step for
+//!   `Neighbor_discovery` (Lemma 1 / Theorem 1: at the node with the
+//!   minimal circular distance to the target, no neighbor is closer, so
+//!   routing stops exactly at the correct terminal).
+//! * `directional_next_hop` — the counterclockwise/clockwise arc-length
+//!   greedy step for `Neighbor_repair` (Theorem 2: the arc length strictly
+//!   decreases per hop, so the probe stops at the surviving adjacent).
+
+use super::messages::Dir;
+use crate::topology::coords::{ccw_arc, circular_distance, cw_arc, Coord, NodeId};
+
+/// Coordinate of `id` in `space` — everyone can compute it by hashing
+/// (paper §II-C: `x_i = H(IP | i)`), so coordinates never travel in
+/// messages.
+///
+/// Perf note (§Perf iteration 1): hashes exactly one `(id, space)` pair;
+/// an earlier version built the whole `VirtualCoords` vector (hashing
+/// spaces `0..=space`) on every routing decision, ~2.4× slower per hop.
+#[inline]
+pub fn coord_of(id: NodeId, space: u32) -> Coord {
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    h.update(id.to_be_bytes());
+    h.update(b"|");
+    h.update((space as u64).to_be_bytes());
+    let digest = h.finalize();
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&digest[..8]);
+    (u64::from_be_bytes(b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// One greedy step toward `target` coordinate in `space`.
+///
+/// `neighbors` yields candidate next hops. Returns `Some(w)` if some
+/// neighbor is strictly closer (by circular distance, ties to smaller id)
+/// than the current node `me`; `None` means `me` is the terminal.
+pub fn greedy_next_hop(
+    me: NodeId,
+    target: Coord,
+    space: u32,
+    neighbors: impl Iterator<Item = NodeId>,
+) -> Option<NodeId> {
+    let my_d = circular_distance(coord_of(me, space), target);
+    let mut best: Option<(f64, NodeId)> = None;
+    for w in neighbors {
+        let d = circular_distance(coord_of(w, space), target);
+        let better = match best {
+            None => true,
+            Some((bd, bid)) => d < bd || (d == bd && w < bid),
+        };
+        if better {
+            best = Some((d, w));
+        }
+    }
+    match best {
+        Some((d, w)) if d < my_d || (d == my_d && w < me) => Some(w),
+        _ => None,
+    }
+}
+
+/// Remaining arc length from `x` to `target` travelling in `dir`.
+#[inline]
+pub fn dir_arc(dir: Dir, x: Coord, target: Coord) -> f64 {
+    match dir {
+        Dir::Ccw => ccw_arc(x, target),
+        Dir::Cw => cw_arc(x, target),
+    }
+}
+
+/// One directional greedy step for repair probes: forward to the neighbor
+/// with the smallest remaining `dir`-arc to `target`, if strictly smaller
+/// than ours. `None` = the probe stops here.
+pub fn directional_next_hop(
+    me: NodeId,
+    target: Coord,
+    space: u32,
+    dir: Dir,
+    neighbors: impl Iterator<Item = NodeId>,
+) -> Option<NodeId> {
+    let my_a = dir_arc(dir, coord_of(me, space), target);
+    let mut best: Option<(f64, NodeId)> = None;
+    for w in neighbors {
+        let a = dir_arc(dir, coord_of(w, space), target);
+        let better = match best {
+            None => true,
+            Some((ba, bid)) => a < ba || (a == ba && w < bid),
+        };
+        if better {
+            best = Some((a, w));
+        }
+    }
+    match best {
+        Some((a, w)) if a < my_a => Some(w),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::fedlay::Membership;
+
+    /// Fully route a discovery greedily over a correct membership and
+    /// assert it terminates at the globally closest node (Theorem 1).
+    #[test]
+    fn greedy_routing_reaches_closest_node() {
+        let spaces = 3;
+        let m = Membership::dense(80, spaces);
+        for joiner in [1000u64, 2000, 3000, 4321] {
+            for space in 0..spaces as u32 {
+                let target = coord_of(joiner, space);
+                // start from an arbitrary node
+                let mut cur: NodeId = *m.nodes.keys().next().unwrap();
+                let mut hops = 0;
+                loop {
+                    let nbrs = m.correct_neighbors(cur);
+                    match greedy_next_hop(cur, target, space, nbrs.into_iter()) {
+                        Some(w) => {
+                            cur = w;
+                            hops += 1;
+                            assert!(hops < 100, "routing loop");
+                        }
+                        None => break,
+                    }
+                }
+                // terminal must be the global minimum circular distance
+                let best = m
+                    .nodes
+                    .keys()
+                    .copied()
+                    .min_by(|&a, &b| {
+                        circular_distance(coord_of(a, space), target)
+                            .partial_cmp(&circular_distance(coord_of(b, space), target))
+                            .unwrap()
+                            .then(a.cmp(&b))
+                    })
+                    .unwrap();
+                assert_eq!(cur, best, "joiner {joiner} space {space}");
+            }
+        }
+    }
+
+    /// Directional routing from one adjacent of a "failed" node must stop
+    /// at the other adjacent (Theorem 2).
+    #[test]
+    fn directional_routing_finds_other_adjacent() {
+        let spaces = 2;
+        let m = Membership::dense(60, spaces);
+        for space in 0..spaces as u32 {
+            let ring = m.ring(space as usize);
+            let n = ring.len();
+            for i in (0..n).step_by(7) {
+                let failed = ring[i].id;
+                let prev = ring[(i + n - 1) % n].id; // ccw adjacent
+                let next = ring[(i + 1) % n].id; // cw adjacent
+                // prev detects failure of its NEXT-side adjacent -> probe Ccw
+                let target = coord_of(failed, space);
+                let mut cur = prev;
+                let mut hops = 0;
+                loop {
+                    let nbrs: Vec<NodeId> = m
+                        .correct_neighbors(cur)
+                        .into_iter()
+                        .filter(|&x| x != failed)
+                        .collect();
+                    match directional_next_hop(cur, target, space, Dir::Ccw, nbrs.into_iter()) {
+                        Some(w) => {
+                            cur = w;
+                            hops += 1;
+                            assert!(hops < 200, "repair loop");
+                        }
+                        None => break,
+                    }
+                }
+                assert_eq!(cur, next, "space {space} failed {failed}");
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_hop_count_is_logarithmic_ish() {
+        // with L=3 spaces the shortcuts should keep hops well below n
+        let spaces = 3;
+        let m = Membership::dense(200, spaces);
+        let mut total = 0usize;
+        let mut count = 0usize;
+        for joiner in 5_000..5_020u64 {
+            let target = coord_of(joiner, 0);
+            let mut cur: NodeId = 7;
+            loop {
+                let nbrs = m.correct_neighbors(cur);
+                match greedy_next_hop(cur, target, 0, nbrs.into_iter()) {
+                    Some(w) => {
+                        cur = w;
+                        total += 1;
+                    }
+                    None => break,
+                }
+            }
+            count += 1;
+        }
+        let avg = total as f64 / count as f64;
+        assert!(avg < 25.0, "avg hops {avg} too high for n=200");
+    }
+
+    #[test]
+    fn coord_of_matches_virtual_coords() {
+        for id in [0u64, 5, 99] {
+            for s in 0..4u32 {
+                let via_fn = coord_of(id, s);
+                let via_struct = crate::topology::VirtualCoords::from_id(id, 8).get(s as usize);
+                assert_eq!(via_fn, via_struct);
+            }
+        }
+    }
+}

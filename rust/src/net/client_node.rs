@@ -1,0 +1,300 @@
+//! A full FedLay client over real TCP: the NDMP protocol engine plus the
+//! MEP offer/request/payload exchange and local training through the PJRT
+//! runtime — the paper's §IV-A1 "real experiment" node, 16 of which form
+//! the prototype (examples/prototype_16.rs).
+//!
+//! Each node runs in its own OS thread and owns a private `Engine` (the
+//! PJRT client is not `Send`); all inter-node communication is real TCP
+//! via `net::wire` frames. Wall-clock time drives NDMP timers and MEP
+//! periods, exactly like a deployment.
+
+use super::peer::{addr_of, PeerPool};
+use super::server::Listener;
+use crate::config::OverlayConfig;
+use crate::data::GaussianTask;
+use crate::mep::{fingerprint, pack_for_artifact, ConfidenceParams};
+use crate::ndmp::messages::{Msg, Time};
+use crate::ndmp::node::NodeState;
+use crate::runtime::{Engine, XInput};
+use crate::topology::NodeId;
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct ClientNodeConfig {
+    pub id: NodeId,
+    pub base_port: u16,
+    /// `None` = bootstrap node (first in the network).
+    pub bootstrap: Option<NodeId>,
+    pub overlay: OverlayConfig,
+    pub artifacts_dir: std::path::PathBuf,
+    pub task: String,
+    pub label_weights: Vec<f64>,
+    pub lr: f32,
+    pub local_steps: usize,
+    /// MEP communication period (wall-clock ms; scaled-down prototype).
+    pub period_ms: u64,
+    pub seed: u64,
+}
+
+/// Final report returned when a node shuts down.
+#[derive(Debug, Clone)]
+pub struct ClientReport {
+    pub id: NodeId,
+    pub accuracy: f64,
+    pub loss: f64,
+    pub neighbor_count: usize,
+    pub control_sent: u64,
+    pub data_sent: u64,
+    pub model_bytes_sent: u64,
+    pub dedup_skips: u64,
+    pub joined: bool,
+}
+
+struct NeighborModel {
+    version: u64,
+    confidence: f32,
+    params: Vec<f32>,
+}
+
+pub struct ClientHandle {
+    pub id: NodeId,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<Result<ClientReport>>>,
+}
+
+impl ClientHandle {
+    pub fn stop_and_join(mut self) -> Result<ClientReport> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.thread
+            .take()
+            .expect("already joined")
+            .join()
+            .map_err(|_| anyhow::anyhow!("client thread panicked"))?
+    }
+}
+
+/// Spawn a client node thread. It binds its listener synchronously (so
+/// callers can order bootstrap before joiners) and then runs until
+/// `stop_and_join`.
+pub fn spawn(cfg: ClientNodeConfig) -> Result<ClientHandle> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    // Bind before returning so the caller knows the port is live.
+    let listener = Listener::start(addr_of(cfg.base_port, cfg.id))?;
+    let id = cfg.id;
+    // The PJRT engine compiles in the node thread (it is not Send); block
+    // until it is ready so callers measure *protocol* time, not XLA
+    // compile time, and a bootstrap node is live before joiners start.
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let thread = std::thread::Builder::new()
+        .name(format!("fedlay-node-{id}"))
+        .spawn(move || run_node(cfg, listener, stop2, ready_tx))?;
+    let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
+    Ok(ClientHandle {
+        id,
+        stop,
+        thread: Some(thread),
+    })
+}
+
+fn run_node(
+    cfg: ClientNodeConfig,
+    mut listener: Listener,
+    stop: Arc<AtomicBool>,
+    ready_tx: std::sync::mpsc::Sender<()>,
+) -> Result<ClientReport> {
+    let engine = Engine::load(&cfg.artifacts_dir, &[&cfg.task])?;
+    let _ = ready_tx.send(());
+    let info = engine.manifest.task(&cfg.task)?.clone();
+    let k_max = engine.manifest.k_max;
+    let pool = PeerPool::new(cfg.base_port, cfg.id);
+    let start = Instant::now();
+    let now_us = || start.elapsed().as_micros() as Time;
+
+    // --- NDMP state ---
+    let mut ndmp = NodeState::new(cfg.id, cfg.overlay.clone(), 0);
+    match cfg.bootstrap {
+        None => ndmp.bootstrap_first(),
+        Some(b) => {
+            for o in ndmp.start_join(b, now_us()) {
+                pool.send(o.to, &o.msg);
+            }
+        }
+    }
+
+    // --- MEP / training state ---
+    let task = GaussianTask::mnist_like(cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ cfg.id);
+    // shared initialization across the fleet (see dfl::trainer)
+    let mut params = engine.init(&cfg.task, [cfg.seed as u32, 0])?;
+    let mut version: u64 = 0;
+    let hist = crate::data::expected_histogram(&cfg.label_weights, 10_000);
+    let c_d = (-crate::data::kl_divergence_vs_uniform(&hist)).exp();
+    let c_c = 1.0 / cfg.period_ms as f64;
+    let my_conf = (0.5 * c_d + 0.5 * c_c * cfg.period_ms as f64) as f32; // normalized-ish
+    let conf_params = ConfidenceParams::default();
+    let mut neighbor_models: HashMap<NodeId, NeighborModel> = HashMap::new();
+    let mut offered_fp: HashMap<NodeId, u64> = HashMap::new();
+    let mut model_bytes_sent = 0u64;
+    let mut dedup_skips = 0u64;
+    let mut mep_sent = 0u64;
+    let mut next_exchange = Duration::from_millis(cfg.period_ms / 2 + (cfg.id % 7) * 50);
+
+    while !stop.load(Ordering::SeqCst) {
+        // 1. drain inbound frames
+        while let Ok((from, msg)) = listener.rx.try_recv() {
+            if std::env::var("FEDLAY_NET_DEBUG").is_ok() {
+                eprintln!("[node {}] recv from {} : {:?}", cfg.id, from, &msg);
+            }
+            match &msg {
+                Msg::ModelOffer {
+                    fingerprint: fp,
+                    confidence: _,
+                    version: v,
+                } => {
+                    let known = neighbor_models
+                        .get(&from)
+                        .map(|m| fingerprint(&m.params) == *fp)
+                        .unwrap_or(false);
+                    if known {
+                        dedup_skips += 1;
+                    } else {
+                        mep_sent += 1;
+                        pool.send(from, &Msg::ModelRequest { version: *v });
+                    }
+                }
+                Msg::ModelRequest { .. } => {
+                    mep_sent += 1;
+                    pool.send(
+                        from,
+                        &Msg::ModelPayload {
+                            version,
+                            confidence: my_conf,
+                            params: params.clone(),
+                        },
+                    );
+                    model_bytes_sent += (params.len() * 4) as u64;
+                }
+                Msg::ModelPayload {
+                    version: v,
+                    confidence,
+                    params: p,
+                } => {
+                    neighbor_models.insert(
+                        from,
+                        NeighborModel {
+                            version: *v,
+                            confidence: *confidence,
+                            params: p.clone(),
+                        },
+                    );
+                }
+                _ => {
+                    for o in ndmp.handle(from, msg.clone(), now_us()) {
+                        pool.send(o.to, &o.msg);
+                    }
+                }
+            }
+        }
+        // 2. NDMP timers
+        for o in ndmp.tick(now_us()) {
+            pool.send(o.to, &o.msg);
+        }
+        // 3. MEP period: train, offer, aggregate
+        if start.elapsed() >= next_exchange {
+            next_exchange += Duration::from_millis(cfg.period_ms);
+            // local training
+            for _ in 0..cfg.local_steps {
+                let batch = task.batch(info.batch, &cfg.label_weights, &mut rng);
+                let (new, _) = engine.train_step(
+                    &cfg.task,
+                    &params,
+                    &XInput::F32(&batch.x),
+                    &batch.y,
+                    cfg.lr,
+                )?;
+                params = new;
+            }
+            version += 1;
+            // offer to all overlay neighbors (fingerprint-first, §III-C3)
+            let fp = fingerprint(&params);
+            for n in ndmp.neighbor_ids() {
+                if offered_fp.get(&n) == Some(&fp) {
+                    dedup_skips += 1;
+                    continue;
+                }
+                offered_fp.insert(n, fp);
+                mep_sent += 1;
+                pool.send(
+                    n,
+                    &Msg::ModelOffer {
+                        fingerprint: fp,
+                        confidence: my_conf,
+                        version,
+                    },
+                );
+            }
+            // aggregate own + received neighbor models (MEP §III-C2)
+            if !neighbor_models.is_empty() {
+                let hood: Vec<(f64, f64)> = std::iter::once((c_d, c_c))
+                    .chain(
+                        neighbor_models
+                            .values()
+                            .map(|m| (m.confidence as f64, c_c)),
+                    )
+                    .collect();
+                let weights: Vec<f64> = hood
+                    .iter()
+                    .map(|&own| conf_params.combine(own, &hood))
+                    .collect();
+                let models: Vec<&[f32]> = std::iter::once(params.as_slice())
+                    .chain(neighbor_models.values().map(|m| m.params.as_slice()))
+                    .collect();
+                let new = if models.len() <= k_max {
+                    let (stack, w) = pack_for_artifact(&models, &weights, k_max);
+                    engine.aggregate(&cfg.task, &stack, &w)?
+                } else {
+                    crate::mep::aggregate_cpu(&models, &weights)
+                };
+                params = new;
+                version += 1;
+            }
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // final evaluation on the shared iid test set
+    let mut correct = 0.0;
+    let mut loss = 0.0;
+    let evals = 2;
+    for e in 0..evals {
+        let b = task.test_batch(info.batch, cfg.seed ^ (0xE0 + e));
+        let (c, l) = engine.eval_step(&cfg.task, &params, &XInput::F32(&b.x), &b.y)?;
+        correct += c as f64;
+        loss += l as f64;
+    }
+    listener.shutdown();
+    pool.disconnect_all();
+    let _ = neighbor_models
+        .values()
+        .map(|m| m.version)
+        .max();
+    Ok(ClientReport {
+        id: cfg.id,
+        accuracy: correct / (evals as usize * info.batch) as f64,
+        loss: loss / evals as f64,
+        neighbor_count: ndmp.neighbor_ids().len(),
+        control_sent: ndmp.counters.control_sent
+            + ndmp.counters.repair_sent
+            + ndmp.counters.heartbeats_sent,
+        data_sent: mep_sent,
+        model_bytes_sent,
+        dedup_skips,
+        joined: ndmp.joined,
+    })
+}

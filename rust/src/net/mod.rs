@@ -1,0 +1,12 @@
+//! Real TCP transport (the paper's prototype path, §IV-A1 type 1): wire
+//! codec, connection pool, listener, and the full TCP client node driving
+//! the same NDMP/MEP protocol engines as the simulator.
+
+pub mod client_node;
+pub mod peer;
+pub mod server;
+pub mod wire;
+
+pub use client_node::{spawn, ClientHandle, ClientNodeConfig, ClientReport};
+pub use peer::{addr_of, PeerPool};
+pub use server::Listener;

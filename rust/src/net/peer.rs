@@ -1,0 +1,104 @@
+//! Outbound connection management: a cache of TCP streams to peers,
+//! reconnecting on demand. In the localhost prototype a node's address is
+//! derived from its id (`127.0.0.1:base_port + id`), mirroring the paper's
+//! use of the IP address as the node identity.
+
+use super::wire;
+use crate::ndmp::messages::Msg;
+use crate::topology::NodeId;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// id -> socket address mapping for the localhost prototype.
+pub fn addr_of(base_port: u16, id: NodeId) -> SocketAddr {
+    SocketAddr::from(([127, 0, 0, 1], base_port + id as u16))
+}
+
+pub struct PeerPool {
+    pub base_port: u16,
+    pub self_id: NodeId,
+    conns: Mutex<HashMap<NodeId, TcpStream>>,
+    /// send failures (dead peers are detected by NDMP heartbeats, not here)
+    pub send_errors: std::sync::atomic::AtomicU64,
+}
+
+impl PeerPool {
+    pub fn new(base_port: u16, self_id: NodeId) -> Self {
+        Self {
+            base_port,
+            self_id,
+            conns: Mutex::new(HashMap::new()),
+            send_errors: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn connect(&self, to: NodeId) -> Result<TcpStream> {
+        let addr = addr_of(self.base_port, to);
+        let s = TcpStream::connect_timeout(&addr, Duration::from_millis(1_000))?;
+        s.set_nodelay(true)?;
+        // Bounded writes: two peers simultaneously pushing large model
+        // payloads into full kernel buffers must not deadlock; a timed-out
+        // send is dropped and the connection rebuilt on the next message.
+        s.set_write_timeout(Some(Duration::from_millis(2_000)))?;
+        Ok(s)
+    }
+
+    /// Send a message, reconnecting once on a stale cached connection.
+    /// Failures are counted but not fatal (crash-fail peers are expected).
+    pub fn send(&self, to: NodeId, msg: &Msg) {
+        let mut conns = self.conns.lock().unwrap();
+        // try the cached stream first
+        if let Some(stream) = conns.get_mut(&to) {
+            if wire::write_frame(stream, self.self_id, msg).is_ok() {
+                return;
+            }
+            conns.remove(&to);
+        }
+        match self.connect(to) {
+            Ok(mut stream) => {
+                if wire::write_frame(&mut stream, self.self_id, msg).is_ok() {
+                    conns.insert(to, stream);
+                } else {
+                    self.send_errors
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                if std::env::var("FEDLAY_NET_DEBUG").is_ok() {
+                    eprintln!("[pool {}] connect to {to} failed: {e}", self.self_id);
+                }
+                self.send_errors
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn disconnect_all(&self) {
+        self.conns.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_mapping() {
+        let a = addr_of(9000, 5);
+        assert_eq!(a.port(), 9005);
+        assert!(a.ip().is_loopback());
+    }
+
+    #[test]
+    fn send_to_dead_peer_counts_error() {
+        let pool = PeerPool::new(1, 0); // port 1+id: nothing listens there
+        pool.send(7, &Msg::Heartbeat);
+        assert_eq!(
+            pool.send_errors.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+}

@@ -1,0 +1,123 @@
+//! Inbound TCP listener: accepts peer connections and pumps decoded
+//! frames into an mpsc channel consumed by the node's protocol loop.
+
+use super::wire;
+use crate::ndmp::messages::Msg;
+use crate::topology::NodeId;
+use anyhow::Result;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+pub struct Listener {
+    pub addr: SocketAddr,
+    pub rx: Receiver<(NodeId, Msg)>,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Listener {
+    /// Bind and start accepting. Each connection gets a reader thread that
+    /// decodes frames until EOF/error.
+    pub fn start(addr: SocketAddr) -> Result<Listener> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let (tx, rx) = channel::<(NodeId, Msg)>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            accept_loop(listener, tx, stop2);
+        });
+        Ok(Listener {
+            addr: local,
+            rx,
+            stop,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: Sender<(NodeId, Msg)>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let tx = tx.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut stream = stream;
+                    let _ = stream.set_nodelay(true);
+                    // Blocking reads: a mid-frame timeout would desync the
+                    // framing (model payloads span many segments), so the
+                    // reader blocks until a full frame, EOF, or a decode
+                    // error. Peers closing their connections at shutdown
+                    // unblocks the thread.
+                    loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        match wire::read_frame(&mut stream) {
+                            Ok(pair) => {
+                                if tx.send(pair).is_err() {
+                                    break;
+                                }
+                            }
+                            Err(_) => break, // EOF or corrupt frame
+                        }
+                    }
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::peer::PeerPool;
+
+    #[test]
+    fn frames_flow_end_to_end() {
+        // bind on an OS-assigned port
+        let mut l = Listener::start(SocketAddr::from(([127, 0, 0, 1], 0))).unwrap();
+        let port = l.addr.port();
+        // a PeerPool whose addr_of(base_port, id) hits our listener: use
+        // base_port = port - id with id = 0
+        let pool = PeerPool::new(port, 9);
+        pool.send(0, &Msg::Heartbeat);
+        pool.send(
+            0,
+            &Msg::ModelOffer {
+                fingerprint: 123,
+                confidence: 0.5,
+                version: 7,
+            },
+        );
+        let (from1, m1) = l.rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let (from2, m2) = l.rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(from1, 9);
+        assert_eq!(m1, Msg::Heartbeat);
+        assert_eq!(from2, 9);
+        assert!(matches!(m2, Msg::ModelOffer { fingerprint: 123, .. }));
+        l.shutdown();
+    }
+}

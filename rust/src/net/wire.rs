@@ -1,0 +1,382 @@
+//! Wire codec for NDMP/MEP messages over TCP.
+//!
+//! Frame format (all integers big-endian):
+//!
+//! ```text
+//! [0xFD magic u8][sender u64][type u8][len u32][payload ...]
+//! ```
+//!
+//! The payload layout per message type mirrors `Msg`'s fields in order.
+//! Coordinates never travel (they are hash-derived from node ids).
+
+use crate::ndmp::messages::{Dir, Msg, Side};
+use crate::topology::NodeId;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+pub const MAGIC: u8 = 0xFD;
+
+const T_DISCOVERY: u8 = 1;
+const T_DISCOVERY_RESULT: u8 = 2;
+const T_ADJ_UPDATE: u8 = 3;
+const T_LEAVE: u8 = 4;
+const T_HEARTBEAT: u8 = 5;
+const T_REPAIR: u8 = 6;
+const T_REPAIR_STOP: u8 = 7;
+const T_MODEL_OFFER: u8 = 8;
+const T_MODEL_REQUEST: u8 = 9;
+const T_MODEL_PAYLOAD: u8 = 10;
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+    fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_be_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated payload");
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn side_byte(s: Side) -> u8 {
+    match s {
+        Side::Prev => 0,
+        Side::Next => 1,
+    }
+}
+
+fn byte_side(b: u8) -> Result<Side> {
+    match b {
+        0 => Ok(Side::Prev),
+        1 => Ok(Side::Next),
+        _ => bail!("bad side byte {b}"),
+    }
+}
+
+fn dir_byte(d: Dir) -> u8 {
+    match d {
+        Dir::Ccw => 0,
+        Dir::Cw => 1,
+    }
+}
+
+fn byte_dir(b: u8) -> Result<Dir> {
+    match b {
+        0 => Ok(Dir::Ccw),
+        1 => Ok(Dir::Cw),
+        _ => bail!("bad dir byte {b}"),
+    }
+}
+
+/// Serialize one message into a framed byte vector.
+pub fn encode(sender: NodeId, msg: &Msg) -> Vec<u8> {
+    let mut w = Writer::new();
+    let ty = match msg {
+        Msg::NeighborDiscovery { joiner, space } => {
+            w.u64(*joiner);
+            w.u32(*space);
+            T_DISCOVERY
+        }
+        Msg::DiscoveryResult { space, prev, next } => {
+            w.u32(*space);
+            w.u64(*prev);
+            w.u64(*next);
+            T_DISCOVERY_RESULT
+        }
+        Msg::AdjacentUpdate { space, side, node } => {
+            w.u32(*space);
+            w.u8(side_byte(*side));
+            w.u64(*node);
+            T_ADJ_UPDATE
+        }
+        Msg::Leave { space, side, other } => {
+            w.u32(*space);
+            w.u8(side_byte(*side));
+            w.u64(*other);
+            T_LEAVE
+        }
+        Msg::Heartbeat => T_HEARTBEAT,
+        Msg::NeighborRepair {
+            origin,
+            target,
+            space,
+            dir,
+        } => {
+            w.u64(*origin);
+            w.u64(*target);
+            w.u32(*space);
+            w.u8(dir_byte(*dir));
+            T_REPAIR
+        }
+        Msg::RepairStop { space, dir } => {
+            w.u32(*space);
+            w.u8(dir_byte(*dir));
+            T_REPAIR_STOP
+        }
+        Msg::ModelOffer {
+            fingerprint,
+            confidence,
+            version,
+        } => {
+            w.u64(*fingerprint);
+            w.f32(*confidence);
+            w.u64(*version);
+            T_MODEL_OFFER
+        }
+        Msg::ModelRequest { version } => {
+            w.u64(*version);
+            T_MODEL_REQUEST
+        }
+        Msg::ModelPayload {
+            version,
+            confidence,
+            params,
+        } => {
+            w.u64(*version);
+            w.f32(*confidence);
+            w.u32(params.len() as u32);
+            for p in params {
+                w.f32(*p);
+            }
+            T_MODEL_PAYLOAD
+        }
+    };
+    let payload = w.buf;
+    let mut frame = Vec::with_capacity(14 + payload.len());
+    frame.push(MAGIC);
+    frame.extend_from_slice(&sender.to_be_bytes());
+    frame.push(ty);
+    frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Decode one payload given its type byte.
+fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
+    let mut r = Reader::new(payload);
+    let msg = match ty {
+        T_DISCOVERY => Msg::NeighborDiscovery {
+            joiner: r.u64()?,
+            space: r.u32()?,
+        },
+        T_DISCOVERY_RESULT => Msg::DiscoveryResult {
+            space: r.u32()?,
+            prev: r.u64()?,
+            next: r.u64()?,
+        },
+        T_ADJ_UPDATE => Msg::AdjacentUpdate {
+            space: r.u32()?,
+            side: byte_side(r.u8()?)?,
+            node: r.u64()?,
+        },
+        T_LEAVE => Msg::Leave {
+            space: r.u32()?,
+            side: byte_side(r.u8()?)?,
+            other: r.u64()?,
+        },
+        T_HEARTBEAT => Msg::Heartbeat,
+        T_REPAIR => Msg::NeighborRepair {
+            origin: r.u64()?,
+            target: r.u64()?,
+            space: r.u32()?,
+            dir: byte_dir(r.u8()?)?,
+        },
+        T_REPAIR_STOP => Msg::RepairStop {
+            space: r.u32()?,
+            dir: byte_dir(r.u8()?)?,
+        },
+        T_MODEL_OFFER => Msg::ModelOffer {
+            fingerprint: r.u64()?,
+            confidence: r.f32()?,
+            version: r.u64()?,
+        },
+        T_MODEL_REQUEST => Msg::ModelRequest { version: r.u64()? },
+        T_MODEL_PAYLOAD => {
+            let version = r.u64()?;
+            let confidence = r.f32()?;
+            let n = r.u32()? as usize;
+            let mut params = Vec::with_capacity(n);
+            for _ in 0..n {
+                params.push(r.f32()?);
+            }
+            Msg::ModelPayload {
+                version,
+                confidence,
+                params,
+            }
+        }
+        _ => bail!("unknown message type {ty}"),
+    };
+    if !r.done() {
+        bail!("trailing bytes in payload of type {ty}");
+    }
+    Ok(msg)
+}
+
+/// Read one frame from a stream. Returns `(sender, msg)`.
+pub fn read_frame(stream: &mut impl Read) -> Result<(NodeId, Msg)> {
+    let mut head = [0u8; 14];
+    stream.read_exact(&mut head).context("reading frame head")?;
+    if head[0] != MAGIC {
+        bail!("bad magic byte {:#x}", head[0]);
+    }
+    let sender = u64::from_be_bytes(head[1..9].try_into().unwrap());
+    let ty = head[9];
+    let len = u32::from_be_bytes(head[10..14].try_into().unwrap()) as usize;
+    if len > 512 * 1024 * 1024 {
+        bail!("frame too large: {len}");
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload).context("reading payload")?;
+    Ok((sender, decode_payload(ty, &payload)?))
+}
+
+/// Write one frame to a stream.
+pub fn write_frame(stream: &mut impl Write, sender: NodeId, msg: &Msg) -> Result<()> {
+    let frame = encode(sender, msg);
+    stream.write_all(&frame).context("writing frame")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: Msg) {
+        let frame = encode(42, &msg);
+        let mut cursor = std::io::Cursor::new(frame);
+        let (sender, got) = read_frame(&mut cursor).unwrap();
+        assert_eq!(sender, 42);
+        assert_eq!(got, msg);
+    }
+
+    #[test]
+    fn roundtrip_all_variants() {
+        roundtrip(Msg::NeighborDiscovery { joiner: 7, space: 2 });
+        roundtrip(Msg::DiscoveryResult {
+            space: 1,
+            prev: 3,
+            next: 9,
+        });
+        roundtrip(Msg::AdjacentUpdate {
+            space: 0,
+            side: Side::Next,
+            node: 5,
+        });
+        roundtrip(Msg::Leave {
+            space: 3,
+            side: Side::Prev,
+            other: 11,
+        });
+        roundtrip(Msg::Heartbeat);
+        roundtrip(Msg::NeighborRepair {
+            origin: 1,
+            target: 2,
+            space: 4,
+            dir: Dir::Cw,
+        });
+        roundtrip(Msg::RepairStop {
+            space: 2,
+            dir: Dir::Ccw,
+        });
+        roundtrip(Msg::ModelOffer {
+            fingerprint: 0xDEAD_BEEF,
+            confidence: 0.75,
+            version: 9,
+        });
+        roundtrip(Msg::ModelRequest { version: 4 });
+        roundtrip(Msg::ModelPayload {
+            version: 8,
+            confidence: 0.5,
+            params: vec![1.0, -2.5, 3.25],
+        });
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut frame = encode(1, &Msg::Heartbeat);
+        frame[0] = 0x00;
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let frame = encode(1, &Msg::ModelRequest { version: 2 });
+        let mut cursor = std::io::Cursor::new(&frame[..frame.len() - 2]);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_type() {
+        let mut frame = encode(1, &Msg::Heartbeat);
+        frame[9] = 99;
+        let mut cursor = std::io::Cursor::new(frame);
+        assert!(read_frame(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn wire_size_estimate_close() {
+        for msg in [
+            Msg::Heartbeat,
+            Msg::NeighborDiscovery { joiner: 1, space: 0 },
+            Msg::ModelPayload {
+                version: 1,
+                confidence: 1.0,
+                params: vec![0.0; 100],
+            },
+        ] {
+            let actual = encode(1, &msg).len();
+            let estimate = msg.wire_size() + 9; // estimate excludes sender id
+            assert!(
+                (actual as i64 - estimate as i64).abs() <= 8,
+                "{msg:?}: actual {actual} vs estimate {estimate}"
+            );
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! AOT artifact manifest: parses `artifacts/manifest.txt` (written by
+//! `python/compile/aot.py`) into a typed registry of tasks and HLO files.
+
+use crate::config::toml::Doc;
+use std::path::{Path, PathBuf};
+
+/// Static description of one model task (mirrors `model.TaskSpec`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskInfo {
+    pub name: String,
+    pub param_count: usize,
+    pub batch: usize,
+    /// Per-example feature length (f32 dims or int32 sequence length).
+    pub x_len: usize,
+    /// "f32" or "i32".
+    pub x_dtype: String,
+    pub classes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub k_max: usize,
+    pub tasks: Vec<TaskInfo>,
+    doc: Doc,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let doc = Doc::parse_file(&path)?;
+        let k_max = doc
+            .int("k_max")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing k_max"))? as usize;
+        let names: Vec<String> = doc
+            .str("tasks")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing tasks"))?
+            .split(',')
+            .map(|s| s.to_string())
+            .collect();
+        let mut tasks = Vec::new();
+        for name in names {
+            let get = |k: &str| -> anyhow::Result<i64> {
+                doc.int(&format!("task.{name}.{k}"))
+                    .ok_or_else(|| anyhow::anyhow!("manifest missing task.{name}.{k}"))
+            };
+            tasks.push(TaskInfo {
+                param_count: get("param_count")? as usize,
+                batch: get("batch")? as usize,
+                x_len: get("x_len")? as usize,
+                x_dtype: doc
+                    .str(&format!("task.{name}.x_dtype"))
+                    .unwrap_or("f32")
+                    .to_string(),
+                classes: get("classes")? as usize,
+                name,
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            k_max,
+            tasks,
+            doc,
+        })
+    }
+
+    pub fn task(&self, name: &str) -> anyhow::Result<&TaskInfo> {
+        self.tasks
+            .iter()
+            .find(|t| t.name == name)
+            .ok_or_else(|| anyhow::anyhow!("task {name:?} not in manifest"))
+    }
+
+    /// Path of the HLO artifact for `task`/`kind` (kind ∈ init/train/eval/agg).
+    pub fn hlo_path(&self, task: &str, kind: &str) -> anyhow::Result<PathBuf> {
+        let key = format!("artifact.{task}.{kind}");
+        let file = self
+            .doc
+            .str(&key)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing {key}"))?;
+        Ok(self.dir.join(file))
+    }
+}
+
+/// Locate the artifacts directory: explicit arg > $FEDLAY_ARTIFACTS >
+/// ./artifacts (walking up from cwd for tests running in target/).
+pub fn find_artifacts_dir(explicit: Option<&Path>) -> anyhow::Result<PathBuf> {
+    if let Some(p) = explicit {
+        anyhow::ensure!(p.join("manifest.txt").exists(), "no manifest in {}", p.display());
+        return Ok(p.to_path_buf());
+    }
+    if let Ok(env) = std::env::var("FEDLAY_ARTIFACTS") {
+        let p = PathBuf::from(env);
+        anyhow::ensure!(p.join("manifest.txt").exists(), "no manifest in {}", p.display());
+        return Ok(p);
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.txt not found — run `make artifacts` first"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<PathBuf> {
+        find_artifacts_dir(None).ok()
+    }
+
+    #[test]
+    fn manifest_parses_if_built() {
+        let Some(dir) = repo_artifacts() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.k_max >= 2);
+        assert!(!m.tasks.is_empty());
+        let mlp = m.task("mlp").unwrap();
+        assert_eq!(mlp.x_len, 784);
+        assert_eq!(mlp.classes, 10);
+        assert!(mlp.param_count > 100_000);
+        for kind in ["init", "train", "eval", "agg"] {
+            let p = m.hlo_path("mlp", kind).unwrap();
+            assert!(p.exists(), "{} missing", p.display());
+        }
+        assert!(m.task("nope").is_err());
+        assert!(m.hlo_path("mlp", "nope").is_err());
+    }
+}

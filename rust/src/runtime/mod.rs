@@ -1,0 +1,8 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes them from the Rust hot path.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{find_artifacts_dir, Manifest, TaskInfo};
+pub use pjrt::{Engine, XInput};

@@ -1,0 +1,181 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
+//! on the CPU PJRT client from the Rust hot path (no Python at runtime).
+//!
+//! Wire format notes (see /opt/xla-example/README.md):
+//! * artifacts are HLO **text**; `HloModuleProto::from_text_file`
+//!   reassigns instruction ids, avoiding the 64-bit-id proto rejection;
+//! * every entry computation returns a tuple (`return_tuple=True` at
+//!   lowering), so results are unwrapped with `to_tupleN`.
+
+use super::artifacts::{Manifest, TaskInfo};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// One task's compiled executables.
+pub struct TaskExecutables {
+    pub info: TaskInfo,
+    init: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+    agg: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime engine: one PJRT client + compiled executables per task.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    tasks: HashMap<String, TaskExecutables>,
+    /// Execution counters for telemetry / benches.
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl Engine {
+    /// Load and compile the artifacts of `task_names` (compiling all tasks
+    /// costs startup time; benches load only what they use).
+    pub fn load(artifacts_dir: &Path, task_names: &[&str]) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut tasks = HashMap::new();
+        for &name in task_names {
+            let info = manifest.task(name)?.clone();
+            let load = |kind: &str| -> Result<xla::PjRtLoadedExecutable> {
+                compile(&client, &manifest.hlo_path(name, kind)?)
+            };
+            tasks.insert(
+                name.to_string(),
+                TaskExecutables {
+                    init: load("init")?,
+                    train: load("train")?,
+                    eval: load("eval")?,
+                    agg: load("agg")?,
+                    info,
+                },
+            );
+        }
+        Ok(Engine {
+            client,
+            manifest,
+            tasks,
+            exec_count: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskExecutables> {
+        self.tasks
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("task {name:?} not loaded"))
+    }
+
+    fn bump(&self) {
+        self.exec_count.set(self.exec_count.get() + 1);
+    }
+
+    /// Initialize a flat parameter vector from a 2-word seed.
+    pub fn init(&self, task: &str, seed: [u32; 2]) -> Result<Vec<f32>> {
+        let t = self.task(task)?;
+        let seed_lit = xla::Literal::vec1(&seed);
+        self.bump();
+        let result = t.init.execute::<xla::Literal>(&[seed_lit])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(result.to_vec::<f32>()?)
+    }
+
+    /// One local SGD step: returns (new_params, loss).
+    pub fn train_step(
+        &self,
+        task: &str,
+        params: &[f32],
+        x: &XInput,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let t = self.task(task)?;
+        let b = t.info.batch as i64;
+        let d = t.info.x_len as i64;
+        anyhow::ensure!(params.len() == t.info.param_count, "param length mismatch");
+        anyhow::ensure!(y.len() == t.info.batch, "label batch mismatch");
+        let p_lit = xla::Literal::vec1(params);
+        let x_lit = x.to_literal(b, d)?;
+        let y_lit = xla::Literal::vec1(y);
+        let lr_lit = xla::Literal::scalar(lr);
+        self.bump();
+        let out = t.train.execute::<xla::Literal>(&[p_lit, x_lit, y_lit, lr_lit])?[0][0]
+            .to_literal_sync()?;
+        let (new_params, loss) = out.to_tuple2()?;
+        Ok((
+            new_params.to_vec::<f32>()?,
+            loss.to_vec::<f32>()?.first().copied().unwrap_or(f32::NAN),
+        ))
+    }
+
+    /// Evaluate a batch: returns (correct_count, loss).
+    pub fn eval_step(&self, task: &str, params: &[f32], x: &XInput, y: &[i32]) -> Result<(f32, f32)> {
+        let t = self.task(task)?;
+        let b = t.info.batch as i64;
+        let d = t.info.x_len as i64;
+        let p_lit = xla::Literal::vec1(params);
+        let x_lit = x.to_literal(b, d)?;
+        let y_lit = xla::Literal::vec1(y);
+        self.bump();
+        let out = t.eval.execute::<xla::Literal>(&[p_lit, x_lit, y_lit])?[0][0]
+            .to_literal_sync()?;
+        let (correct, loss) = out.to_tuple2()?;
+        Ok((
+            correct.to_vec::<f32>()?.first().copied().unwrap_or(0.0),
+            loss.to_vec::<f32>()?.first().copied().unwrap_or(f32::NAN),
+        ))
+    }
+
+    /// Confidence-weighted aggregation via the L1 Pallas kernel artifact.
+    /// `stack` is `[K_MAX * P]` row-major, `weights` is `[K_MAX]` — use
+    /// `mep::pack_for_artifact` to build them.
+    pub fn aggregate(&self, task: &str, stack: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        let t = self.task(task)?;
+        let k = self.manifest.k_max as i64;
+        let p = t.info.param_count as i64;
+        anyhow::ensure!(stack.len() as i64 == k * p, "stack shape mismatch");
+        anyhow::ensure!(weights.len() as i64 == k, "weights shape mismatch");
+        let s_lit = xla::Literal::vec1(stack).reshape(&[k, p])?;
+        let w_lit = xla::Literal::vec1(weights);
+        self.bump();
+        let out = t.agg.execute::<xla::Literal>(&[s_lit, w_lit])?[0][0]
+            .to_literal_sync()?
+            .to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Model input batch: f32 features or i32 token windows.
+pub enum XInput<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl XInput<'_> {
+    fn to_literal(&self, b: i64, d: i64) -> Result<xla::Literal> {
+        let lit = match self {
+            XInput::F32(x) => {
+                anyhow::ensure!(x.len() as i64 == b * d, "x shape mismatch");
+                xla::Literal::vec1(*x).reshape(&[b, d])?
+            }
+            XInput::I32(x) => {
+                anyhow::ensure!(x.len() as i64 == b * d, "x shape mismatch");
+                xla::Literal::vec1(*x).reshape(&[b, d])?
+            }
+        };
+        Ok(lit)
+    }
+}

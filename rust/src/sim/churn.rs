@@ -1,0 +1,126 @@
+//! Churn scenario builders for the paper's resilience experiments:
+//! mass joins (Fig. 8a), mass failures (Fig. 8b), and mixed churn.
+
+use super::runner::Simulator;
+use crate::ndmp::messages::{Time, MS};
+use crate::topology::NodeId;
+use crate::util::Rng;
+
+/// Paper Fig. 8a: `joiners` new clients join an `initial`-node network at
+/// the same instant (`at`), each through a random existing node.
+pub fn mass_join(sim: &mut Simulator, initial: usize, joiners: usize, at: Time, seed: u64) {
+    let ids: Vec<NodeId> = (0..initial as NodeId).collect();
+    sim.bootstrap_correct(&ids);
+    let mut rng = Rng::new(seed ^ 0x101B);
+    for j in 0..joiners as NodeId {
+        let bootstrap = ids[rng.index(ids.len())];
+        sim.schedule_join(at, initial as NodeId + j, bootstrap);
+    }
+}
+
+/// Paper Fig. 8b: `failures` random clients crash-fail simultaneously.
+pub fn mass_fail(sim: &mut Simulator, initial: usize, failures: usize, at: Time, seed: u64) {
+    let ids: Vec<NodeId> = (0..initial as NodeId).collect();
+    sim.bootstrap_correct(&ids);
+    let mut rng = Rng::new(seed ^ 0xFA11);
+    let victims = rng.sample_indices(initial, failures);
+    for v in victims {
+        sim.schedule_fail(at, ids[v]);
+    }
+}
+
+/// Mixed churn: Poisson-ish joins and failures over a window (failure
+/// injection testing beyond the paper's extremes).
+pub fn mixed_churn(
+    sim: &mut Simulator,
+    initial: usize,
+    events: usize,
+    window: Time,
+    seed: u64,
+) {
+    let ids: Vec<NodeId> = (0..initial as NodeId).collect();
+    sim.bootstrap_correct(&ids);
+    let mut rng = Rng::new(seed ^ 0xC4A0);
+    let mut next_id = initial as NodeId;
+    let mut live: Vec<NodeId> = ids.clone();
+    for _ in 0..events {
+        let at = (rng.next_f64() * window as f64) as Time + 10 * MS;
+        if rng.chance(0.5) {
+            let bootstrap = live[rng.index(live.len())];
+            sim.schedule_join(at, next_id, bootstrap);
+            live.push(next_id);
+            next_id += 1;
+        } else if live.len() > initial / 2 {
+            let idx = rng.index(live.len());
+            sim.schedule_fail(at, live.swap_remove(idx));
+        }
+    }
+}
+
+/// Record correctness samples every `every` from 0 to `until`.
+pub fn sample_correctness(sim: &mut Simulator, until: Time, every: Time) {
+    let mut t = 0;
+    while t <= until {
+        sim.schedule_snapshot(t);
+        t += every;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{NetConfig, OverlayConfig};
+
+    fn mk_sim() -> Simulator {
+        Simulator::new(
+            OverlayConfig {
+                spaces: 2,
+                heartbeat_ms: 500,
+                failure_multiple: 3,
+                repair_probe_ms: 2_000,
+            },
+            NetConfig {
+                latency_ms: 50.0,
+                jitter: 0.1,
+                seed: 3,
+            },
+        )
+    }
+
+    #[test]
+    fn mass_join_converges_small() {
+        let mut sim = mk_sim();
+        mass_join(&mut sim, 30, 10, 10 * MS, 1);
+        let t = sim.run_until_correct(1.0, 240_000 * MS, 2_000 * MS);
+        assert!(t.is_some(), "mass join stuck at {}", sim.correctness());
+        assert_eq!(sim.nodes.len(), 40);
+    }
+
+    #[test]
+    fn mass_fail_recovers_small() {
+        let mut sim = mk_sim();
+        mass_fail(&mut sim, 40, 10, 10 * MS, 2);
+        let t = sim.run_until_correct(1.0, 240_000 * MS, 2_000 * MS);
+        assert!(t.is_some(), "mass fail stuck at {}", sim.correctness());
+        assert_eq!(sim.nodes.len(), 30);
+    }
+
+    #[test]
+    fn correctness_drops_then_recovers() {
+        let mut sim = mk_sim();
+        mass_fail(&mut sim, 40, 10, 10 * MS, 4);
+        // sample finely: detection takes ~3 heartbeats (1.5s), repair a few
+        // latencies more, so the dip is only visible sub-second.
+        sample_correctness(&mut sim, 120_000 * MS, 200 * MS);
+        sim.run_until(120_000 * MS);
+        let dip = sim
+            .samples
+            .iter()
+            .filter(|s| s.at > 10 * MS)
+            .map(|s| s.correctness)
+            .fold(1.0f64, f64::min);
+        let last = sim.samples.last().unwrap();
+        assert!(dip < 1.0, "no drop observed");
+        assert!(last.correctness > dip);
+    }
+}

@@ -1,0 +1,11 @@
+//! Deterministic discrete-event simulation substrate: event queue,
+//! latency model, churn injection, and the NDMP fleet runner.
+
+pub mod churn;
+pub mod event;
+pub mod network;
+pub mod runner;
+
+pub use event::{Event, EventKind, EventQueue};
+pub use network::LatencyModel;
+pub use runner::{grow_network, CorrectnessSample, Simulator};

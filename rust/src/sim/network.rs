@@ -1,0 +1,63 @@
+//! Simulated network latency model: one-way delay = `latency_ms` plus an
+//! exponential jitter tail. Deterministic per seed.
+
+use crate::config::NetConfig;
+use crate::ndmp::messages::Time;
+use crate::util::Rng;
+
+#[derive(Debug)]
+pub struct LatencyModel {
+    base_us: f64,
+    jitter: f64,
+    rng: Rng,
+}
+
+impl LatencyModel {
+    pub fn new(cfg: &NetConfig) -> Self {
+        Self {
+            base_us: cfg.latency_ms * 1_000.0,
+            jitter: cfg.jitter,
+            rng: Rng::new(cfg.seed ^ 0x1a7e_0c11),
+        }
+    }
+
+    /// Sample a one-way delay in microseconds (>= 1).
+    pub fn sample(&mut self) -> Time {
+        let jitter = if self.jitter > 0.0 {
+            self.rng.exponential(1.0 / (self.jitter * self.base_us.max(1.0)))
+        } else {
+            0.0
+        };
+        (self.base_us + jitter).max(1.0) as Time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_near_base_plus_jitter() {
+        let cfg = NetConfig {
+            latency_ms: 350.0,
+            jitter: 0.2,
+            seed: 1,
+        };
+        let mut m = LatencyModel::new(&cfg);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| m.sample() as f64).sum::<f64>() / n as f64;
+        let want = 350_000.0 * 1.2; // base + exp(mean = jitter*base)
+        assert!((mean - want).abs() < want * 0.05, "mean {mean} want {want}");
+    }
+
+    #[test]
+    fn zero_jitter_is_constant() {
+        let cfg = NetConfig {
+            latency_ms: 10.0,
+            jitter: 0.0,
+            seed: 2,
+        };
+        let mut m = LatencyModel::new(&cfg);
+        assert!((0..100).all(|_| m.sample() == 10_000));
+    }
+}

@@ -1,0 +1,369 @@
+//! NDMP overlay simulator: drives a fleet of `NodeState` protocol engines
+//! through the deterministic event queue with the latency model. This is
+//! the paper's "medium/large-scale simulation" substrate (§IV-A1, types
+//! 2–3) for topology construction, maintenance, and churn experiments
+//! (Figs. 8a–c).
+
+use super::event::{EventKind, EventQueue};
+use super::network::LatencyModel;
+use crate::config::{NetConfig, OverlayConfig};
+use crate::ndmp::messages::{Msg, Outgoing, Time, MS};
+use crate::ndmp::node::{NodeCounters, NodeState};
+use crate::topology::{correctness, NeighborSnapshot, NodeId};
+use std::collections::BTreeMap;
+
+/// A recorded correctness sample (for the Fig. 8a/8b time series).
+#[derive(Debug, Clone, Copy)]
+pub struct CorrectnessSample {
+    pub at: Time,
+    pub correctness: f64,
+    pub live_nodes: usize,
+}
+
+pub struct Simulator {
+    pub cfg: OverlayConfig,
+    pub nodes: BTreeMap<NodeId, NodeState>,
+    pub queue: EventQueue,
+    pub now: Time,
+    latency: LatencyModel,
+    /// Tick granularity for node timers.
+    tick_period: Time,
+    /// Counters of departed nodes (so message totals survive failures).
+    pub retired_counters: Vec<NodeCounters>,
+    pub samples: Vec<CorrectnessSample>,
+    /// Messages delivered (for telemetry / debugging).
+    pub delivered: u64,
+}
+
+impl Simulator {
+    pub fn new(overlay: OverlayConfig, net: NetConfig) -> Self {
+        let tick_period = (overlay.heartbeat_ms * 1_000) / 2;
+        Self {
+            cfg: overlay,
+            nodes: BTreeMap::new(),
+            queue: EventQueue::new(),
+            now: 0,
+            latency: LatencyModel::new(&net),
+            tick_period: tick_period.max(1),
+            retired_counters: Vec::new(),
+            samples: Vec::new(),
+            delivered: 0,
+        }
+    }
+
+    /// Create a correct network of `ids` instantly (centralized shortcut
+    /// used to set up the *initial* condition of churn experiments; the
+    /// decentralized path is `schedule_join`).
+    pub fn bootstrap_correct(&mut self, ids: &[NodeId]) {
+        use crate::topology::fedlay::Membership;
+        let mut m = Membership::new(self.cfg.spaces);
+        for &id in ids {
+            m.add(id);
+        }
+        for &id in ids {
+            let mut st = NodeState::new(id, self.cfg.clone(), self.now);
+            st.bootstrap_first();
+            for s in 0..self.cfg.spaces {
+                let ring = m.ring(s);
+                let n = ring.len();
+                if n < 2 {
+                    continue;
+                }
+                let pos = ring.iter().position(|p| p.id == id).unwrap();
+                st.views[s].prev = Some(ring[(pos + n - 1) % n].id);
+                st.views[s].next = Some(ring[(pos + 1) % n].id);
+            }
+            // seed the peer table from the views
+            for s in 0..self.cfg.spaces {
+                if let Some(p) = st.views[s].prev {
+                    st.handle(p, Msg::Heartbeat, self.now);
+                }
+                if let Some(nx) = st.views[s].next {
+                    st.handle(nx, Msg::Heartbeat, self.now);
+                }
+            }
+            // zero the counters: bootstrap is not protocol traffic
+            st.counters = NodeCounters::default();
+            self.nodes.insert(id, st);
+            self.queue.push(self.now + 1, EventKind::Tick { node: id });
+        }
+    }
+
+    /// Start an empty network with a single node.
+    pub fn bootstrap_single(&mut self, id: NodeId) {
+        let mut st = NodeState::new(id, self.cfg.clone(), self.now);
+        st.bootstrap_first();
+        self.nodes.insert(id, st);
+        self.queue.push(self.now + 1, EventKind::Tick { node: id });
+    }
+
+    pub fn schedule_join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) {
+        self.queue.push(at, EventKind::Join { node, bootstrap });
+    }
+
+    pub fn schedule_fail(&mut self, at: Time, node: NodeId) {
+        self.queue.push(at, EventKind::Fail { node });
+    }
+
+    pub fn schedule_leave(&mut self, at: Time, node: NodeId) {
+        self.queue.push(at, EventKind::Leave { node });
+    }
+
+    pub fn schedule_snapshot(&mut self, at: Time) {
+        self.queue.push(at, EventKind::Snapshot { tag: 0 });
+    }
+
+    fn dispatch(&mut self, from: NodeId, outs: Vec<Outgoing>) {
+        for o in outs {
+            if o.to == from {
+                continue;
+            }
+            let delay = self.latency.sample();
+            self.queue.push(
+                self.now + delay,
+                EventKind::Deliver {
+                    from,
+                    to: o.to,
+                    msg: o.msg,
+                },
+            );
+        }
+    }
+
+    /// Current neighbor-set snapshot of all live nodes.
+    pub fn snapshot(&self) -> NeighborSnapshot {
+        self.nodes
+            .iter()
+            .map(|(&id, st)| (id, st.neighbor_ids()))
+            .collect()
+    }
+
+    pub fn correctness(&self) -> f64 {
+        correctness(&self.snapshot(), self.cfg.spaces)
+    }
+
+    /// Total control messages sent per live+retired node.
+    pub fn control_messages_per_node(&self) -> f64 {
+        let live: u64 = self.nodes.values().map(|n| n.counters.control_sent).sum();
+        let retired: u64 = self.retired_counters.iter().map(|c| c.control_sent).sum();
+        let count = self.nodes.len() + self.retired_counters.len();
+        if count == 0 {
+            0.0
+        } else {
+            (live + retired) as f64 / count as f64
+        }
+    }
+
+    /// Run until `deadline` (inclusive) or the queue drains.
+    pub fn run_until(&mut self, deadline: Time) {
+        while let Some(t) = self.queue.peek_time() {
+            if t > deadline {
+                break;
+            }
+            let ev = self.queue.pop().unwrap();
+            self.now = ev.at;
+            match ev.kind {
+                EventKind::Deliver { from, to, msg } => {
+                    self.delivered += 1;
+                    // messages to dead nodes vanish (crash-fail model)
+                    let Some(node) = self.nodes.get_mut(&to) else {
+                        continue;
+                    };
+                    let outs = node.handle(from, msg, self.now);
+                    self.dispatch(to, outs);
+                }
+                EventKind::Tick { node } => {
+                    let Some(st) = self.nodes.get_mut(&node) else {
+                        continue;
+                    };
+                    let outs = st.tick(self.now);
+                    self.dispatch(node, outs);
+                    self.queue
+                        .push(self.now + self.tick_period, EventKind::Tick { node });
+                }
+                EventKind::Join { node, bootstrap } => {
+                    if self.nodes.contains_key(&node) || !self.nodes.contains_key(&bootstrap) {
+                        continue;
+                    }
+                    let mut st = NodeState::new(node, self.cfg.clone(), self.now);
+                    let outs = st.start_join(bootstrap, self.now);
+                    self.nodes.insert(node, st);
+                    self.dispatch(node, outs);
+                    self.queue
+                        .push(self.now + self.tick_period, EventKind::Tick { node });
+                }
+                EventKind::Fail { node } => {
+                    if let Some(st) = self.nodes.remove(&node) {
+                        self.retired_counters.push(st.counters);
+                    }
+                }
+                EventKind::Leave { node } => {
+                    if let Some(mut st) = self.nodes.remove(&node) {
+                        let outs = st.start_leave();
+                        self.retired_counters.push(st.counters);
+                        self.dispatch(node, outs);
+                    }
+                }
+                EventKind::Snapshot { .. } => {
+                    let c = self.correctness();
+                    self.samples.push(CorrectnessSample {
+                        at: self.now,
+                        correctness: c,
+                        live_nodes: self.nodes.len(),
+                    });
+                }
+            }
+        }
+        self.now = self.now.max(deadline);
+    }
+
+    /// Convenience: run until correctness reaches `threshold` or `deadline`
+    /// passes; returns the time correctness first reached the threshold.
+    pub fn run_until_correct(&mut self, threshold: f64, deadline: Time, check_every: Time) -> Option<Time> {
+        loop {
+            let next = (self.now + check_every).min(deadline);
+            self.run_until(next);
+            if self.correctness() >= threshold {
+                return Some(self.now);
+            }
+            if self.now >= deadline {
+                return None;
+            }
+        }
+    }
+}
+
+/// Build a network of `n` nodes purely through the decentralized join
+/// protocol, one join per `spacing` (sequential joins, §III-B1).
+pub fn grow_network(
+    overlay: OverlayConfig,
+    net: NetConfig,
+    n: usize,
+    spacing: Time,
+) -> Simulator {
+    let mut sim = Simulator::new(overlay, net);
+    sim.bootstrap_single(0);
+    for i in 1..n as NodeId {
+        // join via a deterministic pseudo-random existing node
+        let bootstrap = i.wrapping_mul(0x9E37_79B9_7F4A_7C15) % i;
+        sim.schedule_join(sim.now + i * spacing, i, bootstrap);
+    }
+    // run past the last scheduled join first — checking correctness any
+    // earlier would "pass" on a partially-grown (but locally correct)
+    // network — then settle until Definition-1 correctness over all n.
+    sim.run_until(n as Time * spacing + 1);
+    let deadline = n as Time * spacing + 60_000 * MS;
+    sim.run_until_correct(1.0, deadline, 2_000 * MS);
+    debug_assert_eq!(sim.nodes.len(), n, "grow_network lost joiners");
+    sim
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn overlay(spaces: usize) -> OverlayConfig {
+        OverlayConfig {
+            spaces,
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        }
+    }
+
+    fn net() -> NetConfig {
+        NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.2,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn bootstrap_correct_is_correct() {
+        let mut sim = Simulator::new(overlay(3), net());
+        let ids: Vec<NodeId> = (0..50).collect();
+        sim.bootstrap_correct(&ids);
+        assert!((sim.correctness() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sequential_joins_converge_to_correct() {
+        let sim = grow_network(overlay(2), net(), 20, 2_000 * MS);
+        assert!(
+            sim.correctness() > 0.999,
+            "correctness {}",
+            sim.correctness()
+        );
+    }
+
+    #[test]
+    fn single_failure_recovers() {
+        let mut sim = Simulator::new(overlay(2), net());
+        let ids: Vec<NodeId> = (0..30).collect();
+        sim.bootstrap_correct(&ids);
+        sim.schedule_fail(10 * MS, 7);
+        // allow detection (3 * 500ms) + repair routing
+        let t = sim.run_until_correct(1.0, 60_000 * MS, 500 * MS);
+        assert!(t.is_some(), "failure not repaired; c={}", sim.correctness());
+    }
+
+    #[test]
+    fn graceful_leave_repairs_instantly() {
+        let mut sim = Simulator::new(overlay(2), net());
+        let ids: Vec<NodeId> = (0..25).collect();
+        sim.bootstrap_correct(&ids);
+        sim.schedule_leave(10 * MS, 11);
+        let t = sim.run_until_correct(1.0, 20_000 * MS, 100 * MS);
+        assert!(t.is_some(), "leave not repaired; c={}", sim.correctness());
+        assert!(!sim.nodes.contains_key(&11));
+    }
+
+    #[test]
+    fn concurrent_joins_converge() {
+        let mut sim = Simulator::new(overlay(2), net());
+        let ids: Vec<NodeId> = (0..20).collect();
+        sim.bootstrap_correct(&ids);
+        // 10 concurrent joins at the same instant through random nodes
+        for j in 100..110u64 {
+            sim.schedule_join(10 * MS, j, j % 20);
+        }
+        let t = sim.run_until_correct(1.0, 120_000 * MS, 1_000 * MS);
+        assert!(
+            t.is_some(),
+            "concurrent joins did not converge; c={}",
+            sim.correctness()
+        );
+        assert_eq!(sim.nodes.len(), 30);
+    }
+
+    #[test]
+    fn concurrent_failures_recover() {
+        let mut sim = Simulator::new(overlay(3), net());
+        let ids: Vec<NodeId> = (0..40).collect();
+        sim.bootstrap_correct(&ids);
+        for f in [3u64, 9, 21, 33] {
+            sim.schedule_fail(10 * MS, f);
+        }
+        let t = sim.run_until_correct(1.0, 180_000 * MS, 1_000 * MS);
+        assert!(
+            t.is_some(),
+            "concurrent failures did not recover; c={}",
+            sim.correctness()
+        );
+        assert_eq!(sim.nodes.len(), 36);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut sim = Simulator::new(overlay(2), net());
+            sim.bootstrap_correct(&(0..15).collect::<Vec<_>>());
+            sim.schedule_fail(5 * MS, 3);
+            sim.schedule_join(6 * MS, 99, 1);
+            sim.run_until(30_000 * MS);
+            (sim.correctness(), sim.delivered, sim.control_messages_per_node())
+        };
+        assert_eq!(run(), run());
+    }
+}

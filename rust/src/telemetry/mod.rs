@@ -1,0 +1,74 @@
+//! Lightweight metrics registry: named counters and gauges aggregated
+//! across experiment components, plus table-friendly reporting.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// A process-wide metrics registry. Cheap counters; snapshot on demand.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    gauges: Mutex<BTreeMap<String, f64>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut c = self.counters.lock().unwrap();
+        c.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|a| a.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.gauges.lock().unwrap().insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.lock().unwrap().get(name).copied()
+    }
+
+    /// Render all metrics as sorted `name = value` lines.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} = {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges() {
+        let r = Registry::new();
+        r.incr("msgs", 3);
+        r.incr("msgs", 2);
+        r.set_gauge("accuracy", 0.9);
+        assert_eq!(r.counter("msgs"), 5);
+        assert_eq!(r.counter("absent"), 0);
+        assert_eq!(r.gauge("accuracy"), Some(0.9));
+        let text = r.render();
+        assert!(text.contains("msgs = 5"));
+        assert!(text.contains("accuracy = 0.9"));
+    }
+}

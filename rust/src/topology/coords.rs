@@ -1,0 +1,219 @@
+//! Virtual coordinates and circular distance (paper §II-C, Definition 2).
+//!
+//! Each node derives `L` coordinates in `[0,1)` by hashing its identity
+//! with the space index: `x_i = H(id | i)` — a publicly computable,
+//! collision-resistant mapping (we use SHA-256, the paper just requires a
+//! public hash). Node identity is a `NodeId` (stand-in for the IP address
+//! in simulation; the TCP transport uses real socket addresses mapped to
+//! ids). Ties on a ring are broken by smaller id, so ring order is total.
+
+use sha2::{Digest, Sha256};
+
+/// Node identity. In simulations this is a dense index; in the TCP
+/// prototype it is derived from the socket address. Ordering mirrors the
+/// paper's "smaller IP address wins" tie-break.
+pub type NodeId = u64;
+
+/// One coordinate in `[0, 1)`.
+pub type Coord = f64;
+
+/// Circular distance between two ring coordinates (Definition 2):
+/// `CD(x,y) = min(|x-y|, 1-|x-y|)` — the smaller arc, perimeter 1.
+#[inline]
+pub fn circular_distance(x: Coord, y: Coord) -> f64 {
+    let d = (x - y).abs();
+    d.min(1.0 - d)
+}
+
+/// Length of the arc from `x` to `y` travelling **counterclockwise**
+/// (decreasing coordinate direction, wrapping at 0). Used by the
+/// directional `Neighbor_repair` routing (§III-B3).
+#[inline]
+pub fn ccw_arc(from: Coord, to: Coord) -> f64 {
+    let d = from - to;
+    if d >= 0.0 {
+        d
+    } else {
+        d + 1.0
+    }
+}
+
+/// Length of the arc from `x` to `y` travelling **clockwise**
+/// (increasing coordinate direction, wrapping at 1).
+#[inline]
+pub fn cw_arc(from: Coord, to: Coord) -> f64 {
+    ccw_arc(to, from)
+}
+
+/// The full coordinate vector of one node across all `L` spaces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VirtualCoords {
+    pub coords: Vec<Coord>,
+}
+
+impl VirtualCoords {
+    /// Derive coordinates from a node id: `x_i = H(id | i) / 2^64`.
+    pub fn from_id(id: NodeId, spaces: usize) -> Self {
+        let coords = (0..spaces)
+            .map(|i| {
+                let mut h = Sha256::new();
+                h.update(id.to_be_bytes());
+                h.update(b"|");
+                h.update((i as u64).to_be_bytes());
+                let digest = h.finalize();
+                let mut b = [0u8; 8];
+                b.copy_from_slice(&digest[..8]);
+                // map the top 53 bits into [0,1) exactly like Rng::next_f64
+                (u64::from_be_bytes(b) >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+            })
+            .collect();
+        Self { coords }
+    }
+
+    pub fn spaces(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn get(&self, space: usize) -> Coord {
+        self.coords[space]
+    }
+}
+
+/// `(coordinate, id)` with the paper's total order on a ring: by
+/// coordinate, ties broken by smaller id.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RingPoint {
+    pub coord: Coord,
+    pub id: NodeId,
+}
+
+impl RingPoint {
+    pub fn new(coord: Coord, id: NodeId) -> Self {
+        Self { coord, id }
+    }
+}
+
+impl Eq for RingPoint {}
+
+impl PartialOrd for RingPoint {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for RingPoint {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.coord
+            .partial_cmp(&other.coord)
+            .unwrap()
+            .then(self.id.cmp(&other.id))
+    }
+}
+
+/// Is `candidate` strictly closer to `target` than `incumbent`, under the
+/// paper's tie-break (equal distance -> smaller id wins)?
+#[inline]
+pub fn closer(
+    target: Coord,
+    candidate: (Coord, NodeId),
+    incumbent: (Coord, NodeId),
+) -> bool {
+    let dc = circular_distance(candidate.0, target);
+    let di = circular_distance(incumbent.0, target);
+    dc < di || (dc == di && candidate.1 < incumbent.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn circular_distance_basics() {
+        assert_eq!(circular_distance(0.0, 0.0), 0.0);
+        assert!((circular_distance(0.1, 0.9) - 0.2).abs() < 1e-12);
+        assert!((circular_distance(0.9, 0.1) - 0.2).abs() < 1e-12);
+        assert!((circular_distance(0.25, 0.75) - 0.5).abs() < 1e-12);
+        assert!((circular_distance(0.2, 0.4) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn circular_distance_symmetric_and_bounded() {
+        let mut rng = crate::util::Rng::new(1);
+        for _ in 0..1_000 {
+            let (x, y) = (rng.next_f64(), rng.next_f64());
+            let d = circular_distance(x, y);
+            assert!((0.0..=0.5).contains(&d));
+            assert_eq!(d, circular_distance(y, x));
+        }
+    }
+
+    #[test]
+    fn arcs_complement() {
+        let mut rng = crate::util::Rng::new(2);
+        for _ in 0..1_000 {
+            let (x, y) = (rng.next_f64(), rng.next_f64());
+            if x == y {
+                continue;
+            }
+            let s = ccw_arc(x, y) + cw_arc(x, y);
+            assert!((s - 1.0).abs() < 1e-12, "arcs must cover the ring");
+            let d = circular_distance(x, y);
+            assert!((d - ccw_arc(x, y).min(cw_arc(x, y))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn ccw_arc_direction() {
+        // from 0.3 travelling ccw (decreasing) to 0.1 is 0.2
+        assert!((ccw_arc(0.3, 0.1) - 0.2).abs() < 1e-12);
+        // from 0.1 travelling ccw to 0.3 wraps: 0.8
+        assert!((ccw_arc(0.1, 0.3) - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn coords_deterministic_and_spread() {
+        let a = VirtualCoords::from_id(42, 5);
+        let b = VirtualCoords::from_id(42, 5);
+        assert_eq!(a, b);
+        assert_eq!(a.spaces(), 5);
+        for &c in &a.coords {
+            assert!((0.0..1.0).contains(&c));
+        }
+        // different spaces give (practically) different coordinates
+        let mut sorted = a.coords.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5);
+        // different ids differ
+        let c = VirtualCoords::from_id(43, 5);
+        assert_ne!(a.coords[0], c.coords[0]);
+    }
+
+    #[test]
+    fn coords_approximately_uniform() {
+        // mean of many hashed coordinates should be ~0.5
+        let n = 2_000;
+        let mean: f64 = (0..n)
+            .map(|id| VirtualCoords::from_id(id, 1).get(0))
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn ring_point_order_breaks_ties_by_id() {
+        let a = RingPoint::new(0.5, 1);
+        let b = RingPoint::new(0.5, 2);
+        assert!(a < b);
+        let c = RingPoint::new(0.4, 9);
+        assert!(c < a);
+    }
+
+    #[test]
+    fn closer_tie_break() {
+        // equidistant: smaller id wins
+        assert!(closer(0.5, (0.4, 1), (0.6, 2)));
+        assert!(!closer(0.5, (0.4, 3), (0.6, 2)));
+        assert!(closer(0.5, (0.45, 9), (0.6, 1)));
+    }
+}

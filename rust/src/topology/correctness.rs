@@ -1,0 +1,172 @@
+//! Topology-correctness metric (paper §IV-A3): the fraction of required
+//! (Definition 1) neighbor relations that the live nodes actually hold.
+//! Correctness 1.0 ⇔ the network is a correct FedLay.
+
+use super::coords::NodeId;
+use super::fedlay::Membership;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A snapshot of every live node's neighbor set, as reported by the nodes
+/// themselves (NDMP state or simulator state).
+pub type NeighborSnapshot = BTreeMap<NodeId, BTreeSet<NodeId>>;
+
+/// Fraction of correct neighbor entries over required entries, following
+/// the paper: "the number of correct neighbors of all nodes over the total
+/// number of neighbors" of the ideal topology built from the live ids.
+pub fn correctness(snapshot: &NeighborSnapshot, spaces: usize) -> f64 {
+    let mut ideal = Membership::new(spaces);
+    for &id in snapshot.keys() {
+        ideal.add(id);
+    }
+    let mut required = 0usize;
+    let mut present = 0usize;
+    for &id in snapshot.keys() {
+        let want = ideal.correct_neighbors(id);
+        let have = &snapshot[&id];
+        required += want.len();
+        present += want.iter().filter(|w| have.contains(w)).count();
+    }
+    if required == 0 {
+        1.0
+    } else {
+        present as f64 / required as f64
+    }
+}
+
+/// Detailed correctness report for debugging / experiment logging.
+#[derive(Debug, Clone)]
+pub struct CorrectnessReport {
+    pub correctness: f64,
+    /// Nodes whose neighbor set is exactly correct.
+    pub correct_nodes: usize,
+    pub total_nodes: usize,
+    /// (node, missing-neighbor) pairs.
+    pub missing: Vec<(NodeId, NodeId)>,
+    /// (node, extra-neighbor) pairs (in set but not Definition-1 required).
+    pub extra: Vec<(NodeId, NodeId)>,
+}
+
+pub fn report(snapshot: &NeighborSnapshot, spaces: usize) -> CorrectnessReport {
+    let mut ideal = Membership::new(spaces);
+    for &id in snapshot.keys() {
+        ideal.add(id);
+    }
+    let mut required = 0usize;
+    let mut present = 0usize;
+    let mut correct_nodes = 0usize;
+    let mut missing = Vec::new();
+    let mut extra = Vec::new();
+    for (&id, have) in snapshot {
+        let want = ideal.correct_neighbors(id);
+        required += want.len();
+        let mut ok = true;
+        for &w in &want {
+            if have.contains(&w) {
+                present += 1;
+            } else {
+                missing.push((id, w));
+                ok = false;
+            }
+        }
+        for &h in have {
+            if !want.contains(&h) {
+                extra.push((id, h));
+                ok = false;
+            }
+        }
+        if ok {
+            correct_nodes += 1;
+        }
+    }
+    CorrectnessReport {
+        correctness: if required == 0 {
+            1.0
+        } else {
+            present as f64 / required as f64
+        },
+        correct_nodes,
+        total_nodes: snapshot.len(),
+        missing,
+        extra,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::fedlay::Membership;
+
+    fn perfect_snapshot(n: usize, spaces: usize) -> NeighborSnapshot {
+        let m = Membership::dense(n, spaces);
+        m.nodes
+            .keys()
+            .map(|&id| (id, m.correct_neighbors(id)))
+            .collect()
+    }
+
+    #[test]
+    fn perfect_network_scores_one() {
+        let snap = perfect_snapshot(50, 3);
+        assert_eq!(correctness(&snap, 3), 1.0);
+        let r = report(&snap, 3);
+        assert_eq!(r.correct_nodes, 50);
+        assert!(r.missing.is_empty() && r.extra.is_empty());
+    }
+
+    #[test]
+    fn broken_link_lowers_score() {
+        let mut snap = perfect_snapshot(50, 3);
+        // drop one neighbor entry from one node
+        let (&id, _) = snap.iter().next().unwrap();
+        let victim = *snap[&id].iter().next().unwrap();
+        snap.get_mut(&id).unwrap().remove(&victim);
+        let c = correctness(&snap, 3);
+        assert!(c < 1.0 && c > 0.9);
+        let r = report(&snap, 3);
+        assert_eq!(r.missing, vec![(id, victim)]);
+    }
+
+    #[test]
+    fn extra_neighbor_flagged_but_not_penalized_in_ratio() {
+        let mut snap = perfect_snapshot(30, 2);
+        // add a bogus far-away neighbor
+        let (&id, _) = snap.iter().next().unwrap();
+        let stranger = snap.keys().copied().last().unwrap();
+        let is_required = {
+            let m = Membership::dense(30, 2);
+            m.correct_neighbors(id).contains(&stranger)
+        };
+        if !is_required {
+            snap.get_mut(&id).unwrap().insert(stranger);
+            assert_eq!(correctness(&snap, 2), 1.0);
+            let r = report(&snap, 2);
+            assert_eq!(r.extra, vec![(id, stranger)]);
+            assert!(r.correct_nodes < 30);
+        }
+    }
+
+    #[test]
+    fn correctness_recomputed_over_survivors() {
+        // after removing nodes, the ideal topology is over the survivors
+        let m = Membership::dense(20, 2);
+        let mut snap: NeighborSnapshot = m
+            .nodes
+            .keys()
+            .filter(|&&id| id >= 5)
+            .map(|&id| (id, m.correct_neighbors(id)))
+            .collect();
+        // survivors still point at dead nodes -> correctness < 1
+        let before = correctness(&snap, 2);
+        assert!(before < 1.0);
+        // fix the snapshot to the survivor-ideal -> correctness = 1
+        let survivors: Vec<NodeId> = snap.keys().copied().collect();
+        let mut ideal = Membership::new(2);
+        for id in &survivors {
+            ideal.add(*id);
+        }
+        for id in survivors {
+            snap.insert(id, ideal.correct_neighbors(id));
+        }
+        assert_eq!(correctness(&snap, 2), 1.0);
+    }
+}

@@ -1,0 +1,215 @@
+//! The FedLay overlay topology (paper §II-C): `L` virtual ring spaces,
+//! each node adjacent to its two ring neighbors per space.
+//!
+//! This module is the *centralized* constructor — used for topology-metric
+//! studies (Fig. 3) and as the ground truth the decentralized NDMP
+//! protocols (`crate::ndmp`) are checked against (Definition 1).
+
+use super::coords::{NodeId, RingPoint, VirtualCoords};
+use crate::graph::Graph;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A FedLay network membership: ids with their coordinate vectors.
+#[derive(Debug, Clone, Default)]
+pub struct Membership {
+    /// id -> coordinates; BTreeMap for deterministic iteration.
+    pub nodes: BTreeMap<NodeId, VirtualCoords>,
+    pub spaces: usize,
+}
+
+impl Membership {
+    pub fn new(spaces: usize) -> Self {
+        Self {
+            nodes: BTreeMap::new(),
+            spaces,
+        }
+    }
+
+    /// Membership of ids `0..n` with hash-derived coordinates.
+    pub fn dense(n: usize, spaces: usize) -> Self {
+        let mut m = Self::new(spaces);
+        for id in 0..n as NodeId {
+            m.add(id);
+        }
+        m
+    }
+
+    pub fn add(&mut self, id: NodeId) -> &VirtualCoords {
+        self.nodes
+            .entry(id)
+            .or_insert_with(|| VirtualCoords::from_id(id, self.spaces))
+    }
+
+    pub fn remove(&mut self, id: NodeId) {
+        self.nodes.remove(&id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// The ring of space `i`, sorted by (coordinate, id).
+    pub fn ring(&self, space: usize) -> Vec<RingPoint> {
+        let mut pts: Vec<RingPoint> = self
+            .nodes
+            .iter()
+            .map(|(&id, c)| RingPoint::new(c.get(space), id))
+            .collect();
+        pts.sort();
+        pts
+    }
+
+    /// The two ring-adjacent node ids of `id` in space `i`.
+    /// With fewer than 3 nodes the "two" adjacents may coincide or be none.
+    pub fn adjacents(&self, id: NodeId, space: usize) -> Vec<NodeId> {
+        let ring = self.ring(space);
+        let n = ring.len();
+        if n <= 1 {
+            return vec![];
+        }
+        let pos = ring
+            .iter()
+            .position(|p| p.id == id)
+            .expect("id not in membership");
+        if n == 2 {
+            return vec![ring[(pos + 1) % 2].id];
+        }
+        let prev = ring[(pos + n - 1) % n].id;
+        let next = ring[(pos + 1) % n].id;
+        if prev == next {
+            vec![prev]
+        } else {
+            vec![prev, next]
+        }
+    }
+
+    /// Correct neighbor set of `id` (Definition 1): ring-adjacent nodes in
+    /// every space, de-duplicated.
+    pub fn correct_neighbors(&self, id: NodeId) -> BTreeSet<NodeId> {
+        let mut out = BTreeSet::new();
+        for s in 0..self.spaces {
+            for a in self.adjacents(id, s) {
+                out.insert(a);
+            }
+        }
+        out
+    }
+}
+
+/// Build the full FedLay overlay graph of a membership (all spaces).
+/// Node indices in the returned `Graph` follow the sorted id order.
+pub fn build_overlay(m: &Membership) -> (Graph, Vec<NodeId>) {
+    let ids: Vec<NodeId> = m.nodes.keys().copied().collect();
+    let index: BTreeMap<NodeId, usize> = ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    let mut g = Graph::new(ids.len());
+    for s in 0..m.spaces {
+        let ring = m.ring(s);
+        let n = ring.len();
+        if n < 2 {
+            continue;
+        }
+        for i in 0..n {
+            let j = (i + 1) % n;
+            if n == 2 && i == 1 {
+                break; // avoid double edge on a 2-ring
+            }
+            g.add_edge(index[&ring[i].id], index[&ring[j].id]);
+        }
+    }
+    (g, ids)
+}
+
+/// Convenience: the FedLay overlay over ids `0..n` with `L` spaces.
+pub fn fedlay_graph(n: usize, spaces: usize) -> Graph {
+    build_overlay(&Membership::dense(n, spaces)).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::traversal::is_connected;
+
+    #[test]
+    fn degree_bounded_by_2l() {
+        for &(n, l) in &[(30usize, 2usize), (100, 3), (200, 5)] {
+            let g = fedlay_graph(n, l);
+            assert!(g.max_degree() <= 2 * l, "n={n} L={l}");
+            // with random coords nearly every node hits the bound
+            assert!(g.avg_degree() > (2 * l) as f64 * 0.8);
+        }
+    }
+
+    #[test]
+    fn overlay_connected() {
+        for &l in &[2usize, 3, 4] {
+            assert!(is_connected(&fedlay_graph(150, l)), "L={l}");
+        }
+    }
+
+    #[test]
+    fn adjacents_are_mutual() {
+        let m = Membership::dense(40, 3);
+        for s in 0..3 {
+            for (&id, _) in &m.nodes {
+                for a in m.adjacents(id, s) {
+                    assert!(
+                        m.adjacents(a, s).contains(&id),
+                        "adjacency must be symmetric (space {s}, {id}<->{a})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_is_sorted_and_complete() {
+        let m = Membership::dense(25, 2);
+        let ring = m.ring(0);
+        assert_eq!(ring.len(), 25);
+        assert!(ring.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn correct_neighbors_match_overlay_edges() {
+        let m = Membership::dense(60, 3);
+        let (g, ids) = build_overlay(&m);
+        for (i, &id) in ids.iter().enumerate() {
+            let want = m.correct_neighbors(id);
+            let got: BTreeSet<NodeId> = g.neighbors(i).map(|j| ids[j]).collect();
+            assert_eq!(got, want, "node {id}");
+        }
+    }
+
+    #[test]
+    fn two_node_network() {
+        let mut m = Membership::new(3);
+        m.add(1);
+        m.add(2);
+        let (g, _) = build_overlay(&m);
+        assert_eq!(g.m(), 1);
+        assert_eq!(m.adjacents(1, 0), vec![2]);
+    }
+
+    #[test]
+    fn paper_example_three_neighbors_possible() {
+        // Some nodes can have < 2L neighbors when the same pair is
+        // adjacent in multiple spaces (paper's node B/D example).
+        let g = fedlay_graph(12, 2);
+        let degs: Vec<usize> = (0..12).map(|u| g.degree(u)).collect();
+        assert!(degs.iter().all(|&d| d >= 2 && d <= 4));
+    }
+
+    #[test]
+    fn membership_add_remove_roundtrip() {
+        let mut m = Membership::dense(10, 2);
+        m.remove(4);
+        assert_eq!(m.len(), 9);
+        assert!(m.ring(0).iter().all(|p| p.id != 4));
+        m.add(4);
+        assert_eq!(m.len(), 10);
+    }
+}

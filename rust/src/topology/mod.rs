@@ -1,0 +1,10 @@
+//! FedLay topology: virtual coordinates, ring spaces, the centralized
+//! overlay constructor (ground truth for NDMP), and the correctness metric.
+
+pub mod coords;
+pub mod correctness;
+pub mod fedlay;
+
+pub use coords::{circular_distance, ccw_arc, cw_arc, closer, Coord, NodeId, RingPoint, VirtualCoords};
+pub use correctness::{correctness, report, CorrectnessReport, NeighborSnapshot};
+pub use fedlay::{build_overlay, fedlay_graph, Membership};

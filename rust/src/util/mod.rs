@@ -1,0 +1,10 @@
+//! Shared substrates: deterministic RNG, statistics, bitsets, timers.
+
+pub mod bitset;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use bitset::BitSet;
+pub use rng::{Rng, SplitMix64};
+pub use stats::{cdf_points, mean, percentile, Summary};

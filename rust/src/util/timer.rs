@@ -1,0 +1,53 @@
+//! Wall-clock timing helpers for the bench harness and telemetry.
+
+use std::time::Instant;
+
+/// Measure one closure invocation in seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}
+
+/// A scope timer that records elapsed seconds into a sink on drop.
+pub struct ScopeTimer<'a> {
+    start: Instant,
+    sink: &'a mut f64,
+}
+
+impl<'a> ScopeTimer<'a> {
+    pub fn new(sink: &'a mut f64) -> Self {
+        Self {
+            start: Instant::now(),
+            sink,
+        }
+    }
+}
+
+impl Drop for ScopeTimer<'_> {
+    fn drop(&mut self) {
+        *self.sink += self.start.elapsed().as_secs_f64();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_positive() {
+        let (v, dt) = time_once(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn scope_timer_accumulates() {
+        let mut acc = 0.0;
+        {
+            let _t = ScopeTimer::new(&mut acc);
+            std::hint::black_box((0..10_000).sum::<u64>());
+        }
+        assert!(acc > 0.0);
+    }
+}

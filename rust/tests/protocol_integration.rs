@@ -1,0 +1,165 @@
+//! Cross-module integration + property tests for the NDMP coordinator.
+//!
+//! proptest is not in the vendored dependency set, so these are seeded
+//! property sweeps: each test iterates over many random seeds/scenarios
+//! and asserts the protocol invariants (Definition 1 correctness, routing
+//! termination, no phantom neighbors) hold on every draw.
+
+use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::ndmp::messages::MS;
+use fedlay::ndmp::routing::{coord_of, greedy_next_hop};
+use fedlay::sim::{churn, grow_network, Simulator};
+use fedlay::topology::correctness::report;
+use fedlay::topology::fedlay::Membership;
+use fedlay::topology::circular_distance;
+use fedlay::util::Rng;
+
+fn overlay(spaces: usize) -> OverlayConfig {
+    OverlayConfig {
+        spaces,
+        heartbeat_ms: 500,
+        failure_multiple: 3,
+        repair_probe_ms: 2_000,
+    }
+}
+
+fn net(seed: u64) -> NetConfig {
+    NetConfig {
+        latency_ms: 80.0,
+        jitter: 0.3,
+        seed,
+    }
+}
+
+/// Property: decentralized growth reaches a Definition-1-correct overlay
+/// for arbitrary seeds, sizes and space counts.
+#[test]
+fn property_grown_networks_are_correct() {
+    for seed in 0..6u64 {
+        let mut rng = Rng::new(seed);
+        let n = 12 + rng.index(25);
+        let spaces = 2 + rng.index(3);
+        let sim = grow_network(overlay(spaces), net(seed), n, 1_200 * MS);
+        let c = sim.correctness();
+        assert!(
+            c > 0.999,
+            "seed {seed}: n={n} L={spaces} correctness {c}"
+        );
+        // and no node holds a phantom peer that left/never existed
+        let r = report(&sim.snapshot(), spaces);
+        assert!(r.missing.is_empty(), "seed {seed}: missing {:?}", r.missing);
+    }
+}
+
+/// Property: greedy routing terminates at the globally closest node from
+/// any start, on any correct membership (Theorem 1), and hop counts are
+/// bounded well below n.
+#[test]
+fn property_greedy_routing_terminates_at_closest() {
+    for seed in 0..5u64 {
+        let mut rng = Rng::new(seed ^ 0x60D);
+        let n = 30 + rng.index(80);
+        let spaces = 2;
+        let m = Membership::dense(n, spaces);
+        for _ in 0..20 {
+            let target_id = 10_000 + rng.next_u64() % 10_000;
+            let space = rng.index(spaces) as u32;
+            let target = coord_of(target_id, space);
+            let mut cur = *m.nodes.keys().nth(rng.index(n)).unwrap();
+            let mut hops = 0;
+            while let Some(w) =
+                greedy_next_hop(cur, target, space, m.correct_neighbors(cur).into_iter())
+            {
+                cur = w;
+                hops += 1;
+                assert!(hops <= n, "routing loop at seed {seed}");
+            }
+            let best = m
+                .nodes
+                .keys()
+                .copied()
+                .min_by(|&a, &b| {
+                    circular_distance(coord_of(a, space), target)
+                        .partial_cmp(&circular_distance(coord_of(b, space), target))
+                        .unwrap()
+                        .then(a.cmp(&b))
+                })
+                .unwrap();
+            assert_eq!(cur, best);
+            assert!(hops < n / 2 + 8, "hops {hops} too high for n={n}");
+        }
+    }
+}
+
+/// Property: mixed random churn (joins + failures interleaved) always
+/// converges back to a correct network once the churn window closes.
+#[test]
+fn property_mixed_churn_recovers() {
+    for seed in 0..3u64 {
+        let mut sim = Simulator::new(overlay(2), net(seed ^ 0xC4));
+        churn::mixed_churn(&mut sim, 24, 10, 20_000 * MS, seed);
+        let t = sim.run_until_correct(1.0, 420_000 * MS, 5_000 * MS);
+        assert!(
+            t.is_some(),
+            "seed {seed}: stuck at correctness {}",
+            sim.correctness()
+        );
+    }
+}
+
+/// Leave protocol: a wave of graceful leaves keeps the network correct
+/// without waiting for failure detection.
+#[test]
+fn graceful_leave_wave_stays_correct() {
+    let mut sim = Simulator::new(overlay(3), net(9));
+    let ids: Vec<u64> = (0..40).collect();
+    sim.bootstrap_correct(&ids);
+    for (k, id) in [3u64, 7, 11, 19, 23].iter().enumerate() {
+        sim.schedule_leave((1_000 + k as u64 * 2_000) * MS, *id);
+    }
+    // run past the last leave before checking convergence
+    sim.run_until(12_000 * MS);
+    let t = sim.run_until_correct(1.0, 120_000 * MS, 1_000 * MS);
+    assert!(t.is_some(), "leaves broke the network: {}", sim.correctness());
+    assert_eq!(sim.nodes.len(), 35);
+}
+
+/// Failure detection time scales with the heartbeat budget: with
+/// failure_multiple=3 and T=500ms, a failure must be repaired within a
+/// few seconds (paper reports ~8 s at 400-node scale).
+#[test]
+fn failure_detection_latency_bounded() {
+    let mut sim = Simulator::new(overlay(2), net(4));
+    let ids: Vec<u64> = (0..30).collect();
+    sim.bootstrap_correct(&ids);
+    sim.schedule_fail(1_000 * MS, 13);
+    // run past the failure instant before watching for recovery
+    sim.run_until(1_100 * MS);
+    assert!(sim.correctness() < 1.0, "failure should dent correctness");
+    let t = sim
+        .run_until_correct(1.0, 60_000 * MS, 250 * MS)
+        .expect("no recovery");
+    let recovery_s = (t - 1_000 * MS) as f64 / 1e6;
+    assert!(
+        recovery_s < 15.0,
+        "recovery took {recovery_s:.1}s (budget: detection 1.5s + routing)"
+    );
+}
+
+/// The simulator itself is deterministic: identical seeds → identical
+/// message counts, correctness trajectories and node sets.
+#[test]
+fn simulation_is_reproducible() {
+    let run = |seed: u64| {
+        let mut sim = Simulator::new(overlay(3), net(seed));
+        churn::mass_join(&mut sim, 20, 8, 10 * MS, seed);
+        churn::sample_correctness(&mut sim, 60_000 * MS, 2_000 * MS);
+        sim.run_until(60_000 * MS);
+        let series: Vec<(u64, f64)> = sim.samples.iter().map(|s| (s.at, s.correctness)).collect();
+        (series, sim.delivered, sim.nodes.len())
+    };
+    assert_eq!(run(5), run(5));
+    let (a, ..) = run(5);
+    let (b, ..) = run(6);
+    assert_ne!(a, b, "different seeds should differ somewhere");
+}

@@ -1,0 +1,112 @@
+//! Integration: the Rust PJRT runtime executing the AOT artifacts
+//! (L3 -> L2 -> L1 composition). Requires `make artifacts` to have run;
+//! tests self-skip when the artifacts are absent.
+
+use fedlay::data::GaussianTask;
+use fedlay::mep::{aggregate_cpu, pack_for_artifact};
+use fedlay::runtime::{find_artifacts_dir, Engine, XInput};
+use fedlay::util::Rng;
+
+fn engine(tasks: &[&str]) -> Option<Engine> {
+    let dir = find_artifacts_dir(None).ok()?;
+    Some(Engine::load(&dir, tasks).expect("engine load"))
+}
+
+#[test]
+fn init_is_deterministic_and_shaped() {
+    let Some(eng) = engine(&["mlp"]) else { return };
+    let p1 = eng.init("mlp", [1, 2]).unwrap();
+    let p2 = eng.init("mlp", [1, 2]).unwrap();
+    let p3 = eng.init("mlp", [3, 4]).unwrap();
+    assert_eq!(p1.len(), eng.manifest.task("mlp").unwrap().param_count);
+    assert_eq!(p1, p2);
+    assert_ne!(p1, p3);
+    assert!(p1.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn train_step_learns_a_fixed_batch() {
+    let Some(eng) = engine(&["mlp"]) else { return };
+    let info = eng.manifest.task("mlp").unwrap().clone();
+    let task = GaussianTask::mnist_like(7);
+    let batch = task.test_batch(info.batch, 42);
+    let mut params = eng.init("mlp", [0, 7]).unwrap();
+    let (_, loss0) = eng
+        .eval_step("mlp", &params, &XInput::F32(&batch.x), &batch.y)
+        .unwrap();
+    let mut last_loss = f32::INFINITY;
+    for _ in 0..15 {
+        let (new, loss) = eng
+            .train_step("mlp", &params, &XInput::F32(&batch.x), &batch.y, 0.1)
+            .unwrap();
+        params = new;
+        last_loss = loss;
+    }
+    let (correct, loss1) = eng
+        .eval_step("mlp", &params, &XInput::F32(&batch.x), &batch.y)
+        .unwrap();
+    assert!(loss1 < loss0, "loss did not fall: {loss0} -> {loss1}");
+    assert!(last_loss.is_finite());
+    assert!(correct >= 0.0 && correct <= info.batch as f32);
+}
+
+#[test]
+fn artifact_aggregation_matches_cpu_reference() {
+    let Some(eng) = engine(&["cnn"]) else { return };
+    let info = eng.manifest.task("cnn").unwrap().clone();
+    let k_max = eng.manifest.k_max;
+    let mut rng = Rng::new(5);
+    let models: Vec<Vec<f32>> = (0..4)
+        .map(|_| (0..info.param_count).map(|_| rng.gaussian() as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    let weights = [0.9, 0.4, 0.1, 0.6];
+    let want = aggregate_cpu(&refs, &weights);
+    let (stack, w) = pack_for_artifact(&refs, &weights, k_max);
+    let got = eng.aggregate("cnn", &stack, &w).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (i, (g, wv)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - wv).abs() < 1e-4 * (1.0 + wv.abs()),
+            "mismatch at {i}: {g} vs {wv}"
+        );
+    }
+}
+
+#[test]
+fn lstm_task_roundtrip() {
+    let Some(eng) = engine(&["lstm"]) else { return };
+    let info = eng.manifest.task("lstm").unwrap().clone();
+    assert_eq!(info.x_dtype, "i32");
+    let mut stream = fedlay::data::CharStream::new(&[1], 3);
+    let (x, y) = stream.batch(info.batch, info.x_len);
+    let params = eng.init("lstm", [9, 9]).unwrap();
+    let (new, loss) = eng
+        .train_step("lstm", &params, &XInput::I32(&x), &y, 0.5)
+        .unwrap();
+    assert_eq!(new.len(), info.param_count);
+    assert!(loss.is_finite() && loss > 0.0);
+    let (correct, eloss) = eng
+        .eval_step("lstm", &new, &XInput::I32(&x), &y)
+        .unwrap();
+    assert!(correct >= 0.0 && correct <= info.batch as f32);
+    assert!(eloss.is_finite());
+}
+
+#[test]
+fn shape_mismatches_are_rejected() {
+    let Some(eng) = engine(&["cnn"]) else { return };
+    let info = eng.manifest.task("cnn").unwrap().clone();
+    let params = vec![0.0f32; info.param_count];
+    let bad_x = vec![0.0f32; 3];
+    let y = vec![0i32; info.batch];
+    assert!(eng
+        .train_step("cnn", &params, &XInput::F32(&bad_x), &y, 0.1)
+        .is_err());
+    let short_params = vec![0.0f32; 10];
+    let x = vec![0.0f32; info.batch * info.x_len];
+    assert!(eng
+        .train_step("cnn", &short_params, &XInput::F32(&x), &y, 0.1)
+        .is_err());
+    assert!(eng.task("mlp").is_err(), "mlp not loaded in this engine");
+}

@@ -1,0 +1,63 @@
+//! Real-TCP integration: a small FedLay fleet on localhost exercising the
+//! full stack — NDMP join over sockets, MEP offer/request/payload, local
+//! training and aggregation through per-node PJRT engines.
+//! (The 16-node version is examples/prototype_16.rs.)
+
+use fedlay::config::OverlayConfig;
+use fedlay::net::{spawn, ClientNodeConfig};
+use fedlay::runtime::find_artifacts_dir;
+
+#[test]
+fn five_node_tcp_fleet_joins_and_learns() {
+    let Ok(dir) = find_artifacts_dir(None) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = 5u64;
+    let base_port = 7800u16;
+    let overlay = OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 400,
+        failure_multiple: 3,
+        repair_probe_ms: 1_200,
+    };
+    let shards = fedlay::data::shard_labels(n as usize, 10, 8, 7);
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let cfg = ClientNodeConfig {
+            id,
+            base_port,
+            bootstrap: if id == 0 { None } else { Some(0) },
+            overlay: overlay.clone(),
+            artifacts_dir: dir.clone(),
+            task: "mlp".into(),
+            label_weights: shards[id as usize].clone(),
+            lr: 0.5,
+            local_steps: 1,
+            period_ms: 1_200,
+            seed: 7,
+        };
+        handles.push(spawn(cfg).expect("spawn"));
+        std::thread::sleep(std::time::Duration::from_millis(if id == 0 { 250 } else { 120 }));
+    }
+    // run the fleet for ~10 s of real protocol time
+    std::thread::sleep(std::time::Duration::from_secs(10));
+    let mut joined = 0;
+    let mut total_ctrl = 0;
+    let mut total_data = 0;
+    for h in handles {
+        let r = h.stop_and_join().expect("report");
+        joined += r.joined as usize;
+        total_ctrl += r.control_sent;
+        total_data += r.data_sent;
+        assert!(
+            r.neighbor_count >= 1,
+            "node {} has no neighbors",
+            r.id
+        );
+        assert!(r.accuracy.is_finite());
+    }
+    assert_eq!(joined, n as usize, "not all nodes joined");
+    assert!(total_ctrl > 0, "no NDMP traffic happened");
+    assert!(total_data > 0, "no MEP traffic happened");
+}
