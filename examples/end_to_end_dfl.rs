@@ -3,12 +3,12 @@
 //! Exercises every layer of the stack on one workload:
 //!   1. a FedLay overlay is built **decentralized** by NDMP joins in the
 //!      discrete-event simulator (350 ms WAN latency, heartbeats, probes);
-//!   2. the resulting *live* overlay graph (not the idealized one) is
-//!      handed to the DFL trainer;
+//!   2. the trainer runs on the *live* NDMP overlay (`fedlay_dynamic`):
+//!      neighborhoods are read from the protocol state each wake;
 //!   3. 16 heterogeneous non-iid clients train the MLP task through the
-//!      AOT artifacts (PJRT; L1 Pallas kernels inside) with MEP
-//!      confidence-weighted asynchronous exchange;
-//!   4. mid-run, 4 clients crash and 4 new ones join (accuracy-under-churn);
+//!      runtime engine with MEP confidence-weighted asynchronous exchange;
+//!   4. mid-run, 4 clients crash and 4 new ones join through the NDMP
+//!      join protocol (accuracy-under-churn on one continuous timeline);
 //!   5. the loss/accuracy curve, per-client CDF, and communication costs
 //!      are printed.
 //!
@@ -19,27 +19,10 @@
 use fedlay::bench_util::Table;
 use fedlay::config::{Config, NetConfig, OverlayConfig};
 use fedlay::dfl::{MethodSpec, Trainer};
-use fedlay::graph::Graph;
 use fedlay::ndmp::messages::MS;
 use fedlay::runtime::{find_artifacts_dir, Engine};
-use fedlay::sim::{grow_network, Simulator};
+use fedlay::sim::grow_network;
 use fedlay::util::cdf_points;
-
-/// Extract the live overlay graph (indices 0..n over live node ids).
-fn live_graph(sim: &Simulator) -> Graph {
-    let ids: Vec<u64> = sim.nodes.keys().copied().collect();
-    let index: std::collections::BTreeMap<u64, usize> =
-        ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
-    let mut g = Graph::new(ids.len());
-    for (&id, st) in &sim.nodes {
-        for n in st.neighbor_ids() {
-            if let (Some(&u), Some(&v)) = (index.get(&id), index.get(&n)) {
-                g.add_edge(u, v);
-            }
-        }
-    }
-    g
-}
 
 fn main() -> anyhow::Result<()> {
     let n = 16;
@@ -57,7 +40,7 @@ fn main() -> anyhow::Result<()> {
         jitter: 0.2,
         seed: 11,
     };
-    let sim = grow_network(overlay, net, n, 1_500 * MS);
+    let sim = grow_network(overlay.clone(), net.clone(), n, 1_500 * MS);
     let correctness = sim.correctness();
     println!("phase 1 — NDMP construction:");
     println!("  topology correctness: {correctness:.4}");
@@ -65,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         "  control messages/node: {:.1}",
         sim.control_messages_per_node()
     );
-    let g = live_graph(&sim);
+    let (g, _ids) = sim.live_graph();
     let tm = fedlay::metrics::evaluate(&g, 3);
     println!(
         "  live overlay: lambda={:.3} diameter={} aspl={:.2} avg degree={:.1}\n",
@@ -81,12 +64,24 @@ fn main() -> anyhow::Result<()> {
     dfl.shards_per_client = 8;
     let dir = find_artifacts_dir(None)?;
     let engine = Engine::load(&dir, &["mlp"])?;
-    let weights = fedlay::data::shard_labels(n, 10, dfl.shards_per_client, dfl.seed);
-    let spec = MethodSpec::fedlay_with_graph(g);
-    let mut trainer = Trainer::new(&engine, spec, dfl, weights)?;
-    println!("phase 2/3 — asynchronous MEP training (5-min base period):");
-    let horizon = 240 * 60 * 1_000_000u64; // 4 simulated hours
-    let sample = 30 * 60 * 1_000_000u64;
+    let joiners = 4usize;
+    let weights = fedlay::data::shard_labels(n + joiners, 10, dfl.shards_per_client, dfl.seed);
+    let spec = MethodSpec::fedlay_dynamic(overlay, net);
+    let mut trainer = Trainer::new(&engine, spec, dfl, weights[..n].to_vec())?;
+    // hand the *decentralized-grown* network from phase 1 to the trainer:
+    // training runs on that exact protocol state, not a fresh bootstrap
+    trainer.adopt_overlay(sim)?;
+    println!("phase 2/3 — asynchronous MEP training on the live overlay:");
+    let minute = 60 * 1_000_000u64;
+    let horizon = 240 * minute; // 4 simulated hours
+    let sample = 30 * minute;
+    // phase 4: 4 crash-failures at t=80min, 4 NDMP joins at t=120min
+    for &f in &[2usize, 5, 9, 13] {
+        trainer.schedule_fail(80 * minute, f);
+    }
+    for (j, &boot) in [0usize, 3, 6, 10].iter().enumerate() {
+        trainer.schedule_join(120 * minute, weights[n + j].clone(), boot)?;
+    }
     trainer.run(horizon, sample)?;
     let mut t = Table::new(&["t (min)", "mean acc", "mean loss"]);
     for s in &trainer.samples {
@@ -104,17 +99,17 @@ fn main() -> anyhow::Result<()> {
     for (acc, frac) in cdf_points(&last.per_client) {
         println!("  acc<={acc:.3}: {frac:.2}");
     }
-    let spread = last
-        .per_client
+    // spread over *live* clients (failed clients keep their frozen model)
+    let live_accs: Vec<f64> = trainer
+        .clients
         .iter()
-        .cloned()
-        .fold(f64::NEG_INFINITY, f64::max)
-        - last
-            .per_client
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min);
-    println!("  spread (max-min): {spread:.3}  — no stragglers expected");
+        .zip(&last.per_client)
+        .filter(|(c, _)| c.alive)
+        .map(|(_, &a)| a)
+        .collect();
+    let spread = live_accs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        - live_accs.iter().cloned().fold(f64::INFINITY, f64::min);
+    println!("  spread (max-min, live): {spread:.3}  — no stragglers expected");
 
     // --- comm cost ---
     println!("\ncommunication:");
@@ -129,6 +124,19 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- sanity gates for EXPERIMENTS.md ---
+    let churn_correct = trainer
+        .overlay
+        .as_ref()
+        .map(|s| s.correctness())
+        .unwrap_or(0.0);
+    println!(
+        "\nphase 4 — churn: overlay correctness {churn_correct:.3} with {} live nodes",
+        trainer.clients.iter().filter(|c| c.alive).count()
+    );
+    anyhow::ensure!(
+        churn_correct > 0.999,
+        "NDMP did not repair/extend the overlay under churn"
+    );
     let base = trainer.samples[0].mean_accuracy;
     anyhow::ensure!(
         last.mean_accuracy > base + 0.25,

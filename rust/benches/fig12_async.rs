@@ -4,11 +4,17 @@
 //! low = 2x medium period), asynchronous exchange converges faster because
 //! high-capacity clients never wait for stragglers; synchronous rounds run
 //! at the slowest client's period.
+//!
+//! Churn variant (mlp only): the same asynchronous method on the *live*
+//! NDMP overlay (`Neighborhood::Dynamic`) with mid-run failures and
+//! protocol-level joins — accuracy must stay in the same band, i.e. the
+//! unified engine's churn path does not derail convergence.
 
 use fedlay::bench_util::{scaled, Table};
-use fedlay::config::DflConfig;
+use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
+use fedlay::data::shard_labels;
 use fedlay::dfl::harness::{curves_table, final_acc, minutes_to_accuracy, run_method};
-use fedlay::dfl::MethodSpec;
+use fedlay::dfl::{MethodSpec, Trainer};
 use fedlay::runtime::{find_artifacts_dir, Engine};
 
 fn main() -> anyhow::Result<()> {
@@ -49,6 +55,45 @@ fn main() -> anyhow::Result<()> {
             (final_acc(&a) - final_acc(&s)).abs() < 0.25,
             "{task}: async vs sync diverged unexpectedly"
         );
+
+        if task == "mlp" {
+            let classes = engine.manifest.task(task)?.classes;
+            let overlay = OverlayConfig {
+                heartbeat_ms: 2_000,
+                repair_probe_ms: 8_000,
+                ..OverlayConfig::default()
+            };
+            let joins = 2usize;
+            let weights =
+                shard_labels(clients + joins, classes, cfg.shards_per_client, cfg.seed);
+            let mut c = Trainer::new(
+                &engine,
+                MethodSpec::fedlay_dynamic(overlay, NetConfig::default()),
+                cfg.clone(),
+                weights[..clients].to_vec(),
+            )?;
+            // two failures at t/3, two protocol joins at t/2
+            c.schedule_fail(minutes * 60_000_000 / 3, 2);
+            c.schedule_fail(minutes * 60_000_000 / 3, 9);
+            for j in 0..joins {
+                c.schedule_join(minutes * 60_000_000 / 2, weights[clients + j].clone(), 4 + j)?;
+            }
+            c.run(minutes * 60_000_000, minutes * 60_000_000 / 6)?;
+            println!("=== Fig. 12 churn variant (mlp, live NDMP overlay) ===");
+            print!(
+                "{}",
+                curves_table(&[("async", &a.samples), ("async+churn", &c.samples)]).render()
+            );
+            let correctness = c.overlay.as_ref().map(|s| s.correctness()).unwrap_or(0.0);
+            println!("overlay correctness after churn: {correctness:.3}");
+            assert!(
+                (final_acc(&a) - final_acc(&c)).abs() < 0.25,
+                "churn should not derail async convergence ({:.3} vs {:.3})",
+                final_acc(&a),
+                final_acc(&c)
+            );
+            assert!(correctness > 0.999, "overlay not repaired: {correctness:.3}");
+        }
     }
     println!("\n=== Fig. 12 summary ===");
     print!("{}", summary.render());

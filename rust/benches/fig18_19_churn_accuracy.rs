@@ -3,10 +3,18 @@
 //! the original nodes' and the newly joined nodes' accuracy separately:
 //! new nodes catch up quickly thanks to high-confidence models from the
 //! existing nodes.
+//!
+//! One *continuous* run on the unified engine: the trainer embeds the
+//! NDMP overlay simulator (`Neighborhood::Dynamic`) and the join wave is
+//! N `EventKind::Join` protocol joins at t = 150 min — the joiners enter
+//! through Neighbor Discovery, the live views rewire the learning
+//! topology, and training never stops. (The seed's version faked this
+//! with two separate Trainers and a parameter copy.)
 
 use fedlay::bench_util::{scaled, Table};
-use fedlay::config::DflConfig;
+use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
 use fedlay::data::shard_labels;
+use fedlay::dfl::harness::cohort_acc;
 use fedlay::dfl::{MethodSpec, Trainer};
 use fedlay::runtime::{find_artifacts_dir, Engine};
 use fedlay::util::cdf_points;
@@ -18,37 +26,54 @@ fn main() -> anyhow::Result<()> {
     let dir = find_artifacts_dir(None)?;
     let engine = Engine::load(&dir, &["mlp"])?;
 
-    // Phase 1: train the original cohort alone.
-    let cfg1 = DflConfig {
+    let cfg = DflConfig {
         task: "mlp".into(),
         clients: half,
         local_steps: 3,
         ..DflConfig::default()
     };
-    let w1 = shard_labels(half, 10, 8, cfg1.seed);
-    let mut t1 = Trainer::new(&engine, MethodSpec::fedlay(half, 3), cfg1.clone(), w1.clone())?;
-    t1.run(minutes_pre * 60_000_000, minutes_pre * 60_000_000 / 4)?;
-    let pre_acc = t1.samples.last().unwrap().mean_accuracy;
-    println!("phase 1: {half} original clients, accuracy {pre_acc:.3} at join time");
-
-    // Phase 2: double the network; originals keep their trained models,
-    // joiners start fresh.
-    let cfg2 = DflConfig {
-        clients: 2 * half,
-        ..cfg1.clone()
+    // lighter maintenance traffic: a 2 s heartbeat is plenty at 300 min
+    let overlay = OverlayConfig {
+        heartbeat_ms: 2_000,
+        repair_probe_ms: 8_000,
+        ..OverlayConfig::default()
     };
-    let w2 = shard_labels(2 * half, 10, 8, cfg2.seed ^ 1);
-    let mut t2 = Trainer::new(&engine, MethodSpec::fedlay(2 * half, 3), cfg2, w2)?;
-    for i in 0..half {
-        t2.clients[i].params = t1.clients[i].params.clone();
+    let weights = shard_labels(2 * half, 10, 8, cfg.seed);
+    let mut t = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay, NetConfig::default()),
+        cfg,
+        weights[..half].to_vec(),
+    )?;
+
+    // Schedule the join wave: N protocol-level joins at t = 150 min, each
+    // bootstrapping through a distinct original node.
+    let join_at = minutes_pre * 60_000_000;
+    let total = (minutes_pre + minutes_post) * 60_000_000;
+    for j in 0..half {
+        t.schedule_join(join_at, weights[half + j].clone(), j % half)?;
     }
-    t2.run(minutes_post * 60_000_000, minutes_post * 60_000_000 / 5)?;
+    t.run(total, total / 10)?;
+
+    let pre_acc = t
+        .samples
+        .iter()
+        .filter(|s| s.at < join_at)
+        .last()
+        .map(|s| cohort_acc(s, 0..half))
+        .unwrap_or(0.0);
+    println!("phase 1: {half} original clients, accuracy {pre_acc:.3} at join time");
+    let correctness = t.overlay.as_ref().map(|s| s.correctness()).unwrap_or(0.0);
+    println!(
+        "overlay after churn: {} live nodes, correctness {correctness:.3}",
+        t.overlay.as_ref().map(|s| s.nodes.len()).unwrap_or(0)
+    );
 
     println!("\n=== Fig. 18: accuracy of original vs newly joined nodes ===");
     let mut table = Table::new(&["t (min)", "original", "new joiners"]);
-    for s in &t2.samples {
-        let old_acc: f64 = s.per_client[..half].iter().sum::<f64>() / half as f64;
-        let new_acc: f64 = s.per_client[half..].iter().sum::<f64>() / half as f64;
+    for s in &t.samples {
+        let old_acc = cohort_acc(s, 0..half);
+        let new_acc = cohort_acc(s, half..2 * half);
         table.row(&[
             format!("{:.0}", s.at as f64 / 60e6),
             format!("{:.3}", old_acc),
@@ -58,8 +83,12 @@ fn main() -> anyhow::Result<()> {
     print!("{}", table.render());
 
     // Fig. 19: the per-client CDF at join time vs at the end
-    let first = &t2.samples[0];
-    let last = t2.samples.last().unwrap();
+    let first = t
+        .samples
+        .iter()
+        .find(|s| s.at >= join_at)
+        .expect("no post-join sample");
+    let last = t.samples.last().unwrap();
     println!("\n=== Fig. 19: per-client accuracy CDF ===");
     println!("at join time:");
     for (a, f) in cdf_points(&first.per_client) {
@@ -70,10 +99,11 @@ fn main() -> anyhow::Result<()> {
         println!("  {a:.3} -> {f:.2}");
     }
 
-    // shape checks: joiners start near chance, converge toward originals
-    let new_start: f64 = first.per_client[half..].iter().sum::<f64>() / half as f64;
-    let new_end: f64 = last.per_client[half..].iter().sum::<f64>() / half as f64;
-    let old_end: f64 = last.per_client[..half].iter().sum::<f64>() / half as f64;
+    // shape checks: joiners start near chance, converge toward originals,
+    // and the protocol join wave actually rebuilt a correct overlay
+    let new_start = cohort_acc(first, half..2 * half);
+    let new_end = cohort_acc(last, half..2 * half);
+    let old_end = cohort_acc(last, 0..half);
     assert!(new_start < 0.3, "joiners should start low (got {new_start:.3})");
     assert!(
         new_end > new_start + 0.2,
@@ -82,6 +112,10 @@ fn main() -> anyhow::Result<()> {
     assert!(
         (old_end - new_end).abs() < 0.15,
         "cohorts should converge together ({old_end:.3} vs {new_end:.3})"
+    );
+    assert!(
+        correctness > 0.999,
+        "NDMP should rebuild a correct overlay (got {correctness:.3})"
     );
     println!("\nfig18/19 shape checks OK");
     Ok(())

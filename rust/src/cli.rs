@@ -90,9 +90,12 @@ USAGE:
                   [--nodes N] [--seed S]
   fedlay churn    [--initial N] [--joins J] [--fails F] [--until-ms T]
                   [--set overlay.spaces=L] [--set net.latency_ms=350]
-  fedlay train    [--method fedlay|fedavg|gaia|dfl-dds|chord]
+  fedlay train    [--method fedlay|fedlay-dyn|fedavg|gaia|dfl-dds|chord]
                   [--set dfl.task=mlp] [--set dfl.clients=16]
                   [--minutes M] [--sample-minutes S]
+                  [--joins J] [--fails F] [--churn-at-min T]
+                  (fedlay-dyn runs on the live NDMP overlay; --joins adds
+                   J clients mid-run through the protocol join)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
                   (one real TCP client; spawn several for a live network)
 

@@ -25,6 +25,10 @@ pub struct ClientState {
     pub rng: Rng,
     /// Next time this client wakes to train+exchange.
     pub next_wake: Time,
+    /// Live in the current run. Scheduled joiners start dead (placeholder
+    /// until their `TrainEvent::Join` fires); failed/left clients stop
+    /// waking and drop out of every neighborhood and the accuracy mean.
+    pub alive: bool,
     /// Telemetry: bytes of model payload sent, exchanges skipped by dedup.
     pub model_bytes_sent: u64,
     pub dedup_skips: u64,
@@ -60,6 +64,7 @@ impl ClientState {
             fingerprints: FingerprintCache::new(),
             rng,
             next_wake,
+            alive: true,
             model_bytes_sent: 0,
             dedup_skips: 0,
             exchanges: 0,

@@ -69,6 +69,19 @@ pub fn final_acc(t: &Trainer) -> f64 {
     t.samples.last().map(|s| s.mean_accuracy).unwrap_or(0.0)
 }
 
+/// Mean accuracy of a client-index cohort in one sample — churn figures
+/// track originals (`0..n`) and joiners (`n..`) separately; the unified
+/// engine keeps `per_client` index-aligned across churn, so cohorts are
+/// plain index ranges.
+pub fn cohort_acc(sample: &AccuracySample, range: std::ops::Range<usize>) -> f64 {
+    let xs = &sample.per_client[range];
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
 /// Simulated minutes needed to first reach `target` accuracy, if ever.
 pub fn minutes_to_accuracy(samples: &[AccuracySample], target: f64) -> Option<f64> {
     samples
@@ -89,6 +102,19 @@ mod tests {
             mean_loss: 1.0,
             per_client: vec![acc],
         }
+    }
+
+    #[test]
+    fn cohort_acc_averages_ranges() {
+        let s = AccuracySample {
+            at: 0,
+            mean_accuracy: 0.5,
+            mean_loss: 1.0,
+            per_client: vec![0.2, 0.4, 0.6, 0.8],
+        };
+        assert!((cohort_acc(&s, 0..2) - 0.3).abs() < 1e-12);
+        assert!((cohort_acc(&s, 2..4) - 0.7).abs() < 1e-12);
+        assert_eq!(cohort_acc(&s, 1..1), 0.0);
     }
 
     #[test]

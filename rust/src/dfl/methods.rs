@@ -21,6 +21,15 @@ pub enum Neighborhood {
     /// DFL-DDS mobility: nodes move (random waypoint on the unit square)
     /// and connect to their `k` nearest at each exchange.
     Mobility { k: usize, speed: f64, seed: u64 },
+    /// Live NDMP overlay: the trainer embeds a `sim::Simulator` advanced
+    /// in lockstep with training time, and a client's aggregation
+    /// neighbors at time `t` are read from its protocol `NodeState` views.
+    /// Mid-training joins/failures rewire the learning graph through the
+    /// actual join/repair protocols (paper Figs. 18/19).
+    Dynamic {
+        overlay: crate::config::OverlayConfig,
+        net: crate::config::NetConfig,
+    },
 }
 
 #[derive(Debug, Clone)]
@@ -38,6 +47,18 @@ impl MethodSpec {
         Self {
             name: format!("fedlay-L{spaces}"),
             neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
+            confidence: true,
+            asynchronous: true,
+        }
+    }
+
+    /// FedLay over the *live* NDMP overlay: neighborhoods are read from an
+    /// embedded protocol simulation, so churn scheduled on the trainer
+    /// rewires the topology mid-training.
+    pub fn fedlay_dynamic(overlay: crate::config::OverlayConfig, net: crate::config::NetConfig) -> Self {
+        Self {
+            name: format!("fedlay-dyn-L{}", overlay.spaces),
+            neighborhood: Neighborhood::Dynamic { overlay, net },
             confidence: true,
             asynchronous: true,
         }

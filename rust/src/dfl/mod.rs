@@ -1,6 +1,9 @@
-//! DFL methods and the training driver: FedLay (MEP over the FedLay
-//! overlay) plus the paper's comparators (FedAvg, Gaia, DFL-DDS, Chord)
-//! executing the AOT model artifacts through the PJRT runtime.
+//! DFL methods and the unified training engine: FedLay (MEP over the
+//! FedLay overlay) plus the paper's comparators (FedAvg, Gaia, DFL-DDS,
+//! Chord), driven by one discrete-event loop (`sim::Scheduler`) in which
+//! client wake-ups, synchronous rounds, accuracy samples and churn are
+//! all heap events. `Neighborhood::Dynamic` embeds the NDMP overlay
+//! simulator so topology maintenance and training share a single clock.
 
 pub mod client;
 pub mod methods;
@@ -8,5 +11,5 @@ pub mod trainer;
 
 pub use client::ClientState;
 pub use methods::{MethodSpec, Mobility, Neighborhood};
-pub use trainer::{AccuracySample, TaskData, Trainer};
+pub use trainer::{AccuracySample, TaskData, TrainEvent, Trainer};
 pub mod harness;

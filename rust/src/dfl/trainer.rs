@@ -1,20 +1,34 @@
-//! The DFL training driver: runs any `MethodSpec` (FedLay or a comparator)
-//! over the AOT runtime, with the paper's client heterogeneity, non-iid
-//! shards, MEP confidence weighting, fingerprint de-dup accounting, and
-//! accuracy sampling. Powers every accuracy figure (Figs. 9–19) and the
-//! scalability/communication study (Fig. 20).
+//! The DFL training driver, rebuilt on the unified discrete-event engine:
+//! client wake-ups, synchronous rounds, accuracy-sample hooks and churn
+//! injections are all heap events on one deterministic scheduler
+//! (`sim::Scheduler<TrainEvent>`), popped in O(log n).
+//!
+//! Under `Neighborhood::Dynamic` the trainer embeds an NDMP overlay
+//! simulator (`sim::Simulator`) and advances it in lockstep with training
+//! time: a client's aggregation neighbors at time `t` are its live
+//! protocol `NodeState` views, so mid-training joins and failures rewire
+//! the learning topology through the actual join/repair protocols —
+//! the paper's central claim that construction/maintenance (NDMP) and
+//! training/exchange (MEP) run *together* (Figs. 18/19).
+//!
+//! Runs any `MethodSpec` (FedLay or a comparator) over the runtime
+//! engine, with the paper's client heterogeneity, non-iid shards, MEP
+//! confidence weighting, and fingerprint de-dup accounting. Powers every
+//! accuracy figure (Figs. 9–19) and the scalability study (Fig. 20).
 
 use super::client::ClientState;
 use super::methods::{MethodSpec, Mobility, Neighborhood};
 use crate::config::DflConfig;
 use crate::data::{CharStream, GaussianTask};
-use crate::mep::{
-    aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams,
-};
+use crate::mep::{aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams};
 use crate::ndmp::messages::Time;
 use crate::runtime::{Engine, XInput};
+use crate::sim::{Scheduler, Simulator};
+use crate::topology::NodeId;
 
 use anyhow::Result;
+use rayon::prelude::*;
+use std::collections::{HashMap, HashSet};
 
 /// Client-local dataset generator.
 pub enum TaskData {
@@ -23,13 +37,60 @@ pub enum TaskData {
     Char(Vec<CharStream>),
 }
 
-/// One recorded accuracy sample.
+/// One recorded accuracy sample. `per_client[i]` is client `i`'s accuracy
+/// (placeholders/failed clients are evaluated too, so cohort slices stay
+/// index-aligned across churn); the means cover live clients only.
 #[derive(Debug, Clone)]
 pub struct AccuracySample {
     pub at: Time,
     pub mean_accuracy: f64,
     pub mean_loss: f64,
     pub per_client: Vec<f64>,
+}
+
+/// Events driving the unified training engine. Everything that used to be
+/// a bespoke loop branch — per-client wake-ups, global synchronous
+/// rounds, accuracy samples — plus protocol-level churn, on one heap.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TrainEvent {
+    /// Asynchronous client wake: local training + MEP exchange.
+    Wake { client: usize },
+    /// Global synchronous round (sync decentralized / FedAvg / Gaia).
+    Round,
+    /// Accuracy-sample hook.
+    Sample,
+    /// `client` joins the live network through `bootstrap`'s NDMP join
+    /// protocol (forwarded to the embedded overlay as `EventKind::Join`).
+    Join { client: usize, bootstrap: usize },
+    /// Crash-fail (silent disappearance; NDMP repair takes over).
+    Fail { client: usize },
+    /// Graceful NDMP leave.
+    Leave { client: usize },
+}
+
+/// Where an aggregation reads neighbor models from: the live client
+/// states (async gossip) or a pre-round snapshot (synchronous rounds).
+enum ModelSource<'a> {
+    Live,
+    Snapshot(&'a [Vec<f32>]),
+}
+
+impl ModelSource<'_> {
+    fn model<'c>(&'c self, clients: &'c [ClientState], j: usize) -> &'c [f32] {
+        match self {
+            ModelSource::Live => &clients[j].params,
+            ModelSource::Snapshot(s) => &s[j],
+        }
+    }
+}
+
+/// A fully resolved MEP aggregation for one client: the participants
+/// (self first, then neighbors) and their confidence weights. Built once
+/// per exchange by `plan_aggregation` — the *single* aggregation path for
+/// both the live and the snapshot model source.
+struct AggregationPlan {
+    members: Vec<usize>,
+    weights: Vec<f64>,
 }
 
 pub struct Trainer<'e> {
@@ -39,14 +100,26 @@ pub struct Trainer<'e> {
     pub cfg: DflConfig,
     pub clients: Vec<ClientState>,
     pub samples: Vec<AccuracySample>,
+    /// Embedded NDMP overlay (Neighborhood::Dynamic), advanced in
+    /// lockstep with training time.
+    pub overlay: Option<Simulator>,
     data: TaskData,
     mobility: Option<Mobility>,
     conf: ConfidenceParams,
     pub now: Time,
+    /// The unified event heap: wakes, rounds, samples, churn.
+    queue: Scheduler<TrainEvent>,
+    /// Shared initialization (also handed to mid-run joiners, mirroring
+    /// the paper's "new nodes start from the common init").
+    init_params: Vec<f32>,
     /// Evaluation batches (cached: same test set for every sample).
     eval_x: Vec<Vec<f32>>,
     eval_xi: Vec<Vec<i32>>,
     eval_y: Vec<Vec<i32>>,
+    /// Per-model eval memo keyed by parameter fingerprint: after any
+    /// broadcast round every client shares one model, which then costs a
+    /// single evaluation instead of `n`.
+    eval_cache: HashMap<u64, (f64, f64)>,
     /// Skip real training (scalability mode: reuse pre-trained params).
     pub freeze_training: bool,
 }
@@ -93,17 +166,7 @@ impl<'e> Trainer<'e> {
                 let streams = label_weights
                     .iter()
                     .enumerate()
-                    .map(|(i, w)| {
-                        // each nonzero label acts as a Shakespeare "role"
-                        let roles: Vec<u64> = w
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, &x)| x > 0.0)
-                            .map(|(l, _)| cfg.seed ^ (l as u64 + 1))
-                            .collect();
-                        let roles = if roles.is_empty() { vec![cfg.seed] } else { roles };
-                        CharStream::new(&roles, cfg.seed ^ (i as u64) << 8)
-                    })
+                    .map(|(i, w)| char_stream_for(&cfg, i, w))
                     .collect();
                 TaskData::Char(streams)
             }
@@ -116,6 +179,9 @@ impl<'e> Trainer<'e> {
             }
             _ => None,
         };
+        // Dynamic's embedded NDMP fleet is built lazily at the first
+        // `run` (see `ensure_overlay`) so `adopt_overlay` callers don't
+        // pay for a bootstrap that is immediately replaced.
         // fixed iid eval set: 2 batches
         let mut eval_x = Vec::new();
         let mut eval_xi = Vec::new();
@@ -143,13 +209,17 @@ impl<'e> Trainer<'e> {
             cfg,
             clients,
             samples: Vec::new(),
+            overlay: None,
             data,
             mobility,
             conf: ConfidenceParams::default(),
             now: 0,
+            queue: Scheduler::new(),
+            init_params,
             eval_x,
             eval_xi,
             eval_y,
+            eval_cache: HashMap::new(),
             freeze_training: false,
         })
     }
@@ -157,6 +227,125 @@ impl<'e> Trainer<'e> {
     fn info_batch(&self) -> (usize, usize) {
         let info = self.engine.manifest.task(&self.task_name).unwrap();
         (info.batch, info.x_len)
+    }
+
+    /// Centralized topologies (Star/Regions) and `asynchronous = false`
+    /// methods advance in global rounds; everything else gossips on
+    /// per-client wake events.
+    fn synchronous(&self) -> bool {
+        !self.spec.asynchronous
+            || matches!(
+                self.spec.neighborhood,
+                Neighborhood::Star | Neighborhood::Regions { .. }
+            )
+    }
+
+    // ------------------------------------------------------------------
+    // Churn scheduling (heap events, executed mid-run)
+    // ------------------------------------------------------------------
+
+    /// Register a client that joins the live network at `at` through
+    /// `bootstrap`'s NDMP join protocol. The client exists immediately as
+    /// a dead placeholder (so cohort indices are stable) and comes alive
+    /// — in both the training loop and the overlay — when the event
+    /// fires. Returns the new client's id.
+    pub fn schedule_join(
+        &mut self,
+        at: Time,
+        label_weights: Vec<f64>,
+        bootstrap: usize,
+    ) -> Result<usize> {
+        anyhow::ensure!(
+            matches!(self.spec.neighborhood, Neighborhood::Dynamic { .. }),
+            "mid-run joins need Neighborhood::Dynamic (NDMP-backed); static graphs cannot grow"
+        );
+        anyhow::ensure!(bootstrap < self.clients.len(), "bootstrap {bootstrap} unknown");
+        let i = self.clients.len();
+        let base_period = self.cfg.comm_period_ms * 1_000;
+        let mut c = ClientState::new(
+            i,
+            Capacity::assign(i, i + 1),
+            base_period,
+            label_weights.clone(),
+            self.init_params.clone(),
+            self.cfg.seed ^ 0xC11E,
+        );
+        c.alive = false;
+        // `MethodSpec` fields are public, so a hand-built synchronous
+        // Dynamic spec is possible; keep joiners on the shared round
+        // period in that case.
+        if !self.spec.asynchronous {
+            c.schedule.period = self.clients[0].schedule.period;
+            c.schedule.synchronous = true;
+        }
+        self.clients.push(c);
+        if let TaskData::Char(streams) = &mut self.data {
+            streams.push(char_stream_for(&self.cfg, i, &label_weights));
+        }
+        self.queue.push(at, TrainEvent::Join { client: i, bootstrap });
+        Ok(i)
+    }
+
+    /// Crash-fail `client` at `at`: it silently stops waking; under
+    /// Dynamic the overlay node disappears and NDMP repair rewires around
+    /// it.
+    pub fn schedule_fail(&mut self, at: Time, client: usize) {
+        self.queue.push(at, TrainEvent::Fail { client });
+    }
+
+    /// Graceful departure at `at` (NDMP leave under Dynamic).
+    pub fn schedule_leave(&mut self, at: Time, client: usize) {
+        self.queue.push(at, TrainEvent::Leave { client });
+    }
+
+    /// Replace the embedded overlay with an existing simulation — e.g. a
+    /// network grown *decentralized* via `sim::grow_network` — so training
+    /// continues on that exact protocol state instead of a fresh
+    /// centralized bootstrap. Requires `Neighborhood::Dynamic`, must be
+    /// called before `run`, and every client needs a live node. The
+    /// adopted overlay's clock may be ahead of the training clock;
+    /// maintenance resumes once training time passes it.
+    pub fn adopt_overlay(&mut self, sim: Simulator) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.spec.neighborhood, Neighborhood::Dynamic { .. }),
+            "adopt_overlay needs Neighborhood::Dynamic"
+        );
+        anyhow::ensure!(
+            self.now == 0 && self.samples.is_empty(),
+            "adopt_overlay must be called before run()"
+        );
+        for id in 0..self.clients.len() as NodeId {
+            anyhow::ensure!(
+                sim.nodes.contains_key(&id),
+                "adopted overlay is missing node {id}"
+            );
+        }
+        self.overlay = Some(sim);
+        Ok(())
+    }
+
+    /// Build the embedded overlay on first use (Dynamic only): the
+    /// original `cfg.clients` start as an instantly-correct network —
+    /// the decentralized path for later arrivals is `schedule_join`, and
+    /// `adopt_overlay` substitutes a grown network wholesale.
+    fn ensure_overlay(&mut self) {
+        if self.overlay.is_some() {
+            return;
+        }
+        if let Neighborhood::Dynamic { overlay, net } = &self.spec.neighborhood {
+            let mut sim = Simulator::new(overlay.clone(), net.clone());
+            let ids: Vec<NodeId> = (0..self.cfg.clients as NodeId).collect();
+            sim.bootstrap_correct(&ids);
+            self.overlay = Some(sim);
+        }
+    }
+
+    /// Advance the embedded overlay protocol to the trainer clock.
+    fn sync_overlay(&mut self) {
+        let now = self.now;
+        if let Some(sim) = self.overlay.as_mut() {
+            sim.run_until(now);
+        }
     }
 
     /// Draw a local training batch for client `i`.
@@ -196,44 +385,71 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
-    /// Neighbor ids of client `i` at the current time.
+    /// Live-neighbor ids of client `i` at the current time.
     fn neighbors_of(&mut self, i: usize) -> Vec<usize> {
+        let n = self.clients.len();
         match &self.spec.neighborhood {
-            Neighborhood::Static(g) => g.neighbors(i).collect(),
-            Neighborhood::Star => (0..self.clients.len()).filter(|&j| j != i).collect(),
+            Neighborhood::Static(g) => g
+                .neighbors(i)
+                .filter(|&j| self.clients[j].alive)
+                .collect(),
+            Neighborhood::Star => (0..n)
+                .filter(|&j| j != i && self.clients[j].alive)
+                .collect(),
             Neighborhood::Regions { assignment, .. } => {
                 let r = assignment[i];
-                (0..self.clients.len())
-                    .filter(|&j| j != i && assignment[j] == r)
+                (0..n)
+                    .filter(|&j| j != i && assignment[j] == r && self.clients[j].alive)
                     .collect()
             }
             Neighborhood::Mobility { .. } => {
                 let g = self.mobility.as_mut().expect("mobility state").step();
-                g.neighbors(i).collect()
+                g.neighbors(i)
+                    .filter(|&j| self.clients[j].alive)
+                    .collect()
+            }
+            Neighborhood::Dynamic { .. } => {
+                let sim = self.overlay.as_ref().expect("dynamic overlay state");
+                match sim.nodes.get(&(i as NodeId)) {
+                    Some(st) => st
+                        .ring_neighbor_ids()
+                        .into_iter()
+                        .filter_map(|id| {
+                            let j = id as usize;
+                            (j != i && j < n && self.clients[j].alive).then_some(j)
+                        })
+                        .collect(),
+                    None => Vec::new(), // not joined yet / failed
+                }
             }
         }
     }
 
-    /// MEP aggregation for client `i` over `nbrs` (paper §III-C2), with
-    /// fingerprint de-dup accounting (§III-C3).
-    fn aggregate(&mut self, i: usize, nbrs: &[usize]) -> Result<()> {
-        if nbrs.is_empty() {
-            return Ok(());
-        }
-        // fingerprint / transfer accounting: i "pulls" each neighbor's
-        // latest model unless the fingerprint matches the last pull
-        let p_bytes = (self.clients[i].params.len() * 4) as u64;
+    // ------------------------------------------------------------------
+    // MEP aggregation — the single path for live and snapshot sources
+    // ------------------------------------------------------------------
+
+    /// Resolve one MEP aggregation (paper §III-C2): fingerprint de-dup and
+    /// transfer accounting (§III-C3) against the model source, then the
+    /// confidence weights normalized over the neighborhood ∪ {i}.
+    fn plan_aggregation(
+        &mut self,
+        i: usize,
+        nbrs: &[usize],
+        source: &ModelSource<'_>,
+    ) -> AggregationPlan {
+        // i "pulls" each neighbor's latest model unless the fingerprint
+        // matches the last pull; the sender pays the payload bytes.
+        let p_bytes = (source.model(&self.clients, i).len() * 4) as u64;
         for &j in nbrs {
-            let fp = fingerprint(&self.clients[j].params);
+            let fp = fingerprint(source.model(&self.clients, j));
             if self.clients[i].fingerprints.is_duplicate(j as u64, fp) {
                 self.clients[i].dedup_skips += 1;
             } else {
                 self.clients[i].fingerprints.record(j as u64, fp);
-                // sender j pays the payload bytes
                 self.clients[j].model_bytes_sent += p_bytes;
             }
         }
-        // confidence weights normalized over the neighborhood ∪ {i}
         let hood: Vec<(f64, f64)> = std::iter::once(self.clients[i].raw_confidence())
             .chain(nbrs.iter().map(|&j| self.clients[j].raw_confidence()))
             .collect();
@@ -242,20 +458,30 @@ impl<'e> Trainer<'e> {
         } else {
             vec![1.0; hood.len()]
         };
-        let k_max = self.engine.manifest.k_max;
-        let new = if hood.len() <= k_max {
+        let members = std::iter::once(i).chain(nbrs.iter().copied()).collect();
+        AggregationPlan { members, weights }
+    }
+
+    /// Execute one MEP aggregation for client `i` over `nbrs`.
+    fn aggregate(&mut self, i: usize, nbrs: &[usize], source: ModelSource<'_>) -> Result<()> {
+        if nbrs.is_empty() {
+            return Ok(());
+        }
+        let plan = self.plan_aggregation(i, nbrs, &source);
+        let engine = self.engine;
+        let k_max = engine.manifest.k_max;
+        let models: Vec<&[f32]> = plan
+            .members
+            .iter()
+            .map(|&j| source.model(&self.clients, j))
+            .collect();
+        let new = if models.len() <= k_max {
             // hot path: the L1 Pallas kernel inside the agg artifact
-            let models: Vec<&[f32]> = std::iter::once(self.clients[i].params.as_slice())
-                .chain(nbrs.iter().map(|&j| self.clients[j].params.as_slice()))
-                .collect();
-            let (stack, w) = pack_for_artifact(&models, &weights, k_max);
-            self.engine.aggregate(&self.task_name, &stack, &w)?
+            let (stack, w) = pack_for_artifact(&models, &plan.weights, k_max);
+            engine.aggregate(&self.task_name, &stack, &w)?
         } else {
             // oversized neighborhood (complete graph / star): CPU fallback
-            let models: Vec<&[f32]> = std::iter::once(self.clients[i].params.as_slice())
-                .chain(nbrs.iter().map(|&j| self.clients[j].params.as_slice()))
-                .collect();
-            aggregate_cpu(&models, &weights)
+            aggregate_cpu(&models, &plan.weights)
         };
         self.clients[i].params = new;
         self.clients[i].version += 1;
@@ -265,11 +491,19 @@ impl<'e> Trainer<'e> {
 
     /// Centralized FedAvg round: global average, broadcast to everyone.
     fn fedavg_round(&mut self) -> Result<()> {
-        let models: Vec<&[f32]> = self.clients.iter().map(|c| c.params.as_slice()).collect();
+        let models: Vec<&[f32]> = self
+            .clients
+            .iter()
+            .filter(|c| c.alive)
+            .map(|c| c.params.as_slice())
+            .collect();
+        if models.is_empty() {
+            return Ok(());
+        }
         let weights = vec![1.0; models.len()];
         let global = aggregate_cpu(&models, &weights);
         let p_bytes = (global.len() * 4) as u64;
-        for c in &mut self.clients {
+        for c in self.clients.iter_mut().filter(|c| c.alive) {
             c.params = global.clone();
             c.version += 1;
             c.exchanges += 1;
@@ -281,26 +515,29 @@ impl<'e> Trainer<'e> {
 
     /// Gaia round: average within each region, then across region servers.
     fn gaia_round(&mut self, assignment: &[usize], regions: usize) -> Result<()> {
-        let p = self.clients[0].params.len();
-        let mut region_models = vec![vec![0.0f32; p]; regions];
+        let mut region_models: Vec<Option<Vec<f32>>> = vec![None; regions];
         for r in 0..regions {
             let members: Vec<&[f32]> = self
                 .clients
                 .iter()
-                .filter(|c| assignment[c.id] == r)
+                .filter(|c| c.alive && assignment[c.id] == r)
                 .map(|c| c.params.as_slice())
                 .collect();
             if members.is_empty() {
-                continue;
+                continue; // a fully-failed region drops out of the average
             }
-            region_models[r] = aggregate_cpu(&members, &vec![1.0; members.len()]);
+            region_models[r] = Some(aggregate_cpu(&members, &vec![1.0; members.len()]));
         }
-        // inter-region complete-graph averaging (region sizes equal)
-        let refs: Vec<&[f32]> = region_models.iter().map(|m| m.as_slice()).collect();
+        // inter-region complete-graph averaging over populated regions
+        let refs: Vec<&[f32]> = region_models.iter().filter_map(|m| m.as_deref()).collect();
+        if refs.is_empty() {
+            return Ok(());
+        }
+        let p = refs[0].len();
         let global = aggregate_cpu(&refs, &vec![1.0; refs.len()]);
         let p_bytes = (p * 4) as u64;
         let members_per_region = (self.clients.len() / regions.max(1)).max(1) as u64;
-        for c in &mut self.clients {
+        for c in self.clients.iter_mut().filter(|c| c.alive) {
             c.params = global.clone();
             c.version += 1;
             c.exchanges += 1;
@@ -311,37 +548,69 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
-    /// Evaluate all clients on the fixed iid test set.
+    /// Evaluate all clients on the fixed iid test set. Distinct models are
+    /// found by fingerprint, the fresh ones evaluated in parallel, and
+    /// results memoized — after a broadcast round `n` identical clients
+    /// cost one evaluation.
     pub fn evaluate(&mut self) -> Result<AccuracySample> {
         let (batch, _) = self.info_batch();
-        let mut per_client = Vec::with_capacity(self.clients.len());
-        let mut losses = 0.0;
-        for c in &self.clients {
-            let mut correct = 0.0f64;
-            let mut loss = 0.0f64;
-            let nb = self.eval_y.len();
-            for e in 0..nb {
-                let x = if !self.eval_x.is_empty() {
-                    XInput::F32(&self.eval_x[e])
-                } else {
-                    XInput::I32(&self.eval_xi[e])
-                };
-                let (cr, lo) = self
-                    .engine
-                    .eval_step(&self.task_name, &c.params, &x, &self.eval_y[e])?;
-                correct += cr as f64;
-                loss += lo as f64;
-            }
-            per_client.push(correct / (nb * batch) as f64);
-            losses += loss / nb as f64;
+        let nb = self.eval_y.len();
+        let fps: Vec<u64> = self.clients.iter().map(|c| fingerprint(&c.params)).collect();
+        // bound the memo before extending it (long runs, many versions)
+        if self.eval_cache.len() > 8 * self.clients.len().max(8) {
+            let keep: HashSet<u64> = fps.iter().copied().collect();
+            self.eval_cache.retain(|k, _| keep.contains(k));
         }
-        let sample = AccuracySample {
+        let mut seen = HashSet::new();
+        let fresh: Vec<(u64, usize)> = fps
+            .iter()
+            .enumerate()
+            .filter(|&(_, fp)| !self.eval_cache.contains_key(fp) && seen.insert(*fp))
+            .map(|(i, &fp)| (fp, i))
+            .collect();
+        let this: &Self = &*self;
+        let evaluated = fresh
+            .par_iter()
+            .map(|&(fp, i)| -> Result<(u64, (f64, f64))> {
+                let mut correct = 0.0f64;
+                let mut loss = 0.0f64;
+                for e in 0..nb {
+                    let x = if !this.eval_x.is_empty() {
+                        XInput::F32(&this.eval_x[e])
+                    } else {
+                        XInput::I32(&this.eval_xi[e])
+                    };
+                    let (cr, lo) = this.engine.eval_step(
+                        &this.task_name,
+                        &this.clients[i].params,
+                        &x,
+                        &this.eval_y[e],
+                    )?;
+                    correct += cr as f64;
+                    loss += lo as f64;
+                }
+                Ok((fp, (correct / (nb * batch) as f64, loss / nb as f64)))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.eval_cache.extend(evaluated);
+        let mut per_client = Vec::with_capacity(self.clients.len());
+        let (mut acc_sum, mut loss_sum, mut live) = (0.0, 0.0, 0usize);
+        for (i, c) in self.clients.iter().enumerate() {
+            let (acc, lo) = self.eval_cache[&fps[i]];
+            per_client.push(acc);
+            if c.alive {
+                acc_sum += acc;
+                loss_sum += lo;
+                live += 1;
+            }
+        }
+        let denom = live.max(1) as f64;
+        Ok(AccuracySample {
             at: self.now,
-            mean_accuracy: per_client.iter().sum::<f64>() / per_client.len() as f64,
-            mean_loss: losses / self.clients.len() as f64,
+            mean_accuracy: acc_sum / denom,
+            mean_loss: loss_sum / denom,
             per_client,
-        };
-        Ok(sample)
+        })
     }
 
     pub fn record_sample(&mut self) -> Result<()> {
@@ -351,19 +620,62 @@ impl<'e> Trainer<'e> {
     }
 
     /// Run until `until` (µs of simulated time), sampling accuracy every
-    /// `sample_every`. Returns the final sample.
+    /// `sample_every`. One event loop serves every method: synchronous
+    /// rounds, asynchronous gossip, and scheduled churn all pop from the
+    /// same heap, and the embedded overlay (if any) advances in lockstep.
+    /// Returns the final sample.
     pub fn run(&mut self, until: Time, sample_every: Time) -> Result<AccuracySample> {
-        self.record_sample()?; // t = 0 baseline
-        let mut next_sample = sample_every;
-        match (&self.spec.neighborhood, self.spec.asynchronous) {
-            // synchronous / centralized methods advance in global rounds
-            (Neighborhood::Star, _) | (Neighborhood::Regions { .. }, _) | (_, false) => {
+        self.ensure_overlay();
+        // baseline at the current clock (skipped on resume if the prior
+        // run already sampled this instant)
+        if self.samples.last().map(|s| s.at) != Some(self.now) {
+            self.record_sample()?;
+        }
+        // Seed the wake/round/sample chains on the first run only; the
+        // chains re-push themselves unconditionally, so events past
+        // `until` stay queued and a later `run` resumes them — calling
+        // `run` again continues training rather than double-scheduling.
+        if self.now == 0 {
+            if self.synchronous() {
                 let period = self.clients[0].schedule.period;
-                let mut t = period;
-                while t <= until {
-                    self.now = t;
+                self.queue.push(period, TrainEvent::Round);
+            } else {
+                for i in 0..self.clients.len() {
+                    if self.clients[i].alive {
+                        self.queue
+                            .push(self.clients[i].next_wake, TrainEvent::Wake { client: i });
+                    }
+                }
+            }
+            if sample_every > 0 {
+                self.queue.push(sample_every, TrainEvent::Sample);
+            }
+        }
+        while let Some(t) = self.queue.peek_time() {
+            if t > until {
+                break;
+            }
+            let ev = self.queue.pop().unwrap();
+            self.now = ev.at;
+            self.sync_overlay();
+            match ev.kind {
+                TrainEvent::Wake { client: i } => {
+                    if !self.clients[i].alive {
+                        continue; // failed/left while the wake was queued
+                    }
+                    self.local_train(i)?;
+                    let nbrs = self.neighbors_of(i);
+                    self.aggregate(i, &nbrs, ModelSource::Live)?;
+                    let period = self.clients[i].schedule.period;
+                    self.clients[i].next_wake = self.now + period;
+                    self.queue
+                        .push(self.now + period, TrainEvent::Wake { client: i });
+                }
+                TrainEvent::Round => {
                     for i in 0..self.clients.len() {
-                        self.local_train(i)?;
+                        if self.clients[i].alive {
+                            self.local_train(i)?;
+                        }
                     }
                     match self.spec.neighborhood.clone() {
                         Neighborhood::Star => self.fedavg_round()?,
@@ -376,92 +688,76 @@ impl<'e> Trainer<'e> {
                             let snapshot: Vec<Vec<f32>> =
                                 self.clients.iter().map(|c| c.params.clone()).collect();
                             for i in 0..self.clients.len() {
+                                if !self.clients[i].alive {
+                                    continue;
+                                }
                                 let nbrs = self.neighbors_of(i);
-                                self.aggregate_snapshot(i, &nbrs, &snapshot)?;
+                                self.aggregate(i, &nbrs, ModelSource::Snapshot(&snapshot))?;
                             }
                         }
                     }
-                    while next_sample <= t {
-                        self.record_sample()?;
-                        next_sample += sample_every;
-                    }
-                    t += period;
+                    self.queue
+                        .push(self.now + self.clients[0].schedule.period, TrainEvent::Round);
                 }
-            }
-            // asynchronous gossip: clients wake on their own periods
-            _ => {
-                loop {
-                    let (idx, wake) = self
-                        .clients
-                        .iter()
-                        .map(|c| c.next_wake)
-                        .enumerate()
-                        .min_by_key(|&(_, w)| w)
-                        .unwrap();
-                    if wake > until {
-                        break;
+                TrainEvent::Sample => {
+                    self.record_sample()?;
+                    self.queue
+                        .push(self.now + sample_every.max(1), TrainEvent::Sample);
+                }
+                TrainEvent::Join { client, bootstrap } => {
+                    // The paper's minimal assumption is one live contact.
+                    // If the scheduled bootstrap died meanwhile,
+                    // re-bootstrap through any other live member; with no
+                    // live contact at all the joiner cannot enter the
+                    // network and stays a dead placeholder.
+                    let boot = if self.clients[bootstrap].alive {
+                        Some(bootstrap)
+                    } else {
+                        self.clients.iter().position(|c| c.alive && c.id != client)
+                    };
+                    let mut entered = false;
+                    if let (Some(sim), Some(b)) = (self.overlay.as_mut(), boot) {
+                        if sim.nodes.contains_key(&(b as NodeId)) {
+                            sim.schedule_join(self.now, client as NodeId, b as NodeId);
+                            entered = true;
+                        }
                     }
-                    while next_sample <= wake {
-                        self.now = next_sample;
-                        self.record_sample()?;
-                        next_sample += sample_every;
+                    if entered {
+                        let wake = self.now + self.clients[client].next_wake.max(1);
+                        self.clients[client].alive = true;
+                        self.clients[client].next_wake = wake;
+                        if !self.synchronous() {
+                            self.queue.push(wake, TrainEvent::Wake { client });
+                        }
                     }
-                    self.now = wake;
-                    self.local_train(idx)?;
-                    let nbrs = self.neighbors_of(idx);
-                    self.aggregate(idx, &nbrs)?;
-                    let period = self.clients[idx].schedule.period;
-                    self.clients[idx].next_wake = wake + period;
+                }
+                TrainEvent::Fail { client } => {
+                    if client >= self.clients.len() {
+                        continue;
+                    }
+                    if let Some(sim) = self.overlay.as_mut() {
+                        sim.schedule_fail(self.now, client as NodeId);
+                    }
+                    self.clients[client].alive = false;
+                }
+                TrainEvent::Leave { client } => {
+                    if client >= self.clients.len() {
+                        continue;
+                    }
+                    if let Some(sim) = self.overlay.as_mut() {
+                        sim.schedule_leave(self.now, client as NodeId);
+                    }
+                    self.clients[client].alive = false;
                 }
             }
         }
         self.now = until;
-        self.record_sample()?;
+        self.sync_overlay();
+        // final sample, unless an in-loop Sample already landed on `until`
+        if self.samples.last().map(|s| s.at) != Some(until) {
+            self.record_sample()?;
+        }
         Ok(self.samples.last().unwrap().clone())
-    }
-
-    /// Synchronous-round aggregation against a pre-round snapshot.
-    fn aggregate_snapshot(
-        &mut self,
-        i: usize,
-        nbrs: &[usize],
-        snapshot: &[Vec<f32>],
-    ) -> Result<()> {
-        if nbrs.is_empty() {
-            return Ok(());
-        }
-        let p_bytes = (snapshot[i].len() * 4) as u64;
-        for &j in nbrs {
-            let fp = fingerprint(&snapshot[j]);
-            if self.clients[i].fingerprints.is_duplicate(j as u64, fp) {
-                self.clients[i].dedup_skips += 1;
-            } else {
-                self.clients[i].fingerprints.record(j as u64, fp);
-                self.clients[j].model_bytes_sent += p_bytes;
-            }
-        }
-        let hood: Vec<(f64, f64)> = std::iter::once(self.clients[i].raw_confidence())
-            .chain(nbrs.iter().map(|&j| self.clients[j].raw_confidence()))
-            .collect();
-        let weights: Vec<f64> = if self.spec.confidence {
-            hood.iter().map(|&own| self.conf.combine(own, &hood)).collect()
-        } else {
-            vec![1.0; hood.len()]
-        };
-        let models: Vec<&[f32]> = std::iter::once(snapshot[i].as_slice())
-            .chain(nbrs.iter().map(|&j| snapshot[j].as_slice()))
-            .collect();
-        let k_max = self.engine.manifest.k_max;
-        let new = if models.len() <= k_max {
-            let (stack, w) = pack_for_artifact(&models, &weights, k_max);
-            self.engine.aggregate(&self.task_name, &stack, &w)?
-        } else {
-            aggregate_cpu(&models, &weights)
-        };
-        self.clients[i].params = new;
-        self.clients[i].version += 1;
-        self.clients[i].exchanges += 1;
-        Ok(())
     }
 
     /// Total model payload bytes sent, per client (Fig. 20d metric).
@@ -476,4 +772,17 @@ impl<'e> Trainer<'e> {
         let total: u64 = self.clients.iter().map(|c| c.train_steps).sum();
         total as f64 / self.clients.len() as f64
     }
+}
+
+/// Per-client Markov stream from its shard labels (each nonzero label
+/// acts as a Shakespeare "role").
+fn char_stream_for(cfg: &DflConfig, i: usize, w: &[f64]) -> CharStream {
+    let roles: Vec<u64> = w
+        .iter()
+        .enumerate()
+        .filter(|(_, &x)| x > 0.0)
+        .map(|(l, _)| cfg.seed ^ (l as u64 + 1))
+        .collect();
+    let roles = if roles.is_empty() { vec![cfg.seed] } else { roles };
+    CharStream::new(&roles, cfg.seed ^ (i as u64) << 8)
 }

@@ -7,17 +7,28 @@
 //! * **L3 (this crate)** — the FedLay coordinator: the overlay topology
 //!   built from random virtual coordinates (`topology`), the decentralized
 //!   Neighbor Discovery and Maintenance Protocols (`ndmp`), the Model
-//!   Exchange Protocol (`mep`), a deterministic discrete-event simulator
-//!   (`sim`), a real TCP transport (`net`), all baseline topologies and
-//!   DFL methods from the paper's evaluation (`baselines`, `dfl`), and the
-//!   topology-metric pipeline (`metrics`).
+//!   Exchange Protocol (`mep`), a real TCP transport (`net`), all baseline
+//!   topologies and DFL methods from the paper's evaluation (`baselines`,
+//!   `dfl`), and the topology-metric pipeline (`metrics`).
 //! * **L2 (python/compile/model.py)** — the JAX model zoo (MLP/CNN/LSTM),
 //!   AOT-lowered once to HLO text.
 //! * **L1 (python/compile/kernels/)** — Pallas kernels for the MEP
 //!   aggregation and fused SGD update, embedded in the L2 artifacts.
 //!
-//! The `runtime` module loads the AOT artifacts via the PJRT CPU client;
-//! Python never runs on the request path.
+//! Overlay maintenance and training share one **unified discrete-event
+//! engine**: `sim::sched` is a deterministic scheduler generic over the
+//! event-kind type, instantiated by the NDMP fleet simulator
+//! (`sim::Simulator`, message deliveries / timers / churn) and by the DFL
+//! trainer (`dfl::Trainer`, client wake-ups / rounds / samples / churn).
+//! Under `dfl::Neighborhood::Dynamic` the trainer embeds a `Simulator`
+//! advanced in lockstep with training time, so mid-training joins and
+//! failures rewire the learning topology through the actual protocols —
+//! the paper's NDMP + MEP co-execution (Figs. 18/19).
+//!
+//! The `runtime` module executes models behind a single `Engine` API:
+//! the PJRT CPU client running the AOT artifacts (feature `xla`), or a
+//! pure-Rust reference backend with the identical ABI that needs no
+//! artifacts. Python never runs on the request path.
 
 pub mod baselines;
 pub mod bench_util;

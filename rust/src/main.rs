@@ -107,6 +107,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let n = cfg.dfl.clients;
     let spec = match method.as_str() {
         "fedlay" => MethodSpec::fedlay(n, cfg.overlay.spaces),
+        "fedlay-dyn" => MethodSpec::fedlay_dynamic(cfg.overlay.clone(), cfg.net.clone()),
         "fedlay-sync" => MethodSpec::fedlay_sync(n, cfg.overlay.spaces),
         "fedlay-avg" => MethodSpec::fedlay_simple_avg(n, cfg.overlay.spaces),
         "fedavg" => MethodSpec::fedavg(),
@@ -122,6 +123,29 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut trainer = Trainer::new(&engine, spec, cfg.dfl.clone(), weights)?;
     let until = minutes * 60 * 1_000_000;
     let every = (sample_minutes * 60 * 1_000_000).max(1);
+    // mid-run churn (fedlay-dyn only: joins go through the NDMP protocol)
+    let joins = args.usize("joins", 0)?;
+    let fails = args.usize("fails", 0)?.min(n.saturating_sub(1));
+    let churn_at = args.u64("churn-at-min", minutes / 2)? * 60 * 1_000_000;
+    if fails > 0 {
+        // fail the lowest ids so join bootstraps can avoid them
+        for f in 0..fails {
+            trainer.schedule_fail(churn_at, f);
+        }
+    }
+    if joins > 0 {
+        let w = fedlay::data::shard_labels(
+            n + joins,
+            classes,
+            cfg.dfl.shards_per_client,
+            cfg.dfl.seed ^ 1,
+        );
+        for j in 0..joins {
+            // bootstrap through survivors only (ids >= fails)
+            let boot = fails + j % (n - fails);
+            trainer.schedule_join(churn_at, w[n + j].clone(), boot)?;
+        }
+    }
     trainer.run(until, every)?;
     let mut t = Table::new(&["t (min)", "mean acc", "mean loss"]);
     for s in &trainer.samples {

@@ -88,6 +88,25 @@ impl NodeState {
         s
     }
 
+    /// Ring-adjacent neighbors only (union of the space views): the
+    /// FedLay learning topology of Definition 1, degree ≤ 2L. Unlike
+    /// `neighbor_ids` this excludes incidental peers learned from routed
+    /// traffic, so MEP layers (e.g. `dfl::Neighborhood::Dynamic`) see the
+    /// paper's bounded-degree exchange graph.
+    pub fn ring_neighbor_ids(&self) -> BTreeSet<NodeId> {
+        let mut s = BTreeSet::new();
+        for v in &self.views {
+            if let Some(p) = v.prev {
+                s.insert(p);
+            }
+            if let Some(n) = v.next {
+                s.insert(n);
+            }
+        }
+        s.remove(&self.id);
+        s
+    }
+
     /// Neighbors used for routing = peers we believe are alive.
     fn routing_neighbors(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.peers.keys().copied().filter(move |&p| p != self.id)
@@ -608,6 +627,11 @@ mod tests {
         assert_eq!(b.views[0].prev, Some(1));
         assert_eq!(b.views[0].next, Some(1));
         assert_eq!(b.neighbor_ids().len(), 1);
+        assert_eq!(b.ring_neighbor_ids().len(), 1);
+        // ring neighbors never include routed-traffic acquaintances
+        b.handle(42, Msg::Heartbeat, 3);
+        assert!(b.neighbor_ids().contains(&42));
+        assert!(!b.ring_neighbor_ids().contains(&42));
     }
 
     #[test]

@@ -64,6 +64,18 @@ impl Manifest {
         })
     }
 
+    /// Build an in-memory manifest. The reference engine (no artifacts on
+    /// disk) synthesizes its registry through this; `hlo_path` lookups on
+    /// a synthetic manifest fail, which is correct — there are no files.
+    pub fn synthetic(tasks: Vec<TaskInfo>, k_max: usize) -> Manifest {
+        Manifest {
+            dir: PathBuf::new(),
+            k_max,
+            tasks,
+            doc: Doc::default(),
+        }
+    }
+
     pub fn task(&self, name: &str) -> anyhow::Result<&TaskInfo> {
         self.tasks
             .iter()
@@ -101,11 +113,15 @@ pub fn find_artifacts_dir(explicit: Option<&Path>) -> anyhow::Result<PathBuf> {
             return Ok(cand);
         }
         if !cur.pop() {
-            anyhow::bail!(
-                "artifacts/manifest.txt not found — run `make artifacts` first"
-            );
+            break;
         }
     }
+    if cfg!(feature = "xla") {
+        anyhow::bail!("artifacts/manifest.txt not found — run `make artifacts` first");
+    }
+    // The reference engine synthesizes its manifest in memory, so a
+    // missing artifacts tree is not an error without the `xla` feature.
+    Ok(PathBuf::new())
 }
 
 #[cfg(test)]
@@ -113,7 +129,11 @@ mod tests {
     use super::*;
 
     fn repo_artifacts() -> Option<PathBuf> {
-        find_artifacts_dir(None).ok()
+        // filter the reference-mode placeholder path: this test is about
+        // real on-disk artifacts only
+        find_artifacts_dir(None)
+            .ok()
+            .filter(|d| d.join("manifest.txt").exists())
     }
 
     #[test]

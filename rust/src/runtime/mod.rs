@@ -1,8 +1,28 @@
-//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
-//! `python/compile/aot.py`) and executes them from the Rust hot path.
+//! Model-execution runtime behind a single `Engine` API.
+//!
+//! Two interchangeable backends:
+//! * `pjrt` (feature `xla`) — loads `artifacts/*.hlo.txt` (AOT-lowered by
+//!   `python/compile/aot.py`) and executes them on the PJRT CPU client.
+//!   Requires the vendored `xla` crate.
+//! * `reference` (default) — a pure-Rust engine with the exact same API
+//!   and artifact ABI (flat params, `[K_MAX, P]` aggregation stacks),
+//!   backed by softmax-linear models. It needs no artifacts on disk, so
+//!   the full DFL pipeline (trainer, benches, integration tests) runs in
+//!   a bare container.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod pjrt;
+pub mod reference;
 
 pub use artifacts::{find_artifacts_dir, Manifest, TaskInfo};
-pub use pjrt::{Engine, XInput};
+#[cfg(feature = "xla")]
+pub use pjrt::Engine;
+#[cfg(not(feature = "xla"))]
+pub use reference::Engine;
+
+/// Model input batch: f32 features or i32 token windows.
+pub enum XInput<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}

@@ -8,6 +8,7 @@
 //!   lowering), so results are unwrapped with `to_tupleN`.
 
 use super::artifacts::{Manifest, TaskInfo};
+use super::XInput;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;
@@ -26,8 +27,9 @@ pub struct Engine {
     pub client: xla::PjRtClient,
     pub manifest: Manifest,
     tasks: HashMap<String, TaskExecutables>,
-    /// Execution counters for telemetry / benches.
-    pub exec_count: std::cell::Cell<u64>,
+    /// Execution counters for telemetry / benches (atomic so the trainer's
+    /// parallel evaluation compiles against either backend).
+    pub exec_count: std::sync::atomic::AtomicU64,
 }
 
 fn compile(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
@@ -68,7 +70,7 @@ impl Engine {
             client,
             manifest,
             tasks,
-            exec_count: std::cell::Cell::new(0),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
         })
     }
 
@@ -79,7 +81,8 @@ impl Engine {
     }
 
     fn bump(&self) {
-        self.exec_count.set(self.exec_count.get() + 1);
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
     }
 
     /// Initialize a flat parameter vector from a 2-word seed.
@@ -156,12 +159,6 @@ impl Engine {
             .to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }
-}
-
-/// Model input batch: f32 features or i32 token windows.
-pub enum XInput<'a> {
-    F32(&'a [f32]),
-    I32(&'a [i32]),
 }
 
 impl XInput<'_> {

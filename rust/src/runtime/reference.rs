@@ -1,0 +1,410 @@
+//! Pure-Rust reference engine: the default `Engine` backend when the
+//! `xla` feature (vendored PJRT) is absent.
+//!
+//! It mirrors `runtime::pjrt::Engine`'s API and artifact ABI exactly —
+//! flat f32 parameter vectors, `[K_MAX, P]` row-major aggregation stacks
+//! with zero-weighted padding rows, shape-validated inputs — so the
+//! trainer, the TCP prototype, and every bench run unmodified against
+//! either backend. Models are softmax-linear classifiers:
+//!
+//! * f32 tasks (`mlp`, `cnn`): logits = Wᵀ(x/√d) + b over the raw
+//!   features (scaled to unit-ish norm so the paper's learning rates are
+//!   stable);
+//! * the i32 task (`lstm`): logits = Wᵀ·onehot(last token) + b — the
+//!   sufficient statistic of the first-order Markov stream, so the model
+//!   genuinely learns the next-character task.
+//!
+//! The manifest is synthesized in memory; no artifacts directory is
+//! needed. The engine is `Send + Sync` (unlike the PJRT client), which
+//! the trainer exploits to evaluate distinct models in parallel.
+
+use super::artifacts::{Manifest, TaskInfo};
+use super::XInput;
+use crate::data::VOCAB;
+use crate::util::Rng;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One task's "executables" (just the static task description here).
+pub struct TaskExecutables {
+    pub info: TaskInfo,
+}
+
+/// The reference engine: a synthesized manifest plus per-task models.
+pub struct Engine {
+    pub manifest: Manifest,
+    tasks: HashMap<String, TaskExecutables>,
+    /// Execution counters for telemetry / benches.
+    pub exec_count: AtomicU64,
+}
+
+/// Aggregation stack height shared with the artifact ABI.
+const K_MAX: usize = 16;
+
+fn builtin_tasks() -> Vec<TaskInfo> {
+    let linear = |d: usize, c: usize| d * c + c;
+    vec![
+        TaskInfo {
+            name: "mlp".into(),
+            param_count: linear(784, 10),
+            batch: 32,
+            x_len: 784,
+            x_dtype: "f32".into(),
+            classes: 10,
+        },
+        TaskInfo {
+            name: "cnn".into(),
+            param_count: linear(768, 10),
+            batch: 32,
+            x_len: 768,
+            x_dtype: "f32".into(),
+            classes: 10,
+        },
+        TaskInfo {
+            name: "lstm".into(),
+            param_count: linear(VOCAB, VOCAB),
+            batch: 32,
+            x_len: 16,
+            x_dtype: "i32".into(),
+            classes: VOCAB,
+        },
+    ]
+}
+
+/// Densify the model input into `[batch, d]` features. f32 features are
+/// scaled by 1/√d (unit-ish row norm); i32 windows become a one-hot of
+/// the last token.
+fn feature_rows(info: &TaskInfo, x: &XInput) -> Result<(usize, Vec<f32>)> {
+    match x {
+        XInput::F32(v) => {
+            anyhow::ensure!(
+                v.len() == info.batch * info.x_len,
+                "x shape mismatch: {} != {}x{}",
+                v.len(),
+                info.batch,
+                info.x_len
+            );
+            let d = info.x_len;
+            let scale = 1.0 / (d as f32).sqrt();
+            Ok((d, v.iter().map(|&f| f * scale).collect()))
+        }
+        XInput::I32(v) => {
+            anyhow::ensure!(
+                v.len() == info.batch * info.x_len,
+                "x shape mismatch: {} != {}x{}",
+                v.len(),
+                info.batch,
+                info.x_len
+            );
+            let d = VOCAB;
+            let mut out = vec![0.0f32; info.batch * d];
+            for b in 0..info.batch {
+                let last = v[(b + 1) * info.x_len - 1];
+                anyhow::ensure!(
+                    (0..d as i32).contains(&last),
+                    "token {last} outside vocab {d}"
+                );
+                out[b * d + last as usize] = 1.0;
+            }
+            Ok((d, out))
+        }
+    }
+}
+
+/// logits[b*c + k] for the flat `[W (d x c), bias (c)]` parameter layout.
+fn forward(params: &[f32], d: usize, c: usize, feats: &[f32], batch: usize) -> Vec<f32> {
+    let (w, bias) = params.split_at(d * c);
+    let mut logits = vec![0.0f32; batch * c];
+    for b in 0..batch {
+        let row = &feats[b * d..(b + 1) * d];
+        let out = &mut logits[b * c..(b + 1) * c];
+        out.copy_from_slice(bias);
+        for (j, &f) in row.iter().enumerate() {
+            if f == 0.0 {
+                continue;
+            }
+            let wrow = &w[j * c..(j + 1) * c];
+            for (o, &wv) in out.iter_mut().zip(wrow) {
+                *o += f * wv;
+            }
+        }
+    }
+    logits
+}
+
+/// Per-example softmax cross-entropy loss and probabilities.
+fn softmax_ce(logits: &[f32], c: usize, y: i32) -> (f64, Vec<f64>) {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&l| ((l as f64) - m).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    let probs: Vec<f64> = exps.iter().map(|e| e / z).collect();
+    let loss = m + z.ln() - logits[y as usize] as f64;
+    let _ = c;
+    (loss, probs)
+}
+
+impl Engine {
+    /// Load `task_names` from the built-in registry. The artifacts
+    /// directory is ignored: the reference engine is fully synthetic.
+    pub fn load(_artifacts_dir: &Path, task_names: &[&str]) -> Result<Engine> {
+        let all = builtin_tasks();
+        let manifest = Manifest::synthetic(all.clone(), K_MAX);
+        let mut tasks = HashMap::new();
+        for &name in task_names {
+            let info = all
+                .iter()
+                .find(|t| t.name == name)
+                .ok_or_else(|| anyhow::anyhow!("task {name:?} not in reference registry"))?
+                .clone();
+            tasks.insert(name.to_string(), TaskExecutables { info });
+        }
+        Ok(Engine {
+            manifest,
+            tasks,
+            exec_count: AtomicU64::new(0),
+        })
+    }
+
+    pub fn task(&self, name: &str) -> Result<&TaskExecutables> {
+        self.tasks
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("task {name:?} not loaded"))
+    }
+
+    fn bump(&self) {
+        self.exec_count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Initialize a flat parameter vector from a 2-word seed.
+    pub fn init(&self, task: &str, seed: [u32; 2]) -> Result<Vec<f32>> {
+        let info = &self.task(task)?.info;
+        self.bump();
+        let mut rng = Rng::new(((seed[0] as u64) << 32) | seed[1] as u64 ^ 0x1217);
+        Ok((0..info.param_count)
+            .map(|_| (rng.next_f32() - 0.5) * 0.02)
+            .collect())
+    }
+
+    /// One SGD step on the batch: returns (new_params, mean loss).
+    pub fn train_step(
+        &self,
+        task: &str,
+        params: &[f32],
+        x: &XInput,
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let info = &self.task(task)?.info;
+        anyhow::ensure!(params.len() == info.param_count, "param length mismatch");
+        anyhow::ensure!(y.len() == info.batch, "label batch mismatch");
+        let (d, feats) = feature_rows(info, x)?;
+        let c = info.classes;
+        anyhow::ensure!(d * c + c == params.len(), "feature/param shape mismatch");
+        self.bump();
+        let logits = forward(params, d, c, &feats, info.batch);
+        let mut grad = vec![0.0f64; params.len()];
+        let mut loss_sum = 0.0f64;
+        for b in 0..info.batch {
+            let yb = y[b];
+            anyhow::ensure!((0..c as i32).contains(&yb), "label {yb} out of range");
+            let (loss, mut probs) = softmax_ce(&logits[b * c..(b + 1) * c], c, yb);
+            loss_sum += loss;
+            probs[yb as usize] -= 1.0;
+            let row = &feats[b * d..(b + 1) * d];
+            for (j, &f) in row.iter().enumerate() {
+                if f == 0.0 {
+                    continue;
+                }
+                let g = &mut grad[j * c..(j + 1) * c];
+                for (gv, &p) in g.iter_mut().zip(&probs) {
+                    *gv += f as f64 * p;
+                }
+            }
+            let gb = &mut grad[d * c..];
+            for (gv, &p) in gb.iter_mut().zip(&probs) {
+                *gv += p;
+            }
+        }
+        let new: Vec<f32> = params
+            .iter()
+            .zip(&grad)
+            .map(|(&p, &g)| p - lr * g as f32)
+            .collect();
+        Ok((new, (loss_sum / info.batch as f64) as f32))
+    }
+
+    /// Evaluate a batch: returns (correct_count, mean loss).
+    pub fn eval_step(
+        &self,
+        task: &str,
+        params: &[f32],
+        x: &XInput,
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let info = &self.task(task)?.info;
+        anyhow::ensure!(params.len() == info.param_count, "param length mismatch");
+        anyhow::ensure!(y.len() == info.batch, "label batch mismatch");
+        let (d, feats) = feature_rows(info, x)?;
+        let c = info.classes;
+        anyhow::ensure!(d * c + c == params.len(), "feature/param shape mismatch");
+        self.bump();
+        let logits = forward(params, d, c, &feats, info.batch);
+        let mut correct = 0.0f32;
+        let mut loss_sum = 0.0f64;
+        for b in 0..info.batch {
+            let row = &logits[b * c..(b + 1) * c];
+            let mut best = 0usize;
+            for k in 1..c {
+                if row[k] > row[best] {
+                    best = k;
+                }
+            }
+            if best as i32 == y[b] {
+                correct += 1.0;
+            }
+            let (loss, _) = softmax_ce(row, c, y[b]);
+            loss_sum += loss;
+        }
+        Ok((correct, (loss_sum / info.batch as f64) as f32))
+    }
+
+    /// Confidence-weighted aggregation over a `[K_MAX, P]` stack with
+    /// zero-weighted padding rows — bit-for-bit the `aggregate_cpu`
+    /// semantics, so the two implementations stay pinned together.
+    pub fn aggregate(&self, task: &str, stack: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        let _ = self.task(task)?;
+        let k = self.manifest.k_max;
+        anyhow::ensure!(weights.len() == k, "weights shape mismatch");
+        anyhow::ensure!(
+            !stack.is_empty() && stack.len() % k == 0,
+            "stack shape mismatch"
+        );
+        let p = stack.len() / k;
+        self.bump();
+        let denom: f64 = weights.iter().map(|&w| w as f64).sum::<f64>().max(1e-12);
+        let mut out = vec![0.0f64; p];
+        for (i, &w) in weights.iter().enumerate() {
+            if w == 0.0 {
+                continue;
+            }
+            let row = &stack[i * p..(i + 1) * p];
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += w as f64 * x as f64;
+            }
+        }
+        Ok(out.into_iter().map(|x| (x / denom) as f32).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::GaussianTask;
+    use crate::mep::{aggregate_cpu, pack_for_artifact};
+
+    fn engine(tasks: &[&str]) -> Engine {
+        Engine::load(Path::new(""), tasks).unwrap()
+    }
+
+    #[test]
+    fn registry_and_manifest_are_consistent() {
+        let eng = engine(&["mlp", "cnn", "lstm"]);
+        for name in ["mlp", "cnn", "lstm"] {
+            let info = eng.manifest.task(name).unwrap();
+            assert_eq!(eng.task(name).unwrap().info, *info);
+            let d = if info.x_dtype == "i32" { VOCAB } else { info.x_len };
+            assert_eq!(info.param_count, d * info.classes + info.classes);
+        }
+        assert!(eng.task("nope").is_err());
+        assert!(Engine::load(Path::new(""), &["nope"]).is_err());
+    }
+
+    #[test]
+    fn training_learns_the_gaussian_task() {
+        let eng = engine(&["mlp"]);
+        let info = eng.manifest.task("mlp").unwrap().clone();
+        let task = GaussianTask::mnist_like(3);
+        let mut params = eng.init("mlp", [1, 2]).unwrap();
+        let mut rng = crate::util::Rng::new(11);
+        let w = vec![1.0; 10];
+        for _ in 0..150 {
+            let b = task.batch(info.batch, &w, &mut rng);
+            let (new, loss) = eng
+                .train_step("mlp", &params, &XInput::F32(&b.x), &b.y, 0.5)
+                .unwrap();
+            assert!(loss.is_finite());
+            params = new;
+        }
+        let mut correct = 0.0;
+        for s in 0..4u64 {
+            let t = task.test_batch(info.batch, 99 + s);
+            let (cr, _) = eng
+                .eval_step("mlp", &params, &XInput::F32(&t.x), &t.y)
+                .unwrap();
+            correct += cr as f64;
+        }
+        let acc = correct / (4 * info.batch) as f64;
+        assert!(acc > 0.45, "reference model failed to learn: acc {acc}");
+    }
+
+    #[test]
+    fn lstm_learns_the_markov_chain() {
+        let eng = engine(&["lstm"]);
+        let info = eng.manifest.task("lstm").unwrap().clone();
+        let mut stream = crate::data::CharStream::new(&[5], 1);
+        let mut params = eng.init("lstm", [4, 4]).unwrap();
+        let mut first_loss = 0.0f32;
+        let mut last_loss = 0.0f32;
+        for step in 0..80 {
+            let (x, y) = stream.batch(info.batch, info.x_len);
+            let (new, loss) = eng
+                .train_step("lstm", &params, &XInput::I32(&x), &y, 0.5)
+                .unwrap();
+            params = new;
+            if step == 0 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+        }
+        assert!(
+            last_loss < first_loss - 0.3,
+            "markov task not learned: {first_loss} -> {last_loss}"
+        );
+    }
+
+    #[test]
+    fn aggregate_matches_cpu_reference() {
+        let eng = engine(&["mlp"]);
+        let p = eng.manifest.task("mlp").unwrap().param_count;
+        let k_max = eng.manifest.k_max;
+        let mut rng = crate::util::Rng::new(5);
+        let models: Vec<Vec<f32>> = (0..3)
+            .map(|_| (0..p).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+        let weights = [0.7, 0.2, 0.4];
+        let want = aggregate_cpu(&refs, &weights);
+        let (stack, w) = pack_for_artifact(&refs, &weights, k_max);
+        let got = eng.aggregate("mlp", &stack, &w).unwrap();
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 1e-4 * (1.0 + wv.abs()));
+        }
+    }
+
+    #[test]
+    fn shape_validation() {
+        let eng = engine(&["mlp"]);
+        let info = eng.manifest.task("mlp").unwrap().clone();
+        let y = vec![0i32; info.batch];
+        let bad_x = vec![0.0f32; 3];
+        let params = vec![0.0f32; info.param_count];
+        assert!(eng
+            .train_step("mlp", &params, &XInput::F32(&bad_x), &y, 0.1)
+            .is_err());
+        assert!(eng
+            .eval_step("mlp", &vec![0.0; 7], &XInput::F32(&bad_x), &y)
+            .is_err());
+    }
+}

@@ -1,11 +1,11 @@
-//! Discrete-event queue: a deterministic priority queue of timestamped
-//! events. Ties break on a monotone sequence number so runs are exactly
-//! reproducible regardless of insertion pattern.
+//! Overlay-simulator event kinds, instantiating the generic deterministic
+//! scheduler (`sim::sched`). Ties at equal timestamps break on a monotone
+//! sequence number so runs are exactly reproducible regardless of
+//! insertion pattern.
 
-use crate::ndmp::messages::{Msg, Time};
+use super::sched::{Scheduled, Scheduler};
+use crate::ndmp::messages::Msg;
 use crate::topology::NodeId;
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum EventKind {
@@ -23,75 +23,16 @@ pub enum EventKind {
     Snapshot { tag: u64 },
 }
 
-#[derive(Debug, Clone)]
-pub struct Event {
-    pub at: Time,
-    pub seq: u64,
-    pub kind: EventKind,
-}
+/// A scheduled overlay event.
+pub type Event = Scheduled<EventKind>;
 
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; invert for earliest-first.
-        other
-            .at
-            .cmp(&self.at)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
-/// Deterministic event queue.
-#[derive(Debug, Default)]
-pub struct EventQueue {
-    heap: BinaryHeap<Event>,
-    seq: u64,
-}
-
-impl EventQueue {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn push(&mut self, at: Time, kind: EventKind) {
-        let seq = self.seq;
-        self.seq += 1;
-        self.heap.push(Event { at, seq, kind });
-    }
-
-    pub fn pop(&mut self) -> Option<Event> {
-        self.heap.pop()
-    }
-
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.at)
-    }
-
-    pub fn len(&self) -> usize {
-        self.heap.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
-    }
-}
+/// Deterministic overlay event queue.
+pub type EventQueue = Scheduler<EventKind>;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ndmp::messages::Time;
 
     #[test]
     fn pops_in_time_order() {

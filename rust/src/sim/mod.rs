@@ -1,11 +1,20 @@
-//! Deterministic discrete-event simulation substrate: event queue,
-//! latency model, churn injection, and the NDMP fleet runner.
+//! Deterministic discrete-event substrate: the generic scheduler
+//! (`sched`), overlay event kinds (`event`), latency model, churn
+//! injection, and the NDMP fleet runner.
+//!
+//! The scheduler is shared with the DFL trainer (`crate::dfl::Trainer`
+//! instantiates it with `TrainEvent`), which is what lets training and
+//! overlay maintenance run on one time axis: the trainer advances its
+//! embedded `Simulator` in lockstep with training time, so mid-training
+//! churn rewires the learning topology through the actual NDMP protocol.
 
 pub mod churn;
 pub mod event;
 pub mod network;
 pub mod runner;
+pub mod sched;
 
 pub use event::{Event, EventKind, EventQueue};
 pub use network::LatencyModel;
 pub use runner::{grow_network, CorrectnessSample, Simulator};
+pub use sched::{Scheduled, Scheduler};

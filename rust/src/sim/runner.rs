@@ -138,6 +138,12 @@ impl Simulator {
             .collect()
     }
 
+    /// The live overlay as an undirected graph (indices follow sorted id
+    /// order; the second value maps graph index -> node id).
+    pub fn live_graph(&self) -> (crate::graph::Graph, Vec<NodeId>) {
+        correctness::graph_from_snapshot(&self.snapshot())
+    }
+
     pub fn correctness(&self) -> f64 {
         correctness(&self.snapshot(), self.cfg.spaces)
     }
@@ -295,6 +301,16 @@ mod tests {
             "correctness {}",
             sim.correctness()
         );
+    }
+
+    #[test]
+    fn live_graph_matches_bootstrap_topology() {
+        let mut sim = Simulator::new(overlay(3), net());
+        sim.bootstrap_correct(&(0..30).collect::<Vec<_>>());
+        let (g, ids) = sim.live_graph();
+        assert_eq!(ids.len(), 30);
+        assert!(g.max_degree() <= 6, "degree bound 2L violated");
+        assert!(crate::graph::traversal::is_connected(&g));
     }
 
     #[test]

@@ -33,6 +33,25 @@ pub fn correctness(snapshot: &NeighborSnapshot, spaces: usize) -> f64 {
     }
 }
 
+/// Lower a neighbor snapshot to an undirected `Graph` plus the sorted
+/// live-id order its indices follow. Edges are the union of the nodes'
+/// reported neighbor sets, restricted to live nodes — the *live* learning
+/// topology, as opposed to the idealized `fedlay::build_overlay`.
+pub fn graph_from_snapshot(snapshot: &NeighborSnapshot) -> (crate::graph::Graph, Vec<NodeId>) {
+    let ids: Vec<NodeId> = snapshot.keys().copied().collect();
+    let index: BTreeMap<NodeId, usize> =
+        ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+    let mut g = crate::graph::Graph::new(ids.len());
+    for (&id, nbrs) in snapshot {
+        for n in nbrs {
+            if let (Some(&u), Some(&v)) = (index.get(&id), index.get(n)) {
+                g.add_edge(u, v);
+            }
+        }
+    }
+    (g, ids)
+}
+
 /// Detailed correctness report for debugging / experiment logging.
 #[derive(Debug, Clone)]
 pub struct CorrectnessReport {

@@ -6,5 +6,7 @@ pub mod correctness;
 pub mod fedlay;
 
 pub use coords::{circular_distance, ccw_arc, cw_arc, closer, Coord, NodeId, RingPoint, VirtualCoords};
-pub use correctness::{correctness, report, CorrectnessReport, NeighborSnapshot};
+pub use correctness::{
+    correctness, graph_from_snapshot, report, CorrectnessReport, NeighborSnapshot,
+};
 pub use fedlay::{build_overlay, fedlay_graph, Membership};

@@ -1,0 +1,191 @@
+//! Integration tests for the unified discrete-event engine: training and
+//! NDMP overlay maintenance on one scheduler. A mid-training join wave
+//! must (a) rebuild a Definition-1-correct overlay through the actual
+//! protocol and (b) let joiners' accuracy converge to the originals'.
+
+use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
+use fedlay::data::shard_labels;
+use fedlay::dfl::harness::cohort_acc;
+use fedlay::dfl::{MethodSpec, Neighborhood, Trainer};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+
+const MIN: u64 = 60_000_000; // µs per simulated minute
+
+fn overlay() -> OverlayConfig {
+    OverlayConfig {
+        spaces: 3,
+        heartbeat_ms: 2_000,
+        failure_multiple: 3,
+        repair_probe_ms: 8_000,
+    }
+}
+
+fn net() -> NetConfig {
+    NetConfig {
+        latency_ms: 80.0,
+        jitter: 0.2,
+        seed: 11,
+    }
+}
+
+#[test]
+fn mid_training_join_wave_rewires_and_converges() -> anyhow::Result<()> {
+    let originals = 8usize;
+    let joiners = 5usize;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: originals,
+        local_steps: 2,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(originals + joiners, 10, 8, cfg.seed);
+    let mut t = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay(), net()),
+        cfg,
+        weights[..originals].to_vec(),
+    )?;
+    // join wave at t = 60 min, run until t = 180 min
+    let join_at = 60 * MIN;
+    for j in 0..joiners {
+        let id = t.schedule_join(join_at, weights[originals + j].clone(), j % originals)?;
+        assert_eq!(id, originals + j);
+        assert!(!t.clients[id].alive, "joiners start as dead placeholders");
+    }
+    t.run(180 * MIN, 30 * MIN)?;
+
+    // (a) the protocol join wave rebuilt a correct overlay over all nodes
+    let sim = t.overlay.as_ref().expect("dynamic overlay state");
+    assert_eq!(sim.nodes.len(), originals + joiners, "overlay lost joiners");
+    let c = sim.correctness();
+    assert!(c > 0.999, "topology correctness after join wave: {c}");
+    // every joiner is wired into the live learning topology
+    for j in originals..originals + joiners {
+        assert!(t.clients[j].alive);
+        let nbrs = sim.nodes[&(j as u64)].ring_neighbor_ids();
+        assert!(!nbrs.is_empty(), "joiner {j} has no overlay neighbors");
+        assert!(
+            nbrs.len() <= 2 * overlay().spaces,
+            "learning degree must stay <= 2L, got {}",
+            nbrs.len()
+        );
+        assert!(t.clients[j].exchanges > 0, "joiner {j} never aggregated");
+    }
+
+    // (b) joiners converged to within 0.15 of the originals
+    let last = t.samples.last().unwrap();
+    let old_end = cohort_acc(last, 0..originals);
+    let new_end = cohort_acc(last, originals..originals + joiners);
+    let first_post = t.samples.iter().find(|s| s.at >= join_at).unwrap();
+    let new_start = cohort_acc(first_post, originals..originals + joiners);
+    assert!(old_end > 0.4, "originals failed to learn: {old_end}");
+    assert!(
+        (old_end - new_end).abs() < 0.15,
+        "cohorts did not converge: originals {old_end:.3} vs joiners {new_end:.3} \
+         (joiners started at {new_start:.3})"
+    );
+    Ok(())
+}
+
+#[test]
+fn failures_rewire_the_learning_topology() -> anyhow::Result<()> {
+    let n = 10usize;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: n,
+        local_steps: 1,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(n, 10, 8, cfg.seed);
+    let mut t = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay(), net()),
+        cfg,
+        weights,
+    )?;
+    t.schedule_fail(20 * MIN, 3);
+    t.schedule_fail(20 * MIN, 7);
+    t.run(90 * MIN, 45 * MIN)?;
+    let sim = t.overlay.as_ref().unwrap();
+    assert_eq!(sim.nodes.len(), n - 2);
+    assert!(!t.clients[3].alive && !t.clients[7].alive);
+    let c = sim.correctness();
+    assert!(c > 0.999, "overlay not repaired after failures: {c}");
+    // dead clients froze at failure time; live ones kept training
+    let dead_steps = t.clients[3].train_steps;
+    let live_steps = t.clients[0].train_steps;
+    assert!(live_steps > dead_steps, "{live_steps} vs {dead_steps}");
+    // the accuracy mean covers live clients only
+    assert_eq!(t.samples.last().unwrap().per_client.len(), n);
+    Ok(())
+}
+
+#[test]
+fn adopting_a_grown_overlay_preserves_protocol_state() -> anyhow::Result<()> {
+    use fedlay::ndmp::messages::MS;
+    use fedlay::sim::grow_network;
+    let n = 8usize;
+    let sim = grow_network(overlay(), net(), n, 1_200 * MS);
+    assert!(sim.correctness() > 0.999, "grown network not correct");
+    let delivered0 = sim.delivered;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: n,
+        local_steps: 1,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(n, 10, 8, cfg.seed);
+    let mut t = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay(), net()),
+        cfg,
+        weights,
+    )?;
+    t.adopt_overlay(sim)?;
+    t.run(30 * MIN, 15 * MIN)?;
+    let sim = t.overlay.as_ref().unwrap();
+    assert!(sim.correctness() > 0.999, "adopted overlay degraded");
+    assert!(
+        sim.delivered > delivered0,
+        "adopted overlay protocol should keep running under the trainer"
+    );
+    Ok(())
+}
+
+#[test]
+fn static_and_dynamic_agree_without_churn() -> anyhow::Result<()> {
+    // With no churn, a converged NDMP overlay *is* the FedLay graph, so
+    // the two neighborhood sources must produce comparable accuracy.
+    let n = 8usize;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: n,
+        local_steps: 2,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(n, 10, 8, cfg.seed);
+    let mut stat = Trainer::new(&engine, MethodSpec::fedlay(n, 3), cfg.clone(), weights.clone())?;
+    stat.run(60 * MIN, 30 * MIN)?;
+    let mut dyn_t = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay(), net()),
+        cfg,
+        weights,
+    )?;
+    assert!(matches!(dyn_t.spec.neighborhood, Neighborhood::Dynamic { .. }));
+    dyn_t.run(60 * MIN, 30 * MIN)?;
+    let a = stat.samples.last().unwrap().mean_accuracy;
+    let b = dyn_t.samples.last().unwrap().mean_accuracy;
+    assert!((a - b).abs() < 0.2, "static {a:.3} vs dynamic {b:.3}");
+    // joins on a static graph are rejected
+    assert!(stat.schedule_join(1, vec![1.0; 10], 0).is_err());
+    Ok(())
+}
