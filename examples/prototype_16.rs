@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             id,
             base_port,
             bootstrap: if id == 0 { None } else { Some((id * 7) % id) },
+            book: None,
             overlay: overlay.clone(),
             artifacts_dir: dir.clone(),
             task: "mlp".into(),

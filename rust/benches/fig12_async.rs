@@ -32,7 +32,8 @@ fn main() -> anyhow::Result<()> {
             ..DflConfig::default()
         };
         let a = run_method(&engine, MethodSpec::fedlay(clients, 3), &cfg, minutes, minutes / 6)?;
-        let s = run_method(&engine, MethodSpec::fedlay_sync(clients, 3), &cfg, minutes, minutes / 6)?;
+        let spec = MethodSpec::fedlay_sync(clients, 3);
+        let s = run_method(&engine, spec, &cfg, minutes, minutes / 6)?;
         println!("=== Fig. 12 ({task}) ===");
         print!(
             "{}",

@@ -6,11 +6,28 @@
 //! Paper scale: 400-node network ± 100 nodes, 350 ms latency; correctness
 //! recovers to 1.0 within ~8 s. Default scale is 120 ± 30 (1-CPU sandbox);
 //! FEDLAY_BENCH_SCALE=paper reproduces 400 ± 100.
+//!
+//! FEDLAY_TRANSPORT=tcp replays Figs. 8a/8b over real localhost sockets
+//! (`net::SchedTransport`) at a reduced node count — the same schedules,
+//! scheduler, and protocol engines, with real frames on the wire.
 
 use fedlay::bench_util::{scaled, Table};
 use fedlay::config::{NetConfig, OverlayConfig};
 use fedlay::ndmp::messages::{Time, MS};
+use fedlay::net::SchedTransport;
 use fedlay::sim::{churn, grow_network, Simulator};
+
+fn tcp_transport() -> bool {
+    std::env::var("FEDLAY_TRANSPORT").as_deref() == Ok("tcp")
+}
+
+fn make_sim(overlay: OverlayConfig, net: NetConfig) -> Simulator {
+    if tcp_transport() {
+        Simulator::with_transport(overlay, Box::new(SchedTransport::new()))
+    } else {
+        Simulator::new(overlay, net)
+    }
+}
 
 fn overlay(spaces: usize) -> OverlayConfig {
     OverlayConfig {
@@ -42,19 +59,32 @@ fn timeline(sim: &Simulator) -> Table {
 }
 
 fn main() {
-    let initial = scaled(120usize, 400);
-    let churn_n = scaled(30usize, 100);
+    // sockets are real OS resources: cap the fleet in tcp mode
+    let initial = if tcp_transport() {
+        24
+    } else {
+        scaled(120usize, 400)
+    };
+    let churn_n = if tcp_transport() {
+        6
+    } else {
+        scaled(30usize, 100)
+    };
     let horizon: Time = 90_000 * MS;
+    let degrees: &[usize] = if tcp_transport() { &[3] } else { &[3, 4, 5, 6] };
+    // zero-virtual-latency sockets repair fast: sample densely enough
+    // that the post-failure correctness dip is still observable
+    let sample_every: Time = if tcp_transport() { 1_000 * MS } else { 3_000 * MS };
 
     // Fig. 8a: mass joins, for several degrees (L = d/2)
-    for l in [3usize, 4, 5, 6] {
+    for &l in degrees {
         println!(
             "=== Fig. 8a: {churn_n} joins into {initial}-node FedLay (d={}) ===",
             2 * l
         );
-        let mut sim = Simulator::new(overlay(l), net());
+        let mut sim = make_sim(overlay(l), net());
         churn::mass_join(&mut sim, initial, churn_n, 10 * MS, l as u64);
-        churn::sample_correctness(&mut sim, horizon, 3_000 * MS);
+        churn::sample_correctness(&mut sim, horizon, sample_every);
         sim.run_until(horizon);
         print!("{}", timeline(&sim).render());
         let fin = sim.correctness();
@@ -64,9 +94,9 @@ fn main() {
 
     // Fig. 8b: mass failures
     println!("=== Fig. 8b: {churn_n} failures out of {initial}-node FedLay (d=6) ===");
-    let mut sim = Simulator::new(overlay(3), net());
+    let mut sim = make_sim(overlay(3), net());
     churn::mass_fail(&mut sim, initial, churn_n, 10 * MS, 4);
-    churn::sample_correctness(&mut sim, horizon, 3_000 * MS);
+    churn::sample_correctness(&mut sim, horizon, sample_every);
     sim.run_until(horizon);
     print!("{}", timeline(&sim).render());
     let dip = sim

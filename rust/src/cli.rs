@@ -94,8 +94,11 @@ USAGE:
                   [--set dfl.task=mlp] [--set dfl.clients=16]
                   [--minutes M] [--sample-minutes S]
                   [--joins J] [--fails F] [--churn-at-min T]
+                  [--transport sim|tcp]
                   (fedlay-dyn runs on the live NDMP overlay; --joins adds
-                   J clients mid-run through the protocol join)
+                   J clients mid-run through the protocol join; --transport
+                   tcp carries that overlay's messages over real localhost
+                   sockets instead of the in-memory simulated network)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
                   (one real TCP client; spawn several for a live network)
 

@@ -248,7 +248,8 @@ mod tests {
 
     #[test]
     fn cli_overrides_win() {
-        let cfg = Config::load(None, &["dfl.clients=64".into(), "overlay.spaces=4".into()]).unwrap();
+        let cfg =
+            Config::load(None, &["dfl.clients=64".into(), "overlay.spaces=4".into()]).unwrap();
         assert_eq!(cfg.dfl.clients, 64);
         assert_eq!(cfg.overlay.spaces, 4);
     }

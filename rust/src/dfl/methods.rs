@@ -55,7 +55,10 @@ impl MethodSpec {
     /// FedLay over the *live* NDMP overlay: neighborhoods are read from an
     /// embedded protocol simulation, so churn scheduled on the trainer
     /// rewires the topology mid-training.
-    pub fn fedlay_dynamic(overlay: crate::config::OverlayConfig, net: crate::config::NetConfig) -> Self {
+    pub fn fedlay_dynamic(
+        overlay: crate::config::OverlayConfig,
+        net: crate::config::NetConfig,
+    ) -> Self {
         Self {
             name: format!("fedlay-dyn-L{}", overlay.spaces),
             neighborhood: Neighborhood::Dynamic { overlay, net },

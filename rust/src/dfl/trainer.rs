@@ -23,7 +23,7 @@ use crate::data::{CharStream, GaussianTask};
 use crate::mep::{aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams};
 use crate::ndmp::messages::Time;
 use crate::runtime::{Engine, XInput};
-use crate::sim::{Scheduler, Simulator};
+use crate::sim::{Scheduler, Simulator, Transport};
 use crate::topology::NodeId;
 
 use anyhow::Result;
@@ -103,6 +103,10 @@ pub struct Trainer<'e> {
     /// Embedded NDMP overlay (Neighborhood::Dynamic), advanced in
     /// lockstep with training time.
     pub overlay: Option<Simulator>,
+    /// Transport override for the embedded overlay: `ensure_overlay`
+    /// builds the Simulator on this backend (e.g. `net::SchedTransport`
+    /// for real localhost sockets) instead of the in-memory default.
+    transport: Option<Box<dyn Transport>>,
     data: TaskData,
     mobility: Option<Mobility>,
     conf: ConfidenceParams,
@@ -210,6 +214,7 @@ impl<'e> Trainer<'e> {
             clients,
             samples: Vec::new(),
             overlay: None,
+            transport: None,
             data,
             mobility,
             conf: ConfidenceParams::default(),
@@ -324,6 +329,24 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
+    /// Route the embedded overlay's protocol traffic over an alternative
+    /// backend — e.g. `net::SchedTransport` for real localhost TCP
+    /// sockets (the CLI's `train --transport tcp`). Must be called before
+    /// `run` on a `Neighborhood::Dynamic` spec; the default is the
+    /// deterministic in-memory network.
+    pub fn set_transport(&mut self, transport: Box<dyn Transport>) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.spec.neighborhood, Neighborhood::Dynamic { .. }),
+            "set_transport needs Neighborhood::Dynamic (the embedded NDMP overlay)"
+        );
+        anyhow::ensure!(
+            self.overlay.is_none() && self.now == 0,
+            "set_transport must be called before run()"
+        );
+        self.transport = Some(transport);
+        Ok(())
+    }
+
     /// Build the embedded overlay on first use (Dynamic only): the
     /// original `cfg.clients` start as an instantly-correct network —
     /// the decentralized path for later arrivals is `schedule_join`, and
@@ -333,7 +356,10 @@ impl<'e> Trainer<'e> {
             return;
         }
         if let Neighborhood::Dynamic { overlay, net } = &self.spec.neighborhood {
-            let mut sim = Simulator::new(overlay.clone(), net.clone());
+            let mut sim = match self.transport.take() {
+                Some(t) => Simulator::with_transport(overlay.clone(), t),
+                None => Simulator::new(overlay.clone(), net.clone()),
+            };
             let ids: Vec<NodeId> = (0..self.cfg.clients as NodeId).collect();
             sim.bootstrap_correct(&ids);
             self.overlay = Some(sim);

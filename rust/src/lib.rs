@@ -25,6 +25,28 @@
 //! failures rewire the learning topology through the actual protocols —
 //! the paper's NDMP + MEP co-execution (Figs. 18/19).
 //!
+//! ## Sim vs. TCP backends
+//!
+//! Message passage is a pluggable [`sim::Transport`] with two
+//! implementations, both driven by the same scheduler, protocol engines,
+//! and churn schedules:
+//!
+//! * **`sim`** — [`sim::SimTransport`]: in-memory, deterministic, every
+//!   send scheduled back onto the event queue after a latency-model
+//!   delay. The default for every simulation and figure harness.
+//! * **`tcp`** — [`net::SchedTransport`]: real localhost sockets; sends
+//!   are `net::wire` frames into a per-node endpoint (OS-assigned ports,
+//!   shared `net::AddrBook`), pumped back into the event loop between
+//!   scheduler events.
+//!
+//! `Simulator::with_transport` selects the backend, the trainer exposes
+//! it as `Trainer::set_transport`, and the CLI as
+//! `fedlay train --method fedlay-dyn --transport tcp|sim`. A seeded
+//! churn schedule must converge to the identical Definition-1 overlay on
+//! both — enforced by `tests/transport_conformance.rs`. The standalone
+//! wall-clock prototype node (`net::client_node`, `fedlay node`) runs
+//! the same reactor pattern with wall time as the timer axis.
+//!
 //! The `runtime` module executes models behind a single `Engine` API:
 //! the PJRT CPU client running the AOT artifacts (feature `xla`), or a
 //! pure-Rust reference backend with the identical ABI that needs no

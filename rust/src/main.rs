@@ -6,7 +6,7 @@ use fedlay::cli::{parse_args, Args, USAGE};
 use fedlay::config::OverlayConfig;
 use fedlay::dfl::{MethodSpec, Trainer};
 use fedlay::ndmp::messages::MS;
-use fedlay::net::{spawn, ClientNodeConfig};
+use fedlay::net::{spawn, ClientNodeConfig, SchedTransport};
 use fedlay::runtime::{find_artifacts_dir, Engine};
 use fedlay::sim::{churn, Simulator};
 
@@ -121,6 +121,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let weights =
         fedlay::data::shard_labels(n, classes, cfg.dfl.shards_per_client, cfg.dfl.seed);
     let mut trainer = Trainer::new(&engine, spec, cfg.dfl.clone(), weights)?;
+    // message backend for the embedded overlay (fedlay-dyn only):
+    // deterministic in-memory network, or real localhost TCP sockets
+    let transport = args.str("transport", "sim");
+    match transport.as_str() {
+        "sim" => {}
+        "tcp" => trainer.set_transport(Box::new(SchedTransport::new()))?,
+        other => anyhow::bail!("unknown transport {other:?} (expected sim|tcp)"),
+    }
     let until = minutes * 60 * 1_000_000;
     let every = (sample_minutes * 60 * 1_000_000).max(1);
     // mid-run churn (fedlay-dyn only: joins go through the NDMP protocol)
@@ -156,10 +164,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
+    let backend = trainer
+        .overlay
+        .as_ref()
+        .map(|s| s.backend())
+        .unwrap_or("none");
     println!(
-        "method={}  clients={}  model MB/client: {:.2}  train steps/client: {:.1}",
+        "method={}  clients={}  overlay transport={}  model MB/client: {:.2}  \
+         train steps/client: {:.1}",
         method,
         n,
+        backend,
         trainer.model_mb_per_client(),
         trainer.train_steps_per_client()
     );
@@ -199,6 +214,7 @@ fn cmd_node(args: &Args) -> anyhow::Result<()> {
         local_steps: cfg.dfl.local_steps,
         period_ms: 2_000,
         seed: cfg.dfl.seed,
+        book: None,
     };
     println!("node {id} listening on port {}", base_port + id as u16);
     let handle = spawn(node_cfg)?;

@@ -1,10 +1,13 @@
 //! NDMP node state machine (paper §III-B).
 //!
 //! `NodeState` is a pure protocol engine: it consumes `(from, Msg, now)`
-//! and timer ticks, and emits `Outgoing` messages. It performs no I/O —
-//! the discrete-event simulator (`crate::sim`) and the TCP prototype
-//! (`crate::net`) both drive the *same* engine, which is the point of the
-//! paper's "prototype + simulation use one protocol suite" methodology.
+//! and timer ticks, and emits `Outgoing` messages. It performs no I/O and
+//! never touches a transport — the unified scheduler drives it over any
+//! `sim::Transport` backend (in-memory `SimTransport`, socket-backed
+//! `net::SchedTransport`) and the wall-clock TCP reactor
+//! (`net::client_node`) drives the *same* engine, which is the point of
+//! the paper's "prototype + simulation use one protocol suite"
+//! methodology.
 
 use super::messages::{Dir, Msg, Outgoing, Side, Time};
 use super::routing::{coord_of, directional_next_hop, dir_arc, greedy_next_hop};

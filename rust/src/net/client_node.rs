@@ -1,27 +1,37 @@
 //! A full FedLay client over real TCP: the NDMP protocol engine plus the
-//! MEP offer/request/payload exchange and local training through the PJRT
-//! runtime — the paper's §IV-A1 "real experiment" node, 16 of which form
-//! the prototype (examples/prototype_16.rs).
+//! MEP offer/request/payload exchange and local training through the
+//! runtime engine — the paper's §IV-A1 "real experiment" node, 16 of
+//! which form the prototype (examples/prototype_16.rs).
 //!
 //! Each node runs in its own OS thread and owns a private `Engine` (the
 //! PJRT client is not `Send`); all inter-node communication is real TCP
-//! via `net::wire` frames. Wall-clock time drives NDMP timers and MEP
-//! periods, exactly like a deployment.
+//! via `net::wire` frames. The node is an **event-pumped reactor** on the
+//! same deterministic `sim::Scheduler` the simulator uses: NDMP tick and
+//! MEP round timers are heap events, and inbound frames are pumped off
+//! the listener channel between timer deadlines — no fixed-interval
+//! sleep/poll loop. Wall-clock time maps one-to-one onto the timer axis,
+//! exactly like a deployment.
+//!
+//! Every node publishes a `NodeStatus` (joined flag, neighbor sets, MEP
+//! counters) so orchestrators and tests can poll protocol state with a
+//! bounded deadline instead of sleeping for a fixed guess.
 
-use super::peer::{addr_of, PeerPool};
+use super::peer::{addr_of, AddrBook, PeerPool};
 use super::server::Listener;
 use crate::config::OverlayConfig;
 use crate::data::GaussianTask;
 use crate::mep::{fingerprint, pack_for_artifact, ConfidenceParams};
-use crate::ndmp::messages::{Msg, Time};
+use crate::ndmp::messages::{Msg, Time, MS};
 use crate::ndmp::node::NodeState;
 use crate::runtime::{Engine, XInput};
+use crate::sim::Scheduler;
 use crate::topology::NodeId;
 use crate::util::Rng;
 use anyhow::Result;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::collections::{BTreeSet, HashMap};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
@@ -30,6 +40,11 @@ pub struct ClientNodeConfig {
     pub base_port: u16,
     /// `None` = bootstrap node (first in the network).
     pub bootstrap: Option<NodeId>,
+    /// Shared address registry: when set, the node binds an OS-assigned
+    /// port (port 0) and registers it here instead of deriving
+    /// `base_port + id` — no port-collision flakiness for in-process
+    /// fleets. `base_port` is ignored in that case.
+    pub book: Option<Arc<AddrBook>>,
     pub overlay: OverlayConfig,
     pub artifacts_dir: std::path::PathBuf,
     pub task: String,
@@ -55,14 +70,53 @@ pub struct ClientReport {
     pub joined: bool,
 }
 
+/// Live protocol state a running node publishes for bounded polling
+/// (tests and orchestrators watch this instead of sleeping).
+#[derive(Debug, Default)]
+pub struct NodeStatus {
+    joined: AtomicBool,
+    data_sent: AtomicU64,
+    exchanges: AtomicU64,
+    neighbors: Mutex<BTreeSet<NodeId>>,
+    ring: Mutex<BTreeSet<NodeId>>,
+}
+
+impl NodeStatus {
+    /// Has the node completed its NDMP join?
+    pub fn joined(&self) -> bool {
+        self.joined.load(Ordering::Relaxed)
+    }
+
+    /// MEP messages sent so far (offers + requests + payload replies).
+    pub fn data_sent(&self) -> u64 {
+        self.data_sent.load(Ordering::Relaxed)
+    }
+
+    /// Completed MEP exchange rounds.
+    pub fn exchanges(&self) -> u64 {
+        self.exchanges.load(Ordering::Relaxed)
+    }
+
+    /// Current full neighbor set (`N_u`, incl. routed-traffic peers).
+    pub fn neighbors(&self) -> BTreeSet<NodeId> {
+        self.neighbors.lock().unwrap().clone()
+    }
+
+    /// Current ring-adjacency set (Definition-1 views only).
+    pub fn ring_neighbors(&self) -> BTreeSet<NodeId> {
+        self.ring.lock().unwrap().clone()
+    }
+}
+
 struct NeighborModel {
-    version: u64,
     confidence: f32,
     params: Vec<f32>,
 }
 
 pub struct ClientHandle {
     pub id: NodeId,
+    /// Live protocol state, updated by the reactor after every event.
+    pub status: Arc<NodeStatus>,
     stop: Arc<AtomicBool>,
     thread: Option<std::thread::JoinHandle<Result<ClientReport>>>,
 }
@@ -84,22 +138,220 @@ impl ClientHandle {
 pub fn spawn(cfg: ClientNodeConfig) -> Result<ClientHandle> {
     let stop = Arc::new(AtomicBool::new(false));
     let stop2 = stop.clone();
-    // Bind before returning so the caller knows the port is live.
-    let listener = Listener::start(addr_of(cfg.base_port, cfg.id))?;
+    let status = Arc::new(NodeStatus::default());
+    let status2 = status.clone();
+    // Bind before returning so the caller knows the address is live.
+    let listener = match &cfg.book {
+        Some(book) => {
+            let l = Listener::start(SocketAddr::from(([127, 0, 0, 1], 0)))?;
+            book.register(cfg.id, l.addr);
+            l
+        }
+        None => Listener::start(addr_of(cfg.base_port, cfg.id))?,
+    };
     let id = cfg.id;
-    // The PJRT engine compiles in the node thread (it is not Send); block
-    // until it is ready so callers measure *protocol* time, not XLA
+    // The runtime engine loads in the node thread (PJRT is not Send);
+    // block until it is ready so callers measure *protocol* time, not
     // compile time, and a bootstrap node is live before joiners start.
     let (ready_tx, ready_rx) = std::sync::mpsc::channel::<()>();
+    let book = cfg.book.clone();
     let thread = std::thread::Builder::new()
         .name(format!("fedlay-node-{id}"))
-        .spawn(move || run_node(cfg, listener, stop2, ready_tx))?;
+        .spawn(move || {
+            let report = run_node(cfg, listener, stop2, ready_tx, status2);
+            // unregister on every exit path (incl. runtime errors), so
+            // peers stop resolving a dead node's stale address
+            if let Some(b) = book {
+                b.unregister(id);
+            }
+            report
+        })?;
     let _ = ready_rx.recv_timeout(std::time::Duration::from_secs(120));
     Ok(ClientHandle {
         id,
+        status,
         stop,
         thread: Some(thread),
     })
+}
+
+/// Reactor timer kinds: the NDMP tick granularity (heartbeats, failure
+/// detection, repair probes) and the MEP train/offer/aggregate period.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum NodeEvent {
+    NdmpTick,
+    MepRound,
+}
+
+/// The per-node reactor state: protocol engines, model, MEP bookkeeping,
+/// and the published status. Driven by `run_node`'s event loop.
+struct Reactor<'e> {
+    cfg: &'e ClientNodeConfig,
+    engine: &'e Engine,
+    batch: usize,
+    k_max: usize,
+    pool: PeerPool,
+    ndmp: NodeState,
+    task: GaussianTask,
+    rng: Rng,
+    params: Vec<f32>,
+    version: u64,
+    my_conf: f32,
+    c_d: f64,
+    c_c: f64,
+    conf: ConfidenceParams,
+    neighbor_models: HashMap<NodeId, NeighborModel>,
+    offered_fp: HashMap<NodeId, u64>,
+    model_bytes_sent: u64,
+    dedup_skips: u64,
+    mep_sent: u64,
+    status: Arc<NodeStatus>,
+    start: Instant,
+}
+
+impl Reactor<'_> {
+    fn now_us(&self) -> Time {
+        self.start.elapsed().as_micros() as Time
+    }
+
+    /// Mirror protocol state into the shared `NodeStatus`.
+    fn publish(&self) {
+        self.status.joined.store(self.ndmp.joined, Ordering::Relaxed);
+        self.status.data_sent.store(self.mep_sent, Ordering::Relaxed);
+        *self.status.neighbors.lock().unwrap() = self.ndmp.neighbor_ids();
+        *self.status.ring.lock().unwrap() = self.ndmp.ring_neighbor_ids();
+    }
+
+    /// One inbound frame: MEP messages are handled here, everything else
+    /// goes to the NDMP engine and its replies onto the wire.
+    fn handle_frame(&mut self, from: NodeId, msg: Msg) {
+        if std::env::var("FEDLAY_NET_DEBUG").is_ok() {
+            eprintln!("[node {}] recv from {} : {:?}", self.cfg.id, from, &msg);
+        }
+        match &msg {
+            Msg::ModelOffer {
+                fingerprint: fp,
+                confidence: _,
+                version: v,
+            } => {
+                let known = self
+                    .neighbor_models
+                    .get(&from)
+                    .map(|m| fingerprint(&m.params) == *fp)
+                    .unwrap_or(false);
+                if known {
+                    self.dedup_skips += 1;
+                } else {
+                    self.mep_sent += 1;
+                    self.pool.send(from, &Msg::ModelRequest { version: *v });
+                }
+            }
+            Msg::ModelRequest { .. } => {
+                self.mep_sent += 1;
+                self.pool.send(
+                    from,
+                    &Msg::ModelPayload {
+                        version: self.version,
+                        confidence: self.my_conf,
+                        params: self.params.clone(),
+                    },
+                );
+                self.model_bytes_sent += (self.params.len() * 4) as u64;
+            }
+            Msg::ModelPayload {
+                version: _,
+                confidence,
+                params: p,
+            } => {
+                self.neighbor_models.insert(
+                    from,
+                    NeighborModel {
+                        confidence: *confidence,
+                        params: p.clone(),
+                    },
+                );
+            }
+            _ => {
+                let now = self.now_us();
+                let outs = self.ndmp.handle(from, msg.clone(), now);
+                for o in outs {
+                    self.pool.send(o.to, &o.msg);
+                }
+            }
+        }
+    }
+
+    /// NDMP timer granularity: heartbeats, failure detection, probes.
+    fn ndmp_tick(&mut self) {
+        let now = self.now_us();
+        let outs = self.ndmp.tick(now);
+        for o in outs {
+            self.pool.send(o.to, &o.msg);
+        }
+    }
+
+    /// One MEP period: local training, fingerprint-first offers to all
+    /// overlay neighbors (§III-C3), and confidence-weighted aggregation
+    /// of whatever neighbor models arrived (§III-C2).
+    fn mep_round(&mut self) -> Result<()> {
+        for _ in 0..self.cfg.local_steps {
+            let batch = self
+                .task
+                .batch(self.batch, &self.cfg.label_weights, &mut self.rng);
+            let (new, _) = self.engine.train_step(
+                &self.cfg.task,
+                &self.params,
+                &XInput::F32(&batch.x),
+                &batch.y,
+                self.cfg.lr,
+            )?;
+            self.params = new;
+        }
+        self.version += 1;
+        let fp = fingerprint(&self.params);
+        for n in self.ndmp.neighbor_ids() {
+            if self.offered_fp.get(&n) == Some(&fp) {
+                self.dedup_skips += 1;
+                continue;
+            }
+            self.offered_fp.insert(n, fp);
+            self.mep_sent += 1;
+            self.pool.send(
+                n,
+                &Msg::ModelOffer {
+                    fingerprint: fp,
+                    confidence: self.my_conf,
+                    version: self.version,
+                },
+            );
+        }
+        if !self.neighbor_models.is_empty() {
+            let hood: Vec<(f64, f64)> = std::iter::once((self.c_d, self.c_c))
+                .chain(
+                    self.neighbor_models
+                        .values()
+                        .map(|m| (m.confidence as f64, self.c_c)),
+                )
+                .collect();
+            let weights: Vec<f64> = hood
+                .iter()
+                .map(|&own| self.conf.combine(own, &hood))
+                .collect();
+            let models: Vec<&[f32]> = std::iter::once(self.params.as_slice())
+                .chain(self.neighbor_models.values().map(|m| m.params.as_slice()))
+                .collect();
+            let new = if models.len() <= self.k_max {
+                let (stack, w) = pack_for_artifact(&models, &weights, self.k_max);
+                self.engine.aggregate(&self.cfg.task, &stack, &w)?
+            } else {
+                crate::mep::aggregate_cpu(&models, &weights)
+            };
+            self.params = new;
+            self.version += 1;
+        }
+        self.status.exchanges.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
 }
 
 fn run_node(
@@ -107,21 +359,24 @@ fn run_node(
     mut listener: Listener,
     stop: Arc<AtomicBool>,
     ready_tx: std::sync::mpsc::Sender<()>,
+    status: Arc<NodeStatus>,
 ) -> Result<ClientReport> {
     let engine = Engine::load(&cfg.artifacts_dir, &[&cfg.task])?;
     let _ = ready_tx.send(());
     let info = engine.manifest.task(&cfg.task)?.clone();
-    let k_max = engine.manifest.k_max;
-    let pool = PeerPool::new(cfg.base_port, cfg.id);
+    let pool = match &cfg.book {
+        Some(book) => PeerPool::with_book(cfg.id, book.clone()),
+        None => PeerPool::new(cfg.base_port, cfg.id),
+    };
     let start = Instant::now();
-    let now_us = || start.elapsed().as_micros() as Time;
 
     // --- NDMP state ---
     let mut ndmp = NodeState::new(cfg.id, cfg.overlay.clone(), 0);
     match cfg.bootstrap {
         None => ndmp.bootstrap_first(),
         Some(b) => {
-            for o in ndmp.start_join(b, now_us()) {
+            let now = start.elapsed().as_micros() as Time;
+            for o in ndmp.start_join(b, now) {
                 pool.send(o.to, &o.msg);
             }
         }
@@ -129,143 +384,95 @@ fn run_node(
 
     // --- MEP / training state ---
     let task = GaussianTask::mnist_like(cfg.seed);
-    let mut rng = Rng::new(cfg.seed ^ cfg.id);
+    let rng = Rng::new(cfg.seed ^ cfg.id);
     // shared initialization across the fleet (see dfl::trainer)
-    let mut params = engine.init(&cfg.task, [cfg.seed as u32, 0])?;
-    let mut version: u64 = 0;
+    let params = engine.init(&cfg.task, [cfg.seed as u32, 0])?;
     let hist = crate::data::expected_histogram(&cfg.label_weights, 10_000);
     let c_d = (-crate::data::kl_divergence_vs_uniform(&hist)).exp();
     let c_c = 1.0 / cfg.period_ms as f64;
     let my_conf = (0.5 * c_d + 0.5 * c_c * cfg.period_ms as f64) as f32; // normalized-ish
-    let conf_params = ConfidenceParams::default();
-    let mut neighbor_models: HashMap<NodeId, NeighborModel> = HashMap::new();
-    let mut offered_fp: HashMap<NodeId, u64> = HashMap::new();
-    let mut model_bytes_sent = 0u64;
-    let mut dedup_skips = 0u64;
-    let mut mep_sent = 0u64;
-    let mut next_exchange = Duration::from_millis(cfg.period_ms / 2 + (cfg.id % 7) * 50);
 
-    while !stop.load(Ordering::SeqCst) {
-        // 1. drain inbound frames
-        while let Ok((from, msg)) = listener.rx.try_recv() {
-            if std::env::var("FEDLAY_NET_DEBUG").is_ok() {
-                eprintln!("[node {}] recv from {} : {:?}", cfg.id, from, &msg);
+    let mut r = Reactor {
+        cfg: &cfg,
+        engine: &engine,
+        batch: info.batch,
+        k_max: engine.manifest.k_max,
+        pool,
+        ndmp,
+        task,
+        rng,
+        params,
+        version: 0,
+        my_conf,
+        c_d,
+        c_c,
+        conf: ConfidenceParams::default(),
+        neighbor_models: HashMap::new(),
+        offered_fp: HashMap::new(),
+        model_bytes_sent: 0,
+        dedup_skips: 0,
+        mep_sent: 0,
+        status,
+        start,
+    };
+    r.publish();
+
+    // --- the event-pumped reactor ---
+    // Timers live on the same deterministic scheduler as the simulator;
+    // the tick granularity matches sim::Simulator (half the heartbeat).
+    let tick_period: Time = (cfg.overlay.heartbeat_ms * 1_000 / 2).max(1_000);
+    let period_us: Time = cfg.period_ms * 1_000;
+    let mut timers: Scheduler<NodeEvent> = Scheduler::new();
+    timers.push(tick_period, NodeEvent::NdmpTick);
+    // stagger first exchanges so the fleet doesn't offer in lockstep
+    timers.push(period_us / 2 + (cfg.id % 7) * 50 * MS, NodeEvent::MepRound);
+
+    'reactor: loop {
+        let next_at = timers.peek_time().expect("timer chains never drain");
+        // pump inbound frames until the next timer is due
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                break 'reactor;
             }
-            match &msg {
-                Msg::ModelOffer {
-                    fingerprint: fp,
-                    confidence: _,
-                    version: v,
-                } => {
-                    let known = neighbor_models
-                        .get(&from)
-                        .map(|m| fingerprint(&m.params) == *fp)
-                        .unwrap_or(false);
-                    if known {
-                        dedup_skips += 1;
-                    } else {
-                        mep_sent += 1;
-                        pool.send(from, &Msg::ModelRequest { version: *v });
-                    }
-                }
-                Msg::ModelRequest { .. } => {
-                    mep_sent += 1;
-                    pool.send(
-                        from,
-                        &Msg::ModelPayload {
-                            version,
-                            confidence: my_conf,
-                            params: params.clone(),
-                        },
-                    );
-                    model_bytes_sent += (params.len() * 4) as u64;
-                }
-                Msg::ModelPayload {
-                    version: v,
-                    confidence,
-                    params: p,
-                } => {
-                    neighbor_models.insert(
-                        from,
-                        NeighborModel {
-                            version: *v,
-                            confidence: *confidence,
-                            params: p.clone(),
-                        },
-                    );
-                }
-                _ => {
-                    for o in ndmp.handle(from, msg.clone(), now_us()) {
-                        pool.send(o.to, &o.msg);
-                    }
-                }
+            // Always drain the backlog first: even when the timer heap
+            // has fallen behind wall clock (slow training rounds), every
+            // timer firing is preceded by a full drain, so a busy chain
+            // can never starve inbound protocol traffic.
+            let mut drained = false;
+            while let Ok((from, msg)) = listener.rx.try_recv() {
+                r.handle_frame(from, msg);
+                drained = true;
             }
-        }
-        // 2. NDMP timers
-        for o in ndmp.tick(now_us()) {
-            pool.send(o.to, &o.msg);
-        }
-        // 3. MEP period: train, offer, aggregate
-        if start.elapsed() >= next_exchange {
-            next_exchange += Duration::from_millis(cfg.period_ms);
-            // local training
-            for _ in 0..cfg.local_steps {
-                let batch = task.batch(info.batch, &cfg.label_weights, &mut rng);
-                let (new, _) = engine.train_step(
-                    &cfg.task,
-                    &params,
-                    &XInput::F32(&batch.x),
-                    &batch.y,
-                    cfg.lr,
-                )?;
-                params = new;
+            if drained {
+                r.publish();
             }
-            version += 1;
-            // offer to all overlay neighbors (fingerprint-first, §III-C3)
-            let fp = fingerprint(&params);
-            for n in ndmp.neighbor_ids() {
-                if offered_fp.get(&n) == Some(&fp) {
-                    dedup_skips += 1;
-                    continue;
+            let now = r.now_us();
+            if now >= next_at {
+                break;
+            }
+            // cap the wait so a stop request is noticed promptly
+            let wait = Duration::from_micros((next_at - now).min(5 * MS));
+            match listener.rx.recv_timeout(wait) {
+                Ok((from, msg)) => {
+                    r.handle_frame(from, msg);
+                    r.publish();
                 }
-                offered_fp.insert(n, fp);
-                mep_sent += 1;
-                pool.send(
-                    n,
-                    &Msg::ModelOffer {
-                        fingerprint: fp,
-                        confidence: my_conf,
-                        version,
-                    },
-                );
-            }
-            // aggregate own + received neighbor models (MEP §III-C2)
-            if !neighbor_models.is_empty() {
-                let hood: Vec<(f64, f64)> = std::iter::once((c_d, c_c))
-                    .chain(
-                        neighbor_models
-                            .values()
-                            .map(|m| (m.confidence as f64, c_c)),
-                    )
-                    .collect();
-                let weights: Vec<f64> = hood
-                    .iter()
-                    .map(|&own| conf_params.combine(own, &hood))
-                    .collect();
-                let models: Vec<&[f32]> = std::iter::once(params.as_slice())
-                    .chain(neighbor_models.values().map(|m| m.params.as_slice()))
-                    .collect();
-                let new = if models.len() <= k_max {
-                    let (stack, w) = pack_for_artifact(&models, &weights, k_max);
-                    engine.aggregate(&cfg.task, &stack, &w)?
-                } else {
-                    crate::mep::aggregate_cpu(&models, &weights)
-                };
-                params = new;
-                version += 1;
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'reactor,
             }
         }
-        std::thread::sleep(Duration::from_millis(5));
+        let ev = timers.pop().expect("peeked above");
+        match ev.kind {
+            NodeEvent::NdmpTick => {
+                r.ndmp_tick();
+                timers.push(ev.at + tick_period, NodeEvent::NdmpTick);
+            }
+            NodeEvent::MepRound => {
+                r.mep_round()?;
+                timers.push(ev.at + period_us, NodeEvent::MepRound);
+            }
+        }
+        r.publish();
     }
 
     // final evaluation on the shared iid test set
@@ -273,28 +480,24 @@ fn run_node(
     let mut loss = 0.0;
     let evals = 2;
     for e in 0..evals {
-        let b = task.test_batch(info.batch, cfg.seed ^ (0xE0 + e));
-        let (c, l) = engine.eval_step(&cfg.task, &params, &XInput::F32(&b.x), &b.y)?;
+        let b = r.task.test_batch(r.batch, cfg.seed ^ (0xE0 + e));
+        let (c, l) = engine.eval_step(&cfg.task, &r.params, &XInput::F32(&b.x), &b.y)?;
         correct += c as f64;
         loss += l as f64;
     }
     listener.shutdown();
-    pool.disconnect_all();
-    let _ = neighbor_models
-        .values()
-        .map(|m| m.version)
-        .max();
+    r.pool.disconnect_all();
     Ok(ClientReport {
         id: cfg.id,
-        accuracy: correct / (evals as usize * info.batch) as f64,
+        accuracy: correct / (evals as usize * r.batch) as f64,
         loss: loss / evals as f64,
-        neighbor_count: ndmp.neighbor_ids().len(),
-        control_sent: ndmp.counters.control_sent
-            + ndmp.counters.repair_sent
-            + ndmp.counters.heartbeats_sent,
-        data_sent: mep_sent,
-        model_bytes_sent,
-        dedup_skips,
-        joined: ndmp.joined,
+        neighbor_count: r.ndmp.neighbor_ids().len(),
+        control_sent: r.ndmp.counters.control_sent
+            + r.ndmp.counters.repair_sent
+            + r.ndmp.counters.heartbeats_sent,
+        data_sent: r.mep_sent,
+        model_bytes_sent: r.model_bytes_sent,
+        dedup_skips: r.dedup_skips,
+        joined: r.ndmp.joined,
     })
 }

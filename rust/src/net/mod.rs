@@ -1,12 +1,16 @@
 //! Real TCP transport (the paper's prototype path, §IV-A1 type 1): wire
-//! codec, connection pool, listener, and the full TCP client node driving
-//! the same NDMP/MEP protocol engines as the simulator.
+//! codec, connection pool + address book, listener, the scheduler-driven
+//! socket backend (`sched_transport`, a `sim::Transport` implementation),
+//! and the full TCP client node driving the same NDMP/MEP protocol
+//! engines as the simulator.
 
 pub mod client_node;
 pub mod peer;
+pub mod sched_transport;
 pub mod server;
 pub mod wire;
 
-pub use client_node::{spawn, ClientHandle, ClientNodeConfig, ClientReport};
-pub use peer::{addr_of, PeerPool};
+pub use client_node::{spawn, ClientHandle, ClientNodeConfig, ClientReport, NodeStatus};
+pub use peer::{addr_of, AddrBook, PeerPool};
+pub use sched_transport::SchedTransport;
 pub use server::Listener;

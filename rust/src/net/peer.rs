@@ -1,7 +1,9 @@
 //! Outbound connection management: a cache of TCP streams to peers,
-//! reconnecting on demand. In the localhost prototype a node's address is
-//! derived from its id (`127.0.0.1:base_port + id`), mirroring the paper's
-//! use of the IP address as the node identity.
+//! reconnecting on demand. Destinations resolve either through the
+//! derived `127.0.0.1:base_port + id` convention (multi-process
+//! prototype; the paper uses the IP address as the node identity) or
+//! through a shared `AddrBook` of OS-assigned ports (in-process fleets
+//! binding port 0, which kills port-collision flakiness in tests).
 
 use super::wire;
 use crate::ndmp::messages::Msg;
@@ -9,7 +11,7 @@ use crate::topology::NodeId;
 use anyhow::Result;
 use std::collections::HashMap;
 use std::net::{SocketAddr, TcpStream};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// id -> socket address mapping for the localhost prototype.
@@ -17,9 +19,47 @@ pub fn addr_of(base_port: u16, id: NodeId) -> SocketAddr {
     SocketAddr::from(([127, 0, 0, 1], base_port + id as u16))
 }
 
+/// Shared registry of live listener addresses for in-process fleets:
+/// each node binds an OS-assigned port (port 0) and registers the actual
+/// address here; `PeerPool::with_book` resolves destinations through it.
+/// A missing entry means the peer is dead or not yet open — the send is
+/// dropped and counted, like any crash-fail peer.
+#[derive(Debug, Default)]
+pub struct AddrBook {
+    map: RwLock<HashMap<NodeId, SocketAddr>>,
+}
+
+impl AddrBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&self, id: NodeId, addr: SocketAddr) {
+        self.map.write().unwrap().insert(id, addr);
+    }
+
+    pub fn unregister(&self, id: NodeId) {
+        self.map.write().unwrap().remove(&id);
+    }
+
+    pub fn lookup(&self, id: NodeId) -> Option<SocketAddr> {
+        self.map.read().unwrap().get(&id).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.read().unwrap().is_empty()
+    }
+}
+
 pub struct PeerPool {
     pub base_port: u16,
     pub self_id: NodeId,
+    /// Address registry for port-0 fleets; `None` = derived addressing.
+    book: Option<Arc<AddrBook>>,
     conns: Mutex<HashMap<NodeId, TcpStream>>,
     /// send failures (dead peers are detected by NDMP heartbeats, not here)
     pub send_errors: std::sync::atomic::AtomicU64,
@@ -30,13 +70,35 @@ impl PeerPool {
         Self {
             base_port,
             self_id,
+            book: None,
             conns: Mutex::new(HashMap::new()),
             send_errors: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
+    /// A pool resolving destinations through a shared `AddrBook` instead
+    /// of the `base_port + id` convention.
+    pub fn with_book(self_id: NodeId, book: Arc<AddrBook>) -> Self {
+        Self {
+            base_port: 0,
+            self_id,
+            book: Some(book),
+            conns: Mutex::new(HashMap::new()),
+            send_errors: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    fn resolve(&self, to: NodeId) -> Option<SocketAddr> {
+        match &self.book {
+            Some(book) => book.lookup(to),
+            None => Some(addr_of(self.base_port, to)),
+        }
+    }
+
     fn connect(&self, to: NodeId) -> Result<TcpStream> {
-        let addr = addr_of(self.base_port, to);
+        let addr = self
+            .resolve(to)
+            .ok_or_else(|| anyhow::anyhow!("no address registered for node {to}"))?;
         let s = TcpStream::connect_timeout(&addr, Duration::from_millis(1_000))?;
         s.set_nodelay(true)?;
         // Bounded writes: two peers simultaneously pushing large model
@@ -48,12 +110,15 @@ impl PeerPool {
 
     /// Send a message, reconnecting once on a stale cached connection.
     /// Failures are counted but not fatal (crash-fail peers are expected).
-    pub fn send(&self, to: NodeId, msg: &Msg) {
+    /// Returns whether a frame was actually written to a socket, so
+    /// callers tracking in-flight traffic don't wait for frames that
+    /// were dropped on a dead or unregistered peer.
+    pub fn send(&self, to: NodeId, msg: &Msg) -> bool {
         let mut conns = self.conns.lock().unwrap();
         // try the cached stream first
         if let Some(stream) = conns.get_mut(&to) {
             if wire::write_frame(stream, self.self_id, msg).is_ok() {
-                return;
+                return true;
             }
             conns.remove(&to);
         }
@@ -61,9 +126,11 @@ impl PeerPool {
             Ok(mut stream) => {
                 if wire::write_frame(&mut stream, self.self_id, msg).is_ok() {
                     conns.insert(to, stream);
+                    true
                 } else {
                     self.send_errors
                         .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    false
                 }
             }
             Err(e) => {
@@ -72,6 +139,7 @@ impl PeerPool {
                 }
                 self.send_errors
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                false
             }
         }
     }
@@ -100,5 +168,25 @@ mod tests {
             pool.send_errors.load(std::sync::atomic::Ordering::Relaxed),
             1
         );
+    }
+
+    #[test]
+    fn book_resolution_and_unregistered_send() {
+        let book = Arc::new(AddrBook::new());
+        assert!(book.is_empty());
+        let addr = SocketAddr::from(([127, 0, 0, 1], 12345));
+        book.register(4, addr);
+        assert_eq!(book.len(), 1);
+        let pool = PeerPool::with_book(1, book.clone());
+        assert_eq!(pool.resolve(4), Some(addr));
+        // unregistered destination: dropped + counted, never panics
+        assert_eq!(pool.resolve(9), None);
+        pool.send(9, &Msg::Heartbeat);
+        assert_eq!(
+            pool.send_errors.load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+        book.unregister(4);
+        assert_eq!(pool.resolve(4), None);
     }
 }

@@ -1,0 +1,244 @@
+//! The real-socket `Transport` backend: maps unified-scheduler events
+//! onto the TCP peer/wire layer, so the *same* deterministic event loop
+//! that drives the in-memory simulation drives localhost sockets.
+//!
+//! Every node the `Simulator` opens gets an endpoint — a `Listener`
+//! bound to an OS-assigned port (no port-collision flakiness) plus a
+//! `PeerPool` of outbound connections — registered in a shared
+//! `AddrBook`. `send` writes a `net::wire` frame to the destination's
+//! live address; `poll` drains whatever the loopback delivered, waiting
+//! (bounded) for in-flight traffic to quiesce so a multi-hop protocol
+//! exchange completes within one virtual instant.
+//!
+//! Timing model: virtual time is the scheduler's; the wire contributes
+//! effectively zero *virtual* latency (messages arrive at the instant of
+//! the next pump). The overlay protocols converge to the same
+//! Definition-1 topology regardless of latency, which is what the
+//! conformance suite (`tests/transport_conformance.rs`) checks against
+//! the in-memory backend.
+//!
+//! Failure semantics match the simulator's crash-fail rule: `close`
+//! tears the endpoint down, in-flight messages to it vanish, and later
+//! sends fail silently (counted by the pool, detected by NDMP
+//! heartbeats).
+
+use super::peer::{AddrBook, PeerPool};
+use super::server::Listener;
+use crate::ndmp::messages::{Msg, Time};
+use crate::sim::{Arrival, Transport};
+use crate::topology::NodeId;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::net::SocketAddr;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+struct Endpoint {
+    listener: Listener,
+    pool: PeerPool,
+}
+
+struct Inner {
+    book: Arc<AddrBook>,
+    endpoints: BTreeMap<NodeId, Endpoint>,
+    /// Frames written to sockets since the last settled poll; nonzero
+    /// makes the next `poll` wait for loopback delivery to quiesce.
+    in_flight: usize,
+    /// A poll returns once this long passes with no new arrival.
+    settle: Duration,
+    /// Hard cap on how long one poll may wait in total.
+    budget: Duration,
+}
+
+impl Inner {
+    /// Non-blocking drain of every endpoint's inbound channel (in id
+    /// order). Returns how many frames were collected.
+    fn drain_into(&mut self, out: &mut Vec<Arrival>) -> usize {
+        let mut got = 0;
+        for (&node, ep) in self.endpoints.iter() {
+            while let Ok((from, msg)) = ep.listener.rx.try_recv() {
+                out.push(Arrival {
+                    from,
+                    to: node,
+                    msg,
+                });
+                got += 1;
+            }
+        }
+        got
+    }
+}
+
+/// Scheduler-driven TCP transport: one in-process endpoint per live
+/// node, real frames on localhost sockets. See the module docs.
+///
+/// The inner mutex exists for the `Sync` bound of `Transport` (inbound
+/// channels are single-consumer); all calls come from the owning
+/// simulator's thread.
+pub struct SchedTransport {
+    inner: Mutex<Inner>,
+}
+
+impl SchedTransport {
+    pub fn new() -> Self {
+        Self::with_pacing(Duration::from_millis(5), Duration::from_millis(1_000))
+    }
+
+    /// Tune the quiescence pacing: `settle` is how long the loopback must
+    /// stay silent before a poll returns, `budget` the per-poll cap.
+    pub fn with_pacing(settle: Duration, budget: Duration) -> Self {
+        Self {
+            inner: Mutex::new(Inner {
+                book: Arc::new(AddrBook::new()),
+                endpoints: BTreeMap::new(),
+                in_flight: 0,
+                settle,
+                budget,
+            }),
+        }
+    }
+
+    /// The shared address registry (exposed for tests/diagnostics).
+    pub fn book(&self) -> Arc<AddrBook> {
+        self.inner.lock().unwrap().book.clone()
+    }
+
+    /// Number of open endpoints.
+    pub fn endpoint_count(&self) -> usize {
+        self.inner.lock().unwrap().endpoints.len()
+    }
+}
+
+impl Default for SchedTransport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Transport for SchedTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn open(&mut self, node: NodeId) -> Result<()> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if inner.endpoints.contains_key(&node) {
+            return Ok(());
+        }
+        let listener = Listener::start(SocketAddr::from(([127, 0, 0, 1], 0)))?;
+        inner.book.register(node, listener.addr);
+        let pool = PeerPool::with_book(node, inner.book.clone());
+        inner.endpoints.insert(node, Endpoint { listener, pool });
+        Ok(())
+    }
+
+    fn close(&mut self, node: NodeId) {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        inner.book.unregister(node);
+        if let Some(mut ep) = inner.endpoints.remove(&node) {
+            ep.listener.shutdown();
+            ep.pool.disconnect_all();
+        }
+    }
+
+    fn send(&mut self, _now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        if let Some(ep) = inner.endpoints.get(&from) {
+            // only frames actually written count as in-flight: dropped
+            // sends (dead/unregistered peers) must not make later polls
+            // wait for arrivals that will never come
+            if ep.pool.send(to, msg) {
+                inner.in_flight += 1;
+            }
+        }
+        None
+    }
+
+    fn poll(&mut self) -> Vec<Arrival> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let mut out = Vec::new();
+        inner.drain_into(&mut out);
+        if inner.in_flight == 0 && out.is_empty() {
+            return out;
+        }
+        // Frames are (or just were) on the wire: wait until the loopback
+        // quiesces, so whatever this virtual instant triggered is fully
+        // collected. A first contact pays connect + accept latency, so
+        // an empty drain waits a longer window than the steady-state
+        // settle; sends to dead peers never arrive and cost one window.
+        let first_window = inner.settle.max(Duration::from_millis(50));
+        let start = Instant::now();
+        let mut last_arrival = Instant::now();
+        while start.elapsed() < inner.budget {
+            let window = if out.is_empty() {
+                first_window
+            } else {
+                inner.settle
+            };
+            if last_arrival.elapsed() >= window {
+                break;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+            if inner.drain_into(&mut out) > 0 {
+                last_arrival = Instant::now();
+            }
+        }
+        inner.in_flight = 0;
+        out
+    }
+
+    fn idle(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_cross_between_endpoints() {
+        let mut t =
+            SchedTransport::with_pacing(Duration::from_millis(5), Duration::from_millis(2_000));
+        t.open(1).unwrap();
+        t.open(2).unwrap();
+        assert_eq!(t.endpoint_count(), 2);
+        assert_eq!(t.send(0, 1, 2, &Msg::Heartbeat), None);
+        let arrivals = t.poll();
+        assert_eq!(arrivals.len(), 1);
+        assert_eq!(arrivals[0].from, 1);
+        assert_eq!(arrivals[0].to, 2);
+        assert_eq!(arrivals[0].msg, Msg::Heartbeat);
+        // quiet transport: an immediate second poll is empty and cheap
+        assert!(t.poll().is_empty());
+        t.close(2);
+        // sends to a closed endpoint vanish (crash-fail semantics)
+        t.send(0, 1, 2, &Msg::Heartbeat);
+        assert!(t.poll().is_empty());
+        t.close(1);
+        assert_eq!(t.endpoint_count(), 0);
+    }
+
+    #[test]
+    fn broadcast_reaches_every_live_endpoint() {
+        let mut t =
+            SchedTransport::with_pacing(Duration::from_millis(5), Duration::from_millis(2_000));
+        for id in 1..=3u64 {
+            t.open(id).unwrap();
+        }
+        // wire backend: nothing is queue-scheduled, frames go out-of-band
+        let scheduled = t.broadcast(0, 1, &[2, 3], &Msg::Heartbeat);
+        assert!(scheduled.is_empty());
+        let mut arrivals = t.poll();
+        arrivals.sort_by_key(|a| a.to);
+        let tos: Vec<_> = arrivals.iter().map(|a| (a.from, a.to)).collect();
+        assert_eq!(tos, vec![(1, 2), (1, 3)]);
+        for id in 1..=3u64 {
+            t.close(id);
+        }
+    }
+}

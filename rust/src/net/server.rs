@@ -83,7 +83,9 @@ fn accept_loop(listener: TcpListener, tx: Sender<(NodeId, Msg)>, stop: Arc<Atomi
                 });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(std::time::Duration::from_millis(10));
+                // Short nap: first-contact latency gates how fast the
+                // scheduler-driven transport can settle a virtual instant.
+                std::thread::sleep(std::time::Duration::from_millis(1));
             }
             Err(_) => break,
         }

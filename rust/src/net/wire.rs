@@ -288,53 +288,167 @@ mod tests {
     use super::*;
 
     fn roundtrip(msg: Msg) {
-        let frame = encode(42, &msg);
+        roundtrip_from(42, msg);
+    }
+
+    fn roundtrip_from(sender: NodeId, msg: Msg) {
+        let frame = encode(sender, &msg);
         let mut cursor = std::io::Cursor::new(frame);
-        let (sender, got) = read_frame(&mut cursor).unwrap();
-        assert_eq!(sender, 42);
+        let (got_sender, got) = read_frame(&mut cursor).unwrap();
+        assert_eq!(got_sender, sender);
         assert_eq!(got, msg);
+    }
+
+    /// One instance of every `Msg` variant, with edge-leaning field
+    /// values (max ids, zero ids, empty and extreme parameter vectors).
+    fn all_variants() -> Vec<Msg> {
+        vec![
+            Msg::NeighborDiscovery { joiner: 7, space: 2 },
+            Msg::NeighborDiscovery {
+                joiner: u64::MAX,
+                space: u32::MAX,
+            },
+            Msg::DiscoveryResult {
+                space: 1,
+                prev: 3,
+                next: 9,
+            },
+            Msg::AdjacentUpdate {
+                space: 0,
+                side: Side::Next,
+                node: 5,
+            },
+            Msg::AdjacentUpdate {
+                space: 1,
+                side: Side::Prev,
+                node: 0,
+            },
+            Msg::Leave {
+                space: 3,
+                side: Side::Prev,
+                other: 11,
+            },
+            Msg::Heartbeat,
+            Msg::NeighborRepair {
+                origin: 1,
+                target: 2,
+                space: 4,
+                dir: Dir::Cw,
+            },
+            Msg::NeighborRepair {
+                origin: u64::MAX,
+                target: 0,
+                space: 0,
+                dir: Dir::Ccw,
+            },
+            Msg::RepairStop {
+                space: 2,
+                dir: Dir::Ccw,
+            },
+            Msg::RepairStop {
+                space: 2,
+                dir: Dir::Cw,
+            },
+            Msg::ModelOffer {
+                fingerprint: 0xDEAD_BEEF,
+                confidence: 0.75,
+                version: 9,
+            },
+            Msg::ModelRequest { version: 4 },
+            Msg::ModelRequest { version: u64::MAX },
+            Msg::ModelPayload {
+                version: 8,
+                confidence: 0.5,
+                params: vec![1.0, -2.5, 3.25],
+            },
+            Msg::ModelPayload {
+                version: 0,
+                confidence: 0.0,
+                params: Vec::new(),
+            },
+            Msg::ModelPayload {
+                version: 1,
+                confidence: 1.0,
+                params: vec![f32::MAX, f32::MIN, f32::INFINITY, f32::NEG_INFINITY, 0.0],
+            },
+        ]
     }
 
     #[test]
     fn roundtrip_all_variants() {
-        roundtrip(Msg::NeighborDiscovery { joiner: 7, space: 2 });
-        roundtrip(Msg::DiscoveryResult {
-            space: 1,
-            prev: 3,
-            next: 9,
-        });
-        roundtrip(Msg::AdjacentUpdate {
-            space: 0,
-            side: Side::Next,
-            node: 5,
-        });
-        roundtrip(Msg::Leave {
-            space: 3,
-            side: Side::Prev,
-            other: 11,
-        });
-        roundtrip(Msg::Heartbeat);
-        roundtrip(Msg::NeighborRepair {
-            origin: 1,
-            target: 2,
-            space: 4,
-            dir: Dir::Cw,
-        });
-        roundtrip(Msg::RepairStop {
-            space: 2,
-            dir: Dir::Ccw,
-        });
-        roundtrip(Msg::ModelOffer {
-            fingerprint: 0xDEAD_BEEF,
-            confidence: 0.75,
-            version: 9,
-        });
-        roundtrip(Msg::ModelRequest { version: 4 });
-        roundtrip(Msg::ModelPayload {
-            version: 8,
-            confidence: 0.5,
-            params: vec![1.0, -2.5, 3.25],
-        });
+        for msg in all_variants() {
+            roundtrip(msg);
+        }
+    }
+
+    #[test]
+    fn roundtrip_sender_extremes() {
+        roundtrip_from(0, Msg::Heartbeat);
+        roundtrip_from(u64::MAX, Msg::ModelRequest { version: 1 });
+    }
+
+    /// Every strict prefix of every variant's frame must fail to decode
+    /// — no truncation may be silently accepted as a shorter message.
+    #[test]
+    fn truncation_at_every_byte_errors() {
+        for msg in all_variants() {
+            let frame = encode(3, &msg);
+            for cut in 0..frame.len() {
+                let mut cursor = std::io::Cursor::new(&frame[..cut]);
+                assert!(
+                    read_frame(&mut cursor).is_err(),
+                    "cut at {cut}/{} decoded for {msg:?}",
+                    frame.len()
+                );
+            }
+        }
+    }
+
+    /// A frame whose length field covers more bytes than its payload
+    /// layout uses must be rejected (trailing garbage, not ignored).
+    #[test]
+    fn rejects_trailing_payload_bytes() {
+        for msg in [Msg::Heartbeat, Msg::ModelRequest { version: 2 }] {
+            let mut frame = encode(1, &msg);
+            let len = u32::from_be_bytes(frame[10..14].try_into().unwrap()) + 1;
+            frame[10..14].copy_from_slice(&len.to_be_bytes());
+            frame.push(0);
+            let mut cursor = std::io::Cursor::new(frame);
+            assert!(read_frame(&mut cursor).is_err(), "trailing byte accepted");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_side_and_dir_bytes() {
+        // AdjacentUpdate payload: space u32, side u8, node u64 — the side
+        // byte sits at offset 14 (head) + 4.
+        let mut frame = encode(
+            1,
+            &Msg::AdjacentUpdate {
+                space: 0,
+                side: Side::Next,
+                node: 5,
+            },
+        );
+        frame[18] = 7;
+        assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
+        // RepairStop payload: space u32, dir u8 — dir byte at 14 + 4.
+        let mut frame = encode(
+            1,
+            &Msg::RepairStop {
+                space: 2,
+                dir: Dir::Cw,
+            },
+        );
+        frame[18] = 9;
+        assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
+    }
+
+    #[test]
+    fn rejects_oversized_length_field() {
+        let mut frame = encode(1, &Msg::Heartbeat);
+        frame[10..14].copy_from_slice(&u32::MAX.to_be_bytes());
+        assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
     }
 
     #[test]

@@ -125,7 +125,13 @@ impl Engine {
     }
 
     /// Evaluate a batch: returns (correct_count, loss).
-    pub fn eval_step(&self, task: &str, params: &[f32], x: &XInput, y: &[i32]) -> Result<(f32, f32)> {
+    pub fn eval_step(
+        &self,
+        task: &str,
+        params: &[f32],
+        x: &XInput,
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
         let t = self.task(task)?;
         let b = t.info.batch as i64;
         let d = t.info.x_len as i64;

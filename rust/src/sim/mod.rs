@@ -1,6 +1,7 @@
 //! Deterministic discrete-event substrate: the generic scheduler
-//! (`sched`), overlay event kinds (`event`), latency model, churn
-//! injection, and the NDMP fleet runner.
+//! (`sched`), overlay event kinds (`event`), the `Transport` abstraction
+//! with its in-memory backend (`transport`, `network`), churn injection,
+//! and the NDMP fleet runner.
 //!
 //! The scheduler is shared with the DFL trainer (`crate::dfl::Trainer`
 //! instantiates it with `TrainEvent`), which is what lets training and
@@ -13,8 +14,10 @@ pub mod event;
 pub mod network;
 pub mod runner;
 pub mod sched;
+pub mod transport;
 
 pub use event::{Event, EventKind, EventQueue};
-pub use network::LatencyModel;
+pub use network::{LatencyModel, SimTransport};
 pub use runner::{grow_network, CorrectnessSample, Simulator};
-pub use sched::{Scheduled, Scheduler};
+pub use sched::{EventId, Scheduled, Scheduler};
+pub use transport::{Arrival, Transport};

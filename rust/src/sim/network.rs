@@ -1,8 +1,11 @@
 //! Simulated network latency model: one-way delay = `latency_ms` plus an
-//! exponential jitter tail. Deterministic per seed.
+//! exponential jitter tail. Deterministic per seed. `SimTransport` wraps
+//! the model as the in-memory `Transport` backend of the unified engine.
 
+use super::transport::{Arrival, Transport};
 use crate::config::NetConfig;
-use crate::ndmp::messages::Time;
+use crate::ndmp::messages::{Msg, Time};
+use crate::topology::NodeId;
 use crate::util::Rng;
 
 #[derive(Debug)]
@@ -29,6 +32,47 @@ impl LatencyModel {
             0.0
         };
         (self.base_us + jitter).max(1.0) as Time
+    }
+}
+
+/// The in-memory message backend: every send is scheduled back onto the
+/// caller's event queue after a latency-model delay. Fully deterministic
+/// per seed — the reference behavior the TCP backend is conformance-tested
+/// against.
+#[derive(Debug)]
+pub struct SimTransport {
+    latency: LatencyModel,
+}
+
+impl SimTransport {
+    pub fn new(cfg: &NetConfig) -> Self {
+        Self {
+            latency: LatencyModel::new(cfg),
+        }
+    }
+}
+
+impl Transport for SimTransport {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn open(&mut self, _node: NodeId) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn close(&mut self, _node: NodeId) {}
+
+    fn send(&mut self, now: Time, _from: NodeId, _to: NodeId, _msg: &Msg) -> Option<Time> {
+        Some(now + self.latency.sample())
+    }
+
+    fn poll(&mut self) -> Vec<Arrival> {
+        Vec::new()
+    }
+
+    fn idle(&self) -> bool {
+        true
     }
 }
 
@@ -59,5 +103,36 @@ mod tests {
         };
         let mut m = LatencyModel::new(&cfg);
         assert!((0..100).all(|_| m.sample() == 10_000));
+    }
+
+    #[test]
+    fn sim_transport_schedules_and_never_polls() {
+        let cfg = NetConfig {
+            latency_ms: 5.0,
+            jitter: 0.0,
+            seed: 3,
+        };
+        let mut t = SimTransport::new(&cfg);
+        assert!(t.idle());
+        assert!(t.open(1).is_ok());
+        let at = t.send(100, 1, 2, &Msg::Heartbeat);
+        assert_eq!(at, Some(100 + 5_000));
+        assert!(t.poll().is_empty());
+        t.close(1);
+    }
+
+    #[test]
+    fn sim_transport_broadcast_schedules_every_destination() {
+        let cfg = NetConfig {
+            latency_ms: 2.0,
+            jitter: 0.0,
+            seed: 4,
+        };
+        let mut t = SimTransport::new(&cfg);
+        let scheduled = t.broadcast(50, 1, &[2, 3, 4], &Msg::Heartbeat);
+        assert_eq!(
+            scheduled,
+            vec![(2, 50 + 2_000), (3, 50 + 2_000), (4, 50 + 2_000)]
+        );
     }
 }

@@ -1,11 +1,14 @@
 //! NDMP overlay simulator: drives a fleet of `NodeState` protocol engines
-//! through the deterministic event queue with the latency model. This is
-//! the paper's "medium/large-scale simulation" substrate (§IV-A1, types
-//! 2–3) for topology construction, maintenance, and churn experiments
-//! (Figs. 8a–c).
+//! through the deterministic event queue over a pluggable `Transport`.
+//! With the default in-memory backend (`SimTransport`) this is the
+//! paper's "medium/large-scale simulation" substrate (§IV-A1, types 2–3)
+//! for topology construction, maintenance, and churn experiments
+//! (Figs. 8a–c); with `net::SchedTransport` the *same* event loop drives
+//! the protocols over real localhost TCP sockets (§IV-A1, type 1).
 
 use super::event::{EventKind, EventQueue};
-use super::network::LatencyModel;
+use super::network::SimTransport;
+use super::transport::Transport;
 use crate::config::{NetConfig, OverlayConfig};
 use crate::ndmp::messages::{Msg, Outgoing, Time, MS};
 use crate::ndmp::node::{NodeCounters, NodeState};
@@ -25,7 +28,9 @@ pub struct Simulator {
     pub nodes: BTreeMap<NodeId, NodeState>,
     pub queue: EventQueue,
     pub now: Time,
-    latency: LatencyModel,
+    /// Message-passage backend: in-memory (`SimTransport`) or real TCP
+    /// sockets (`net::SchedTransport`). Timers always stay on `queue`.
+    transport: Box<dyn Transport>,
     /// Tick granularity for node timers.
     tick_period: Time,
     /// Counters of departed nodes (so message totals survive failures).
@@ -36,19 +41,34 @@ pub struct Simulator {
 }
 
 impl Simulator {
+    /// A simulator on the default in-memory transport (deterministic
+    /// latency model from `net`).
     pub fn new(overlay: OverlayConfig, net: NetConfig) -> Self {
+        let transport = Box::new(SimTransport::new(&net));
+        Self::with_transport(overlay, transport)
+    }
+
+    /// A simulator on an explicit transport backend. The event loop,
+    /// protocol engines, and churn scheduling are identical on every
+    /// backend; only message passage differs.
+    pub fn with_transport(overlay: OverlayConfig, transport: Box<dyn Transport>) -> Self {
         let tick_period = (overlay.heartbeat_ms * 1_000) / 2;
         Self {
             cfg: overlay,
             nodes: BTreeMap::new(),
             queue: EventQueue::new(),
             now: 0,
-            latency: LatencyModel::new(&net),
+            transport,
             tick_period: tick_period.max(1),
             retired_counters: Vec::new(),
             samples: Vec::new(),
             delivered: 0,
         }
+    }
+
+    /// Name of the message backend (`"sim"` or `"tcp"`).
+    pub fn backend(&self) -> &'static str {
+        self.transport.name()
     }
 
     /// Create a correct network of `ids` instantly (centralized shortcut
@@ -84,6 +104,7 @@ impl Simulator {
             }
             // zero the counters: bootstrap is not protocol traffic
             st.counters = NodeCounters::default();
+            self.transport.open(id).expect("transport endpoint");
             self.nodes.insert(id, st);
             self.queue.push(self.now + 1, EventKind::Tick { node: id });
         }
@@ -93,6 +114,7 @@ impl Simulator {
     pub fn bootstrap_single(&mut self, id: NodeId) {
         let mut st = NodeState::new(id, self.cfg.clone(), self.now);
         st.bootstrap_first();
+        self.transport.open(id).expect("transport endpoint");
         self.nodes.insert(id, st);
         self.queue.push(self.now + 1, EventKind::Tick { node: id });
     }
@@ -118,15 +140,43 @@ impl Simulator {
             if o.to == from {
                 continue;
             }
-            let delay = self.latency.sample();
-            self.queue.push(
-                self.now + delay,
-                EventKind::Deliver {
-                    from,
-                    to: o.to,
-                    msg: o.msg,
-                },
-            );
+            // Queue-scheduled backends answer with a delivery time; wire
+            // backends carry the bytes themselves and we poll (`pump`).
+            if let Some(at) = self.transport.send(self.now, from, o.to, &o.msg) {
+                self.queue.push(
+                    at,
+                    EventKind::Deliver {
+                        from,
+                        to: o.to,
+                        msg: o.msg,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Deliver messages the transport carried out-of-band (socket
+    /// backends). Loops until quiescent so multi-hop protocol exchanges
+    /// complete within one virtual instant; a no-op on the in-memory
+    /// backend.
+    fn pump(&mut self) {
+        if self.transport.idle() {
+            return;
+        }
+        loop {
+            let arrivals = self.transport.poll();
+            if arrivals.is_empty() {
+                break;
+            }
+            for a in arrivals {
+                self.delivered += 1;
+                // messages to dead nodes vanish (crash-fail model)
+                let Some(node) = self.nodes.get_mut(&a.to) else {
+                    continue;
+                };
+                let outs = node.handle(a.from, a.msg, self.now);
+                self.dispatch(a.to, outs);
+            }
         }
     }
 
@@ -135,6 +185,16 @@ impl Simulator {
         self.nodes
             .iter()
             .map(|(&id, st)| (id, st.neighbor_ids()))
+            .collect()
+    }
+
+    /// Ring-adjacency snapshot (Definition-1 views only, excluding
+    /// incidental routed-traffic peers). Two converged backends must
+    /// agree on this exactly — the conformance-test comparison view.
+    pub fn ring_snapshot(&self) -> NeighborSnapshot {
+        self.nodes
+            .iter()
+            .map(|(&id, st)| (id, st.ring_neighbor_ids()))
             .collect()
     }
 
@@ -160,8 +220,11 @@ impl Simulator {
         }
     }
 
-    /// Run until `deadline` (inclusive) or the queue drains.
+    /// Run until `deadline` (inclusive) or the queue drains. Timer and
+    /// churn events pop from the deterministic queue; between events any
+    /// wire-carried messages are pumped in.
     pub fn run_until(&mut self, deadline: Time) {
+        self.pump();
         while let Some(t) = self.queue.peek_time() {
             if t > deadline {
                 break;
@@ -191,6 +254,9 @@ impl Simulator {
                     if self.nodes.contains_key(&node) || !self.nodes.contains_key(&bootstrap) {
                         continue;
                     }
+                    if self.transport.open(node).is_err() {
+                        continue; // endpoint unavailable: the join is lost
+                    }
                     let mut st = NodeState::new(node, self.cfg.clone(), self.now);
                     let outs = st.start_join(bootstrap, self.now);
                     self.nodes.insert(node, st);
@@ -201,13 +267,18 @@ impl Simulator {
                 EventKind::Fail { node } => {
                     if let Some(st) = self.nodes.remove(&node) {
                         self.retired_counters.push(st.counters);
+                        self.transport.close(node);
                     }
                 }
                 EventKind::Leave { node } => {
                     if let Some(mut st) = self.nodes.remove(&node) {
                         let outs = st.start_leave();
                         self.retired_counters.push(st.counters);
+                        // flush the leave notices, then tear the endpoint
+                        // down — in-flight messages to it vanish, exactly
+                        // like the in-memory dead-node rule.
                         self.dispatch(node, outs);
+                        self.transport.close(node);
                     }
                 }
                 EventKind::Snapshot { .. } => {
@@ -219,13 +290,20 @@ impl Simulator {
                     });
                 }
             }
+            self.pump();
         }
         self.now = self.now.max(deadline);
+        self.pump();
     }
 
     /// Convenience: run until correctness reaches `threshold` or `deadline`
     /// passes; returns the time correctness first reached the threshold.
-    pub fn run_until_correct(&mut self, threshold: f64, deadline: Time, check_every: Time) -> Option<Time> {
+    pub fn run_until_correct(
+        &mut self,
+        threshold: f64,
+        deadline: Time,
+        check_every: Time,
+    ) -> Option<Time> {
         loop {
             let next = (self.now + check_every).min(deadline);
             self.run_until(next);

@@ -3,17 +3,26 @@
 //!
 //! This is the single time substrate of the repo. The NDMP overlay
 //! simulator instantiates it with `sim::EventKind` (message deliveries,
-//! timers, churn) and the DFL trainer instantiates it with
+//! timers, churn), the DFL trainer instantiates it with
 //! `dfl::TrainEvent` (client wake-ups, synchronous rounds, accuracy
-//! samples, churn injections) — both halves of the unified engine pop
-//! from the same kind of heap and therefore share the same determinism
-//! guarantee: ties at equal timestamps break on a monotone sequence
-//! number, so runs are exactly reproducible regardless of the order in
-//! which events were discovered and pushed.
+//! samples, churn injections), and the real-TCP node reactor
+//! (`net::client_node`) instantiates it with its timer kinds — all three
+//! pop from the same kind of heap and therefore share the same
+//! determinism guarantee: ties at equal timestamps break on a monotone
+//! sequence number, so runs are exactly reproducible regardless of the
+//! order in which events were discovered and pushed.
+//!
+//! `push` returns an `EventId` that `cancel` accepts: cancelled events
+//! are tombstoned and silently skipped by `pop`/`peek_time`, so callers
+//! can de-schedule timers without rebuilding the heap.
 
 use crate::ndmp::messages::Time;
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
+
+/// Identifier of a scheduled event (its sequence number), used to cancel
+/// it before it fires. Ids are unique per scheduler and never reused.
+pub type EventId = u64;
 
 /// A scheduled event: fires at `at`; `seq` is the push order and breaks
 /// timestamp ties deterministically.
@@ -54,6 +63,10 @@ impl<K> Ord for Scheduled<K> {
 pub struct Scheduler<K> {
     heap: BinaryHeap<Scheduled<K>>,
     seq: u64,
+    /// Ids currently live in the heap (pushed, not yet popped/cancelled).
+    pending: HashSet<u64>,
+    /// Cancelled ids whose heap entries have not been reaped yet.
+    cancelled: HashSet<u64>,
 }
 
 impl<K> Default for Scheduler<K> {
@@ -61,6 +74,8 @@ impl<K> Default for Scheduler<K> {
         Self {
             heap: BinaryHeap::new(),
             seq: 0,
+            pending: HashSet::new(),
+            cancelled: HashSet::new(),
         }
     }
 }
@@ -70,35 +85,72 @@ impl<K> Scheduler<K> {
         Self::default()
     }
 
-    /// Schedule `kind` at absolute time `at`. O(log n).
-    pub fn push(&mut self, at: Time, kind: K) {
+    /// Schedule `kind` at absolute time `at`; the returned id can cancel
+    /// the event before it fires. O(log n).
+    pub fn push(&mut self, at: Time, kind: K) -> EventId {
         let seq = self.seq;
         self.seq += 1;
+        self.pending.insert(seq);
         self.heap.push(Scheduled { at, seq, kind });
+        seq
     }
 
-    /// Pop the earliest event (ties in push order). O(log n).
+    /// Cancel a pending event. Returns `true` if it was still pending;
+    /// cancelling an already-fired or already-cancelled id is a no-op.
+    pub fn cancel(&mut self, id: EventId) -> bool {
+        if self.pending.remove(&id) {
+            self.cancelled.insert(id);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Pop the earliest live event (ties in push order), skipping
+    /// cancelled tombstones. O(log n) amortized.
     pub fn pop(&mut self) -> Option<Scheduled<K>> {
-        self.heap.pop()
+        while let Some(e) = self.heap.pop() {
+            if self.cancelled.remove(&e.seq) {
+                continue;
+            }
+            self.pending.remove(&e.seq);
+            return Some(e);
+        }
+        None
     }
 
-    /// Timestamp of the next event without popping it.
-    pub fn peek_time(&self) -> Option<Time> {
-        self.heap.peek().map(|e| e.at)
+    /// Timestamp of the next live event without popping it. Reaps any
+    /// cancelled tombstones sitting at the top of the heap.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        loop {
+            let (at, seq) = match self.heap.peek() {
+                None => return None,
+                Some(e) => (e.at, e.seq),
+            };
+            if self.cancelled.contains(&seq) {
+                self.heap.pop();
+                self.cancelled.remove(&seq);
+            } else {
+                return Some(at);
+            }
+        }
     }
 
+    /// Number of live (non-cancelled) pending events.
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.pending.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.pending.is_empty()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
+    use std::collections::{BTreeMap, VecDeque};
 
     #[test]
     fn pops_in_time_order() {
@@ -158,5 +210,160 @@ mod tests {
         assert_eq!(rest, vec![1, 2, 3]);
         assert!(q.is_empty());
         assert_eq!(q.peek_time(), None);
+    }
+
+    // ------------------------------------------------------------------
+    // Property tests: random event batches against a reference model
+    // ------------------------------------------------------------------
+
+    /// Random push batches, drained completely: pop times never decrease
+    /// and ties pop FIFO per timestamp, for many seeds.
+    #[test]
+    fn prop_random_batches_preserve_time_order_and_fifo_ties() {
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(seed ^ 0x5C4ED);
+            let mut q: Scheduler<u64> = Scheduler::new();
+            let mut pushed: BTreeMap<Time, Vec<u64>> = BTreeMap::new();
+            let n = 1 + rng.index(200);
+            for tag in 0..n as u64 {
+                let t = rng.below(32) as Time;
+                q.push(t, tag);
+                pushed.entry(t).or_default().push(tag);
+            }
+            assert_eq!(q.len(), n);
+            let mut popped: BTreeMap<Time, Vec<u64>> = BTreeMap::new();
+            let mut last = 0;
+            while let Some(e) = q.pop() {
+                assert!(e.at >= last, "seed {seed}: time went backwards");
+                last = e.at;
+                popped.entry(e.at).or_default().push(e.kind);
+            }
+            assert_eq!(popped, pushed, "seed {seed}");
+            assert!(q.is_empty());
+        }
+    }
+
+    /// Random interleavings of push/pop against an exact reference model
+    /// (a time-ordered map of FIFO queues): every pop must return the
+    /// front of the earliest-time queue.
+    #[test]
+    fn prop_interleaved_ops_match_reference_model() {
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(seed ^ 0x1F0);
+            let mut q: Scheduler<u64> = Scheduler::new();
+            let mut model: BTreeMap<Time, VecDeque<u64>> = BTreeMap::new();
+            let mut tag = 0u64;
+            for _ in 0..400 {
+                if rng.chance(0.6) {
+                    let t = rng.below(24) as Time;
+                    q.push(t, tag);
+                    model.entry(t).or_default().push_back(tag);
+                    tag += 1;
+                } else {
+                    let want = model.iter_mut().next().map(|(&t, fifo)| {
+                        let v = fifo.pop_front().unwrap();
+                        (t, v)
+                    });
+                    if let Some((t, _)) = want {
+                        if model[&t].is_empty() {
+                            model.remove(&t);
+                        }
+                    }
+                    let got = q.pop().map(|e| (e.at, e.kind));
+                    assert_eq!(got, want, "seed {seed}");
+                }
+            }
+            // drain what is left
+            while let Some(e) = q.pop() {
+                let (&t, fifo) = model.iter_mut().next().expect("model drained early");
+                assert_eq!((e.at, e.kind), (t, fifo.pop_front().unwrap()));
+                if fifo.is_empty() {
+                    model.remove(&t);
+                }
+            }
+            assert!(model.is_empty(), "seed {seed}: scheduler drained early");
+        }
+    }
+
+    /// Random cancel interleavings: cancel-then-fire never panics, a
+    /// cancelled event never pops, and double-cancel / cancel-after-pop
+    /// report `false`.
+    #[test]
+    fn prop_cancel_then_fire_never_panics() {
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(seed ^ 0xCA7CE1);
+            let mut q: Scheduler<u64> = Scheduler::new();
+            let mut model: BTreeMap<Time, VecDeque<(EventId, u64)>> = BTreeMap::new();
+            let mut live: Vec<EventId> = Vec::new();
+            let mut gone: Vec<EventId> = Vec::new();
+            let mut tag = 0u64;
+            for _ in 0..400 {
+                let r = rng.next_f64();
+                if r < 0.5 {
+                    let t = rng.below(24) as Time;
+                    let id = q.push(t, tag);
+                    model.entry(t).or_default().push_back((id, tag));
+                    live.push(id);
+                    tag += 1;
+                } else if r < 0.75 && !live.is_empty() {
+                    let id = live.swap_remove(rng.index(live.len()));
+                    assert!(q.cancel(id), "seed {seed}: live cancel failed");
+                    for fifo in model.values_mut() {
+                        fifo.retain(|&(i, _)| i != id);
+                    }
+                    model.retain(|_, fifo| !fifo.is_empty());
+                    gone.push(id);
+                } else if r < 0.85 && !gone.is_empty() {
+                    // double-cancel / cancel-after-pop is a reported no-op
+                    let id = gone[rng.index(gone.len())];
+                    assert!(!q.cancel(id), "seed {seed}: dead cancel fired");
+                } else {
+                    let want = model.iter_mut().next().map(|(&t, fifo)| {
+                        let (id, v) = fifo.pop_front().unwrap();
+                        (t, id, v)
+                    });
+                    if let Some((t, _, _)) = want {
+                        if model[&t].is_empty() {
+                            model.remove(&t);
+                        }
+                    }
+                    let got = q.pop().map(|e| (e.at, e.seq, e.kind));
+                    assert_eq!(got, want, "seed {seed}");
+                    if let Some((_, id, _)) = got {
+                        live.retain(|&i| i != id);
+                        gone.push(id);
+                    }
+                }
+                // peek_time must always agree with the model's earliest
+                assert_eq!(
+                    q.peek_time(),
+                    model.keys().next().copied(),
+                    "seed {seed}"
+                );
+                assert_eq!(
+                    q.len(),
+                    model.values().map(|f| f.len()).sum::<usize>(),
+                    "seed {seed}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_skips_event_and_preserves_order() {
+        let mut q: Scheduler<&'static str> = Scheduler::new();
+        let _a = q.push(10, "a");
+        let b = q.push(10, "b");
+        let _c = q.push(20, "c");
+        assert!(q.cancel(b));
+        assert!(!q.cancel(b), "double cancel must be a no-op");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.peek_time(), Some(10));
+        assert_eq!(q.pop().unwrap().kind, "a");
+        assert_eq!(q.pop().unwrap().kind, "c");
+        assert!(q.pop().is_none());
+        // cancelling an already-popped id reports false, never panics
+        assert!(!q.cancel(0));
+        assert!(!q.cancel(999));
     }
 }

@@ -1,0 +1,99 @@
+//! The `Transport` abstraction: how protocol messages travel between
+//! nodes, decoupled from *when* protocol logic runs.
+//!
+//! The unified engine separates two concerns that the original prototype
+//! fused together:
+//!
+//! * **Timers** belong to the deterministic scheduler (`sim::sched`).
+//!   Heartbeats, repair probes, joins, failures, and snapshots are heap
+//!   events popped in virtual-time order — identically on every backend.
+//! * **Message passage** belongs to a `Transport`. The simulated backend
+//!   (`sim::network::SimTransport`) computes a delivery time from its
+//!   latency model and hands the message straight back to the scheduler;
+//!   the socket backend (`net::SchedTransport`) writes real TCP frames and
+//!   surfaces whatever the kernel delivers on the next `poll`.
+//!
+//! A backend therefore answers `send` in one of two ways:
+//!
+//! * `Some(deliver_at)` — "schedule the delivery yourself": the caller
+//!   (`sim::Simulator`) pushes a `Deliver` event at that virtual time.
+//!   This is the deterministic, in-memory path.
+//! * `None` — "the message is on the wire": delivery happens out-of-band
+//!   and the caller must `poll` for `Arrival`s between scheduler events.
+//!
+//! Both backends drive the *same* `ndmp::NodeState` protocol engines, so a
+//! seeded churn schedule replays over real sockets exactly as it does in
+//! simulation — the conformance contract checked by
+//! `tests/transport_conformance.rs`.
+
+use crate::ndmp::messages::{Msg, Time};
+use crate::topology::NodeId;
+use anyhow::Result;
+
+/// A message that arrived out-of-band (socket backends): `from` sent
+/// `msg` to `to`, and it is due for delivery *now* in virtual time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub msg: Msg,
+}
+
+/// A message-passage backend for the unified scheduler.
+///
+/// `Send + Sync` because the owning `Simulator` is embedded in
+/// `dfl::Trainer`, whose parallel evaluation shares `&Trainer` across
+/// rayon workers.
+pub trait Transport: Send + Sync {
+    /// Backend name for logs and reports (`"sim"`, `"tcp"`).
+    fn name(&self) -> &'static str;
+
+    /// A node entered the network: allocate its endpoint (bind a socket,
+    /// register an address, ...). No-op on the in-memory backend.
+    fn open(&mut self, node: NodeId) -> Result<()>;
+
+    /// A node failed or left: tear its endpoint down. Messages already
+    /// addressed to it vanish (crash-fail model) on every backend.
+    fn close(&mut self, node: NodeId);
+
+    /// Carry `msg` from `from` to `to` at virtual time `now`.
+    ///
+    /// Returns `Some(deliver_at)` when the caller should schedule the
+    /// delivery on its own event queue (in-memory backend), or `None`
+    /// when the transport moves the bytes itself and the caller should
+    /// `poll` for the arrival (socket backend). Sends to unknown or dead
+    /// endpoints are dropped, never an error.
+    fn send(&mut self, now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time>;
+
+    /// Fan `msg` out to several destinations; returns the scheduled
+    /// `(to, deliver_at)` pairs for queue-scheduled deliveries.
+    ///
+    /// The default delegates to [`Transport::send`] per destination, so
+    /// it cannot diverge from unicast semantics unless a backend
+    /// overrides it. The simulator's dispatch path fans out per
+    /// destination itself (outgoing batches mix message types); this is
+    /// the convenience entry point for orchestrators and backends with
+    /// a native fan-out primitive.
+    fn broadcast(
+        &mut self,
+        now: Time,
+        from: NodeId,
+        to: &[NodeId],
+        msg: &Msg,
+    ) -> Vec<(NodeId, Time)> {
+        to.iter()
+            .filter_map(|&t| self.send(now, from, t, msg).map(|at| (t, at)))
+            .collect()
+    }
+
+    /// Collect messages that arrived out-of-band since the last poll.
+    /// The in-memory backend always returns an empty vector. Socket
+    /// backends may block briefly (bounded) to let in-flight loopback
+    /// traffic quiesce, so multi-hop exchanges complete within one
+    /// virtual instant.
+    fn poll(&mut self) -> Vec<Arrival>;
+
+    /// `true` when `poll` can never return anything (pure queue-scheduled
+    /// backend) — lets the caller skip polling on the hot path.
+    fn idle(&self) -> bool;
+}

@@ -5,7 +5,9 @@ pub mod coords;
 pub mod correctness;
 pub mod fedlay;
 
-pub use coords::{circular_distance, ccw_arc, cw_arc, closer, Coord, NodeId, RingPoint, VirtualCoords};
+pub use coords::{
+    ccw_arc, circular_distance, closer, cw_arc, Coord, NodeId, RingPoint, VirtualCoords,
+};
 pub use correctness::{
     correctness, graph_from_snapshot, report, CorrectnessReport, NeighborSnapshot,
 };

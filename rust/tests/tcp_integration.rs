@@ -1,11 +1,64 @@
 //! Real-TCP integration: a small FedLay fleet on localhost exercising the
 //! full stack — NDMP join over sockets, MEP offer/request/payload, local
-//! training and aggregation through per-node PJRT engines.
+//! training and aggregation through per-node runtime engines.
 //! (The 16-node version is examples/prototype_16.rs.)
+//!
+//! Nodes bind OS-assigned ports through a shared `AddrBook` (no port
+//! collisions between parallel test runs), and every wait is a bounded
+//! poll on published protocol state (`NodeStatus`), not a fixed sleep.
 
 use fedlay::config::OverlayConfig;
-use fedlay::net::{spawn, ClientNodeConfig};
+use fedlay::net::{spawn, AddrBook, ClientHandle, ClientNodeConfig};
 use fedlay::runtime::find_artifacts_dir;
+use fedlay::topology::{Membership, NodeId};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Poll `cond` every 100 ms until it holds or `deadline` passes.
+fn wait_for(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let start = Instant::now();
+    loop {
+        if cond() {
+            return true;
+        }
+        if start.elapsed() > deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+fn spawn_fleet(
+    n: u64,
+    overlay: &OverlayConfig,
+    period_ms: u64,
+    dir: &std::path::Path,
+) -> (Arc<AddrBook>, Vec<ClientHandle>) {
+    let book = Arc::new(AddrBook::new());
+    let shards = fedlay::data::shard_labels(n as usize, 10, 8, 7);
+    let mut handles = Vec::new();
+    for id in 0..n {
+        let cfg = ClientNodeConfig {
+            id,
+            base_port: 0,
+            bootstrap: if id == 0 { None } else { Some(0) },
+            book: Some(book.clone()),
+            overlay: overlay.clone(),
+            artifacts_dir: dir.to_path_buf(),
+            task: "mlp".into(),
+            label_weights: shards[id as usize].clone(),
+            lr: 0.5,
+            local_steps: 1,
+            period_ms,
+            seed: 7,
+        };
+        // spawn blocks until the listener is bound and registered, so
+        // joiners always find a live bootstrap — no stagger sleeps
+        handles.push(spawn(cfg).expect("spawn"));
+    }
+    (book, handles)
+}
 
 #[test]
 fn five_node_tcp_fleet_joins_and_learns() {
@@ -14,34 +67,21 @@ fn five_node_tcp_fleet_joins_and_learns() {
         return;
     };
     let n = 5u64;
-    let base_port = 7800u16;
     let overlay = OverlayConfig {
         spaces: 2,
         heartbeat_ms: 400,
         failure_multiple: 3,
         repair_probe_ms: 1_200,
     };
-    let shards = fedlay::data::shard_labels(n as usize, 10, 8, 7);
-    let mut handles = Vec::new();
-    for id in 0..n {
-        let cfg = ClientNodeConfig {
-            id,
-            base_port,
-            bootstrap: if id == 0 { None } else { Some(0) },
-            overlay: overlay.clone(),
-            artifacts_dir: dir.clone(),
-            task: "mlp".into(),
-            label_weights: shards[id as usize].clone(),
-            lr: 0.5,
-            local_steps: 1,
-            period_ms: 1_200,
-            seed: 7,
-        };
-        handles.push(spawn(cfg).expect("spawn"));
-        std::thread::sleep(std::time::Duration::from_millis(if id == 0 { 250 } else { 120 }));
-    }
-    // run the fleet for ~10 s of real protocol time
-    std::thread::sleep(std::time::Duration::from_secs(10));
+    let (_book, handles) = spawn_fleet(n, &overlay, 1_200, &dir);
+    // bounded poll: everyone joined, found neighbors, and ran at least
+    // two MEP rounds with real data traffic
+    let converged = wait_for(Duration::from_secs(60), || {
+        handles.iter().all(|h| {
+            h.status.joined() && !h.status.neighbors().is_empty() && h.status.exchanges() >= 2
+        }) && handles.iter().any(|h| h.status.data_sent() > 0)
+    });
+    assert!(converged, "fleet did not join + exchange within the deadline");
     let mut joined = 0;
     let mut total_ctrl = 0;
     let mut total_data = 0;
@@ -50,14 +90,65 @@ fn five_node_tcp_fleet_joins_and_learns() {
         joined += r.joined as usize;
         total_ctrl += r.control_sent;
         total_data += r.data_sent;
-        assert!(
-            r.neighbor_count >= 1,
-            "node {} has no neighbors",
-            r.id
-        );
+        assert!(r.neighbor_count >= 1, "node {} has no neighbors", r.id);
         assert!(r.accuracy.is_finite());
     }
     assert_eq!(joined, n as usize, "not all nodes joined");
     assert!(total_ctrl > 0, "no NDMP traffic happened");
     assert!(total_data > 0, "no MEP traffic happened");
+}
+
+#[test]
+fn failure_rewiring_over_tcp() {
+    let Ok(dir) = find_artifacts_dir(None) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = 4u64;
+    // fast liveness timers so failure detection fits a test budget
+    let overlay = OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 300,
+        failure_multiple: 3,
+        repair_probe_ms: 900,
+    };
+    let (_book, mut handles) = spawn_fleet(n, &overlay, 1_000, &dir);
+    let joined = wait_for(Duration::from_secs(60), || {
+        handles
+            .iter()
+            .all(|h| h.status.joined() && !h.status.ring_neighbors().is_empty())
+    });
+    assert!(joined, "fleet did not form an overlay");
+
+    // crash-fail node 3: stop emits no Leave — from the survivors'
+    // perspective it silently disappears and heartbeats go dark
+    let dead: NodeId = 3;
+    let victim = handles.remove(dead as usize);
+    let report = victim.stop_and_join().expect("victim report");
+    assert!(report.joined);
+
+    // survivors must detect the silence (3 × 300 ms) and rewire their
+    // rings to the ideal 3-node overlay, all via real repair traffic
+    let mut ideal = Membership::new(overlay.spaces);
+    for id in 0..n - 1 {
+        ideal.add(id);
+    }
+    let rewired = wait_for(Duration::from_secs(60), || {
+        handles.iter().all(|h| {
+            let ring = h.status.ring_neighbors();
+            !ring.contains(&dead) && ring == ideal.correct_neighbors(h.id)
+        })
+    });
+    if !rewired {
+        let rings: Vec<(NodeId, BTreeSet<NodeId>)> = handles
+            .iter()
+            .map(|h| (h.id, h.status.ring_neighbors()))
+            .collect();
+        panic!("survivors did not rewire around node {dead}: rings {rings:?}");
+    }
+    for h in handles {
+        let r = h.stop_and_join().expect("report");
+        assert!(r.joined);
+        assert!(r.neighbor_count >= 1, "survivor {} isolated", r.id);
+    }
 }

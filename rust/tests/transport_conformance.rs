@@ -1,0 +1,166 @@
+//! Deterministic-vs-socket conformance: an identical seeded churn
+//! schedule must produce the identical final overlay on the in-memory
+//! simulated transport and on the real TCP transport (localhost
+//! sockets). This is the paper's practicality claim in executable form —
+//! NDMP constructs and maintains the same near-random regular topology
+//! whether messages are heap events or real frames (§IV-A1 types 1–3).
+//!
+//! The comparison view is the ring-adjacency snapshot (Definition-1
+//! neighbor sets): message interleavings differ over real sockets, but a
+//! converged FedLay's rings are fully determined by the live membership
+//! (coordinates are hash-derived from node ids), so both backends must
+//! land on the exact same neighbor multisets with correctness 1.0.
+
+use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
+use fedlay::data::shard_labels;
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::net::SchedTransport;
+use fedlay::ndmp::messages::{Time, SEC};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::sim::Simulator;
+use fedlay::topology::{Membership, NeighborSnapshot, NodeId};
+
+const SPACES: usize = 2;
+
+fn overlay() -> OverlayConfig {
+    OverlayConfig {
+        spaces: SPACES,
+        heartbeat_ms: 600,
+        failure_multiple: 3,
+        repair_probe_ms: 2_400,
+    }
+}
+
+fn net() -> NetConfig {
+    NetConfig {
+        latency_ms: 30.0,
+        jitter: 0.2,
+        seed: 13,
+    }
+}
+
+/// Ideal Definition-1 neighbor sets of a membership — the ground truth
+/// both backends must converge to.
+fn ideal_snapshot(ids: &[NodeId], spaces: usize) -> NeighborSnapshot {
+    let mut m = Membership::new(spaces);
+    for &id in ids {
+        m.add(id);
+    }
+    ids.iter().map(|&id| (id, m.correct_neighbors(id))).collect()
+}
+
+/// Advance `sim` until its ring views equal the ideal overlay of its
+/// live membership (stronger than correctness 1.0: no stale pointers at
+/// all). Panics if `deadline` passes first.
+fn settle_exact(sim: &mut Simulator, deadline: Time) {
+    loop {
+        sim.run_until(sim.now + 2 * SEC);
+        let live: Vec<NodeId> = sim.nodes.keys().copied().collect();
+        if sim.ring_snapshot() == ideal_snapshot(&live, sim.cfg.spaces) {
+            return;
+        }
+        assert!(
+            sim.now < deadline,
+            "backend {:?} did not converge to the ideal overlay by t={}s: correctness={}",
+            sim.backend(),
+            sim.now / SEC,
+            sim.correctness()
+        );
+    }
+}
+
+/// The seeded churn schedule both backends replay: concurrent joins, a
+/// crash failure, a late join, and a graceful leave.
+fn run_schedule(mut sim: Simulator) -> Simulator {
+    sim.bootstrap_correct(&(0..10).collect::<Vec<NodeId>>());
+    sim.schedule_join(2 * SEC, 20, 3);
+    sim.schedule_join(2 * SEC, 21, 7);
+    sim.schedule_fail(6 * SEC, 4);
+    sim.schedule_join(9 * SEC, 22, 1);
+    sim.schedule_leave(12 * SEC, 2);
+    // run past the last churn event, then settle to the exact overlay
+    sim.run_until(13 * SEC);
+    settle_exact(&mut sim, 420 * SEC);
+    sim
+}
+
+#[test]
+fn sim_and_tcp_backends_agree_on_churn_schedule() {
+    let sim = run_schedule(Simulator::new(overlay(), net()));
+    let tcp = run_schedule(Simulator::with_transport(
+        overlay(),
+        Box::new(SchedTransport::new()),
+    ));
+    assert_eq!(sim.backend(), "sim");
+    assert_eq!(tcp.backend(), "tcp");
+
+    // identical final membership ...
+    let sim_ids: Vec<NodeId> = sim.nodes.keys().copied().collect();
+    let tcp_ids: Vec<NodeId> = tcp.nodes.keys().copied().collect();
+    assert_eq!(sim_ids, tcp_ids, "backends disagree on live membership");
+    assert_eq!(sim_ids.len(), 11); // 10 - fail - leave + 3 joins
+
+    // ... perfect correctness on both ...
+    assert!((sim.correctness() - 1.0).abs() < 1e-12, "sim not correct");
+    assert!((tcp.correctness() - 1.0).abs() < 1e-12, "tcp not correct");
+
+    // ... and the exact same neighbor multisets, ring by ring.
+    assert_eq!(
+        sim.ring_snapshot(),
+        tcp.ring_snapshot(),
+        "backends converged to different overlays"
+    );
+}
+
+/// `train --transport tcp` end-to-end: a small fedlay-dyn run whose
+/// embedded overlay lives on real localhost sockets, with a mid-run
+/// protocol join and a crash failure — the unified engine drives NDMP
+/// over TCP while MEP/training advance in virtual time.
+#[test]
+fn trainer_completes_fedlay_dyn_over_tcp() -> anyhow::Result<()> {
+    const MIN: Time = 60_000_000; // µs per simulated minute
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let n = 6usize;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: n,
+        local_steps: 1,
+        ..DflConfig::default()
+    };
+    // slow protocol timers: the virtual clock covers minutes, and every
+    // heartbeat round costs a real settle window over the loopback
+    let overlay = OverlayConfig {
+        spaces: SPACES,
+        heartbeat_ms: 5_000,
+        failure_multiple: 3,
+        repair_probe_ms: 20_000,
+    };
+    let weights = shard_labels(n + 1, 10, 8, cfg.seed);
+    let mut trainer = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay, net()),
+        cfg,
+        weights[..n].to_vec(),
+    )?;
+    trainer.set_transport(Box::new(SchedTransport::new()))?;
+    let joiner = trainer.schedule_join(2 * MIN, weights[n].clone(), 0)?;
+    assert_eq!(joiner, n);
+    trainer.schedule_fail(5 * MIN, 1);
+    let last = trainer.run(12 * MIN, 6 * MIN)?;
+
+    assert!(last.mean_accuracy.is_finite());
+    assert!(!trainer.samples.is_empty());
+    let sim = trainer.overlay.as_ref().expect("dynamic overlay state");
+    assert_eq!(sim.backend(), "tcp");
+    assert!(sim.nodes.contains_key(&(n as NodeId)), "joiner missing");
+    assert!(!sim.nodes.contains_key(&1), "failed node still live");
+    assert!(
+        (sim.correctness() - 1.0).abs() < 1e-12,
+        "overlay not repaired over TCP: correctness={}",
+        sim.correctness()
+    );
+    assert!(trainer.clients[joiner].alive);
+    assert!(!trainer.clients[1].alive);
+    Ok(())
+}
