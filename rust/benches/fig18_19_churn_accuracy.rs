@@ -6,10 +6,11 @@
 //!
 //! One *continuous* run on the unified engine: the trainer embeds the
 //! NDMP overlay simulator (`Neighborhood::Dynamic`) and the join wave is
-//! N `EventKind::Join` protocol joins at t = 150 min — the joiners enter
-//! through Neighbor Discovery, the live views rewire the learning
-//! topology, and training never stops. (The seed's version faked this
-//! with two separate Trainers and a parameter copy.)
+//! a declarative `ScenarioSpec` (`MassJoin` at t = 150 min) compiled to
+//! protocol-level `EventKind::Join`s — the joiners enter through
+//! Neighbor Discovery, the live views rewire the learning topology, and
+//! training never stops. (The seed's version faked this with two
+//! separate Trainers and a parameter copy.)
 
 use fedlay::bench_util::{scaled, Table};
 use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
@@ -17,6 +18,7 @@ use fedlay::data::shard_labels;
 use fedlay::dfl::harness::cohort_acc;
 use fedlay::dfl::{MethodSpec, Trainer};
 use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::sim::{Phase, PhaseKind, ScenarioSpec};
 use fedlay::util::cdf_points;
 
 fn main() -> anyhow::Result<()> {
@@ -38,22 +40,39 @@ fn main() -> anyhow::Result<()> {
         repair_probe_ms: 8_000,
         ..OverlayConfig::default()
     };
-    let weights = shard_labels(2 * half, 10, 8, cfg.seed);
+    let seed = cfg.seed;
+    let weights = shard_labels(2 * half, 10, 8, seed);
     let mut t = Trainer::new(
         &engine,
-        MethodSpec::fedlay_dynamic(overlay, NetConfig::default()),
+        MethodSpec::fedlay_dynamic(overlay.clone(), NetConfig::default()),
         cfg,
         weights[..half].to_vec(),
     )?;
 
-    // Schedule the join wave: N protocol-level joins at t = 150 min, each
-    // bootstrapping through a distinct original node.
+    // The join wave as a declarative scenario: N protocol-level joins at
+    // t = 150 min, compiled and scheduled by the scenario engine.
     let join_at = minutes_pre * 60_000_000;
     let total = (minutes_pre + minutes_post) * 60_000_000;
-    for j in 0..half {
-        t.schedule_join(join_at, weights[half + j].clone(), j % half)?;
-    }
-    t.run(total, total / 10)?;
+    let scenario = ScenarioSpec {
+        name: "fig18-19-join-wave".into(),
+        initial: half,
+        seed,
+        horizon: total,
+        sample_every: total / 10,
+        settle: 0,
+        min_live: (half / 2).max(2),
+        overlay,
+        net: NetConfig::default(),
+        phases: vec![Phase {
+            at: join_at,
+            kind: PhaseKind::MassJoin { count: half },
+        }],
+    };
+    let report = scenario.run_trainer(&mut t, |id| weights[id].clone())?;
+    println!(
+        "scenario {}: {} joins, neighbor cache {} hits / {} misses",
+        report.scenario, report.counts.joins, report.cache_hits, report.cache_misses
+    );
 
     let pre_acc = t
         .samples

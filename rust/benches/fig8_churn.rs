@@ -3,6 +3,11 @@
 //! the same instant; (c) NDMP messages per client to construct networks of
 //! increasing size.
 //!
+//! Figs. 8a/8b run through the declarative scenario engine
+//! (`sim::scenario`): each panel is a `ScenarioSpec` compiled to a
+//! deterministic churn schedule — the same specs the golden-trajectory
+//! tests pin and the CLI (`fedlay scenario run`) executes.
+//!
 //! Paper scale: 400-node network ± 100 nodes, 350 ms latency; correctness
 //! recovers to 1.0 within ~8 s. Default scale is 120 ± 30 (1-CPU sandbox);
 //! FEDLAY_BENCH_SCALE=paper reproduces 400 ± 100.
@@ -15,18 +20,14 @@ use fedlay::bench_util::{scaled, Table};
 use fedlay::config::{NetConfig, OverlayConfig};
 use fedlay::ndmp::messages::{Time, MS};
 use fedlay::net::SchedTransport;
-use fedlay::sim::{churn, grow_network, Simulator};
+use fedlay::sim::{grow_network, ScenarioSpec, Transport};
 
 fn tcp_transport() -> bool {
     std::env::var("FEDLAY_TRANSPORT").as_deref() == Ok("tcp")
 }
 
-fn make_sim(overlay: OverlayConfig, net: NetConfig) -> Simulator {
-    if tcp_transport() {
-        Simulator::with_transport(overlay, Box::new(SchedTransport::new()))
-    } else {
-        Simulator::new(overlay, net)
-    }
+fn transport() -> Option<Box<dyn Transport>> {
+    tcp_transport().then(|| Box::new(SchedTransport::new()) as Box<dyn Transport>)
 }
 
 fn overlay(spaces: usize) -> OverlayConfig {
@@ -44,18 +45,6 @@ fn net() -> NetConfig {
         jitter: 0.2,
         seed: 8,
     }
-}
-
-fn timeline(sim: &Simulator) -> Table {
-    let mut t = Table::new(&["t (s)", "correctness", "live nodes"]);
-    for s in &sim.samples {
-        t.row(&[
-            format!("{:.1}", s.at as f64 / 1e6),
-            format!("{:.4}", s.correctness),
-            s.live_nodes.to_string(),
-        ]);
-    }
-    t
 }
 
 fn main() {
@@ -82,29 +71,33 @@ fn main() {
             "=== Fig. 8a: {churn_n} joins into {initial}-node FedLay (d={}) ===",
             2 * l
         );
-        let mut sim = make_sim(overlay(l), net());
-        churn::mass_join(&mut sim, initial, churn_n, 10 * MS, l as u64);
-        churn::sample_correctness(&mut sim, horizon, sample_every);
-        sim.run_until(horizon);
-        print!("{}", timeline(&sim).render());
-        let fin = sim.correctness();
+        let mut spec = ScenarioSpec::fig8a_join_wave(initial, churn_n, l as u64);
+        spec.overlay = overlay(l);
+        spec.net = net();
+        spec.horizon = horizon;
+        spec.sample_every = sample_every;
+        let (_, report) = spec.run_sim(transport()).expect("fig8a scenario");
+        print!("{}", report.correctness_table().render());
+        let fin = report.final_correctness;
         println!("final correctness: {fin:.4}\n");
         assert!(fin > 0.995, "join recovery incomplete at d={}", 2 * l);
     }
 
     // Fig. 8b: mass failures
     println!("=== Fig. 8b: {churn_n} failures out of {initial}-node FedLay (d=6) ===");
-    let mut sim = make_sim(overlay(3), net());
-    churn::mass_fail(&mut sim, initial, churn_n, 10 * MS, 4);
-    churn::sample_correctness(&mut sim, horizon, sample_every);
-    sim.run_until(horizon);
-    print!("{}", timeline(&sim).render());
-    let dip = sim
-        .samples
+    let mut spec = ScenarioSpec::fig8b_mass_fail(initial, churn_n, 4);
+    spec.overlay = overlay(3);
+    spec.net = net();
+    spec.horizon = horizon;
+    spec.sample_every = sample_every;
+    let (_, report) = spec.run_sim(transport()).expect("fig8b scenario");
+    print!("{}", report.correctness_table().render());
+    let dip = report
+        .correctness
         .iter()
         .map(|s| s.correctness)
         .fold(1.0f64, f64::min);
-    let fin = sim.correctness();
+    let fin = report.final_correctness;
     println!("dip: {dip:.3}  final: {fin:.4}\n");
     assert!(dip < 0.95, "failures should dent correctness");
     assert!(fin > 0.995, "failure recovery incomplete");

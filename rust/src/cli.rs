@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   topology  — evaluate a named overlay on the §II-B metrics
 //!   churn     — mass join/fail resilience simulation (Fig. 8)
+//!   scenario  — run/inspect a declarative churn scenario (TOML spec)
 //!   train     — run a DFL method over the AOT runtime (Figs. 9-19)
 //!   node      — run one real TCP FedLay client (prototype mode)
 //!
@@ -14,6 +15,9 @@ use std::collections::BTreeMap;
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub command: String,
+    /// Non-flag tokens after the subcommand (e.g. `scenario run <spec>`).
+    /// Commands that take none reject leftovers via `no_positionals`.
+    pub positionals: Vec<String>,
     pub flags: BTreeMap<String, String>,
     pub sets: Vec<String>,
 }
@@ -24,11 +28,12 @@ pub fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     match it.next() {
         Some(cmd) if !cmd.starts_with("--") => args.command = cmd.clone(),
         Some(flag) => anyhow::bail!("expected a subcommand before {flag:?}"),
-        None => anyhow::bail!("usage: fedlay <topology|churn|train|node> [flags]"),
+        None => anyhow::bail!("usage: fedlay <topology|churn|scenario|train|node> [flags]"),
     }
     while let Some(a) = it.next() {
         let Some(name) = a.strip_prefix("--") else {
-            anyhow::bail!("unexpected positional argument {a:?}");
+            args.positionals.push(a.clone());
+            continue;
         };
         if name == "set" {
             let v = it
@@ -50,6 +55,16 @@ pub fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
 }
 
 impl Args {
+    /// Reject stray positional tokens (commands that take none).
+    pub fn no_positionals(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.positionals.is_empty(),
+            "unexpected positional argument {:?}",
+            self.positionals[0]
+        );
+        Ok(())
+    }
+
     pub fn str(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -90,6 +105,15 @@ USAGE:
                   [--nodes N] [--seed S]
   fedlay churn    [--initial N] [--joins J] [--fails F] [--until-ms T]
                   [--set overlay.spaces=L] [--set net.latency_ms=350]
+  fedlay scenario run <spec.toml>  [--transport sim|tcp] [--trainer]
+                                   [--freeze] [--task mlp]
+  fedlay scenario show <spec.toml>
+                  (declarative churn scenarios — TOML format in
+                   docs/scenarios.md, examples under configs/scenarios/;
+                   `run` drives a bare overlay simulation, or with
+                   --trainer a full fedlay-dyn training run whose join
+                   wave enters through the NDMP protocol; `show` prints
+                   the compiled event schedule without running it)
   fedlay train    [--method fedlay|fedlay-dyn|fedavg|gaia|dfl-dds|chord]
                   [--set dfl.task=mlp] [--set dfl.clients=16]
                   [--minutes M] [--sample-minutes S]
@@ -140,8 +164,22 @@ mod tests {
     fn rejects_bad_input() {
         assert!(parse_args(&sv(&[])).is_err());
         assert!(parse_args(&sv(&["--flag-first"])).is_err());
-        assert!(parse_args(&sv(&["train", "stray"])).is_err());
         let a = parse_args(&sv(&["train", "--minutes", "abc"])).unwrap();
         assert!(a.usize("minutes", 1).is_err());
+    }
+
+    #[test]
+    fn collects_positionals() {
+        let a = parse_args(&sv(&["scenario", "run", "spec.toml", "--transport", "tcp"]))
+            .unwrap();
+        assert_eq!(a.command, "scenario");
+        assert_eq!(a.positionals, vec!["run".to_string(), "spec.toml".to_string()]);
+        assert_eq!(a.str("transport", "sim"), "tcp");
+        assert!(a.no_positionals().is_err());
+        // commands that take no positionals reject strays via the helper
+        let b = parse_args(&sv(&["train", "stray"])).unwrap();
+        assert!(b.no_positionals().is_err());
+        let c = parse_args(&sv(&["train", "--minutes", "5"])).unwrap();
+        assert!(c.no_positionals().is_ok());
     }
 }

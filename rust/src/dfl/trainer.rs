@@ -9,7 +9,12 @@
 //! protocol `NodeState` views, so mid-training joins and failures rewire
 //! the learning topology through the actual join/repair protocols —
 //! the paper's central claim that construction/maintenance (NDMP) and
-//! training/exchange (MEP) run *together* (Figs. 18/19).
+//! training/exchange (MEP) run *together* (Figs. 18/19). Those views are
+//! read through a per-client cache invalidated by the overlay's
+//! view-change notifications (`Simulator::take_view_changes`), which is
+//! what lets Dynamic runs reach the 10k-client scale
+//! (`tests/scenario_scale.rs`) instead of rebuilding neighbor sets on
+//! every wake.
 //!
 //! Runs any `MethodSpec` (FedLay or a comparator) over the runtime
 //! engine, with the paper's client heterogeneity, non-iid shards, MEP
@@ -124,6 +129,17 @@ pub struct Trainer<'e> {
     /// broadcast round every client shares one model, which then costs a
     /// single evaluation instead of `n`.
     eval_cache: HashMap<u64, (f64, f64)>,
+    /// Per-client neighbor-set cache for `Neighborhood::Dynamic`: the
+    /// filtered aggregation neighborhood of client `i`, valid until the
+    /// overlay emits a view change for node `i` (`take_view_changes`,
+    /// drained in `sync_overlay`) or a churn event flips the aliveness
+    /// of a client it references (targeted invalidation,
+    /// `invalidate_neighbor_caches_for`). Without it every wake re-reads
+    /// `ring_neighbor_ids()` from the protocol state, which caps Dynamic
+    /// runs well below 10k clients.
+    nbr_cache: Vec<Option<Vec<usize>>>,
+    nbr_cache_hits: u64,
+    nbr_cache_misses: u64,
     /// Skip real training (scalability mode: reuse pre-trained params).
     pub freeze_training: bool,
 }
@@ -225,6 +241,9 @@ impl<'e> Trainer<'e> {
             eval_xi,
             eval_y,
             eval_cache: HashMap::new(),
+            nbr_cache: vec![None; n],
+            nbr_cache_hits: 0,
+            nbr_cache_misses: 0,
             freeze_training: false,
         })
     }
@@ -284,6 +303,7 @@ impl<'e> Trainer<'e> {
             c.schedule.synchronous = true;
         }
         self.clients.push(c);
+        self.nbr_cache.push(None);
         if let TaskData::Char(streams) = &mut self.data {
             streams.push(char_stream_for(&self.cfg, i, &label_weights));
         }
@@ -366,12 +386,66 @@ impl<'e> Trainer<'e> {
         }
     }
 
-    /// Advance the embedded overlay protocol to the trainer clock.
+    /// Advance the embedded overlay protocol to the trainer clock, then
+    /// invalidate the neighbor cache of exactly the nodes whose ring
+    /// views the protocol changed meanwhile.
     fn sync_overlay(&mut self) {
         let now = self.now;
         if let Some(sim) = self.overlay.as_mut() {
             sim.run_until(now);
+            for id in sim.take_view_changes() {
+                let i = id as usize;
+                if i < self.nbr_cache.len() {
+                    self.nbr_cache[i] = None;
+                }
+            }
         }
+    }
+
+    /// `client`'s aliveness flipped: drop its own cached list plus every
+    /// cached list that references it (the alive-filter baked into those
+    /// lists is stale). Targeted — clearing all `n` entries per churn
+    /// event would defeat the cache exactly when 10k-client Poisson
+    /// scenarios need it.
+    fn invalidate_neighbor_caches_for(&mut self, client: usize) {
+        for (i, e) in self.nbr_cache.iter_mut().enumerate() {
+            if i == client || e.as_ref().is_some_and(|l| l.contains(&client)) {
+                *e = None;
+            }
+        }
+    }
+
+    /// `(hits, misses)` of the `Neighborhood::Dynamic` neighbor-set
+    /// cache — surfaced by `ScenarioReport` so large-scale runs can
+    /// verify the cache actually carries the load.
+    pub fn neighbor_cache_stats(&self) -> (u64, u64) {
+        (self.nbr_cache_hits, self.nbr_cache_misses)
+    }
+
+    /// Schedule correctness snapshots on the embedded overlay every
+    /// `every` from the current clock through `until` (endpoints only
+    /// when `every` is 0), so scenario runs record the correctness
+    /// series alongside the accuracy series.
+    pub fn schedule_overlay_snapshots(&mut self, until: Time, every: Time) -> Result<()> {
+        anyhow::ensure!(
+            matches!(self.spec.neighborhood, Neighborhood::Dynamic { .. }),
+            "overlay snapshots need Neighborhood::Dynamic (the embedded NDMP overlay)"
+        );
+        self.ensure_overlay();
+        let now = self.now;
+        let sim = self.overlay.as_mut().expect("dynamic overlay state");
+        if every == 0 {
+            // endpoints only
+            sim.schedule_snapshot(now);
+            sim.schedule_snapshot(until);
+        } else {
+            let mut t = now;
+            while t <= until {
+                sim.schedule_snapshot(t);
+                t += every;
+            }
+        }
+        Ok(())
     }
 
     /// Draw a local training batch for client `i`.
@@ -435,8 +509,15 @@ impl<'e> Trainer<'e> {
                     .collect()
             }
             Neighborhood::Dynamic { .. } => {
+                // Serve from the per-client cache when node i's ring
+                // views are unchanged since the last read; recompute on
+                // a view-change notification or after any churn.
+                if let Some(cached) = &self.nbr_cache[i] {
+                    self.nbr_cache_hits += 1;
+                    return cached.clone();
+                }
                 let sim = self.overlay.as_ref().expect("dynamic overlay state");
-                match sim.nodes.get(&(i as NodeId)) {
+                let list: Vec<usize> = match sim.nodes.get(&(i as NodeId)) {
                     Some(st) => st
                         .ring_neighbor_ids()
                         .into_iter()
@@ -446,7 +527,10 @@ impl<'e> Trainer<'e> {
                         })
                         .collect(),
                     None => Vec::new(), // not joined yet / failed
-                }
+                };
+                self.nbr_cache_misses += 1;
+                self.nbr_cache[i] = Some(list.clone());
+                list
             }
         }
     }
@@ -752,6 +836,7 @@ impl<'e> Trainer<'e> {
                         let wake = self.now + self.clients[client].next_wake.max(1);
                         self.clients[client].alive = true;
                         self.clients[client].next_wake = wake;
+                        self.invalidate_neighbor_caches_for(client);
                         if !self.synchronous() {
                             self.queue.push(wake, TrainEvent::Wake { client });
                         }
@@ -765,6 +850,7 @@ impl<'e> Trainer<'e> {
                         sim.schedule_fail(self.now, client as NodeId);
                     }
                     self.clients[client].alive = false;
+                    self.invalidate_neighbor_caches_for(client);
                 }
                 TrainEvent::Leave { client } => {
                     if client >= self.clients.len() {
@@ -774,6 +860,7 @@ impl<'e> Trainer<'e> {
                         sim.schedule_leave(self.now, client as NodeId);
                     }
                     self.clients[client].alive = false;
+                    self.invalidate_neighbor_caches_for(client);
                 }
             }
         }

@@ -47,6 +47,23 @@
 //! wall-clock prototype node (`net::client_node`, `fedlay node`) runs
 //! the same reactor pattern with wall time as the timer axis.
 //!
+//! ## Churn scenarios
+//!
+//! Resilience experiments are *declarative*: a [`sim::ScenarioSpec`]
+//! (serializable TOML, see `docs/scenarios.md`) describes phases of mass
+//! joins/failures/leaves, flash crowds, Poisson churn, and
+//! partition-style bursts plus a sampling cadence, compiles to one
+//! deterministic event schedule, and drives either a bare `Simulator`
+//! or a full `Trainer` through the same path (`sim::ChurnSink`). Runs
+//! emit a structured [`sim::ScenarioReport`] (correctness/ring-quality/
+//! accuracy time series, neighbor-cache telemetry) consumed by the
+//! Fig. 8 and Fig. 18/19 benches, the golden-trajectory and property
+//! test suites, and `fedlay scenario run`. Under `Neighborhood::Dynamic`
+//! the trainer reads aggregation neighborhoods through a per-client
+//! cache invalidated by the simulator's view-change notifications,
+//! which carries scenario runs to 10k clients
+//! (`tests/scenario_scale.rs`).
+//!
 //! The `runtime` module executes models behind a single `Engine` API:
 //! the PJRT CPU client running the AOT artifacts (feature `xla`), or a
 //! pure-Rust reference backend with the identical ABI that needs no

@@ -3,12 +3,12 @@
 use fedlay::baselines;
 use fedlay::bench_util::Table;
 use fedlay::cli::{parse_args, Args, USAGE};
-use fedlay::config::OverlayConfig;
+use fedlay::config::{DflConfig, OverlayConfig};
 use fedlay::dfl::{MethodSpec, Trainer};
 use fedlay::ndmp::messages::MS;
 use fedlay::net::{spawn, ClientNodeConfig, SchedTransport};
 use fedlay::runtime::{find_artifacts_dir, Engine};
-use fedlay::sim::{churn, Simulator};
+use fedlay::sim::{churn, ChurnOp, ScenarioSpec, Simulator, Transport};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -20,10 +20,11 @@ fn main() {
         }
     };
     let result = match args.command.as_str() {
-        "topology" => cmd_topology(&args),
-        "churn" => cmd_churn(&args),
-        "train" => cmd_train(&args),
-        "node" => cmd_node(&args),
+        "topology" => args.no_positionals().and_then(|()| cmd_topology(&args)),
+        "churn" => args.no_positionals().and_then(|()| cmd_churn(&args)),
+        "scenario" => cmd_scenario(&args),
+        "train" => args.no_positionals().and_then(|()| cmd_train(&args)),
+        "node" => args.no_positionals().and_then(|()| cmd_node(&args)),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -93,6 +94,119 @@ fn cmd_churn(args: &Args) -> anyhow::Result<()> {
         sim.control_messages_per_node(),
         sim.delivered
     );
+    Ok(())
+}
+
+/// `fedlay scenario`: run or inspect a declarative churn scenario
+/// (`sim::scenario::ScenarioSpec`, TOML format in docs/scenarios.md).
+fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
+    let action = args
+        .positionals
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow::anyhow!("usage: fedlay scenario <run|show> <spec.toml>"))?;
+    let spec_path = args
+        .positionals
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("scenario {action} needs a <spec.toml> path"))?;
+    anyhow::ensure!(
+        args.positionals.len() == 2,
+        "unexpected positional argument {:?}",
+        args.positionals[2]
+    );
+    // boolean flags greedily consume a following non-flag token; catch
+    // `--trainer stray` style misparses instead of silently dropping the
+    // flag and running a different mode
+    for flag in ["trainer", "freeze"] {
+        if let Some(v) = args.flags.get(flag) {
+            anyhow::ensure!(
+                v == "true",
+                "--{flag} is a boolean flag; unexpected value {v:?} \
+                 (put positionals before flags)"
+            );
+        }
+    }
+    let spec = ScenarioSpec::load(std::path::Path::new(spec_path))?;
+    match action {
+        "show" => {
+            print!("{}", spec.to_toml());
+            let events = spec.compile();
+            let mut t = Table::new(&["t (s)", "op", "node", "bootstrap"]);
+            for e in &events {
+                let (op, node, boot) = match e.op {
+                    ChurnOp::Join { node, bootstrap } => ("join", node, bootstrap.to_string()),
+                    ChurnOp::Fail { node } => ("fail", node, "-".into()),
+                    ChurnOp::Leave { node } => ("leave", node, "-".into()),
+                };
+                t.row(&[
+                    format!("{:.1}", e.at as f64 / 1e6),
+                    op.to_string(),
+                    node.to_string(),
+                    boot,
+                ]);
+            }
+            print!("{}", t.render());
+            println!("{} events compiled", events.len());
+            Ok(())
+        }
+        "run" => {
+            if args.bool("trainer") {
+                run_scenario_trainer(args, &spec)
+            } else {
+                let transport = scenario_transport(args)?;
+                let (_, report) = spec.run_sim(transport)?;
+                print!("{}", report.render());
+                Ok(())
+            }
+        }
+        other => anyhow::bail!("unknown scenario action {other:?} (expected run|show)"),
+    }
+}
+
+fn scenario_transport(args: &Args) -> anyhow::Result<Option<Box<dyn Transport>>> {
+    match args.str("transport", "sim").as_str() {
+        "sim" => Ok(None),
+        "tcp" => Ok(Some(Box::new(SchedTransport::new()))),
+        other => anyhow::bail!("unknown transport {other:?} (expected sim|tcp)"),
+    }
+}
+
+/// `scenario run --trainer`: drive a full fedlay-dyn training run whose
+/// churn schedule comes from the scenario spec.
+fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> {
+    let task = args.str("task", "mlp");
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &[&task])?;
+    let classes = engine.manifest.task(&task)?.classes;
+    let joins = spec
+        .compile()
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    let cfg = DflConfig {
+        task: task.clone(),
+        clients: spec.initial,
+        seed: spec.seed,
+        ..DflConfig::default()
+    };
+    let weights = fedlay::data::shard_labels(
+        spec.initial + joins,
+        classes,
+        cfg.shards_per_client,
+        cfg.seed,
+    );
+    let mut trainer = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(spec.overlay.clone(), spec.net.clone()),
+        cfg,
+        weights[..spec.initial].to_vec(),
+    )?;
+    if let Some(t) = scenario_transport(args)? {
+        trainer.set_transport(t)?;
+    }
+    trainer.freeze_training = args.bool("freeze");
+    let report = spec.run_trainer(&mut trainer, |id| weights[id].clone())?;
+    print!("{}", report.render());
     Ok(())
 }
 

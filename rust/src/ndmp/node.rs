@@ -110,6 +110,24 @@ impl NodeState {
         s
     }
 
+    /// Order-sensitive fingerprint of the ring views: cheap change
+    /// detection for neighbor caches. The fleet runner compares it
+    /// around every message/tick and emits a view-change notification
+    /// when it moves, so consumers (e.g. the trainer's per-client
+    /// neighbor cache) never have to re-read `ring_neighbor_ids` on a
+    /// quiet node.
+    pub fn view_stamp(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in &self.views {
+            for slot in [v.prev, v.next] {
+                // +1 distinguishes Some(0) from None
+                let x = slot.map(|id| id.wrapping_add(1)).unwrap_or(0);
+                h = (h ^ x).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        h
+    }
+
     /// Neighbors used for routing = peers we believe are alive.
     fn routing_neighbors(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.peers.keys().copied().filter(move |&p| p != self.id)

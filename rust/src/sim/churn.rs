@@ -29,9 +29,57 @@ pub fn mass_fail(sim: &mut Simulator, initial: usize, failures: usize, at: Time,
     }
 }
 
-/// Mixed churn: Poisson-ish joins and failures over a window (failure
-/// injection testing beyond the paper's extremes).
+/// Mixed Poisson churn: joins and failures as one merged Poisson process
+/// over a window — exponential inter-arrivals at rate `events / window`,
+/// each arrival a join or a failure with probability 1/2 (failure
+/// injection testing beyond the paper's extremes). `events` sets the
+/// *expected* count; the realized count varies with the seed, and the
+/// process is truncated at the window's end.
+///
+/// For richer processes (independent join/fail/leave rates, flash
+/// crowds, partition bursts) use `sim::scenario::ScenarioSpec`.
 pub fn mixed_churn(
+    sim: &mut Simulator,
+    initial: usize,
+    events: usize,
+    window: Time,
+    seed: u64,
+) {
+    let ids: Vec<NodeId> = (0..initial as NodeId).collect();
+    sim.bootstrap_correct(&ids);
+    let mut rng = Rng::new(seed ^ 0xC4A0);
+    let mut next_id = initial as NodeId;
+    let mut live: Vec<NodeId> = ids.clone();
+    if events == 0 || window == 0 {
+        return;
+    }
+    let rate_per_us = events as f64 / window as f64;
+    let mut at = 10 * MS;
+    loop {
+        let dt = rng.exponential(rate_per_us);
+        if !dt.is_finite() || dt >= (Time::MAX / 4) as f64 {
+            break;
+        }
+        at += dt.max(1.0) as Time;
+        if at >= 10 * MS + window {
+            break;
+        }
+        if rng.chance(0.5) {
+            let bootstrap = live[rng.index(live.len())];
+            sim.schedule_join(at, next_id, bootstrap);
+            live.push(next_id);
+            next_id += 1;
+        } else if live.len() > initial / 2 {
+            let idx = rng.index(live.len());
+            sim.schedule_fail(at, live.swap_remove(idx));
+        }
+    }
+}
+
+/// The pre-Poisson behavior of `mixed_churn`: event times drawn
+/// *uniformly* over the window (kept for experiments that want a flat
+/// arrival profile rather than exponential inter-arrivals).
+pub fn uniform_churn(
     sim: &mut Simulator,
     initial: usize,
     events: usize,
@@ -70,6 +118,7 @@ pub fn sample_correctness(sim: &mut Simulator, until: Time, every: Time) {
 mod tests {
     use super::*;
     use crate::config::{NetConfig, OverlayConfig};
+    use crate::sim::event::EventKind;
 
     fn mk_sim() -> Simulator {
         Simulator::new(
@@ -103,6 +152,68 @@ mod tests {
         let t = sim.run_until_correct(1.0, 240_000 * MS, 2_000 * MS);
         assert!(t.is_some(), "mass fail stuck at {}", sim.correctness());
         assert_eq!(sim.nodes.len(), 30);
+    }
+
+    /// Drain the scheduled churn (join/fail/leave) times off the queue.
+    fn churn_times(sim: &mut Simulator) -> Vec<Time> {
+        let mut ts = Vec::new();
+        while let Some(e) = sim.queue.pop() {
+            if matches!(
+                e.kind,
+                EventKind::Join { .. } | EventKind::Fail { .. } | EventKind::Leave { .. }
+            ) {
+                ts.push(e.at);
+            }
+        }
+        ts
+    }
+
+    #[test]
+    fn mixed_churn_has_exponential_interarrivals() {
+        let events = 30usize;
+        let window = 30_000 * MS;
+        let mut counts = Vec::new();
+        let mut spacings: Vec<f64> = Vec::new();
+        for seed in 0..12u64 {
+            let mut sim = mk_sim();
+            mixed_churn(&mut sim, 40, events, window, seed);
+            let ts = churn_times(&mut sim);
+            assert!(
+                ts.windows(2).all(|w| w[0] <= w[1]),
+                "arrivals out of order (seed {seed})"
+            );
+            assert!(ts.iter().all(|&t| t < 10 * MS + window));
+            spacings.extend(ts.windows(2).map(|w| (w[1] - w[0]) as f64));
+            counts.push(ts.len());
+        }
+        // a Poisson process has a *random* event count — the old uniform
+        // sampler always scheduled at most exactly `events`
+        assert!(
+            counts.iter().any(|&c| c != counts[0]),
+            "event counts identical across seeds: {counts:?}"
+        );
+        // pooled mean inter-arrival ~= 1/rate = window/events
+        let want = window as f64 / events as f64;
+        let mean = spacings.iter().sum::<f64>() / spacings.len() as f64;
+        assert!(
+            mean > 0.6 * want && mean < 1.67 * want,
+            "mean spacing {mean:.0}us vs expected {want:.0}us"
+        );
+    }
+
+    #[test]
+    fn mixed_and_uniform_churn_are_deterministic_and_distinct() {
+        let collect = |f: &dyn Fn(&mut Simulator)| {
+            let mut sim = mk_sim();
+            f(&mut sim);
+            churn_times(&mut sim)
+        };
+        let poisson = collect(&|s| mixed_churn(s, 30, 12, 20_000 * MS, 9));
+        let poisson2 = collect(&|s| mixed_churn(s, 30, 12, 20_000 * MS, 9));
+        let uniform = collect(&|s| uniform_churn(s, 30, 12, 20_000 * MS, 9));
+        assert_eq!(poisson, poisson2, "mixed_churn not deterministic");
+        assert_ne!(poisson, uniform, "uniform_churn should keep the old draw");
+        assert_eq!(uniform.len(), 12, "uniform schedules exactly `events`");
     }
 
     #[test]

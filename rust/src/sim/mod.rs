@@ -1,7 +1,8 @@
 //! Deterministic discrete-event substrate: the generic scheduler
 //! (`sched`), overlay event kinds (`event`), the `Transport` abstraction
 //! with its in-memory backend (`transport`, `network`), churn injection,
-//! and the NDMP fleet runner.
+//! the declarative scenario engine (`scenario`), and the NDMP fleet
+//! runner.
 //!
 //! The scheduler is shared with the DFL trainer (`crate::dfl::Trainer`
 //! instantiates it with `TrainEvent`), which is what lets training and
@@ -14,10 +15,15 @@ pub mod event;
 pub mod network;
 pub mod runner;
 pub mod sched;
+pub mod scenario;
 pub mod transport;
 
 pub use event::{Event, EventKind, EventQueue};
 pub use network::{LatencyModel, SimTransport};
 pub use runner::{grow_network, CorrectnessSample, Simulator};
+pub use scenario::{
+    quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, Phase, PhaseKind,
+    RingQuality, ScenarioReport, ScenarioSpec, TrainerSink,
+};
 pub use sched::{EventId, Scheduled, Scheduler};
 pub use transport::{Arrival, Transport};

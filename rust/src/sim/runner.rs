@@ -13,7 +13,7 @@ use crate::config::{NetConfig, OverlayConfig};
 use crate::ndmp::messages::{Msg, Outgoing, Time, MS};
 use crate::ndmp::node::{NodeCounters, NodeState};
 use crate::topology::{correctness, NeighborSnapshot, NodeId};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// A recorded correctness sample (for the Fig. 8a/8b time series).
 #[derive(Debug, Clone, Copy)]
@@ -38,6 +38,14 @@ pub struct Simulator {
     pub samples: Vec<CorrectnessSample>,
     /// Messages delivered (for telemetry / debugging).
     pub delivered: u64,
+    /// Nodes whose Definition-1 ring views changed since the last
+    /// `take_view_changes` drain (repair, join placement, failure
+    /// detection, membership churn). Consumers — e.g. the trainer's
+    /// per-client neighbor cache — invalidate exactly these entries
+    /// instead of re-reading every node's views per wake.
+    view_changes: BTreeSet<NodeId>,
+    /// Cumulative count of view-change notifications (telemetry).
+    pub view_change_count: u64,
 }
 
 impl Simulator {
@@ -63,6 +71,8 @@ impl Simulator {
             retired_counters: Vec::new(),
             samples: Vec::new(),
             delivered: 0,
+            view_changes: BTreeSet::new(),
+            view_change_count: 0,
         }
     }
 
@@ -71,27 +81,53 @@ impl Simulator {
         self.transport.name()
     }
 
+    /// Drain the set of nodes whose ring views changed since the last
+    /// call (see `view_changes`).
+    pub fn take_view_changes(&mut self) -> Vec<NodeId> {
+        let drained: Vec<NodeId> = self.view_changes.iter().copied().collect();
+        self.view_changes.clear();
+        drained
+    }
+
+    fn note_view_change(&mut self, id: NodeId) {
+        self.view_changes.insert(id);
+        self.view_change_count += 1;
+    }
+
     /// Create a correct network of `ids` instantly (centralized shortcut
     /// used to set up the *initial* condition of churn experiments; the
-    /// decentralized path is `schedule_join`).
+    /// decentralized path is `schedule_join`). One ring sort per space —
+    /// not per node — so 10k-node scenarios bootstrap in milliseconds.
     pub fn bootstrap_correct(&mut self, ids: &[NodeId]) {
         use crate::topology::fedlay::Membership;
         let mut m = Membership::new(self.cfg.spaces);
         for &id in ids {
             m.add(id);
         }
+        // id -> (prev, next) per space, from a single sorted ring each
+        let mut adjacency: Vec<BTreeMap<NodeId, (NodeId, NodeId)>> = Vec::new();
+        for s in 0..self.cfg.spaces {
+            let ring = m.ring(s);
+            let n = ring.len();
+            let mut tab = BTreeMap::new();
+            if n >= 2 {
+                for pos in 0..n {
+                    tab.insert(
+                        ring[pos].id,
+                        (ring[(pos + n - 1) % n].id, ring[(pos + 1) % n].id),
+                    );
+                }
+            }
+            adjacency.push(tab);
+        }
         for &id in ids {
             let mut st = NodeState::new(id, self.cfg.clone(), self.now);
             st.bootstrap_first();
-            for s in 0..self.cfg.spaces {
-                let ring = m.ring(s);
-                let n = ring.len();
-                if n < 2 {
-                    continue;
+            for (s, tab) in adjacency.iter().enumerate() {
+                if let Some(&(prev, next)) = tab.get(&id) {
+                    st.views[s].prev = Some(prev);
+                    st.views[s].next = Some(next);
                 }
-                let pos = ring.iter().position(|p| p.id == id).unwrap();
-                st.views[s].prev = Some(ring[(pos + n - 1) % n].id);
-                st.views[s].next = Some(ring[(pos + 1) % n].id);
             }
             // seed the peer table from the views
             for s in 0..self.cfg.spaces {
@@ -106,6 +142,7 @@ impl Simulator {
             st.counters = NodeCounters::default();
             self.transport.open(id).expect("transport endpoint");
             self.nodes.insert(id, st);
+            self.note_view_change(id);
             self.queue.push(self.now + 1, EventKind::Tick { node: id });
         }
     }
@@ -116,6 +153,7 @@ impl Simulator {
         st.bootstrap_first();
         self.transport.open(id).expect("transport endpoint");
         self.nodes.insert(id, st);
+        self.note_view_change(id);
         self.queue.push(self.now + 1, EventKind::Tick { node: id });
     }
 
@@ -174,7 +212,11 @@ impl Simulator {
                 let Some(node) = self.nodes.get_mut(&a.to) else {
                     continue;
                 };
+                let stamp = node.view_stamp();
                 let outs = node.handle(a.from, a.msg, self.now);
+                if node.view_stamp() != stamp {
+                    self.note_view_change(a.to);
+                }
                 self.dispatch(a.to, outs);
             }
         }
@@ -238,14 +280,22 @@ impl Simulator {
                     let Some(node) = self.nodes.get_mut(&to) else {
                         continue;
                     };
+                    let stamp = node.view_stamp();
                     let outs = node.handle(from, msg, self.now);
+                    if node.view_stamp() != stamp {
+                        self.note_view_change(to);
+                    }
                     self.dispatch(to, outs);
                 }
                 EventKind::Tick { node } => {
                     let Some(st) = self.nodes.get_mut(&node) else {
                         continue;
                     };
+                    let stamp = st.view_stamp();
                     let outs = st.tick(self.now);
+                    if st.view_stamp() != stamp {
+                        self.note_view_change(node);
+                    }
                     self.dispatch(node, outs);
                     self.queue
                         .push(self.now + self.tick_period, EventKind::Tick { node });
@@ -260,6 +310,7 @@ impl Simulator {
                     let mut st = NodeState::new(node, self.cfg.clone(), self.now);
                     let outs = st.start_join(bootstrap, self.now);
                     self.nodes.insert(node, st);
+                    self.note_view_change(node);
                     self.dispatch(node, outs);
                     self.queue
                         .push(self.now + self.tick_period, EventKind::Tick { node });
@@ -267,6 +318,7 @@ impl Simulator {
                 EventKind::Fail { node } => {
                     if let Some(st) = self.nodes.remove(&node) {
                         self.retired_counters.push(st.counters);
+                        self.note_view_change(node);
                         self.transport.close(node);
                     }
                 }
@@ -274,6 +326,7 @@ impl Simulator {
                     if let Some(mut st) = self.nodes.remove(&node) {
                         let outs = st.start_leave();
                         self.retired_counters.push(st.counters);
+                        self.note_view_change(node);
                         // flush the leave notices, then tear the endpoint
                         // down — in-flight messages to it vanish, exactly
                         // like the in-memory dead-node rule.
@@ -446,6 +499,35 @@ mod tests {
             sim.correctness()
         );
         assert_eq!(sim.nodes.len(), 36);
+    }
+
+    #[test]
+    fn view_changes_track_churn_and_go_quiet() {
+        use crate::sim::scenario::quiesce;
+        let mut sim = Simulator::new(overlay(2), net());
+        sim.bootstrap_correct(&(0..20).collect::<Vec<_>>());
+        // bootstrap notifies every node once
+        let boot: Vec<NodeId> = sim.take_view_changes();
+        assert_eq!(boot.len(), 20);
+        sim.schedule_fail(10 * MS, 3);
+        // run past the failure instant, then settle to the exact ideal
+        // rings (stronger than correctness 1.0: no residual adoptions
+        // left to fire during the quiet window)
+        sim.run_until(1_000 * MS);
+        let t = quiesce(&mut sim, 120_000 * MS, 500 * MS);
+        assert!(t.is_some(), "failure not repaired: {}", sim.correctness());
+        let changed = sim.take_view_changes();
+        // the failed node and (at least) its ring neighbors changed views
+        assert!(changed.contains(&3));
+        assert!(changed.len() >= 3, "repair should touch neighbors: {changed:?}");
+        assert!(sim.view_change_count >= changed.len() as u64);
+        // a converged, churn-free network stays quiet
+        let quiet_from = sim.now;
+        sim.run_until(quiet_from + 20_000 * MS);
+        assert!(
+            sim.take_view_changes().is_empty(),
+            "steady-state heartbeats must not emit view changes"
+        );
     }
 
     #[test]

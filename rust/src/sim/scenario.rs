@@ -1,0 +1,1315 @@
+//! Declarative churn scenarios: a serializable description of a
+//! resilience experiment (phases of mass joins/failures/leaves, flash
+//! crowds, Poisson churn, partition-style adversarial bursts, plus a
+//! sampling cadence) that compiles to one deterministic event schedule
+//! and drives either a bare overlay [`Simulator`] or a full
+//! `dfl::Trainer` through the same code path (`ChurnSink`).
+//!
+//! The compiled schedule is a pure function of the spec and its seed:
+//! node ids, bootstraps, and victims are resolved at compile time against
+//! a virtual live-set replay, so the identical schedule can be replayed
+//! on the in-memory transport, on real TCP sockets, or inside a training
+//! run — the substrate for the golden-trajectory and model-based
+//! property suites (`tests/scenario_golden.rs`,
+//! `tests/scenario_properties.rs`) and the `fedlay scenario` CLI.
+//!
+//! The TOML-subset format is documented in `docs/scenarios.md`; runnable
+//! examples live under `configs/scenarios/`.
+
+use super::runner::{CorrectnessSample, Simulator};
+use super::transport::Transport;
+use crate::config::{Doc, NetConfig, OverlayConfig};
+use crate::dfl::Trainer;
+use crate::ndmp::messages::{Time, MS, SEC};
+use crate::topology::{correctness, Membership, NeighborSnapshot, NodeId};
+use crate::util::Rng;
+use anyhow::{bail, ensure, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One churn phase: what happens, starting when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Phase {
+    pub at: Time,
+    pub kind: PhaseKind,
+}
+
+/// The scenario vocabulary. Mass events fire at the phase instant (the
+/// paper's "same time" extremes, Figs. 8a/8b); the stochastic kinds
+/// expand into seeded event streams at compile time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PhaseKind {
+    /// `count` new clients join at the phase instant, each through a
+    /// random live bootstrap (Fig. 8a).
+    MassJoin { count: usize },
+    /// `count` random live clients crash-fail at the phase instant
+    /// (Fig. 8b).
+    MassFail { count: usize },
+    /// `count` random live clients leave gracefully at the phase instant.
+    MassLeave { count: usize },
+    /// A flash crowd: `count` clients join at the phase instant and each
+    /// departs gracefully `dwell` later.
+    FlashCrowd { count: usize, dwell: Time },
+    /// Merged Poisson processes with exponential inter-arrivals over
+    /// `window`: rates are events per simulated minute.
+    PoissonChurn {
+        join_per_min: f64,
+        fail_per_min: f64,
+        leave_per_min: f64,
+        window: Time,
+    },
+    /// Adversarial burst: a contiguous arc of the space-0 ring —
+    /// `fraction` of the live nodes — crash-fails at once. Coordinated
+    /// failures of ring-adjacent nodes are the worst case for repair
+    /// (random failures rarely hit both adjacents of anyone).
+    Partition { fraction: f64 },
+}
+
+/// A resolved churn operation in the compiled schedule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ChurnOp {
+    Join { node: NodeId, bootstrap: NodeId },
+    Fail { node: NodeId },
+    Leave { node: NodeId },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    pub at: Time,
+    pub op: ChurnOp,
+}
+
+/// Tally of the compiled schedule (drives the membership arithmetic
+/// checks: final live count = initial + joins - fails - leaves).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ChurnCounts {
+    pub joins: usize,
+    pub fails: usize,
+    pub leaves: usize,
+}
+
+impl ChurnCounts {
+    pub fn of(events: &[ChurnEvent]) -> Self {
+        let mut c = ChurnCounts::default();
+        for e in events {
+            match e.op {
+                ChurnOp::Join { .. } => c.joins += 1,
+                ChurnOp::Fail { .. } => c.fails += 1,
+                ChurnOp::Leave { .. } => c.leaves += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Anything that can receive a compiled churn schedule: the bare overlay
+/// simulator and the DFL trainer implement this, which is what lets one
+/// scenario description drive both.
+pub trait ChurnSink {
+    fn join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) -> Result<()>;
+    fn fail(&mut self, at: Time, node: NodeId) -> Result<()>;
+    fn leave(&mut self, at: Time, node: NodeId) -> Result<()>;
+}
+
+impl ChurnSink for Simulator {
+    fn join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) -> Result<()> {
+        self.schedule_join(at, node, bootstrap);
+        Ok(())
+    }
+
+    fn fail(&mut self, at: Time, node: NodeId) -> Result<()> {
+        self.schedule_fail(at, node);
+        Ok(())
+    }
+
+    fn leave(&mut self, at: Time, node: NodeId) -> Result<()> {
+        self.schedule_leave(at, node);
+        Ok(())
+    }
+}
+
+/// Adapter scheduling a scenario onto a `dfl::Trainer`: mid-run joiners
+/// need label weights, so the sink carries a `node id -> weights`
+/// function alongside the trainer.
+pub struct TrainerSink<'a, 'e, F> {
+    pub trainer: &'a mut Trainer<'e>,
+    pub weights_for: F,
+}
+
+impl<F: FnMut(usize) -> Vec<f64>> ChurnSink for TrainerSink<'_, '_, F> {
+    fn join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) -> Result<()> {
+        let w = (self.weights_for)(node as usize);
+        let id = self.trainer.schedule_join(at, w, bootstrap as usize)?;
+        ensure!(
+            id == node as usize,
+            "scenario join id mismatch: trainer assigned {id}, schedule expects {node}"
+        );
+        Ok(())
+    }
+
+    fn fail(&mut self, at: Time, node: NodeId) -> Result<()> {
+        self.trainer.schedule_fail(at, node as usize);
+        Ok(())
+    }
+
+    fn leave(&mut self, at: Time, node: NodeId) -> Result<()> {
+        self.trainer.schedule_leave(at, node as usize);
+        Ok(())
+    }
+}
+
+/// A declarative churn scenario. Serializable to the repo's TOML subset
+/// (`to_toml` / `load`); `compile` resolves it to a deterministic event
+/// schedule; `run_sim` / `run_trainer` execute it end to end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Size of the instantly-correct network the scenario starts from.
+    pub initial: usize,
+    /// Master seed: schedule compilation and (by default) the simulated
+    /// network both derive from it.
+    pub seed: u64,
+    /// End of the scheduled run (sampling stops here).
+    pub horizon: Time,
+    /// Correctness/accuracy sampling cadence (0 = endpoints only).
+    pub sample_every: Time,
+    /// Extra budget after the horizon to quiesce to the ideal rings
+    /// (0 = stop at the horizon).
+    pub settle: Time,
+    /// Floor on the live population: stochastic fails/leaves are skipped
+    /// when they would shrink the network below it.
+    pub min_live: usize,
+    pub overlay: OverlayConfig,
+    pub net: NetConfig,
+    pub phases: Vec<Phase>,
+}
+
+/// Compile-time work item: times are fixed, targets resolve against the
+/// virtual live set when the item is reached in time order.
+enum Intent {
+    Join { dwell: Option<Time> },
+    Fail,
+    Leave,
+    /// Scheduled graceful departure of a specific flash-crowd node.
+    Depart(NodeId),
+    Partition { fraction: f64 },
+}
+
+impl ScenarioSpec {
+    fn base(name: &str, initial: usize, seed: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            initial,
+            seed,
+            horizon: 90 * SEC,
+            sample_every: 3 * SEC,
+            settle: 0,
+            min_live: (initial / 2).max(2),
+            overlay: OverlayConfig::default(),
+            net: NetConfig {
+                seed,
+                ..NetConfig::default()
+            },
+            phases: Vec::new(),
+        }
+    }
+
+    /// Paper Fig. 8a: a join wave hits an `initial`-node network at one
+    /// instant.
+    pub fn fig8a_join_wave(initial: usize, joiners: usize, seed: u64) -> Self {
+        let mut s = Self::base("fig8a-join-wave", initial, seed);
+        s.phases.push(Phase {
+            at: 10 * MS,
+            kind: PhaseKind::MassJoin { count: joiners },
+        });
+        s
+    }
+
+    /// Paper Fig. 8b: simultaneous crash failures.
+    pub fn fig8b_mass_fail(initial: usize, failures: usize, seed: u64) -> Self {
+        let mut s = Self::base("fig8b-mass-fail", initial, seed);
+        s.phases.push(Phase {
+            at: 10 * MS,
+            kind: PhaseKind::MassFail { count: failures },
+        });
+        s
+    }
+
+    /// Mixed Poisson churn: joins/fails/leaves as merged Poisson
+    /// processes (50/30/20 rate split) over `window`, then a quiet tail.
+    pub fn poisson_mix(initial: usize, events_per_min: f64, window: Time, seed: u64) -> Self {
+        let mut s = Self::base("poisson-mix", initial, seed);
+        s.horizon = window + 60 * SEC;
+        s.phases.push(Phase {
+            at: SEC,
+            kind: PhaseKind::PoissonChurn {
+                join_per_min: events_per_min * 0.5,
+                fail_per_min: events_per_min * 0.3,
+                leave_per_min: events_per_min * 0.2,
+                window,
+            },
+        });
+        s
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.initial >= 1, "scenario.initial must be >= 1");
+        ensure!(self.horizon > 0, "scenario.horizon_ms must be positive");
+        ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
+        ensure!(self.min_live >= 1, "scenario.min_live must be >= 1");
+        for (i, ph) in self.phases.iter().enumerate() {
+            match ph.kind {
+                PhaseKind::Partition { fraction } => {
+                    ensure!(
+                        fraction > 0.0 && fraction < 1.0,
+                        "phase {}: partition fraction must be in (0, 1)",
+                        i + 1
+                    );
+                }
+                PhaseKind::PoissonChurn {
+                    join_per_min,
+                    fail_per_min,
+                    leave_per_min,
+                    window,
+                } => {
+                    ensure!(
+                        join_per_min >= 0.0 && fail_per_min >= 0.0 && leave_per_min >= 0.0,
+                        "phase {}: rates must be >= 0",
+                        i + 1
+                    );
+                    ensure!(window > 0, "phase {}: window_ms must be positive", i + 1);
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Compilation: spec -> deterministic event schedule
+    // ------------------------------------------------------------------
+
+    /// Resolve the scenario to a concrete schedule. Deterministic in the
+    /// spec (including its seed): ids are assigned and bootstraps/victims
+    /// sampled against a virtual replay of the live membership, walked in
+    /// time order, so a join's bootstrap is always live when the event
+    /// fires — on any backend, and on the trainer (whose sequential id
+    /// assignment matches the schedule's emission order by construction).
+    pub fn compile(&self) -> Vec<ChurnEvent> {
+        let mut work: BTreeMap<(Time, u64), Intent> = BTreeMap::new();
+        let mut seq = 0u64;
+        for (pi, phase) in self.phases.iter().enumerate() {
+            let at = phase.at;
+            match phase.kind {
+                PhaseKind::MassJoin { count } => {
+                    for _ in 0..count {
+                        work.insert((at, seq), Intent::Join { dwell: None });
+                        seq += 1;
+                    }
+                }
+                PhaseKind::MassFail { count } => {
+                    for _ in 0..count {
+                        work.insert((at, seq), Intent::Fail);
+                        seq += 1;
+                    }
+                }
+                PhaseKind::MassLeave { count } => {
+                    for _ in 0..count {
+                        work.insert((at, seq), Intent::Leave);
+                        seq += 1;
+                    }
+                }
+                PhaseKind::FlashCrowd { count, dwell } => {
+                    for _ in 0..count {
+                        work.insert((at, seq), Intent::Join { dwell: Some(dwell) });
+                        seq += 1;
+                    }
+                }
+                PhaseKind::PoissonChurn {
+                    join_per_min,
+                    fail_per_min,
+                    leave_per_min,
+                    window,
+                } => {
+                    let total = join_per_min + fail_per_min + leave_per_min;
+                    if total <= 0.0 {
+                        continue;
+                    }
+                    // One stream per phase so reordering phases in the
+                    // spec does not silently reshuffle every arrival.
+                    let mut trng = Rng::new(self.seed ^ 0xA271 ^ ((pi as u64 + 1) << 32));
+                    let per_us = total / 60e6;
+                    let mut t = at;
+                    loop {
+                        let dt = trng.exponential(per_us);
+                        if !dt.is_finite() || dt >= (Time::MAX / 4) as f64 {
+                            break;
+                        }
+                        t += dt.max(1.0) as Time;
+                        if t >= at + window {
+                            break;
+                        }
+                        let u = trng.next_f64() * total;
+                        let intent = if u < join_per_min {
+                            Intent::Join { dwell: None }
+                        } else if u < join_per_min + fail_per_min {
+                            Intent::Fail
+                        } else {
+                            Intent::Leave
+                        };
+                        work.insert((t, seq), intent);
+                        seq += 1;
+                    }
+                }
+                PhaseKind::Partition { fraction } => {
+                    work.insert((at, seq), Intent::Partition { fraction });
+                    seq += 1;
+                }
+            }
+        }
+
+        // Time-ordered replay against the virtual live set.
+        let mut rng = Rng::new(self.seed ^ 0x5CE1);
+        let mut live: Vec<NodeId> = (0..self.initial as NodeId).collect();
+        let mut next_id = self.initial as NodeId;
+        let min_live = self.min_live.max(1);
+        let mut out = Vec::new();
+        while let Some(((at, _), intent)) = work.pop_first() {
+            match intent {
+                Intent::Join { dwell } => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let bootstrap = live[rng.index(live.len())];
+                    let node = next_id;
+                    next_id += 1;
+                    out.push(ChurnEvent {
+                        at,
+                        op: ChurnOp::Join { node, bootstrap },
+                    });
+                    live.push(node);
+                    if let Some(d) = dwell {
+                        work.insert((at + d.max(1), seq), Intent::Depart(node));
+                        seq += 1;
+                    }
+                }
+                Intent::Fail => {
+                    if live.len() <= min_live {
+                        continue;
+                    }
+                    let node = live.swap_remove(rng.index(live.len()));
+                    out.push(ChurnEvent {
+                        at,
+                        op: ChurnOp::Fail { node },
+                    });
+                }
+                Intent::Leave => {
+                    if live.len() <= min_live {
+                        continue;
+                    }
+                    let node = live.swap_remove(rng.index(live.len()));
+                    out.push(ChurnEvent {
+                        at,
+                        op: ChurnOp::Leave { node },
+                    });
+                }
+                Intent::Depart(node) => {
+                    if live.len() <= min_live {
+                        continue;
+                    }
+                    if let Some(pos) = live.iter().position(|&x| x == node) {
+                        live.swap_remove(pos);
+                        out.push(ChurnEvent {
+                            at,
+                            op: ChurnOp::Leave { node },
+                        });
+                    }
+                }
+                Intent::Partition { fraction } => {
+                    let want = (fraction * live.len() as f64).round() as usize;
+                    let count = want.min(live.len().saturating_sub(min_live));
+                    if count == 0 {
+                        continue;
+                    }
+                    let mut m = Membership::new(self.overlay.spaces);
+                    for &id in &live {
+                        m.add(id);
+                    }
+                    let ring = m.ring(0);
+                    let start = rng.index(ring.len());
+                    let victims: Vec<NodeId> = (0..count)
+                        .map(|k| ring[(start + k) % ring.len()].id)
+                        .collect();
+                    for node in victims {
+                        if let Some(pos) = live.iter().position(|&x| x == node) {
+                            live.swap_remove(pos);
+                            out.push(ChurnEvent {
+                                at,
+                                op: ChurnOp::Fail { node },
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Schedule the compiled events onto any sink (simulator or trainer)
+    /// — the single code path shared by benches, tests, and the CLI.
+    pub fn schedule(&self, sink: &mut dyn ChurnSink) -> Result<ChurnCounts> {
+        let events = self.compile();
+        let counts = ChurnCounts::of(&events);
+        schedule_events(&events, sink)?;
+        Ok(counts)
+    }
+
+    // ------------------------------------------------------------------
+    // Execution
+    // ------------------------------------------------------------------
+
+    /// The end of the scheduled run: the horizon, extended past the last
+    /// compiled churn event so the whole schedule always executes (a
+    /// Poisson tail or flash-crowd departure may spill past the sampled
+    /// horizon) and the membership arithmetic holds unconditionally.
+    fn run_end(&self, events: &[ChurnEvent]) -> Time {
+        let last = events.last().map(|e| e.at).unwrap_or(0);
+        self.horizon.max(last.saturating_add(1))
+    }
+
+    /// Run the scenario on a bare overlay simulator. `transport` selects
+    /// the message backend (`None` = deterministic in-memory network from
+    /// the spec's `net` section).
+    pub fn run_sim(
+        &self,
+        transport: Option<Box<dyn Transport>>,
+    ) -> Result<(Simulator, ScenarioReport)> {
+        self.validate()?;
+        let mut sim = match transport {
+            Some(t) => Simulator::with_transport(self.overlay.clone(), t),
+            None => Simulator::new(self.overlay.clone(), self.net.clone()),
+        };
+        let ids: Vec<NodeId> = (0..self.initial as NodeId).collect();
+        sim.bootstrap_correct(&ids);
+        let events = self.compile();
+        let counts = ChurnCounts::of(&events);
+        schedule_events(&events, &mut sim)?;
+        if self.sample_every > 0 {
+            let mut t = 0;
+            while t <= self.horizon {
+                sim.schedule_snapshot(t);
+                t += self.sample_every;
+            }
+        } else {
+            // endpoints only
+            sim.schedule_snapshot(0);
+            sim.schedule_snapshot(self.horizon);
+        }
+        sim.run_until(self.run_end(&events));
+        let settled_at = if self.settle > 0 {
+            let deadline = sim.now + self.settle;
+            quiesce(&mut sim, deadline, SEC)
+        } else {
+            None
+        };
+        let report = ScenarioReport::from_sim(self, &sim, counts, settled_at);
+        Ok((sim, report))
+    }
+
+    /// Run the scenario through a full training run: churn is scheduled
+    /// on the trainer (joins enter through the NDMP protocol of the
+    /// embedded overlay), the overlay records the correctness series, and
+    /// the report carries the accuracy series plus neighbor-cache stats.
+    /// `weights_for(id)` supplies the label weights of mid-run joiners.
+    pub fn run_trainer<F>(
+        &self,
+        trainer: &mut Trainer<'_>,
+        weights_for: F,
+    ) -> Result<ScenarioReport>
+    where
+        F: FnMut(usize) -> Vec<f64>,
+    {
+        self.validate()?;
+        ensure!(
+            trainer.clients.len() == self.initial,
+            "trainer has {} clients, scenario starts from {}",
+            trainer.clients.len(),
+            self.initial
+        );
+        let events = self.compile();
+        let counts = ChurnCounts::of(&events);
+        {
+            let mut sink = TrainerSink {
+                trainer: &mut *trainer,
+                weights_for,
+            };
+            schedule_events(&events, &mut sink)?;
+        }
+        trainer.schedule_overlay_snapshots(self.horizon, self.sample_every)?;
+        trainer.run(self.run_end(&events), self.sample_every)?;
+        let (cache_hits, cache_misses) = trainer.neighbor_cache_stats();
+        let settled_at = if self.settle > 0 {
+            let sim = trainer
+                .overlay
+                .as_mut()
+                .expect("dynamic overlay state after run");
+            let deadline = sim.now + self.settle;
+            quiesce(sim, deadline, SEC)
+        } else {
+            None
+        };
+        let sim = trainer
+            .overlay
+            .as_ref()
+            .expect("dynamic overlay state after run");
+        let mut report = ScenarioReport::from_sim(self, sim, counts, settled_at);
+        report.accuracy = trainer
+            .samples
+            .iter()
+            .map(|s| (s.at, s.mean_accuracy))
+            .collect();
+        report.cache_hits = cache_hits;
+        report.cache_misses = cache_misses;
+        Ok(report)
+    }
+
+    // ------------------------------------------------------------------
+    // Serialization (TOML subset, see docs/scenarios.md)
+    // ------------------------------------------------------------------
+
+    pub fn load(path: &std::path::Path) -> Result<ScenarioSpec> {
+        let doc = Doc::parse_file(path)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<ScenarioSpec> {
+        let doc = Doc::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &Doc) -> Result<ScenarioSpec> {
+        check_known_keys(doc)?;
+        let od = OverlayConfig::default();
+        let nd = NetConfig::default();
+        let name = doc.str("scenario.name").unwrap_or("unnamed").to_string();
+        let initial = int_key(doc, "scenario.initial")?.unwrap_or(100) as usize;
+        let seed = int_key(doc, "scenario.seed")?.unwrap_or(1) as u64;
+        let horizon = ms_key(doc, "scenario.horizon_ms")?.unwrap_or(120 * SEC);
+        let sample_every =
+            ms_key(doc, "scenario.sample_every_ms")?.unwrap_or((horizon / 40).max(MS));
+        let settle = ms_key(doc, "scenario.settle_ms")?.unwrap_or(0);
+        let min_live = int_key(doc, "scenario.min_live")?
+            .map(|v| v as usize)
+            .unwrap_or_else(|| (initial / 2).max(2));
+        let overlay = OverlayConfig {
+            spaces: int_key(doc, "overlay.spaces")?
+                .map(|v| v as usize)
+                .unwrap_or(od.spaces),
+            heartbeat_ms: int_key(doc, "overlay.heartbeat_ms")?
+                .map(|v| v as u64)
+                .unwrap_or(od.heartbeat_ms),
+            failure_multiple: int_key(doc, "overlay.failure_multiple")?
+                .map(|v| v as u32)
+                .unwrap_or(od.failure_multiple),
+            repair_probe_ms: int_key(doc, "overlay.repair_probe_ms")?
+                .map(|v| v as u64)
+                .unwrap_or(od.repair_probe_ms),
+        };
+        let net = NetConfig {
+            latency_ms: float_key(doc, "net.latency_ms")?.unwrap_or(nd.latency_ms),
+            jitter: float_key(doc, "net.jitter")?.unwrap_or(nd.jitter),
+            seed: int_key(doc, "net.seed")?.map(|v| v as u64).unwrap_or(seed),
+        };
+        let mut indices: BTreeSet<u64> = BTreeSet::new();
+        for key in doc.keys_with_prefix("phase.") {
+            let rest = &key["phase.".len()..];
+            if let Some((idx, _)) = rest.split_once('.') {
+                if let Ok(i) = idx.parse::<u64>() {
+                    indices.insert(i);
+                }
+            }
+        }
+        let mut phases = Vec::new();
+        for i in indices {
+            let path = |field: &str| format!("phase.{i}.{field}");
+            let kind_name = doc
+                .str(&path("kind"))
+                .ok_or_else(|| anyhow::anyhow!("phase.{i} is missing `kind`"))?;
+            // only accept the fields this kind actually consumes — a
+            // known field on the wrong kind (e.g. `fraction` on a
+            // mass_fail) would otherwise be silently ignored
+            let allowed: &[&str] = match kind_name {
+                "mass_join" | "mass_fail" | "mass_leave" => &["kind", "at_ms", "count"],
+                "flash_crowd" => &["kind", "at_ms", "count", "dwell_ms"],
+                "poisson_churn" => &[
+                    "kind",
+                    "at_ms",
+                    "join_per_min",
+                    "fail_per_min",
+                    "leave_per_min",
+                    "window_ms",
+                ],
+                "partition" => &["kind", "at_ms", "fraction"],
+                other => bail!("phase.{i}: unknown kind {other:?}"),
+            };
+            let prefix = format!("phase.{i}.");
+            for key in doc.keys_with_prefix(&prefix) {
+                let field = &key[prefix.len()..];
+                ensure!(
+                    allowed.contains(&field),
+                    "phase.{i} ({kind_name}): field {field:?} does not apply to this kind"
+                );
+            }
+            let at = ms_key(doc, &path("at_ms"))?
+                .ok_or_else(|| anyhow::anyhow!("phase.{i} is missing `at_ms`"))?;
+            let need_count = || {
+                int_key(doc, &path("count"))?
+                    .map(|v| v as usize)
+                    .ok_or_else(|| anyhow::anyhow!("phase.{i} is missing `count`"))
+            };
+            let kind = match kind_name {
+                "mass_join" => PhaseKind::MassJoin {
+                    count: need_count()?,
+                },
+                "mass_fail" => PhaseKind::MassFail {
+                    count: need_count()?,
+                },
+                "mass_leave" => PhaseKind::MassLeave {
+                    count: need_count()?,
+                },
+                "flash_crowd" => PhaseKind::FlashCrowd {
+                    count: need_count()?,
+                    dwell: ms_key(doc, &path("dwell_ms"))?.unwrap_or(20 * SEC),
+                },
+                "poisson_churn" => PhaseKind::PoissonChurn {
+                    join_per_min: float_key(doc, &path("join_per_min"))?.unwrap_or(0.0),
+                    fail_per_min: float_key(doc, &path("fail_per_min"))?.unwrap_or(0.0),
+                    leave_per_min: float_key(doc, &path("leave_per_min"))?.unwrap_or(0.0),
+                    window: ms_key(doc, &path("window_ms"))?.unwrap_or(60 * SEC),
+                },
+                "partition" => PhaseKind::Partition {
+                    fraction: float_key(doc, &path("fraction"))?.unwrap_or(0.25),
+                },
+                other => bail!("phase.{i}: unknown kind {other:?}"),
+            };
+            phases.push(Phase { at, kind });
+        }
+        let spec = ScenarioSpec {
+            name,
+            initial,
+            seed,
+            horizon,
+            sample_every,
+            settle,
+            min_live,
+            overlay,
+            net,
+            phases,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize to the TOML subset `from_doc` parses (round-trips for
+    /// millisecond-aligned times).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        s.push_str("[scenario]\n");
+        s.push_str(&format!("name = \"{}\"\n", self.name));
+        s.push_str(&format!("initial = {}\n", self.initial));
+        s.push_str(&format!("seed = {}\n", self.seed));
+        s.push_str(&format!("horizon_ms = {}\n", self.horizon / MS));
+        s.push_str(&format!("sample_every_ms = {}\n", self.sample_every / MS));
+        s.push_str(&format!("settle_ms = {}\n", self.settle / MS));
+        s.push_str(&format!("min_live = {}\n", self.min_live));
+        s.push_str("\n[overlay]\n");
+        s.push_str(&format!("spaces = {}\n", self.overlay.spaces));
+        s.push_str(&format!("heartbeat_ms = {}\n", self.overlay.heartbeat_ms));
+        s.push_str(&format!(
+            "failure_multiple = {}\n",
+            self.overlay.failure_multiple
+        ));
+        s.push_str(&format!(
+            "repair_probe_ms = {}\n",
+            self.overlay.repair_probe_ms
+        ));
+        s.push_str("\n[net]\n");
+        s.push_str(&format!("latency_ms = {}\n", self.net.latency_ms));
+        s.push_str(&format!("jitter = {}\n", self.net.jitter));
+        s.push_str(&format!("seed = {}\n", self.net.seed));
+        for (i, ph) in self.phases.iter().enumerate() {
+            s.push_str(&format!("\n[phase.{}]\n", i + 1));
+            s.push_str(&format!("at_ms = {}\n", ph.at / MS));
+            match ph.kind {
+                PhaseKind::MassJoin { count } => {
+                    s.push_str("kind = \"mass_join\"\n");
+                    s.push_str(&format!("count = {count}\n"));
+                }
+                PhaseKind::MassFail { count } => {
+                    s.push_str("kind = \"mass_fail\"\n");
+                    s.push_str(&format!("count = {count}\n"));
+                }
+                PhaseKind::MassLeave { count } => {
+                    s.push_str("kind = \"mass_leave\"\n");
+                    s.push_str(&format!("count = {count}\n"));
+                }
+                PhaseKind::FlashCrowd { count, dwell } => {
+                    s.push_str("kind = \"flash_crowd\"\n");
+                    s.push_str(&format!("count = {count}\n"));
+                    s.push_str(&format!("dwell_ms = {}\n", dwell / MS));
+                }
+                PhaseKind::PoissonChurn {
+                    join_per_min,
+                    fail_per_min,
+                    leave_per_min,
+                    window,
+                } => {
+                    s.push_str("kind = \"poisson_churn\"\n");
+                    s.push_str(&format!("join_per_min = {join_per_min}\n"));
+                    s.push_str(&format!("fail_per_min = {fail_per_min}\n"));
+                    s.push_str(&format!("leave_per_min = {leave_per_min}\n"));
+                    s.push_str(&format!("window_ms = {}\n", window / MS));
+                }
+                PhaseKind::Partition { fraction } => {
+                    s.push_str("kind = \"partition\"\n");
+                    s.push_str(&format!("fraction = {fraction}\n"));
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Every key a scenario document may contain (typos fail loudly instead
+/// of silently running a different experiment).
+const SCALAR_KEYS: &[&str] = &[
+    "scenario.name",
+    "scenario.initial",
+    "scenario.seed",
+    "scenario.horizon_ms",
+    "scenario.sample_every_ms",
+    "scenario.settle_ms",
+    "scenario.min_live",
+    "overlay.spaces",
+    "overlay.heartbeat_ms",
+    "overlay.failure_multiple",
+    "overlay.repair_probe_ms",
+    "net.latency_ms",
+    "net.jitter",
+    "net.seed",
+];
+
+const PHASE_FIELDS: &[&str] = &[
+    "kind",
+    "at_ms",
+    "count",
+    "dwell_ms",
+    "window_ms",
+    "join_per_min",
+    "fail_per_min",
+    "leave_per_min",
+    "fraction",
+];
+
+fn check_known_keys(doc: &Doc) -> Result<()> {
+    for key in doc.keys_with_prefix("") {
+        let known = SCALAR_KEYS.contains(&key)
+            || key
+                .strip_prefix("phase.")
+                .and_then(|rest| rest.split_once('.'))
+                .is_some_and(|(idx, field)| {
+                    idx.parse::<u64>().is_ok() && PHASE_FIELDS.contains(&field)
+                });
+        ensure!(
+            known,
+            "unknown scenario key {key:?} (see docs/scenarios.md for the format)"
+        );
+    }
+    Ok(())
+}
+
+/// A millisecond time key: absent is fine, present-but-not-integer is an
+/// error (a float or string would otherwise silently become a default).
+fn ms_key(doc: &Doc, key: &str) -> Result<Option<Time>> {
+    match int_key(doc, key)? {
+        None => Ok(None),
+        Some(v) => Ok(Some(v as Time * MS)),
+    }
+}
+
+/// Non-negative integer key: every integer a scenario carries (counts,
+/// sizes, seeds, milliseconds) is unsigned — a negative would wrap
+/// through the `as usize`/`as u64` casts into a multi-exabyte loop.
+fn int_key(doc: &Doc, key: &str) -> Result<Option<i64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let i = v
+                .as_int()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be an integer, got {v}"))?;
+            ensure!(i >= 0, "{key} must be non-negative, got {i}");
+            Ok(Some(i))
+        }
+    }
+}
+
+fn float_key(doc: &Doc, key: &str) -> Result<Option<f64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_float()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{key} must be a number, got {v}")),
+    }
+}
+
+fn schedule_events(events: &[ChurnEvent], sink: &mut dyn ChurnSink) -> Result<()> {
+    for ev in events {
+        match ev.op {
+            ChurnOp::Join { node, bootstrap } => sink.join(ev.at, node, bootstrap)?,
+            ChurnOp::Fail { node } => sink.fail(ev.at, node)?,
+            ChurnOp::Leave { node } => sink.leave(ev.at, node)?,
+        }
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------------------
+// Quiescence + ring quality
+// ----------------------------------------------------------------------
+
+/// Ideal Definition-1 neighbor sets of a membership: the ground truth a
+/// converged overlay's ring views must equal exactly. Batch-computed
+/// (one ring sort per space) so 10k-node quiescence checks stay cheap.
+pub fn ideal_ring_snapshot(ids: &[NodeId], spaces: usize) -> NeighborSnapshot {
+    let mut m = Membership::new(spaces);
+    for &id in ids {
+        m.add(id);
+    }
+    crate::topology::ideal_neighbor_sets(&m)
+}
+
+/// Whether the simulator's ring views equal the ideal overlay of its
+/// live membership (stronger than correctness 1.0: no stale entries).
+pub fn ring_matches_ideal(sim: &Simulator) -> bool {
+    let live: Vec<NodeId> = sim.nodes.keys().copied().collect();
+    sim.ring_snapshot() == ideal_ring_snapshot(&live, sim.cfg.spaces)
+}
+
+/// Advance `sim` until its ring views equal the ideal overlay, checking
+/// every `check_every`; returns the convergence time, or `None` if
+/// `deadline` passes first.
+pub fn quiesce(sim: &mut Simulator, deadline: Time, check_every: Time) -> Option<Time> {
+    loop {
+        if ring_matches_ideal(sim) {
+            return Some(sim.now);
+        }
+        if sim.now >= deadline {
+            return None;
+        }
+        let next = (sim.now + check_every.max(1)).min(deadline);
+        sim.run_until(next);
+    }
+}
+
+/// Structural health of the Definition-1 ring views.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RingQuality {
+    /// Definition-1 correctness of the ring views alone.
+    pub correctness: f64,
+    /// Directed ring entries whose reverse entry is missing.
+    pub asymmetric_links: usize,
+    /// Ring entries pointing at nodes that are not live ("ghosts").
+    pub ghost_entries: usize,
+    /// Largest ring-neighbor set (bound: 2L).
+    pub max_degree: usize,
+}
+
+pub fn ring_quality(sim: &Simulator) -> RingQuality {
+    let snap = sim.ring_snapshot();
+    let mut asymmetric_links = 0;
+    let mut ghost_entries = 0;
+    let mut max_degree = 0;
+    for (id, nbrs) in &snap {
+        max_degree = max_degree.max(nbrs.len());
+        for n in nbrs {
+            match snap.get(n) {
+                None => ghost_entries += 1,
+                Some(back) => {
+                    if !back.contains(id) {
+                        asymmetric_links += 1;
+                    }
+                }
+            }
+        }
+    }
+    RingQuality {
+        correctness: correctness(&snap, sim.cfg.spaces),
+        asymmetric_links,
+        ghost_entries,
+        max_degree,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Report
+// ----------------------------------------------------------------------
+
+/// Structured outcome of a scenario run, consumed by the benches, the
+/// golden/property tests, and the CLI.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub backend: String,
+    pub initial: usize,
+    pub counts: ChurnCounts,
+    /// Correctness time series over the scheduled horizon.
+    pub correctness: Vec<CorrectnessSample>,
+    pub final_correctness: f64,
+    pub live_nodes: usize,
+    /// When the rings matched the ideal overlay (settle phase), if asked.
+    pub settled_at: Option<Time>,
+    pub ring: RingQuality,
+    pub control_messages_per_node: f64,
+    pub delivered: u64,
+    /// `(t, mean accuracy)` — empty for overlay-only runs.
+    pub accuracy: Vec<(Time, f64)>,
+    /// Trainer neighbor-cache telemetry (zero for overlay-only runs).
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+impl ScenarioReport {
+    pub fn from_sim(
+        spec: &ScenarioSpec,
+        sim: &Simulator,
+        counts: ChurnCounts,
+        settled_at: Option<Time>,
+    ) -> Self {
+        Self {
+            scenario: spec.name.clone(),
+            backend: sim.backend().to_string(),
+            initial: spec.initial,
+            counts,
+            correctness: sim.samples.clone(),
+            final_correctness: sim.correctness(),
+            live_nodes: sim.nodes.len(),
+            settled_at,
+            ring: ring_quality(sim),
+            control_messages_per_node: sim.control_messages_per_node(),
+            delivered: sim.delivered,
+            accuracy: Vec::new(),
+            cache_hits: 0,
+            cache_misses: 0,
+        }
+    }
+
+    /// The correctness timeline as an aligned table — the one
+    /// construction shared by `render`, the figure benches, and the CLI.
+    pub fn correctness_table(&self) -> crate::bench_util::Table {
+        let mut t = crate::bench_util::Table::new(&["t (s)", "correctness", "live nodes"]);
+        for s in &self.correctness {
+            t.row(&[
+                format!("{:.1}", s.at as f64 / 1e6),
+                format!("{:.4}", s.correctness),
+                s.live_nodes.to_string(),
+            ]);
+        }
+        t
+    }
+
+    /// Human-readable rendering (timeline + summary) for the CLI/benches.
+    pub fn render(&self) -> String {
+        use crate::bench_util::Table;
+        let mut out = String::new();
+        out.push_str(&self.correctness_table().render());
+        if !self.accuracy.is_empty() {
+            let mut a = Table::new(&["t (min)", "mean accuracy"]);
+            for (at, acc) in &self.accuracy {
+                a.row(&[format!("{:.1}", *at as f64 / 60e6), format!("{acc:.4}")]);
+            }
+            out.push_str(&a.render());
+        }
+        out.push_str(&format!(
+            "scenario={} backend={} initial={} joins={} fails={} leaves={}\n",
+            self.scenario,
+            self.backend,
+            self.initial,
+            self.counts.joins,
+            self.counts.fails,
+            self.counts.leaves
+        ));
+        out.push_str(&format!(
+            "final correctness={:.4} live={} ring[asym={} ghost={} max_deg={}] \
+             ctrl msgs/node={:.1} delivered={}\n",
+            self.final_correctness,
+            self.live_nodes,
+            self.ring.asymmetric_links,
+            self.ring.ghost_entries,
+            self.ring.max_degree,
+            self.control_messages_per_node,
+            self.delivered
+        ));
+        if let Some(at) = self.settled_at {
+            out.push_str(&format!(
+                "settled to ideal rings at t={:.1}s\n",
+                at as f64 / 1e6
+            ));
+        }
+        if self.cache_hits + self.cache_misses > 0 {
+            out.push_str(&format!(
+                "neighbor cache: {} hits / {} misses\n",
+                self.cache_hits, self.cache_misses
+            ));
+        }
+        out
+    }
+
+    /// Stable, diff-friendly trajectory format for the golden tests:
+    /// header, one line per correctness sample, final summary.
+    pub fn golden_lines(&self) -> String {
+        let mut out = format!(
+            "scenario={} initial={} joins={} fails={} leaves={}\n",
+            self.scenario, self.initial, self.counts.joins, self.counts.fails, self.counts.leaves
+        );
+        for s in &self.correctness {
+            out.push_str(&format!(
+                "t_ms={} c={:.4} live={}\n",
+                s.at / MS,
+                s.correctness,
+                s.live_nodes
+            ));
+        }
+        out.push_str(&format!(
+            "final c={:.4} live={}\n",
+            self.final_correctness, self.live_nodes
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_overlay() -> OverlayConfig {
+        OverlayConfig {
+            spaces: 2,
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        }
+    }
+
+    fn fast_net(seed: u64) -> NetConfig {
+        NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.1,
+            seed,
+        }
+    }
+
+    #[test]
+    fn compile_is_deterministic() {
+        let spec = ScenarioSpec::poisson_mix(30, 12.0, 30 * SEC, 7);
+        assert_eq!(spec.compile(), spec.compile());
+        let other = ScenarioSpec::poisson_mix(30, 12.0, 30 * SEC, 8);
+        assert_ne!(spec.compile(), other.compile());
+    }
+
+    #[test]
+    fn compile_membership_arithmetic_holds() {
+        let mut spec = ScenarioSpec::poisson_mix(24, 20.0, 40 * SEC, 3);
+        spec.phases.push(Phase {
+            at: 5 * SEC,
+            kind: PhaseKind::MassJoin { count: 6 },
+        });
+        let events = spec.compile();
+        let counts = ChurnCounts::of(&events);
+        // every join id is fresh and sequential from `initial`
+        let join_ids: Vec<NodeId> = events
+            .iter()
+            .filter_map(|e| match e.op {
+                ChurnOp::Join { node, .. } => Some(node),
+                _ => None,
+            })
+            .collect();
+        let want: Vec<NodeId> = (24..24 + counts.joins as NodeId).collect();
+        assert_eq!(join_ids, want);
+        // victims are never duplicated and never below the floor
+        let removed: Vec<NodeId> = events
+            .iter()
+            .filter_map(|e| match e.op {
+                ChurnOp::Fail { node } | ChurnOp::Leave { node } => Some(node),
+                _ => None,
+            })
+            .collect();
+        let mut dedup = removed.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), removed.len(), "victim removed twice");
+        let final_live = 24 + counts.joins - counts.fails - counts.leaves;
+        assert!(final_live >= spec.min_live);
+    }
+
+    #[test]
+    fn compile_events_are_time_ordered() {
+        let mut spec = ScenarioSpec::poisson_mix(20, 15.0, 30 * SEC, 11);
+        spec.phases.push(Phase {
+            at: 2 * SEC,
+            kind: PhaseKind::FlashCrowd {
+                count: 4,
+                dwell: 10 * SEC,
+            },
+        });
+        let events = spec.compile();
+        assert!(events.windows(2).all(|w| w[0].at <= w[1].at));
+    }
+
+    #[test]
+    fn flash_crowd_pairs_joins_with_leaves() {
+        let mut spec = ScenarioSpec::base("flash", 20, 5);
+        spec.phases.push(Phase {
+            at: SEC,
+            kind: PhaseKind::FlashCrowd {
+                count: 5,
+                dwell: 8 * SEC,
+            },
+        });
+        let events = spec.compile();
+        let counts = ChurnCounts::of(&events);
+        assert_eq!(counts.joins, 5);
+        assert_eq!(counts.leaves, 5);
+        for e in &events {
+            if let ChurnOp::Leave { .. } = e.op {
+                assert_eq!(e.at, SEC + 8 * SEC);
+            }
+        }
+    }
+
+    #[test]
+    fn partition_fails_contiguous_ring_arc() {
+        let mut spec = ScenarioSpec::base("part", 40, 9);
+        spec.phases.push(Phase {
+            at: SEC,
+            kind: PhaseKind::Partition { fraction: 0.25 },
+        });
+        let events = spec.compile();
+        let counts = ChurnCounts::of(&events);
+        assert_eq!(counts.fails, 10);
+        // victims form a contiguous run of the space-0 ring order
+        let victims: BTreeSet<NodeId> = events
+            .iter()
+            .filter_map(|e| match e.op {
+                ChurnOp::Fail { node } => Some(node),
+                _ => None,
+            })
+            .collect();
+        let mut m = Membership::new(spec.overlay.spaces);
+        for id in 0..40u64 {
+            m.add(id);
+        }
+        let ring = m.ring(0);
+        let positions: Vec<usize> = ring
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| victims.contains(&p.id))
+            .map(|(i, _)| i)
+            .collect();
+        // contiguity mod ring length: exactly one gap > 1 when walking
+        // the sorted positions cyclically (or zero if the run wraps).
+        let n = ring.len();
+        let interior = positions.windows(2).filter(|w| w[1] - w[0] > 1).count();
+        let wrap = usize::from((positions[0] + n) - positions[positions.len() - 1] > 1);
+        assert!(interior + wrap <= 1, "positions not contiguous: {positions:?}");
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        let mut spec = ScenarioSpec::fig8a_join_wave(50, 12, 42);
+        spec.phases.push(Phase {
+            at: 20 * SEC,
+            kind: PhaseKind::PoissonChurn {
+                join_per_min: 3.0,
+                fail_per_min: 1.5,
+                leave_per_min: 0.5,
+                window: 30 * SEC,
+            },
+        });
+        spec.phases.push(Phase {
+            at: 70 * SEC,
+            kind: PhaseKind::Partition { fraction: 0.2 },
+        });
+        spec.settle = 60 * SEC;
+        let text = spec.to_toml();
+        let back = ScenarioSpec::from_toml_str(&text).expect("round trip parse");
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn from_doc_rejects_unknown_kind() {
+        let text = "[scenario]\ninitial = 10\n[phase.1]\nkind = \"melt\"\nat_ms = 5\n";
+        assert!(ScenarioSpec::from_toml_str(text).is_err());
+    }
+
+    #[test]
+    fn from_doc_rejects_typos_and_wrong_types() {
+        // typoed key: silently running a different experiment is worse
+        // than an error
+        let typo = "[scenario]\ninitial = 10\nhorizonms = 5000\n";
+        assert!(ScenarioSpec::from_toml_str(typo).is_err());
+        let typo2 =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"flash_crowd\"\nat_ms = 5\ncount = 2\ndwel_ms = 100\n";
+        assert!(ScenarioSpec::from_toml_str(typo2).is_err());
+        // wrong type: a float horizon must not fall back to the default
+        let float_time = "[scenario]\ninitial = 10\nhorizon_ms = 5000.5\n";
+        assert!(ScenarioSpec::from_toml_str(float_time).is_err());
+        // negative integers would wrap through the usize/u64 casts
+        let negative = "[scenario]\ninitial = -5\n";
+        assert!(ScenarioSpec::from_toml_str(negative).is_err());
+        let neg_count =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"mass_join\"\nat_ms = 5\ncount = -1\n";
+        assert!(ScenarioSpec::from_toml_str(neg_count).is_err());
+        // a known field on the wrong kind is a spec bug, not a default
+        let wrong_kind =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"mass_fail\"\nat_ms = 5\ncount = 2\nfraction = 0.9\n";
+        assert!(ScenarioSpec::from_toml_str(wrong_kind).is_err());
+        // the minimal valid spec still parses
+        let ok = "[scenario]\ninitial = 10\n";
+        assert!(ScenarioSpec::from_toml_str(ok).is_ok());
+    }
+
+    #[test]
+    fn join_wave_scenario_converges_small() {
+        let mut spec = ScenarioSpec::fig8a_join_wave(30, 10, 1);
+        spec.overlay = small_overlay();
+        spec.net = fast_net(3);
+        spec.horizon = 30 * SEC;
+        spec.sample_every = 2 * SEC;
+        spec.settle = 240 * SEC;
+        let (sim, report) = spec.run_sim(None).expect("run");
+        assert_eq!(sim.nodes.len(), 40);
+        assert!(
+            report.settled_at.is_some(),
+            "join wave stuck at {}",
+            report.final_correctness
+        );
+        assert_eq!(report.counts.joins, 10);
+        assert_eq!(report.ring.ghost_entries, 0);
+        assert_eq!(report.ring.asymmetric_links, 0);
+        assert!((report.final_correctness - 1.0).abs() < 1e-12);
+        assert!(!report.correctness.is_empty());
+    }
+
+    #[test]
+    fn golden_lines_are_stable() {
+        let mut spec = ScenarioSpec::fig8b_mass_fail(24, 5, 2);
+        spec.overlay = small_overlay();
+        spec.net = fast_net(2);
+        spec.horizon = 20 * SEC;
+        spec.sample_every = 5 * SEC;
+        let (_, a) = spec.run_sim(None).expect("run a");
+        let (_, b) = spec.run_sim(None).expect("run b");
+        assert_eq!(a.golden_lines(), b.golden_lines());
+        assert!(a.golden_lines().starts_with("scenario=fig8b-mass-fail"));
+    }
+}

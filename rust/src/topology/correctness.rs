@@ -10,6 +10,33 @@ use std::collections::{BTreeMap, BTreeSet};
 /// themselves (NDMP state or simulator state).
 pub type NeighborSnapshot = BTreeMap<NodeId, BTreeSet<NodeId>>;
 
+/// All nodes' Definition-1 neighbor sets of a membership, with one ring
+/// sort per space — O(L·n log n) total. `Membership::correct_neighbors`
+/// rebuilds the rings per *node* (O(n log n) each), which is fine for
+/// spot checks but quadratic over a snapshot; every whole-network
+/// consumer (correctness metric, scenario quiescence, conformance
+/// ideals) goes through this batch path so 10k-node scenarios stay
+/// tractable.
+pub fn ideal_neighbor_sets(m: &Membership) -> NeighborSnapshot {
+    let mut out: NeighborSnapshot = m.nodes.keys().map(|&id| (id, BTreeSet::new())).collect();
+    for s in 0..m.spaces {
+        let ring = m.ring(s);
+        let n = ring.len();
+        if n < 2 {
+            continue;
+        }
+        for i in 0..n {
+            let a = ring[i].id;
+            let b = ring[(i + 1) % n].id;
+            if a != b {
+                out.get_mut(&a).unwrap().insert(b);
+                out.get_mut(&b).unwrap().insert(a);
+            }
+        }
+    }
+    out
+}
+
 /// Fraction of correct neighbor entries over required entries, following
 /// the paper: "the number of correct neighbors of all nodes over the total
 /// number of neighbors" of the ideal topology built from the live ids.
@@ -18,11 +45,11 @@ pub fn correctness(snapshot: &NeighborSnapshot, spaces: usize) -> f64 {
     for &id in snapshot.keys() {
         ideal.add(id);
     }
+    let want_all = ideal_neighbor_sets(&ideal);
     let mut required = 0usize;
     let mut present = 0usize;
-    for &id in snapshot.keys() {
-        let want = ideal.correct_neighbors(id);
-        let have = &snapshot[&id];
+    for (id, have) in snapshot {
+        let want = &want_all[id];
         required += want.len();
         present += want.iter().filter(|w| have.contains(w)).count();
     }
@@ -70,16 +97,17 @@ pub fn report(snapshot: &NeighborSnapshot, spaces: usize) -> CorrectnessReport {
     for &id in snapshot.keys() {
         ideal.add(id);
     }
+    let want_all = ideal_neighbor_sets(&ideal);
     let mut required = 0usize;
     let mut present = 0usize;
     let mut correct_nodes = 0usize;
     let mut missing = Vec::new();
     let mut extra = Vec::new();
     for (&id, have) in snapshot {
-        let want = ideal.correct_neighbors(id);
+        let want = &want_all[&id];
         required += want.len();
         let mut ok = true;
-        for &w in &want {
+        for &w in want {
             if have.contains(&w) {
                 present += 1;
             } else {

@@ -9,6 +9,7 @@ pub use coords::{
     ccw_arc, circular_distance, closer, cw_arc, Coord, NodeId, RingPoint, VirtualCoords,
 };
 pub use correctness::{
-    correctness, graph_from_snapshot, report, CorrectnessReport, NeighborSnapshot,
+    correctness, graph_from_snapshot, ideal_neighbor_sets, report, CorrectnessReport,
+    NeighborSnapshot,
 };
 pub use fedlay::{build_overlay, fedlay_graph, Membership};

@@ -1,0 +1,119 @@
+//! Golden-trajectory tests: one pinned seed per canonical scenario
+//! (Fig. 8a join wave, Fig. 8b mass fail, mixed Poisson churn) snapshots
+//! the correctness time series produced by the scenario engine on the
+//! deterministic in-memory transport. Any behavioral drift in the
+//! scheduler, the latency model, the NDMP engines, or scenario
+//! compilation shows up as a readable line-by-line diff.
+//!
+//! Snapshot workflow (insta-style, no external crates):
+//!   * goldens live in `tests/golden/<name>.txt`;
+//!   * a missing golden is blessed from the current run (first run on a
+//!     fresh scenario) — commit the generated file;
+//!   * an intentional change is re-blessed with `FEDLAY_BLESS=1`.
+
+use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::ndmp::messages::SEC;
+use fedlay::sim::ScenarioSpec;
+use std::fs;
+use std::path::PathBuf;
+
+fn overlay() -> OverlayConfig {
+    OverlayConfig {
+        spaces: 3,
+        heartbeat_ms: 500,
+        failure_multiple: 3,
+        repair_probe_ms: 2_000,
+    }
+}
+
+fn net(seed: u64) -> NetConfig {
+    NetConfig {
+        latency_ms: 350.0,
+        jitter: 0.2,
+        seed,
+    }
+}
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("golden")
+}
+
+fn diff_report(name: &str, want: &str, got: &str) -> String {
+    let mut out = format!(
+        "golden trajectory {name:?} diverged from tests/golden/{name}.txt.\n\
+         If the change is intentional, regenerate with `FEDLAY_BLESS=1 cargo test \
+         --test scenario_golden` and commit the new golden.\n"
+    );
+    let w: Vec<&str> = want.lines().collect();
+    let g: Vec<&str> = got.lines().collect();
+    let mut shown = 0;
+    for i in 0..w.len().max(g.len()) {
+        let a = w.get(i).copied().unwrap_or("<missing>");
+        let b = g.get(i).copied().unwrap_or("<missing>");
+        if a != b {
+            out.push_str(&format!(
+                "  line {:>3}: expected `{a}`\n            got      `{b}`\n",
+                i + 1
+            ));
+            shown += 1;
+            if shown >= 8 {
+                out.push_str("  ... (further differences elided)\n");
+                break;
+            }
+        }
+    }
+    out
+}
+
+fn run_golden(name: &str, spec: &ScenarioSpec) {
+    let (_, report) = spec.run_sim(None).expect("scenario run");
+    let got = report.golden_lines();
+    let path = golden_dir().join(format!("{name}.txt"));
+    let bless = std::env::var("FEDLAY_BLESS").is_ok();
+    if bless || !path.exists() {
+        fs::create_dir_all(golden_dir()).expect("create golden dir");
+        fs::write(&path, &got).expect("write golden");
+        if !bless {
+            eprintln!(
+                "golden {} was missing; blessed the current trajectory — commit it",
+                path.display()
+            );
+        }
+        return;
+    }
+    let want = fs::read_to_string(&path).expect("read golden");
+    if want != got {
+        panic!("{}", diff_report(name, &want, &got));
+    }
+}
+
+#[test]
+fn golden_fig8a_join_wave() {
+    let mut spec = ScenarioSpec::fig8a_join_wave(60, 15, 8);
+    spec.overlay = overlay();
+    spec.net = net(8);
+    spec.horizon = 60 * SEC;
+    spec.sample_every = 3 * SEC;
+    run_golden("fig8a_join_wave", &spec);
+}
+
+#[test]
+fn golden_fig8b_mass_fail() {
+    let mut spec = ScenarioSpec::fig8b_mass_fail(60, 15, 8);
+    spec.overlay = overlay();
+    spec.net = net(8);
+    spec.horizon = 60 * SEC;
+    spec.sample_every = 3 * SEC;
+    run_golden("fig8b_mass_fail", &spec);
+}
+
+#[test]
+fn golden_mixed_poisson() {
+    let mut spec = ScenarioSpec::poisson_mix(50, 10.0, 40 * SEC, 8);
+    spec.overlay = overlay();
+    spec.net = net(8);
+    spec.sample_every = 5 * SEC;
+    run_golden("mixed_poisson", &spec);
+}

@@ -1,0 +1,222 @@
+//! Model-based property tests over the scenario engine (polestar-style:
+//! proptest is not in the vendored set, so these are seeded sweeps with
+//! explicit shrinking). Each draw generates a random `ScenarioSpec` —
+//! arbitrary mixes of mass joins/failures/leaves, flash crowds, Poisson
+//! churn, and partition bursts — runs it on the overlay simulator, and
+//! asserts the NDMP invariants after quiescence:
+//!
+//!   * the live membership equals the compiled schedule's arithmetic
+//!     (initial + joins − fails − leaves; no lost joiners, no zombies),
+//!   * Definition-1 ring correctness is exactly 1.0 and the ring views
+//!     match the ideal overlay of the survivors,
+//!   * neighbor sets are symmetric and degree-bounded (≤ 2L),
+//!   * no node retains a ghost entry for a failed or departed node.
+//!
+//! On failure the spec is shrunk by deleting phases while the failure
+//! reproduces, and the minimal spec is reported as runnable TOML.
+
+use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::ndmp::messages::{MS, SEC};
+use fedlay::sim::scenario::ring_matches_ideal;
+use fedlay::sim::{
+    quiesce, ring_quality, ChurnCounts, ChurnOp, Phase, PhaseKind, ScenarioSpec,
+};
+use fedlay::topology::NodeId;
+use fedlay::util::Rng;
+use std::collections::BTreeSet;
+
+/// Draw a random scenario: 14–25 initial nodes, 2–3 spaces, 1–3 phases
+/// over the full kind vocabulary, at sizes small enough for CI.
+fn random_spec(seed: u64) -> ScenarioSpec {
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let initial = 14 + rng.index(12);
+    let spaces = 2 + rng.index(2);
+    let n_phases = 1 + rng.index(3);
+    let mut phases = Vec::new();
+    for p in 0..n_phases as u64 {
+        let at = (2 + 6 * p) * SEC + rng.index(2000) as u64 * MS;
+        let kind = match rng.index(6) {
+            0 => PhaseKind::MassJoin {
+                count: 2 + rng.index(5),
+            },
+            1 => PhaseKind::MassFail {
+                count: 2 + rng.index(4),
+            },
+            2 => PhaseKind::MassLeave {
+                count: 2 + rng.index(4),
+            },
+            3 => PhaseKind::FlashCrowd {
+                count: 2 + rng.index(4),
+                dwell: (4 + rng.index(8) as u64) * SEC,
+            },
+            4 => PhaseKind::PoissonChurn {
+                join_per_min: 2.0 + rng.next_f64() * 6.0,
+                fail_per_min: 1.0 + rng.next_f64() * 3.0,
+                leave_per_min: rng.next_f64() * 2.0,
+                window: (10 + rng.index(10) as u64) * SEC,
+            },
+            _ => PhaseKind::Partition {
+                fraction: 0.1 + rng.next_f64() * 0.15,
+            },
+        };
+        phases.push(Phase { at, kind });
+    }
+    ScenarioSpec {
+        name: format!("prop-{seed}"),
+        initial,
+        seed,
+        horizon: 30 * SEC,
+        sample_every: 0,
+        settle: 0,
+        min_live: (initial / 2).max(4),
+        overlay: OverlayConfig {
+            spaces,
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        },
+        net: NetConfig {
+            latency_ms: 60.0,
+            jitter: 0.2,
+            seed,
+        },
+        phases,
+    }
+}
+
+/// Run one spec and verify every invariant; `Err` carries a readable
+/// description of the first violation.
+fn check(spec: &ScenarioSpec) -> Result<(), String> {
+    // the engine itself must run past the whole compiled schedule (even
+    // Poisson tails spilling past the horizon) — no manual extension here
+    let events = spec.compile();
+    let counts = ChurnCounts::of(&events);
+    let (mut sim, report) = spec.run_sim(None).map_err(|e| e.to_string())?;
+    if report.counts != counts {
+        return Err("report/schedule churn counts disagree".into());
+    }
+
+    // quiesce: rings must converge to the ideal overlay of the survivors
+    let deadline = sim.now + 420 * SEC;
+    if quiesce(&mut sim, deadline, 2 * SEC).is_none() {
+        return Err(format!(
+            "no quiescence by t={}s: correctness {:.4}, {} live",
+            sim.now / SEC,
+            sim.correctness(),
+            sim.nodes.len()
+        ));
+    }
+
+    // membership arithmetic: exactly the scheduled joins entered, exactly
+    // the scheduled fails/leaves left
+    let mut expected: BTreeSet<NodeId> = (0..spec.initial as NodeId).collect();
+    let mut removed: BTreeSet<NodeId> = BTreeSet::new();
+    for e in &events {
+        match e.op {
+            ChurnOp::Join { node, .. } => {
+                expected.insert(node);
+            }
+            ChurnOp::Fail { node } | ChurnOp::Leave { node } => {
+                expected.remove(&node);
+                removed.insert(node);
+            }
+        }
+    }
+    let live: BTreeSet<NodeId> = sim.nodes.keys().copied().collect();
+    if live != expected {
+        let lost: Vec<_> = expected.difference(&live).collect();
+        let zombies: Vec<_> = live.difference(&expected).collect();
+        return Err(format!(
+            "membership mismatch: lost {lost:?}, zombies {zombies:?} \
+             (initial {} + {} joins - {} fails - {} leaves)",
+            spec.initial, counts.joins, counts.fails, counts.leaves
+        ));
+    }
+
+    // ring quality: symmetric, degree-bounded, correctness exactly 1.0
+    let q = ring_quality(&sim);
+    if (q.correctness - 1.0).abs() > 1e-12 {
+        return Err(format!("ring correctness {:.6} != 1.0", q.correctness));
+    }
+    if q.asymmetric_links != 0 {
+        return Err(format!("{} asymmetric ring links", q.asymmetric_links));
+    }
+    if q.ghost_entries != 0 {
+        return Err(format!("{} ghost ring entries", q.ghost_entries));
+    }
+    if q.max_degree > 2 * spec.overlay.spaces {
+        return Err(format!(
+            "degree bound violated: {} > 2L = {}",
+            q.max_degree,
+            2 * spec.overlay.spaces
+        ));
+    }
+
+    // ghost entries for departed nodes must also drain from the peer
+    // tables (failure detection purges them after 3 silent heartbeats)
+    sim.run_until(sim.now + 10_000 * MS);
+    for (id, nbrs) in sim.snapshot() {
+        if let Some(g) = nbrs.iter().find(|n| removed.contains(n)) {
+            return Err(format!("node {id} still references departed node {g}"));
+        }
+    }
+    if !ring_matches_ideal(&sim) {
+        return Err("rings drifted off the ideal after quiescence".into());
+    }
+    Ok(())
+}
+
+/// Delete phases one at a time while the failure still reproduces.
+fn shrink(spec: &ScenarioSpec) -> ScenarioSpec {
+    let mut cur = spec.clone();
+    loop {
+        let mut reduced = None;
+        if cur.phases.len() > 1 {
+            for i in 0..cur.phases.len() {
+                let mut cand = cur.clone();
+                cand.phases.remove(i);
+                if check(&cand).is_err() {
+                    reduced = Some(cand);
+                    break;
+                }
+            }
+        }
+        match reduced {
+            Some(c) => cur = c,
+            None => return cur,
+        }
+    }
+}
+
+#[test]
+fn property_random_scenarios_restore_ndmp_invariants() {
+    for seed in 0..5u64 {
+        let spec = random_spec(seed);
+        if let Err(msg) = check(&spec) {
+            let minimal = shrink(&spec);
+            let err = check(&minimal).err().unwrap_or(msg);
+            panic!(
+                "seed {seed}: NDMP invariant violated: {err}\n\
+                 minimal failing spec (save and replay with \
+                 `fedlay scenario run`):\n{}",
+                minimal.to_toml()
+            );
+        }
+    }
+}
+
+#[test]
+fn property_compile_is_deterministic_and_round_trips() {
+    for seed in 0..20u64 {
+        let spec = random_spec(seed);
+        assert_eq!(spec.compile(), spec.compile(), "seed {seed}: nondeterministic");
+        let back = ScenarioSpec::from_toml_str(&spec.to_toml())
+            .unwrap_or_else(|e| panic!("seed {seed}: round trip parse failed: {e}"));
+        assert_eq!(spec, back, "seed {seed}: spec changed across TOML round trip");
+        assert_eq!(
+            spec.compile(),
+            back.compile(),
+            "seed {seed}: schedule changed across TOML round trip"
+        );
+    }
+}

@@ -1,0 +1,118 @@
+//! 10,000-client scale: a `PoissonChurn` scenario driving the *full*
+//! unified trainer (frozen training, real NDMP overlay, real MEP
+//! aggregation paths) on the in-memory transport. Exercises the
+//! neighbor-set cache (`Trainer::neighbor_cache_stats`) that makes
+//! `Neighborhood::Dynamic` tractable at this scale, the batch
+//! Definition-1 ideal computation, and the O(L·n log n) bootstrap.
+//!
+//! Ignored under plain `cargo test` (it is a release-mode budget test,
+//! < 120 s); CI runs it explicitly:
+//!   cargo test --release --test scenario_scale -- --ignored
+
+use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
+use fedlay::data::shard_labels;
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::ndmp::messages::{Time, SEC};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::sim::{quiesce, ChurnOp, Phase, PhaseKind, ScenarioSpec};
+
+const MIN: Time = 60 * SEC;
+
+#[test]
+#[ignore = "10k-client release-mode scale run; CI invokes it explicitly"]
+fn poisson_churn_scenario_scales_to_10k_clients() -> anyhow::Result<()> {
+    let n = 10_000usize;
+    // slow maintenance timers: at 10k nodes a 30 s heartbeat keeps the
+    // protocol load proportionate to the 30-minute training horizon
+    let overlay = OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 30_000,
+        failure_multiple: 3,
+        repair_probe_ms: 60_000,
+    };
+    let net = NetConfig {
+        latency_ms: 100.0,
+        jitter: 0.1,
+        seed: 71,
+    };
+    let spec = ScenarioSpec {
+        name: "poisson-10k".into(),
+        initial: n,
+        seed: 71,
+        horizon: 30 * MIN,
+        sample_every: 30 * MIN, // endpoints only: eval cost, not protocol
+        settle: 0,
+        min_live: n / 2,
+        overlay: overlay.clone(),
+        net: net.clone(),
+        phases: vec![Phase {
+            at: MIN,
+            kind: PhaseKind::PoissonChurn {
+                join_per_min: 8.0,
+                fail_per_min: 5.0,
+                leave_per_min: 3.0,
+                window: 10 * MIN,
+            },
+        }],
+    };
+    let events = spec.compile();
+    let joins = events
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    assert!(joins > 0, "scenario scheduled no joins");
+
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: n,
+        local_steps: 1,
+        seed: 71,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(n + joins, 10, cfg.shards_per_client, cfg.seed);
+    let mut trainer = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay, net),
+        cfg,
+        weights[..n].to_vec(),
+    )?;
+    // scalability mode (Fig. 20 methodology): protocol, exchange, and
+    // aggregation all run for real; only the SGD inner loop is skipped
+    trainer.freeze_training = true;
+
+    let report = spec.run_trainer(&mut trainer, |id| weights[id].clone())?;
+
+    // the neighbor cache must carry the steady-state load
+    assert!(
+        report.cache_hits > report.cache_misses,
+        "cache not effective: {} hits / {} misses",
+        report.cache_hits,
+        report.cache_misses
+    );
+    assert!(
+        report.cache_hits + report.cache_misses >= n as u64,
+        "every client should consult its neighborhood at least once"
+    );
+
+    // membership arithmetic holds at scale
+    assert_eq!(
+        report.live_nodes,
+        n + report.counts.joins - report.counts.fails - report.counts.leaves,
+        "lost or zombie overlay members"
+    );
+    assert!(report.accuracy.iter().all(|(_, a)| a.is_finite()));
+
+    // the overlay must repair to the exact ideal rings after the churn
+    // window (~19 quiet minutes already elapsed; allow 20 more)
+    let sim = trainer.overlay.as_mut().expect("dynamic overlay state");
+    let deadline = sim.now + 20 * MIN;
+    let settled = quiesce(sim, deadline, 2 * MIN);
+    assert!(
+        settled.is_some(),
+        "10k overlay did not quiesce: correctness {:.4}",
+        sim.correctness()
+    );
+    Ok(())
+}

@@ -17,7 +17,7 @@ use fedlay::dfl::{MethodSpec, Trainer};
 use fedlay::net::SchedTransport;
 use fedlay::ndmp::messages::{Time, SEC};
 use fedlay::runtime::{find_artifacts_dir, Engine};
-use fedlay::sim::Simulator;
+use fedlay::sim::{ChurnCounts, Phase, PhaseKind, ScenarioSpec, Simulator};
 use fedlay::topology::{Membership, NeighborSnapshot, NodeId};
 
 const SPACES: usize = 2;
@@ -109,6 +109,65 @@ fn sim_and_tcp_backends_agree_on_churn_schedule() {
         sim.ring_snapshot(),
         tcp.ring_snapshot(),
         "backends converged to different overlays"
+    );
+}
+
+/// Scenario-engine conformance with *graceful leaves* on the wire: a
+/// flash crowd (joins followed by scheduled departures) plus a mass
+/// leave, compiled once by `ScenarioSpec` and replayed on both backends.
+/// The TCP path must carry the Leave handshake (not just crash-fail
+/// teardown) to land on the same overlay as the in-memory network.
+#[test]
+fn scenario_with_leaves_agrees_on_both_backends() {
+    let spec = ScenarioSpec {
+        name: "leave-conformance".into(),
+        initial: 10,
+        seed: 21,
+        horizon: 14 * SEC,
+        sample_every: 0,
+        settle: 0,
+        min_live: 4,
+        overlay: overlay(),
+        net: net(),
+        phases: vec![
+            // mass leave first (victim drawn from the originals only, so
+            // the flash-crowd departures below stay scheduled)
+            Phase {
+                at: SEC,
+                kind: PhaseKind::MassLeave { count: 1 },
+            },
+            Phase {
+                at: 2 * SEC,
+                kind: PhaseKind::FlashCrowd {
+                    count: 2,
+                    dwell: 8 * SEC,
+                },
+            },
+        ],
+    };
+    let counts = ChurnCounts::of(&spec.compile());
+    assert_eq!(counts.joins, 2);
+    assert_eq!(counts.leaves, 3, "schedule must exercise graceful leaves");
+
+    let (mut sim, sim_report) = spec.run_sim(None).expect("sim run");
+    let (mut tcp, tcp_report) = spec
+        .run_sim(Some(Box::new(SchedTransport::new())))
+        .expect("tcp run");
+    assert_eq!(sim_report.backend, "sim");
+    assert_eq!(tcp_report.backend, "tcp");
+
+    settle_exact(&mut sim, 420 * SEC);
+    settle_exact(&mut tcp, 420 * SEC);
+    let sim_ids: Vec<NodeId> = sim.nodes.keys().copied().collect();
+    let tcp_ids: Vec<NodeId> = tcp.nodes.keys().copied().collect();
+    assert_eq!(sim_ids, tcp_ids, "backends disagree on live membership");
+    assert_eq!(sim_ids.len(), 10 + 2 - 3);
+    assert!((sim.correctness() - 1.0).abs() < 1e-12, "sim not correct");
+    assert!((tcp.correctness() - 1.0).abs() < 1e-12, "tcp not correct");
+    assert_eq!(
+        sim.ring_snapshot(),
+        tcp.ring_snapshot(),
+        "backends converged to different overlays after leaves"
     );
 }
 
