@@ -84,7 +84,7 @@ fn main() -> anyhow::Result<()> {
     }
     trainer.run(horizon, sample)?;
     let mut t = Table::new(&["t (min)", "mean acc", "mean loss"]);
-    for s in &trainer.samples {
+    for s in trainer.samples() {
         t.row(&[
             format!("{:.0}", s.at as f64 / 60e6),
             format!("{:.4}", s.mean_accuracy),
@@ -92,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     print!("{}", t.render());
-    let last = trainer.samples.last().unwrap().clone();
+    let last = trainer.samples().last().unwrap().clone();
 
     // --- per-client accuracy CDF (paper Fig. 9d-f analogue) ---
     println!("\nper-client accuracy CDF at convergence:");
@@ -116,7 +116,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "  model payload: {:.2} MB/client, dedup skips: {}",
         trainer.model_mb_per_client(),
-        trainer.clients.iter().map(|c| c.dedup_skips).sum::<u64>()
+        trainer.clients().iter().map(|c| c.dedup_skips).sum::<u64>()
     );
     println!(
         "  train steps/client: {:.1}",
@@ -131,20 +131,20 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(0.0);
     println!(
         "\nphase 4 — churn: overlay correctness {churn_correct:.3} with {} live nodes",
-        trainer.clients.iter().filter(|c| c.alive).count()
+        trainer.clients().iter().filter(|c| c.alive).count()
     );
     anyhow::ensure!(
         churn_correct > 0.999,
         "NDMP did not repair/extend the overlay under churn"
     );
-    let base = trainer.samples[0].mean_accuracy;
+    let base = trainer.samples()[0].mean_accuracy;
     anyhow::ensure!(
         last.mean_accuracy > base + 0.25,
         "training did not improve enough: {base:.3} -> {:.3}",
         last.mean_accuracy
     );
     anyhow::ensure!(
-        last.mean_loss < trainer.samples[0].mean_loss,
+        last.mean_loss < trainer.samples()[0].mean_loss,
         "loss did not decrease"
     );
     println!("\nend_to_end_dfl OK (acc {:.3} -> {:.3})", base, last.mean_accuracy);

@@ -47,6 +47,7 @@ fn main() -> anyhow::Result<()> {
             overlay: overlay.clone(),
             artifacts_dir: dir.clone(),
             task: "mlp".into(),
+            task_id: 0,
             label_weights: shards[id as usize].clone(),
             lr: 0.5,
             local_steps: 2,

@@ -63,7 +63,7 @@ fn main() -> anyhow::Result<()> {
     let mut trainer = Trainer::new(&engine, spec, dfl_cfg, weights)?;
     trainer.run(120 * 60 * 1_000_000, 30 * 60 * 1_000_000)?;
     let mut t = Table::new(&["t (min)", "mean accuracy", "mean loss"]);
-    for s in &trainer.samples {
+    for s in trainer.samples() {
         t.row(&[
             format!("{:.0}", s.at as f64 / 60e6),
             format!("{:.4}", s.mean_accuracy),

@@ -35,11 +35,11 @@ fn main() -> anyhow::Result<()> {
     let dds = run_method(&engine, MethodSpec::dfl_dds(7), &cfg, minutes, sample)?;
 
     let t = curves_table(&[
-        ("fedlay d=10", &fed.samples),
-        ("fedavg", &fedavg.samples),
-        ("gaia", &gaia.samples),
-        ("chord", &chord.samples),
-        ("dfl-dds", &dds.samples),
+        ("fedlay d=10", fed.samples()),
+        ("fedavg", fedavg.samples()),
+        ("gaia", gaia.samples()),
+        ("chord", chord.samples()),
+        ("dfl-dds", dds.samples()),
     ]);
     print!("{}", t.render());
 

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.3}", final_acc(&gaia)),
         ]);
         // Fig. 11c: per-client distribution
-        let last = fed.samples.last().unwrap();
+        let last = fed.samples().last().unwrap();
         let spread = last.per_client.iter().cloned().fold(f64::MIN, f64::max)
             - last.per_client.iter().cloned().fold(f64::MAX, f64::min);
         spreads.push((shards, spread));

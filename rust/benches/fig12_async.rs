@@ -37,15 +37,15 @@ fn main() -> anyhow::Result<()> {
         println!("=== Fig. 12 ({task}) ===");
         print!(
             "{}",
-            curves_table(&[("async", &a.samples), ("sync", &s.samples)]).render()
+            curves_table(&[("async", a.samples()), ("sync", s.samples())]).render()
         );
         let fmt_t = |o: Option<f64>| o.map(|m| format!("{m:.0}m")).unwrap_or("-".into());
         summary.row(&[
             task.to_string(),
             format!("{:.3}", final_acc(&a)),
             format!("{:.3}", final_acc(&s)),
-            fmt_t(minutes_to_accuracy(&a.samples, 0.5)),
-            fmt_t(minutes_to_accuracy(&s.samples, 0.5)),
+            fmt_t(minutes_to_accuracy(a.samples(), 0.5)),
+            fmt_t(minutes_to_accuracy(s.samples(), 0.5)),
         ]);
         // Deviation note (EXPERIMENTS.md): on the synthetic substrate the
         // two modes end close; async's paper advantage is wall-clock
@@ -83,7 +83,7 @@ fn main() -> anyhow::Result<()> {
             println!("=== Fig. 12 churn variant (mlp, live NDMP overlay) ===");
             print!(
                 "{}",
-                curves_table(&[("async", &a.samples), ("async+churn", &c.samples)]).render()
+                curves_table(&[("async", a.samples()), ("async+churn", c.samples())]).render()
             );
             let correctness = c.overlay.as_ref().map(|s| s.correctness()).unwrap_or(0.0);
             println!("overlay correctness after churn: {correctness:.3}");

@@ -88,7 +88,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     print!(
         "{}",
-        curves_table(&[("fedlay d=10", &fed.samples), ("chord", &chord.samples)]).render()
+        curves_table(&[("fedlay d=10", fed.samples()), ("chord", chord.samples())]).render()
     );
 
     // shape checks

@@ -15,8 +15,8 @@ use fedlay::runtime::{find_artifacts_dir, Engine};
 fn steps_to_target(tr: &Trainer, target: f64) -> Option<f64> {
     // samples record accuracy over time; train steps accrue linearly with
     // wakes, so interpolate cost at the first sample reaching the target.
-    let hit = tr.samples.iter().position(|s| s.mean_accuracy >= target)?;
-    let frac = tr.samples[hit].at as f64 / tr.samples.last().unwrap().at.max(1) as f64;
+    let hit = tr.samples().iter().position(|s| s.mean_accuracy >= target)?;
+    let frac = tr.samples()[hit].at as f64 / tr.samples().last().unwrap().at.max(1) as f64;
     Some(tr.train_steps_per_client() * frac)
 }
 

@@ -35,8 +35,8 @@ fn main() -> anyhow::Result<()> {
     print!(
         "{}",
         curves_table(&[
-            ("confidence (a_d=a_c=0.5)", &with.samples),
-            ("simple average", &without.samples),
+            ("confidence (a_d=a_c=0.5)", with.samples()),
+            ("simple average", without.samples()),
         ])
         .render()
     );

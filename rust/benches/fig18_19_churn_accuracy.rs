@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let pre_acc = t
-        .samples
+        .samples()
         .iter()
         .filter(|s| s.at < join_at)
         .last()
@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== Fig. 18: accuracy of original vs newly joined nodes ===");
     let mut table = Table::new(&["t (min)", "original", "new joiners"]);
-    for s in &t.samples {
+    for s in t.samples() {
         let old_acc = cohort_acc(s, 0..half);
         let new_acc = cohort_acc(s, half..2 * half);
         table.row(&[
@@ -103,11 +103,11 @@ fn main() -> anyhow::Result<()> {
 
     // Fig. 19: the per-client CDF at join time vs at the end
     let first = t
-        .samples
+        .samples()
         .iter()
         .find(|s| s.at >= join_at)
         .expect("no post-join sample");
-    let last = t.samples.last().unwrap();
+    let last = t.samples().last().unwrap();
     println!("\n=== Fig. 19: per-client accuracy CDF ===");
     println!("at join time:");
     for (a, f) in cdf_points(&first.per_client) {

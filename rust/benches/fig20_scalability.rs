@@ -23,7 +23,7 @@ fn pool_models(engine: &Engine, cfg: &DflConfig, pool: usize) -> anyhow::Result<
     let w = shard_labels(pool, 10, pool_cfg.shards_per_client, pool_cfg.seed);
     let mut tr = Trainer::new(engine, MethodSpec::fedlay(pool, 3), pool_cfg, w)?;
     tr.run(scaled(120u64, 600) * 60_000_000, 60 * 60_000_000)?;
-    Ok(tr.clients.into_iter().map(|c| c.params).collect())
+    Ok(tr.into_clients().into_iter().map(|c| c.params).collect())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
         let w = shard_labels(n, 10, cfg.shards_per_client, cfg.seed);
         // Fig. 20b: accuracy stability with reused models
         let mut tr = Trainer::new(&engine, MethodSpec::fedlay(n, 3), cfg.clone(), w.clone())?;
-        for (i, c) in tr.clients.iter_mut().enumerate() {
+        for (i, c) in tr.clients_mut().iter_mut().enumerate() {
             c.params = pool[i % pool.len()].clone();
         }
         tr.freeze_training = true;
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             MethodSpec::dfl_dds(3),
         ] {
             let mut t = Trainer::new(&engine, spec, cfg.clone(), w.clone())?;
-            for (i, c) in t.clients.iter_mut().enumerate() {
+            for (i, c) in t.clients_mut().iter_mut().enumerate() {
                 c.params = pool[i % pool.len()].clone();
             }
             t.freeze_training = true;

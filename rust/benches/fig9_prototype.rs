@@ -46,9 +46,9 @@ fn main() -> anyhow::Result<()> {
         let gaia = run_method(&engine, MethodSpec::gaia(16, 4), &cfg, minutes, sample)?;
         let dds = run_method(&engine, MethodSpec::dfl_dds(3), &cfg, minutes, sample)?;
         let t = curves_table(&[
-            ("fedlay d=4", &fed.samples),
-            ("gaia", &gaia.samples),
-            ("dfl-dds", &dds.samples),
+            ("fedlay d=4", fed.samples()),
+            ("gaia", gaia.samples()),
+            ("dfl-dds", dds.samples()),
         ]);
         print!("{}", t.render());
         println!(
@@ -58,7 +58,7 @@ fn main() -> anyhow::Result<()> {
             final_acc(&dds)
         );
         // Fig. 9d-f: per-client CDF at convergence for FedLay
-        let last = fed.samples.last().unwrap();
+        let last = fed.samples().last().unwrap();
         println!("fedlay per-client accuracy CDF at convergence:");
         for (acc, frac) in cdf_points(&last.per_client) {
             println!("  {acc:.3} -> {frac:.2}");

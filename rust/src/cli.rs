@@ -107,22 +107,29 @@ USAGE:
                   [--set overlay.spaces=L] [--set net.latency_ms=350]
   fedlay scenario run <spec.toml>  [--transport sim|tcp] [--trainer]
                                    [--freeze] [--task mlp]
+                                   [--tasks <tasks.toml>]
   fedlay scenario show <spec.toml>
                   (declarative churn scenarios — TOML format in
                    docs/scenarios.md, examples under configs/scenarios/;
                    `run` drives a bare overlay simulation, or with
                    --trainer a full fedlay-dyn training run whose join
-                   wave enters through the NDMP protocol; `show` prints
-                   the compiled event schedule without running it)
+                   wave enters through the NDMP protocol; --trainer
+                   --tasks runs every task of a multi-task spec over the
+                   one churned overlay; `show` prints the compiled event
+                   schedule without running it)
   fedlay train    [--method fedlay|fedlay-dyn|fedavg|gaia|dfl-dds|chord]
                   [--set dfl.task=mlp] [--set dfl.clients=16]
                   [--minutes M] [--sample-minutes S]
                   [--joins J] [--fails F] [--churn-at-min T]
                   [--transport sim|tcp]
+                  [--tasks <tasks.toml>]
                   (fedlay-dyn runs on the live NDMP overlay; --joins adds
                    J clients mid-run through the protocol join; --transport
                    tcp carries that overlay's messages over real localhost
-                   sockets instead of the in-memory simulated network)
+                   sockets instead of the in-memory simulated network;
+                   --tasks runs the multi-task engine — N model tasks from
+                   a TOML spec, docs/multitask.md, over one shared
+                   overlay, one accuracy column per task)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
                   (one real TCP client; spawn several for a live network)
 

@@ -1,7 +1,9 @@
 //! Config system: a TOML-subset parser plus typed experiment schemas.
 
 pub mod schema;
+pub mod tasks;
 pub mod toml;
 
 pub use schema::{CapacityConfig, Config, DflConfig, NetConfig, OverlayConfig};
+pub use tasks::{MultiTaskSpec, TaskSpec};
 pub use toml::{Doc, ParseError, Value};

@@ -1,0 +1,366 @@
+//! Multi-task training specifications: the `TaskSpec` describing one
+//! model task (dataset shards, model, MEP period, seeds) and the
+//! `MultiTaskSpec` bundle the multi-task engine consumes — N independent
+//! tasks trained by one `dfl::Trainer` over a single shared overlay.
+//!
+//! Serializable to the repo's TOML subset (`fedlay train --tasks
+//! <spec.toml>`; format documented in `docs/multitask.md`, runnable
+//! examples under `configs/tasks/`). Parsing follows the scenario-spec
+//! rules: unknown keys and wrong-typed values fail loudly instead of
+//! silently running a different experiment.
+
+use super::schema::DflConfig;
+use super::toml::Doc;
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+
+/// One model task riding the shared overlay: its own dataset shards,
+/// model (and therefore parameter dimensionality), MEP exchange period,
+/// and seed — everything per-task the trainer needs for one lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    /// Unique label of the task (reports, golden lines, CLI tables).
+    pub name: String,
+    /// Runtime model task in the artifact manifest: "mlp" | "cnn" | "lstm".
+    pub task: String,
+    /// Label shards per client (non-iid level) for this task's data.
+    pub shards_per_client: usize,
+    /// Local SGD steps per wake.
+    pub local_steps: usize,
+    pub lr: f32,
+    /// Base MEP communication period for medium-capacity clients (ms of
+    /// simulated time); capacity tiers scale it per client.
+    pub comm_period_ms: u64,
+    /// Task-local seed: initialization, shards, data streams, eval
+    /// batches, and wake staggering all derive from it, so a task's
+    /// trajectory is a pure function of its own spec (task isolation).
+    pub seed: u64,
+}
+
+impl TaskSpec {
+    /// The single-task spec equivalent to a legacy `DflConfig` run — the
+    /// multi-task engine with exactly this one lane reproduces the
+    /// single-task trainer bit for bit.
+    pub fn from_dfl(cfg: &DflConfig) -> Self {
+        Self {
+            name: cfg.task.clone(),
+            task: cfg.task.clone(),
+            shards_per_client: cfg.shards_per_client,
+            local_steps: cfg.local_steps,
+            lr: cfg.lr,
+            comm_period_ms: cfg.comm_period_ms,
+            seed: cfg.seed,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.name.is_empty(), "task name must be non-empty");
+        // names ride inside quoted TOML strings (`to_toml`) and golden
+        // lines; quotes, backslashes and control characters would break
+        // the round trip
+        ensure!(
+            !self.name.chars().any(|c| c == '"' || c == '\\' || c.is_control()),
+            "task name {:?} must not contain quotes, backslashes or control characters",
+            self.name
+        );
+        ensure!(!self.task.is_empty(), "task model must be non-empty");
+        ensure!(self.lr > 0.0, "task {}: lr must be positive", self.name);
+        ensure!(
+            self.comm_period_ms > 0,
+            "task {}: comm_period_ms must be positive",
+            self.name
+        );
+        ensure!(
+            self.shards_per_client >= 1,
+            "task {}: shards_per_client must be >= 1",
+            self.name
+        );
+        Ok(())
+    }
+}
+
+/// A bundle of independent model tasks for one multi-task run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MultiTaskSpec {
+    pub tasks: Vec<TaskSpec>,
+}
+
+/// Every field a `[task.N]` table may contain.
+const TASK_FIELDS: &[&str] = &[
+    "name",
+    "model",
+    "shards_per_client",
+    "local_steps",
+    "lr",
+    "comm_period_ms",
+    "seed",
+];
+
+impl MultiTaskSpec {
+    pub fn load(path: &std::path::Path) -> Result<MultiTaskSpec> {
+        let doc = Doc::parse_file(path)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_toml_str(text: &str) -> Result<MultiTaskSpec> {
+        let doc = Doc::parse(text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Parse `[task.N]` tables. Absent fields default from
+    /// `DflConfig::default()`, except `seed` which defaults to a
+    /// per-index derivation (so two default lanes never train clones of
+    /// the same model) and `name` which defaults to `<model>-N`.
+    ///
+    /// A `[task.N]` table must set at least one field: the TOML-subset
+    /// parser keeps only `key = value` entries, so a bare section header
+    /// is invisible to this layer and cannot be declared as a lane.
+    pub fn from_doc(doc: &Doc) -> Result<MultiTaskSpec> {
+        let dd = DflConfig::default();
+        let mut indices: BTreeSet<u64> = BTreeSet::new();
+        for key in doc.keys_with_prefix("") {
+            let Some(rest) = key.strip_prefix("task.") else {
+                anyhow::bail!(
+                    "unknown task-spec key {key:?} (see docs/multitask.md for the format)"
+                );
+            };
+            let Some((idx, field)) = rest.split_once('.') else {
+                anyhow::bail!("malformed task-spec key {key:?}");
+            };
+            // the index must be in canonical form: `[task.01]` would
+            // parse as 1 here but its fields would be looked up under
+            // `task.1.*` and silently run the lane on defaults
+            let canonical = idx.parse::<u64>().is_ok_and(|v| v.to_string() == idx);
+            ensure!(
+                canonical && TASK_FIELDS.contains(&field),
+                "unknown task-spec key {key:?} (see docs/multitask.md for the format)"
+            );
+            indices.insert(idx.parse::<u64>().unwrap());
+        }
+        ensure!(
+            !indices.is_empty(),
+            "task spec declares no [task.N] tables"
+        );
+        let mut tasks = Vec::new();
+        for i in indices {
+            let path = |field: &str| format!("task.{i}.{field}");
+            let model = str_key(doc, &path("model"))?
+                .unwrap_or(&dd.task)
+                .to_string();
+            let name = str_key(doc, &path("name"))?
+                .map(str::to_string)
+                .unwrap_or_else(|| format!("{model}-{i}"));
+            tasks.push(TaskSpec {
+                name,
+                task: model,
+                shards_per_client: uint_key(doc, &path("shards_per_client"))?
+                    .map(|v| v as usize)
+                    .unwrap_or(dd.shards_per_client),
+                local_steps: uint_key(doc, &path("local_steps"))?
+                    .map(|v| v as usize)
+                    .unwrap_or(dd.local_steps),
+                lr: float_key(doc, &path("lr"))?.unwrap_or(dd.lr as f64) as f32,
+                comm_period_ms: uint_key(doc, &path("comm_period_ms"))?
+                    .map(|v| v as u64)
+                    .unwrap_or(dd.comm_period_ms),
+                seed: uint_key(doc, &path("seed"))?
+                    .map(|v| v as u64)
+                    .unwrap_or(dd.seed ^ (i << 8)),
+            });
+        }
+        let spec = MultiTaskSpec { tasks };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.tasks.is_empty(), "at least one task is required");
+        let mut names = BTreeSet::new();
+        for t in &self.tasks {
+            t.validate()?;
+            ensure!(
+                names.insert(t.name.as_str()),
+                "duplicate task name {:?}",
+                t.name
+            );
+        }
+        Ok(())
+    }
+
+    /// Distinct runtime model tasks, in first-appearance order — what the
+    /// engine must load.
+    pub fn model_tasks(&self) -> Vec<&str> {
+        let mut seen = BTreeSet::new();
+        self.tasks
+            .iter()
+            .map(|t| t.task.as_str())
+            .filter(|m| seen.insert(*m))
+            .collect()
+    }
+
+    /// Serialize to the TOML subset `from_doc` parses (round-trips).
+    pub fn to_toml(&self) -> String {
+        let mut s = String::new();
+        for (i, t) in self.tasks.iter().enumerate() {
+            s.push_str(&format!("[task.{}]\n", i + 1));
+            s.push_str(&format!("name = \"{}\"\n", t.name));
+            s.push_str(&format!("model = \"{}\"\n", t.task));
+            s.push_str(&format!("shards_per_client = {}\n", t.shards_per_client));
+            s.push_str(&format!("local_steps = {}\n", t.local_steps));
+            s.push_str(&format!("lr = {}\n", t.lr));
+            s.push_str(&format!("comm_period_ms = {}\n", t.comm_period_ms));
+            s.push_str(&format!("seed = {}\n", t.seed));
+            if i + 1 < self.tasks.len() {
+                s.push('\n');
+            }
+        }
+        s
+    }
+}
+
+/// String key: absent is fine, present-but-not-a-string is an error (a
+/// bare number would otherwise silently fall back to the default model
+/// or name — the exact silent-misconfiguration this module rejects).
+fn str_key<'d>(doc: &'d Doc, key: &str) -> Result<Option<&'d str>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{key} must be a string, got {v}")),
+    }
+}
+
+/// Non-negative integer key (negatives would wrap through the casts).
+fn uint_key(doc: &Doc, key: &str) -> Result<Option<i64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let i = v
+                .as_int()
+                .ok_or_else(|| anyhow::anyhow!("{key} must be an integer, got {v}"))?;
+            ensure!(i >= 0, "{key} must be non-negative, got {i}");
+            Ok(Some(i))
+        }
+    }
+}
+
+fn float_key(doc: &Doc, key: &str) -> Result<Option<f64>> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_float()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("{key} must be a number, got {v}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_dfl_mirrors_the_legacy_config() {
+        let cfg = DflConfig::default();
+        let t = TaskSpec::from_dfl(&cfg);
+        assert_eq!(t.task, cfg.task);
+        assert_eq!(t.seed, cfg.seed);
+        assert_eq!(t.comm_period_ms, cfg.comm_period_ms);
+        assert_eq!(t.local_steps, cfg.local_steps);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_two_task_spec() {
+        let text = "\
+[task.1]
+name = \"digits-a\"
+model = \"mlp\"
+comm_period_ms = 200000
+seed = 5
+
+[task.2]
+name = \"chars\"
+model = \"lstm\"
+local_steps = 2
+lr = 0.3
+";
+        let spec = MultiTaskSpec::from_toml_str(text).unwrap();
+        assert_eq!(spec.tasks.len(), 2);
+        assert_eq!(spec.tasks[0].name, "digits-a");
+        assert_eq!(spec.tasks[0].comm_period_ms, 200_000);
+        assert_eq!(spec.tasks[0].seed, 5);
+        assert_eq!(spec.tasks[1].task, "lstm");
+        assert_eq!(spec.tasks[1].local_steps, 2);
+        assert!((spec.tasks[1].lr - 0.3).abs() < 1e-6);
+        assert_eq!(spec.model_tasks(), vec!["mlp", "lstm"]);
+    }
+
+    #[test]
+    fn default_seeds_differ_per_lane() {
+        let text = "[task.1]\nmodel = \"mlp\"\n[task.2]\nmodel = \"mlp\"\n";
+        let spec = MultiTaskSpec::from_toml_str(text).unwrap();
+        assert_ne!(spec.tasks[0].seed, spec.tasks[1].seed);
+        assert_ne!(spec.tasks[0].name, spec.tasks[1].name);
+    }
+
+    #[test]
+    fn round_trips_through_toml() {
+        let spec = MultiTaskSpec {
+            tasks: vec![
+                TaskSpec {
+                    name: "a".into(),
+                    task: "mlp".into(),
+                    shards_per_client: 8,
+                    local_steps: 4,
+                    lr: 0.5,
+                    comm_period_ms: 300_000,
+                    seed: 17,
+                },
+                TaskSpec {
+                    name: "b".into(),
+                    task: "lstm".into(),
+                    shards_per_client: 4,
+                    local_steps: 1,
+                    lr: 0.25,
+                    comm_period_ms: 120_000,
+                    seed: 99,
+                },
+            ],
+        };
+        let back = MultiTaskSpec::from_toml_str(&spec.to_toml()).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn rejects_typos_duplicates_and_bad_values() {
+        // unknown field: a typo must not silently fall back to a default
+        let typo = "[task.1]\nmodel = \"mlp\"\ncomm_periodms = 5\n";
+        assert!(MultiTaskSpec::from_toml_str(typo).is_err());
+        // keys outside [task.N] are rejected
+        let stray = "[scenario]\ninitial = 10\n[task.1]\nmodel = \"mlp\"\n";
+        assert!(MultiTaskSpec::from_toml_str(stray).is_err());
+        // duplicate names would make per-task reports ambiguous
+        let dup = "[task.1]\nname = \"x\"\n[task.2]\nname = \"x\"\n";
+        assert!(MultiTaskSpec::from_toml_str(dup).is_err());
+        // wrong-typed and negative values fail loudly
+        assert!(MultiTaskSpec::from_toml_str("[task.1]\nseed = 1.5\n").is_err());
+        assert!(MultiTaskSpec::from_toml_str("[task.1]\nlocal_steps = -1\n").is_err());
+        // an empty document is not a runnable spec
+        assert!(MultiTaskSpec::from_toml_str("").is_err());
+        // names that cannot survive the quoted-TOML round trip are
+        // rejected at validation instead of corrupting `to_toml` output
+        let mut bad = TaskSpec::from_dfl(&DflConfig::default());
+        bad.name = "a\"b".into();
+        assert!(bad.validate().is_err());
+        bad.name = "a\\b".into();
+        assert!(bad.validate().is_err());
+        // wrong-typed STRING fields must fail loudly too, not fall back
+        // to the default model/name
+        assert!(MultiTaskSpec::from_toml_str("[task.1]\nname = 123\n").is_err());
+        assert!(MultiTaskSpec::from_toml_str("[task.1]\nmodel = 5\n").is_err());
+        // non-canonical indices would make every field of the table
+        // unreachable (`task.01.lr` stored, `task.1.lr` looked up)
+        assert!(MultiTaskSpec::from_toml_str("[task.01]\nmodel = \"mlp\"\n").is_err());
+    }
+}

@@ -64,9 +64,9 @@ pub fn curves_table(named: &[(&str, &[AccuracySample])]) -> Table {
     t
 }
 
-/// Final mean accuracy of a run.
+/// Final mean accuracy of a run (primary lane).
 pub fn final_acc(t: &Trainer) -> f64 {
-    t.samples.last().map(|s| s.mean_accuracy).unwrap_or(0.0)
+    t.samples().last().map(|s| s.mean_accuracy).unwrap_or(0.0)
 }
 
 /// Mean accuracy of a client-index cohort in one sample — churn figures

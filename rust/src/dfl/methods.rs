@@ -67,6 +67,23 @@ impl MethodSpec {
         }
     }
 
+    /// Multi-task FedLay: N independent model tasks over one live NDMP
+    /// overlay — the trainer grows one `TaskLane` per task and every
+    /// lane reads the same protocol neighborhoods (`Trainer::new_multi`,
+    /// `dfl::multitask`).
+    pub fn fedlay_multi(
+        overlay: crate::config::OverlayConfig,
+        net: crate::config::NetConfig,
+        tasks: usize,
+    ) -> Self {
+        Self {
+            name: format!("fedlay-multi{tasks}-L{}", overlay.spaces),
+            neighborhood: Neighborhood::Dynamic { overlay, net },
+            confidence: true,
+            asynchronous: true,
+        }
+    }
+
     /// FedLay over an explicit (e.g. NDMP-built) overlay graph.
     pub fn fedlay_with_graph(g: Graph) -> Self {
         Self {

@@ -4,12 +4,16 @@
 //! client wake-ups, synchronous rounds, accuracy samples and churn are
 //! all heap events. `Neighborhood::Dynamic` embeds the NDMP overlay
 //! simulator so topology maintenance and training share a single clock.
+//! The trainer is natively multi-task: N independent model tasks (lanes)
+//! share one overlay and one scheduler (`multitask` holds the spec-level
+//! harness; `docs/multitask.md` documents the format).
 
 pub mod client;
 pub mod methods;
+pub mod multitask;
 pub mod trainer;
 
 pub use client::ClientState;
 pub use methods::{MethodSpec, Mobility, Neighborhood};
-pub use trainer::{AccuracySample, TaskData, TrainEvent, Trainer};
+pub use trainer::{AccuracySample, TaskData, TaskLane, TrainEvent, Trainer};
 pub mod harness;

@@ -1,0 +1,130 @@
+//! Spec-level harness for the multi-task engine: build a [`Trainer`]
+//! whose lanes come from a [`MultiTaskSpec`] (TOML, `configs/tasks/`),
+//! generate each lane's non-iid shards for the *whole* eventual
+//! population (originals plus scheduled joiners — shard draws depend on
+//! the population size, so they are computed once up front exactly like
+//! the single-task scenario harness), and drive churn scenarios through
+//! the per-lane weight tables.
+//!
+//! The format and scheduling semantics are documented in
+//! `docs/multitask.md`.
+
+use super::methods::MethodSpec;
+use super::trainer::Trainer;
+use crate::config::{DflConfig, MultiTaskSpec, TaskSpec};
+use crate::data::shard_labels;
+use crate::runtime::Engine;
+use crate::sim::{ChurnOp, ScenarioReport, ScenarioSpec, Transport};
+use anyhow::Result;
+
+/// Per-lane weight tables, indexed `[lane][client] -> label weights`.
+pub type WeightTables = Vec<Vec<Vec<f64>>>;
+
+/// Per-client label weights of one task for a population of `population`
+/// clients — a pure function of the task's spec, so every backend and
+/// every re-run derives the same shards.
+pub fn lane_weights(
+    engine: &Engine,
+    task: &TaskSpec,
+    population: usize,
+) -> Result<Vec<Vec<f64>>> {
+    let classes = engine.manifest.task(&task.task)?.classes;
+    Ok(shard_labels(
+        population,
+        classes,
+        task.shards_per_client,
+        task.seed,
+    ))
+}
+
+/// Build a multi-task trainer: `base.clients` initial clients, one lane
+/// per task in `spec`, each with weight tables covering `population`
+/// clients (>= `base.clients`; the surplus feeds scheduled joiners).
+/// Returns the trainer plus the per-lane tables, indexed `[lane][client]`.
+pub fn build_trainer<'e>(
+    engine: &'e Engine,
+    method: MethodSpec,
+    base: DflConfig,
+    spec: &MultiTaskSpec,
+    population: usize,
+) -> Result<(Trainer<'e>, WeightTables)> {
+    spec.validate()?;
+    anyhow::ensure!(
+        population >= base.clients,
+        "population {population} smaller than the initial {} clients",
+        base.clients
+    );
+    let mut tables = Vec::with_capacity(spec.tasks.len());
+    let mut tasks = Vec::with_capacity(spec.tasks.len());
+    for t in &spec.tasks {
+        let table = lane_weights(engine, t, population)?;
+        tasks.push((t.clone(), table[..base.clients].to_vec()));
+        tables.push(table);
+    }
+    let trainer = Trainer::new_multi(engine, method, base, tasks)?;
+    Ok((trainer, tables))
+}
+
+/// Run a churn scenario as a multi-task training run: the scenario is
+/// compiled once, the population (initial + scheduled joins) sizes every
+/// lane's weight table, and joiners enter the shared overlay with
+/// per-lane weights — the multi-task analogue of the CLI's single-task
+/// `scenario run --trainer` path. `freeze` skips real training
+/// (scalability mode); `transport` routes the shared overlay's protocol
+/// traffic over an alternative backend (`None` = in-memory network).
+pub fn run_scenario(
+    engine: &Engine,
+    scenario: &ScenarioSpec,
+    tasks: &MultiTaskSpec,
+    method: MethodSpec,
+    base: DflConfig,
+    freeze: bool,
+    transport: Option<Box<dyn Transport>>,
+) -> Result<ScenarioReport> {
+    scenario.validate()?;
+    anyhow::ensure!(
+        base.clients == scenario.initial,
+        "base config has {} clients, scenario starts from {}",
+        base.clients,
+        scenario.initial
+    );
+    let joins = scenario
+        .compile()
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    let population = scenario.initial + joins;
+    let (mut trainer, tables) = build_trainer(engine, method, base, tasks, population)?;
+    if let Some(t) = transport {
+        trainer.set_transport(t)?;
+    }
+    trainer.freeze_training = freeze;
+    scenario.run_trainer_tasks(&mut trainer, |lane, node| tables[lane][node].clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_weight_tables_are_deterministic_per_task() {
+        // shard draws must be a pure function of (task spec, population):
+        // replaying a schedule on another backend re-derives them
+        let a = TaskSpec {
+            name: "a".into(),
+            task: "mlp".into(),
+            shards_per_client: 8,
+            local_steps: 1,
+            lr: 0.5,
+            comm_period_ms: 60_000,
+            seed: 5,
+        };
+        let mut b = a.clone();
+        b.seed = 6;
+        let wa = shard_labels(12, 10, a.shards_per_client, a.seed);
+        let wa2 = shard_labels(12, 10, a.shards_per_client, a.seed);
+        let wb = shard_labels(12, 10, b.shards_per_client, b.seed);
+        assert_eq!(wa, wa2);
+        assert_ne!(wa, wb, "different task seeds must shard differently");
+    }
+}

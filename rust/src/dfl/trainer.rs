@@ -3,6 +3,19 @@
 //! injections are all heap events on one deterministic scheduler
 //! (`sim::Scheduler<TrainEvent>`), popped in O(log n).
 //!
+//! **Multi-task engine.** One trainer drives N independent model tasks —
+//! each a [`TaskLane`] with its own dataset shards, model dimensions, MEP
+//! period, seeds, eval stream and telemetry — over a *single* shared
+//! overlay and a single scheduler (the paper's "machine learning tasks on
+//! distributed devices", plural, on one near-random regular overlay).
+//! Wake and sample events are task-tagged, fingerprint de-dup is keyed by
+//! `(neighbor, task)`, and churn events flip aliveness in every lane at
+//! once, so per-task membership always agrees. Task isolation is a hard
+//! invariant: a lane's trajectory is a pure function of its own
+//! `TaskSpec` plus the shared churn schedule — adding or removing *other*
+//! lanes reproduces it bit for bit (`tests/multitask_properties.rs`).
+//! The single-task constructor is the one-lane special case.
+//!
 //! Under `Neighborhood::Dynamic` the trainer embeds an NDMP overlay
 //! simulator (`sim::Simulator`) and advances it in lockstep with training
 //! time: a client's aggregation neighbors at time `t` are its live
@@ -14,7 +27,8 @@
 //! view-change notifications (`Simulator::take_view_changes`), which is
 //! what lets Dynamic runs reach the 10k-client scale
 //! (`tests/scenario_scale.rs`) instead of rebuilding neighbor sets on
-//! every wake.
+//! every wake. The neighbor cache is task-agnostic (ring views do not
+//! depend on which model rides them) and therefore shared by all lanes.
 //!
 //! Runs any `MethodSpec` (FedLay or a comparator) over the runtime
 //! engine, with the paper's client heterogeneity, non-iid shards, MEP
@@ -23,7 +37,7 @@
 
 use super::client::ClientState;
 use super::methods::{MethodSpec, Mobility, Neighborhood};
-use crate::config::DflConfig;
+use crate::config::{DflConfig, TaskSpec};
 use crate::data::{CharStream, GaussianTask};
 use crate::mep::{aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams};
 use crate::ndmp::messages::Time;
@@ -56,14 +70,18 @@ pub struct AccuracySample {
 /// Events driving the unified training engine. Everything that used to be
 /// a bespoke loop branch — per-client wake-ups, global synchronous
 /// rounds, accuracy samples — plus protocol-level churn, on one heap.
+/// Wake and sample events carry the lane they belong to; churn events are
+/// task-less because membership is shared by every lane.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TrainEvent {
-    /// Asynchronous client wake: local training + MEP exchange.
-    Wake { client: usize },
-    /// Global synchronous round (sync decentralized / FedAvg / Gaia).
+    /// Asynchronous client wake for one task: local training + MEP
+    /// exchange on that task's model.
+    Wake { task: usize, client: usize },
+    /// Global synchronous round (sync decentralized / FedAvg / Gaia;
+    /// single-lane methods only).
     Round,
-    /// Accuracy-sample hook.
-    Sample,
+    /// Accuracy-sample hook for one task's eval stream.
+    Sample { task: usize },
     /// `client` joins the live network through `bootstrap`'s NDMP join
     /// protocol (forwarded to the embedded overlay as `EventKind::Join`).
     Join { client: usize, bootstrap: usize },
@@ -92,32 +110,22 @@ impl ModelSource<'_> {
 /// A fully resolved MEP aggregation for one client: the participants
 /// (self first, then neighbors) and their confidence weights. Built once
 /// per exchange by `plan_aggregation` — the *single* aggregation path for
-/// both the live and the snapshot model source.
+/// both the live and the snapshot model source, task-tagged via the lane
+/// it resolves against.
 struct AggregationPlan {
     members: Vec<usize>,
     weights: Vec<f64>,
 }
 
-pub struct Trainer<'e> {
-    pub engine: &'e Engine,
-    pub task_name: String,
-    pub spec: MethodSpec,
-    pub cfg: DflConfig,
+/// Everything one model task owns: per-client per-task state, dataset
+/// generators, the fixed eval stream, the accuracy series, and the
+/// `TaskSpec` it was built from. The trainer holds one lane per task;
+/// single-task runs are the one-lane special case.
+pub struct TaskLane {
+    pub spec: TaskSpec,
     pub clients: Vec<ClientState>,
     pub samples: Vec<AccuracySample>,
-    /// Embedded NDMP overlay (Neighborhood::Dynamic), advanced in
-    /// lockstep with training time.
-    pub overlay: Option<Simulator>,
-    /// Transport override for the embedded overlay: `ensure_overlay`
-    /// builds the Simulator on this backend (e.g. `net::SchedTransport`
-    /// for real localhost sockets) instead of the in-memory default.
-    transport: Option<Box<dyn Transport>>,
     data: TaskData,
-    mobility: Option<Mobility>,
-    conf: ConfidenceParams,
-    pub now: Time,
-    /// The unified event heap: wakes, rounds, samples, churn.
-    queue: Scheduler<TrainEvent>,
     /// Shared initialization (also handed to mid-run joiners, mirroring
     /// the paper's "new nodes start from the common init").
     init_params: Vec<f32>,
@@ -127,16 +135,123 @@ pub struct Trainer<'e> {
     eval_y: Vec<Vec<i32>>,
     /// Per-model eval memo keyed by parameter fingerprint: after any
     /// broadcast round every client shares one model, which then costs a
-    /// single evaluation instead of `n`.
+    /// single evaluation instead of `n`. Per-lane, so one task's memo can
+    /// never serve another task's (same-dimensioned) model.
     eval_cache: HashMap<u64, (f64, f64)>,
+}
+
+impl TaskLane {
+    fn new(
+        engine: &Engine,
+        spec: TaskSpec,
+        n: usize,
+        synchronous: bool,
+        label_weights: Vec<Vec<f64>>,
+    ) -> Result<Self> {
+        let info = engine.manifest.task(&spec.task)?.clone();
+        let base_period = spec.comm_period_ms * 1_000;
+        // All clients share one initialization (standard DFL practice:
+        // averaging independently-initialized nets cancels their features
+        // due to permutation symmetry).
+        let init_params = engine.init(&spec.task, [spec.seed as u32, 0])?;
+        let mut clients = Vec::with_capacity(n);
+        for (i, w) in label_weights.iter().enumerate() {
+            let cap = Capacity::assign(i, n);
+            clients.push(ClientState::new(
+                i,
+                cap,
+                base_period,
+                w.clone(),
+                init_params.clone(),
+                spec.seed ^ 0xC11E,
+            ));
+        }
+        // synchronous mode: everyone runs at the slowest tier's period
+        if synchronous {
+            let max_period = clients.iter().map(|c| c.schedule.period).max().unwrap();
+            for c in &mut clients {
+                c.schedule.period = max_period;
+                c.schedule.synchronous = true;
+                c.next_wake = 0;
+            }
+        }
+        let data = match spec.task.as_str() {
+            "lstm" => {
+                let streams = label_weights
+                    .iter()
+                    .enumerate()
+                    .map(|(i, w)| char_stream_for(spec.seed, i, w))
+                    .collect();
+                TaskData::Char(streams)
+            }
+            "cnn" => TaskData::Gaussian(GaussianTask::cifar_like(spec.seed)),
+            _ => TaskData::Gaussian(GaussianTask::mnist_like(spec.seed)),
+        };
+        // fixed iid eval set: 2 batches
+        let mut eval_x = Vec::new();
+        let mut eval_xi = Vec::new();
+        let mut eval_y = Vec::new();
+        for e in 0..2u64 {
+            match &data {
+                TaskData::Gaussian(t) => {
+                    let b = t.test_batch(info.batch, spec.seed ^ (0xE0 + e));
+                    eval_x.push(b.x);
+                    eval_y.push(b.y);
+                }
+                TaskData::Char(_) => {
+                    let roles: Vec<u64> = (0..10).map(|l| spec.seed ^ (l + 1)).collect();
+                    let mut s = CharStream::new(&roles, spec.seed ^ (0xE0 + e));
+                    let (x, y) = s.batch(info.batch, info.x_len);
+                    eval_xi.push(x);
+                    eval_y.push(y);
+                }
+            }
+        }
+        Ok(Self {
+            spec,
+            clients,
+            samples: Vec::new(),
+            data,
+            init_params,
+            eval_x,
+            eval_xi,
+            eval_y,
+            eval_cache: HashMap::new(),
+        })
+    }
+}
+
+pub struct Trainer<'e> {
+    pub engine: &'e Engine,
+    pub spec: MethodSpec,
+    /// Base run configuration (population size, capacity split, seeds);
+    /// per-task knobs live in each lane's `TaskSpec`.
+    pub cfg: DflConfig,
+    /// One lane per model task. Lane 0 is the primary task — the
+    /// single-task accessors (`clients`, `samples`, `evaluate`) read it.
+    pub lanes: Vec<TaskLane>,
+    /// Embedded NDMP overlay (Neighborhood::Dynamic), advanced in
+    /// lockstep with training time and shared by every lane.
+    pub overlay: Option<Simulator>,
+    /// Transport override for the embedded overlay: `ensure_overlay`
+    /// builds the Simulator on this backend (e.g. `net::SchedTransport`
+    /// for real localhost sockets) instead of the in-memory default.
+    transport: Option<Box<dyn Transport>>,
+    mobility: Option<Mobility>,
+    conf: ConfidenceParams,
+    pub now: Time,
+    /// The unified event heap: wakes, rounds, samples, churn — for every
+    /// lane.
+    queue: Scheduler<TrainEvent>,
     /// Per-client neighbor-set cache for `Neighborhood::Dynamic`: the
     /// filtered aggregation neighborhood of client `i`, valid until the
     /// overlay emits a view change for node `i` (`take_view_changes`,
     /// drained in `sync_overlay`) or a churn event flips the aliveness
     /// of a client it references (targeted invalidation,
-    /// `invalidate_neighbor_caches_for`). Without it every wake re-reads
-    /// `ring_neighbor_ids()` from the protocol state, which caps Dynamic
-    /// runs well below 10k clients.
+    /// `invalidate_neighbor_caches_for`). Task-agnostic (ring views carry
+    /// every task), hence shared by all lanes. Without it every wake
+    /// re-reads `ring_neighbor_ids()` from the protocol state, which caps
+    /// Dynamic runs well below 10k clients.
     nbr_cache: Vec<Option<Vec<usize>>>,
     nbr_cache_hits: u64,
     nbr_cache_misses: u64,
@@ -145,54 +260,59 @@ pub struct Trainer<'e> {
 }
 
 impl<'e> Trainer<'e> {
+    /// The classic single-task trainer: one lane derived from `cfg`.
     pub fn new(
         engine: &'e Engine,
         spec: MethodSpec,
         cfg: DflConfig,
         label_weights: Vec<Vec<f64>>,
     ) -> Result<Self> {
-        let info = engine.manifest.task(&cfg.task)?.clone();
+        let task = TaskSpec::from_dfl(&cfg);
+        Self::new_multi(engine, spec, cfg, vec![(task, label_weights)])
+    }
+
+    /// The multi-task engine: N independent model tasks over one shared
+    /// overlay and one scheduler. Each entry pairs a `TaskSpec` with that
+    /// task's per-client label weights (`cfg.clients` vectors). Lanes
+    /// must have unique names; with more than one lane the method must be
+    /// asynchronous and its neighborhood Static or Dynamic (central
+    /// rounds and the mobility comparator are single-task constructs).
+    pub fn new_multi(
+        engine: &'e Engine,
+        spec: MethodSpec,
+        cfg: DflConfig,
+        tasks: Vec<(TaskSpec, Vec<Vec<f64>>)>,
+    ) -> Result<Self> {
+        anyhow::ensure!(!tasks.is_empty(), "at least one task is required");
         let n = cfg.clients;
-        anyhow::ensure!(label_weights.len() == n, "weights per client mismatch");
-        let base_period = cfg.comm_period_ms * 1_000;
-        let mut clients = Vec::with_capacity(n);
-        // All clients share one initialization (standard DFL practice:
-        // averaging independently-initialized nets cancels their features
-        // due to permutation symmetry).
-        let init_params = engine.init(&cfg.task, [cfg.seed as u32, 0])?;
-        for (i, w) in label_weights.iter().enumerate() {
-            let cap = Capacity::assign(i, n);
-            let params = init_params.clone();
-            clients.push(ClientState::new(
-                i,
-                cap,
-                base_period,
-                w.clone(),
-                params,
-                cfg.seed ^ 0xC11E,
-            ));
+        if tasks.len() > 1 {
+            anyhow::ensure!(
+                spec.asynchronous,
+                "multi-task runs are asynchronous (per-task MEP periods)"
+            );
+            anyhow::ensure!(
+                matches!(
+                    spec.neighborhood,
+                    Neighborhood::Dynamic { .. } | Neighborhood::Static(_)
+                ),
+                "multi-task runs need a shared overlay neighborhood (Static or Dynamic)"
+            );
         }
-        // synchronous mode: everyone runs at the slowest tier's period
-        if !spec.asynchronous {
-            let max_period = clients.iter().map(|c| c.schedule.period).max().unwrap();
-            for c in &mut clients {
-                c.schedule.period = max_period;
-                c.schedule.synchronous = true;
-                c.next_wake = 0;
-            }
+        let mut names = HashSet::new();
+        for (t, _) in &tasks {
+            anyhow::ensure!(names.insert(t.name.clone()), "duplicate task name {:?}", t.name);
         }
-        let data = match cfg.task.as_str() {
-            "lstm" => {
-                let streams = label_weights
-                    .iter()
-                    .enumerate()
-                    .map(|(i, w)| char_stream_for(&cfg, i, w))
-                    .collect();
-                TaskData::Char(streams)
-            }
-            "cnn" => TaskData::Gaussian(GaussianTask::cifar_like(cfg.seed)),
-            _ => TaskData::Gaussian(GaussianTask::mnist_like(cfg.seed)),
-        };
+        let synchronous = !spec.asynchronous;
+        let mut lanes = Vec::with_capacity(tasks.len());
+        for (tspec, w) in tasks {
+            anyhow::ensure!(
+                w.len() == n,
+                "weights per client mismatch for task {:?}",
+                tspec.name
+            );
+            tspec.validate()?;
+            lanes.push(TaskLane::new(engine, tspec, n, synchronous, w)?);
+        }
         let mobility = match &spec.neighborhood {
             Neighborhood::Mobility { k, speed, seed } => {
                 Some(Mobility::new(n, *k, *speed, *seed))
@@ -202,45 +322,17 @@ impl<'e> Trainer<'e> {
         // Dynamic's embedded NDMP fleet is built lazily at the first
         // `run` (see `ensure_overlay`) so `adopt_overlay` callers don't
         // pay for a bootstrap that is immediately replaced.
-        // fixed iid eval set: 2 batches
-        let mut eval_x = Vec::new();
-        let mut eval_xi = Vec::new();
-        let mut eval_y = Vec::new();
-        for e in 0..2u64 {
-            match &data {
-                TaskData::Gaussian(t) => {
-                    let b = t.test_batch(info.batch, cfg.seed ^ (0xE0 + e));
-                    eval_x.push(b.x);
-                    eval_y.push(b.y);
-                }
-                TaskData::Char(_) => {
-                    let roles: Vec<u64> = (0..10).map(|l| cfg.seed ^ (l + 1)).collect();
-                    let mut s = CharStream::new(&roles, cfg.seed ^ (0xE0 + e));
-                    let (x, y) = s.batch(info.batch, info.x_len);
-                    eval_xi.push(x);
-                    eval_y.push(y);
-                }
-            }
-        }
         Ok(Self {
             engine,
-            task_name: cfg.task.clone(),
             spec,
             cfg,
-            clients,
-            samples: Vec::new(),
+            lanes,
             overlay: None,
             transport: None,
-            data,
             mobility,
             conf: ConfidenceParams::default(),
             now: 0,
             queue: Scheduler::new(),
-            init_params,
-            eval_x,
-            eval_xi,
-            eval_y,
-            eval_cache: HashMap::new(),
             nbr_cache: vec![None; n],
             nbr_cache_hits: 0,
             nbr_cache_misses: 0,
@@ -248,8 +340,37 @@ impl<'e> Trainer<'e> {
         })
     }
 
-    fn info_batch(&self) -> (usize, usize) {
-        let info = self.engine.manifest.task(&self.task_name).unwrap();
+    // ------------------------------------------------------------------
+    // Lane accessors (lane 0 = the primary task)
+    // ------------------------------------------------------------------
+
+    /// Primary-lane client states (single-task callers' view).
+    pub fn clients(&self) -> &[ClientState] {
+        &self.lanes[0].clients
+    }
+
+    pub fn clients_mut(&mut self) -> &mut [ClientState] {
+        &mut self.lanes[0].clients
+    }
+
+    /// Consume the trainer, yielding the primary lane's client states
+    /// (model-pool workflows, Fig. 20).
+    pub fn into_clients(mut self) -> Vec<ClientState> {
+        self.lanes.swap_remove(0).clients
+    }
+
+    /// Primary-lane accuracy series.
+    pub fn samples(&self) -> &[AccuracySample] {
+        &self.lanes[0].samples
+    }
+
+    /// Primary-lane runtime model task name.
+    pub fn task_name(&self) -> &str {
+        &self.lanes[0].spec.task
+    }
+
+    fn info_batch(&self, task: usize) -> (usize, usize) {
+        let info = self.engine.manifest.task(&self.lanes[task].spec.task).unwrap();
         (info.batch, info.x_len)
     }
 
@@ -269,10 +390,12 @@ impl<'e> Trainer<'e> {
     // ------------------------------------------------------------------
 
     /// Register a client that joins the live network at `at` through
-    /// `bootstrap`'s NDMP join protocol. The client exists immediately as
-    /// a dead placeholder (so cohort indices are stable) and comes alive
-    /// — in both the training loop and the overlay — when the event
-    /// fires. Returns the new client's id.
+    /// `bootstrap`'s NDMP join protocol (single-task trainers; multi-task
+    /// trainers supply one weight vector per lane via
+    /// `schedule_join_tasks`). The client exists immediately as a dead
+    /// placeholder (so cohort indices are stable) and comes alive — in
+    /// both the training loop and the overlay — when the event fires.
+    /// Returns the new client's id.
     pub fn schedule_join(
         &mut self,
         at: Time,
@@ -280,40 +403,68 @@ impl<'e> Trainer<'e> {
         bootstrap: usize,
     ) -> Result<usize> {
         anyhow::ensure!(
+            self.lanes.len() == 1,
+            "multi-task trainers need schedule_join_tasks (one weight vector per task)"
+        );
+        self.schedule_join_tasks(at, vec![label_weights], bootstrap)
+    }
+
+    /// Multi-task join: the client enters the shared overlay once, and
+    /// every lane gains its per-task state (weights, data stream, model
+    /// initialized from that lane's common init).
+    pub fn schedule_join_tasks(
+        &mut self,
+        at: Time,
+        per_task_weights: Vec<Vec<f64>>,
+        bootstrap: usize,
+    ) -> Result<usize> {
+        anyhow::ensure!(
             matches!(self.spec.neighborhood, Neighborhood::Dynamic { .. }),
             "mid-run joins need Neighborhood::Dynamic (NDMP-backed); static graphs cannot grow"
         );
-        anyhow::ensure!(bootstrap < self.clients.len(), "bootstrap {bootstrap} unknown");
-        let i = self.clients.len();
-        let base_period = self.cfg.comm_period_ms * 1_000;
-        let mut c = ClientState::new(
-            i,
-            Capacity::assign(i, i + 1),
-            base_period,
-            label_weights.clone(),
-            self.init_params.clone(),
-            self.cfg.seed ^ 0xC11E,
+        anyhow::ensure!(
+            bootstrap < self.lanes[0].clients.len(),
+            "bootstrap {bootstrap} unknown"
         );
-        c.alive = false;
+        anyhow::ensure!(
+            per_task_weights.len() == self.lanes.len(),
+            "got {} weight vectors for {} tasks",
+            per_task_weights.len(),
+            self.lanes.len()
+        );
+        let i = self.lanes[0].clients.len();
         // `MethodSpec` fields are public, so a hand-built synchronous
         // Dynamic spec is possible; keep joiners on the shared round
         // period in that case.
-        if !self.spec.asynchronous {
-            c.schedule.period = self.clients[0].schedule.period;
-            c.schedule.synchronous = true;
+        let sync = !self.spec.asynchronous;
+        for (lane, w) in self.lanes.iter_mut().zip(per_task_weights) {
+            let base_period = lane.spec.comm_period_ms * 1_000;
+            let mut c = ClientState::new(
+                i,
+                Capacity::assign(i, i + 1),
+                base_period,
+                w.clone(),
+                lane.init_params.clone(),
+                lane.spec.seed ^ 0xC11E,
+            );
+            c.alive = false;
+            if sync {
+                c.schedule.period = lane.clients[0].schedule.period;
+                c.schedule.synchronous = true;
+            }
+            lane.clients.push(c);
+            if let TaskData::Char(streams) = &mut lane.data {
+                streams.push(char_stream_for(lane.spec.seed, i, &w));
+            }
         }
-        self.clients.push(c);
         self.nbr_cache.push(None);
-        if let TaskData::Char(streams) = &mut self.data {
-            streams.push(char_stream_for(&self.cfg, i, &label_weights));
-        }
         self.queue.push(at, TrainEvent::Join { client: i, bootstrap });
         Ok(i)
     }
 
-    /// Crash-fail `client` at `at`: it silently stops waking; under
-    /// Dynamic the overlay node disappears and NDMP repair rewires around
-    /// it.
+    /// Crash-fail `client` at `at`: it silently stops waking (in every
+    /// lane); under Dynamic the overlay node disappears and NDMP repair
+    /// rewires around it.
     pub fn schedule_fail(&mut self, at: Time, client: usize) {
         self.queue.push(at, TrainEvent::Fail { client });
     }
@@ -336,10 +487,10 @@ impl<'e> Trainer<'e> {
             "adopt_overlay needs Neighborhood::Dynamic"
         );
         anyhow::ensure!(
-            self.now == 0 && self.samples.is_empty(),
+            self.now == 0 && self.lanes.iter().all(|l| l.samples.is_empty()),
             "adopt_overlay must be called before run()"
         );
-        for id in 0..self.clients.len() as NodeId {
+        for id in 0..self.lanes[0].clients.len() as NodeId {
             anyhow::ensure!(
                 sim.nodes.contains_key(&id),
                 "adopted overlay is missing node {id}"
@@ -415,6 +566,20 @@ impl<'e> Trainer<'e> {
         }
     }
 
+    /// `client` left the run (crash or graceful leave): flip its
+    /// aliveness in every lane and expire its dedup entries *per task*
+    /// (`forget_task`) — one task's peer expiry must never evict another
+    /// task's fingerprint state.
+    fn retire_client(&mut self, client: usize) {
+        for (t, lane) in self.lanes.iter_mut().enumerate() {
+            lane.clients[client].alive = false;
+            for c in lane.clients.iter_mut() {
+                c.fingerprints.forget_task(client as u64, t as u32);
+            }
+        }
+        self.invalidate_neighbor_caches_for(client);
+    }
+
     /// `(hits, misses)` of the `Neighborhood::Dynamic` neighbor-set
     /// cache — surfaced by `ScenarioReport` so large-scale runs can
     /// verify the cache actually carries the load.
@@ -448,13 +613,14 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
-    /// Draw a local training batch for client `i`.
-    fn draw_batch(&mut self, i: usize) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
-        let (batch, x_len) = self.info_batch();
-        match &mut self.data {
+    /// Draw a local training batch for client `i` of lane `task`.
+    fn draw_batch(&mut self, task: usize, i: usize) -> (Vec<f32>, Vec<i32>, Vec<i32>) {
+        let (batch, x_len) = self.info_batch(task);
+        let lane = &mut self.lanes[task];
+        match &mut lane.data {
             TaskData::Gaussian(t) => {
-                let w = self.clients[i].label_weights.clone();
-                let b = t.batch(batch, &w, &mut self.clients[i].rng);
+                let w = lane.clients[i].label_weights.clone();
+                let b = t.batch(batch, &w, &mut lane.clients[i].rng);
                 (b.x, Vec::new(), b.y)
             }
             TaskData::Char(streams) => {
@@ -464,48 +630,55 @@ impl<'e> Trainer<'e> {
         }
     }
 
-    fn local_train(&mut self, i: usize) -> Result<()> {
+    fn local_train(&mut self, task: usize, i: usize) -> Result<()> {
         if self.freeze_training {
             return Ok(());
         }
-        for _ in 0..self.cfg.local_steps {
-            let (xf, xi, y) = self.draw_batch(i);
+        let (steps, lr) = (self.lanes[task].spec.local_steps, self.lanes[task].spec.lr);
+        for _ in 0..steps {
+            let (xf, xi, y) = self.draw_batch(task, i);
             let x = if xf.is_empty() {
                 XInput::I32(&xi)
             } else {
                 XInput::F32(&xf)
             };
-            let (new, _loss) =
-                self.engine
-                    .train_step(&self.task_name, &self.clients[i].params, &x, &y, self.cfg.lr)?;
-            self.clients[i].params = new;
-            self.clients[i].train_steps += 1;
+            let (new, _loss) = self.engine.train_step(
+                &self.lanes[task].spec.task,
+                &self.lanes[task].clients[i].params,
+                &x,
+                &y,
+                lr,
+            )?;
+            let lane = &mut self.lanes[task];
+            lane.clients[i].params = new;
+            lane.clients[i].train_steps += 1;
         }
-        self.clients[i].version += 1;
+        self.lanes[task].clients[i].version += 1;
         Ok(())
     }
 
-    /// Live-neighbor ids of client `i` at the current time.
+    /// Live-neighbor ids of client `i` at the current time. Task-agnostic:
+    /// every lane aggregates over the same overlay neighborhood.
     fn neighbors_of(&mut self, i: usize) -> Vec<usize> {
-        let n = self.clients.len();
+        let n = self.lanes[0].clients.len();
         match &self.spec.neighborhood {
             Neighborhood::Static(g) => g
                 .neighbors(i)
-                .filter(|&j| self.clients[j].alive)
+                .filter(|&j| self.lanes[0].clients[j].alive)
                 .collect(),
             Neighborhood::Star => (0..n)
-                .filter(|&j| j != i && self.clients[j].alive)
+                .filter(|&j| j != i && self.lanes[0].clients[j].alive)
                 .collect(),
             Neighborhood::Regions { assignment, .. } => {
                 let r = assignment[i];
                 (0..n)
-                    .filter(|&j| j != i && assignment[j] == r && self.clients[j].alive)
+                    .filter(|&j| j != i && assignment[j] == r && self.lanes[0].clients[j].alive)
                     .collect()
             }
             Neighborhood::Mobility { .. } => {
                 let g = self.mobility.as_mut().expect("mobility state").step();
                 g.neighbors(i)
-                    .filter(|&j| self.clients[j].alive)
+                    .filter(|&j| self.lanes[0].clients[j].alive)
                     .collect()
             }
             Neighborhood::Dynamic { .. } => {
@@ -523,7 +696,7 @@ impl<'e> Trainer<'e> {
                         .into_iter()
                         .filter_map(|id| {
                             let j = id as usize;
-                            (j != i && j < n && self.clients[j].alive).then_some(j)
+                            (j != i && j < n && self.lanes[0].clients[j].alive).then_some(j)
                         })
                         .collect(),
                     None => Vec::new(), // not joined yet / failed
@@ -540,28 +713,33 @@ impl<'e> Trainer<'e> {
     // ------------------------------------------------------------------
 
     /// Resolve one MEP aggregation (paper §III-C2): fingerprint de-dup and
-    /// transfer accounting (§III-C3) against the model source, then the
-    /// confidence weights normalized over the neighborhood ∪ {i}.
+    /// transfer accounting (§III-C3) against the model source — keyed by
+    /// `(neighbor, task)` so coexisting tasks never suppress each other's
+    /// transfers — then the confidence weights normalized over the
+    /// neighborhood ∪ {i}.
     fn plan_aggregation(
         &mut self,
+        task: usize,
         i: usize,
         nbrs: &[usize],
         source: &ModelSource<'_>,
     ) -> AggregationPlan {
+        let task_key = task as u32;
+        let lane = &mut self.lanes[task];
         // i "pulls" each neighbor's latest model unless the fingerprint
         // matches the last pull; the sender pays the payload bytes.
-        let p_bytes = (source.model(&self.clients, i).len() * 4) as u64;
+        let p_bytes = (source.model(&lane.clients, i).len() * 4) as u64;
         for &j in nbrs {
-            let fp = fingerprint(source.model(&self.clients, j));
-            if self.clients[i].fingerprints.is_duplicate(j as u64, fp) {
-                self.clients[i].dedup_skips += 1;
+            let fp = fingerprint(source.model(&lane.clients, j));
+            if lane.clients[i].fingerprints.is_duplicate(j as u64, task_key, fp) {
+                lane.clients[i].dedup_skips += 1;
             } else {
-                self.clients[i].fingerprints.record(j as u64, fp);
-                self.clients[j].model_bytes_sent += p_bytes;
+                lane.clients[i].fingerprints.record(j as u64, task_key, fp);
+                lane.clients[j].model_bytes_sent += p_bytes;
             }
         }
-        let hood: Vec<(f64, f64)> = std::iter::once(self.clients[i].raw_confidence())
-            .chain(nbrs.iter().map(|&j| self.clients[j].raw_confidence()))
+        let hood: Vec<(f64, f64)> = std::iter::once(lane.clients[i].raw_confidence())
+            .chain(nbrs.iter().map(|&j| lane.clients[j].raw_confidence()))
             .collect();
         let weights: Vec<f64> = if self.spec.confidence {
             hood.iter().map(|&own| self.conf.combine(own, &hood)).collect()
@@ -572,36 +750,46 @@ impl<'e> Trainer<'e> {
         AggregationPlan { members, weights }
     }
 
-    /// Execute one MEP aggregation for client `i` over `nbrs`.
-    fn aggregate(&mut self, i: usize, nbrs: &[usize], source: ModelSource<'_>) -> Result<()> {
+    /// Execute one MEP aggregation for client `i` of lane `task`.
+    fn aggregate(
+        &mut self,
+        task: usize,
+        i: usize,
+        nbrs: &[usize],
+        source: ModelSource<'_>,
+    ) -> Result<()> {
         if nbrs.is_empty() {
             return Ok(());
         }
-        let plan = self.plan_aggregation(i, nbrs, &source);
+        let plan = self.plan_aggregation(task, i, nbrs, &source);
         let engine = self.engine;
         let k_max = engine.manifest.k_max;
+        let lane = &self.lanes[task];
         let models: Vec<&[f32]> = plan
             .members
             .iter()
-            .map(|&j| source.model(&self.clients, j))
+            .map(|&j| source.model(&lane.clients, j))
             .collect();
         let new = if models.len() <= k_max {
             // hot path: the L1 Pallas kernel inside the agg artifact
             let (stack, w) = pack_for_artifact(&models, &plan.weights, k_max);
-            engine.aggregate(&self.task_name, &stack, &w)?
+            engine.aggregate(&lane.spec.task, &stack, &w)?
         } else {
             // oversized neighborhood (complete graph / star): CPU fallback
             aggregate_cpu(&models, &plan.weights)
         };
-        self.clients[i].params = new;
-        self.clients[i].version += 1;
-        self.clients[i].exchanges += 1;
+        let lane = &mut self.lanes[task];
+        lane.clients[i].params = new;
+        lane.clients[i].version += 1;
+        lane.clients[i].exchanges += 1;
         Ok(())
     }
 
-    /// Centralized FedAvg round: global average, broadcast to everyone.
+    /// Centralized FedAvg round: global average, broadcast to everyone
+    /// (single-lane methods only).
     fn fedavg_round(&mut self) -> Result<()> {
-        let models: Vec<&[f32]> = self
+        let lane = &mut self.lanes[0];
+        let models: Vec<&[f32]> = lane
             .clients
             .iter()
             .filter(|c| c.alive)
@@ -613,7 +801,7 @@ impl<'e> Trainer<'e> {
         let weights = vec![1.0; models.len()];
         let global = aggregate_cpu(&models, &weights);
         let p_bytes = (global.len() * 4) as u64;
-        for c in self.clients.iter_mut().filter(|c| c.alive) {
+        for c in lane.clients.iter_mut().filter(|c| c.alive) {
             c.params = global.clone();
             c.version += 1;
             c.exchanges += 1;
@@ -625,9 +813,10 @@ impl<'e> Trainer<'e> {
 
     /// Gaia round: average within each region, then across region servers.
     fn gaia_round(&mut self, assignment: &[usize], regions: usize) -> Result<()> {
+        let lane = &mut self.lanes[0];
         let mut region_models: Vec<Option<Vec<f32>>> = vec![None; regions];
-        for r in 0..regions {
-            let members: Vec<&[f32]> = self
+        for (r, slot) in region_models.iter_mut().enumerate() {
+            let members: Vec<&[f32]> = lane
                 .clients
                 .iter()
                 .filter(|c| c.alive && assignment[c.id] == r)
@@ -636,7 +825,7 @@ impl<'e> Trainer<'e> {
             if members.is_empty() {
                 continue; // a fully-failed region drops out of the average
             }
-            region_models[r] = Some(aggregate_cpu(&members, &vec![1.0; members.len()]));
+            *slot = Some(aggregate_cpu(&members, &vec![1.0; members.len()]));
         }
         // inter-region complete-graph averaging over populated regions
         let refs: Vec<&[f32]> = region_models.iter().filter_map(|m| m.as_deref()).collect();
@@ -646,8 +835,8 @@ impl<'e> Trainer<'e> {
         let p = refs[0].len();
         let global = aggregate_cpu(&refs, &vec![1.0; refs.len()]);
         let p_bytes = (p * 4) as u64;
-        let members_per_region = (self.clients.len() / regions.max(1)).max(1) as u64;
-        for c in self.clients.iter_mut().filter(|c| c.alive) {
+        let members_per_region = (lane.clients.len() / regions.max(1)).max(1) as u64;
+        for c in lane.clients.iter_mut().filter(|c| c.alive) {
             c.params = global.clone();
             c.version += 1;
             c.exchanges += 1;
@@ -658,43 +847,49 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
-    /// Evaluate all clients on the fixed iid test set. Distinct models are
-    /// found by fingerprint, the fresh ones evaluated in parallel, and
-    /// results memoized — after a broadcast round `n` identical clients
-    /// cost one evaluation.
-    pub fn evaluate(&mut self) -> Result<AccuracySample> {
-        let (batch, _) = self.info_batch();
-        let nb = self.eval_y.len();
-        let fps: Vec<u64> = self.clients.iter().map(|c| fingerprint(&c.params)).collect();
+    /// Evaluate every client of lane `task` on its fixed iid test set.
+    /// Distinct models are found by fingerprint, the fresh ones evaluated
+    /// in parallel, and results memoized — after a broadcast round `n`
+    /// identical clients cost one evaluation.
+    pub fn evaluate_task(&mut self, task: usize) -> Result<AccuracySample> {
+        let (batch, _) = self.info_batch(task);
+        let nb = self.lanes[task].eval_y.len();
+        let fps: Vec<u64> = self.lanes[task]
+            .clients
+            .iter()
+            .map(|c| fingerprint(&c.params))
+            .collect();
         // bound the memo before extending it (long runs, many versions)
-        if self.eval_cache.len() > 8 * self.clients.len().max(8) {
+        let bound = 8 * self.lanes[task].clients.len().max(8);
+        if self.lanes[task].eval_cache.len() > bound {
             let keep: HashSet<u64> = fps.iter().copied().collect();
-            self.eval_cache.retain(|k, _| keep.contains(k));
+            self.lanes[task].eval_cache.retain(|k, _| keep.contains(k));
         }
         let mut seen = HashSet::new();
         let fresh: Vec<(u64, usize)> = fps
             .iter()
             .enumerate()
-            .filter(|&(_, fp)| !self.eval_cache.contains_key(fp) && seen.insert(*fp))
+            .filter(|&(_, fp)| !self.lanes[task].eval_cache.contains_key(fp) && seen.insert(*fp))
             .map(|(i, &fp)| (fp, i))
             .collect();
         let this: &Self = &*self;
+        let lane = &this.lanes[task];
         let evaluated = fresh
             .par_iter()
             .map(|&(fp, i)| -> Result<(u64, (f64, f64))> {
                 let mut correct = 0.0f64;
                 let mut loss = 0.0f64;
                 for e in 0..nb {
-                    let x = if !this.eval_x.is_empty() {
-                        XInput::F32(&this.eval_x[e])
+                    let x = if !lane.eval_x.is_empty() {
+                        XInput::F32(&lane.eval_x[e])
                     } else {
-                        XInput::I32(&this.eval_xi[e])
+                        XInput::I32(&lane.eval_xi[e])
                     };
                     let (cr, lo) = this.engine.eval_step(
-                        &this.task_name,
-                        &this.clients[i].params,
+                        &lane.spec.task,
+                        &lane.clients[i].params,
                         &x,
-                        &this.eval_y[e],
+                        &lane.eval_y[e],
                     )?;
                     correct += cr as f64;
                     loss += lo as f64;
@@ -702,11 +897,12 @@ impl<'e> Trainer<'e> {
                 Ok((fp, (correct / (nb * batch) as f64, loss / nb as f64)))
             })
             .collect::<Result<Vec<_>>>()?;
-        self.eval_cache.extend(evaluated);
-        let mut per_client = Vec::with_capacity(self.clients.len());
+        self.lanes[task].eval_cache.extend(evaluated);
+        let lane = &self.lanes[task];
+        let mut per_client = Vec::with_capacity(lane.clients.len());
         let (mut acc_sum, mut loss_sum, mut live) = (0.0, 0.0, 0usize);
-        for (i, c) in self.clients.iter().enumerate() {
-            let (acc, lo) = self.eval_cache[&fps[i]];
+        for (i, c) in lane.clients.iter().enumerate() {
+            let (acc, lo) = lane.eval_cache[&fps[i]];
             per_client.push(acc);
             if c.alive {
                 acc_sum += acc;
@@ -723,23 +919,39 @@ impl<'e> Trainer<'e> {
         })
     }
 
+    /// Evaluate the primary lane (single-task callers' view).
+    pub fn evaluate(&mut self) -> Result<AccuracySample> {
+        self.evaluate_task(0)
+    }
+
+    fn record_lane_sample(&mut self, task: usize) -> Result<()> {
+        let s = self.evaluate_task(task)?;
+        self.lanes[task].samples.push(s);
+        Ok(())
+    }
+
+    /// Record one accuracy sample per lane at the current clock.
     pub fn record_sample(&mut self) -> Result<()> {
-        let s = self.evaluate()?;
-        self.samples.push(s);
+        for t in 0..self.lanes.len() {
+            self.record_lane_sample(t)?;
+        }
         Ok(())
     }
 
     /// Run until `until` (µs of simulated time), sampling accuracy every
-    /// `sample_every`. One event loop serves every method: synchronous
-    /// rounds, asynchronous gossip, and scheduled churn all pop from the
-    /// same heap, and the embedded overlay (if any) advances in lockstep.
-    /// Returns the final sample.
+    /// `sample_every` (each lane records its own series). One event loop
+    /// serves every method and every lane: synchronous rounds,
+    /// asynchronous gossip, and scheduled churn all pop from the same
+    /// heap, and the embedded overlay (if any) advances in lockstep.
+    /// Returns the primary lane's final sample.
     pub fn run(&mut self, until: Time, sample_every: Time) -> Result<AccuracySample> {
         self.ensure_overlay();
         // baseline at the current clock (skipped on resume if the prior
         // run already sampled this instant)
-        if self.samples.last().map(|s| s.at) != Some(self.now) {
-            self.record_sample()?;
+        for t in 0..self.lanes.len() {
+            if self.lanes[t].samples.last().map(|s| s.at) != Some(self.now) {
+                self.record_lane_sample(t)?;
+            }
         }
         // Seed the wake/round/sample chains on the first run only; the
         // chains re-push themselves unconditionally, so events past
@@ -747,18 +959,24 @@ impl<'e> Trainer<'e> {
         // `run` again continues training rather than double-scheduling.
         if self.now == 0 {
             if self.synchronous() {
-                let period = self.clients[0].schedule.period;
+                let period = self.lanes[0].clients[0].schedule.period;
                 self.queue.push(period, TrainEvent::Round);
             } else {
-                for i in 0..self.clients.len() {
-                    if self.clients[i].alive {
-                        self.queue
-                            .push(self.clients[i].next_wake, TrainEvent::Wake { client: i });
+                for t in 0..self.lanes.len() {
+                    for i in 0..self.lanes[t].clients.len() {
+                        if self.lanes[t].clients[i].alive {
+                            self.queue.push(
+                                self.lanes[t].clients[i].next_wake,
+                                TrainEvent::Wake { task: t, client: i },
+                            );
+                        }
                     }
                 }
             }
             if sample_every > 0 {
-                self.queue.push(sample_every, TrainEvent::Sample);
+                for t in 0..self.lanes.len() {
+                    self.queue.push(sample_every, TrainEvent::Sample { task: t });
+                }
             }
         }
         while let Some(t) = self.queue.peek_time() {
@@ -769,22 +987,22 @@ impl<'e> Trainer<'e> {
             self.now = ev.at;
             self.sync_overlay();
             match ev.kind {
-                TrainEvent::Wake { client: i } => {
-                    if !self.clients[i].alive {
+                TrainEvent::Wake { task, client: i } => {
+                    if !self.lanes[task].clients[i].alive {
                         continue; // failed/left while the wake was queued
                     }
-                    self.local_train(i)?;
+                    self.local_train(task, i)?;
                     let nbrs = self.neighbors_of(i);
-                    self.aggregate(i, &nbrs, ModelSource::Live)?;
-                    let period = self.clients[i].schedule.period;
-                    self.clients[i].next_wake = self.now + period;
+                    self.aggregate(task, i, &nbrs, ModelSource::Live)?;
+                    let period = self.lanes[task].clients[i].schedule.period;
+                    self.lanes[task].clients[i].next_wake = self.now + period;
                     self.queue
-                        .push(self.now + period, TrainEvent::Wake { client: i });
+                        .push(self.now + period, TrainEvent::Wake { task, client: i });
                 }
                 TrainEvent::Round => {
-                    for i in 0..self.clients.len() {
-                        if self.clients[i].alive {
-                            self.local_train(i)?;
+                    for i in 0..self.lanes[0].clients.len() {
+                        if self.lanes[0].clients[i].alive {
+                            self.local_train(0, i)?;
                         }
                     }
                     match self.spec.neighborhood.clone() {
@@ -795,24 +1013,29 @@ impl<'e> Trainer<'e> {
                         _ => {
                             // synchronous decentralized: everyone
                             // aggregates against pre-round snapshots
-                            let snapshot: Vec<Vec<f32>> =
-                                self.clients.iter().map(|c| c.params.clone()).collect();
-                            for i in 0..self.clients.len() {
-                                if !self.clients[i].alive {
+                            let snapshot: Vec<Vec<f32>> = self.lanes[0]
+                                .clients
+                                .iter()
+                                .map(|c| c.params.clone())
+                                .collect();
+                            for i in 0..self.lanes[0].clients.len() {
+                                if !self.lanes[0].clients[i].alive {
                                     continue;
                                 }
                                 let nbrs = self.neighbors_of(i);
-                                self.aggregate(i, &nbrs, ModelSource::Snapshot(&snapshot))?;
+                                self.aggregate(0, i, &nbrs, ModelSource::Snapshot(&snapshot))?;
                             }
                         }
                     }
-                    self.queue
-                        .push(self.now + self.clients[0].schedule.period, TrainEvent::Round);
+                    self.queue.push(
+                        self.now + self.lanes[0].clients[0].schedule.period,
+                        TrainEvent::Round,
+                    );
                 }
-                TrainEvent::Sample => {
-                    self.record_sample()?;
+                TrainEvent::Sample { task } => {
+                    self.record_lane_sample(task)?;
                     self.queue
-                        .push(self.now + sample_every.max(1), TrainEvent::Sample);
+                        .push(self.now + sample_every.max(1), TrainEvent::Sample { task });
                 }
                 TrainEvent::Join { client, bootstrap } => {
                     // The paper's minimal assumption is one live contact.
@@ -820,10 +1043,13 @@ impl<'e> Trainer<'e> {
                     // re-bootstrap through any other live member; with no
                     // live contact at all the joiner cannot enter the
                     // network and stays a dead placeholder.
-                    let boot = if self.clients[bootstrap].alive {
+                    let boot = if self.lanes[0].clients[bootstrap].alive {
                         Some(bootstrap)
                     } else {
-                        self.clients.iter().position(|c| c.alive && c.id != client)
+                        self.lanes[0]
+                            .clients
+                            .iter()
+                            .position(|c| c.alive && c.id != client)
                     };
                     let mut entered = false;
                     if let (Some(sim), Some(b)) = (self.overlay.as_mut(), boot) {
@@ -833,69 +1059,86 @@ impl<'e> Trainer<'e> {
                         }
                     }
                     if entered {
-                        let wake = self.now + self.clients[client].next_wake.max(1);
-                        self.clients[client].alive = true;
-                        self.clients[client].next_wake = wake;
-                        self.invalidate_neighbor_caches_for(client);
-                        if !self.synchronous() {
-                            self.queue.push(wake, TrainEvent::Wake { client });
+                        let now = self.now;
+                        let sync = self.synchronous();
+                        for t in 0..self.lanes.len() {
+                            let wake = now + self.lanes[t].clients[client].next_wake.max(1);
+                            self.lanes[t].clients[client].alive = true;
+                            self.lanes[t].clients[client].next_wake = wake;
+                            if !sync {
+                                self.queue.push(wake, TrainEvent::Wake { task: t, client });
+                            }
                         }
+                        self.invalidate_neighbor_caches_for(client);
                     }
                 }
                 TrainEvent::Fail { client } => {
-                    if client >= self.clients.len() {
+                    if client >= self.lanes[0].clients.len() {
                         continue;
                     }
                     if let Some(sim) = self.overlay.as_mut() {
                         sim.schedule_fail(self.now, client as NodeId);
                     }
-                    self.clients[client].alive = false;
-                    self.invalidate_neighbor_caches_for(client);
+                    self.retire_client(client);
                 }
                 TrainEvent::Leave { client } => {
-                    if client >= self.clients.len() {
+                    if client >= self.lanes[0].clients.len() {
                         continue;
                     }
                     if let Some(sim) = self.overlay.as_mut() {
                         sim.schedule_leave(self.now, client as NodeId);
                     }
-                    self.clients[client].alive = false;
-                    self.invalidate_neighbor_caches_for(client);
+                    self.retire_client(client);
                 }
             }
         }
         self.now = until;
         self.sync_overlay();
-        // final sample, unless an in-loop Sample already landed on `until`
-        if self.samples.last().map(|s| s.at) != Some(until) {
-            self.record_sample()?;
+        // final sample per lane, unless an in-loop Sample already landed
+        // on `until`
+        for t in 0..self.lanes.len() {
+            if self.lanes[t].samples.last().map(|s| s.at) != Some(until) {
+                self.record_lane_sample(t)?;
+            }
         }
-        Ok(self.samples.last().unwrap().clone())
+        Ok(self.lanes[0].samples.last().unwrap().clone())
     }
 
-    /// Total model payload bytes sent, per client (Fig. 20d metric).
+    /// Total model payload bytes sent, per client, summed over every lane
+    /// (Fig. 20d metric; single-task runs have one lane).
     pub fn model_mb_per_client(&self) -> f64 {
-        let total: u64 = self.clients.iter().map(|c| c.model_bytes_sent).sum();
-        total as f64 / (1024.0 * 1024.0) / self.clients.len() as f64
+        let total: u64 = self
+            .lanes
+            .iter()
+            .flat_map(|l| l.clients.iter())
+            .map(|c| c.model_bytes_sent)
+            .sum();
+        total as f64 / (1024.0 * 1024.0) / self.lanes[0].clients.len() as f64
     }
 
-    /// Total training compute (train steps) per client — Fig. 15's
-    /// relative-computation-cost metric numerator.
+    /// Total training compute (train steps) per client across lanes —
+    /// Fig. 15's relative-computation-cost metric numerator.
     pub fn train_steps_per_client(&self) -> f64 {
-        let total: u64 = self.clients.iter().map(|c| c.train_steps).sum();
-        total as f64 / self.clients.len() as f64
+        let total: u64 = self
+            .lanes
+            .iter()
+            .flat_map(|l| l.clients.iter())
+            .map(|c| c.train_steps)
+            .sum();
+        total as f64 / self.lanes[0].clients.len() as f64
     }
 }
 
 /// Per-client Markov stream from its shard labels (each nonzero label
-/// acts as a Shakespeare "role").
-fn char_stream_for(cfg: &DflConfig, i: usize, w: &[f64]) -> CharStream {
+/// acts as a Shakespeare "role"), seeded from the owning task's seed so
+/// coexisting lstm tasks draw independent streams.
+fn char_stream_for(seed: u64, i: usize, w: &[f64]) -> CharStream {
     let roles: Vec<u64> = w
         .iter()
         .enumerate()
         .filter(|(_, &x)| x > 0.0)
-        .map(|(l, _)| cfg.seed ^ (l as u64 + 1))
+        .map(|(l, _)| seed ^ (l as u64 + 1))
         .collect();
-    let roles = if roles.is_empty() { vec![cfg.seed] } else { roles };
-    CharStream::new(&roles, cfg.seed ^ (i as u64) << 8)
+    let roles = if roles.is_empty() { vec![seed] } else { roles };
+    CharStream::new(&roles, seed ^ (i as u64) << 8)
 }

@@ -64,6 +64,25 @@
 //! which carries scenario runs to 10k clients
 //! (`tests/scenario_scale.rs`).
 //!
+//! ## Multi-task engine
+//!
+//! One [`dfl::Trainer`] drives N independent model tasks — each a
+//! [`dfl::TaskLane`] with its own dataset shards, model dimensions, MEP
+//! period, seeds, and eval stream — over a *single* shared overlay and
+//! scheduler (the paper's "machine learning tasks on distributed
+//! devices", plural, on one near-random regular overlay). Wake/sample
+//! events are task-tagged, fingerprint de-dup is keyed by
+//! `(neighbor, task)` ([`mep::FingerprintCache`]), MEP wire frames carry
+//! a task field on both transports, and churn flips every lane's
+//! membership at once. Task isolation is a hard invariant — a lane's
+//! trajectory is a pure function of its own [`config::TaskSpec`] plus
+//! the shared churn schedule, reproduced bit-for-bit when other lanes
+//! are removed (`tests/multitask_properties.rs`). Specs are TOML
+//! (`config::MultiTaskSpec`, format in `docs/multitask.md`), the CLI is
+//! `fedlay train --tasks <spec.toml>`, and scenarios drive multi-task
+//! runs via `ScenarioSpec::run_trainer_tasks` /
+//! `dfl::multitask::run_scenario`.
+//!
 //! The `runtime` module executes models behind a single `Engine` API:
 //! the PJRT CPU client running the AOT artifacts (feature `xla`), or a
 //! pure-Rust reference backend with the identical ABI that needs no

@@ -3,12 +3,12 @@
 use fedlay::baselines;
 use fedlay::bench_util::Table;
 use fedlay::cli::{parse_args, Args, USAGE};
-use fedlay::config::{DflConfig, OverlayConfig};
-use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::config::{DflConfig, MultiTaskSpec, OverlayConfig};
+use fedlay::dfl::{multitask, MethodSpec, Trainer};
 use fedlay::ndmp::messages::MS;
 use fedlay::net::{spawn, ClientNodeConfig, SchedTransport};
 use fedlay::runtime::{find_artifacts_dir, Engine};
-use fedlay::sim::{churn, ChurnOp, ScenarioSpec, Simulator, Transport};
+use fedlay::sim::{churn, ChurnOp, ScenarioReport, ScenarioSpec, Simulator, Transport};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -126,6 +126,13 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    // --tasks only makes sense for a training run; silently dropping it
+    // would run a bare overlay simulation instead of the multi-task
+    // experiment the user asked for
+    anyhow::ensure!(
+        args.bool("trainer") || args.flags.get("tasks").is_none(),
+        "--tasks needs --trainer (a multi-task spec drives a training run)"
+    );
     let spec = ScenarioSpec::load(std::path::Path::new(spec_path))?;
     match action {
         "show" => {
@@ -172,8 +179,33 @@ fn scenario_transport(args: &Args) -> anyhow::Result<Option<Box<dyn Transport>>>
 }
 
 /// `scenario run --trainer`: drive a full fedlay-dyn training run whose
-/// churn schedule comes from the scenario spec.
+/// churn schedule comes from the scenario spec. With `--tasks
+/// <spec.toml>` the run is multi-task: every task in the spec trains
+/// over the one overlay the scenario churns.
 fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> {
+    if let Some(tasks_path) = args.flags.get("tasks") {
+        let tasks = MultiTaskSpec::load(std::path::Path::new(tasks_path))?;
+        let dir = find_artifacts_dir(None)?;
+        let engine = Engine::load(&dir, &tasks.model_tasks())?;
+        let base = DflConfig {
+            clients: spec.initial,
+            seed: spec.seed,
+            ..DflConfig::default()
+        };
+        let method =
+            MethodSpec::fedlay_multi(spec.overlay.clone(), spec.net.clone(), tasks.tasks.len());
+        let report = multitask::run_scenario(
+            &engine,
+            spec,
+            &tasks,
+            method,
+            base,
+            args.bool("freeze"),
+            scenario_transport(args)?,
+        )?;
+        print!("{}", report.render());
+        return Ok(());
+    }
     let task = args.str("task", "mlp");
     let dir = find_artifacts_dir(None)?;
     let engine = Engine::load(&dir, &[&task])?;
@@ -210,8 +242,13 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
     Ok(())
 }
 
-/// `fedlay train`: one DFL method over the AOT runtime.
+/// `fedlay train`: one DFL method over the AOT runtime. With `--tasks
+/// <spec.toml>`, N independent model tasks train over one shared live
+/// overlay (the multi-task engine).
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    if let Some(tasks_path) = args.flags.get("tasks").cloned() {
+        return cmd_train_multi(args, &tasks_path);
+    }
     let cfg = args.config()?;
     let method = args.str("method", "fedlay");
     let minutes = args.u64("minutes", 30)?;
@@ -270,7 +307,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     trainer.run(until, every)?;
     let mut t = Table::new(&["t (min)", "mean acc", "mean loss"]);
-    for s in &trainer.samples {
+    for s in trainer.samples() {
         t.row(&[
             format!("{:.1}", s.at as f64 / 60e6),
             format!("{:.4}", s.mean_accuracy),
@@ -287,6 +324,74 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "method={}  clients={}  overlay transport={}  model MB/client: {:.2}  \
          train steps/client: {:.1}",
         method,
+        n,
+        backend,
+        trainer.model_mb_per_client(),
+        trainer.train_steps_per_client()
+    );
+    Ok(())
+}
+
+/// `fedlay train --tasks <spec.toml>`: the multi-task engine — every
+/// task in the spec trains concurrently over one shared live NDMP
+/// overlay, and the run reports one accuracy column per task.
+fn cmd_train_multi(args: &Args, tasks_path: &str) -> anyhow::Result<()> {
+    let cfg = args.config()?;
+    let spec = MultiTaskSpec::load(std::path::Path::new(tasks_path))?;
+    let method = args.str("method", "fedlay-multi");
+    anyhow::ensure!(
+        method == "fedlay-multi" || method == "fedlay-dyn",
+        "--tasks runs on the live overlay (expected method fedlay-multi|fedlay-dyn, got {method:?})"
+    );
+    let minutes = args.u64("minutes", 30)?;
+    let sample_minutes = args.u64("sample-minutes", 5)?;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &spec.model_tasks())?;
+    let n = cfg.dfl.clients;
+    let joins = args.usize("joins", 0)?;
+    let fails = args.usize("fails", 0)?.min(n.saturating_sub(1));
+    let churn_at = args.u64("churn-at-min", minutes / 2)? * 60 * 1_000_000;
+    let mspec = MethodSpec::fedlay_multi(cfg.overlay.clone(), cfg.net.clone(), spec.tasks.len());
+    let (mut trainer, tables) =
+        multitask::build_trainer(&engine, mspec, cfg.dfl.clone(), &spec, n + joins)?;
+    match args.str("transport", "sim").as_str() {
+        "sim" => {}
+        "tcp" => trainer.set_transport(Box::new(SchedTransport::new()))?,
+        other => anyhow::bail!("unknown transport {other:?} (expected sim|tcp)"),
+    }
+    // mid-run churn: fail the lowest ids so join bootstraps can avoid them
+    for f in 0..fails {
+        trainer.schedule_fail(churn_at, f);
+    }
+    for j in 0..joins {
+        let boot = fails + j % (n - fails);
+        let per_lane: Vec<Vec<f64>> = tables.iter().map(|t| t[n + j].clone()).collect();
+        trainer.schedule_join_tasks(churn_at, per_lane, boot)?;
+    }
+    let until = minutes * 60 * 1_000_000;
+    let every = (sample_minutes * 60 * 1_000_000).max(1);
+    trainer.run(until, every)?;
+    let series: Vec<(String, Vec<(u64, f64)>)> = trainer
+        .lanes
+        .iter()
+        .map(|l| {
+            (
+                l.spec.name.clone(),
+                l.samples.iter().map(|s| (s.at, s.mean_accuracy)).collect(),
+            )
+        })
+        .collect();
+    print!("{}", ScenarioReport::task_accuracy_table(&series).render());
+    let backend = trainer
+        .overlay
+        .as_ref()
+        .map(|s| s.backend())
+        .unwrap_or("none");
+    println!(
+        "method={}  tasks={}  clients={}  overlay transport={}  model MB/client: {:.2}  \
+         train steps/client: {:.1}",
+        trainer.spec.name,
+        trainer.lanes.len(),
         n,
         backend,
         trainer.model_mb_per_client(),
@@ -323,6 +428,7 @@ fn cmd_node(args: &Args) -> anyhow::Result<()> {
         },
         artifacts_dir: dir,
         task: cfg.dfl.task.clone(),
+        task_id: 0,
         label_weights: weights,
         lr: cfg.dfl.lr,
         local_steps: cfg.dfl.local_steps,

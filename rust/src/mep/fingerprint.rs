@@ -1,6 +1,12 @@
 //! Model fingerprinting for de-duplication (paper §III-C3): before sending
 //! a model, a client offers its fingerprint; the receiver skips the
 //! transfer when the fingerprint matches the copy it already holds.
+//!
+//! With the multi-task engine several independent models ride the same
+//! overlay, so cache entries are keyed by `(neighbor, task)`: one task's
+//! duplicate suppression can never eat another task's model, and peer
+//! expiry can be targeted per task (`forget_task`) instead of dropping a
+//! whole neighbor's dedup state.
 
 use sha2::{Digest, Sha256};
 
@@ -21,10 +27,18 @@ pub fn fingerprint(params: &[f32]) -> u64 {
     u64::from_le_bytes(d[..8].try_into().unwrap())
 }
 
-/// Per-neighbor fingerprint cache deciding whether a transfer is needed.
+/// Per-`(neighbor, task)` fingerprint cache deciding whether a transfer is
+/// needed. Single-task callers pass task `0` everywhere.
+///
+/// Placement note: today's holders are already task-scoped (the trainer
+/// keeps one cache per client per lane, the TCP node trains one task),
+/// so each instance usually holds a single task key — the keying makes
+/// the no-cross-task-suppression invariant *structural* rather than an
+/// accident of placement, and is what a node hosting several tasks over
+/// one peer connection (the wire frames already carry `task`) keys by.
 #[derive(Debug, Clone, Default)]
 pub struct FingerprintCache {
-    entries: std::collections::BTreeMap<u64, u64>, // neighbor -> fp
+    entries: std::collections::BTreeMap<(u64, u32), u64>, // (neighbor, task) -> fp
 }
 
 impl FingerprintCache {
@@ -32,20 +46,44 @@ impl FingerprintCache {
         Self::default()
     }
 
-    /// Record the fingerprint of the model we last received from (or sent
-    /// to) `neighbor`.
-    pub fn record(&mut self, neighbor: u64, fp: u64) {
-        self.entries.insert(neighbor, fp);
+    /// Record the fingerprint of the `task` model we last received from
+    /// (or sent to) `neighbor`.
+    pub fn record(&mut self, neighbor: u64, task: u32, fp: u64) {
+        self.entries.insert((neighbor, task), fp);
     }
 
-    /// Would sending a model with fingerprint `fp` to `neighbor` be a
-    /// duplicate of what they already have?
-    pub fn is_duplicate(&self, neighbor: u64, fp: u64) -> bool {
-        self.entries.get(&neighbor) == Some(&fp)
+    /// Would sending a `task` model with fingerprint `fp` to `neighbor`
+    /// be a duplicate of what they already have?
+    pub fn is_duplicate(&self, neighbor: u64, task: u32, fp: u64) -> bool {
+        self.entries.get(&(neighbor, task)) == Some(&fp)
     }
 
+    /// Drop every task's entry for `neighbor` — the peer left the overlay
+    /// entirely (failure detection, graceful leave).
     pub fn forget(&mut self, neighbor: u64) {
-        self.entries.remove(&neighbor);
+        let keys: Vec<(u64, u32)> = self
+            .entries
+            .range((neighbor, 0)..=(neighbor, u32::MAX))
+            .map(|(&k, _)| k)
+            .collect();
+        for k in keys {
+            self.entries.remove(&k);
+        }
+    }
+
+    /// Targeted expiry: drop only `(neighbor, task)`. One task's peer
+    /// state expiring must not evict another task's dedup entries.
+    pub fn forget_task(&mut self, neighbor: u64, task: u32) {
+        self.entries.remove(&(neighbor, task));
+    }
+
+    /// Number of cached `(neighbor, task)` entries (telemetry).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -68,13 +106,57 @@ mod tests {
         let mut cache = FingerprintCache::new();
         let model = vec![0.5f32; 100];
         let fp = fingerprint(&model);
-        assert!(!cache.is_duplicate(7, fp));
-        cache.record(7, fp);
-        assert!(cache.is_duplicate(7, fp));
+        assert!(!cache.is_duplicate(7, 0, fp));
+        cache.record(7, 0, fp);
+        assert!(cache.is_duplicate(7, 0, fp));
         // model changed -> transfer needed again
         let fp2 = fingerprint(&vec![0.6f32; 100]);
-        assert!(!cache.is_duplicate(7, fp2));
+        assert!(!cache.is_duplicate(7, 0, fp2));
         cache.forget(7);
-        assert!(!cache.is_duplicate(7, fp));
+        assert!(!cache.is_duplicate(7, 0, fp));
+    }
+
+    #[test]
+    fn tasks_are_isolated_namespaces() {
+        let mut cache = FingerprintCache::new();
+        let fp = fingerprint(&[1.0f32, 2.0]);
+        cache.record(3, 0, fp);
+        // the same fingerprint for another task is NOT a duplicate:
+        // suppression never crosses tasks
+        assert!(cache.is_duplicate(3, 0, fp));
+        assert!(!cache.is_duplicate(3, 1, fp));
+        cache.record(3, 1, fp);
+        assert!(cache.is_duplicate(3, 1, fp));
+    }
+
+    /// Regression: expiring one task's peer state must not evict another
+    /// task's dedup entries — `forget_task` is targeted, while `forget`
+    /// (whole-peer expiry) still clears every task of that neighbor and
+    /// nothing of any other neighbor.
+    #[test]
+    fn targeted_forget_keeps_other_tasks_and_neighbors() {
+        let mut cache = FingerprintCache::new();
+        let fp_a = fingerprint(&[1.0f32]);
+        let fp_b = fingerprint(&[2.0f32]);
+        cache.record(7, 0, fp_a);
+        cache.record(7, 1, fp_b);
+        cache.record(8, 0, fp_a);
+        assert_eq!(cache.len(), 3);
+
+        cache.forget_task(7, 0);
+        assert!(!cache.is_duplicate(7, 0, fp_a), "task 0 entry must expire");
+        assert!(
+            cache.is_duplicate(7, 1, fp_b),
+            "task 1 entry must survive task 0 expiry"
+        );
+        assert!(cache.is_duplicate(8, 0, fp_a), "other neighbors untouched");
+
+        // whole-peer expiry clears every task of neighbor 7 only
+        cache.record(7, 0, fp_a);
+        cache.forget(7);
+        assert!(!cache.is_duplicate(7, 0, fp_a));
+        assert!(!cache.is_duplicate(7, 1, fp_b));
+        assert!(cache.is_duplicate(8, 0, fp_a));
+        assert_eq!(cache.len(), 1);
     }
 }

@@ -65,16 +65,21 @@ pub enum Msg {
     RepairStop { space: u32, dir: Dir },
 
     // ---- MEP application protocol (§III-C) ----
-    /// Fingerprint-first offer (model de-duplication, §III-C3).
+    /// Fingerprint-first offer (model de-duplication, §III-C3). `task`
+    /// names which of the coexisting model tasks the offer is about, so
+    /// several tasks can share one overlay without their dedup state or
+    /// payloads crossing (single-task nodes use task 0).
     ModelOffer {
+        task: u32,
         fingerprint: u64,
         confidence: f32,
         version: u64,
     },
     /// "Your fingerprint is new to me — send the parameters."
-    ModelRequest { version: u64 },
-    /// Flat model parameters + sender confidence.
+    ModelRequest { task: u32, version: u64 },
+    /// Flat model parameters + sender confidence for one task.
     ModelPayload {
+        task: u32,
         version: u64,
         confidence: f32,
         params: Vec<f32>,
@@ -101,9 +106,9 @@ impl Msg {
             Msg::Heartbeat => 5,
             Msg::NeighborRepair { .. } => 26,
             Msg::RepairStop { .. } => 10,
-            Msg::ModelOffer { .. } => 25,
-            Msg::ModelRequest { .. } => 13,
-            Msg::ModelPayload { params, .. } => 17 + 4 * params.len(),
+            Msg::ModelOffer { .. } => 29,
+            Msg::ModelRequest { .. } => 17,
+            Msg::ModelPayload { params, .. } => 21 + 4 * params.len(),
         }
     }
 }
@@ -129,8 +134,9 @@ mod tests {
     fn control_classification() {
         assert!(Msg::Heartbeat.is_control());
         assert!(Msg::NeighborDiscovery { joiner: 1, space: 0 }.is_control());
-        assert!(!Msg::ModelRequest { version: 1 }.is_control());
+        assert!(!Msg::ModelRequest { task: 0, version: 1 }.is_control());
         assert!(!Msg::ModelPayload {
+            task: 0,
             version: 0,
             confidence: 1.0,
             params: vec![]
@@ -141,11 +147,13 @@ mod tests {
     #[test]
     fn payload_size_scales_with_params() {
         let small = Msg::ModelPayload {
+            task: 0,
             version: 0,
             confidence: 1.0,
             params: vec![0.0; 10],
         };
         let big = Msg::ModelPayload {
+            task: 1,
             version: 0,
             confidence: 1.0,
             params: vec![0.0; 1000],

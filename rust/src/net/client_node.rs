@@ -20,7 +20,7 @@ use super::peer::{addr_of, AddrBook, PeerPool};
 use super::server::Listener;
 use crate::config::OverlayConfig;
 use crate::data::GaussianTask;
-use crate::mep::{fingerprint, pack_for_artifact, ConfidenceParams};
+use crate::mep::{fingerprint, pack_for_artifact, ConfidenceParams, FingerprintCache};
 use crate::ndmp::messages::{Msg, Time, MS};
 use crate::ndmp::node::NodeState;
 use crate::runtime::{Engine, XInput};
@@ -48,6 +48,11 @@ pub struct ClientNodeConfig {
     pub overlay: OverlayConfig,
     pub artifacts_dir: std::path::PathBuf,
     pub task: String,
+    /// Wire-level task tag for the MEP frames this node sends, and the
+    /// only tag it aggregates: several independent model tasks can share
+    /// one overlay, and a node ignores offers/payloads of tasks it does
+    /// not train (single-task fleets use 0).
+    pub task_id: u32,
     pub label_weights: Vec<f64>,
     pub lr: f32,
     pub local_steps: usize,
@@ -200,8 +205,15 @@ struct Reactor<'e> {
     c_d: f64,
     c_c: f64,
     conf: ConfidenceParams,
+    /// Latest model received per neighbor, for this node's own task only
+    /// (foreign-task payloads are dropped at the frame boundary).
     neighbor_models: HashMap<NodeId, NeighborModel>,
-    offered_fp: HashMap<NodeId, u64>,
+    /// Fingerprints already offered, keyed `(neighbor, task)`.
+    offered: FingerprintCache,
+    /// Neighbor set at the last tick, to detect peer expiry: departed
+    /// peers' dedup entries and cached models are dropped so a repaired
+    /// overlay never keeps aggregating a dead neighbor's stale model.
+    known_neighbors: BTreeSet<NodeId>,
     model_bytes_sent: u64,
     dedup_skips: u64,
     mep_sent: u64,
@@ -230,10 +242,14 @@ impl Reactor<'_> {
         }
         match &msg {
             Msg::ModelOffer {
+                task,
                 fingerprint: fp,
                 confidence: _,
                 version: v,
             } => {
+                if *task != self.cfg.task_id {
+                    return; // another task's exchange rides the same overlay
+                }
                 let known = self
                     .neighbor_models
                     .get(&from)
@@ -243,14 +259,24 @@ impl Reactor<'_> {
                     self.dedup_skips += 1;
                 } else {
                     self.mep_sent += 1;
-                    self.pool.send(from, &Msg::ModelRequest { version: *v });
+                    self.pool.send(
+                        from,
+                        &Msg::ModelRequest {
+                            task: *task,
+                            version: *v,
+                        },
+                    );
                 }
             }
-            Msg::ModelRequest { .. } => {
+            Msg::ModelRequest { task, .. } => {
+                if *task != self.cfg.task_id {
+                    return; // never answer with another task's parameters
+                }
                 self.mep_sent += 1;
                 self.pool.send(
                     from,
                     &Msg::ModelPayload {
+                        task: *task,
                         version: self.version,
                         confidence: self.my_conf,
                         params: self.params.clone(),
@@ -259,10 +285,14 @@ impl Reactor<'_> {
                 self.model_bytes_sent += (self.params.len() * 4) as u64;
             }
             Msg::ModelPayload {
+                task,
                 version: _,
                 confidence,
                 params: p,
             } => {
+                if *task != self.cfg.task_id {
+                    return; // foreign-task payloads must never be aggregated
+                }
                 self.neighbor_models.insert(
                     from,
                     NeighborModel {
@@ -282,12 +312,23 @@ impl Reactor<'_> {
     }
 
     /// NDMP timer granularity: heartbeats, failure detection, probes.
+    /// After the tick, expire MEP peer state for neighbors the protocol
+    /// dropped: their cached model leaves the aggregation set and their
+    /// dedup entry is forgotten for *this* task only (`forget_task`), so
+    /// on a multi-task node one task's expiry never evicts another
+    /// task's entries.
     fn ndmp_tick(&mut self) {
         let now = self.now_us();
         let outs = self.ndmp.tick(now);
         for o in outs {
             self.pool.send(o.to, &o.msg);
         }
+        let current = self.ndmp.neighbor_ids();
+        for departed in self.known_neighbors.difference(&current) {
+            self.neighbor_models.remove(departed);
+            self.offered.forget_task(*departed, self.cfg.task_id);
+        }
+        self.known_neighbors = current;
     }
 
     /// One MEP period: local training, fingerprint-first offers to all
@@ -309,16 +350,18 @@ impl Reactor<'_> {
         }
         self.version += 1;
         let fp = fingerprint(&self.params);
+        let task = self.cfg.task_id;
         for n in self.ndmp.neighbor_ids() {
-            if self.offered_fp.get(&n) == Some(&fp) {
+            if self.offered.is_duplicate(n, task, fp) {
                 self.dedup_skips += 1;
                 continue;
             }
-            self.offered_fp.insert(n, fp);
+            self.offered.record(n, task, fp);
             self.mep_sent += 1;
             self.pool.send(
                 n,
                 &Msg::ModelOffer {
+                    task,
                     fingerprint: fp,
                     confidence: self.my_conf,
                     version: self.version,
@@ -408,7 +451,8 @@ fn run_node(
         c_c,
         conf: ConfidenceParams::default(),
         neighbor_models: HashMap::new(),
-        offered_fp: HashMap::new(),
+        offered: FingerprintCache::new(),
+        known_neighbors: BTreeSet::new(),
         model_bytes_sent: 0,
         dedup_skips: 0,
         mep_sent: 0,

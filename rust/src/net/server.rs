@@ -109,6 +109,7 @@ mod tests {
         pool.send(
             0,
             &Msg::ModelOffer {
+                task: 0,
                 fingerprint: 123,
                 confidence: 0.5,
                 version: 7,

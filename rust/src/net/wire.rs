@@ -159,24 +159,29 @@ pub fn encode(sender: NodeId, msg: &Msg) -> Vec<u8> {
             T_REPAIR_STOP
         }
         Msg::ModelOffer {
+            task,
             fingerprint,
             confidence,
             version,
         } => {
+            w.u32(*task);
             w.u64(*fingerprint);
             w.f32(*confidence);
             w.u64(*version);
             T_MODEL_OFFER
         }
-        Msg::ModelRequest { version } => {
+        Msg::ModelRequest { task, version } => {
+            w.u32(*task);
             w.u64(*version);
             T_MODEL_REQUEST
         }
         Msg::ModelPayload {
+            task,
             version,
             confidence,
             params,
         } => {
+            w.u32(*task);
             w.u64(*version);
             w.f32(*confidence);
             w.u32(params.len() as u32);
@@ -231,12 +236,17 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
             dir: byte_dir(r.u8()?)?,
         },
         T_MODEL_OFFER => Msg::ModelOffer {
+            task: r.u32()?,
             fingerprint: r.u64()?,
             confidence: r.f32()?,
             version: r.u64()?,
         },
-        T_MODEL_REQUEST => Msg::ModelRequest { version: r.u64()? },
+        T_MODEL_REQUEST => Msg::ModelRequest {
+            task: r.u32()?,
+            version: r.u64()?,
+        },
         T_MODEL_PAYLOAD => {
+            let task = r.u32()?;
             let version = r.u64()?;
             let confidence = r.f32()?;
             let n = r.u32()? as usize;
@@ -245,6 +255,7 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
                 params.push(r.f32()?);
             }
             Msg::ModelPayload {
+                task,
                 version,
                 confidence,
                 params,
@@ -350,23 +361,36 @@ mod tests {
                 dir: Dir::Cw,
             },
             Msg::ModelOffer {
+                task: 0,
                 fingerprint: 0xDEAD_BEEF,
                 confidence: 0.75,
                 version: 9,
             },
-            Msg::ModelRequest { version: 4 },
-            Msg::ModelRequest { version: u64::MAX },
+            Msg::ModelOffer {
+                task: u32::MAX,
+                fingerprint: u64::MAX,
+                confidence: 0.0,
+                version: 0,
+            },
+            Msg::ModelRequest { task: 0, version: 4 },
+            Msg::ModelRequest {
+                task: u32::MAX,
+                version: u64::MAX,
+            },
             Msg::ModelPayload {
+                task: 1,
                 version: 8,
                 confidence: 0.5,
                 params: vec![1.0, -2.5, 3.25],
             },
             Msg::ModelPayload {
+                task: 0,
                 version: 0,
                 confidence: 0.0,
                 params: Vec::new(),
             },
             Msg::ModelPayload {
+                task: 7,
                 version: 1,
                 confidence: 1.0,
                 params: vec![f32::MAX, f32::MIN, f32::INFINITY, f32::NEG_INFINITY, 0.0],
@@ -384,7 +408,33 @@ mod tests {
     #[test]
     fn roundtrip_sender_extremes() {
         roundtrip_from(0, Msg::Heartbeat);
-        roundtrip_from(u64::MAX, Msg::ModelRequest { version: 1 });
+        roundtrip_from(u64::MAX, Msg::ModelRequest { task: 0, version: 1 });
+    }
+
+    /// The task id survives the wire bit-exactly on every MEP message —
+    /// the multi-task engine relies on frames never migrating between
+    /// tasks.
+    #[test]
+    fn task_tags_roundtrip_distinctly() {
+        for task in [0u32, 1, 2, 41, u32::MAX] {
+            roundtrip(Msg::ModelOffer {
+                task,
+                fingerprint: 5,
+                confidence: 0.5,
+                version: 2,
+            });
+            roundtrip(Msg::ModelRequest { task, version: 2 });
+            roundtrip(Msg::ModelPayload {
+                task,
+                version: 2,
+                confidence: 0.5,
+                params: vec![1.0, 2.0],
+            });
+        }
+        // two frames differing only in task must not encode identically
+        let a = encode(1, &Msg::ModelRequest { task: 0, version: 9 });
+        let b = encode(1, &Msg::ModelRequest { task: 1, version: 9 });
+        assert_ne!(a, b);
     }
 
     /// Every strict prefix of every variant's frame must fail to decode
@@ -408,7 +458,7 @@ mod tests {
     /// layout uses must be rejected (trailing garbage, not ignored).
     #[test]
     fn rejects_trailing_payload_bytes() {
-        for msg in [Msg::Heartbeat, Msg::ModelRequest { version: 2 }] {
+        for msg in [Msg::Heartbeat, Msg::ModelRequest { task: 0, version: 2 }] {
             let mut frame = encode(1, &msg);
             let len = u32::from_be_bytes(frame[10..14].try_into().unwrap()) + 1;
             frame[10..14].copy_from_slice(&len.to_be_bytes());
@@ -461,7 +511,7 @@ mod tests {
 
     #[test]
     fn rejects_truncated() {
-        let frame = encode(1, &Msg::ModelRequest { version: 2 });
+        let frame = encode(1, &Msg::ModelRequest { task: 0, version: 2 });
         let mut cursor = std::io::Cursor::new(&frame[..frame.len() - 2]);
         assert!(read_frame(&mut cursor).is_err());
     }
@@ -480,6 +530,7 @@ mod tests {
             Msg::Heartbeat,
             Msg::NeighborDiscovery { joiner: 1, space: 0 },
             Msg::ModelPayload {
+                task: 0,
                 version: 1,
                 confidence: 1.0,
                 params: vec![0.0; 100],

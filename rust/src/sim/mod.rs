@@ -22,8 +22,8 @@ pub use event::{Event, EventKind, EventQueue};
 pub use network::{LatencyModel, SimTransport};
 pub use runner::{grow_network, CorrectnessSample, Simulator};
 pub use scenario::{
-    quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, Phase, PhaseKind,
-    RingQuality, ScenarioReport, ScenarioSpec, TrainerSink,
+    quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, MultiTrainerSink, Phase,
+    PhaseKind, RingQuality, ScenarioReport, ScenarioSpec,
 };
 pub use sched::{EventId, Scheduled, Scheduler};
 pub use transport::{Arrival, Transport};

@@ -128,17 +128,23 @@ impl ChurnSink for Simulator {
 }
 
 /// Adapter scheduling a scenario onto a `dfl::Trainer`: mid-run joiners
-/// need label weights, so the sink carries a `node id -> weights`
-/// function alongside the trainer.
-pub struct TrainerSink<'a, 'e, F> {
+/// need one weight vector *per lane*, so the sink carries a
+/// `(lane, node id) -> weights` function alongside the trainer
+/// (single-task trainers have one lane; `run_trainer` adapts the
+/// single-task closure form). One churn schedule enters every lane's
+/// membership at once — per-task membership arithmetic is shared by
+/// construction.
+pub struct MultiTrainerSink<'a, 'e, F> {
     pub trainer: &'a mut Trainer<'e>,
     pub weights_for: F,
 }
 
-impl<F: FnMut(usize) -> Vec<f64>> ChurnSink for TrainerSink<'_, '_, F> {
+impl<F: FnMut(usize, usize) -> Vec<f64>> ChurnSink for MultiTrainerSink<'_, '_, F> {
     fn join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) -> Result<()> {
-        let w = (self.weights_for)(node as usize);
-        let id = self.trainer.schedule_join(at, w, bootstrap as usize)?;
+        let per_lane: Vec<Vec<f64>> = (0..self.trainer.lanes.len())
+            .map(|lane| (self.weights_for)(lane, node as usize))
+            .collect();
+        let id = self.trainer.schedule_join_tasks(at, per_lane, bootstrap as usize)?;
         ensure!(
             id == node as usize,
             "scenario join id mismatch: trainer assigned {id}, schedule expects {node}"
@@ -515,30 +521,51 @@ impl ScenarioSpec {
         Ok((sim, report))
     }
 
-    /// Run the scenario through a full training run: churn is scheduled
-    /// on the trainer (joins enter through the NDMP protocol of the
-    /// embedded overlay), the overlay records the correctness series, and
-    /// the report carries the accuracy series plus neighbor-cache stats.
-    /// `weights_for(id)` supplies the label weights of mid-run joiners.
+    /// Run the scenario through a full single-task training run: churn is
+    /// scheduled on the trainer (joins enter through the NDMP protocol of
+    /// the embedded overlay), the overlay records the correctness series,
+    /// and the report carries the accuracy series plus neighbor-cache
+    /// stats. `weights_for(id)` supplies the label weights of mid-run
+    /// joiners.
     pub fn run_trainer<F>(
+        &self,
+        trainer: &mut Trainer<'_>,
+        mut weights_for: F,
+    ) -> Result<ScenarioReport>
+    where
+        F: FnMut(usize) -> Vec<f64>,
+    {
+        ensure!(
+            trainer.lanes.len() == 1,
+            "multi-task trainers need run_trainer_tasks (per-lane joiner weights)"
+        );
+        self.run_trainer_tasks(trainer, move |_lane, node| weights_for(node))
+    }
+
+    /// Run the scenario through a multi-task training run: one churn
+    /// schedule drives every lane's membership over the shared overlay,
+    /// and the report carries per-task accuracy series alongside the
+    /// shared correctness series. `weights_for(lane, id)` supplies a
+    /// mid-run joiner's label weights for each lane.
+    pub fn run_trainer_tasks<F>(
         &self,
         trainer: &mut Trainer<'_>,
         weights_for: F,
     ) -> Result<ScenarioReport>
     where
-        F: FnMut(usize) -> Vec<f64>,
+        F: FnMut(usize, usize) -> Vec<f64>,
     {
         self.validate()?;
         ensure!(
-            trainer.clients.len() == self.initial,
+            trainer.clients().len() == self.initial,
             "trainer has {} clients, scenario starts from {}",
-            trainer.clients.len(),
+            trainer.clients().len(),
             self.initial
         );
         let events = self.compile();
         let counts = ChurnCounts::of(&events);
         {
-            let mut sink = TrainerSink {
+            let mut sink = MultiTrainerSink {
                 trainer: &mut *trainer,
                 weights_for,
             };
@@ -563,9 +590,19 @@ impl ScenarioSpec {
             .expect("dynamic overlay state after run");
         let mut report = ScenarioReport::from_sim(self, sim, counts, settled_at);
         report.accuracy = trainer
-            .samples
+            .samples()
             .iter()
             .map(|s| (s.at, s.mean_accuracy))
+            .collect();
+        report.task_accuracy = trainer
+            .lanes
+            .iter()
+            .map(|l| {
+                (
+                    l.spec.name.clone(),
+                    l.samples.iter().map(|s| (s.at, s.mean_accuracy)).collect(),
+                )
+            })
             .collect();
         report.cache_hits = cache_hits;
         report.cache_misses = cache_misses;
@@ -971,8 +1008,13 @@ pub struct ScenarioReport {
     pub ring: RingQuality,
     pub control_messages_per_node: f64,
     pub delivered: u64,
-    /// `(t, mean accuracy)` — empty for overlay-only runs.
+    /// `(t, mean accuracy)` of the primary lane — empty for overlay-only
+    /// runs.
     pub accuracy: Vec<(Time, f64)>,
+    /// Per-task accuracy series `(task name, [(t, mean accuracy)])` —
+    /// one entry per lane for trainer runs (single-task runs have one),
+    /// empty for overlay-only runs.
+    pub task_accuracy: Vec<(String, Vec<(Time, f64)>)>,
     /// Trainer neighbor-cache telemetry (zero for overlay-only runs).
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -998,9 +1040,40 @@ impl ScenarioReport {
             control_messages_per_node: sim.control_messages_per_node(),
             delivered: sim.delivered,
             accuracy: Vec::new(),
+            task_accuracy: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
         }
+    }
+
+    /// Per-task accuracy series as one aligned table: a "t (min)" column
+    /// plus one column per task, rows padded with "-" where a lane has
+    /// fewer samples. The one construction shared by `render` and the
+    /// CLI's `train --tasks` output.
+    pub fn task_accuracy_table(tasks: &[(String, Vec<(Time, f64)>)]) -> crate::bench_util::Table {
+        let mut headers: Vec<String> = vec!["t (min)".into()];
+        headers.extend(tasks.iter().map(|(n, _)| n.clone()));
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = crate::bench_util::Table::new(&hdr_refs);
+        let rows = tasks.iter().map(|(_, s)| s.len()).max().unwrap_or(0);
+        for r in 0..rows {
+            let at = tasks
+                .iter()
+                .filter_map(|(_, s)| s.get(r))
+                .map(|(at, _)| *at)
+                .next()
+                .unwrap_or(0);
+            let mut cells = vec![format!("{:.1}", at as f64 / 60e6)];
+            for (_, s) in tasks {
+                cells.push(
+                    s.get(r)
+                        .map(|(_, acc)| format!("{acc:.4}"))
+                        .unwrap_or_else(|| "-".into()),
+                );
+            }
+            t.row(&cells);
+        }
+        t
     }
 
     /// The correctness timeline as an aligned table — the one
@@ -1022,7 +1095,11 @@ impl ScenarioReport {
         use crate::bench_util::Table;
         let mut out = String::new();
         out.push_str(&self.correctness_table().render());
-        if !self.accuracy.is_empty() {
+        if self.task_accuracy.len() > 1 {
+            // multi-task run: one accuracy column per task, rows aligned
+            // by sample index (every lane shares the sampling cadence)
+            out.push_str(&Self::task_accuracy_table(&self.task_accuracy).render());
+        } else if !self.accuracy.is_empty() {
             let mut a = Table::new(&["t (min)", "mean accuracy"]);
             for (at, acc) in &self.accuracy {
                 a.row(&[format!("{:.1}", *at as f64 / 60e6), format!("{acc:.4}")]);
@@ -1078,6 +1155,14 @@ impl ScenarioReport {
                 s.correctness,
                 s.live_nodes
             ));
+        }
+        // trainer runs pin every lane's accuracy series alongside the
+        // shared correctness series (absent for overlay-only runs, so
+        // existing sim-only goldens are unchanged)
+        for (name, series) in &self.task_accuracy {
+            for (at, acc) in series {
+                out.push_str(&format!("task={name} t_ms={} acc={acc:.4}\n", at / MS));
+            }
         }
         out.push_str(&format!(
             "final c={:.4} live={}\n",

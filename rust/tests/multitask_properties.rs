@@ -1,0 +1,346 @@
+//! Property-based task-isolation suite for the multi-task engine
+//! (polestar-style seeded sweeps, like `scenario_properties.rs`): each
+//! draw builds a random bundle of 2–3 model tasks — mixed models (and
+//! therefore mixed parameter dimensionalities), random MEP periods and
+//! shard levels — trains them over ONE shared NDMP overlay under churn
+//! (a protocol join and a crash failure mid-run), and asserts the
+//! isolation invariants:
+//!
+//!   * **fingerprint provenance** — no parameter vector ever crosses
+//!     tasks: the fingerprint sets of the lanes are pairwise disjoint at
+//!     every checkpoint (one task's model can never be aggregated into,
+//!     or dedup-suppress, another task's);
+//!   * **per-task membership arithmetic** — every lane's live count
+//!     equals initial + joins − fails, and all lanes agree on every
+//!     client's aliveness;
+//!   * **per-task overlay correctness** — the shared overlay quiesces to
+//!     Definition-1 correctness exactly 1.0, which is every task's
+//!     learning topology at once;
+//!   * **bit-for-bit isolation** — disabling all lanes but one
+//!     reproduces that task's single-task trajectory *bit for bit*:
+//!     identical accuracy series (every f64), identical final
+//!     parameters (every f32), identical exchange/dedup/byte telemetry.
+//!     A lane's trajectory is a pure function of its own `TaskSpec` plus
+//!     the shared churn schedule — other lanes contribute nothing.
+
+use fedlay::config::{DflConfig, NetConfig, OverlayConfig, TaskSpec};
+use fedlay::dfl::multitask::{lane_weights, WeightTables};
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::mep::fingerprint;
+use fedlay::ndmp::messages::SEC;
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::sim::quiesce;
+use fedlay::util::Rng;
+use std::collections::HashSet;
+
+const MIN: u64 = 60_000_000; // µs per simulated minute
+
+fn overlay() -> OverlayConfig {
+    OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 2_000,
+        failure_multiple: 3,
+        repair_probe_ms: 8_000,
+    }
+}
+
+fn net(seed: u64) -> NetConfig {
+    NetConfig {
+        latency_ms: 80.0,
+        jitter: 0.2,
+        seed,
+    }
+}
+
+/// Draw one random task: mixed models (mlp: 7k-dim params, lstm: small
+/// char model — different dims by construction), random shard level and
+/// MEP period, and a seed derived from the lane index so no two lanes
+/// are accidental clones.
+fn random_task(rng: &mut Rng, idx: usize) -> TaskSpec {
+    let model = ["mlp", "lstm"][rng.index(2)];
+    TaskSpec {
+        name: format!("t{idx}-{model}"),
+        task: model.into(),
+        shards_per_client: 4 + rng.index(5),
+        local_steps: 1,
+        lr: 0.5,
+        comm_period_ms: (3 + rng.index(4)) as u64 * 60_000, // 3–6 sim min
+        seed: 0x5EED ^ ((idx as u64 + 1) << 16) ^ rng.next_u64(),
+    }
+}
+
+const HORIZON: u64 = 24 * MIN;
+const CHECKPOINT: u64 = 12 * MIN;
+const SAMPLE: u64 = 6 * MIN;
+
+/// The seeded random churn every run replays: one protocol join (random
+/// instant, random bootstrap) and one crash failure (random victim,
+/// random later instant). Both the multi-task run and each single-task
+/// baseline schedule the identical draw.
+#[derive(Clone, Copy)]
+struct ChurnDraw {
+    join_at: u64,
+    bootstrap: usize,
+    fail_at: u64,
+    victim: usize,
+}
+
+impl ChurnDraw {
+    fn random(rng: &mut Rng, n: usize) -> Self {
+        Self {
+            join_at: (5 + rng.index(4) as u64) * MIN + rng.index(777_777) as u64,
+            bootstrap: rng.index(n),
+            fail_at: (12 + rng.index(6) as u64) * MIN + rng.index(777_777) as u64,
+            victim: rng.index(n),
+        }
+    }
+}
+
+/// Build a trainer over `tasks` (with per-lane weight tables covering
+/// `n + 1` clients) and schedule the churn draw — the caller runs it in
+/// checkpointed chunks.
+fn build_and_schedule<'e>(
+    engine: &'e Engine,
+    tasks: &[TaskSpec],
+    n: usize,
+    seed: u64,
+    churn: ChurnDraw,
+) -> anyhow::Result<(Trainer<'e>, WeightTables)> {
+    let method = MethodSpec::fedlay_multi(overlay(), net(seed), tasks.len());
+    let mut lanes = Vec::new();
+    let mut tables = Vec::new();
+    for t in tasks {
+        let table = lane_weights(engine, t, n + 1)?;
+        lanes.push((t.clone(), table[..n].to_vec()));
+        tables.push(table);
+    }
+    let cfg = DflConfig {
+        clients: n,
+        seed,
+        ..DflConfig::default()
+    };
+    let mut trainer = Trainer::new_multi(engine, method, cfg, lanes)?;
+    let joiner_w: Vec<Vec<f64>> = tables.iter().map(|t| t[n].clone()).collect();
+    let id = trainer.schedule_join_tasks(churn.join_at, joiner_w, churn.bootstrap)?;
+    assert_eq!(id, n);
+    trainer.schedule_fail(churn.fail_at, churn.victim);
+    Ok((trainer, tables))
+}
+
+/// All parameter fingerprints of one lane's clients.
+fn lane_fps(trainer: &Trainer, lane: usize) -> HashSet<u64> {
+    trainer.lanes[lane]
+        .clients
+        .iter()
+        .map(|c| fingerprint(&c.params))
+        .collect()
+}
+
+/// Fingerprint provenance: the lanes' fingerprint sets must be pairwise
+/// disjoint — a shared fingerprint would mean a parameter vector crossed
+/// tasks.
+fn assert_disjoint(sets: &[HashSet<u64>], when: &str) {
+    for a in 0..sets.len() {
+        for b in a + 1..sets.len() {
+            let crossed: Vec<&u64> = sets[a].intersection(&sets[b]).collect();
+            assert!(
+                crossed.is_empty(),
+                "{when}: parameter vectors crossed between lanes {a} and {b}: {crossed:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_random_task_bundles_stay_isolated_under_churn() -> anyhow::Result<()> {
+    let n = 8usize;
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp", "lstm"])?;
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(seed ^ 0x3A5C);
+        let k = 2 + rng.index(2); // 2–3 tasks
+        let tasks: Vec<TaskSpec> = (0..k).map(|i| random_task(&mut rng, i)).collect();
+        let churn = ChurnDraw::random(&mut rng, n);
+
+        // ---- the multi-task run, stepped in two chunks so provenance
+        // and membership are checked mid-flight, not just at the end
+        let (mut multi, tables) = build_and_schedule(&engine, &tasks, n, seed, churn)?;
+        multi.run(CHECKPOINT, SAMPLE)?;
+        let mut fp_sets: Vec<HashSet<u64>> = (0..k).map(|l| lane_fps(&multi, l)).collect();
+        assert_disjoint(&fp_sets, "checkpoint");
+        multi.run(HORIZON, SAMPLE)?;
+        for (l, set) in fp_sets.iter_mut().enumerate() {
+            set.extend(lane_fps(&multi, l));
+        }
+        assert_disjoint(&fp_sets, "horizon");
+
+        // ---- per-task membership arithmetic: every lane sees
+        // initial + 1 join - 1 fail live clients, and the lanes agree
+        // on each client's aliveness
+        for (l, lane) in multi.lanes.iter().enumerate() {
+            assert_eq!(
+                lane.clients.len(),
+                n + 1,
+                "seed {seed}: lane {l} lost the joiner placeholder"
+            );
+            let live = lane.clients.iter().filter(|c| c.alive).count();
+            assert_eq!(live, n + 1 - 1, "seed {seed}: lane {l} membership drifted");
+            assert!(lane.clients[n].alive, "seed {seed}: lane {l} joiner dead");
+            assert!(
+                !lane.clients[churn.victim].alive,
+                "seed {seed}: lane {l} zombie victim {}",
+                churn.victim
+            );
+            let flags: Vec<bool> = lane.clients.iter().map(|c| c.alive).collect();
+            let flags0: Vec<bool> = multi.lanes[0].clients.iter().map(|c| c.alive).collect();
+            assert_eq!(flags, flags0, "seed {seed}: lanes disagree on aliveness");
+            // every lane actually trained and exchanged
+            assert!(
+                lane.clients.iter().any(|c| c.exchanges > 0),
+                "seed {seed}: lane {l} never aggregated"
+            );
+        }
+
+        // ---- the shared overlay (every task's topology) quiesces to
+        // Definition-1 correctness exactly 1.0
+        {
+            let sim = multi.overlay.as_mut().expect("dynamic overlay");
+            let deadline = sim.now + 240 * SEC;
+            assert!(
+                quiesce(sim, deadline, SEC).is_some(),
+                "seed {seed}: overlay never quiesced (c={})",
+                sim.correctness()
+            );
+            assert!((sim.correctness() - 1.0).abs() < 1e-12);
+        }
+
+        // ---- bit-for-bit isolation: re-run every lane alone (same
+        // spec, same weights, same churn schedule, same chunking) and
+        // compare the whole trajectory exactly
+        for (l, task) in tasks.iter().enumerate() {
+            let mut single = {
+                let cfg = DflConfig {
+                    clients: n,
+                    seed,
+                    ..DflConfig::default()
+                };
+                let lanes = vec![(task.clone(), tables[l][..n].to_vec())];
+                Trainer::new_multi(
+                    &engine,
+                    MethodSpec::fedlay_dynamic(overlay(), net(seed)),
+                    cfg,
+                    lanes,
+                )?
+            };
+            single.schedule_join(churn.join_at, tables[l][n].clone(), churn.bootstrap)?;
+            single.schedule_fail(churn.fail_at, churn.victim);
+            single.run(CHECKPOINT, SAMPLE)?;
+            single.run(HORIZON, SAMPLE)?;
+
+            let a = &multi.lanes[l];
+            let b = &single.lanes[0];
+            assert_eq!(
+                a.samples.len(),
+                b.samples.len(),
+                "seed {seed} lane {l}: sample counts diverged"
+            );
+            for (sa, sb) in a.samples.iter().zip(&b.samples) {
+                assert_eq!(sa.at, sb.at, "seed {seed} lane {l}: sample times diverged");
+                assert!(
+                    sa.mean_accuracy == sb.mean_accuracy
+                        && sa.mean_loss == sb.mean_loss
+                        && sa.per_client == sb.per_client,
+                    "seed {seed} lane {l}: trajectory diverged at t={} \
+                     ({} vs {})",
+                    sa.at,
+                    sa.mean_accuracy,
+                    sb.mean_accuracy
+                );
+            }
+            for (ca, cb) in a.clients.iter().zip(&b.clients) {
+                assert!(
+                    ca.params == cb.params,
+                    "seed {seed} lane {l}: final params diverged for client {}",
+                    ca.id
+                );
+                assert_eq!(ca.exchanges, cb.exchanges, "seed {seed} lane {l}");
+                assert_eq!(ca.dedup_skips, cb.dedup_skips, "seed {seed} lane {l}");
+                assert_eq!(ca.model_bytes_sent, cb.model_bytes_sent, "seed {seed} lane {l}");
+                assert_eq!(ca.train_steps, cb.train_steps, "seed {seed} lane {l}");
+            }
+            // the acceptance bound (≤ 0.02 of baseline) is the loose form
+            // of the exact equality above
+            let ma = a.samples.last().unwrap().mean_accuracy;
+            let sa = b.samples.last().unwrap().mean_accuracy;
+            assert!((ma - sa).abs() <= 0.02);
+        }
+    }
+    Ok(())
+}
+
+/// Sanity for the legacy constructor: `Trainer::new` is the one-lane
+/// special case of the multi-task engine — same lane count, same spec
+/// derivation, same clients.
+#[test]
+fn single_task_constructor_is_the_one_lane_special_case() -> anyhow::Result<()> {
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        clients: 6,
+        ..DflConfig::default()
+    };
+    let w = fedlay::data::shard_labels(6, 10, cfg.shards_per_client, cfg.seed);
+    let t = Trainer::new(&engine, MethodSpec::fedlay(6, 2), cfg.clone(), w)?;
+    assert_eq!(t.lanes.len(), 1);
+    assert_eq!(t.lanes[0].spec, TaskSpec::from_dfl(&cfg));
+    assert_eq!(t.clients().len(), 6);
+    assert_eq!(t.task_name(), "mlp");
+    Ok(())
+}
+
+/// Multi-task guardrails: synchronous/centralized methods cannot carry
+/// more than one lane, duplicate lane names are rejected, and
+/// single-task joins are refused on multi-task trainers.
+#[test]
+fn multi_task_constructor_guardrails() -> anyhow::Result<()> {
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        clients: 4,
+        ..DflConfig::default()
+    };
+    let mk_task = |name: &str, seed: u64| TaskSpec {
+        name: name.into(),
+        task: "mlp".into(),
+        shards_per_client: 8,
+        local_steps: 1,
+        lr: 0.5,
+        comm_period_ms: 60_000,
+        seed,
+    };
+    let w = fedlay::data::shard_labels(4, 10, 8, 1);
+    let two =
+        |a: &str, b: &str| vec![(mk_task(a, 1), w.clone()), (mk_task(b, 2), w.clone())];
+    // centralized rounds cannot host two lanes
+    let central = Trainer::new_multi(&engine, MethodSpec::fedavg(), cfg.clone(), two("a", "b"));
+    assert!(central.is_err());
+    // duplicate names are ambiguous in every report
+    let dup = Trainer::new_multi(
+        &engine,
+        MethodSpec::fedlay_multi(overlay(), net(1), 2),
+        cfg.clone(),
+        two("a", "a"),
+    );
+    assert!(dup.is_err());
+    // a valid two-lane trainer refuses the single-task join API
+    let mut t = Trainer::new_multi(
+        &engine,
+        MethodSpec::fedlay_multi(overlay(), net(1), 2),
+        cfg,
+        two("a", "b"),
+    )?;
+    assert!(t.schedule_join(1, vec![1.0; 10], 0).is_err());
+    let join = t.schedule_join_tasks(1, vec![vec![1.0; 10], vec![1.0; 10]], 0);
+    assert!(join.is_ok());
+    Ok(())
+}

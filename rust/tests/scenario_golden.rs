@@ -11,8 +11,10 @@
 //!     fresh scenario) — commit the generated file;
 //!   * an intentional change is re-blessed with `FEDLAY_BLESS=1`.
 
-use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
+use fedlay::dfl::{multitask, MethodSpec};
 use fedlay::ndmp::messages::SEC;
+use fedlay::runtime::{find_artifacts_dir, Engine};
 use fedlay::sim::ScenarioSpec;
 use std::fs;
 use std::path::PathBuf;
@@ -69,12 +71,17 @@ fn diff_report(name: &str, want: &str, got: &str) -> String {
 
 fn run_golden(name: &str, spec: &ScenarioSpec) {
     let (_, report) = spec.run_sim(None).expect("scenario run");
-    let got = report.golden_lines();
+    compare_golden(name, &report.golden_lines());
+}
+
+/// Compare `got` against `tests/golden/<name>.txt`, blessing a missing
+/// golden from the current run (`FEDLAY_BLESS=1` re-blesses).
+fn compare_golden(name: &str, got: &str) {
     let path = golden_dir().join(format!("{name}.txt"));
     let bless = std::env::var("FEDLAY_BLESS").is_ok();
     if bless || !path.exists() {
         fs::create_dir_all(golden_dir()).expect("create golden dir");
-        fs::write(&path, &got).expect("write golden");
+        fs::write(&path, got).expect("write golden");
         if !bless {
             eprintln!(
                 "golden {} was missing; blessed the current trajectory — commit it",
@@ -85,7 +92,7 @@ fn run_golden(name: &str, spec: &ScenarioSpec) {
     }
     let want = fs::read_to_string(&path).expect("read golden");
     if want != got {
-        panic!("{}", diff_report(name, &want, &got));
+        panic!("{}", diff_report(name, &want, got));
     }
 }
 
@@ -116,4 +123,41 @@ fn golden_mixed_poisson() {
     spec.net = net(8);
     spec.sample_every = 5 * SEC;
     run_golden("mixed_poisson", &spec);
+}
+
+/// Canonical two-task trainer run: the `two_task_mix` churn scenario
+/// drives BOTH tasks of `configs/tasks/two_task_mix.toml` over one
+/// overlay, and the snapshot pins the shared correctness series plus
+/// each task's accuracy series (the `task=<name> ...` lines). Any drift
+/// in the multi-task engine — lane scheduling, task-keyed dedup,
+/// per-lane eval streams, churn fan-out across lanes — shows up as a
+/// line diff.
+#[test]
+fn golden_two_task_mix() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let spec =
+        ScenarioSpec::load(&root.join("configs/scenarios/two_task_mix.toml")).expect("scenario");
+    let tasks =
+        MultiTaskSpec::load(&root.join("configs/tasks/two_task_mix.toml")).expect("tasks");
+    let dir = find_artifacts_dir(None).expect("artifacts");
+    let engine = Engine::load(&dir, &tasks.model_tasks()).expect("engine");
+    let base = DflConfig {
+        clients: spec.initial,
+        seed: spec.seed,
+        ..DflConfig::default()
+    };
+    let method =
+        MethodSpec::fedlay_multi(spec.overlay.clone(), spec.net.clone(), tasks.tasks.len());
+    let report =
+        multitask::run_scenario(&engine, &spec, &tasks, method, base, false, None).expect("run");
+    // acceptance on top of the snapshot: the shared overlay settles to
+    // the ideal rings (per-task correctness exactly 1.0) and both tasks
+    // produced their own accuracy series
+    assert!(report.settled_at.is_some(), "two-task scenario never settled");
+    assert!((report.final_correctness - 1.0).abs() < 1e-12);
+    assert_eq!(report.task_accuracy.len(), 2);
+    for (name, series) in &report.task_accuracy {
+        assert!(!series.is_empty(), "task {name} recorded no samples");
+    }
+    compare_golden("two_task_mix", &report.golden_lines());
 }

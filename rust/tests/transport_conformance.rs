@@ -11,14 +11,17 @@
 //! (coordinates are hash-derived from node ids), so both backends must
 //! land on the exact same neighbor multisets with correctness 1.0.
 
-use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
+use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
 use fedlay::data::shard_labels;
-use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::dfl::{multitask, MethodSpec, Trainer};
 use fedlay::net::SchedTransport;
 use fedlay::ndmp::messages::{Time, SEC};
 use fedlay::runtime::{find_artifacts_dir, Engine};
-use fedlay::sim::{ChurnCounts, Phase, PhaseKind, ScenarioSpec, Simulator};
+use fedlay::sim::{
+    ChurnCounts, ChurnOp, Phase, PhaseKind, ScenarioReport, ScenarioSpec, Simulator, Transport,
+};
 use fedlay::topology::{Membership, NeighborSnapshot, NodeId};
+use std::path::PathBuf;
 
 const SPACES: usize = 2;
 
@@ -171,6 +174,120 @@ fn scenario_with_leaves_agrees_on_both_backends() {
     );
 }
 
+/// Two-task conformance: the canonical `two_task_mix` churn scenario —
+/// two model tasks (mlp + lstm) training over ONE shared overlay while
+/// three clients join through the protocol and two crash-fail — must be
+/// **pinned identical** on the in-memory and the TCP backend: same
+/// per-task membership, same ring snapshots after settle, and the same
+/// per-task accuracy series to the last bit. The scenario's network is
+/// zero-latency, so the in-memory backend completes every protocol
+/// exchange within microseconds of its virtual instant, exactly like the
+/// TCP backend's per-instant quiescence pump — ring views agree at every
+/// wake and sample time, which is what makes bitwise accuracy
+/// conformance possible at all.
+#[test]
+fn two_task_scenario_is_pinned_identical_on_sim_and_tcp() -> anyhow::Result<()> {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let scenario = ScenarioSpec::load(&root.join("configs/scenarios/two_task_mix.toml"))?;
+    let tasks = MultiTaskSpec::load(&root.join("configs/tasks/two_task_mix.toml"))?;
+    assert_eq!(tasks.tasks.len(), 2, "the canonical spec carries two tasks");
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &tasks.model_tasks())?;
+    let joins = scenario
+        .compile()
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    let population = scenario.initial + joins;
+
+    fn run_once(
+        engine: &Engine,
+        scenario: &ScenarioSpec,
+        tasks: &MultiTaskSpec,
+        population: usize,
+        transport: Option<Box<dyn Transport>>,
+    ) -> anyhow::Result<(ScenarioReport, NeighborSnapshot, Vec<Vec<bool>>)> {
+        let base = DflConfig {
+            clients: scenario.initial,
+            seed: scenario.seed,
+            ..DflConfig::default()
+        };
+        let method = MethodSpec::fedlay_multi(
+            scenario.overlay.clone(),
+            scenario.net.clone(),
+            tasks.tasks.len(),
+        );
+        let (mut trainer, tables) =
+            multitask::build_trainer(engine, method, base, tasks, population)?;
+        if let Some(t) = transport {
+            trainer.set_transport(t)?;
+        }
+        let report =
+            scenario.run_trainer_tasks(&mut trainer, |lane, node| tables[lane][node].clone())?;
+        let snap = trainer.overlay.as_ref().expect("overlay").ring_snapshot();
+        let alive = trainer
+            .lanes
+            .iter()
+            .map(|l| l.clients.iter().map(|c| c.alive).collect())
+            .collect();
+        Ok((report, snap, alive))
+    }
+
+    let (sim_report, sim_snap, sim_alive) =
+        run_once(&engine, &scenario, &tasks, population, None)?;
+    let (tcp_report, tcp_snap, tcp_alive) = run_once(
+        &engine,
+        &scenario,
+        &tasks,
+        population,
+        Some(Box::new(SchedTransport::new())),
+    )?;
+    assert_eq!(sim_report.backend, "sim");
+    assert_eq!(tcp_report.backend, "tcp");
+
+    // identical per-task membership on both backends, and the expected
+    // arithmetic: 10 initial + 3 joins - 2 fails
+    assert_eq!(sim_alive, tcp_alive, "backends disagree on lane membership");
+    assert_eq!(sim_report.counts, tcp_report.counts);
+    assert_eq!(sim_report.live_nodes, tcp_report.live_nodes);
+    assert_eq!(sim_report.live_nodes, 10 + 3 - 2);
+
+    // per-task overlay correctness reaches exactly 1.0 after settle
+    assert!(sim_report.settled_at.is_some(), "sim never settled");
+    assert!(tcp_report.settled_at.is_some(), "tcp never settled");
+    assert!((sim_report.final_correctness - 1.0).abs() < 1e-12);
+    assert!((tcp_report.final_correctness - 1.0).abs() < 1e-12);
+
+    // identical ring snapshots (the settled views, not just correctness)
+    assert_eq!(sim_snap, tcp_snap, "backends converged to different overlays");
+
+    // the per-task accuracy series are pinned identical, every f64
+    assert_eq!(
+        sim_report.task_accuracy, tcp_report.task_accuracy,
+        "per-task accuracy series diverged between backends"
+    );
+    // ... and so is the whole golden trajectory (correctness series too)
+    assert_eq!(sim_report.golden_lines(), tcp_report.golden_lines());
+
+    // each task's final accuracy matches its single-task baseline (the
+    // acceptance bound is 0.02; task isolation actually makes it exact —
+    // see tests/multitask_properties.rs)
+    for (l, task) in tasks.tasks.iter().enumerate() {
+        let solo_spec = MultiTaskSpec {
+            tasks: vec![task.clone()],
+        };
+        let (solo_report, _, _) = run_once(&engine, &scenario, &solo_spec, population, None)?;
+        let solo_acc = solo_report.task_accuracy[0].1.last().unwrap().1;
+        let multi_acc = sim_report.task_accuracy[l].1.last().unwrap().1;
+        assert!(
+            (multi_acc - solo_acc).abs() <= 0.02,
+            "task {:?} drifted from its single-task baseline: {multi_acc} vs {solo_acc}",
+            task.name
+        );
+    }
+    Ok(())
+}
+
 /// `train --transport tcp` end-to-end: a small fedlay-dyn run whose
 /// embedded overlay lives on real localhost sockets, with a mid-run
 /// protocol join and a crash failure — the unified engine drives NDMP
@@ -209,7 +326,7 @@ fn trainer_completes_fedlay_dyn_over_tcp() -> anyhow::Result<()> {
     let last = trainer.run(12 * MIN, 6 * MIN)?;
 
     assert!(last.mean_accuracy.is_finite());
-    assert!(!trainer.samples.is_empty());
+    assert!(!trainer.samples().is_empty());
     let sim = trainer.overlay.as_ref().expect("dynamic overlay state");
     assert_eq!(sim.backend(), "tcp");
     assert!(sim.nodes.contains_key(&(n as NodeId)), "joiner missing");
@@ -219,7 +336,7 @@ fn trainer_completes_fedlay_dyn_over_tcp() -> anyhow::Result<()> {
         "overlay not repaired over TCP: correctness={}",
         sim.correctness()
     );
-    assert!(trainer.clients[joiner].alive);
-    assert!(!trainer.clients[1].alive);
+    assert!(trainer.clients()[joiner].alive);
+    assert!(!trainer.clients()[1].alive);
     Ok(())
 }

@@ -52,7 +52,7 @@ fn mid_training_join_wave_rewires_and_converges() -> anyhow::Result<()> {
     for j in 0..joiners {
         let id = t.schedule_join(join_at, weights[originals + j].clone(), j % originals)?;
         assert_eq!(id, originals + j);
-        assert!(!t.clients[id].alive, "joiners start as dead placeholders");
+        assert!(!t.clients()[id].alive, "joiners start as dead placeholders");
     }
     t.run(180 * MIN, 30 * MIN)?;
 
@@ -63,7 +63,7 @@ fn mid_training_join_wave_rewires_and_converges() -> anyhow::Result<()> {
     assert!(c > 0.999, "topology correctness after join wave: {c}");
     // every joiner is wired into the live learning topology
     for j in originals..originals + joiners {
-        assert!(t.clients[j].alive);
+        assert!(t.clients()[j].alive);
         let nbrs = sim.nodes[&(j as u64)].ring_neighbor_ids();
         assert!(!nbrs.is_empty(), "joiner {j} has no overlay neighbors");
         assert!(
@@ -71,14 +71,14 @@ fn mid_training_join_wave_rewires_and_converges() -> anyhow::Result<()> {
             "learning degree must stay <= 2L, got {}",
             nbrs.len()
         );
-        assert!(t.clients[j].exchanges > 0, "joiner {j} never aggregated");
+        assert!(t.clients()[j].exchanges > 0, "joiner {j} never aggregated");
     }
 
     // (b) joiners converged to within 0.15 of the originals
-    let last = t.samples.last().unwrap();
+    let last = t.samples().last().unwrap();
     let old_end = cohort_acc(last, 0..originals);
     let new_end = cohort_acc(last, originals..originals + joiners);
-    let first_post = t.samples.iter().find(|s| s.at >= join_at).unwrap();
+    let first_post = t.samples().iter().find(|s| s.at >= join_at).unwrap();
     let new_start = cohort_acc(first_post, originals..originals + joiners);
     assert!(old_end > 0.4, "originals failed to learn: {old_end}");
     assert!(
@@ -112,15 +112,15 @@ fn failures_rewire_the_learning_topology() -> anyhow::Result<()> {
     t.run(90 * MIN, 45 * MIN)?;
     let sim = t.overlay.as_ref().unwrap();
     assert_eq!(sim.nodes.len(), n - 2);
-    assert!(!t.clients[3].alive && !t.clients[7].alive);
+    assert!(!t.clients()[3].alive && !t.clients()[7].alive);
     let c = sim.correctness();
     assert!(c > 0.999, "overlay not repaired after failures: {c}");
     // dead clients froze at failure time; live ones kept training
-    let dead_steps = t.clients[3].train_steps;
-    let live_steps = t.clients[0].train_steps;
+    let dead_steps = t.clients()[3].train_steps;
+    let live_steps = t.clients()[0].train_steps;
     assert!(live_steps > dead_steps, "{live_steps} vs {dead_steps}");
     // the accuracy mean covers live clients only
-    assert_eq!(t.samples.last().unwrap().per_client.len(), n);
+    assert_eq!(t.samples().last().unwrap().per_client.len(), n);
     Ok(())
 }
 
@@ -182,8 +182,8 @@ fn static_and_dynamic_agree_without_churn() -> anyhow::Result<()> {
     )?;
     assert!(matches!(dyn_t.spec.neighborhood, Neighborhood::Dynamic { .. }));
     dyn_t.run(60 * MIN, 30 * MIN)?;
-    let a = stat.samples.last().unwrap().mean_accuracy;
-    let b = dyn_t.samples.last().unwrap().mean_accuracy;
+    let a = stat.samples().last().unwrap().mean_accuracy;
+    let b = dyn_t.samples().last().unwrap().mean_accuracy;
     assert!((a - b).abs() < 0.2, "static {a:.3} vs dynamic {b:.3}");
     // joins on a static graph are rejected
     assert!(stat.schedule_join(1, vec![1.0; 10], 0).is_err());
