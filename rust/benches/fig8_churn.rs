@@ -14,20 +14,20 @@
 //!
 //! FEDLAY_TRANSPORT=tcp replays Figs. 8a/8b over real localhost sockets
 //! (`net::SchedTransport`) at a reduced node count — the same schedules,
-//! scheduler, and protocol engines, with real frames on the wire.
+//! scheduler, protocol engines, *and virtual link latency*, with real
+//! frames on the wire. Each panel then also runs the in-memory backend
+//! on the identical spec and asserts the **round-time series matches
+//! sample for sample** — the paper's Fig. 8 timing, not just its
+//! converged topology, is reproduced over TCP (docs/transports.md).
 
 use fedlay::bench_util::{scaled, Table};
 use fedlay::config::{NetConfig, OverlayConfig};
 use fedlay::ndmp::messages::{Time, MS};
 use fedlay::net::SchedTransport;
-use fedlay::sim::{grow_network, ScenarioSpec, Transport};
+use fedlay::sim::{grow_network, ScenarioReport, ScenarioSpec};
 
 fn tcp_transport() -> bool {
     std::env::var("FEDLAY_TRANSPORT").as_deref() == Ok("tcp")
-}
-
-fn transport() -> Option<Box<dyn Transport>> {
-    tcp_transport().then(|| Box::new(SchedTransport::new()) as Box<dyn Transport>)
 }
 
 fn overlay(spaces: usize) -> OverlayConfig {
@@ -47,6 +47,40 @@ fn net() -> NetConfig {
     }
 }
 
+/// Run one Fig. 8 panel. In tcp mode the panel runs on real sockets AND
+/// on the in-memory backend with the same spec, asserting the identical
+/// correctness-over-time series (the Fig. 8 "round time" axis).
+fn run_panel(spec: &ScenarioSpec) -> ScenarioReport {
+    if !tcp_transport() {
+        let (_, report) = spec.run_sim(None).expect("scenario run");
+        return report;
+    }
+    let (_, sim_report) = spec.run_sim(None).expect("sim replay");
+    let (_, tcp_report) = spec
+        .run_sim(Some(Box::new(SchedTransport::new(&spec.net))))
+        .expect("tcp run");
+    assert_eq!(
+        sim_report.correctness.len(),
+        tcp_report.correctness.len(),
+        "sample counts diverged between backends"
+    );
+    for (s, t) in sim_report.correctness.iter().zip(&tcp_report.correctness) {
+        assert_eq!(s.at, t.at, "sample instants diverged");
+        assert_eq!(
+            (s.correctness, s.live_nodes),
+            (t.correctness, t.live_nodes),
+            "round-time series diverged at t={} µs",
+            s.at
+        );
+    }
+    assert_eq!(sim_report.delivered, tcp_report.delivered);
+    println!(
+        "tcp replay: round-time series matches sim over {} samples",
+        tcp_report.correctness.len()
+    );
+    tcp_report
+}
+
 fn main() {
     // sockets are real OS resources: cap the fleet in tcp mode
     let initial = if tcp_transport() {
@@ -61,9 +95,7 @@ fn main() {
     };
     let horizon: Time = 90_000 * MS;
     let degrees: &[usize] = if tcp_transport() { &[3] } else { &[3, 4, 5, 6] };
-    // zero-virtual-latency sockets repair fast: sample densely enough
-    // that the post-failure correctness dip is still observable
-    let sample_every: Time = if tcp_transport() { 1_000 * MS } else { 3_000 * MS };
+    let sample_every: Time = 3_000 * MS;
 
     // Fig. 8a: mass joins, for several degrees (L = d/2)
     for &l in degrees {
@@ -76,7 +108,7 @@ fn main() {
         spec.net = net();
         spec.horizon = horizon;
         spec.sample_every = sample_every;
-        let (_, report) = spec.run_sim(transport()).expect("fig8a scenario");
+        let report = run_panel(&spec);
         print!("{}", report.correctness_table().render());
         let fin = report.final_correctness;
         println!("final correctness: {fin:.4}\n");
@@ -90,7 +122,7 @@ fn main() {
     spec.net = net();
     spec.horizon = horizon;
     spec.sample_every = sample_every;
-    let (_, report) = spec.run_sim(transport()).expect("fig8b scenario");
+    let report = run_panel(&spec);
     print!("{}", report.correctness_table().render());
     let dip = report
         .correctness

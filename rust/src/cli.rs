@@ -87,6 +87,15 @@ impl Args {
         }
     }
 
+    pub fn f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
     pub fn bool(&self, key: &str) -> bool {
         self.flags.get(key).map(|v| v == "true").unwrap_or(false)
     }
@@ -108,6 +117,7 @@ USAGE:
   fedlay scenario run <spec.toml>  [--transport sim|tcp] [--trainer]
                                    [--freeze] [--task mlp]
                                    [--tasks <tasks.toml>]
+                                   [--latency-ms L] [--jitter J]
   fedlay scenario show <spec.toml>
                   (declarative churn scenarios — TOML format in
                    docs/scenarios.md, examples under configs/scenarios/;
@@ -122,14 +132,18 @@ USAGE:
                   [--minutes M] [--sample-minutes S]
                   [--joins J] [--fails F] [--churn-at-min T]
                   [--transport sim|tcp]
+                  [--latency-ms L] [--jitter J]
                   [--tasks <tasks.toml>]
                   (fedlay-dyn runs on the live NDMP overlay; --joins adds
                    J clients mid-run through the protocol join; --transport
                    tcp carries that overlay's messages over real localhost
-                   sockets instead of the in-memory simulated network;
-                   --tasks runs the multi-task engine — N model tasks from
-                   a TOML spec, docs/multitask.md, over one shared
-                   overlay, one accuracy column per task)
+                   sockets instead of the in-memory simulated network —
+                   with the same seeded virtual link latency on either
+                   backend, overridable via --latency-ms/--jitter
+                   (docs/transports.md); --tasks runs the multi-task
+                   engine — N model tasks from a TOML spec,
+                   docs/multitask.md, over one shared overlay, one
+                   accuracy column per task)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
                   (one real TCP client; spawn several for a live network)
 
@@ -173,6 +187,16 @@ mod tests {
         assert!(parse_args(&sv(&["--flag-first"])).is_err());
         let a = parse_args(&sv(&["train", "--minutes", "abc"])).unwrap();
         assert!(a.usize("minutes", 1).is_err());
+    }
+
+    #[test]
+    fn parses_float_flags() {
+        let a = parse_args(&sv(&["train", "--latency-ms", "350.5", "--jitter=0.2"])).unwrap();
+        assert_eq!(a.f64("latency-ms", 0.0).unwrap(), 350.5);
+        assert_eq!(a.f64("jitter", 0.0).unwrap(), 0.2);
+        assert_eq!(a.f64("absent", 1.5).unwrap(), 1.5);
+        let b = parse_args(&sv(&["train", "--latency-ms", "fast"])).unwrap();
+        assert!(b.f64("latency-ms", 0.0).is_err());
     }
 
     #[test]

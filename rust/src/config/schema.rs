@@ -199,6 +199,14 @@ impl Config {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
         anyhow::ensure!(self.overlay.heartbeat_ms > 0, "heartbeat must be positive");
+        anyhow::ensure!(
+            self.net.latency_ms.is_finite() && self.net.latency_ms >= 0.0,
+            "net.latency_ms must be a finite value >= 0"
+        );
+        anyhow::ensure!(
+            self.net.jitter.is_finite() && self.net.jitter >= 0.0,
+            "net.jitter must be a finite value >= 0"
+        );
         anyhow::ensure!(self.dfl.clients >= 1, "dfl.clients must be >= 1");
         anyhow::ensure!(self.dfl.lr > 0.0, "dfl.lr must be positive");
         anyhow::ensure!(
@@ -259,5 +267,9 @@ mod tests {
         assert!(Config::load(None, &["overlay.spaces=0".into()]).is_err());
         assert!(Config::load(None, &["dfl.lr=-1".into()]).is_err());
         assert!(Config::load(None, &["garbage".into()]).is_err());
+        // negative latency would underflow the delay floor; a non-finite
+        // one saturates to u64::MAX µs and corrupts virtual time
+        assert!(Config::load(None, &["net.latency_ms=-1".into()]).is_err());
+        assert!(Config::load(None, &["net.jitter=-0.5".into()]).is_err());
     }
 }

@@ -28,24 +28,18 @@
 //! ## Sim vs. TCP backends
 //!
 //! Message passage is a pluggable [`sim::Transport`] with two
-//! implementations, both driven by the same scheduler, protocol engines,
-//! and churn schedules:
-//!
-//! * **`sim`** — [`sim::SimTransport`]: in-memory, deterministic, every
-//!   send scheduled back onto the event queue after a latency-model
-//!   delay. The default for every simulation and figure harness.
-//! * **`tcp`** — [`net::SchedTransport`]: real localhost sockets; sends
-//!   are `net::wire` frames into a per-node endpoint (OS-assigned ports,
-//!   shared `net::AddrBook`), pumped back into the event loop between
-//!   scheduler events.
-//!
-//! `Simulator::with_transport` selects the backend, the trainer exposes
-//! it as `Trainer::set_transport`, and the CLI as
-//! `fedlay train --method fedlay-dyn --transport tcp|sim`. A seeded
-//! churn schedule must converge to the identical Definition-1 overlay on
-//! both — enforced by `tests/transport_conformance.rs`. The standalone
-//! wall-clock prototype node (`net::client_node`, `fedlay node`) runs
-//! the same reactor pattern with wall time as the timer axis.
+//! implementations — the in-memory [`sim::SimTransport`] and the
+//! real-socket [`net::SchedTransport`] — both driven by the same
+//! scheduler, protocol engines, churn schedules, and seeded per-link
+//! virtual latency ([`sim::LinkDelay`]), so a schedule replays over
+//! real sockets with the *identical arrival timestamps* it has in
+//! simulation. The architecture — the `Transport` contract, the
+//! quiescence pump's role as liveness backstop, virtual-latency
+//! injection, and a worked sim ≡ tcp conformance example — is
+//! documented in `docs/transports.md`; the executable contract is
+//! `tests/transport_conformance.rs`. Select the backend with
+//! `Simulator::with_transport` / `Trainer::set_transport` /
+//! `fedlay train --method fedlay-dyn --transport tcp|sim`.
 //!
 //! ## Churn scenarios
 //!

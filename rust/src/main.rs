@@ -3,7 +3,7 @@
 use fedlay::baselines;
 use fedlay::bench_util::Table;
 use fedlay::cli::{parse_args, Args, USAGE};
-use fedlay::config::{DflConfig, MultiTaskSpec, OverlayConfig};
+use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
 use fedlay::dfl::{multitask, MethodSpec, Trainer};
 use fedlay::ndmp::messages::MS;
 use fedlay::net::{spawn, ClientNodeConfig, SchedTransport};
@@ -133,7 +133,8 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
         args.bool("trainer") || args.flags.get("tasks").is_none(),
         "--tasks needs --trainer (a multi-task spec drives a training run)"
     );
-    let spec = ScenarioSpec::load(std::path::Path::new(spec_path))?;
+    let mut spec = ScenarioSpec::load(std::path::Path::new(spec_path))?;
+    apply_net_flags(args, &mut spec.net)?;
     match action {
         "show" => {
             print!("{}", spec.to_toml());
@@ -160,7 +161,7 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
             if args.bool("trainer") {
                 run_scenario_trainer(args, &spec)
             } else {
-                let transport = scenario_transport(args)?;
+                let transport = scenario_transport(args, &spec.net)?;
                 let (_, report) = spec.run_sim(transport)?;
                 print!("{}", report.render());
                 Ok(())
@@ -170,10 +171,28 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-fn scenario_transport(args: &Args) -> anyhow::Result<Option<Box<dyn Transport>>> {
+/// Apply the `--latency-ms` / `--jitter` overrides. Both transport
+/// backends honor the resulting `NetConfig` — the in-memory network
+/// schedules deliveries with it, the TCP backend stamps the same
+/// per-link delays into its wire frames (docs/transports.md).
+fn apply_net_flags(args: &Args, net: &mut NetConfig) -> anyhow::Result<()> {
+    net.latency_ms = args.f64("latency-ms", net.latency_ms)?;
+    net.jitter = args.f64("jitter", net.jitter)?;
+    anyhow::ensure!(
+        net.latency_ms.is_finite() && net.latency_ms >= 0.0,
+        "--latency-ms must be a finite value >= 0"
+    );
+    anyhow::ensure!(
+        net.jitter.is_finite() && net.jitter >= 0.0,
+        "--jitter must be a finite value >= 0"
+    );
+    Ok(())
+}
+
+fn scenario_transport(args: &Args, net: &NetConfig) -> anyhow::Result<Option<Box<dyn Transport>>> {
     match args.str("transport", "sim").as_str() {
         "sim" => Ok(None),
-        "tcp" => Ok(Some(Box::new(SchedTransport::new()))),
+        "tcp" => Ok(Some(Box::new(SchedTransport::new(net)))),
         other => anyhow::bail!("unknown transport {other:?} (expected sim|tcp)"),
     }
 }
@@ -201,7 +220,7 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
             method,
             base,
             args.bool("freeze"),
-            scenario_transport(args)?,
+            scenario_transport(args, &spec.net)?,
         )?;
         print!("{}", report.render());
         return Ok(());
@@ -233,7 +252,7 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
         cfg,
         weights[..spec.initial].to_vec(),
     )?;
-    if let Some(t) = scenario_transport(args)? {
+    if let Some(t) = scenario_transport(args, &spec.net)? {
         trainer.set_transport(t)?;
     }
     trainer.freeze_training = args.bool("freeze");
@@ -249,7 +268,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(tasks_path) = args.flags.get("tasks").cloned() {
         return cmd_train_multi(args, &tasks_path);
     }
-    let cfg = args.config()?;
+    let mut cfg = args.config()?;
+    apply_net_flags(args, &mut cfg.net)?;
     let method = args.str("method", "fedlay");
     let minutes = args.u64("minutes", 30)?;
     let sample_minutes = args.u64("sample-minutes", 5)?;
@@ -277,7 +297,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let transport = args.str("transport", "sim");
     match transport.as_str() {
         "sim" => {}
-        "tcp" => trainer.set_transport(Box::new(SchedTransport::new()))?,
+        "tcp" => trainer.set_transport(Box::new(SchedTransport::new(&cfg.net)))?,
         other => anyhow::bail!("unknown transport {other:?} (expected sim|tcp)"),
     }
     let until = minutes * 60 * 1_000_000;
@@ -336,7 +356,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 /// task in the spec trains concurrently over one shared live NDMP
 /// overlay, and the run reports one accuracy column per task.
 fn cmd_train_multi(args: &Args, tasks_path: &str) -> anyhow::Result<()> {
-    let cfg = args.config()?;
+    let mut cfg = args.config()?;
+    apply_net_flags(args, &mut cfg.net)?;
     let spec = MultiTaskSpec::load(std::path::Path::new(tasks_path))?;
     let method = args.str("method", "fedlay-multi");
     anyhow::ensure!(
@@ -356,7 +377,7 @@ fn cmd_train_multi(args: &Args, tasks_path: &str) -> anyhow::Result<()> {
         multitask::build_trainer(&engine, mspec, cfg.dfl.clone(), &spec, n + joins)?;
     match args.str("transport", "sim").as_str() {
         "sim" => {}
-        "tcp" => trainer.set_transport(Box::new(SchedTransport::new()))?,
+        "tcp" => trainer.set_transport(Box::new(SchedTransport::new(&cfg.net)))?,
         other => anyhow::bail!("unknown transport {other:?} (expected sim|tcp)"),
     }
     // mid-run churn: fail the lowest ids so join bootstraps can avoid them

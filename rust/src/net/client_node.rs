@@ -481,10 +481,12 @@ fn run_node(
             // Always drain the backlog first: even when the timer heap
             // has fallen behind wall clock (slow training rounds), every
             // timer firing is preceded by a full drain, so a busy chain
-            // can never starve inbound protocol traffic.
+            // can never starve inbound protocol traffic. Wall-clock
+            // nodes ignore the frames' virtual timing stamps — wall time
+            // is the timer axis here.
             let mut drained = false;
-            while let Ok((from, msg)) = listener.rx.try_recv() {
-                r.handle_frame(from, msg);
+            while let Ok(frame) = listener.rx.try_recv() {
+                r.handle_frame(frame.sender, frame.msg);
                 drained = true;
             }
             if drained {
@@ -497,8 +499,8 @@ fn run_node(
             // cap the wait so a stop request is noticed promptly
             let wait = Duration::from_micros((next_at - now).min(5 * MS));
             match listener.rx.recv_timeout(wait) {
-                Ok((from, msg)) => {
-                    r.handle_frame(from, msg);
+                Ok(frame) => {
+                    r.handle_frame(frame.sender, frame.msg);
                     r.publish();
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}

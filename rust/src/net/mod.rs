@@ -14,3 +14,4 @@ pub use client_node::{spawn, ClientHandle, ClientNodeConfig, ClientReport, NodeS
 pub use peer::{addr_of, AddrBook, PeerPool};
 pub use sched_transport::SchedTransport;
 pub use server::Listener;
+pub use wire::{Frame, Stamp};

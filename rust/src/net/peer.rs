@@ -108,23 +108,31 @@ impl PeerPool {
         Ok(s)
     }
 
-    /// Send a message, reconnecting once on a stale cached connection.
+    /// Send a message with zeroed timing stamps (wall-clock senders —
+    /// `net::client_node` — have no virtual clock). See [`Self::send_stamped`].
+    pub fn send(&self, to: NodeId, msg: &Msg) -> bool {
+        self.send_stamped(to, wire::Stamp::default(), msg)
+    }
+
+    /// Send a message carrying its virtual timing stamp (send sequence,
+    /// send time, sampled link delay — see `net::wire::Stamp`),
+    /// reconnecting once on a stale cached connection.
     /// Failures are counted but not fatal (crash-fail peers are expected).
     /// Returns whether a frame was actually written to a socket, so
     /// callers tracking in-flight traffic don't wait for frames that
     /// were dropped on a dead or unregistered peer.
-    pub fn send(&self, to: NodeId, msg: &Msg) -> bool {
+    pub fn send_stamped(&self, to: NodeId, stamp: wire::Stamp, msg: &Msg) -> bool {
         let mut conns = self.conns.lock().unwrap();
         // try the cached stream first
         if let Some(stream) = conns.get_mut(&to) {
-            if wire::write_frame(stream, self.self_id, msg).is_ok() {
+            if wire::write_frame(stream, self.self_id, stamp, msg).is_ok() {
                 return true;
             }
             conns.remove(&to);
         }
         match self.connect(to) {
             Ok(mut stream) => {
-                if wire::write_frame(&mut stream, self.self_id, msg).is_ok() {
+                if wire::write_frame(&mut stream, self.self_id, stamp, msg).is_ok() {
                     conns.insert(to, stream);
                     true
                 } else {
@@ -146,6 +154,14 @@ impl PeerPool {
 
     pub fn disconnect_all(&self) {
         self.conns.lock().unwrap().clear();
+    }
+
+    /// Drop the cached connection to one peer (its endpoint closed): a
+    /// write into the stale socket could still "succeed" into the kernel
+    /// buffer, and callers tracking in-flight frames would wait out
+    /// their loss backstop for a frame that can never arrive.
+    pub fn forget(&self, to: NodeId) {
+        self.conns.lock().unwrap().remove(&to);
     }
 }
 

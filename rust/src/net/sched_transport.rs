@@ -5,17 +5,26 @@
 //! Every node the `Simulator` opens gets an endpoint — a `Listener`
 //! bound to an OS-assigned port (no port-collision flakiness) plus a
 //! `PeerPool` of outbound connections — registered in a shared
-//! `AddrBook`. `send` writes a `net::wire` frame to the destination's
-//! live address; `poll` drains whatever the loopback delivered, waiting
-//! (bounded) for in-flight traffic to quiesce so a multi-hop protocol
-//! exchange completes within one virtual instant.
+//! `AddrBook`. `send` samples the virtual one-way delay from the same
+//! seeded per-link component the in-memory backend uses
+//! (`sim::network::LinkDelay`), stamps it with the virtual send time and
+//! a global send sequence into the `net::wire` frame, and writes the
+//! frame to the destination's live address.
 //!
-//! Timing model: virtual time is the scheduler's; the wire contributes
-//! effectively zero *virtual* latency (messages arrive at the instant of
-//! the next pump). The overlay protocols converge to the same
-//! Definition-1 topology regardless of latency, which is what the
-//! conformance suite (`tests/transport_conformance.rs`) checks against
-//! the in-memory backend.
+//! Timing model: virtual time is the scheduler's, and the wire carries
+//! **virtual latency**. Frames physically arrive early — while the
+//! sending instant is still being settled — and are parked in a
+//! time-ordered staging buffer keyed by their stamped due time
+//! `sent_at + delay` (ties by send sequence). `poll` waits (bounded)
+//! until every frame written since the last poll has landed, then
+//! releases the staged arrivals so the caller can schedule each as a
+//! `Deliver` event at exactly its stamped virtual time. The old
+//! real-time quiescence window survives only as a **liveness backstop**:
+//! it times out the wait when a frame was lost to a peer dying
+//! mid-flight. A seeded schedule therefore replays over sockets with
+//! the identical arrival timestamps it has in simulation — not just the
+//! same converged topology (`tests/transport_conformance.rs`,
+//! `docs/transports.md`).
 //!
 //! Failure semantics match the simulator's crash-fail rule: `close`
 //! tears the endpoint down, in-flight messages to it vanish, and later
@@ -24,8 +33,10 @@
 
 use super::peer::{AddrBook, PeerPool};
 use super::server::Listener;
+use super::wire::Stamp;
+use crate::config::NetConfig;
 use crate::ndmp::messages::{Msg, Time};
-use crate::sim::{Arrival, Transport};
+use crate::sim::{Arrival, LinkDelay, Transport};
 use crate::topology::NodeId;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -41,36 +52,84 @@ struct Endpoint {
 struct Inner {
     book: Arc<AddrBook>,
     endpoints: BTreeMap<NodeId, Endpoint>,
-    /// Frames written to sockets since the last settled poll; nonzero
-    /// makes the next `poll` wait for loopback delivery to quiesce.
-    in_flight: usize,
-    /// A poll returns once this long passes with no new arrival.
+    /// The shared per-link virtual delay component (same seeding as
+    /// `SimTransport`, so the k-th frame on a link samples the same
+    /// delay on both backends).
+    delay: LinkDelay,
+    /// Global send sequence stamped into every written frame — the
+    /// tie-breaker that orders equal-due-time arrivals exactly like the
+    /// in-memory backend's event-queue insertion order.
+    send_seq: u64,
+    /// Frames written to sockets but not yet drained, per destination;
+    /// `close` forgets a dead node's count so lost frames don't stall
+    /// every later poll.
+    in_flight: BTreeMap<NodeId, usize>,
+    /// Time-ordered staging buffer: frames that physically arrived
+    /// early, keyed by (virtual due time, send sequence).
+    staged: BTreeMap<(Time, u64), Arrival>,
+    /// Liveness backstop: a poll stops waiting for outstanding frames
+    /// once this long passes with no new arrival (only frames lost to a
+    /// dying peer ever pay it).
     settle: Duration,
     /// Hard cap on how long one poll may wait in total.
     budget: Duration,
+    /// Frames the backstop gave up waiting for (telemetry: nonzero means
+    /// either real loss to a dying peer, or a too-tight `settle`).
+    gave_up: u64,
+    /// Frames that drained *after* a backstop gave them up — the
+    /// conformance-threatening case: their `Deliver` is scheduled late
+    /// (clamped to the caller's clock), so timestamp pins can diverge.
+    late: u64,
 }
 
 impl Inner {
-    /// Non-blocking drain of every endpoint's inbound channel (in id
-    /// order). Returns how many frames were collected.
-    fn drain_into(&mut self, out: &mut Vec<Arrival>) -> usize {
+    /// Non-blocking drain of every endpoint's inbound channel into the
+    /// staging buffer (in id order). Returns how many frames landed.
+    fn drain(&mut self) -> usize {
         let mut got = 0;
         for (&node, ep) in self.endpoints.iter() {
-            while let Ok((from, msg)) = ep.listener.rx.try_recv() {
-                out.push(Arrival {
-                    from,
-                    to: node,
-                    msg,
-                });
+            while let Ok(frame) = ep.listener.rx.try_recv() {
+                let stamp = frame.stamp;
+                self.staged.insert(
+                    (stamp.due(), stamp.seq),
+                    Arrival {
+                        from: frame.sender,
+                        to: node,
+                        at: stamp.due(),
+                        msg: frame.msg,
+                    },
+                );
+                match self.in_flight.get_mut(&node) {
+                    Some(n) if *n > 0 => *n -= 1,
+                    // not owed: a frame the backstop already gave up on
+                    // landed after all — its delivery may now be late in
+                    // virtual time, the one way timestamp conformance
+                    // can break, so say it loudly
+                    _ => {
+                        self.late += 1;
+                        eprintln!(
+                            "[SchedTransport] frame {} -> {node} drained after the settle \
+                             backstop gave it up; its delivery may be late in virtual time \
+                             (consider a larger `settle` in with_pacing)",
+                            frame.sender
+                        );
+                    }
+                }
                 got += 1;
             }
         }
         got
     }
+
+    /// Frames written but not yet drained (to still-open endpoints).
+    fn outstanding(&self) -> usize {
+        self.in_flight.values().sum()
+    }
 }
 
 /// Scheduler-driven TCP transport: one in-process endpoint per live
-/// node, real frames on localhost sockets. See the module docs.
+/// node, real frames on localhost sockets, virtual latency stamped into
+/// every frame. See the module docs.
 ///
 /// The inner mutex exists for the `Sync` bound of `Transport` (inbound
 /// channels are single-consumer); all calls come from the owning
@@ -80,22 +139,46 @@ pub struct SchedTransport {
 }
 
 impl SchedTransport {
-    pub fn new() -> Self {
-        Self::with_pacing(Duration::from_millis(5), Duration::from_millis(1_000))
+    /// A transport whose virtual link delays come from `net` (the same
+    /// `NetConfig` the in-memory backend would use), with the default
+    /// pacing: `settle` = 200 ms, `budget` = 2 s.
+    pub fn new(net: &NetConfig) -> Self {
+        Self::with_pacing(net, Duration::from_millis(200), Duration::from_millis(2_000))
     }
 
-    /// Tune the quiescence pacing: `settle` is how long the loopback must
-    /// stay silent before a poll returns, `budget` the per-poll cap.
-    pub fn with_pacing(settle: Duration, budget: Duration) -> Self {
+    /// Tune the liveness backstop of [`Transport::poll`]:
+    ///
+    /// * `settle` — wall-clock duration (default **200 ms**): a poll
+    ///   that is still owed frames gives them up as lost once this long
+    ///   passes with no new arrival. Only frames genuinely lost (a peer
+    ///   dying mid-flight) ever pay this window; in the common case a
+    ///   poll returns as soon as every written frame has landed.
+    /// * `budget` — wall-clock duration (default **2 s**): the hard cap
+    ///   on one poll's total wait, whatever the arrival pattern.
+    pub fn with_pacing(net: &NetConfig, settle: Duration, budget: Duration) -> Self {
         Self {
             inner: Mutex::new(Inner {
                 book: Arc::new(AddrBook::new()),
                 endpoints: BTreeMap::new(),
-                in_flight: 0,
+                delay: LinkDelay::new(net),
+                send_seq: 0,
+                in_flight: BTreeMap::new(),
+                staged: BTreeMap::new(),
                 settle,
                 budget,
+                gave_up: 0,
+                late: 0,
             }),
         }
+    }
+
+    /// Pacing-anomaly telemetry: `(gave_up, late)` — frames the settle
+    /// backstop stopped waiting for, and frames that drained *after*
+    /// being given up (late virtual delivery, the one condition that can
+    /// break timestamp conformance). Both are 0 on a healthy run.
+    pub fn pacing_anomalies(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.gave_up, inner.late)
     }
 
     /// The shared address registry (exposed for tests/diagnostics).
@@ -109,12 +192,6 @@ impl SchedTransport {
     }
 }
 
-impl Default for SchedTransport {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl Transport for SchedTransport {
     fn name(&self) -> &'static str {
         "tcp"
@@ -123,6 +200,7 @@ impl Transport for SchedTransport {
     fn open(&mut self, node: NodeId) -> Result<()> {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
+        inner.delay.reopen(node);
         if inner.endpoints.contains_key(&node) {
             return Ok(());
         }
@@ -137,21 +215,44 @@ impl Transport for SchedTransport {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
         inner.book.unregister(node);
+        // frames still in flight toward the dead node will never arrive:
+        // forget their count so later polls don't wait out the backstop
+        inner.in_flight.remove(&node);
         if let Some(mut ep) = inner.endpoints.remove(&node) {
             ep.listener.shutdown();
             ep.pool.disconnect_all();
         }
+        // survivors' cached connections to the dead node would accept
+        // writes into the kernel buffer; drop them so later sends fail
+        // fast instead of counting unarrivable frames
+        for ep in inner.endpoints.values() {
+            ep.pool.forget(node);
+        }
+        // prune the dead node's link-delay streams (both backends do,
+        // keeping link state identical) so churn doesn't grow them
+        // forever
+        inner.delay.forget(node);
     }
 
-    fn send(&mut self, _now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time> {
+    fn send(&mut self, now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time> {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
+        // sample unconditionally — the in-memory backend samples for
+        // dropped sends too, and skipping here would shift the link's
+        // delay sequence between backends
+        let delay = inner.delay.sample(from, to);
+        let stamp = Stamp {
+            seq: inner.send_seq,
+            sent_at: now,
+            delay,
+        };
+        inner.send_seq += 1;
         if let Some(ep) = inner.endpoints.get(&from) {
             // only frames actually written count as in-flight: dropped
             // sends (dead/unregistered peers) must not make later polls
             // wait for arrivals that will never come
-            if ep.pool.send(to, msg) {
-                inner.in_flight += 1;
+            if ep.pool.send_stamped(to, stamp, msg) {
+                *inner.in_flight.entry(to).or_insert(0) += 1;
             }
         }
         None
@@ -160,35 +261,37 @@ impl Transport for SchedTransport {
     fn poll(&mut self) -> Vec<Arrival> {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
-        let mut out = Vec::new();
-        inner.drain_into(&mut out);
-        if inner.in_flight == 0 && out.is_empty() {
-            return out;
-        }
-        // Frames are (or just were) on the wire: wait until the loopback
-        // quiesces, so whatever this virtual instant triggered is fully
-        // collected. A first contact pays connect + accept latency, so
-        // an empty drain waits a longer window than the steady-state
-        // settle; sends to dead peers never arrive and cost one window.
-        let first_window = inner.settle.max(Duration::from_millis(50));
-        let start = Instant::now();
-        let mut last_arrival = Instant::now();
-        while start.elapsed() < inner.budget {
-            let window = if out.is_empty() {
-                first_window
-            } else {
-                inner.settle
-            };
-            if last_arrival.elapsed() >= window {
-                break;
+        inner.drain();
+        if inner.outstanding() > 0 {
+            // Frames are on the wire: wait until each one lands. The
+            // settle window only fires when a frame was lost (peer died
+            // mid-flight); the budget caps the poll whatever happens.
+            let start = Instant::now();
+            let mut last_progress = Instant::now();
+            while inner.outstanding() > 0 && start.elapsed() < inner.budget {
+                if last_progress.elapsed() >= inner.settle {
+                    break; // lost frames: give them up
+                }
+                std::thread::sleep(Duration::from_micros(200));
+                if inner.drain() > 0 {
+                    last_progress = Instant::now();
+                }
             }
-            std::thread::sleep(Duration::from_micros(200));
-            if inner.drain_into(&mut out) > 0 {
-                last_arrival = Instant::now();
+            let abandoned = inner.outstanding() as u64;
+            if abandoned > 0 {
+                // real loss (peer died mid-flight) or a too-tight settle
+                // window — either way, leave a trace for flake forensics
+                inner.gave_up += abandoned;
+                eprintln!(
+                    "[SchedTransport] poll gave up on {abandoned} in-flight frame(s) \
+                     after {:?}; lost to a dead peer, or `settle` too tight",
+                    start.elapsed()
+                );
             }
+            inner.in_flight.clear();
         }
-        inner.in_flight = 0;
-        out
+        let staged = std::mem::take(&mut inner.staged);
+        staged.into_values().collect()
     }
 
     fn idle(&self) -> bool {
@@ -199,19 +302,29 @@ impl Transport for SchedTransport {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::SimTransport;
+
+    fn net(latency_ms: f64, jitter: f64) -> NetConfig {
+        NetConfig {
+            latency_ms,
+            jitter,
+            seed: 99,
+        }
+    }
 
     #[test]
-    fn frames_cross_between_endpoints() {
-        let mut t =
-            SchedTransport::with_pacing(Duration::from_millis(5), Duration::from_millis(2_000));
+    fn frames_cross_with_stamped_virtual_latency() {
+        let mut t = SchedTransport::new(&net(5.0, 0.0));
         t.open(1).unwrap();
         t.open(2).unwrap();
         assert_eq!(t.endpoint_count(), 2);
-        assert_eq!(t.send(0, 1, 2, &Msg::Heartbeat), None);
+        assert_eq!(t.send(100, 1, 2, &Msg::Heartbeat), None);
         let arrivals = t.poll();
         assert_eq!(arrivals.len(), 1);
         assert_eq!(arrivals[0].from, 1);
         assert_eq!(arrivals[0].to, 2);
+        // virtual due time = send time + the sampled 5 ms link delay
+        assert_eq!(arrivals[0].at, 100 + 5_000);
         assert_eq!(arrivals[0].msg, Msg::Heartbeat);
         // quiet transport: an immediate second poll is empty and cheap
         assert!(t.poll().is_empty());
@@ -223,10 +336,60 @@ mod tests {
         assert_eq!(t.endpoint_count(), 0);
     }
 
+    /// Both backends sample the same per-link delay sequence from the
+    /// same `NetConfig` — the arrival time the TCP backend stamps equals
+    /// the delivery time the in-memory backend schedules.
+    #[test]
+    fn stamped_arrival_times_match_sim_backend() {
+        let cfg = net(20.0, 0.4);
+        let mut sim = SimTransport::new(&cfg);
+        let mut tcp = SchedTransport::new(&cfg);
+        for id in 1..=3u64 {
+            tcp.open(id).unwrap();
+        }
+        let sends: &[(Time, NodeId, NodeId)] =
+            &[(10, 1, 2), (10, 1, 3), (500, 2, 1), (500, 1, 2), (900, 3, 2)];
+        let sim_times: Vec<Time> = sends
+            .iter()
+            .map(|&(now, f, to)| sim.send(now, f, to, &Msg::Heartbeat).unwrap())
+            .collect();
+        for &(now, f, to) in sends {
+            assert_eq!(tcp.send(now, f, to, &Msg::Heartbeat), None);
+        }
+        let arrivals = tcp.poll();
+        assert_eq!(arrivals.len(), sends.len());
+        // order-free comparison: the multisets of due times must match
+        let mut got: Vec<Time> = arrivals.iter().map(|a| a.at).collect();
+        let mut want = sim_times;
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "tcp stamps diverge from sim schedule");
+        for id in 1..=3u64 {
+            tcp.close(id);
+        }
+    }
+
+    #[test]
+    fn poll_releases_in_time_order() {
+        // zero jitter, distinct send times: due times are fully ordered
+        let mut t = SchedTransport::new(&net(2.0, 0.0));
+        for id in 1..=3u64 {
+            t.open(id).unwrap();
+        }
+        t.send(300, 1, 2, &Msg::Heartbeat);
+        t.send(100, 2, 3, &Msg::Heartbeat);
+        t.send(200, 3, 1, &Msg::Heartbeat);
+        let arrivals = t.poll();
+        let ats: Vec<Time> = arrivals.iter().map(|a| a.at).collect();
+        assert_eq!(ats, vec![2_100, 2_200, 2_300]);
+        for id in 1..=3u64 {
+            t.close(id);
+        }
+    }
+
     #[test]
     fn broadcast_reaches_every_live_endpoint() {
-        let mut t =
-            SchedTransport::with_pacing(Duration::from_millis(5), Duration::from_millis(2_000));
+        let mut t = SchedTransport::new(&net(5.0, 0.0));
         for id in 1..=3u64 {
             t.open(id).unwrap();
         }

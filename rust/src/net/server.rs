@@ -1,9 +1,7 @@
 //! Inbound TCP listener: accepts peer connections and pumps decoded
 //! frames into an mpsc channel consumed by the node's protocol loop.
 
-use super::wire;
-use crate::ndmp::messages::Msg;
-use crate::topology::NodeId;
+use super::wire::{self, Frame};
 use anyhow::Result;
 use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -13,7 +11,8 @@ use std::thread::JoinHandle;
 
 pub struct Listener {
     pub addr: SocketAddr,
-    pub rx: Receiver<(NodeId, Msg)>,
+    /// Decoded inbound frames, timing stamps included (see `net::wire`).
+    pub rx: Receiver<Frame>,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
 }
@@ -25,7 +24,7 @@ impl Listener {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        let (tx, rx) = channel::<(NodeId, Msg)>();
+        let (tx, rx) = channel::<Frame>();
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let accept_thread = std::thread::spawn(move || {
@@ -53,7 +52,7 @@ impl Drop for Listener {
     }
 }
 
-fn accept_loop(listener: TcpListener, tx: Sender<(NodeId, Msg)>, stop: Arc<AtomicBool>) {
+fn accept_loop(listener: TcpListener, tx: Sender<Frame>, stop: Arc<AtomicBool>) {
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
@@ -72,8 +71,8 @@ fn accept_loop(listener: TcpListener, tx: Sender<(NodeId, Msg)>, stop: Arc<Atomi
                             break;
                         }
                         match wire::read_frame(&mut stream) {
-                            Ok(pair) => {
-                                if tx.send(pair).is_err() {
+                            Ok(frame) => {
+                                if tx.send(frame).is_err() {
                                     break;
                                 }
                             }
@@ -95,6 +94,7 @@ fn accept_loop(listener: TcpListener, tx: Sender<(NodeId, Msg)>, stop: Arc<Atomi
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ndmp::messages::Msg;
     use crate::net::peer::PeerPool;
 
     #[test]
@@ -106,8 +106,14 @@ mod tests {
         // base_port = port - id with id = 0
         let pool = PeerPool::new(port, 9);
         pool.send(0, &Msg::Heartbeat);
-        pool.send(
+        let stamp = wire::Stamp {
+            seq: 4,
+            sent_at: 12_000,
+            delay: 350,
+        };
+        pool.send_stamped(
             0,
+            stamp,
             &Msg::ModelOffer {
                 task: 0,
                 fingerprint: 123,
@@ -115,12 +121,14 @@ mod tests {
                 version: 7,
             },
         );
-        let (from1, m1) = l.rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
-        let (from2, m2) = l.rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
-        assert_eq!(from1, 9);
-        assert_eq!(m1, Msg::Heartbeat);
-        assert_eq!(from2, 9);
-        assert!(matches!(m2, Msg::ModelOffer { fingerprint: 123, .. }));
+        let f1 = l.rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        let f2 = l.rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(f1.sender, 9);
+        assert_eq!(f1.msg, Msg::Heartbeat);
+        assert_eq!(f1.stamp, wire::Stamp::default());
+        assert_eq!(f2.sender, 9);
+        assert_eq!(f2.stamp, stamp);
+        assert!(matches!(f2.msg, Msg::ModelOffer { fingerprint: 123, .. }));
         l.shutdown();
     }
 }

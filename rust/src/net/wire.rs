@@ -3,18 +3,63 @@
 //! Frame format (all integers big-endian):
 //!
 //! ```text
-//! [0xFD magic u8][sender u64][type u8][len u32][payload ...]
+//! [0xFD magic u8][sender u64][seq u64][sent_at u64][delay u64][type u8][len u32][payload ...]
 //! ```
+//!
+//! `sent_at` is the *virtual* send time in microseconds on the sender's
+//! scheduler clock, and `delay` the virtual one-way link delay sampled
+//! at send time (`sim::network::LinkDelay`): the receiver releases the
+//! frame into its event loop at `sent_at + delay`, which is what lets
+//! the scheduler-driven TCP backend reproduce the in-memory backend's
+//! arrival timestamps exactly (see `docs/transports.md`). `seq` is the
+//! sender-side global send sequence, the canonical tie-breaker when two
+//! frames fall due at the same virtual instant. Wall-clock nodes
+//! (`net::client_node`) have no virtual clock and stamp zeros.
 //!
 //! The payload layout per message type mirrors `Msg`'s fields in order.
 //! Coordinates never travel (they are hash-derived from node ids).
 
-use crate::ndmp::messages::{Dir, Msg, Side};
+use crate::ndmp::messages::{Dir, Msg, Side, Time};
 use crate::topology::NodeId;
 use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 
 pub const MAGIC: u8 = 0xFD;
+
+/// Total bytes before the payload: magic + sender + seq + sent_at +
+/// delay + type + length.
+pub const HEAD_LEN: usize = 1 + 8 + 8 + 8 + 8 + 1 + 4;
+
+/// Virtual timing stamps carried by every frame (zeros from wall-clock
+/// senders, which have no virtual clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Stamp {
+    /// Sender-side global send sequence: orders frames that fall due at
+    /// the same virtual instant exactly like the in-memory backend's
+    /// event-queue insertion order.
+    pub seq: u64,
+    /// Virtual send time (µs) on the sender's scheduler clock.
+    pub sent_at: Time,
+    /// Virtual one-way delay (µs) sampled at send time.
+    pub delay: Time,
+}
+
+impl Stamp {
+    /// The frame's virtual due time (saturating: wall-clock zero stamps
+    /// stay 0).
+    pub fn due(&self) -> Time {
+        self.sent_at.saturating_add(self.delay)
+    }
+}
+
+/// One decoded frame: the sender, its virtual timing stamps, and the
+/// message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub sender: NodeId,
+    pub stamp: Stamp,
+    pub msg: Msg,
+}
 
 const T_DISCOVERY: u8 = 1;
 const T_DISCOVERY_RESULT: u8 = 2;
@@ -113,8 +158,10 @@ fn byte_dir(b: u8) -> Result<Dir> {
     }
 }
 
-/// Serialize one message into a framed byte vector.
-pub fn encode(sender: NodeId, msg: &Msg) -> Vec<u8> {
+/// Serialize one message into a framed byte vector, stamped with its
+/// send sequence, virtual send time, and sampled link delay
+/// (`Stamp::default()` for wall-clock senders).
+pub fn encode(sender: NodeId, stamp: Stamp, msg: &Msg) -> Vec<u8> {
     let mut w = Writer::new();
     let ty = match msg {
         Msg::NeighborDiscovery { joiner, space } => {
@@ -192,9 +239,12 @@ pub fn encode(sender: NodeId, msg: &Msg) -> Vec<u8> {
         }
     };
     let payload = w.buf;
-    let mut frame = Vec::with_capacity(14 + payload.len());
+    let mut frame = Vec::with_capacity(HEAD_LEN + payload.len());
     frame.push(MAGIC);
     frame.extend_from_slice(&sender.to_be_bytes());
+    frame.extend_from_slice(&stamp.seq.to_be_bytes());
+    frame.extend_from_slice(&stamp.sent_at.to_be_bytes());
+    frame.extend_from_slice(&stamp.delay.to_be_bytes());
     frame.push(ty);
     frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
     frame.extend_from_slice(&payload);
@@ -269,27 +319,41 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
     Ok(msg)
 }
 
-/// Read one frame from a stream. Returns `(sender, msg)`.
-pub fn read_frame(stream: &mut impl Read) -> Result<(NodeId, Msg)> {
-    let mut head = [0u8; 14];
+/// Read one frame from a stream.
+pub fn read_frame(stream: &mut impl Read) -> Result<Frame> {
+    let mut head = [0u8; HEAD_LEN];
     stream.read_exact(&mut head).context("reading frame head")?;
     if head[0] != MAGIC {
         bail!("bad magic byte {:#x}", head[0]);
     }
     let sender = u64::from_be_bytes(head[1..9].try_into().unwrap());
-    let ty = head[9];
-    let len = u32::from_be_bytes(head[10..14].try_into().unwrap()) as usize;
+    let stamp = Stamp {
+        seq: u64::from_be_bytes(head[9..17].try_into().unwrap()),
+        sent_at: u64::from_be_bytes(head[17..25].try_into().unwrap()),
+        delay: u64::from_be_bytes(head[25..33].try_into().unwrap()),
+    };
+    let ty = head[33];
+    let len = u32::from_be_bytes(head[34..38].try_into().unwrap()) as usize;
     if len > 512 * 1024 * 1024 {
         bail!("frame too large: {len}");
     }
     let mut payload = vec![0u8; len];
     stream.read_exact(&mut payload).context("reading payload")?;
-    Ok((sender, decode_payload(ty, &payload)?))
+    Ok(Frame {
+        sender,
+        stamp,
+        msg: decode_payload(ty, &payload)?,
+    })
 }
 
 /// Write one frame to a stream.
-pub fn write_frame(stream: &mut impl Write, sender: NodeId, msg: &Msg) -> Result<()> {
-    let frame = encode(sender, msg);
+pub fn write_frame(
+    stream: &mut impl Write,
+    sender: NodeId,
+    stamp: Stamp,
+    msg: &Msg,
+) -> Result<()> {
+    let frame = encode(sender, stamp, msg);
     stream.write_all(&frame).context("writing frame")?;
     Ok(())
 }
@@ -303,11 +367,17 @@ mod tests {
     }
 
     fn roundtrip_from(sender: NodeId, msg: Msg) {
-        let frame = encode(sender, &msg);
+        let stamp = Stamp {
+            seq: 3,
+            sent_at: 7_000,
+            delay: 350,
+        };
+        let frame = encode(sender, stamp, &msg);
         let mut cursor = std::io::Cursor::new(frame);
-        let (got_sender, got) = read_frame(&mut cursor).unwrap();
-        assert_eq!(got_sender, sender);
-        assert_eq!(got, msg);
+        let got = read_frame(&mut cursor).unwrap();
+        assert_eq!(got.sender, sender);
+        assert_eq!(got.stamp, stamp);
+        assert_eq!(got.msg, msg);
     }
 
     /// One instance of every `Msg` variant, with edge-leaning field
@@ -411,6 +481,49 @@ mod tests {
         roundtrip_from(u64::MAX, Msg::ModelRequest { task: 0, version: 1 });
     }
 
+    /// The virtual timing stamps survive the wire bit-exactly — the TCP
+    /// backend's arrival timestamps are computed from them, so a lossy
+    /// stamp would silently desynchronize the two transports.
+    #[test]
+    fn timing_stamps_roundtrip() {
+        for (seq, sent_at, delay) in [
+            (0u64, 0u64, 0u64),
+            (1, 1, 1),
+            (u64::MAX, u64::MAX, u64::MAX),
+            (42, 90_000_000, 350_123),
+        ] {
+            let stamp = Stamp { seq, sent_at, delay };
+            let frame = encode(9, stamp, &Msg::Heartbeat);
+            let got = read_frame(&mut std::io::Cursor::new(frame)).unwrap();
+            assert_eq!(got.stamp, stamp);
+        }
+        // frames differing only in one stamp field must not encode
+        // identically
+        let base = Stamp {
+            seq: 2,
+            sent_at: 5,
+            delay: 10,
+        };
+        let a = encode(1, base, &Msg::Heartbeat);
+        let b = encode(1, Stamp { delay: 11, ..base }, &Msg::Heartbeat);
+        let c = encode(1, Stamp { sent_at: 6, ..base }, &Msg::Heartbeat);
+        let d = encode(1, Stamp { seq: 3, ..base }, &Msg::Heartbeat);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, d);
+        // due() is the stamped sum, saturating at the top
+        assert_eq!(base.due(), 15);
+        assert_eq!(
+            Stamp {
+                seq: 0,
+                sent_at: u64::MAX,
+                delay: 2
+            }
+            .due(),
+            u64::MAX
+        );
+    }
+
     /// The task id survives the wire bit-exactly on every MEP message —
     /// the multi-task engine relies on frames never migrating between
     /// tasks.
@@ -432,8 +545,8 @@ mod tests {
             });
         }
         // two frames differing only in task must not encode identically
-        let a = encode(1, &Msg::ModelRequest { task: 0, version: 9 });
-        let b = encode(1, &Msg::ModelRequest { task: 1, version: 9 });
+        let a = encode(1, Stamp::default(), &Msg::ModelRequest { task: 0, version: 9 });
+        let b = encode(1, Stamp::default(), &Msg::ModelRequest { task: 1, version: 9 });
         assert_ne!(a, b);
     }
 
@@ -442,7 +555,7 @@ mod tests {
     #[test]
     fn truncation_at_every_byte_errors() {
         for msg in all_variants() {
-            let frame = encode(3, &msg);
+            let frame = encode(3, Stamp { seq: 1, sent_at: 1_000, delay: 50 }, &msg);
             for cut in 0..frame.len() {
                 let mut cursor = std::io::Cursor::new(&frame[..cut]);
                 assert!(
@@ -459,9 +572,9 @@ mod tests {
     #[test]
     fn rejects_trailing_payload_bytes() {
         for msg in [Msg::Heartbeat, Msg::ModelRequest { task: 0, version: 2 }] {
-            let mut frame = encode(1, &msg);
-            let len = u32::from_be_bytes(frame[10..14].try_into().unwrap()) + 1;
-            frame[10..14].copy_from_slice(&len.to_be_bytes());
+            let mut frame = encode(1, Stamp::default(), &msg);
+            let len = u32::from_be_bytes(frame[34..38].try_into().unwrap()) + 1;
+            frame[34..38].copy_from_slice(&len.to_be_bytes());
             frame.push(0);
             let mut cursor = std::io::Cursor::new(frame);
             assert!(read_frame(&mut cursor).is_err(), "trailing byte accepted");
@@ -471,39 +584,41 @@ mod tests {
     #[test]
     fn rejects_bad_side_and_dir_bytes() {
         // AdjacentUpdate payload: space u32, side u8, node u64 — the side
-        // byte sits at offset 14 (head) + 4.
+        // byte sits at offset HEAD_LEN + 4.
         let mut frame = encode(
             1,
+            Stamp::default(),
             &Msg::AdjacentUpdate {
                 space: 0,
                 side: Side::Next,
                 node: 5,
             },
         );
-        frame[18] = 7;
+        frame[HEAD_LEN + 4] = 7;
         assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
-        // RepairStop payload: space u32, dir u8 — dir byte at 14 + 4.
+        // RepairStop payload: space u32, dir u8 — dir byte at HEAD_LEN + 4.
         let mut frame = encode(
             1,
+            Stamp::default(),
             &Msg::RepairStop {
                 space: 2,
                 dir: Dir::Cw,
             },
         );
-        frame[18] = 9;
+        frame[HEAD_LEN + 4] = 9;
         assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
     }
 
     #[test]
     fn rejects_oversized_length_field() {
-        let mut frame = encode(1, &Msg::Heartbeat);
-        frame[10..14].copy_from_slice(&u32::MAX.to_be_bytes());
+        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat);
+        frame[34..38].copy_from_slice(&u32::MAX.to_be_bytes());
         assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
     }
 
     #[test]
     fn rejects_bad_magic() {
-        let mut frame = encode(1, &Msg::Heartbeat);
+        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat);
         frame[0] = 0x00;
         let mut cursor = std::io::Cursor::new(frame);
         assert!(read_frame(&mut cursor).is_err());
@@ -511,15 +626,15 @@ mod tests {
 
     #[test]
     fn rejects_truncated() {
-        let frame = encode(1, &Msg::ModelRequest { task: 0, version: 2 });
+        let frame = encode(1, Stamp::default(), &Msg::ModelRequest { task: 0, version: 2 });
         let mut cursor = std::io::Cursor::new(&frame[..frame.len() - 2]);
         assert!(read_frame(&mut cursor).is_err());
     }
 
     #[test]
     fn rejects_unknown_type() {
-        let mut frame = encode(1, &Msg::Heartbeat);
-        frame[9] = 99;
+        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat);
+        frame[33] = 99;
         let mut cursor = std::io::Cursor::new(frame);
         assert!(read_frame(&mut cursor).is_err());
     }
@@ -536,8 +651,9 @@ mod tests {
                 params: vec![0.0; 100],
             },
         ] {
-            let actual = encode(1, &msg).len();
-            let estimate = msg.wire_size() + 9; // estimate excludes sender id
+            let actual = encode(1, Stamp::default(), &msg).len();
+            // estimate excludes the sender id and the three stamp fields
+            let estimate = msg.wire_size() + 9 + 24;
             assert!(
                 (actual as i64 - estimate as i64).abs() <= 8,
                 "{msg:?}: actual {actual} vs estimate {estimate}"

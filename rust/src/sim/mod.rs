@@ -19,7 +19,7 @@ pub mod scenario;
 pub mod transport;
 
 pub use event::{Event, EventKind, EventQueue};
-pub use network::{LatencyModel, SimTransport};
+pub use network::{LatencyModel, LinkDelay, SimTransport};
 pub use runner::{grow_network, CorrectnessSample, Simulator};
 pub use scenario::{
     quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, MultiTrainerSink, Phase,

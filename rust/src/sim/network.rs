@@ -1,13 +1,21 @@
-//! Simulated network latency model: one-way delay = `latency_ms` plus an
-//! exponential jitter tail. Deterministic per seed. `SimTransport` wraps
-//! the model as the in-memory `Transport` backend of the unified engine.
+//! Virtual link latency: one-way delay = `latency_ms` plus an
+//! exponential jitter tail, sampled from a deterministic per-link
+//! stream ([`LinkDelay`]). Both message backends consume the same
+//! component — `SimTransport` turns each sample into a queue-scheduled
+//! delivery time, `net::SchedTransport` stamps it into the wire frame —
+//! which is what makes arrival *timestamps* (not just converged
+//! topologies) conformant across backends (see `docs/transports.md`).
 
 use super::transport::{Arrival, Transport};
 use crate::config::NetConfig;
 use crate::ndmp::messages::{Msg, Time};
 use crate::topology::NodeId;
 use crate::util::Rng;
+use std::collections::HashMap;
 
+/// One delay distribution: base latency plus an exponential tail with
+/// mean `jitter * base`. Every sample is at least 1 µs so virtual
+/// arrivals are strictly after their sends.
 #[derive(Debug)]
 pub struct LatencyModel {
     base_us: f64,
@@ -16,11 +24,20 @@ pub struct LatencyModel {
 }
 
 impl LatencyModel {
+    /// One stream seeded from the config alone (the pre-`LinkDelay`
+    /// behavior; kept for direct distribution use and tests).
     pub fn new(cfg: &NetConfig) -> Self {
+        Self::with_seed(cfg, cfg.seed ^ 0x1a7e_0c11)
+    }
+
+    /// One stream with an explicit seed — `LinkDelay` derives one per
+    /// directed link so the delay sequence of a link depends only on the
+    /// config seed and the link's endpoints, never on global send order.
+    pub fn with_seed(cfg: &NetConfig, seed: u64) -> Self {
         Self {
             base_us: cfg.latency_ms * 1_000.0,
             jitter: cfg.jitter,
-            rng: Rng::new(cfg.seed ^ 0x1a7e_0c11),
+            rng: Rng::new(seed),
         }
     }
 
@@ -35,19 +52,95 @@ impl LatencyModel {
     }
 }
 
+/// Deterministic per-link delay: the shared component both transport
+/// backends sample. Each directed link `(from, to)` owns an independent
+/// [`LatencyModel`] stream seeded from `(config seed, from, to)`, so
+///
+/// * the k-th message on a link gets the same delay on every backend
+///   (per-link send order is identical when both replay one schedule),
+/// * links never perturb each other's sequences, and
+/// * a link's sequence is reproducible from the config seed alone.
+#[derive(Debug)]
+pub struct LinkDelay {
+    cfg: NetConfig,
+    links: HashMap<(NodeId, NodeId), LatencyModel>,
+    /// Nodes whose endpoints closed: links touching them are sampled
+    /// ephemerally (no map entry), so post-close traffic — e.g. a dead
+    /// node's neighbors heartbeating it until failure detection — can't
+    /// regrow the map. High-churn runs stay bounded by the *live* mesh.
+    closed: std::collections::HashSet<NodeId>,
+}
+
+impl LinkDelay {
+    pub fn new(cfg: &NetConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            links: HashMap::new(),
+            closed: std::collections::HashSet::new(),
+        }
+    }
+
+    /// Seed for the directed link `from -> to`: SplitMix64-style mixing
+    /// keeps nearby id pairs statistically independent.
+    fn link_seed(seed: u64, from: NodeId, to: NodeId) -> u64 {
+        let mut z = seed ^ 0x9E37_79B9_7F4A_7C15;
+        for part in [from, to] {
+            z = (z ^ part).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        }
+        z ^ (z >> 31)
+    }
+
+    /// Sample the next delay (µs, >= 1) on the directed link `from -> to`.
+    ///
+    /// Links touching a closed node draw from a fresh seed-initialized
+    /// stream each call instead of a cached one: such sends are dropped
+    /// or delivered-to-dead on every backend, so the values are
+    /// unobservable — both backends compute the same ones — and caching
+    /// them would regrow the map with dead links.
+    pub fn sample(&mut self, from: NodeId, to: NodeId) -> Time {
+        let cfg = &self.cfg;
+        if self.closed.contains(&from) || self.closed.contains(&to) {
+            return LatencyModel::with_seed(cfg, Self::link_seed(cfg.seed, from, to)).sample();
+        }
+        self.links
+            .entry((from, to))
+            .or_insert_with(|| {
+                LatencyModel::with_seed(cfg, Self::link_seed(cfg.seed, from, to))
+            })
+            .sample()
+    }
+
+    /// `node`'s endpoint closed: drop every link stream touching it and
+    /// sample its links ephemerally from now on. Both backends call this
+    /// from `Transport::close`, so link state stays identical across
+    /// them.
+    pub fn forget(&mut self, node: NodeId) {
+        self.links.retain(|&(from, to), _| from != node && to != node);
+        self.closed.insert(node);
+    }
+
+    /// `node`'s endpoint (re)opened: resume cached streaming for its
+    /// links. A reused id restarts its links from their seeds — on both
+    /// backends, since both pruned at close.
+    pub fn reopen(&mut self, node: NodeId) {
+        self.closed.remove(&node);
+    }
+}
+
 /// The in-memory message backend: every send is scheduled back onto the
-/// caller's event queue after a latency-model delay. Fully deterministic
-/// per seed — the reference behavior the TCP backend is conformance-tested
-/// against.
+/// caller's event queue after a per-link [`LinkDelay`] sample. Fully
+/// deterministic per seed — the reference behavior the TCP backend is
+/// conformance-tested against.
 #[derive(Debug)]
 pub struct SimTransport {
-    latency: LatencyModel,
+    delay: LinkDelay,
 }
 
 impl SimTransport {
     pub fn new(cfg: &NetConfig) -> Self {
         Self {
-            latency: LatencyModel::new(cfg),
+            delay: LinkDelay::new(cfg),
         }
     }
 }
@@ -57,14 +150,19 @@ impl Transport for SimTransport {
         "sim"
     }
 
-    fn open(&mut self, _node: NodeId) -> anyhow::Result<()> {
+    fn open(&mut self, node: NodeId) -> anyhow::Result<()> {
+        self.delay.reopen(node);
         Ok(())
     }
 
-    fn close(&mut self, _node: NodeId) {}
+    fn close(&mut self, node: NodeId) {
+        self.delay.forget(node);
+    }
 
-    fn send(&mut self, now: Time, _from: NodeId, _to: NodeId, _msg: &Msg) -> Option<Time> {
-        Some(now + self.latency.sample())
+    fn send(&mut self, now: Time, from: NodeId, to: NodeId, _msg: &Msg) -> Option<Time> {
+        // saturating, to match the wire path's `Stamp::due()` on absurd
+        // configured latencies
+        Some(now.saturating_add(self.delay.sample(from, to)))
     }
 
     fn poll(&mut self) -> Vec<Arrival> {
@@ -103,6 +201,106 @@ mod tests {
         };
         let mut m = LatencyModel::new(&cfg);
         assert!((0..100).all(|_| m.sample() == 10_000));
+    }
+
+    #[test]
+    fn link_delay_is_deterministic_per_seed() {
+        let cfg = NetConfig {
+            latency_ms: 40.0,
+            jitter: 0.3,
+            seed: 11,
+        };
+        let draw = |cfg: &NetConfig| {
+            let mut d = LinkDelay::new(cfg);
+            (0..200).map(|i| d.sample(i % 5, (i + 1) % 5)).collect::<Vec<Time>>()
+        };
+        assert_eq!(draw(&cfg), draw(&cfg), "same seed must replay identically");
+        let other = NetConfig {
+            seed: 12,
+            ..cfg.clone()
+        };
+        assert_ne!(draw(&cfg), draw(&other), "different seeds must differ");
+    }
+
+    #[test]
+    fn link_delay_respects_distribution_bounds() {
+        let cfg = NetConfig {
+            latency_ms: 25.0,
+            jitter: 0.2,
+            seed: 3,
+        };
+        let mut d = LinkDelay::new(&cfg);
+        let n = 30_000;
+        let samples: Vec<Time> = (0..n).map(|_| d.sample(1, 2)).collect();
+        // hard floor: base latency (jitter only ever adds)
+        assert!(samples.iter().all(|&s| s >= 25_000));
+        // mean tracks base * (1 + jitter)
+        let mean = samples.iter().map(|&s| s as f64).sum::<f64>() / n as f64;
+        let want = 25_000.0 * 1.2;
+        assert!((mean - want).abs() < want * 0.05, "mean {mean} want {want}");
+        // zero-latency configs still produce strictly positive delays
+        let zero = NetConfig {
+            latency_ms: 0.0,
+            jitter: 0.0,
+            seed: 3,
+        };
+        let mut z = LinkDelay::new(&zero);
+        assert!((0..100).all(|_| z.sample(1, 2) == 1));
+    }
+
+    #[test]
+    fn links_are_independent_streams() {
+        let cfg = NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.5,
+            seed: 7,
+        };
+        // interleaving draws on link B must not shift link A's sequence
+        let mut solo = LinkDelay::new(&cfg);
+        let a_solo: Vec<Time> = (0..50).map(|_| solo.sample(1, 2)).collect();
+        let mut mixed = LinkDelay::new(&cfg);
+        let a_mixed: Vec<Time> = (0..50)
+            .map(|_| {
+                mixed.sample(3, 4);
+                mixed.sample(2, 1); // reverse direction is its own link too
+                mixed.sample(1, 2)
+            })
+            .collect();
+        assert_eq!(a_solo, a_mixed, "foreign links perturbed link (1,2)");
+        // distinct links draw distinct sequences
+        let mut d = LinkDelay::new(&cfg);
+        let a: Vec<Time> = (0..50).map(|_| d.sample(1, 2)).collect();
+        let b: Vec<Time> = (0..50).map(|_| d.sample(2, 1)).collect();
+        assert_ne!(a, b, "directed links must not share a stream");
+    }
+
+    #[test]
+    fn forget_prunes_links_and_samples_dead_ones_ephemerally() {
+        let cfg = NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.5,
+            seed: 9,
+        };
+        let mut d = LinkDelay::new(&cfg);
+        let first = d.sample(1, 2);
+        let second = d.sample(1, 2);
+        assert_ne!(first, second, "jittered stream should advance");
+        d.sample(2, 3); // untouched by the forget below
+        let third_continuation = {
+            let mut probe = LinkDelay::new(&cfg);
+            probe.sample(2, 3);
+            probe.sample(2, 3)
+        };
+        d.forget(1);
+        // links touching the closed node sample ephemerally (fresh from
+        // the seed every call, nothing cached); (2,3) streams on
+        assert_eq!(d.sample(1, 2), first);
+        assert_eq!(d.sample(1, 2), first);
+        assert_eq!(d.sample(2, 3), third_continuation);
+        // a reopened (reused) id resumes cached streaming from its seed
+        d.reopen(1);
+        assert_eq!(d.sample(1, 2), first);
+        assert_eq!(d.sample(1, 2), second);
     }
 
     #[test]

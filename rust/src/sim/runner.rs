@@ -46,6 +46,12 @@ pub struct Simulator {
     view_changes: BTreeSet<NodeId>,
     /// Cumulative count of view-change notifications (telemetry).
     pub view_change_count: u64,
+    /// When enabled (`record_deliveries`), every delivered message is
+    /// traced as `(virtual arrival time, from, to)` — the conformance
+    /// suite's "identical arrival timestamps" comparison view. Off by
+    /// default (the trace grows with every message).
+    record_deliveries: bool,
+    pub delivery_log: Vec<(Time, NodeId, NodeId)>,
 }
 
 impl Simulator {
@@ -73,7 +79,14 @@ impl Simulator {
             delivered: 0,
             view_changes: BTreeSet::new(),
             view_change_count: 0,
+            record_deliveries: false,
+            delivery_log: Vec::new(),
         }
+    }
+
+    /// Toggle the per-message arrival trace (see `delivery_log`).
+    pub fn record_deliveries(&mut self, on: bool) {
+        self.record_deliveries = on;
     }
 
     /// Name of the message backend (`"sim"` or `"tcp"`).
@@ -193,32 +206,31 @@ impl Simulator {
         }
     }
 
-    /// Deliver messages the transport carried out-of-band (socket
-    /// backends). Loops until quiescent so multi-hop protocol exchanges
-    /// complete within one virtual instant; a no-op on the in-memory
-    /// backend.
+    /// Collect frames the transport carried out-of-band (socket
+    /// backends) and schedule each as a `Deliver` event at its stamped
+    /// virtual arrival time — the same queue path the in-memory backend
+    /// takes, so both backends process deliveries in the identical
+    /// order. A no-op on the in-memory backend.
+    ///
+    /// `poll` returns arrivals in (due time, send order); pushing them
+    /// in that order reproduces the in-memory backend's queue insertion
+    /// order for equal-time ties. Stamps are always in the future of the
+    /// sending instant (delays are >= 1 µs); the `max` only guards
+    /// frames a slow loopback surfaced after their due instant, which
+    /// are delivered as soon as possible instead of rewinding the clock.
     fn pump(&mut self) {
         if self.transport.idle() {
             return;
         }
-        loop {
-            let arrivals = self.transport.poll();
-            if arrivals.is_empty() {
-                break;
-            }
-            for a in arrivals {
-                self.delivered += 1;
-                // messages to dead nodes vanish (crash-fail model)
-                let Some(node) = self.nodes.get_mut(&a.to) else {
-                    continue;
-                };
-                let stamp = node.view_stamp();
-                let outs = node.handle(a.from, a.msg, self.now);
-                if node.view_stamp() != stamp {
-                    self.note_view_change(a.to);
-                }
-                self.dispatch(a.to, outs);
-            }
+        for a in self.transport.poll() {
+            self.queue.push(
+                a.at.max(self.now),
+                EventKind::Deliver {
+                    from: a.from,
+                    to: a.to,
+                    msg: a.msg,
+                },
+            );
         }
     }
 
@@ -275,11 +287,19 @@ impl Simulator {
             self.now = ev.at;
             match ev.kind {
                 EventKind::Deliver { from, to, msg } => {
-                    self.delivered += 1;
-                    // messages to dead nodes vanish (crash-fail model)
+                    // Messages to dead nodes vanish (crash-fail model)
+                    // *before* counting: the wire backend never has a
+                    // frame for them (the send is dropped at the closed
+                    // endpoint), so counting them here would make
+                    // `delivered` and the delivery log diverge between
+                    // backends.
                     let Some(node) = self.nodes.get_mut(&to) else {
                         continue;
                     };
+                    self.delivered += 1;
+                    if self.record_deliveries {
+                        self.delivery_log.push((self.now, from, to));
+                    }
                     let stamp = node.view_stamp();
                     let outs = node.handle(from, msg, self.now);
                     if node.view_stamp() != stamp {
@@ -296,9 +316,14 @@ impl Simulator {
                     if st.view_stamp() != stamp {
                         self.note_view_change(node);
                     }
-                    self.dispatch(node, outs);
+                    // push the next tick *before* dispatching: the wire
+                    // backend's deliveries enter the queue after the
+                    // event (in `pump`), so a uniform tick-first order
+                    // keeps equal-time tie-breaking identical on both
+                    // backends
                     self.queue
                         .push(self.now + self.tick_period, EventKind::Tick { node });
+                    self.dispatch(node, outs);
                 }
                 EventKind::Join { node, bootstrap } => {
                     if self.nodes.contains_key(&node) || !self.nodes.contains_key(&bootstrap) {
@@ -311,9 +336,10 @@ impl Simulator {
                     let outs = st.start_join(bootstrap, self.now);
                     self.nodes.insert(node, st);
                     self.note_view_change(node);
-                    self.dispatch(node, outs);
+                    // tick before dispatch: see the Tick arm
                     self.queue
                         .push(self.now + self.tick_period, EventKind::Tick { node });
+                    self.dispatch(node, outs);
                 }
                 EventKind::Fail { node } => {
                     if let Some(st) = self.nodes.remove(&node) {

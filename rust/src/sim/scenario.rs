@@ -262,6 +262,14 @@ impl ScenarioSpec {
         ensure!(self.horizon > 0, "scenario.horizon_ms must be positive");
         ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
         ensure!(self.min_live >= 1, "scenario.min_live must be >= 1");
+        ensure!(
+            self.net.latency_ms.is_finite() && self.net.latency_ms >= 0.0,
+            "net.latency_ms must be a finite value >= 0"
+        );
+        ensure!(
+            self.net.jitter.is_finite() && self.net.jitter >= 0.0,
+            "net.jitter must be a finite value >= 0"
+        );
         for (i, ph) in self.phases.iter().enumerate() {
             match ph.kind {
                 PhaseKind::Partition { fraction } => {

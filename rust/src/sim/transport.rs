@@ -8,34 +8,46 @@
 //!   Heartbeats, repair probes, joins, failures, and snapshots are heap
 //!   events popped in virtual-time order — identically on every backend.
 //! * **Message passage** belongs to a `Transport`. The simulated backend
-//!   (`sim::network::SimTransport`) computes a delivery time from its
-//!   latency model and hands the message straight back to the scheduler;
-//!   the socket backend (`net::SchedTransport`) writes real TCP frames and
-//!   surfaces whatever the kernel delivers on the next `poll`.
+//!   (`sim::network::SimTransport`) samples a per-link delay
+//!   (`sim::network::LinkDelay`) and hands the message straight back to
+//!   the scheduler; the socket backend (`net::SchedTransport`) samples
+//!   the *same* per-link delay, stamps it into a real TCP frame, and
+//!   surfaces the arrival — tagged with its virtual due time — on the
+//!   next `poll`.
 //!
 //! A backend therefore answers `send` in one of two ways:
 //!
 //! * `Some(deliver_at)` — "schedule the delivery yourself": the caller
 //!   (`sim::Simulator`) pushes a `Deliver` event at that virtual time.
 //!   This is the deterministic, in-memory path.
-//! * `None` — "the message is on the wire": delivery happens out-of-band
-//!   and the caller must `poll` for `Arrival`s between scheduler events.
+//! * `None` — "the message is on the wire": the frame travels physically
+//!   and the caller must `poll` for [`Arrival`]s between scheduler
+//!   events, scheduling each at its stamped [`Arrival::at`].
 //!
-//! Both backends drive the *same* `ndmp::NodeState` protocol engines, so a
-//! seeded churn schedule replays over real sockets exactly as it does in
-//! simulation — the conformance contract checked by
-//! `tests/transport_conformance.rs`.
+//! Either way the delivery executes as a `Deliver` event at
+//! `send_time + sampled_delay` on the scheduler clock, so both backends
+//! drive the *same* `ndmp::NodeState` protocol engines through the same
+//! event sequence — a seeded churn schedule replays over real sockets
+//! with the identical arrival timestamps it has in simulation. That is
+//! the conformance contract checked by `tests/transport_conformance.rs`
+//! and documented in `docs/transports.md`.
 
 use crate::ndmp::messages::{Msg, Time};
 use crate::topology::NodeId;
 use anyhow::Result;
 
 /// A message that arrived out-of-band (socket backends): `from` sent
-/// `msg` to `to`, and it is due for delivery *now* in virtual time.
+/// `msg` to `to`, due for delivery at virtual time `at` (its stamped
+/// send time plus the sampled link delay). `at` is usually in the
+/// caller's future — frames arrive physically while the virtual instant
+/// that sent them is still being settled — and the caller schedules the
+/// delivery on its own event queue.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Arrival {
     pub from: NodeId,
     pub to: NodeId,
+    /// Virtual delivery time: wire-stamped send time + sampled delay.
+    pub at: Time,
     pub msg: Msg,
 }
 
@@ -62,7 +74,9 @@ pub trait Transport: Send + Sync {
     /// delivery on its own event queue (in-memory backend), or `None`
     /// when the transport moves the bytes itself and the caller should
     /// `poll` for the arrival (socket backend). Sends to unknown or dead
-    /// endpoints are dropped, never an error.
+    /// endpoints are dropped, never an error — but every backend still
+    /// samples the link delay for them, so dropped sends cannot shift a
+    /// link's delay sequence between backends.
     fn send(&mut self, now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time>;
 
     /// Fan `msg` out to several destinations; returns the scheduled
@@ -86,11 +100,13 @@ pub trait Transport: Send + Sync {
             .collect()
     }
 
-    /// Collect messages that arrived out-of-band since the last poll.
-    /// The in-memory backend always returns an empty vector. Socket
-    /// backends may block briefly (bounded) to let in-flight loopback
-    /// traffic quiesce, so multi-hop exchanges complete within one
-    /// virtual instant.
+    /// Collect messages that arrived out-of-band since the last poll,
+    /// in virtual-time order (ties by send order). The in-memory backend
+    /// always returns an empty vector. Socket backends wait (bounded)
+    /// until every frame written since the last poll has physically
+    /// arrived — the quiescence window is only a liveness backstop for
+    /// frames lost to a dying peer — and each returned [`Arrival`]
+    /// carries the virtual due time the caller must schedule it at.
     fn poll(&mut self) -> Vec<Arrival>;
 
     /// `true` when `poll` can never return anything (pure queue-scheduled

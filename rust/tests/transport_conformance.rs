@@ -1,15 +1,17 @@
 //! Deterministic-vs-socket conformance: an identical seeded churn
-//! schedule must produce the identical final overlay on the in-memory
-//! simulated transport and on the real TCP transport (localhost
-//! sockets). This is the paper's practicality claim in executable form —
-//! NDMP constructs and maintains the same near-random regular topology
-//! whether messages are heap events or real frames (§IV-A1 types 1–3).
+//! schedule must replay identically on the in-memory simulated
+//! transport and on the real TCP transport (localhost sockets). This is
+//! the paper's practicality claim in executable form — NDMP constructs
+//! and maintains the same near-random regular topology whether messages
+//! are heap events or real frames (§IV-A1 types 1–3).
 //!
-//! The comparison view is the ring-adjacency snapshot (Definition-1
-//! neighbor sets): message interleavings differ over real sockets, but a
-//! converged FedLay's rings are fully determined by the live membership
-//! (coordinates are hash-derived from node ids), so both backends must
-//! land on the exact same neighbor multisets with correctness 1.0.
+//! Since virtual latency flows through the socket path (frames carry
+//! their virtual send time + sampled per-link delay, released into the
+//! scheduler at exactly that instant — see `docs/transports.md`), the
+//! comparison is *timing-exact*: both backends must produce the
+//! identical per-message arrival timestamps and delivery counts, the
+//! identical ring-adjacency snapshots, and — through a training run —
+//! the bitwise-identical accuracy series, with non-zero link latency.
 
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
 use fedlay::data::shard_labels;
@@ -75,6 +77,7 @@ fn settle_exact(sim: &mut Simulator, deadline: Time) {
 /// The seeded churn schedule both backends replay: concurrent joins, a
 /// crash failure, a late join, and a graceful leave.
 fn run_schedule(mut sim: Simulator) -> Simulator {
+    sim.record_deliveries(true);
     sim.bootstrap_correct(&(0..10).collect::<Vec<NodeId>>());
     sim.schedule_join(2 * SEC, 20, 3);
     sim.schedule_join(2 * SEC, 21, 7);
@@ -92,7 +95,7 @@ fn sim_and_tcp_backends_agree_on_churn_schedule() {
     let sim = run_schedule(Simulator::new(overlay(), net()));
     let tcp = run_schedule(Simulator::with_transport(
         overlay(),
-        Box::new(SchedTransport::new()),
+        Box::new(SchedTransport::new(&net())),
     ));
     assert_eq!(sim.backend(), "sim");
     assert_eq!(tcp.backend(), "tcp");
@@ -107,12 +110,22 @@ fn sim_and_tcp_backends_agree_on_churn_schedule() {
     assert!((sim.correctness() - 1.0).abs() < 1e-12, "sim not correct");
     assert!((tcp.correctness() - 1.0).abs() < 1e-12, "tcp not correct");
 
-    // ... and the exact same neighbor multisets, ring by ring.
+    // ... the exact same neighbor multisets, ring by ring ...
     assert_eq!(
         sim.ring_snapshot(),
         tcp.ring_snapshot(),
         "backends converged to different overlays"
     );
+
+    // ... and — the virtual-latency pin, with the schedule's non-zero
+    // 30 ms + jitter links — the identical arrival timestamp for every
+    // single message, in the identical order.
+    assert_eq!(sim.delivered, tcp.delivered, "delivery counts diverged");
+    assert_eq!(
+        sim.delivery_log, tcp.delivery_log,
+        "per-message arrival timestamps diverged between backends"
+    );
+    assert!(!sim.delivery_log.is_empty(), "trace should cover the run");
 }
 
 /// Scenario-engine conformance with *graceful leaves* on the wire: a
@@ -154,10 +167,14 @@ fn scenario_with_leaves_agrees_on_both_backends() {
 
     let (mut sim, sim_report) = spec.run_sim(None).expect("sim run");
     let (mut tcp, tcp_report) = spec
-        .run_sim(Some(Box::new(SchedTransport::new())))
+        .run_sim(Some(Box::new(SchedTransport::new(&spec.net))))
         .expect("tcp run");
     assert_eq!(sim_report.backend, "sim");
     assert_eq!(tcp_report.backend, "tcp");
+    // non-zero latency: the whole trajectory is pinned, not just the
+    // converged endpoint
+    assert_eq!(sim_report.delivered, tcp_report.delivered);
+    assert_eq!(sim_report.golden_lines(), tcp_report.golden_lines());
 
     settle_exact(&mut sim, 420 * SEC);
     settle_exact(&mut tcp, 420 * SEC);
@@ -179,12 +196,11 @@ fn scenario_with_leaves_agrees_on_both_backends() {
 /// three clients join through the protocol and two crash-fail — must be
 /// **pinned identical** on the in-memory and the TCP backend: same
 /// per-task membership, same ring snapshots after settle, and the same
-/// per-task accuracy series to the last bit. The scenario's network is
-/// zero-latency, so the in-memory backend completes every protocol
-/// exchange within microseconds of its virtual instant, exactly like the
-/// TCP backend's per-instant quiescence pump — ring views agree at every
-/// wake and sample time, which is what makes bitwise accuracy
-/// conformance possible at all.
+/// per-task accuracy series to the last bit. Both backends sample the
+/// same seeded per-link delays and deliver at the same virtual
+/// instants (the TCP path via wire-stamped send times), so ring views
+/// agree at every wake and sample time — which is what makes bitwise
+/// accuracy conformance possible at all.
 #[test]
 fn two_task_scenario_is_pinned_identical_on_sim_and_tcp() -> anyhow::Result<()> {
     let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
@@ -240,7 +256,7 @@ fn two_task_scenario_is_pinned_identical_on_sim_and_tcp() -> anyhow::Result<()> 
         &scenario,
         &tasks,
         population,
-        Some(Box::new(SchedTransport::new())),
+        Some(Box::new(SchedTransport::new(&scenario.net))),
     )?;
     assert_eq!(sim_report.backend, "sim");
     assert_eq!(tcp_report.backend, "tcp");
@@ -288,6 +304,94 @@ fn two_task_scenario_is_pinned_identical_on_sim_and_tcp() -> anyhow::Result<()> 
     Ok(())
 }
 
+/// The tentpole pin: a seeded churn+**training** schedule with
+/// *non-zero* link latency (30 ms + exponential jitter) replayed on
+/// both backends must produce the identical per-message arrival
+/// timestamps, the identical ring snapshots, and the bitwise-identical
+/// accuracy series — Fig. 8 timing fidelity over real sockets, not just
+/// the converged topology.
+#[test]
+fn nonzero_latency_training_pins_arrivals_rings_and_accuracy() -> anyhow::Result<()> {
+    const MIN: Time = 60_000_000; // µs per simulated minute
+    type Trace = (
+        Vec<(Time, NodeId, NodeId)>,
+        NeighborSnapshot,
+        u64,
+        Vec<(Time, f64)>,
+    );
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let n = 6usize;
+    let overlay = OverlayConfig {
+        spaces: SPACES,
+        heartbeat_ms: 5_000,
+        failure_multiple: 3,
+        repair_probe_ms: 20_000,
+    };
+    let run = |transport: Option<Box<dyn Transport>>| -> anyhow::Result<Trace> {
+        let cfg = DflConfig {
+            task: "mlp".into(),
+            clients: n,
+            local_steps: 1,
+            ..DflConfig::default()
+        };
+        let weights = shard_labels(n + 1, 10, 8, cfg.seed);
+        let mut trainer = Trainer::new(
+            &engine,
+            MethodSpec::fedlay_dynamic(overlay.clone(), net()),
+            cfg,
+            weights[..n].to_vec(),
+        )?;
+        if let Some(t) = transport {
+            trainer.set_transport(t)?;
+        }
+        let joiner = trainer.schedule_join(2 * MIN, weights[n].clone(), 0)?;
+        assert_eq!(joiner, n);
+        trainer.schedule_fail(5 * MIN, 1);
+        // materialize the overlay now so the arrival trace covers the
+        // whole run (it is otherwise built lazily inside `run`)
+        trainer.schedule_overlay_snapshots(12 * MIN, 6 * MIN)?;
+        trainer
+            .overlay
+            .as_mut()
+            .expect("overlay just built")
+            .record_deliveries(true);
+        let last = trainer.run(12 * MIN, 6 * MIN)?;
+        assert!(last.mean_accuracy.is_finite());
+        let sim = trainer.overlay.as_ref().expect("dynamic overlay state");
+        assert!(sim.nodes.contains_key(&(n as NodeId)), "joiner missing");
+        assert!(!sim.nodes.contains_key(&1), "failed node still live");
+        assert!(trainer.clients()[joiner].alive);
+        assert!(!trainer.clients()[1].alive);
+        let acc: Vec<(Time, f64)> = trainer
+            .samples()
+            .iter()
+            .map(|s| (s.at, s.mean_accuracy))
+            .collect();
+        assert!(!acc.is_empty());
+        Ok((
+            sim.delivery_log.clone(),
+            sim.ring_snapshot(),
+            sim.delivered,
+            acc,
+        ))
+    };
+
+    let (sim_log, sim_rings, sim_delivered, sim_acc) = run(None)?;
+    let (tcp_log, tcp_rings, tcp_delivered, tcp_acc) =
+        run(Some(Box::new(SchedTransport::new(&net()))))?;
+
+    assert_eq!(sim_delivered, tcp_delivered, "delivery counts diverged");
+    assert_eq!(
+        sim_log, tcp_log,
+        "arrival timestamps diverged under non-zero latency"
+    );
+    assert!(!sim_log.is_empty(), "trace should cover the run");
+    assert_eq!(sim_rings, tcp_rings, "ring snapshots diverged");
+    assert_eq!(sim_acc, tcp_acc, "accuracy series diverged (bitwise)");
+    Ok(())
+}
+
 /// `train --transport tcp` end-to-end: a small fedlay-dyn run whose
 /// embedded overlay lives on real localhost sockets, with a mid-run
 /// protocol join and a crash failure — the unified engine drives NDMP
@@ -305,7 +409,7 @@ fn trainer_completes_fedlay_dyn_over_tcp() -> anyhow::Result<()> {
         ..DflConfig::default()
     };
     // slow protocol timers: the virtual clock covers minutes, and every
-    // heartbeat round costs a real settle window over the loopback
+    // heartbeat round pays a real loopback round-trip per message
     let overlay = OverlayConfig {
         spaces: SPACES,
         heartbeat_ms: 5_000,
@@ -319,7 +423,7 @@ fn trainer_completes_fedlay_dyn_over_tcp() -> anyhow::Result<()> {
         cfg,
         weights[..n].to_vec(),
     )?;
-    trainer.set_transport(Box::new(SchedTransport::new()))?;
+    trainer.set_transport(Box::new(SchedTransport::new(&net())))?;
     let joiner = trainer.schedule_join(2 * MIN, weights[n].clone(), 0)?;
     assert_eq!(joiner, n);
     trainer.schedule_fail(5 * MIN, 1);
