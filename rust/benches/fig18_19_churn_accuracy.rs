@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
         sample_every: total / 10,
         settle: 0,
         min_live: (half / 2).max(2),
+        shards: 1,
         overlay,
         net: NetConfig::default(),
         phases: vec![Phase {
@@ -85,7 +86,7 @@ fn main() -> anyhow::Result<()> {
     let correctness = t.overlay.as_ref().map(|s| s.correctness()).unwrap_or(0.0);
     println!(
         "overlay after churn: {} live nodes, correctness {correctness:.3}",
-        t.overlay.as_ref().map(|s| s.nodes.len()).unwrap_or(0)
+        t.overlay.as_ref().map(|s| s.live_count()).unwrap_or(0)
     );
 
     println!("\n=== Fig. 18: accuracy of original vs newly joined nodes ===");

@@ -1,103 +1,28 @@
 //! P1 — §Perf microbenchmarks: the hot paths of all three layers as seen
 //! from L3. Feeds EXPERIMENTS.md §Perf (before/after iteration log).
 //!
-//!  * greedy routing next-hop decision (per hop cost of NDMP)
-//!  * virtual-coordinate hashing
-//!  * event-queue throughput (DES backbone)
-//!  * model fingerprinting (MEP de-dup)
-//!  * CPU aggregation vs the AOT Pallas-kernel aggregation artifact
-//!  * train-step and eval-step artifact execution latency
+//! The bench bodies live in `fedlay::bench_util::suite` so `fedlay bench`
+//! (the CI smoke entry point) and this harness measure the same code.
+//! Results are printed as a table and persisted to `BENCH_micro.json`
+//! in the working directory (schema in docs/perf.md). Pass `--quick`
+//! for the scaled-down smoke variant.
 
-use fedlay::bench_util::{bench, render_results};
-use fedlay::mep::{aggregate_cpu, fingerprint, pack_for_artifact};
-use fedlay::ndmp::messages::Dir;
-use fedlay::ndmp::routing::{coord_of, directional_next_hop, greedy_next_hop};
-use fedlay::runtime::{find_artifacts_dir, Engine, XInput};
-use fedlay::sim::{EventKind, EventQueue};
-use fedlay::topology::fedlay::Membership;
-use fedlay::util::Rng;
+use fedlay::bench_util::{engine_suite, micro_suite, render_results, write_bench_json};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
-    let mut results = Vec::new();
-
-    // --- L3: routing hot path ---
-    let m = Membership::dense(500, 3);
-    let nbrs: Vec<Vec<u64>> = m
-        .nodes
-        .keys()
-        .map(|&id| m.correct_neighbors(id).into_iter().collect())
-        .collect();
-    let ids: Vec<u64> = m.nodes.keys().copied().collect();
-    let mut rng = Rng::new(1);
-    results.push(bench("ndmp/greedy_next_hop (500 nodes, L=3)", 100, 20_000, || {
-        let i = rng.index(ids.len());
-        let target = rng.next_f64();
-        greedy_next_hop(ids[i], target, 1, nbrs[i].iter().copied())
-    }));
-    results.push(bench("ndmp/directional_next_hop", 100, 20_000, || {
-        let i = rng.index(ids.len());
-        let target = rng.next_f64();
-        directional_next_hop(ids[i], target, 1, Dir::Ccw, nbrs[i].iter().copied())
-    }));
-    results.push(bench("topology/coord_of (sha256)", 100, 20_000, || {
-        coord_of(rng.next_u64(), 2)
-    }));
-
-    // --- L3: event queue ---
-    results.push(bench("sim/event_queue push+pop x1000", 10, 500, || {
-        let mut q = EventQueue::new();
-        for i in 0..1000u64 {
-            q.push(i * 7 % 997, EventKind::Snapshot { tag: i });
-        }
-        while q.pop().is_some() {}
-    }));
-
-    // --- MEP: fingerprint + CPU aggregation ---
-    let model: Vec<f32> = (0..101_770).map(|i| i as f32 * 0.001).collect();
-    results.push(bench("mep/fingerprint (101k params)", 3, 200, || {
-        fingerprint(&model)
-    }));
-    let stack_models: Vec<Vec<f32>> = (0..7).map(|k| {
-        model.iter().map(|v| v * (k as f32 + 1.0)).collect()
-    }).collect();
-    let refs: Vec<&[f32]> = stack_models.iter().map(|m| m.as_slice()).collect();
-    let weights = vec![1.0; 7];
-    results.push(bench("mep/aggregate_cpu (7 x 101k)", 3, 100, || {
-        aggregate_cpu(&refs, &weights)
-    }));
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut results = micro_suite(quick);
 
     // --- runtime: artifact execution (L2+L1 via PJRT) ---
-    let dir = find_artifacts_dir(None)?;
-    let engine = Engine::load(&dir, &["mlp", "cnn"])?;
-    let info = engine.manifest.task("mlp")?.clone();
-    let k_max = engine.manifest.k_max;
-    let params = engine.init("mlp", [1, 2])?;
-    let (stack, w) = pack_for_artifact(&refs, &weights, k_max);
-    results.push(bench("runtime/agg artifact (Pallas weighted_agg)", 3, 50, || {
-        engine.aggregate("mlp", &stack, &w).unwrap()
-    }));
-    let task = fedlay::data::GaussianTask::mnist_like(3);
-    let b = task.test_batch(info.batch, 9);
-    results.push(bench("runtime/train_step mlp (B=32)", 3, 50, || {
-        engine
-            .train_step("mlp", &params, &XInput::F32(&b.x), &b.y, 0.1)
-            .unwrap()
-    }));
-    results.push(bench("runtime/eval_step mlp (B=32)", 3, 50, || {
-        engine
-            .eval_step("mlp", &params, &XInput::F32(&b.x), &b.y)
-            .unwrap()
-    }));
-    let cnn_params = engine.init("cnn", [1, 2])?;
-    let cnn_info = engine.manifest.task("cnn")?.clone();
-    let cnn_task = fedlay::data::GaussianTask::cifar_like(3);
-    let cb = cnn_task.test_batch(cnn_info.batch, 9);
-    results.push(bench("runtime/train_step cnn (B=32)", 3, 50, || {
-        engine
-            .train_step("cnn", &cnn_params, &XInput::F32(&cb.x), &cb.y, 0.1)
-            .unwrap()
-    }));
+    match find_artifacts_dir(None).and_then(|dir| Engine::load(&dir, &["mlp", "cnn"])) {
+        Ok(engine) => results.extend(engine_suite(&engine, quick)?),
+        Err(e) => eprintln!("skipping runtime benches (no artifacts): {e}"),
+    }
 
     print!("{}", render_results(&results));
+    let path = write_bench_json(Path::new("."), "micro", &results)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

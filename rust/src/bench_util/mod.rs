@@ -5,6 +5,10 @@
 use crate::util::{percentile, Summary};
 use std::time::Instant;
 
+pub mod suite;
+
+pub use suite::{engine_suite, micro_suite};
+
 #[derive(Debug, Clone)]
 pub struct BenchResult {
     pub name: String,
@@ -13,6 +17,7 @@ pub struct BenchResult {
     pub stddev_s: f64,
     pub p50_s: f64,
     pub p95_s: f64,
+    pub p99_s: f64,
 }
 
 impl BenchResult {
@@ -46,6 +51,7 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
         stddev_s: summary.stddev(),
         p50_s: percentile(&times, 0.5),
         p95_s: percentile(&times, 0.95),
+        p99_s: percentile(&times, 0.99),
     }
 }
 
@@ -53,21 +59,99 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
 pub fn render_results(results: &[BenchResult]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14}\n",
-        "benchmark", "iters", "mean", "p50", "p95", "throughput/s"
+        "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12} {:>14}\n",
+        "benchmark", "iters", "mean", "p50", "p95", "p99", "throughput/s"
     ));
     for r in results {
         out.push_str(&format!(
-            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>14.1}\n",
+            "{:<44} {:>8} {:>12} {:>12} {:>12} {:>12} {:>14.1}\n",
             r.name,
             r.iters,
             fmt_time(r.mean_s),
             fmt_time(r.p50_s),
             fmt_time(r.p95_s),
+            fmt_time(r.p99_s),
             r.throughput_per_s()
         ));
     }
     out
+}
+
+/// Persist results as `BENCH_<suite>.json` under `dir` (the repo root,
+/// for the CI perf artifact). Hand-rolled serialization — serde is not
+/// in the vendored dependency set; the schema is documented in
+/// docs/perf.md.
+pub fn write_bench_json(
+    dir: &std::path::Path,
+    suite: &str,
+    results: &[BenchResult],
+) -> std::io::Result<std::path::PathBuf> {
+    let path = dir.join(format!("BENCH_{suite}.json"));
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"suite\": {},\n", json_str(suite)));
+    s.push_str(&format!("  \"git_rev\": {},\n", json_str(&git_rev())));
+    s.push_str(&format!("  \"timestamp_unix_s\": {},\n", unix_time_s()));
+    s.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let sep = if i + 1 == results.len() { "" } else { "," };
+        s.push_str(&format!(
+            "    {{\"name\": {}, \"iters\": {}, \"mean_s\": {}, \"p50_s\": {}, \
+             \"p95_s\": {}, \"p99_s\": {}, \"throughput_per_s\": {}}}{sep}\n",
+            json_str(&r.name),
+            r.iters,
+            json_num(r.mean_s),
+            json_num(r.p50_s),
+            json_num(r.p95_s),
+            json_num(r.p99_s),
+            json_num(r.throughput_per_s()),
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(&path, s)?;
+    Ok(path)
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Finite JSON number (JSON has no Infinity/NaN literal).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:e}")
+    } else {
+        "0".to_string()
+    }
+}
+
+fn git_rev() -> String {
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+fn unix_time_s() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
 }
 
 pub fn fmt_time(s: f64) -> String {
@@ -165,6 +249,20 @@ mod tests {
         let s = t.render();
         assert!(s.contains("long-name"));
         assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn bench_json_escapes_and_balances() {
+        let r = bench("json/check \"quoted\"", 0, 3, || 1 + 1);
+        let path = write_bench_json(&std::env::temp_dir(), "unit_test", &[r]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"suite\": \"unit_test\""));
+        assert!(text.contains("\\\"quoted\\\""));
+        assert!(text.contains("\"git_rev\""));
+        assert!(text.contains("\"p99_s\""));
+        assert!(text.contains("\"throughput_per_s\""));
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! The shared perf micro-suite behind `fedlay bench` and
+//! `cargo bench --bench perf_micro`: the hot paths of all three layers,
+//! persisted as `BENCH_<suite>.json` by the callers (schema and usage in
+//! docs/perf.md).
+//!
+//!  * greedy routing next-hop decision (per-hop cost of NDMP)
+//!  * virtual-coordinate hashing
+//!  * event-queue throughput: push/pop, the cancel-heavy tombstone
+//!    path, and a million-event heap
+//!  * the sharded engine end to end — the same fleet on K=1 and K=4,
+//!    which exercises the boundary-mailbox drain and the merge barrier
+//!  * model fingerprinting (MEP de-dup) and CPU aggregation
+//!  * artifact execution latency (`engine_suite`, needs a runtime)
+
+use super::{bench, BenchResult};
+use crate::config::{NetConfig, OverlayConfig};
+use crate::data::GaussianTask;
+use crate::mep::{aggregate_cpu, fingerprint, pack_for_artifact};
+use crate::ndmp::messages::{Dir, SEC};
+use crate::ndmp::routing::{coord_of, directional_next_hop, greedy_next_hop};
+use crate::runtime::{Engine, XInput};
+use crate::sim::{EventKind, EventQueue, Simulator};
+use crate::topology::fedlay::Membership;
+use crate::topology::NodeId;
+use crate::util::Rng;
+use anyhow::Result;
+
+/// One full engine run for the simulator benches: `n` nodes over `k`
+/// coordinate-arc shards, advanced to `horizon`.
+fn sharded_run(n: usize, k: usize, horizon: u64) -> usize {
+    let mut sim = Simulator::new(OverlayConfig::default(), NetConfig::default());
+    if k > 1 {
+        sim.set_shards(k);
+    }
+    let ids: Vec<NodeId> = (0..n as NodeId).collect();
+    sim.bootstrap_correct(&ids);
+    sim.run_until(horizon);
+    sim.live_count()
+}
+
+/// The engine-free micro benches. `quick` trims iteration counts and the
+/// large-heap size for the CI smoke run.
+pub fn micro_suite(quick: bool) -> Vec<BenchResult> {
+    let it = |full: usize| if quick { (full / 10).max(2) } else { full };
+    let mut results = Vec::new();
+
+    // --- L3: routing hot path ---
+    let m = Membership::dense(500, 3);
+    let nbrs: Vec<Vec<u64>> = m
+        .nodes
+        .keys()
+        .map(|&id| m.correct_neighbors(id).into_iter().collect())
+        .collect();
+    let ids: Vec<u64> = m.nodes.keys().copied().collect();
+    let mut rng = Rng::new(1);
+    results.push(bench("ndmp/greedy_next_hop (500 nodes, L=3)", 100, it(20_000), || {
+        let i = rng.index(ids.len());
+        let target = rng.next_f64();
+        greedy_next_hop(ids[i], target, 1, nbrs[i].iter().copied())
+    }));
+    results.push(bench("ndmp/directional_next_hop", 100, it(20_000), || {
+        let i = rng.index(ids.len());
+        let target = rng.next_f64();
+        directional_next_hop(ids[i], target, 1, Dir::Ccw, nbrs[i].iter().copied())
+    }));
+    results.push(bench("topology/coord_of (sha256)", 100, it(20_000), || {
+        coord_of(rng.next_u64(), 2)
+    }));
+
+    // --- L3: discrete-event backbone ---
+    results.push(bench("sim/event_queue push+pop x1000", 10, it(500), || {
+        let mut q = EventQueue::new();
+        for i in 0..1000u64 {
+            q.push(i * 7 % 997, EventKind::Snapshot { tag: i });
+        }
+        while q.pop().is_some() {}
+    }));
+    // the tombstone path: half of a 4096-event heap cancelled before the
+    // drain, so every other pop reaps a cancelled entry
+    results.push(bench("sim/event_queue cancel-heavy x4096", 5, it(200), || {
+        let mut q = EventQueue::new();
+        let ids: Vec<_> = (0..4096u64)
+            .map(|i| q.push(i * 13 % 4099, EventKind::Snapshot { tag: i }))
+            .collect();
+        for id in ids.iter().step_by(2) {
+            q.cancel(*id);
+        }
+        while q.pop().is_some() {}
+    }));
+    let heap_n: u64 = if quick { 100_000 } else { 1_000_000 };
+    let iters = if quick { 3 } else { 5 };
+    let name = format!("sim/event_queue large-heap push+pop x{heap_n}");
+    results.push(bench(&name, 1, iters, || {
+        let mut q = EventQueue::new();
+        for i in 0..heap_n {
+            let at = i.wrapping_mul(2_654_435_761) % 1_000_003;
+            q.push(at, EventKind::Snapshot { tag: i });
+        }
+        while q.pop().is_some() {}
+    }));
+
+    // --- the sharded engine end to end: one fleet, K=1 vs K=4 ---
+    let (n, horizon) = if quick {
+        (128usize, 5 * SEC)
+    } else {
+        (512usize, 10 * SEC)
+    };
+    let secs = horizon / SEC;
+    let iters = if quick { 2 } else { 5 };
+    let name = format!("sim/run_until serial ({n} nodes, {secs}s)");
+    results.push(bench(&name, 1, iters, || sharded_run(n, 1, horizon)));
+    let name = format!("sim/run_until K=4 mailbox drain ({n} nodes, {secs}s)");
+    results.push(bench(&name, 1, iters, || sharded_run(n, 4, horizon)));
+
+    // --- MEP: fingerprint + CPU aggregation ---
+    let dim: usize = if quick { 10_177 } else { 101_770 };
+    let model: Vec<f32> = (0..dim).map(|i| i as f32 * 0.001).collect();
+    let name = format!("mep/fingerprint ({dim} params)");
+    results.push(bench(&name, 3, it(200), || fingerprint(&model)));
+    let stack_models: Vec<Vec<f32>> = (0..7)
+        .map(|k| model.iter().map(|v| v * (k as f32 + 1.0)).collect())
+        .collect();
+    let refs: Vec<&[f32]> = stack_models.iter().map(|m| m.as_slice()).collect();
+    let weights = vec![1.0; 7];
+    let name = format!("mep/aggregate_cpu (7 x {dim})");
+    results.push(bench(&name, 3, it(100), || aggregate_cpu(&refs, &weights)));
+
+    results
+}
+
+/// The artifact-execution benches (runtime layer). Split from
+/// `micro_suite` so callers without artifacts can still run the rest.
+pub fn engine_suite(engine: &Engine, quick: bool) -> Result<Vec<BenchResult>> {
+    let it = |full: usize| if quick { (full / 10).max(2) } else { full };
+    let mut results = Vec::new();
+    let info = engine.manifest.task("mlp")?.clone();
+    let k_max = engine.manifest.k_max;
+    let params = engine.init("mlp", [1, 2])?;
+    let scaled: Vec<Vec<f32>> = (0..7)
+        .map(|k| params.iter().map(|v| v * (k as f32 + 1.0)).collect())
+        .collect();
+    let refs: Vec<&[f32]> = scaled.iter().map(|m| m.as_slice()).collect();
+    let weights = vec![1.0; 7];
+    let (stack, w) = pack_for_artifact(&refs, &weights, k_max);
+    results.push(bench("runtime/agg artifact (Pallas weighted_agg)", 3, it(50), || {
+        engine.aggregate("mlp", &stack, &w).unwrap()
+    }));
+    let task = GaussianTask::mnist_like(3);
+    let b = task.test_batch(info.batch, 9);
+    results.push(bench("runtime/train_step mlp (B=32)", 3, it(50), || {
+        engine
+            .train_step("mlp", &params, &XInput::F32(&b.x), &b.y, 0.1)
+            .unwrap()
+    }));
+    results.push(bench("runtime/eval_step mlp (B=32)", 3, it(50), || {
+        engine
+            .eval_step("mlp", &params, &XInput::F32(&b.x), &b.y)
+            .unwrap()
+    }));
+    let cnn_params = engine.init("cnn", [1, 2])?;
+    let cnn_info = engine.manifest.task("cnn")?.clone();
+    let cnn_task = GaussianTask::cifar_like(3);
+    let cb = cnn_task.test_batch(cnn_info.batch, 9);
+    results.push(bench("runtime/train_step cnn (B=32)", 3, it(50), || {
+        engine
+            .train_step("cnn", &cnn_params, &XInput::F32(&cb.x), &cb.y, 0.1)
+            .unwrap()
+    }));
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_suite_runs_and_names_are_unique() {
+        let results = micro_suite(true);
+        assert!(results.len() >= 8, "suite shrank to {}", results.len());
+        let names: std::collections::HashSet<&str> =
+            results.iter().map(|r| r.name.as_str()).collect();
+        assert_eq!(names.len(), results.len(), "duplicate bench names");
+        for r in &results {
+            assert!(r.mean_s >= 0.0 && r.p99_s >= r.p50_s, "bad stats for {}", r.name);
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //!   scenario  — run/inspect a declarative churn scenario (TOML spec)
 //!   train     — run a DFL method over the AOT runtime (Figs. 9-19)
 //!   node      — run one real TCP FedLay client (prototype mode)
+//!   bench     — run the perf micro-suite, emit BENCH_<suite>.json
 //!
 //! Global flags: `--config <file>` and repeatable `--set key=value`.
 
@@ -28,7 +29,7 @@ pub fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     match it.next() {
         Some(cmd) if !cmd.starts_with("--") => args.command = cmd.clone(),
         Some(flag) => anyhow::bail!("expected a subcommand before {flag:?}"),
-        None => anyhow::bail!("usage: fedlay <topology|churn|scenario|train|node> [flags]"),
+        None => anyhow::bail!("usage: fedlay <topology|churn|scenario|train|node|bench> [flags]"),
     }
     while let Some(a) = it.next() {
         let Some(name) = a.strip_prefix("--") else {
@@ -146,6 +147,13 @@ USAGE:
                    accuracy column per task)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
                   (one real TCP client; spawn several for a live network)
+  fedlay bench    [--quick] [--out <dir>]
+                  (perf micro-suite over routing, event queue, sharded
+                   engine, MEP, and — when artifacts are present — the
+                   AOT runtime; prints a table and writes
+                   BENCH_micro.json to --out, default the working
+                   directory; --quick is the scaled-down CI smoke run;
+                   schema in docs/perf.md)
 
 GLOBAL FLAGS:
   --config <file>     TOML-subset config file

@@ -91,22 +91,6 @@ pub enum TrainEvent {
     Leave { client: usize },
 }
 
-/// Where an aggregation reads neighbor models from: the live client
-/// states (async gossip) or a pre-round snapshot (synchronous rounds).
-enum ModelSource<'a> {
-    Live,
-    Snapshot(&'a [Vec<f32>]),
-}
-
-impl ModelSource<'_> {
-    fn model<'c>(&'c self, clients: &'c [ClientState], j: usize) -> &'c [f32] {
-        match self {
-            ModelSource::Live => &clients[j].params,
-            ModelSource::Snapshot(s) => &s[j],
-        }
-    }
-}
-
 /// A fully resolved MEP aggregation for one client: the participants
 /// (self first, then neighbors) and their confidence weights. Built once
 /// per exchange by `plan_aggregation` — the *single* aggregation path for
@@ -115,6 +99,38 @@ impl ModelSource<'_> {
 struct AggregationPlan {
     members: Vec<usize>,
     weights: Vec<f64>,
+}
+
+/// One same-instant wake admitted to the current batch: the client, its
+/// neighborhood resolved at the event's serial position, and the local
+/// training batches pre-drawn at that same position (so the shared rng
+/// streams advance exactly as the serial loop would advance them).
+struct WakeJob {
+    task: usize,
+    client: usize,
+    nbrs: Vec<usize>,
+    drawn: Vec<(Vec<f32>, Vec<i32>, Vec<i32>)>,
+}
+
+/// The pure compute half of one wake, produced against a frozen view of
+/// client state and applied serially in batch (= arrival) order so
+/// telemetry, fingerprints and re-wake pushes land exactly as the serial
+/// event loop would emit them.
+struct WakeOutcome {
+    task: usize,
+    client: usize,
+    /// Final parameters (`None` when the wake changed nothing: frozen
+    /// training and an empty neighborhood).
+    params: Option<Vec<f32>>,
+    /// Local training ran (version bump, `steps` train steps).
+    trained: bool,
+    steps: u64,
+    /// An MEP aggregation ran (version + exchange bump).
+    aggregated: bool,
+    /// `(neighbor, fingerprint, is_duplicate)` per pulled neighbor, in
+    /// neighborhood order.
+    pulls: Vec<(usize, u64, bool)>,
+    payload_bytes: u64,
 }
 
 /// Everything one model task owns: per-client per-task state, dataset
@@ -255,6 +271,10 @@ pub struct Trainer<'e> {
     nbr_cache: Vec<Option<Vec<usize>>>,
     nbr_cache_hits: u64,
     nbr_cache_misses: u64,
+    /// Shard count applied to the embedded overlay when `ensure_overlay`
+    /// builds it (`Simulator::set_shards`); 1 = serial engine. Adopted
+    /// overlays and custom transports keep their own configuration.
+    overlay_shards: usize,
     /// Skip real training (scalability mode: reuse pre-trained params).
     pub freeze_training: bool,
 }
@@ -336,6 +356,7 @@ impl<'e> Trainer<'e> {
             nbr_cache: vec![None; n],
             nbr_cache_hits: 0,
             nbr_cache_misses: 0,
+            overlay_shards: 1,
             freeze_training: false,
         })
     }
@@ -492,7 +513,7 @@ impl<'e> Trainer<'e> {
         );
         for id in 0..self.lanes[0].clients.len() as NodeId {
             anyhow::ensure!(
-                sim.nodes.contains_key(&id),
+                sim.contains_node(id),
                 "adopted overlay is missing node {id}"
             );
         }
@@ -518,6 +539,17 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
+    /// Partition the embedded overlay's event engine into `k` coordinate
+    /// arcs (see [`Simulator::set_shards`]). Takes effect when
+    /// `ensure_overlay` builds the overlay — so it must be set before the
+    /// first `run` — and only for the in-memory transport (custom
+    /// transports deliver out-of-band and stay on the serial engine).
+    /// `k > 1` is bitwise-identical to the serial engine; this is purely
+    /// a wall-clock knob for large `Neighborhood::Dynamic` runs.
+    pub fn set_overlay_shards(&mut self, k: usize) {
+        self.overlay_shards = k.max(1);
+    }
+
     /// Build the embedded overlay on first use (Dynamic only): the
     /// original `cfg.clients` start as an instantly-correct network —
     /// the decentralized path for later arrivals is `schedule_join`, and
@@ -529,7 +561,13 @@ impl<'e> Trainer<'e> {
         if let Neighborhood::Dynamic { overlay, net } = &self.spec.neighborhood {
             let mut sim = match self.transport.take() {
                 Some(t) => Simulator::with_transport(overlay.clone(), t),
-                None => Simulator::new(overlay.clone(), net.clone()),
+                None => {
+                    let mut s = Simulator::new(overlay.clone(), net.clone());
+                    if self.overlay_shards > 1 {
+                        s.set_shards(self.overlay_shards);
+                    }
+                    s
+                }
             };
             let ids: Vec<NodeId> = (0..self.cfg.clients as NodeId).collect();
             sim.bootstrap_correct(&ids);
@@ -690,7 +728,7 @@ impl<'e> Trainer<'e> {
                     return cached.clone();
                 }
                 let sim = self.overlay.as_ref().expect("dynamic overlay state");
-                let list: Vec<usize> = match sim.nodes.get(&(i as NodeId)) {
+                let list: Vec<usize> = match sim.node(i as NodeId) {
                     Some(st) => st
                         .ring_neighbor_ids()
                         .into_iter()
@@ -709,28 +747,29 @@ impl<'e> Trainer<'e> {
     }
 
     // ------------------------------------------------------------------
-    // MEP aggregation — the single path for live and snapshot sources
+    // MEP aggregation — the synchronous (pre-round snapshot) path; the
+    // asynchronous path is `compute_wake`/`apply_wake`
     // ------------------------------------------------------------------
 
     /// Resolve one MEP aggregation (paper §III-C2): fingerprint de-dup and
-    /// transfer accounting (§III-C3) against the model source — keyed by
-    /// `(neighbor, task)` so coexisting tasks never suppress each other's
-    /// transfers — then the confidence weights normalized over the
-    /// neighborhood ∪ {i}.
+    /// transfer accounting (§III-C3) against the pre-round snapshot —
+    /// keyed by `(neighbor, task)` so coexisting tasks never suppress
+    /// each other's transfers — then the confidence weights normalized
+    /// over the neighborhood ∪ {i}.
     fn plan_aggregation(
         &mut self,
         task: usize,
         i: usize,
         nbrs: &[usize],
-        source: &ModelSource<'_>,
+        snapshot: &[Vec<f32>],
     ) -> AggregationPlan {
         let task_key = task as u32;
         let lane = &mut self.lanes[task];
         // i "pulls" each neighbor's latest model unless the fingerprint
         // matches the last pull; the sender pays the payload bytes.
-        let p_bytes = (source.model(&lane.clients, i).len() * 4) as u64;
+        let p_bytes = (snapshot[i].len() * 4) as u64;
         for &j in nbrs {
-            let fp = fingerprint(source.model(&lane.clients, j));
+            let fp = fingerprint(&snapshot[j]);
             if lane.clients[i].fingerprints.is_duplicate(j as u64, task_key, fp) {
                 lane.clients[i].dedup_skips += 1;
             } else {
@@ -750,25 +789,26 @@ impl<'e> Trainer<'e> {
         AggregationPlan { members, weights }
     }
 
-    /// Execute one MEP aggregation for client `i` of lane `task`.
+    /// Execute one MEP aggregation for client `i` of lane `task` against
+    /// the pre-round snapshot (synchronous decentralized rounds).
     fn aggregate(
         &mut self,
         task: usize,
         i: usize,
         nbrs: &[usize],
-        source: ModelSource<'_>,
+        snapshot: &[Vec<f32>],
     ) -> Result<()> {
         if nbrs.is_empty() {
             return Ok(());
         }
-        let plan = self.plan_aggregation(task, i, nbrs, &source);
+        let plan = self.plan_aggregation(task, i, nbrs, snapshot);
         let engine = self.engine;
         let k_max = engine.manifest.k_max;
         let lane = &self.lanes[task];
         let models: Vec<&[f32]> = plan
             .members
             .iter()
-            .map(|&j| source.model(&lane.clients, j))
+            .map(|&j| snapshot[j].as_slice())
             .collect();
         let new = if models.len() <= k_max {
             // hot path: the L1 Pallas kernel inside the agg artifact
@@ -938,12 +978,163 @@ impl<'e> Trainer<'e> {
         Ok(())
     }
 
+    // ------------------------------------------------------------------
+    // Same-instant wake batching: independent wakes at one timestamp run
+    // their compute (training + aggregation arithmetic) in parallel
+    // ------------------------------------------------------------------
+
+    /// The pure compute half of one batched wake: local training on a
+    /// working copy, fingerprint/dedup decisions, MEP aggregation.
+    /// Reads shared client state but never writes it — every job in a
+    /// batch is independent (no job's client appears in another job's
+    /// neighborhood), so the frozen view each job reads is exactly the
+    /// state the serial loop would have shown it.
+    fn compute_wake(&self, job: &WakeJob) -> Result<WakeOutcome> {
+        let lane = &self.lanes[job.task];
+        let spec = &lane.spec;
+        let base = &lane.clients[job.client].params;
+        // local training (drawn batches were pre-drawn at the event's
+        // serial position; empty when training is frozen)
+        let trained = !self.freeze_training;
+        let mut trained_params: Option<Vec<f32>> = None;
+        if trained {
+            let mut p = base.clone();
+            for (xf, xi, y) in &job.drawn {
+                let x = if xf.is_empty() {
+                    XInput::I32(xi)
+                } else {
+                    XInput::F32(xf)
+                };
+                let (new, _loss) = self.engine.train_step(&spec.task, &p, &x, y, spec.lr)?;
+                p = new;
+            }
+            trained_params = Some(p);
+        }
+        let cur: &[f32] = trained_params.as_deref().unwrap_or(base);
+        let payload_bytes = (cur.len() * 4) as u64;
+        // MEP aggregation against the (stable) neighbor models
+        let mut pulls = Vec::with_capacity(job.nbrs.len());
+        let mut aggregated = false;
+        let mut final_params = trained_params;
+        if !job.nbrs.is_empty() {
+            let task_key = job.task as u32;
+            for &j in &job.nbrs {
+                let fp = fingerprint(&lane.clients[j].params);
+                let dup = lane.clients[job.client]
+                    .fingerprints
+                    .is_duplicate(j as u64, task_key, fp);
+                pulls.push((j, fp, dup));
+            }
+            let hood: Vec<(f64, f64)> = std::iter::once(lane.clients[job.client].raw_confidence())
+                .chain(job.nbrs.iter().map(|&j| lane.clients[j].raw_confidence()))
+                .collect();
+            let weights: Vec<f64> = if self.spec.confidence {
+                hood.iter().map(|&own| self.conf.combine(own, &hood)).collect()
+            } else {
+                vec![1.0; hood.len()]
+            };
+            let cur = final_params.as_deref().unwrap_or(base);
+            let models: Vec<&[f32]> = std::iter::once(cur)
+                .chain(job.nbrs.iter().map(|&j| lane.clients[j].params.as_slice()))
+                .collect();
+            let k_max = self.engine.manifest.k_max;
+            let new = if models.len() <= k_max {
+                let (stack, w) = pack_for_artifact(&models, &weights, k_max);
+                self.engine.aggregate(&spec.task, &stack, &w)?
+            } else {
+                aggregate_cpu(&models, &weights)
+            };
+            final_params = Some(new);
+            aggregated = true;
+        }
+        Ok(WakeOutcome {
+            task: job.task,
+            client: job.client,
+            params: final_params,
+            trained,
+            steps: job.drawn.len() as u64,
+            aggregated,
+            pulls,
+            payload_bytes,
+        })
+    }
+
+    /// The serial apply half: commit one wake's outcome in batch order —
+    /// telemetry, fingerprint records, parameters, and the re-wake push
+    /// land exactly as the serial loop would emit them.
+    fn apply_wake(&mut self, o: WakeOutcome) {
+        let lane = &mut self.lanes[o.task];
+        let i = o.client;
+        if o.trained {
+            lane.clients[i].train_steps += o.steps;
+            lane.clients[i].version += 1;
+        }
+        let task_key = o.task as u32;
+        for (j, fp, dup) in o.pulls {
+            if dup {
+                lane.clients[i].dedup_skips += 1;
+            } else {
+                lane.clients[i].fingerprints.record(j as u64, task_key, fp);
+                lane.clients[j].model_bytes_sent += o.payload_bytes;
+            }
+        }
+        if let Some(p) = o.params {
+            lane.clients[i].params = p;
+        }
+        if o.aggregated {
+            lane.clients[i].version += 1;
+            lane.clients[i].exchanges += 1;
+        }
+        let period = lane.clients[i].schedule.period;
+        lane.clients[i].next_wake = self.now + period;
+        self.queue
+            .push(self.now + period, TrainEvent::Wake { task: o.task, client: i });
+    }
+
+    /// Drain the current wake batch: compute every job (in parallel when
+    /// there is more than one), then apply outcomes serially in arrival
+    /// order. Clears the per-lane touched sets.
+    fn flush_wakes(
+        &mut self,
+        batch: &mut Vec<WakeJob>,
+        touched: &mut [HashSet<usize>],
+    ) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let jobs = std::mem::take(batch);
+        for t in touched.iter_mut() {
+            t.clear();
+        }
+        let outcomes: Vec<WakeOutcome> = if jobs.len() >= 2 {
+            let this: &Self = &*self;
+            jobs.par_iter()
+                .map(|j| this.compute_wake(j))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            jobs.iter()
+                .map(|j| self.compute_wake(j))
+                .collect::<Result<Vec<_>>>()?
+        };
+        for o in outcomes {
+            self.apply_wake(o);
+        }
+        Ok(())
+    }
+
     /// Run until `until` (µs of simulated time), sampling accuracy every
     /// `sample_every` (each lane records its own series). One event loop
     /// serves every method and every lane: synchronous rounds,
     /// asynchronous gossip, and scheduled churn all pop from the same
     /// heap, and the embedded overlay (if any) advances in lockstep.
     /// Returns the primary lane's final sample.
+    ///
+    /// Same-instant `Wake` events whose read/write footprints are
+    /// disjoint (no client of one appears in the neighborhood ∪ self of
+    /// another, per lane) batch together and run their compute phase on
+    /// the rayon pool; everything observable — rng draws, fingerprints,
+    /// telemetry, queue order — is sequenced exactly as the serial loop
+    /// sequences it, so batching never changes a trajectory.
     pub fn run(&mut self, until: Time, sample_every: Time) -> Result<AccuracySample> {
         self.ensure_overlay();
         // baseline at the current clock (skipped on resume if the prior
@@ -979,118 +1170,50 @@ impl<'e> Trainer<'e> {
                 }
             }
         }
+        let mut batch: Vec<WakeJob> = Vec::new();
+        let mut touched: Vec<HashSet<usize>> = vec![HashSet::new(); self.lanes.len()];
         while let Some(t) = self.queue.peek_time() {
             if t > until {
                 break;
             }
-            let ev = self.queue.pop().unwrap();
-            self.now = ev.at;
-            self.sync_overlay();
-            match ev.kind {
-                TrainEvent::Wake { task, client: i } => {
-                    if !self.lanes[task].clients[i].alive {
-                        continue; // failed/left while the wake was queued
-                    }
-                    self.local_train(task, i)?;
-                    let nbrs = self.neighbors_of(i);
-                    self.aggregate(task, i, &nbrs, ModelSource::Live)?;
-                    let period = self.lanes[task].clients[i].schedule.period;
-                    self.lanes[task].clients[i].next_wake = self.now + period;
-                    self.queue
-                        .push(self.now + period, TrainEvent::Wake { task, client: i });
-                }
-                TrainEvent::Round => {
-                    for i in 0..self.lanes[0].clients.len() {
-                        if self.lanes[0].clients[i].alive {
-                            self.local_train(0, i)?;
+            self.now = t;
+            // Drain every event at instant `t` in arrival order. Wakes
+            // whose footprint is disjoint from the open batch join it;
+            // anything else (a conflicting wake, a sample, a round, any
+            // churn) flushes first, so each event still observes exactly
+            // the state its serial position would have shown it.
+            while self.queue.peek_time() == Some(t) {
+                let ev = self.queue.pop().unwrap();
+                self.sync_overlay();
+                match ev.kind {
+                    TrainEvent::Wake { task, client: i } => {
+                        if !self.lanes[task].clients[i].alive {
+                            continue; // failed/left while the wake was queued
                         }
-                    }
-                    match self.spec.neighborhood.clone() {
-                        Neighborhood::Star => self.fedavg_round()?,
-                        Neighborhood::Regions { assignment, regions } => {
-                            self.gaia_round(&assignment, regions)?
+                        let nbrs = self.neighbors_of(i);
+                        if touched[task].contains(&i)
+                            || nbrs.iter().any(|j| touched[task].contains(j))
+                        {
+                            self.flush_wakes(&mut batch, &mut touched)?;
                         }
-                        _ => {
-                            // synchronous decentralized: everyone
-                            // aggregates against pre-round snapshots
-                            let snapshot: Vec<Vec<f32>> = self.lanes[0]
-                                .clients
-                                .iter()
-                                .map(|c| c.params.clone())
-                                .collect();
-                            for i in 0..self.lanes[0].clients.len() {
-                                if !self.lanes[0].clients[i].alive {
-                                    continue;
-                                }
-                                let nbrs = self.neighbors_of(i);
-                                self.aggregate(0, i, &nbrs, ModelSource::Snapshot(&snapshot))?;
-                            }
-                        }
+                        touched[task].insert(i);
+                        touched[task].extend(nbrs.iter().copied());
+                        let steps = if self.freeze_training {
+                            0
+                        } else {
+                            self.lanes[task].spec.local_steps
+                        };
+                        let drawn: Vec<_> =
+                            (0..steps).map(|_| self.draw_batch(task, i)).collect();
+                        batch.push(WakeJob { task, client: i, nbrs, drawn });
                     }
-                    self.queue.push(
-                        self.now + self.lanes[0].clients[0].schedule.period,
-                        TrainEvent::Round,
-                    );
-                }
-                TrainEvent::Sample { task } => {
-                    self.record_lane_sample(task)?;
-                    self.queue
-                        .push(self.now + sample_every.max(1), TrainEvent::Sample { task });
-                }
-                TrainEvent::Join { client, bootstrap } => {
-                    // The paper's minimal assumption is one live contact.
-                    // If the scheduled bootstrap died meanwhile,
-                    // re-bootstrap through any other live member; with no
-                    // live contact at all the joiner cannot enter the
-                    // network and stays a dead placeholder.
-                    let boot = if self.lanes[0].clients[bootstrap].alive {
-                        Some(bootstrap)
-                    } else {
-                        self.lanes[0]
-                            .clients
-                            .iter()
-                            .position(|c| c.alive && c.id != client)
-                    };
-                    let mut entered = false;
-                    if let (Some(sim), Some(b)) = (self.overlay.as_mut(), boot) {
-                        if sim.nodes.contains_key(&(b as NodeId)) {
-                            sim.schedule_join(self.now, client as NodeId, b as NodeId);
-                            entered = true;
-                        }
+                    other => {
+                        self.flush_wakes(&mut batch, &mut touched)?;
+                        self.handle_serial_event(other, sample_every)?;
                     }
-                    if entered {
-                        let now = self.now;
-                        let sync = self.synchronous();
-                        for t in 0..self.lanes.len() {
-                            let wake = now + self.lanes[t].clients[client].next_wake.max(1);
-                            self.lanes[t].clients[client].alive = true;
-                            self.lanes[t].clients[client].next_wake = wake;
-                            if !sync {
-                                self.queue.push(wake, TrainEvent::Wake { task: t, client });
-                            }
-                        }
-                        self.invalidate_neighbor_caches_for(client);
-                    }
-                }
-                TrainEvent::Fail { client } => {
-                    if client >= self.lanes[0].clients.len() {
-                        continue;
-                    }
-                    if let Some(sim) = self.overlay.as_mut() {
-                        sim.schedule_fail(self.now, client as NodeId);
-                    }
-                    self.retire_client(client);
-                }
-                TrainEvent::Leave { client } => {
-                    if client >= self.lanes[0].clients.len() {
-                        continue;
-                    }
-                    if let Some(sim) = self.overlay.as_mut() {
-                        sim.schedule_leave(self.now, client as NodeId);
-                    }
-                    self.retire_client(client);
                 }
             }
+            self.flush_wakes(&mut batch, &mut touched)?;
         }
         self.now = until;
         self.sync_overlay();
@@ -1102,6 +1225,107 @@ impl<'e> Trainer<'e> {
             }
         }
         Ok(self.lanes[0].samples.last().unwrap().clone())
+    }
+
+    /// Every non-wake event, handled exactly as the serial loop handled
+    /// it (the caller has already flushed the open wake batch, so this
+    /// runs against fully committed state).
+    fn handle_serial_event(&mut self, ev: TrainEvent, sample_every: Time) -> Result<()> {
+        match ev {
+            TrainEvent::Wake { .. } => unreachable!("wake events batch in the run loop"),
+            TrainEvent::Round => {
+                for i in 0..self.lanes[0].clients.len() {
+                    if self.lanes[0].clients[i].alive {
+                        self.local_train(0, i)?;
+                    }
+                }
+                match self.spec.neighborhood.clone() {
+                    Neighborhood::Star => self.fedavg_round()?,
+                    Neighborhood::Regions { assignment, regions } => {
+                        self.gaia_round(&assignment, regions)?
+                    }
+                    _ => {
+                        // synchronous decentralized: everyone
+                        // aggregates against pre-round snapshots
+                        let snapshot: Vec<Vec<f32>> = self.lanes[0]
+                            .clients
+                            .iter()
+                            .map(|c| c.params.clone())
+                            .collect();
+                        for i in 0..self.lanes[0].clients.len() {
+                            if !self.lanes[0].clients[i].alive {
+                                continue;
+                            }
+                            let nbrs = self.neighbors_of(i);
+                            self.aggregate(0, i, &nbrs, &snapshot)?;
+                        }
+                    }
+                }
+                self.queue.push(
+                    self.now + self.lanes[0].clients[0].schedule.period,
+                    TrainEvent::Round,
+                );
+            }
+            TrainEvent::Sample { task } => {
+                self.record_lane_sample(task)?;
+                self.queue
+                    .push(self.now + sample_every.max(1), TrainEvent::Sample { task });
+            }
+            TrainEvent::Join { client, bootstrap } => {
+                // The paper's minimal assumption is one live contact.
+                // If the scheduled bootstrap died meanwhile,
+                // re-bootstrap through any other live member; with no
+                // live contact at all the joiner cannot enter the
+                // network and stays a dead placeholder.
+                let boot = if self.lanes[0].clients[bootstrap].alive {
+                    Some(bootstrap)
+                } else {
+                    self.lanes[0]
+                        .clients
+                        .iter()
+                        .position(|c| c.alive && c.id != client)
+                };
+                let mut entered = false;
+                if let (Some(sim), Some(b)) = (self.overlay.as_mut(), boot) {
+                    if sim.contains_node(b as NodeId) {
+                        sim.schedule_join(self.now, client as NodeId, b as NodeId);
+                        entered = true;
+                    }
+                }
+                if entered {
+                    let now = self.now;
+                    let sync = self.synchronous();
+                    for t in 0..self.lanes.len() {
+                        let wake = now + self.lanes[t].clients[client].next_wake.max(1);
+                        self.lanes[t].clients[client].alive = true;
+                        self.lanes[t].clients[client].next_wake = wake;
+                        if !sync {
+                            self.queue.push(wake, TrainEvent::Wake { task: t, client });
+                        }
+                    }
+                    self.invalidate_neighbor_caches_for(client);
+                }
+            }
+            TrainEvent::Fail { client } => {
+                if client >= self.lanes[0].clients.len() {
+                    return Ok(());
+                }
+                if let Some(sim) = self.overlay.as_mut() {
+                    sim.schedule_fail(self.now, client as NodeId);
+                }
+                self.retire_client(client);
+            }
+            TrainEvent::Leave { client } => {
+                if client >= self.lanes[0].clients.len() {
+                    return Ok(());
+                }
+                if let Some(sim) = self.overlay.as_mut() {
+                    sim.schedule_leave(self.now, client as NodeId);
+                }
+                self.retire_client(client);
+            }
+        }
+        Ok(())
     }
 
     /// Total model payload bytes sent, per client, summed over every lane

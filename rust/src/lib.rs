@@ -77,6 +77,24 @@
 //! runs via `ScenarioSpec::run_trainer_tasks` /
 //! `dfl::multitask::run_scenario`.
 //!
+//! ## Sharded event engine & perf harness
+//!
+//! The event engine shards by contiguous arcs of the `[0,1)` coordinate
+//! circle ([`sim::Simulator::set_shards`]): each shard owns a scheduler
+//! heap and arena-packed node state ([`sim::NodeArena`]), boundary
+//! events cross through a deterministic mailbox, and per-instant merge
+//! barriers replay global effects in producer-seq order — so a K-shard
+//! run is *bitwise-identical* to the serial run while shard compute
+//! fans out on rayon (as do independent same-instant trainer wakes).
+//! Memory under sustained churn is O(live set): arena slots recycle and
+//! departed nodes fold into scalar tallies
+//! ([`sim::Simulator::footprint`]). This carries the pinned scale runs
+//! to 100k clients (`tests/scenario_scale.rs`); the determinism battery
+//! is `tests/shard_conformance.rs`. Hot paths are tracked by the
+//! [`bench_util`] harness — `fedlay bench` emits `BENCH_*.json`
+//! archived per CI run. Architecture and the determinism argument live
+//! in `docs/perf.md`.
+//!
 //! The `runtime` module executes models behind a single `Engine` API:
 //! the PJRT CPU client running the AOT artifacts (feature `xla`), or a
 //! pure-Rust reference backend with the identical ABI that needs no

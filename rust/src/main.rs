@@ -1,7 +1,7 @@
 //! FedLay launcher: the L3 binary entrypoint.
 
 use fedlay::baselines;
-use fedlay::bench_util::Table;
+use fedlay::bench_util::{engine_suite, micro_suite, render_results, write_bench_json, Table};
 use fedlay::cli::{parse_args, Args, USAGE};
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
 use fedlay::dfl::{multitask, MethodSpec, Trainer};
@@ -25,6 +25,7 @@ fn main() {
         "scenario" => cmd_scenario(&args),
         "train" => args.no_positionals().and_then(|()| cmd_train(&args)),
         "node" => args.no_positionals().and_then(|()| cmd_node(&args)),
+        "bench" => args.no_positionals().and_then(|()| cmd_bench(&args)),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -418,6 +419,24 @@ fn cmd_train_multi(args: &Args, tasks_path: &str) -> anyhow::Result<()> {
         trainer.model_mb_per_client(),
         trainer.train_steps_per_client()
     );
+    Ok(())
+}
+
+/// `fedlay bench`: the perf micro-suite (`bench_util::suite`), printed
+/// as a table and persisted to `BENCH_micro.json` for the CI perf
+/// artifact (docs/perf.md). Runtime benches are skipped when no
+/// artifact directory is found so the suite works on a bare checkout.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let quick = args.bool("quick");
+    let out = std::path::PathBuf::from(args.str("out", "."));
+    let mut results = micro_suite(quick);
+    match find_artifacts_dir(None).and_then(|dir| Engine::load(&dir, &["mlp", "cnn"])) {
+        Ok(engine) => results.extend(engine_suite(&engine, quick)?),
+        Err(e) => eprintln!("skipping runtime benches (no artifacts): {e}"),
+    }
+    print!("{}", render_results(&results));
+    let path = write_bench_json(&out, "micro", &results)?;
+    println!("wrote {}", path.display());
     Ok(())
 }
 

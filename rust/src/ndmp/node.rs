@@ -45,6 +45,20 @@ pub struct NodeCounters {
     pub repair_sent: u64,
 }
 
+impl NodeCounters {
+    /// Fold another counter set into this one (used by the simulator to
+    /// collapse departed nodes' counters into one running tally instead
+    /// of keeping per-node history forever).
+    pub fn absorb(&mut self, other: &NodeCounters) {
+        self.control_sent += other.control_sent;
+        self.control_bytes += other.control_bytes;
+        self.data_sent += other.data_sent;
+        self.data_bytes += other.data_bytes;
+        self.heartbeats_sent += other.heartbeats_sent;
+        self.repair_sent += other.repair_sent;
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct NodeState {
     pub id: NodeId,

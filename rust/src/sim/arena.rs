@@ -1,0 +1,173 @@
+//! Slot arena for live-node protocol state.
+//!
+//! Replaces the simulator's old `BTreeMap<NodeId, NodeState>`: node
+//! state lives packed in a `Vec` of slots (departed slots go on a free
+//! list and are reused), a hash index maps ids to slots, and a
+//! [`BitSet`] tracks slot aliveness so iteration skips dead regions a
+//! whole word at a time. Memory is bounded by the *peak live set*, not
+//! by join history — sustained churn recycles slots instead of growing
+//! the map.
+//!
+//! Iteration over the bitset is in slot order, which is admission
+//! order, not id order — callers that need deterministic id-ordered
+//! output (snapshots, golden lines) go through [`NodeArena::ids_sorted`].
+
+use crate::ndmp::node::NodeState;
+use crate::topology::NodeId;
+use crate::util::BitSet;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct NodeArena {
+    slots: Vec<Option<NodeState>>,
+    free: Vec<u32>,
+    index: HashMap<NodeId, u32>,
+    alive: BitSet,
+}
+
+impl Default for NodeArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NodeArena {
+    pub fn new() -> Self {
+        Self {
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: HashMap::new(),
+            alive: BitSet::new(0),
+        }
+    }
+
+    /// Admit a node (keyed by `st.id`). Panics if the id is already
+    /// present — the simulator's Join arm checks membership first.
+    pub fn insert(&mut self, st: NodeState) {
+        let id = st.id;
+        assert!(
+            !self.index.contains_key(&id),
+            "node {id} inserted twice into arena"
+        );
+        let slot = match self.free.pop() {
+            Some(s) => s,
+            None => {
+                self.slots.push(None);
+                self.alive.grow(self.slots.len());
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.slots[slot as usize] = Some(st);
+        self.alive.set(slot as usize);
+        self.index.insert(id, slot);
+    }
+
+    /// Remove a node, returning its state; the slot is recycled.
+    pub fn remove(&mut self, id: NodeId) -> Option<NodeState> {
+        let slot = self.index.remove(&id)?;
+        self.alive.clear(slot as usize);
+        self.free.push(slot);
+        Some(self.slots[slot as usize].take().expect("indexed slot empty"))
+    }
+
+    pub fn get(&self, id: NodeId) -> Option<&NodeState> {
+        let slot = *self.index.get(&id)?;
+        self.slots[slot as usize].as_ref()
+    }
+
+    pub fn get_mut(&mut self, id: NodeId) -> Option<&mut NodeState> {
+        let slot = *self.index.get(&id)?;
+        self.slots[slot as usize].as_mut()
+    }
+
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.index.contains_key(&id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Live node ids in ascending order (the deterministic view order).
+    pub fn ids_sorted(&self) -> Vec<NodeId> {
+        let mut ids: Vec<NodeId> = self.index.keys().copied().collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    /// Live nodes in slot (admission) order — for order-insensitive
+    /// reductions like counter sums.
+    pub fn iter_unordered(&self) -> impl Iterator<Item = &NodeState> + '_ {
+        self.alive
+            .iter_ones()
+            .map(|s| self.slots[s].as_ref().expect("alive slot empty"))
+    }
+
+    /// Slots currently allocated (live + recyclable). The footprint
+    /// regression test pins this to the peak live set under churn.
+    pub fn slot_capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::OverlayConfig;
+
+    fn node(id: NodeId) -> NodeState {
+        let cfg = OverlayConfig {
+            spaces: 2,
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        };
+        NodeState::new(id, cfg, 0)
+    }
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut a = NodeArena::new();
+        for id in [5u64, 1, 9] {
+            a.insert(node(id));
+        }
+        assert_eq!(a.len(), 3);
+        assert!(a.contains(5) && !a.contains(2));
+        assert_eq!(a.get(1).unwrap().id, 1);
+        a.get_mut(9).unwrap().joined = true;
+        assert!(a.get(9).unwrap().joined);
+        assert_eq!(a.ids_sorted(), vec![1, 5, 9]);
+        let gone = a.remove(5).unwrap();
+        assert_eq!(gone.id, 5);
+        assert!(a.remove(5).is_none());
+        assert_eq!(a.ids_sorted(), vec![1, 9]);
+    }
+
+    #[test]
+    fn slots_recycle_under_churn() {
+        let mut a = NodeArena::new();
+        for id in 0..100u64 {
+            a.insert(node(id));
+        }
+        let peak = a.slot_capacity();
+        // sustained churn: one departure per admission
+        for round in 0..1_000u64 {
+            a.remove(round % 100).unwrap();
+            a.insert(node(100 + round));
+            a.remove(100 + round).unwrap();
+            a.insert(node(round % 100));
+        }
+        assert_eq!(a.len(), 100);
+        assert!(
+            a.slot_capacity() <= peak + 1,
+            "arena grew with history: {} slots",
+            a.slot_capacity()
+        );
+        let sum: u64 = a.iter_unordered().map(|n| n.id).sum();
+        assert_eq!(sum, (0..100u64).sum());
+    }
+}

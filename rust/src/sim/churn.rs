@@ -142,7 +142,7 @@ mod tests {
         mass_join(&mut sim, 30, 10, 10 * MS, 1);
         let t = sim.run_until_correct(1.0, 240_000 * MS, 2_000 * MS);
         assert!(t.is_some(), "mass join stuck at {}", sim.correctness());
-        assert_eq!(sim.nodes.len(), 40);
+        assert_eq!(sim.live_count(), 40);
     }
 
     #[test]
@@ -151,13 +151,13 @@ mod tests {
         mass_fail(&mut sim, 40, 10, 10 * MS, 2);
         let t = sim.run_until_correct(1.0, 240_000 * MS, 2_000 * MS);
         assert!(t.is_some(), "mass fail stuck at {}", sim.correctness());
-        assert_eq!(sim.nodes.len(), 30);
+        assert_eq!(sim.live_count(), 30);
     }
 
     /// Drain the scheduled churn (join/fail/leave) times off the queue.
     fn churn_times(sim: &mut Simulator) -> Vec<Time> {
         let mut ts = Vec::new();
-        while let Some(e) = sim.queue.pop() {
+        while let Some(e) = sim.pop_event() {
             if matches!(
                 e.kind,
                 EventKind::Join { .. } | EventKind::Fail { .. } | EventKind::Leave { .. }

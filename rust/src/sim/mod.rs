@@ -10,6 +10,7 @@
 //! embedded `Simulator` in lockstep with training time, so mid-training
 //! churn rewires the learning topology through the actual NDMP protocol.
 
+pub mod arena;
 pub mod churn;
 pub mod event;
 pub mod network;
@@ -18,9 +19,10 @@ pub mod sched;
 pub mod scenario;
 pub mod transport;
 
+pub use arena::NodeArena;
 pub use event::{Event, EventKind, EventQueue};
 pub use network::{LatencyModel, LinkDelay, SimTransport};
-pub use runner::{grow_network, CorrectnessSample, Simulator};
+pub use runner::{grow_network, CorrectnessSample, FootprintStats, Simulator};
 pub use scenario::{
     quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, MultiTrainerSink, Phase,
     PhaseKind, RingQuality, ScenarioReport, ScenarioSpec,

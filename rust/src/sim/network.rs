@@ -64,11 +64,14 @@ impl LatencyModel {
 pub struct LinkDelay {
     cfg: NetConfig,
     links: HashMap<(NodeId, NodeId), LatencyModel>,
-    /// Nodes whose endpoints closed: links touching them are sampled
-    /// ephemerally (no map entry), so post-close traffic — e.g. a dead
-    /// node's neighbors heartbeating it until failure detection — can't
-    /// regrow the map. High-churn runs stay bounded by the *live* mesh.
-    closed: std::collections::HashSet<NodeId>,
+    /// Nodes with a live endpoint (`open`ed, not yet `forget`ed): only
+    /// links between two open nodes cache a stream; everything else is
+    /// sampled ephemerally. Tracking the *open* set — instead of the
+    /// old ever-growing closed set — bounds this map by the live mesh
+    /// under unbounded churn: post-close traffic (e.g. a dead node's
+    /// neighbors heartbeating it until failure detection) can't regrow
+    /// it, and departed ids leave no tombstone behind.
+    open: std::collections::HashSet<NodeId>,
 }
 
 impl LinkDelay {
@@ -76,7 +79,7 @@ impl LinkDelay {
         Self {
             cfg: cfg.clone(),
             links: HashMap::new(),
-            closed: std::collections::HashSet::new(),
+            open: std::collections::HashSet::new(),
         }
     }
 
@@ -93,14 +96,14 @@ impl LinkDelay {
 
     /// Sample the next delay (µs, >= 1) on the directed link `from -> to`.
     ///
-    /// Links touching a closed node draw from a fresh seed-initialized
+    /// Links touching a non-open node draw from a fresh seed-initialized
     /// stream each call instead of a cached one: such sends are dropped
     /// or delivered-to-dead on every backend, so the values are
     /// unobservable — both backends compute the same ones — and caching
     /// them would regrow the map with dead links.
     pub fn sample(&mut self, from: NodeId, to: NodeId) -> Time {
         let cfg = &self.cfg;
-        if self.closed.contains(&from) || self.closed.contains(&to) {
+        if !self.open.contains(&from) || !self.open.contains(&to) {
             return LatencyModel::with_seed(cfg, Self::link_seed(cfg.seed, from, to)).sample();
         }
         self.links
@@ -117,14 +120,25 @@ impl LinkDelay {
     /// them.
     pub fn forget(&mut self, node: NodeId) {
         self.links.retain(|&(from, to), _| from != node && to != node);
-        self.closed.insert(node);
+        self.open.remove(&node);
     }
 
-    /// `node`'s endpoint (re)opened: resume cached streaming for its
-    /// links. A reused id restarts its links from their seeds — on both
-    /// backends, since both pruned at close.
+    /// `node`'s endpoint (re)opened: cached streaming for its links to
+    /// other open nodes. A reused id restarts its links from their seeds
+    /// — on both backends, since both pruned at close.
     pub fn reopen(&mut self, node: NodeId) {
-        self.closed.remove(&node);
+        self.open.insert(node);
+    }
+
+    /// Cached link streams held (footprint telemetry).
+    pub fn link_count(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Open endpoints tracked (footprint telemetry; bounded by the live
+    /// set, unlike the pre-inversion closed-set which grew per departure).
+    pub fn open_count(&self) -> usize {
+        self.open.len()
     }
 }
 
@@ -212,6 +226,9 @@ mod tests {
         };
         let draw = |cfg: &NetConfig| {
             let mut d = LinkDelay::new(cfg);
+            for n in 0..5 {
+                d.reopen(n);
+            }
             (0..200).map(|i| d.sample(i % 5, (i + 1) % 5)).collect::<Vec<Time>>()
         };
         assert_eq!(draw(&cfg), draw(&cfg), "same seed must replay identically");
@@ -230,6 +247,8 @@ mod tests {
             seed: 3,
         };
         let mut d = LinkDelay::new(&cfg);
+        d.reopen(1);
+        d.reopen(2);
         let n = 30_000;
         let samples: Vec<Time> = (0..n).map(|_| d.sample(1, 2)).collect();
         // hard floor: base latency (jitter only ever adds)
@@ -245,6 +264,8 @@ mod tests {
             seed: 3,
         };
         let mut z = LinkDelay::new(&zero);
+        z.reopen(1);
+        z.reopen(2);
         assert!((0..100).all(|_| z.sample(1, 2) == 1));
     }
 
@@ -255,10 +276,17 @@ mod tests {
             jitter: 0.5,
             seed: 7,
         };
+        let opened = |cfg: &NetConfig| {
+            let mut d = LinkDelay::new(cfg);
+            for n in 1..=4 {
+                d.reopen(n);
+            }
+            d
+        };
         // interleaving draws on link B must not shift link A's sequence
-        let mut solo = LinkDelay::new(&cfg);
+        let mut solo = opened(&cfg);
         let a_solo: Vec<Time> = (0..50).map(|_| solo.sample(1, 2)).collect();
-        let mut mixed = LinkDelay::new(&cfg);
+        let mut mixed = opened(&cfg);
         let a_mixed: Vec<Time> = (0..50)
             .map(|_| {
                 mixed.sample(3, 4);
@@ -268,7 +296,7 @@ mod tests {
             .collect();
         assert_eq!(a_solo, a_mixed, "foreign links perturbed link (1,2)");
         // distinct links draw distinct sequences
-        let mut d = LinkDelay::new(&cfg);
+        let mut d = opened(&cfg);
         let a: Vec<Time> = (0..50).map(|_| d.sample(1, 2)).collect();
         let b: Vec<Time> = (0..50).map(|_| d.sample(2, 1)).collect();
         assert_ne!(a, b, "directed links must not share a stream");
@@ -282,12 +310,17 @@ mod tests {
             seed: 9,
         };
         let mut d = LinkDelay::new(&cfg);
+        for n in 1..=3 {
+            d.reopen(n);
+        }
         let first = d.sample(1, 2);
         let second = d.sample(1, 2);
         assert_ne!(first, second, "jittered stream should advance");
         d.sample(2, 3); // untouched by the forget below
         let third_continuation = {
             let mut probe = LinkDelay::new(&cfg);
+            probe.reopen(2);
+            probe.reopen(3);
             probe.sample(2, 3);
             probe.sample(2, 3)
         };
@@ -301,6 +334,27 @@ mod tests {
         d.reopen(1);
         assert_eq!(d.sample(1, 2), first);
         assert_eq!(d.sample(1, 2), second);
+    }
+
+    #[test]
+    fn churned_ids_leave_no_tombstones() {
+        let cfg = NetConfig {
+            latency_ms: 10.0,
+            jitter: 0.1,
+            seed: 6,
+        };
+        let mut d = LinkDelay::new(&cfg);
+        d.reopen(0);
+        for id in 1..5_000u64 {
+            d.reopen(id);
+            d.sample(0, id);
+            d.sample(id, 0);
+            d.forget(id);
+        }
+        // every link touching a departed id is pruned and no per-id
+        // tombstone survives: state is bounded by the live set (node 0)
+        assert_eq!(d.open_count(), 1);
+        assert_eq!(d.link_count(), 0);
     }
 
     #[test]

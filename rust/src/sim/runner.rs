@@ -5,36 +5,99 @@
 //! for topology construction, maintenance, and churn experiments
 //! (Figs. 8a–c); with `net::SchedTransport` the *same* event loop drives
 //! the protocols over real localhost TCP sockets (§IV-A1, type 1).
+//!
+//! # Sharded execution
+//!
+//! `set_shards(k)` partitions the `[0,1)` space-0 virtual-coordinate
+//! circle into `k` contiguous arcs. Each shard owns the node state
+//! (arena-packed, see `sim::arena`) and the event sub-queue of its arc;
+//! per instant, every shard's due `Deliver`/`Tick` events are processed
+//! in parallel (rayon) and their emissions are merged back in producer
+//! sequence order, while membership events (`Join`/`Fail`/`Leave`/
+//! `Snapshot`) run serially on a control queue at their exact global
+//! sequence positions. The result is *bitwise-identical* to the `k = 1`
+//! serial loop — see `docs/perf.md` for the full determinism argument.
 
-use super::event::{EventKind, EventQueue};
+use super::arena::NodeArena;
+use super::event::{Event, EventKind, EventQueue};
 use super::network::SimTransport;
 use super::transport::Transport;
 use crate::config::{NetConfig, OverlayConfig};
 use crate::ndmp::messages::{Msg, Outgoing, Time, MS};
 use crate::ndmp::node::{NodeCounters, NodeState};
+use crate::ndmp::routing::coord_of;
 use crate::topology::{correctness, NeighborSnapshot, NodeId};
-use std::collections::{BTreeMap, BTreeSet};
+use rayon::prelude::*;
+use std::collections::{BTreeSet, VecDeque};
+
+/// Below this many due events in a parallel segment the rayon fan-out
+/// costs more than it saves; process serially (same code, same result).
+const PAR_SEGMENT_MIN: usize = 64;
 
 /// A recorded correctness sample (for the Fig. 8a/8b time series).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CorrectnessSample {
     pub at: Time,
     pub correctness: f64,
     pub live_nodes: usize,
 }
 
+/// Live-state footprint telemetry: everything here must stay bounded by
+/// the *live set* (plus the peak live set for recycled slots), never by
+/// churn history. The memory regression test pins these under a long
+/// PoissonChurn run.
+#[derive(Debug, Clone, Copy)]
+pub struct FootprintStats {
+    /// Arena slots allocated across all shards (live + recyclable).
+    pub arena_slots: usize,
+    /// Bytes of scheduler pending/cancelled bookkeeping (all queues).
+    pub queue_bookkeeping_bytes: usize,
+    /// Departed nodes folded into the scalar counter tally.
+    pub retired_nodes: u64,
+}
+
+/// One arc of the coordinate circle: its nodes and its event sub-queue.
+#[derive(Debug, Default)]
+struct Shard {
+    queue: EventQueue,
+    nodes: NodeArena,
+}
+
+/// What one shard-local event produced, replayed serially at the merge
+/// barrier in producer-seq order so global effects (counters, transport
+/// delay streams, new event seqs) happen in exactly the serial order.
+struct EventOut {
+    seq: u64,
+    delivered: Option<(NodeId, NodeId)>,
+    view_change: Option<NodeId>,
+    /// `Tick` re-arm; seq-assigned *before* the sends, matching the
+    /// serial loop's tick-first push order.
+    rearm: Option<NodeId>,
+    sends: Vec<(NodeId, Outgoing)>,
+}
+
 pub struct Simulator {
     pub cfg: OverlayConfig,
-    pub nodes: BTreeMap<NodeId, NodeState>,
-    pub queue: EventQueue,
+    /// Coordinate-arc shards; at the default `k = 1`, `shards[0]` is the
+    /// whole simulator and the event loop is the classic serial one.
+    shards: Vec<Shard>,
+    /// Membership/snapshot events when sharded (`k > 1`): these mutate
+    /// global state, so they run serially between parallel segments.
+    ctl: EventQueue,
+    /// Global sequence counter when sharded: every event gets its seq
+    /// from here (in emission order), so ties at equal timestamps break
+    /// exactly as in the single-queue run.
+    next_seq: u64,
     pub now: Time,
     /// Message-passage backend: in-memory (`SimTransport`) or real TCP
-    /// sockets (`net::SchedTransport`). Timers always stay on `queue`.
+    /// sockets (`net::SchedTransport`). Timers always stay on the queue.
     transport: Box<dyn Transport>,
     /// Tick granularity for node timers.
     tick_period: Time,
-    /// Counters of departed nodes (so message totals survive failures).
-    pub retired_counters: Vec<NodeCounters>,
+    /// Departed nodes folded into one scalar tally (message totals
+    /// survive failures without O(history) per-node entries).
+    retired_nodes: u64,
+    retired_tally: NodeCounters,
     pub samples: Vec<CorrectnessSample>,
     /// Messages delivered (for telemetry / debugging).
     pub delivered: u64,
@@ -69,12 +132,14 @@ impl Simulator {
         let tick_period = (overlay.heartbeat_ms * 1_000) / 2;
         Self {
             cfg: overlay,
-            nodes: BTreeMap::new(),
-            queue: EventQueue::new(),
+            shards: vec![Shard::default()],
+            ctl: EventQueue::new(),
+            next_seq: 0,
             now: 0,
             transport,
             tick_period: tick_period.max(1),
-            retired_counters: Vec::new(),
+            retired_nodes: 0,
+            retired_tally: NodeCounters::default(),
             samples: Vec::new(),
             delivered: 0,
             view_changes: BTreeSet::new(),
@@ -82,6 +147,44 @@ impl Simulator {
             record_deliveries: false,
             delivery_log: Vec::new(),
         }
+    }
+
+    /// Partition the simulator into `k` coordinate-arc shards. Must be
+    /// called before any bootstrap or scheduling (the arc assignment of
+    /// every queued event is fixed at enqueue time), and `k > 1`
+    /// requires a queue-scheduled (idle) transport backend.
+    pub fn set_shards(&mut self, k: usize) {
+        assert!(k >= 1, "need at least one shard");
+        assert!(
+            self.now == 0
+                && self.live_count() == 0
+                && self.ctl.is_empty()
+                && self.shards.iter().all(|s| s.queue.is_empty()),
+            "set_shards must be called before any bootstrap or scheduling"
+        );
+        assert!(
+            k == 1 || self.transport.idle(),
+            "sharded execution requires a queue-scheduled transport (got {})",
+            self.transport.name()
+        );
+        self.shards = std::iter::repeat_with(Shard::default).take(k).collect();
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard owns `id`: `id`'s space-0 virtual coordinate mapped
+    /// onto `k` equal arcs of `[0,1)`. A pure function of the id, so
+    /// every run (and every `k`) agrees on ownership without any lookup
+    /// state.
+    #[inline]
+    fn shard_of(&self, id: NodeId) -> usize {
+        let k = self.shards.len();
+        if k == 1 {
+            return 0;
+        }
+        ((coord_of(id, 0) * k as f64) as usize).min(k - 1)
     }
 
     /// Toggle the per-message arrival trace (see `delivery_log`).
@@ -107,12 +210,76 @@ impl Simulator {
         self.view_change_count += 1;
     }
 
+    // ------------------------------------------------------------------
+    // Node access (the arena replaces the old public BTreeMap)
+    // ------------------------------------------------------------------
+
+    pub fn node(&self, id: NodeId) -> Option<&NodeState> {
+        self.shards[self.shard_of(id)].nodes.get(id)
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> Option<&mut NodeState> {
+        let s = self.shard_of(id);
+        self.shards[s].nodes.get_mut(id)
+    }
+
+    pub fn contains_node(&self, id: NodeId) -> bool {
+        self.shards[self.shard_of(id)].nodes.contains(id)
+    }
+
+    /// Number of live nodes.
+    pub fn live_count(&self) -> usize {
+        self.shards.iter().map(|s| s.nodes.len()).sum()
+    }
+
+    /// Live node ids in ascending order.
+    pub fn node_ids(&self) -> Vec<NodeId> {
+        let mut ids: Vec<NodeId> = self
+            .shards
+            .iter()
+            .flat_map(|s| s.nodes.ids_sorted())
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    fn insert_node(&mut self, st: NodeState) {
+        let s = self.shard_of(st.id);
+        self.shards[s].nodes.insert(st);
+    }
+
+    fn remove_node(&mut self, id: NodeId) -> Option<NodeState> {
+        let s = self.shard_of(id);
+        self.shards[s].nodes.remove(id)
+    }
+
+    /// Fold a departed node's counters into the scalar tally.
+    fn retire(&mut self, counters: NodeCounters) {
+        self.retired_nodes += 1;
+        self.retired_tally.absorb(&counters);
+    }
+
+    /// Live-state footprint telemetry (see `FootprintStats`).
+    pub fn footprint(&self) -> FootprintStats {
+        FootprintStats {
+            arena_slots: self.shards.iter().map(|s| s.nodes.slot_capacity()).sum(),
+            queue_bookkeeping_bytes: self
+                .shards
+                .iter()
+                .map(|s| s.queue.bookkeeping_bytes())
+                .sum::<usize>()
+                + self.ctl.bookkeeping_bytes(),
+            retired_nodes: self.retired_nodes,
+        }
+    }
+
     /// Create a correct network of `ids` instantly (centralized shortcut
     /// used to set up the *initial* condition of churn experiments; the
     /// decentralized path is `schedule_join`). One ring sort per space —
     /// not per node — so 10k-node scenarios bootstrap in milliseconds.
     pub fn bootstrap_correct(&mut self, ids: &[NodeId]) {
         use crate::topology::fedlay::Membership;
+        use std::collections::BTreeMap;
         let mut m = Membership::new(self.cfg.spaces);
         for &id in ids {
             m.add(id);
@@ -154,9 +321,9 @@ impl Simulator {
             // zero the counters: bootstrap is not protocol traffic
             st.counters = NodeCounters::default();
             self.transport.open(id).expect("transport endpoint");
-            self.nodes.insert(id, st);
+            self.insert_node(st);
             self.note_view_change(id);
-            self.queue.push(self.now + 1, EventKind::Tick { node: id });
+            self.enqueue(self.now + 1, EventKind::Tick { node: id });
         }
     }
 
@@ -165,25 +332,53 @@ impl Simulator {
         let mut st = NodeState::new(id, self.cfg.clone(), self.now);
         st.bootstrap_first();
         self.transport.open(id).expect("transport endpoint");
-        self.nodes.insert(id, st);
+        self.insert_node(st);
         self.note_view_change(id);
-        self.queue.push(self.now + 1, EventKind::Tick { node: id });
+        self.enqueue(self.now + 1, EventKind::Tick { node: id });
     }
 
     pub fn schedule_join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) {
-        self.queue.push(at, EventKind::Join { node, bootstrap });
+        self.enqueue(at, EventKind::Join { node, bootstrap });
     }
 
     pub fn schedule_fail(&mut self, at: Time, node: NodeId) {
-        self.queue.push(at, EventKind::Fail { node });
+        self.enqueue(at, EventKind::Fail { node });
     }
 
     pub fn schedule_leave(&mut self, at: Time, node: NodeId) {
-        self.queue.push(at, EventKind::Leave { node });
+        self.enqueue(at, EventKind::Leave { node });
     }
 
     pub fn schedule_snapshot(&mut self, at: Time) {
-        self.queue.push(at, EventKind::Snapshot { tag: 0 });
+        self.enqueue(at, EventKind::Snapshot { tag: 0 });
+    }
+
+    /// Route an event to its owning queue. At `k = 1` this is a plain
+    /// push (the queue's internal counter numbers events in emission
+    /// order); when sharded, the global counter assigns the *same*
+    /// numbers in the same order and the event lands on its arc's
+    /// sub-queue (`Deliver`/`Tick`) or the serial control queue
+    /// (membership, snapshots).
+    fn enqueue(&mut self, at: Time, kind: EventKind) {
+        if self.shards.len() == 1 {
+            self.shards[0].queue.push(at, kind);
+            return;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let shard = match &kind {
+            EventKind::Deliver { to, .. } => Some(self.shard_of(*to)),
+            EventKind::Tick { node } => Some(self.shard_of(*node)),
+            _ => None,
+        };
+        match shard {
+            Some(s) => {
+                self.shards[s].queue.push_at_seq(at, seq, kind);
+            }
+            None => {
+                self.ctl.push_at_seq(at, seq, kind);
+            }
+        }
     }
 
     fn dispatch(&mut self, from: NodeId, outs: Vec<Outgoing>) {
@@ -194,7 +389,7 @@ impl Simulator {
             // Queue-scheduled backends answer with a delivery time; wire
             // backends carry the bytes themselves and we poll (`pump`).
             if let Some(at) = self.transport.send(self.now, from, o.to, &o.msg) {
-                self.queue.push(
+                self.enqueue(
                     at,
                     EventKind::Deliver {
                         from,
@@ -223,8 +418,9 @@ impl Simulator {
             return;
         }
         for a in self.transport.poll() {
-            self.queue.push(
-                a.at.max(self.now),
+            let at = a.at.max(self.now);
+            self.enqueue(
+                at,
                 EventKind::Deliver {
                     from: a.from,
                     to: a.to,
@@ -236,9 +432,10 @@ impl Simulator {
 
     /// Current neighbor-set snapshot of all live nodes.
     pub fn snapshot(&self) -> NeighborSnapshot {
-        self.nodes
+        self.shards
             .iter()
-            .map(|(&id, st)| (id, st.neighbor_ids()))
+            .flat_map(|s| s.nodes.iter_unordered())
+            .map(|st| (st.id, st.neighbor_ids()))
             .collect()
     }
 
@@ -246,9 +443,10 @@ impl Simulator {
     /// incidental routed-traffic peers). Two converged backends must
     /// agree on this exactly — the conformance-test comparison view.
     pub fn ring_snapshot(&self) -> NeighborSnapshot {
-        self.nodes
+        self.shards
             .iter()
-            .map(|(&id, st)| (id, st.ring_neighbor_ids()))
+            .flat_map(|s| s.nodes.iter_unordered())
+            .map(|st| (st.id, st.ring_neighbor_ids()))
             .collect()
     }
 
@@ -264,115 +462,296 @@ impl Simulator {
 
     /// Total control messages sent per live+retired node.
     pub fn control_messages_per_node(&self) -> f64 {
-        let live: u64 = self.nodes.values().map(|n| n.counters.control_sent).sum();
-        let retired: u64 = self.retired_counters.iter().map(|c| c.control_sent).sum();
-        let count = self.nodes.len() + self.retired_counters.len();
+        let live: u64 = self
+            .shards
+            .iter()
+            .flat_map(|s| s.nodes.iter_unordered())
+            .map(|n| n.counters.control_sent)
+            .sum();
+        let count = self.live_count() as u64 + self.retired_nodes;
         if count == 0 {
             0.0
         } else {
-            (live + retired) as f64 / count as f64
+            (live + self.retired_tally.control_sent) as f64 / count as f64
+        }
+    }
+
+    /// Pop the globally-earliest pending event (tools and tests drain
+    /// schedules through this; the run loop batches internally).
+    pub fn pop_event(&mut self) -> Option<Event> {
+        let mut best: Option<(Time, u64, usize)> = None;
+        for (i, s) in self.shards.iter_mut().enumerate() {
+            if let Some(e) = s.queue.peek() {
+                if best.is_none_or(|(at, seq, _)| (e.at, e.seq) < (at, seq)) {
+                    best = Some((e.at, e.seq, i));
+                }
+            }
+        }
+        if let Some(e) = self.ctl.peek() {
+            if best.is_none_or(|(at, seq, _)| (e.at, e.seq) < (at, seq)) {
+                best = Some((e.at, e.seq, usize::MAX));
+            }
+        }
+        let (_, _, idx) = best?;
+        if idx == usize::MAX {
+            self.ctl.pop()
+        } else {
+            self.shards[idx].queue.pop()
+        }
+    }
+
+    /// Process one event exactly as the serial loop does. The sharded
+    /// loop reuses this verbatim for control events, so membership
+    /// handling (and its emission seq assignment) is shared, not
+    /// reimplemented.
+    fn handle_event(&mut self, kind: EventKind) {
+        let now = self.now;
+        match kind {
+            EventKind::Deliver { from, to, msg } => {
+                // Messages to dead nodes vanish (crash-fail model)
+                // *before* counting: the wire backend never has a
+                // frame for them (the send is dropped at the closed
+                // endpoint), so counting them here would make
+                // `delivered` and the delivery log diverge between
+                // backends.
+                let s = self.shard_of(to);
+                let Some(node) = self.shards[s].nodes.get_mut(to) else {
+                    return;
+                };
+                let stamp = node.view_stamp();
+                let outs = node.handle(from, msg, now);
+                let changed = node.view_stamp() != stamp;
+                self.delivered += 1;
+                if self.record_deliveries {
+                    self.delivery_log.push((now, from, to));
+                }
+                if changed {
+                    self.note_view_change(to);
+                }
+                self.dispatch(to, outs);
+            }
+            EventKind::Tick { node } => {
+                let s = self.shard_of(node);
+                let Some(st) = self.shards[s].nodes.get_mut(node) else {
+                    return;
+                };
+                let stamp = st.view_stamp();
+                let outs = st.tick(now);
+                let changed = st.view_stamp() != stamp;
+                if changed {
+                    self.note_view_change(node);
+                }
+                // push the next tick *before* dispatching: the wire
+                // backend's deliveries enter the queue after the
+                // event (in `pump`), so a uniform tick-first order
+                // keeps equal-time tie-breaking identical on both
+                // backends
+                self.enqueue(now + self.tick_period, EventKind::Tick { node });
+                self.dispatch(node, outs);
+            }
+            EventKind::Join { node, bootstrap } => {
+                if self.contains_node(node) || !self.contains_node(bootstrap) {
+                    return;
+                }
+                if self.transport.open(node).is_err() {
+                    return; // endpoint unavailable: the join is lost
+                }
+                let mut st = NodeState::new(node, self.cfg.clone(), now);
+                let outs = st.start_join(bootstrap, now);
+                self.insert_node(st);
+                self.note_view_change(node);
+                // tick before dispatch: see the Tick arm
+                self.enqueue(now + self.tick_period, EventKind::Tick { node });
+                self.dispatch(node, outs);
+            }
+            EventKind::Fail { node } => {
+                if let Some(st) = self.remove_node(node) {
+                    self.retire(st.counters);
+                    self.note_view_change(node);
+                    self.transport.close(node);
+                }
+            }
+            EventKind::Leave { node } => {
+                if let Some(mut st) = self.remove_node(node) {
+                    let outs = st.start_leave();
+                    self.retire(st.counters);
+                    self.note_view_change(node);
+                    // flush the leave notices, then tear the endpoint
+                    // down — in-flight messages to it vanish, exactly
+                    // like the in-memory dead-node rule.
+                    self.dispatch(node, outs);
+                    self.transport.close(node);
+                }
+            }
+            EventKind::Snapshot { .. } => {
+                let c = self.correctness();
+                self.samples.push(CorrectnessSample {
+                    at: now,
+                    correctness: c,
+                    live_nodes: self.live_count(),
+                });
+            }
         }
     }
 
     /// Run until `deadline` (inclusive) or the queue drains. Timer and
     /// churn events pop from the deterministic queue; between events any
-    /// wire-carried messages are pumped in.
+    /// wire-carried messages are pumped in. Sharded simulators take the
+    /// parallel instant-batch loop instead (identical results).
     pub fn run_until(&mut self, deadline: Time) {
+        if self.shards.len() > 1 {
+            self.run_until_sharded(deadline);
+            return;
+        }
         self.pump();
-        while let Some(t) = self.queue.peek_time() {
+        while let Some(t) = self.shards[0].queue.peek_time() {
             if t > deadline {
                 break;
             }
-            let ev = self.queue.pop().unwrap();
+            let ev = self.shards[0].queue.pop().unwrap();
             self.now = ev.at;
-            match ev.kind {
-                EventKind::Deliver { from, to, msg } => {
-                    // Messages to dead nodes vanish (crash-fail model)
-                    // *before* counting: the wire backend never has a
-                    // frame for them (the send is dropped at the closed
-                    // endpoint), so counting them here would make
-                    // `delivered` and the delivery log diverge between
-                    // backends.
-                    let Some(node) = self.nodes.get_mut(&to) else {
-                        continue;
-                    };
-                    self.delivered += 1;
-                    if self.record_deliveries {
-                        self.delivery_log.push((self.now, from, to));
-                    }
-                    let stamp = node.view_stamp();
-                    let outs = node.handle(from, msg, self.now);
-                    if node.view_stamp() != stamp {
-                        self.note_view_change(to);
-                    }
-                    self.dispatch(to, outs);
-                }
-                EventKind::Tick { node } => {
-                    let Some(st) = self.nodes.get_mut(&node) else {
-                        continue;
-                    };
-                    let stamp = st.view_stamp();
-                    let outs = st.tick(self.now);
-                    if st.view_stamp() != stamp {
-                        self.note_view_change(node);
-                    }
-                    // push the next tick *before* dispatching: the wire
-                    // backend's deliveries enter the queue after the
-                    // event (in `pump`), so a uniform tick-first order
-                    // keeps equal-time tie-breaking identical on both
-                    // backends
-                    self.queue
-                        .push(self.now + self.tick_period, EventKind::Tick { node });
-                    self.dispatch(node, outs);
-                }
-                EventKind::Join { node, bootstrap } => {
-                    if self.nodes.contains_key(&node) || !self.nodes.contains_key(&bootstrap) {
-                        continue;
-                    }
-                    if self.transport.open(node).is_err() {
-                        continue; // endpoint unavailable: the join is lost
-                    }
-                    let mut st = NodeState::new(node, self.cfg.clone(), self.now);
-                    let outs = st.start_join(bootstrap, self.now);
-                    self.nodes.insert(node, st);
-                    self.note_view_change(node);
-                    // tick before dispatch: see the Tick arm
-                    self.queue
-                        .push(self.now + self.tick_period, EventKind::Tick { node });
-                    self.dispatch(node, outs);
-                }
-                EventKind::Fail { node } => {
-                    if let Some(st) = self.nodes.remove(&node) {
-                        self.retired_counters.push(st.counters);
-                        self.note_view_change(node);
-                        self.transport.close(node);
-                    }
-                }
-                EventKind::Leave { node } => {
-                    if let Some(mut st) = self.nodes.remove(&node) {
-                        let outs = st.start_leave();
-                        self.retired_counters.push(st.counters);
-                        self.note_view_change(node);
-                        // flush the leave notices, then tear the endpoint
-                        // down — in-flight messages to it vanish, exactly
-                        // like the in-memory dead-node rule.
-                        self.dispatch(node, outs);
-                        self.transport.close(node);
-                    }
-                }
-                EventKind::Snapshot { .. } => {
-                    let c = self.correctness();
-                    self.samples.push(CorrectnessSample {
-                        at: self.now,
-                        correctness: c,
-                        live_nodes: self.nodes.len(),
-                    });
-                }
-            }
+            self.handle_event(ev.kind);
             self.pump();
         }
         self.now = self.now.max(deadline);
         self.pump();
+    }
+
+    /// The sharded event loop: per instant, pop everything due, process
+    /// shard-local events in parallel between serial control events, and
+    /// merge emissions in producer-seq order. Why this is bitwise equal
+    /// to the serial loop:
+    ///
+    /// * all emissions land strictly later than the current instant
+    ///   (link delays and tick periods are >= 1 µs), so the due set of
+    ///   an instant is fixed before any of it is processed;
+    /// * `Deliver`/`Tick` handlers touch only the target node's state,
+    ///   which lives in exactly one shard — events of different shards
+    ///   at the same instant commute as long as no membership event
+    ///   sits between them (in seq order), which is what the segment
+    ///   split enforces;
+    /// * all *global* effects — `delivered`, the delivery log, view
+    ///   changes, transport delay sampling, and the seqs of emitted
+    ///   events — are applied at the merge barrier in producer-seq
+    ///   order, i.e. in exactly the serial processing order.
+    fn run_until_sharded(&mut self, deadline: Time) {
+        debug_assert!(self.transport.idle());
+        loop {
+            let mut t_min = self.ctl.peek_time();
+            for s in &mut self.shards {
+                t_min = match (t_min, s.queue.peek_time()) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+            let Some(t) = t_min else { break };
+            if t > deadline {
+                break;
+            }
+            self.now = t;
+            self.step_instant_sharded(t);
+        }
+        self.now = self.now.max(deadline);
+    }
+
+    fn step_instant_sharded(&mut self, t: Time) {
+        // every control event due at this instant, in seq order
+        let mut ctl_due: Vec<Event> = Vec::new();
+        while self.ctl.peek().is_some_and(|e| e.at == t) {
+            ctl_due.push(self.ctl.pop().unwrap());
+        }
+        // every shard event due at this instant, per shard (seq-sorted:
+        // a queue pops equal times in seq order)
+        let mut due: Vec<VecDeque<Event>> = self
+            .shards
+            .iter_mut()
+            .map(|s| {
+                let mut v = VecDeque::new();
+                while s.queue.peek().is_some_and(|e| e.at == t) {
+                    v.push_back(s.queue.pop().unwrap());
+                }
+                v
+            })
+            .collect();
+        // walk the instant in global seq order: shard events between
+        // consecutive control seqs form one parallel segment; each
+        // control event is a serial barrier at its exact position.
+        let mut ctl_iter = ctl_due.into_iter();
+        let mut next_ctl = ctl_iter.next();
+        loop {
+            let boundary = next_ctl.as_ref().map_or(u64::MAX, |e| e.seq);
+            let segment: Vec<Vec<Event>> = due
+                .iter_mut()
+                .map(|q| {
+                    let mut v = Vec::new();
+                    while q.front().is_some_and(|e| e.seq < boundary) {
+                        v.push(q.pop_front().unwrap());
+                    }
+                    v
+                })
+                .collect();
+            self.run_segment(segment);
+            match next_ctl.take() {
+                Some(e) => {
+                    self.handle_event(e.kind);
+                    next_ctl = ctl_iter.next();
+                }
+                None => break,
+            }
+        }
+        debug_assert!(due.iter().all(|q| q.is_empty()));
+    }
+
+    /// Process one parallel segment: shard-local events fan out across
+    /// shards (rayon when large enough), then their outputs are merged
+    /// and applied serially in producer-seq order.
+    fn run_segment(&mut self, segment: Vec<Vec<Event>>) {
+        let total: usize = segment.iter().map(|v| v.len()).sum();
+        if total == 0 {
+            return;
+        }
+        let now = self.now;
+        let outs: Vec<Vec<EventOut>> = if total >= PAR_SEGMENT_MIN {
+            self.shards
+                .par_iter_mut()
+                .zip(segment.into_par_iter())
+                .map(|(shard, evs)| process_shard_events(shard, evs, now))
+                .collect()
+        } else {
+            self.shards
+                .iter_mut()
+                .zip(segment)
+                .map(|(shard, evs)| process_shard_events(shard, evs, now))
+                .collect()
+        };
+        let mut merged: Vec<EventOut> = outs.into_iter().flatten().collect();
+        merged.sort_unstable_by_key(|o| o.seq);
+        for out in merged {
+            if let Some((from, to)) = out.delivered {
+                self.delivered += 1;
+                if self.record_deliveries {
+                    self.delivery_log.push((now, from, to));
+                }
+            }
+            if let Some(id) = out.view_change {
+                self.note_view_change(id);
+            }
+            if let Some(node) = out.rearm {
+                self.enqueue(now + self.tick_period, EventKind::Tick { node });
+            }
+            for (from, o) in out.sends {
+                if let Some(at) = self.transport.send(now, from, o.to, &o.msg) {
+                    self.enqueue(
+                        at,
+                        EventKind::Deliver {
+                            from,
+                            to: o.to,
+                            msg: o.msg,
+                        },
+                    );
+                }
+            }
+        }
     }
 
     /// Convenience: run until correctness reaches `threshold` or `deadline`
@@ -396,6 +775,59 @@ impl Simulator {
     }
 }
 
+/// The shard-local half of event processing: run each due event's
+/// protocol handler against this shard's nodes, recording global effects
+/// for the serial merge instead of applying them. Self-sends are dropped
+/// here (as in `dispatch`); everything else that touches shared state
+/// waits for the merge barrier.
+fn process_shard_events(shard: &mut Shard, evs: Vec<Event>, now: Time) -> Vec<EventOut> {
+    let mut outs = Vec::with_capacity(evs.len());
+    for ev in evs {
+        match ev.kind {
+            EventKind::Deliver { from, to, msg } => {
+                let Some(node) = shard.nodes.get_mut(to) else {
+                    continue; // dead target: vanishes, uncounted
+                };
+                let stamp = node.view_stamp();
+                let emitted = node.handle(from, msg, now);
+                let view_change = (node.view_stamp() != stamp).then_some(to);
+                outs.push(EventOut {
+                    seq: ev.seq,
+                    delivered: Some((from, to)),
+                    view_change,
+                    rearm: None,
+                    sends: emitted
+                        .into_iter()
+                        .filter(|o| o.to != to)
+                        .map(|o| (to, o))
+                        .collect(),
+                });
+            }
+            EventKind::Tick { node } => {
+                let Some(st) = shard.nodes.get_mut(node) else {
+                    continue; // departed: timer chain ends
+                };
+                let stamp = st.view_stamp();
+                let emitted = st.tick(now);
+                let view_change = (st.view_stamp() != stamp).then_some(node);
+                outs.push(EventOut {
+                    seq: ev.seq,
+                    delivered: None,
+                    view_change,
+                    rearm: Some(node),
+                    sends: emitted
+                        .into_iter()
+                        .filter(|o| o.to != node)
+                        .map(|o| (node, o))
+                        .collect(),
+                });
+            }
+            other => unreachable!("control event {other:?} routed to a shard queue"),
+        }
+    }
+    outs
+}
+
 /// Build a network of `n` nodes purely through the decentralized join
 /// protocol, one join per `spacing` (sequential joins, §III-B1).
 pub fn grow_network(
@@ -417,7 +849,7 @@ pub fn grow_network(
     sim.run_until(n as Time * spacing + 1);
     let deadline = n as Time * spacing + 60_000 * MS;
     sim.run_until_correct(1.0, deadline, 2_000 * MS);
-    debug_assert_eq!(sim.nodes.len(), n, "grow_network lost joiners");
+    debug_assert_eq!(sim.live_count(), n, "grow_network lost joiners");
     sim
 }
 
@@ -489,7 +921,7 @@ mod tests {
         sim.schedule_leave(10 * MS, 11);
         let t = sim.run_until_correct(1.0, 20_000 * MS, 100 * MS);
         assert!(t.is_some(), "leave not repaired; c={}", sim.correctness());
-        assert!(!sim.nodes.contains_key(&11));
+        assert!(!sim.contains_node(11));
     }
 
     #[test]
@@ -507,7 +939,7 @@ mod tests {
             "concurrent joins did not converge; c={}",
             sim.correctness()
         );
-        assert_eq!(sim.nodes.len(), 30);
+        assert_eq!(sim.live_count(), 30);
     }
 
     #[test]
@@ -524,7 +956,7 @@ mod tests {
             "concurrent failures did not recover; c={}",
             sim.correctness()
         );
-        assert_eq!(sim.nodes.len(), 36);
+        assert_eq!(sim.live_count(), 36);
     }
 
     #[test]
@@ -567,5 +999,59 @@ mod tests {
             (sim.correctness(), sim.delivered, sim.control_messages_per_node())
         };
         assert_eq!(run(), run());
+    }
+
+    /// The tentpole invariant in miniature: a sharded run is *bitwise*
+    /// identical to the serial run — same delivered count, same arrival
+    /// log, same counters, same rings, same samples.
+    #[test]
+    fn sharded_run_is_bitwise_identical_to_serial() {
+        let run = |k: usize| {
+            let mut sim = Simulator::new(overlay(2), net());
+            sim.set_shards(k);
+            sim.record_deliveries(true);
+            sim.bootstrap_correct(&(0..24).collect::<Vec<_>>());
+            sim.schedule_fail(5 * MS, 3);
+            sim.schedule_join(6 * MS, 99, 1);
+            sim.schedule_leave(9 * MS, 17);
+            for t in [2_000 * MS, 10_000 * MS, 25_000 * MS] {
+                sim.schedule_snapshot(t);
+            }
+            sim.run_until(30_000 * MS);
+            (
+                sim.delivered,
+                sim.delivery_log.clone(),
+                sim.control_messages_per_node(),
+                sim.correctness(),
+                sim.ring_snapshot(),
+                sim.samples.clone(),
+                sim.view_change_count,
+            )
+        };
+        let serial = run(1);
+        for k in [2, 4, 7] {
+            assert_eq!(serial, run(k), "shard count {k} diverged");
+        }
+    }
+
+    #[test]
+    fn retired_counters_collapse_to_scalar_tally() {
+        let mut sim = Simulator::new(overlay(2), net());
+        sim.bootstrap_correct(&(0..12).collect::<Vec<_>>());
+        for (i, v) in [2u64, 5, 9].iter().enumerate() {
+            sim.schedule_fail((5 + i as Time) * MS, *v);
+        }
+        sim.run_until(30_000 * MS);
+        let fp = sim.footprint();
+        assert_eq!(fp.retired_nodes, 3);
+        assert_eq!(sim.live_count(), 9);
+        // totals still include the departed nodes' traffic
+        let per_node = sim.control_messages_per_node();
+        let live_only: u64 = sim
+            .node_ids()
+            .iter()
+            .map(|&id| sim.node(id).unwrap().counters.control_sent)
+            .sum();
+        assert!(per_node * 12.0 >= live_only as f64);
     }
 }

@@ -184,6 +184,11 @@ pub struct ScenarioSpec {
     /// Floor on the live population: stochastic fails/leaves are skipped
     /// when they would shrink the network below it.
     pub min_live: usize,
+    /// Coordinate-arc shard count for the discrete-event engine
+    /// ([`Simulator::set_shards`]); 1 = the serial engine. Every value
+    /// produces the bitwise-identical run, so this is purely a
+    /// wall-clock knob for large scenarios (in-memory transport only).
+    pub shards: usize,
     pub overlay: OverlayConfig,
     pub net: NetConfig,
     pub phases: Vec<Phase>,
@@ -210,6 +215,7 @@ impl ScenarioSpec {
             sample_every: 3 * SEC,
             settle: 0,
             min_live: (initial / 2).max(2),
+            shards: 1,
             overlay: OverlayConfig::default(),
             net: NetConfig {
                 seed,
@@ -262,6 +268,7 @@ impl ScenarioSpec {
         ensure!(self.horizon > 0, "scenario.horizon_ms must be positive");
         ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
         ensure!(self.min_live >= 1, "scenario.min_live must be >= 1");
+        ensure!(self.shards >= 1, "scenario.shards must be >= 1");
         ensure!(
             self.net.latency_ms.is_finite() && self.net.latency_ms >= 0.0,
             "net.latency_ms must be a finite value >= 0"
@@ -499,9 +506,19 @@ impl ScenarioSpec {
     ) -> Result<(Simulator, ScenarioReport)> {
         self.validate()?;
         let mut sim = match transport {
-            Some(t) => Simulator::with_transport(self.overlay.clone(), t),
+            Some(t) => {
+                ensure!(
+                    self.shards == 1 || t.idle(),
+                    "scenario.shards > 1 needs a queue-scheduled transport (got {})",
+                    t.name()
+                );
+                Simulator::with_transport(self.overlay.clone(), t)
+            }
             None => Simulator::new(self.overlay.clone(), self.net.clone()),
         };
+        if self.shards > 1 {
+            sim.set_shards(self.shards);
+        }
         let ids: Vec<NodeId> = (0..self.initial as NodeId).collect();
         sim.bootstrap_correct(&ids);
         let events = self.compile();
@@ -579,6 +596,9 @@ impl ScenarioSpec {
             };
             schedule_events(&events, &mut sink)?;
         }
+        // applies when the trainer builds its own in-memory overlay;
+        // adopted overlays and custom transports keep their own engine
+        trainer.set_overlay_shards(self.shards);
         trainer.schedule_overlay_snapshots(self.horizon, self.sample_every)?;
         trainer.run(self.run_end(&events), self.sample_every)?;
         let (cache_hits, cache_misses) = trainer.neighbor_cache_stats();
@@ -645,6 +665,9 @@ impl ScenarioSpec {
         let min_live = int_key(doc, "scenario.min_live")?
             .map(|v| v as usize)
             .unwrap_or_else(|| (initial / 2).max(2));
+        let shards = int_key(doc, "scenario.shards")?
+            .map(|v| v as usize)
+            .unwrap_or(1);
         let overlay = OverlayConfig {
             spaces: int_key(doc, "overlay.spaces")?
                 .map(|v| v as usize)
@@ -746,6 +769,7 @@ impl ScenarioSpec {
             sample_every,
             settle,
             min_live,
+            shards,
             overlay,
             net,
             phases,
@@ -766,6 +790,7 @@ impl ScenarioSpec {
         s.push_str(&format!("sample_every_ms = {}\n", self.sample_every / MS));
         s.push_str(&format!("settle_ms = {}\n", self.settle / MS));
         s.push_str(&format!("min_live = {}\n", self.min_live));
+        s.push_str(&format!("shards = {}\n", self.shards));
         s.push_str("\n[overlay]\n");
         s.push_str(&format!("spaces = {}\n", self.overlay.spaces));
         s.push_str(&format!("heartbeat_ms = {}\n", self.overlay.heartbeat_ms));
@@ -834,6 +859,7 @@ const SCALAR_KEYS: &[&str] = &[
     "scenario.sample_every_ms",
     "scenario.settle_ms",
     "scenario.min_live",
+    "scenario.shards",
     "overlay.spaces",
     "overlay.heartbeat_ms",
     "overlay.failure_multiple",
@@ -936,7 +962,7 @@ pub fn ideal_ring_snapshot(ids: &[NodeId], spaces: usize) -> NeighborSnapshot {
 /// Whether the simulator's ring views equal the ideal overlay of its
 /// live membership (stronger than correctness 1.0: no stale entries).
 pub fn ring_matches_ideal(sim: &Simulator) -> bool {
-    let live: Vec<NodeId> = sim.nodes.keys().copied().collect();
+    let live: Vec<NodeId> = sim.node_ids();
     sim.ring_snapshot() == ideal_ring_snapshot(&live, sim.cfg.spaces)
 }
 
@@ -1042,7 +1068,7 @@ impl ScenarioReport {
             counts,
             correctness: sim.samples.clone(),
             final_correctness: sim.correctness(),
-            live_nodes: sim.nodes.len(),
+            live_nodes: sim.live_count(),
             settled_at,
             ring: ring_quality(sim),
             control_messages_per_node: sim.control_messages_per_node(),
@@ -1380,7 +1406,7 @@ mod tests {
         spec.sample_every = 2 * SEC;
         spec.settle = 240 * SEC;
         let (sim, report) = spec.run_sim(None).expect("run");
-        assert_eq!(sim.nodes.len(), 40);
+        assert_eq!(sim.live_count(), 40);
         assert!(
             report.settled_at.is_some(),
             "join wave stuck at {}",

@@ -18,7 +18,7 @@
 
 use crate::ndmp::messages::Time;
 use std::cmp::Ordering;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Identifier of a scheduled event (its sequence number), used to cancel
 /// it before it fires. Ids are unique per scheduler and never reused.
@@ -58,15 +58,101 @@ impl<K> Ord for Scheduled<K> {
     }
 }
 
+/// Per-seq lifecycle flags as a pair of windowed bitmaps sharing one
+/// base offset. Sequence numbers are allocated monotonically, so the
+/// live ids cluster in a narrow moving window: one `pending` bit and one
+/// `cancelled` bit per seq in that window replace the two `HashSet<u64>`
+/// the scheduler used to rehash on every push/pop/cancel. The window's
+/// front advances (both deques pop a word, `base` bumps) whenever the
+/// front 64 seqs are fully resolved, so memory is bounded by the live
+/// seq *span*, not by history.
+///
+/// Invariant: any seq still physically in the heap has exactly one of
+/// its two bits set (pending until popped or cancelled; cancelled until
+/// its tombstone is reaped), so `base` can never advance past it.
+#[derive(Debug, Default)]
+struct SeqFlags {
+    /// Word index (seq >> 6) of the front of both deques.
+    base: u64,
+    pending: VecDeque<u64>,
+    cancelled: VecDeque<u64>,
+    live: usize,
+}
+
+impl SeqFlags {
+    #[inline]
+    fn split(&self, seq: u64) -> Option<(usize, u64)> {
+        let word = seq >> 6;
+        if word < self.base {
+            return None; // fully resolved window
+        }
+        Some(((word - self.base) as usize, 1u64 << (seq & 63)))
+    }
+
+    fn mark_pending(&mut self, seq: u64) {
+        let (idx, bit) = self.split(seq).expect("seq below resolved window");
+        if idx >= self.pending.len() {
+            self.pending.resize(idx + 1, 0);
+            self.cancelled.resize(idx + 1, 0);
+        }
+        debug_assert_eq!(self.pending[idx] & bit, 0, "seq pushed twice");
+        self.pending[idx] |= bit;
+        self.live += 1;
+    }
+
+    /// pending -> cancelled; `false` if the seq is not currently pending.
+    fn cancel(&mut self, seq: u64) -> bool {
+        let Some((idx, bit)) = self.split(seq) else {
+            return false;
+        };
+        if idx >= self.pending.len() || self.pending[idx] & bit == 0 {
+            return false;
+        }
+        self.pending[idx] &= !bit;
+        self.cancelled[idx] |= bit;
+        self.live -= 1;
+        true
+    }
+
+    #[inline]
+    fn is_cancelled(&self, seq: u64) -> bool {
+        match self.split(seq) {
+            Some((idx, bit)) => idx < self.cancelled.len() && self.cancelled[idx] & bit != 0,
+            None => false,
+        }
+    }
+
+    /// Resolve a seq that just left the heap (either popped live or
+    /// reaped as a tombstone), then let the window front advance past
+    /// fully-resolved words.
+    fn resolve(&mut self, seq: u64, was_cancelled: bool) {
+        let (idx, bit) = self.split(seq).expect("heap seq below resolved window");
+        if was_cancelled {
+            self.cancelled[idx] &= !bit;
+        } else {
+            debug_assert_ne!(self.pending[idx] & bit, 0);
+            self.pending[idx] &= !bit;
+            self.live -= 1;
+        }
+        while let (Some(&0), Some(&0)) = (self.pending.front(), self.cancelled.front()) {
+            self.pending.pop_front();
+            self.cancelled.pop_front();
+            self.base += 1;
+        }
+    }
+
+    /// Bitmap words currently held (both maps), for footprint assertions.
+    fn words(&self) -> usize {
+        self.pending.len() + self.cancelled.len()
+    }
+}
+
 /// Deterministic event queue over an arbitrary event-kind type.
 #[derive(Debug)]
 pub struct Scheduler<K> {
     heap: BinaryHeap<Scheduled<K>>,
     seq: u64,
-    /// Ids currently live in the heap (pushed, not yet popped/cancelled).
-    pending: HashSet<u64>,
-    /// Cancelled ids whose heap entries have not been reaped yet.
-    cancelled: HashSet<u64>,
+    flags: SeqFlags,
 }
 
 impl<K> Default for Scheduler<K> {
@@ -74,8 +160,7 @@ impl<K> Default for Scheduler<K> {
         Self {
             heap: BinaryHeap::new(),
             seq: 0,
-            pending: HashSet::new(),
-            cancelled: HashSet::new(),
+            flags: SeqFlags::default(),
         }
     }
 }
@@ -90,7 +175,19 @@ impl<K> Scheduler<K> {
     pub fn push(&mut self, at: Time, kind: K) -> EventId {
         let seq = self.seq;
         self.seq += 1;
-        self.pending.insert(seq);
+        self.flags.mark_pending(seq);
+        self.heap.push(Scheduled { at, seq, kind });
+        seq
+    }
+
+    /// Schedule with an externally-assigned sequence number (must be >=
+    /// every id this queue has handed out). The sharded engine routes
+    /// events from one *global* seq counter into per-shard queues, so
+    /// ties at equal timestamps still break in global emission order.
+    pub fn push_at_seq(&mut self, at: Time, seq: u64, kind: K) -> EventId {
+        assert!(seq >= self.seq, "seq {seq} reused (next is {})", self.seq);
+        self.seq = seq + 1;
+        self.flags.mark_pending(seq);
         self.heap.push(Scheduled { at, seq, kind });
         seq
     }
@@ -98,22 +195,18 @@ impl<K> Scheduler<K> {
     /// Cancel a pending event. Returns `true` if it was still pending;
     /// cancelling an already-fired or already-cancelled id is a no-op.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if self.pending.remove(&id) {
-            self.cancelled.insert(id);
-            true
-        } else {
-            false
-        }
+        id < self.seq && self.flags.cancel(id)
     }
 
     /// Pop the earliest live event (ties in push order), skipping
     /// cancelled tombstones. O(log n) amortized.
     pub fn pop(&mut self) -> Option<Scheduled<K>> {
         while let Some(e) = self.heap.pop() {
-            if self.cancelled.remove(&e.seq) {
+            if self.flags.is_cancelled(e.seq) {
+                self.flags.resolve(e.seq, true);
                 continue;
             }
-            self.pending.remove(&e.seq);
+            self.flags.resolve(e.seq, false);
             return Some(e);
         }
         None
@@ -122,27 +215,47 @@ impl<K> Scheduler<K> {
     /// Timestamp of the next live event without popping it. Reaps any
     /// cancelled tombstones sitting at the top of the heap.
     pub fn peek_time(&mut self) -> Option<Time> {
+        self.peek().map(|e| e.at)
+    }
+
+    /// The next live event without popping it (tombstones at the top are
+    /// reaped first). Lets batch loops inspect `(at, seq)` before
+    /// deciding whether to consume.
+    pub fn peek(&mut self) -> Option<&Scheduled<K>> {
         loop {
-            let (at, seq) = match self.heap.peek() {
+            let seq = match self.heap.peek() {
                 None => return None,
-                Some(e) => (e.at, e.seq),
+                Some(e) => e.seq,
             };
-            if self.cancelled.contains(&seq) {
+            if self.flags.is_cancelled(seq) {
                 self.heap.pop();
-                self.cancelled.remove(&seq);
+                self.flags.resolve(seq, true);
             } else {
-                return Some(at);
+                // borrow-checker two-phase: re-peek now that we keep it
+                return self.heap.peek();
             }
         }
     }
 
     /// Number of live (non-cancelled) pending events.
     pub fn len(&self) -> usize {
-        self.pending.len()
+        self.flags.live
     }
 
     pub fn is_empty(&self) -> bool {
-        self.pending.is_empty()
+        self.len() == 0
+    }
+
+    /// Next sequence number this queue would allocate.
+    pub fn next_seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Bytes of cancel/pending bookkeeping currently held. The windowed
+    /// bitmaps must stay proportional to the live seq span — the
+    /// footprint regression test pins this under sustained churn.
+    pub fn bookkeeping_bytes(&self) -> usize {
+        self.flags.words() * std::mem::size_of::<u64>()
     }
 }
 
@@ -347,6 +460,57 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn push_at_seq_orders_by_external_counter() {
+        let mut q: Scheduler<&'static str> = Scheduler::new();
+        q.push_at_seq(10, 5, "b");
+        q.push_at_seq(10, 9, "c");
+        // a plain push continues after the external counter
+        let id = q.push(10, "d");
+        assert_eq!(id, 10);
+        assert_eq!(q.len(), 3);
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|e| e.kind)).collect();
+        assert_eq!(order, vec!["b", "c", "d"]);
+        assert_eq!(q.next_seq(), 11);
+    }
+
+    #[test]
+    fn peek_matches_next_pop_and_reaps_tombstones() {
+        let mut q: Scheduler<u32> = Scheduler::new();
+        let a = q.push(5, 1);
+        q.push(7, 2);
+        assert!(q.cancel(a));
+        {
+            let e = q.peek().expect("live event");
+            assert_eq!((e.at, e.kind), (7, 2));
+        }
+        let e = q.pop().unwrap();
+        assert_eq!((e.at, e.kind), (7, 2));
+        assert!(q.peek().is_none());
+    }
+
+    #[test]
+    fn bookkeeping_stays_bounded_by_live_span() {
+        let mut q: Scheduler<u64> = Scheduler::new();
+        for i in 0..100_000u64 {
+            q.push(i as Time, i);
+            if i % 5 == 0 {
+                q.cancel(i); // keep the cancelled map exercised too
+            }
+            if i >= 8 {
+                q.pop();
+            }
+        }
+        // 100k events flowed through, but the live window only ever
+        // holds a handful of seqs: the bitmaps must not grow with
+        // history the way the old HashSets' capacity did.
+        assert!(
+            q.bookkeeping_bytes() <= 64,
+            "bookkeeping grew to {} bytes",
+            q.bookkeeping_bytes()
+        );
     }
 
     #[test]

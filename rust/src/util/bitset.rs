@@ -47,6 +47,34 @@ impl BitSet {
     pub fn clear_all(&mut self) {
         self.words.fill(0);
     }
+
+    /// Grow to at least `len` bits (new bits are zero). Shrinking is a
+    /// no-op — the arena that uses this never reuses a slot index for a
+    /// smaller universe.
+    pub fn grow(&mut self, len: usize) {
+        if len > self.len {
+            self.len = len;
+            self.words.resize(len.div_ceil(64), 0);
+        }
+    }
+
+    /// Indices of set bits, ascending. Skips zero words wholesale, so
+    /// sparse sets (e.g. an arena after a mass departure) iterate in
+    /// O(words + ones) rather than O(len).
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            let mut w = word;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let bit = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some((wi << 6) | bit)
+                }
+            })
+        })
+    }
 }
 
 #[cfg(test)]
@@ -67,5 +95,31 @@ mod tests {
         assert_eq!(b.count_ones(), 2);
         b.clear_all();
         assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn iter_ones_walks_set_bits_ascending() {
+        let mut b = BitSet::new(200);
+        for i in [0usize, 1, 63, 64, 127, 130, 199] {
+            b.set(i);
+        }
+        let ones: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(ones, vec![0, 1, 63, 64, 127, 130, 199]);
+        b.clear_all();
+        assert_eq!(b.iter_ones().count(), 0);
+    }
+
+    #[test]
+    fn grow_preserves_bits_and_zeroes_new_range() {
+        let mut b = BitSet::new(10);
+        b.set(3);
+        b.set(9);
+        b.grow(200);
+        assert_eq!(b.len(), 200);
+        assert!(b.get(3) && b.get(9) && !b.get(10) && !b.get(199));
+        b.set(199);
+        assert_eq!(b.count_ones(), 3);
+        b.grow(50); // shrink request is a no-op
+        assert_eq!(b.len(), 200);
     }
 }

@@ -121,7 +121,7 @@ fn graceful_leave_wave_stays_correct() {
     sim.run_until(12_000 * MS);
     let t = sim.run_until_correct(1.0, 120_000 * MS, 1_000 * MS);
     assert!(t.is_some(), "leaves broke the network: {}", sim.correctness());
-    assert_eq!(sim.nodes.len(), 35);
+    assert_eq!(sim.live_count(), 35);
 }
 
 /// Failure detection time scales with the heartbeat budget: with
@@ -156,7 +156,7 @@ fn simulation_is_reproducible() {
         churn::sample_correctness(&mut sim, 60_000 * MS, 2_000 * MS);
         sim.run_until(60_000 * MS);
         let series: Vec<(u64, f64)> = sim.samples.iter().map(|s| (s.at, s.correctness)).collect();
-        (series, sim.delivered, sim.nodes.len())
+        (series, sim.delivered, sim.live_count())
     };
     assert_eq!(run(5), run(5));
     let (a, ..) = run(5);

@@ -69,6 +69,7 @@ fn random_spec(seed: u64) -> ScenarioSpec {
         sample_every: 0,
         settle: 0,
         min_live: (initial / 2).max(4),
+        shards: 1,
         overlay: OverlayConfig {
             spaces,
             heartbeat_ms: 500,
@@ -103,7 +104,7 @@ fn check(spec: &ScenarioSpec) -> Result<(), String> {
             "no quiescence by t={}s: correctness {:.4}, {} live",
             sim.now / SEC,
             sim.correctness(),
-            sim.nodes.len()
+            sim.live_count()
         ));
     }
 
@@ -122,7 +123,7 @@ fn check(spec: &ScenarioSpec) -> Result<(), String> {
             }
         }
     }
-    let live: BTreeSet<NodeId> = sim.nodes.keys().copied().collect();
+    let live: BTreeSet<NodeId> = sim.node_ids().into_iter().collect();
     if live != expected {
         let lost: Vec<_> = expected.difference(&live).collect();
         let zombies: Vec<_> = live.difference(&expected).collect();

@@ -1,12 +1,14 @@
-//! 10,000-client scale: a `PoissonChurn` scenario driving the *full*
-//! unified trainer (frozen training, real NDMP overlay, real MEP
-//! aggregation paths) on the in-memory transport. Exercises the
+//! 10,000- and 100,000-client scale: `PoissonChurn` scenarios driving
+//! the *full* unified trainer (frozen training, real NDMP overlay, real
+//! MEP aggregation paths) on the in-memory transport. Exercises the
 //! neighbor-set cache (`Trainer::neighbor_cache_stats`) that makes
 //! `Neighborhood::Dynamic` tractable at this scale, the batch
-//! Definition-1 ideal computation, and the O(L·n log n) bootstrap.
+//! Definition-1 ideal computation, the O(L·n log n) bootstrap, and — at
+//! 100k — the sharded event engine (`Simulator::set_shards`,
+//! docs/perf.md) plus the O(live-set) footprint guarantees.
 //!
-//! Ignored under plain `cargo test` (it is a release-mode budget test,
-//! < 120 s); CI runs it explicitly:
+//! Ignored under plain `cargo test` (they are release-mode budget
+//! tests); CI runs them explicitly under `timeout`:
 //!   cargo test --release --test scenario_scale -- --ignored
 
 use fedlay::config::{DflConfig, NetConfig, OverlayConfig};
@@ -43,6 +45,7 @@ fn poisson_churn_scenario_scales_to_10k_clients() -> anyhow::Result<()> {
         sample_every: 30 * MIN, // endpoints only: eval cost, not protocol
         settle: 0,
         min_live: n / 2,
+        shards: 1,
         overlay: overlay.clone(),
         net: net.clone(),
         phases: vec![Phase {
@@ -112,6 +115,110 @@ fn poisson_churn_scenario_scales_to_10k_clients() -> anyhow::Result<()> {
     assert!(
         settled.is_some(),
         "10k overlay did not quiesce: correctness {:.4}",
+        sim.correctness()
+    );
+    Ok(())
+}
+
+/// The ROADMAP north star: 100k clients through the full trainer over
+/// the 16-shard event engine. Maintenance timers slow by another 2x
+/// against the 10k pin (the protocol load per virtual minute is 10x),
+/// sampling is endpoints-only, and training is frozen — protocol,
+/// exchange, fingerprinting, and aggregation all run for real.
+#[test]
+#[ignore = "100k-client release-mode scale run; CI invokes it explicitly"]
+fn poisson_churn_scenario_scales_to_100k_clients_sharded() -> anyhow::Result<()> {
+    let n = 100_000usize;
+    let overlay = OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 60_000,
+        failure_multiple: 3,
+        repair_probe_ms: 120_000,
+    };
+    let net = NetConfig {
+        latency_ms: 100.0,
+        jitter: 0.1,
+        seed: 73,
+    };
+    let spec = ScenarioSpec {
+        name: "poisson-100k".into(),
+        initial: n,
+        seed: 73,
+        horizon: 15 * MIN,
+        sample_every: 15 * MIN, // endpoints only: eval cost, not protocol
+        settle: 0,
+        min_live: n / 2,
+        shards: 16,
+        overlay: overlay.clone(),
+        net: net.clone(),
+        phases: vec![Phase {
+            at: MIN,
+            kind: PhaseKind::PoissonChurn {
+                join_per_min: 8.0,
+                fail_per_min: 5.0,
+                leave_per_min: 3.0,
+                window: 5 * MIN,
+            },
+        }],
+    };
+    let events = spec.compile();
+    let joins = events
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    assert!(joins > 0, "scenario scheduled no joins");
+
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let cfg = DflConfig {
+        task: "mlp".into(),
+        clients: n,
+        local_steps: 1,
+        seed: 73,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(n + joins, 10, cfg.shards_per_client, cfg.seed);
+    let mut trainer = Trainer::new(
+        &engine,
+        MethodSpec::fedlay_dynamic(overlay, net),
+        cfg,
+        weights[..n].to_vec(),
+    )?;
+    trainer.freeze_training = true;
+
+    let report = spec.run_trainer(&mut trainer, |id| weights[id].clone())?;
+
+    assert_eq!(
+        report.live_nodes,
+        n + report.counts.joins - report.counts.fails - report.counts.leaves,
+        "lost or zombie overlay members"
+    );
+    assert!(report.accuracy.iter().all(|(_, a)| a.is_finite()));
+    assert!(
+        report.cache_hits > report.cache_misses,
+        "cache not effective: {} hits / {} misses",
+        report.cache_hits,
+        report.cache_misses
+    );
+
+    // O(live-set) guarantees at scale: departed nodes fold into scalar
+    // tallies and recycled arena slots never exceed the peak live set
+    let sim = trainer.overlay.as_mut().expect("dynamic overlay state");
+    let fp = sim.footprint();
+    assert_eq!(fp.retired_nodes, (report.counts.fails + report.counts.leaves) as u64);
+    assert!(
+        fp.arena_slots <= n + report.counts.joins,
+        "arena slots {} exceed peak possible live set",
+        fp.arena_slots
+    );
+
+    // repair budget: failure detection is 3 silent 60 s heartbeats, so
+    // allow a generous post-horizon window to reach the exact ideal rings
+    let deadline = sim.now + 40 * MIN;
+    let settled = quiesce(sim, deadline, 2 * MIN);
+    assert!(
+        settled.is_some(),
+        "100k overlay did not quiesce: correctness {:.4}",
         sim.correctness()
     );
     Ok(())

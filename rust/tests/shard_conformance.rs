@@ -1,0 +1,232 @@
+//! Shard-determinism conformance: a K-shard run of the discrete-event
+//! engine must be *bitwise-identical* to the serial K=1 run. Sharding is
+//! a wall-clock knob, never a semantics knob — every observable (the
+//! golden trajectory lines, the final ring snapshot, the delivery and
+//! control counters) has to match exactly, because the merge barrier
+//! replays global effects in producer-seq order (docs/perf.md).
+//!
+//! Alongside the determinism battery sits the live-state footprint
+//! regression: under long churn the engine's memory must stay bounded by
+//! the *peak live set* (arena slot recycling) plus small scheduler
+//! bookkeeping, never by churn history (retired nodes fold into scalar
+//! tallies).
+
+use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::ndmp::messages::{MS, SEC};
+use fedlay::sim::{ChurnCounts, Phase, PhaseKind, ScenarioSpec};
+use fedlay::topology::NeighborSnapshot;
+use fedlay::util::Rng;
+use std::path::PathBuf;
+
+/// Run `spec` with `k` shards; return every observable the battery pins.
+fn observables(spec: &ScenarioSpec, k: usize) -> (String, NeighborSnapshot, u64, f64) {
+    let mut s = spec.clone();
+    s.shards = k;
+    let (sim, report) = s.run_sim(None).expect("scenario run");
+    let per_node = sim.control_messages_per_node();
+    (report.golden_lines(), sim.snapshot(), sim.delivered, per_node)
+}
+
+fn assert_identical(spec: &ScenarioSpec, ks: &[usize]) {
+    let baseline = observables(spec, 1);
+    for &k in ks {
+        let got = observables(spec, k);
+        assert_eq!(got.0, baseline.0, "{}: golden lines diverged at K={k}", spec.name);
+        assert_eq!(got.1, baseline.1, "{}: ring snapshot diverged at K={k}", spec.name);
+        assert_eq!(got.2, baseline.2, "{}: delivery count diverged at K={k}", spec.name);
+        assert_eq!(got.3, baseline.3, "{}: control tally diverged at K={k}", spec.name);
+    }
+}
+
+/// The pinned CI scenario (non-zero latency, join wave + crash burst)
+/// at K = 4 and K = 16 — including K > live nodes in some arcs.
+#[test]
+fn latency_mix_is_bitwise_identical_across_shard_counts() {
+    let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..");
+    let spec =
+        ScenarioSpec::load(&root.join("configs/scenarios/latency_mix.toml")).expect("scenario");
+    assert_identical(&spec, &[4, 16]);
+}
+
+/// Random small scenario for the property sweep: mixed churn phases at
+/// CI-friendly sizes (mirrors scenario_properties::random_spec).
+fn random_spec(seed: u64) -> ScenarioSpec {
+    let mut rng = Rng::new(seed ^ 0x51A2D);
+    let initial = 12 + rng.index(10);
+    let n_phases = 1 + rng.index(3);
+    let mut phases = Vec::new();
+    for p in 0..n_phases as u64 {
+        let at = (2 + 5 * p) * SEC + rng.index(1500) as u64 * MS;
+        let kind = match rng.index(5) {
+            0 => PhaseKind::MassJoin {
+                count: 2 + rng.index(4),
+            },
+            1 => PhaseKind::MassFail {
+                count: 2 + rng.index(3),
+            },
+            2 => PhaseKind::MassLeave {
+                count: 2 + rng.index(3),
+            },
+            3 => PhaseKind::FlashCrowd {
+                count: 2 + rng.index(3),
+                dwell: (4 + rng.index(6) as u64) * SEC,
+            },
+            _ => PhaseKind::PoissonChurn {
+                join_per_min: 2.0 + rng.next_f64() * 5.0,
+                fail_per_min: 1.0 + rng.next_f64() * 3.0,
+                leave_per_min: rng.next_f64(),
+                window: (8 + rng.index(8) as u64) * SEC,
+            },
+        };
+        phases.push(Phase { at, kind });
+    }
+    ScenarioSpec {
+        name: format!("shard-prop-{seed}"),
+        initial,
+        seed,
+        horizon: 25 * SEC,
+        sample_every: 5 * SEC,
+        settle: 0,
+        min_live: 4,
+        shards: 1,
+        overlay: OverlayConfig {
+            spaces: 2 + rng.index(2),
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        },
+        net: NetConfig {
+            latency_ms: 40.0 + rng.next_f64() * 100.0,
+            jitter: 0.2,
+            seed,
+        },
+        phases,
+    }
+}
+
+/// Property sweep: random specs × random shard counts, every observable
+/// identical to the serial run.
+#[test]
+fn property_random_specs_identical_for_random_shard_counts() {
+    for seed in 0..6u64 {
+        let spec = random_spec(seed);
+        let mut rng = Rng::new(seed ^ 0xC0DE);
+        let ks = [2 + rng.index(7), 2 + rng.index(15)];
+        assert_identical(&spec, &ks);
+    }
+}
+
+/// Deterministic slot-recycling bound: six alternating join/fail waves
+/// churn 3x the initial population through the overlay, but live
+/// membership never exceeds `initial + wave`, so the arena must never
+/// allocate past that peak (plus nothing — slots are recycled exactly).
+#[test]
+fn arena_slots_are_bounded_by_peak_live_set_under_wave_churn() {
+    let initial = 24;
+    let wave = 20;
+    let mut phases = Vec::new();
+    for w in 0..3u64 {
+        phases.push(Phase {
+            at: (5 + 40 * w) * SEC,
+            kind: PhaseKind::MassJoin { count: wave },
+        });
+        phases.push(Phase {
+            at: (25 + 40 * w) * SEC,
+            kind: PhaseKind::MassFail { count: wave },
+        });
+    }
+    let spec = ScenarioSpec {
+        name: "wave-footprint".into(),
+        initial,
+        seed: 7,
+        horizon: 125 * SEC,
+        sample_every: 0,
+        settle: 0,
+        min_live: 4,
+        shards: 4,
+        overlay: OverlayConfig {
+            spaces: 2,
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        },
+        net: NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.2,
+            seed: 7,
+        },
+        phases,
+    };
+    let (sim, report) = spec.run_sim(None).expect("scenario run");
+    assert_eq!(report.counts.joins, 3 * wave);
+    assert_eq!(report.counts.fails, 3 * wave);
+    let fp = sim.footprint();
+    assert_eq!(fp.retired_nodes, (3 * wave) as u64, "every failed node retires");
+    assert!(
+        fp.arena_slots <= initial + wave,
+        "arena grew past the peak live set: {} slots for peak {} \
+         (slot recycling regressed to O(churn history))",
+        fp.arena_slots,
+        initial + wave
+    );
+    // retired counters fold into scalars, so the per-node tally still
+    // accounts for all 60 departed nodes without holding their state
+    assert!(sim.control_messages_per_node() > 0.0);
+}
+
+/// Long balanced Poisson churn: ~100 joins and ~100 fails stream through
+/// a 24-node overlay. Live membership is a bounded random walk, so the
+/// arena stays far below the churn volume, and scheduler bookkeeping
+/// (the windowed tombstone bitmaps) stays in the kilobytes.
+#[test]
+fn footprint_stays_bounded_under_long_poisson_churn() {
+    let spec = ScenarioSpec {
+        name: "poisson-footprint".into(),
+        initial: 24,
+        seed: 11,
+        horizon: 150 * SEC,
+        sample_every: 0,
+        settle: 0,
+        min_live: 4,
+        shards: 1,
+        overlay: OverlayConfig {
+            spaces: 2,
+            heartbeat_ms: 500,
+            failure_multiple: 3,
+            repair_probe_ms: 2_000,
+        },
+        net: NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.2,
+            seed: 11,
+        },
+        phases: vec![Phase {
+            at: 2 * SEC,
+            kind: PhaseKind::PoissonChurn {
+                join_per_min: 40.0,
+                fail_per_min: 40.0,
+                leave_per_min: 0.0,
+                window: 145 * SEC,
+            },
+        }],
+    };
+    let events = spec.compile();
+    let counts = ChurnCounts::of(&events);
+    assert!(counts.joins >= 60, "draw too small to exercise recycling");
+    let (sim, _report) = spec.run_sim(None).expect("scenario run");
+    let fp = sim.footprint();
+    assert_eq!(fp.retired_nodes, (counts.fails + counts.leaves) as u64);
+    // the walk-peak bound: churn volume is ~4x the initial population,
+    // but the live set only drifts by its random-walk excursion
+    assert!(
+        fp.arena_slots < spec.initial + (3 * counts.joins) / 4,
+        "arena slots {} approach churn volume {} (live-set bound lost)",
+        fp.arena_slots,
+        spec.initial + counts.joins
+    );
+    assert!(
+        fp.queue_bookkeeping_bytes < 256 * 1024,
+        "scheduler bookkeeping ballooned to {} bytes",
+        fp.queue_bookkeeping_bytes
+    );
+}

@@ -60,7 +60,7 @@ fn ideal_snapshot(ids: &[NodeId], spaces: usize) -> NeighborSnapshot {
 fn settle_exact(sim: &mut Simulator, deadline: Time) {
     loop {
         sim.run_until(sim.now + 2 * SEC);
-        let live: Vec<NodeId> = sim.nodes.keys().copied().collect();
+        let live: Vec<NodeId> = sim.node_ids();
         if sim.ring_snapshot() == ideal_snapshot(&live, sim.cfg.spaces) {
             return;
         }
@@ -101,8 +101,8 @@ fn sim_and_tcp_backends_agree_on_churn_schedule() {
     assert_eq!(tcp.backend(), "tcp");
 
     // identical final membership ...
-    let sim_ids: Vec<NodeId> = sim.nodes.keys().copied().collect();
-    let tcp_ids: Vec<NodeId> = tcp.nodes.keys().copied().collect();
+    let sim_ids: Vec<NodeId> = sim.node_ids();
+    let tcp_ids: Vec<NodeId> = tcp.node_ids();
     assert_eq!(sim_ids, tcp_ids, "backends disagree on live membership");
     assert_eq!(sim_ids.len(), 11); // 10 - fail - leave + 3 joins
 
@@ -143,6 +143,7 @@ fn scenario_with_leaves_agrees_on_both_backends() {
         sample_every: 0,
         settle: 0,
         min_live: 4,
+        shards: 1,
         overlay: overlay(),
         net: net(),
         phases: vec![
@@ -178,8 +179,8 @@ fn scenario_with_leaves_agrees_on_both_backends() {
 
     settle_exact(&mut sim, 420 * SEC);
     settle_exact(&mut tcp, 420 * SEC);
-    let sim_ids: Vec<NodeId> = sim.nodes.keys().copied().collect();
-    let tcp_ids: Vec<NodeId> = tcp.nodes.keys().copied().collect();
+    let sim_ids: Vec<NodeId> = sim.node_ids();
+    let tcp_ids: Vec<NodeId> = tcp.node_ids();
     assert_eq!(sim_ids, tcp_ids, "backends disagree on live membership");
     assert_eq!(sim_ids.len(), 10 + 2 - 3);
     assert!((sim.correctness() - 1.0).abs() < 1e-12, "sim not correct");
@@ -359,8 +360,8 @@ fn nonzero_latency_training_pins_arrivals_rings_and_accuracy() -> anyhow::Result
         let last = trainer.run(12 * MIN, 6 * MIN)?;
         assert!(last.mean_accuracy.is_finite());
         let sim = trainer.overlay.as_ref().expect("dynamic overlay state");
-        assert!(sim.nodes.contains_key(&(n as NodeId)), "joiner missing");
-        assert!(!sim.nodes.contains_key(&1), "failed node still live");
+        assert!(sim.contains_node(n as NodeId), "joiner missing");
+        assert!(!sim.contains_node(1), "failed node still live");
         assert!(trainer.clients()[joiner].alive);
         assert!(!trainer.clients()[1].alive);
         let acc: Vec<(Time, f64)> = trainer
@@ -433,8 +434,8 @@ fn trainer_completes_fedlay_dyn_over_tcp() -> anyhow::Result<()> {
     assert!(!trainer.samples().is_empty());
     let sim = trainer.overlay.as_ref().expect("dynamic overlay state");
     assert_eq!(sim.backend(), "tcp");
-    assert!(sim.nodes.contains_key(&(n as NodeId)), "joiner missing");
-    assert!(!sim.nodes.contains_key(&1), "failed node still live");
+    assert!(sim.contains_node(n as NodeId), "joiner missing");
+    assert!(!sim.contains_node(1), "failed node still live");
     assert!(
         (sim.correctness() - 1.0).abs() < 1e-12,
         "overlay not repaired over TCP: correctness={}",

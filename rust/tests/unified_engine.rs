@@ -58,13 +58,13 @@ fn mid_training_join_wave_rewires_and_converges() -> anyhow::Result<()> {
 
     // (a) the protocol join wave rebuilt a correct overlay over all nodes
     let sim = t.overlay.as_ref().expect("dynamic overlay state");
-    assert_eq!(sim.nodes.len(), originals + joiners, "overlay lost joiners");
+    assert_eq!(sim.live_count(), originals + joiners, "overlay lost joiners");
     let c = sim.correctness();
     assert!(c > 0.999, "topology correctness after join wave: {c}");
     // every joiner is wired into the live learning topology
     for j in originals..originals + joiners {
         assert!(t.clients()[j].alive);
-        let nbrs = sim.nodes[&(j as u64)].ring_neighbor_ids();
+        let nbrs = sim.node(j as u64).unwrap().ring_neighbor_ids();
         assert!(!nbrs.is_empty(), "joiner {j} has no overlay neighbors");
         assert!(
             nbrs.len() <= 2 * overlay().spaces,
@@ -111,7 +111,7 @@ fn failures_rewire_the_learning_topology() -> anyhow::Result<()> {
     t.schedule_fail(20 * MIN, 7);
     t.run(90 * MIN, 45 * MIN)?;
     let sim = t.overlay.as_ref().unwrap();
-    assert_eq!(sim.nodes.len(), n - 2);
+    assert_eq!(sim.live_count(), n - 2);
     assert!(!t.clients()[3].alive && !t.clients()[7].alive);
     let c = sim.correctness();
     assert!(c > 0.999, "overlay not repaired after failures: {c}");
