@@ -44,6 +44,7 @@ fn net() -> NetConfig {
         latency_ms: 350.0,
         jitter: 0.2,
         seed: 8,
+        ..NetConfig::default()
     }
 }
 

@@ -119,6 +119,9 @@ USAGE:
                                    [--freeze] [--task mlp]
                                    [--tasks <tasks.toml>]
                                    [--latency-ms L] [--jitter J]
+                                   [--bandwidth-mbps B] [--loss P]
+                                   [--node-up-mbps U] [--node-down-mbps D]
+                                   [--compression none|q8|topk:<keep>]
   fedlay scenario show <spec.toml>
                   (declarative churn scenarios — TOML format in
                    docs/scenarios.md, examples under configs/scenarios/;
@@ -134,18 +137,25 @@ USAGE:
                   [--joins J] [--fails F] [--churn-at-min T]
                   [--transport sim|tcp]
                   [--latency-ms L] [--jitter J]
+                  [--bandwidth-mbps B] [--loss P]
+                  [--node-up-mbps U] [--node-down-mbps D]
+                  [--compression none|q8|topk:<keep>]
                   [--tasks <tasks.toml>]
                   (fedlay-dyn runs on the live NDMP overlay; --joins adds
                    J clients mid-run through the protocol join; --transport
                    tcp carries that overlay's messages over real localhost
                    sockets instead of the in-memory simulated network —
-                   with the same seeded virtual link latency on either
-                   backend, overridable via --latency-ms/--jitter
-                   (docs/transports.md); --tasks runs the multi-task
+                   with the same seeded virtual link model on either
+                   backend: latency + jitter, per-link bandwidth, frame
+                   loss and per-node capacity, overridable via the net
+                   flags above (docs/transports.md); --compression sends
+                   model payloads quantized (q8) or top-k sparsified
+                   instead of dense f32; --tasks runs the multi-task
                    engine — N model tasks from a TOML spec,
                    docs/multitask.md, over one shared overlay, one
                    accuracy column per task)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
+                  [--compression none|q8|topk:<keep>]
                   (one real TCP client; spawn several for a live network)
   fedlay bench    [--quick] [--out <dir>]
                   (perf micro-suite over routing, event queue, sharded

@@ -35,6 +35,19 @@ pub struct NetConfig {
     pub latency_ms: f64,
     /// Latency jitter fraction (exponential tail added to the mean).
     pub jitter: f64,
+    /// Mean per-directed-link capacity in Mbit/s; transfer time grows
+    /// with payload bytes. `0` = infinite bandwidth (latency-only model,
+    /// the pre-link-model behavior).
+    pub bandwidth_mbps: f64,
+    /// Independent per-frame loss probability in `[0, 1)`; a lost frame
+    /// is silently dropped by both backends. `0` = lossless.
+    pub loss: f64,
+    /// Per-node uplink capacity in Mbit/s shared by all of a node's
+    /// concurrent sends (stragglers under fan-out). `0` = uncapped.
+    pub node_up_mbps: f64,
+    /// Per-node downlink capacity in Mbit/s shared by all of a node's
+    /// concurrent receives. `0` = uncapped.
+    pub node_down_mbps: f64,
     pub seed: u64,
 }
 
@@ -43,8 +56,44 @@ impl Default for NetConfig {
         Self {
             latency_ms: 350.0,
             jitter: 0.2,
+            bandwidth_mbps: 0.0,
+            loss: 0.0,
+            node_up_mbps: 0.0,
+            node_down_mbps: 0.0,
             seed: 7,
         }
+    }
+}
+
+impl NetConfig {
+    /// Validate the link-model fields (shared by `Config::validate`,
+    /// `ScenarioSpec::validate`, and the CLI flag overrides).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.latency_ms.is_finite() && self.latency_ms >= 0.0,
+            "net.latency_ms must be a finite value >= 0"
+        );
+        anyhow::ensure!(
+            self.jitter.is_finite() && self.jitter >= 0.0,
+            "net.jitter must be a finite value >= 0"
+        );
+        anyhow::ensure!(
+            self.bandwidth_mbps.is_finite() && self.bandwidth_mbps >= 0.0,
+            "net.bandwidth_mbps must be a finite value >= 0 (0 = uncapped)"
+        );
+        anyhow::ensure!(
+            self.loss.is_finite() && (0.0..1.0).contains(&self.loss),
+            "net.loss must be a probability in [0, 1)"
+        );
+        anyhow::ensure!(
+            self.node_up_mbps.is_finite() && self.node_up_mbps >= 0.0,
+            "net.node_up_mbps must be a finite value >= 0 (0 = uncapped)"
+        );
+        anyhow::ensure!(
+            self.node_down_mbps.is_finite() && self.node_down_mbps >= 0.0,
+            "net.node_down_mbps must be a finite value >= 0 (0 = uncapped)"
+        );
+        Ok(())
     }
 }
 
@@ -152,6 +201,10 @@ impl Config {
             net: NetConfig {
                 latency_ms: d_f64(doc, "net.latency_ms", nd.latency_ms),
                 jitter: d_f64(doc, "net.jitter", nd.jitter),
+                bandwidth_mbps: d_f64(doc, "net.bandwidth_mbps", nd.bandwidth_mbps),
+                loss: d_f64(doc, "net.loss", nd.loss),
+                node_up_mbps: d_f64(doc, "net.node_up_mbps", nd.node_up_mbps),
+                node_down_mbps: d_f64(doc, "net.node_down_mbps", nd.node_down_mbps),
                 seed: d_u64(doc, "net.seed", nd.seed),
             },
             dfl: DflConfig {
@@ -199,14 +252,7 @@ impl Config {
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
         anyhow::ensure!(self.overlay.heartbeat_ms > 0, "heartbeat must be positive");
-        anyhow::ensure!(
-            self.net.latency_ms.is_finite() && self.net.latency_ms >= 0.0,
-            "net.latency_ms must be a finite value >= 0"
-        );
-        anyhow::ensure!(
-            self.net.jitter.is_finite() && self.net.jitter >= 0.0,
-            "net.jitter must be a finite value >= 0"
-        );
+        self.net.validate()?;
         anyhow::ensure!(self.dfl.clients >= 1, "dfl.clients must be >= 1");
         anyhow::ensure!(self.dfl.lr > 0.0, "dfl.lr must be positive");
         anyhow::ensure!(
@@ -271,5 +317,35 @@ mod tests {
         // one saturates to u64::MAX µs and corrupts virtual time
         assert!(Config::load(None, &["net.latency_ms=-1".into()]).is_err());
         assert!(Config::load(None, &["net.jitter=-0.5".into()]).is_err());
+        // link-model fields: probabilities and capacities bounded
+        assert!(Config::load(None, &["net.loss=1.0".into()]).is_err());
+        assert!(Config::load(None, &["net.loss=-0.1".into()]).is_err());
+        assert!(Config::load(None, &["net.bandwidth_mbps=-5".into()]).is_err());
+        assert!(Config::load(None, &["net.node_up_mbps=-1".into()]).is_err());
+        assert!(Config::load(None, &["net.node_down_mbps=-1".into()]).is_err());
+    }
+
+    #[test]
+    fn link_model_fields_parse_and_default_off() {
+        let cfg = Config::load(
+            None,
+            &[
+                "net.bandwidth_mbps=20".into(),
+                "net.loss=0.05".into(),
+                "net.node_up_mbps=10".into(),
+                "net.node_down_mbps=40".into(),
+            ],
+        )
+        .unwrap();
+        assert_eq!(cfg.net.bandwidth_mbps, 20.0);
+        assert_eq!(cfg.net.loss, 0.05);
+        assert_eq!(cfg.net.node_up_mbps, 10.0);
+        assert_eq!(cfg.net.node_down_mbps, 40.0);
+        // defaults leave the link model disabled (latency-only behavior)
+        let d = NetConfig::default();
+        assert_eq!(d.bandwidth_mbps, 0.0);
+        assert_eq!(d.loss, 0.0);
+        assert_eq!(d.node_up_mbps, 0.0);
+        assert_eq!(d.node_down_mbps, 0.0);
     }
 }

@@ -5,8 +5,105 @@
 
 use crate::baselines;
 use crate::graph::Graph;
+use crate::mep::{densify_topk, dequantize_q8, quantize_q8, sparsify_topk};
 use crate::topology::fedlay_graph;
 use crate::util::Rng;
+
+/// How MEP model payloads travel between clients (paper §V comm-cost
+/// study): dense f32, per-tensor i8 quantization, or top-k magnitude
+/// sparsification. The trainer round-trips every pulled neighbor model
+/// through the scheme (so learning sees exactly the wire-surviving
+/// parameters) and charges the compressed byte count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Compression {
+    /// Dense f32 parameters — 4 bytes each, bit-exact (the default; all
+    /// pre-existing behavior).
+    None,
+    /// Symmetric per-tensor i8 quantization (`mep::quantize_q8`):
+    /// ~1 byte per parameter, ~4× fewer bytes than dense.
+    Q8,
+    /// Keep only the `keep` fraction of largest-magnitude parameters
+    /// (`mep::sparsify_topk`): ~8 bytes per kept entry.
+    TopK {
+        /// Fraction of entries kept, in (0, 1].
+        keep: f64,
+    },
+}
+
+impl Compression {
+    /// Parse a CLI/scenario flag: `none`, `q8`, or `topk:<keep>` (e.g.
+    /// `topk:0.1` keeps the top 10% of entries).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "none" => Ok(Compression::None),
+            "q8" => Ok(Compression::Q8),
+            _ => {
+                if let Some(frac) = s.strip_prefix("topk:") {
+                    let keep: f64 = frac
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad top-k fraction {frac:?}"))?;
+                    anyhow::ensure!(
+                        keep > 0.0 && keep <= 1.0,
+                        "top-k keep fraction must be in (0, 1], got {keep}"
+                    );
+                    Ok(Compression::TopK { keep })
+                } else {
+                    anyhow::bail!("unknown compression {s:?} (none | q8 | topk:<keep>)")
+                }
+            }
+        }
+    }
+
+    /// How many entries a top-k scheme keeps of a `dim`-vector (at least
+    /// one, so a nonzero model never compresses to nothing).
+    pub fn kept(&self, dim: usize) -> usize {
+        match self {
+            Compression::TopK { keep } => {
+                (((dim as f64) * keep).ceil() as usize).clamp(1, dim.max(1))
+            }
+            _ => dim,
+        }
+    }
+
+    /// Model-parameter payload bytes for a `dim`-vector under this
+    /// scheme. `None` charges exactly the dense `4 * dim` the trainer
+    /// always charged, so existing byte accounting is unchanged.
+    pub fn payload_bytes(&self, dim: usize) -> u64 {
+        match self {
+            Compression::None => 4 * dim as u64,
+            // levels + the f32 scale
+            Compression::Q8 => dim as u64 + 4,
+            // u32 index + f32 value per kept entry, + the u32 dense dim
+            Compression::TopK { .. } => 8 * self.kept(dim) as u64 + 4,
+        }
+    }
+
+    /// Round-trip a parameter vector through the wire scheme: what the
+    /// receiver reconstructs from the compressed payload. Identity for
+    /// `None` (no copy-drift: callers get the same values back).
+    pub fn roundtrip(&self, params: &[f32]) -> Vec<f32> {
+        match self {
+            Compression::None => params.to_vec(),
+            Compression::Q8 => {
+                let (scale, levels) = quantize_q8(params);
+                dequantize_q8(scale, &levels)
+            }
+            Compression::TopK { .. } => {
+                let (indices, values) = sparsify_topk(params, self.kept(params.len()));
+                densify_topk(params.len(), &indices, &values)
+            }
+        }
+    }
+
+    /// Short label for reports (`none`, `q8`, `topk10`).
+    pub fn label(&self) -> String {
+        match self {
+            Compression::None => "none".into(),
+            Compression::Q8 => "q8".into(),
+            Compression::TopK { keep } => format!("topk{}", (keep * 100.0).round() as u64),
+        }
+    }
+}
 
 /// Who aggregates with whom at each exchange.
 #[derive(Debug, Clone)]
@@ -40,15 +137,30 @@ pub struct MethodSpec {
     pub confidence: bool,
     /// Asynchronous per-client periods (false = global synchronous rounds).
     pub asynchronous: bool,
+    /// Model-payload wire scheme (`Compression::None` = dense f32, the
+    /// historical behavior of every constructor).
+    pub compression: Compression,
 }
 
 impl MethodSpec {
+    /// Same method, exchanging compressed model payloads: pulled models
+    /// are round-tripped through `compression` and byte accounting
+    /// charges the compressed size.
+    pub fn with_compression(mut self, compression: Compression) -> Self {
+        self.compression = compression;
+        if compression != Compression::None {
+            self.name = format!("{}+{}", self.name, compression.label());
+        }
+        self
+    }
+
     pub fn fedlay(n: usize, spaces: usize) -> Self {
         Self {
             name: format!("fedlay-L{spaces}"),
             neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
             confidence: true,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 
@@ -64,6 +176,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Dynamic { overlay, net },
             confidence: true,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 
@@ -81,6 +194,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Dynamic { overlay, net },
             confidence: true,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 
@@ -91,6 +205,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Static(g),
             confidence: true,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 
@@ -101,6 +216,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
             confidence: false,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 
@@ -111,6 +227,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Static(fedlay_graph(n, spaces)),
             confidence: true,
             asynchronous: false,
+            compression: Compression::None,
         }
     }
 
@@ -120,6 +237,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Static(baselines::chord(n)),
             confidence: false,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 
@@ -133,6 +251,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Static(baselines::complete(n)),
             confidence: false,
             asynchronous: false,
+            compression: Compression::None,
         }
     }
 
@@ -142,6 +261,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Star,
             confidence: false,
             asynchronous: false, // central rounds are synchronous
+            compression: Compression::None,
         }
     }
 
@@ -153,6 +273,7 @@ impl MethodSpec {
             neighborhood: Neighborhood::Regions { assignment, regions },
             confidence: false,
             asynchronous: false,
+            compression: Compression::None,
         }
     }
 
@@ -166,6 +287,7 @@ impl MethodSpec {
             },
             confidence: false,
             asynchronous: true,
+            compression: Compression::None,
         }
     }
 }
@@ -251,6 +373,53 @@ mod tests {
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn compression_parses_sizes_and_labels() {
+        assert_eq!(Compression::parse("none").unwrap(), Compression::None);
+        assert_eq!(Compression::parse("q8").unwrap(), Compression::Q8);
+        assert_eq!(
+            Compression::parse("topk:0.1").unwrap(),
+            Compression::TopK { keep: 0.1 }
+        );
+        assert!(Compression::parse("topk:0").is_err());
+        assert!(Compression::parse("topk:1.5").is_err());
+        assert!(Compression::parse("zstd").is_err());
+        // byte accounting: None charges exactly the historical 4*dim
+        assert_eq!(Compression::None.payload_bytes(100), 400);
+        // q8 cuts bytes ~4x, topk:0.1 ~5x
+        assert!(Compression::Q8.payload_bytes(1000) * 3 < 4_000);
+        assert!(
+            Compression::TopK { keep: 0.1 }.payload_bytes(1000) * 4 < 4_000
+        );
+        // a tiny model still ships at least one entry
+        assert_eq!(Compression::TopK { keep: 0.01 }.kept(5), 1);
+        assert_eq!(Compression::Q8.label(), "q8");
+        assert_eq!(Compression::TopK { keep: 0.1 }.label(), "topk10");
+    }
+
+    #[test]
+    fn compression_roundtrip_shapes() {
+        let params = vec![1.0f32, -0.5, 0.25, 0.0, 2.0];
+        // None is the identity
+        assert_eq!(Compression::None.roundtrip(&params), params);
+        // Q8 keeps the shape, values within half a quantization step
+        let q = Compression::Q8.roundtrip(&params);
+        assert_eq!(q.len(), params.len());
+        let scale = 2.0 / 127.0;
+        for (p, b) in params.iter().zip(q.iter()) {
+            assert!((p - b).abs() <= scale * 0.5 + f32::EPSILON);
+        }
+        // TopK keeps the largest magnitudes exactly and zeroes the rest
+        let t = Compression::TopK { keep: 0.4 }.roundtrip(&params);
+        assert_eq!(t, vec![1.0, 0.0, 0.0, 0.0, 2.0]);
+        // spec naming records the scheme
+        let spec = MethodSpec::fedlay(10, 2).with_compression(Compression::Q8);
+        assert_eq!(spec.compression, Compression::Q8);
+        assert!(spec.name.ends_with("+q8"));
+        let plain = MethodSpec::fedlay(10, 2).with_compression(Compression::None);
+        assert!(!plain.name.contains('+'));
     }
 
     #[test]

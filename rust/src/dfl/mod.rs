@@ -14,6 +14,6 @@ pub mod multitask;
 pub mod trainer;
 
 pub use client::ClientState;
-pub use methods::{MethodSpec, Mobility, Neighborhood};
+pub use methods::{Compression, MethodSpec, Mobility, Neighborhood};
 pub use trainer::{AccuracySample, TaskData, TaskLane, TrainEvent, Trainer};
 pub mod harness;

@@ -36,7 +36,7 @@
 //! accuracy figure (Figs. 9–19) and the scalability study (Fig. 20).
 
 use super::client::ClientState;
-use super::methods::{MethodSpec, Mobility, Neighborhood};
+use super::methods::{Compression, MethodSpec, Mobility, Neighborhood};
 use crate::config::{DflConfig, TaskSpec};
 use crate::data::{CharStream, GaussianTask};
 use crate::mep::{aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams};
@@ -764,10 +764,12 @@ impl<'e> Trainer<'e> {
         snapshot: &[Vec<f32>],
     ) -> AggregationPlan {
         let task_key = task as u32;
+        let compression = self.spec.compression;
         let lane = &mut self.lanes[task];
         // i "pulls" each neighbor's latest model unless the fingerprint
-        // matches the last pull; the sender pays the payload bytes.
-        let p_bytes = (snapshot[i].len() * 4) as u64;
+        // matches the last pull; the sender pays the (possibly
+        // compressed) payload bytes.
+        let p_bytes = compression.payload_bytes(snapshot[i].len());
         for &j in nbrs {
             let fp = fingerprint(&snapshot[j]);
             if lane.clients[i].fingerprints.is_duplicate(j as u64, task_key, fp) {
@@ -804,12 +806,26 @@ impl<'e> Trainer<'e> {
         let plan = self.plan_aggregation(task, i, nbrs, snapshot);
         let engine = self.engine;
         let k_max = engine.manifest.k_max;
+        let compression = self.spec.compression;
         let lane = &self.lanes[task];
-        let models: Vec<&[f32]> = plan
-            .members
-            .iter()
-            .map(|&j| snapshot[j].as_slice())
-            .collect();
+        // neighbor models (members[1..]) arrive through the wire scheme;
+        // a client's own model (members[0]) never travels
+        let wire_models: Option<Vec<Vec<f32>>> = (compression != Compression::None).then(|| {
+            plan.members[1..]
+                .iter()
+                .map(|&j| compression.roundtrip(&snapshot[j]))
+                .collect()
+        });
+        let models: Vec<&[f32]> = match &wire_models {
+            Some(ws) => std::iter::once(snapshot[i].as_slice())
+                .chain(ws.iter().map(|v| v.as_slice()))
+                .collect(),
+            None => plan
+                .members
+                .iter()
+                .map(|&j| snapshot[j].as_slice())
+                .collect(),
+        };
         let new = if models.len() <= k_max {
             // hot path: the L1 Pallas kernel inside the agg artifact
             let (stack, w) = pack_for_artifact(&models, &plan.weights, k_max);
@@ -828,6 +844,7 @@ impl<'e> Trainer<'e> {
     /// Centralized FedAvg round: global average, broadcast to everyone
     /// (single-lane methods only).
     fn fedavg_round(&mut self) -> Result<()> {
+        let compression = self.spec.compression;
         let lane = &mut self.lanes[0];
         let models: Vec<&[f32]> = lane
             .clients
@@ -839,8 +856,9 @@ impl<'e> Trainer<'e> {
             return Ok(());
         }
         let weights = vec![1.0; models.len()];
-        let global = aggregate_cpu(&models, &weights);
-        let p_bytes = (global.len() * 4) as u64;
+        // the broadcast global model travels through the wire scheme too
+        let global = compression.roundtrip(&aggregate_cpu(&models, &weights));
+        let p_bytes = compression.payload_bytes(global.len());
         for c in lane.clients.iter_mut().filter(|c| c.alive) {
             c.params = global.clone();
             c.version += 1;
@@ -853,6 +871,7 @@ impl<'e> Trainer<'e> {
 
     /// Gaia round: average within each region, then across region servers.
     fn gaia_round(&mut self, assignment: &[usize], regions: usize) -> Result<()> {
+        let compression = self.spec.compression;
         let lane = &mut self.lanes[0];
         let mut region_models: Vec<Option<Vec<f32>>> = vec![None; regions];
         for (r, slot) in region_models.iter_mut().enumerate() {
@@ -873,8 +892,9 @@ impl<'e> Trainer<'e> {
             return Ok(());
         }
         let p = refs[0].len();
-        let global = aggregate_cpu(&refs, &vec![1.0; refs.len()]);
-        let p_bytes = (p * 4) as u64;
+        // the redistributed global model travels through the wire scheme
+        let global = compression.roundtrip(&aggregate_cpu(&refs, &vec![1.0; refs.len()]));
+        let p_bytes = compression.payload_bytes(p);
         let members_per_region = (lane.clients.len() / regions.max(1)).max(1) as u64;
         for c in lane.clients.iter_mut().filter(|c| c.alive) {
             c.params = global.clone();
@@ -1011,7 +1031,8 @@ impl<'e> Trainer<'e> {
             trained_params = Some(p);
         }
         let cur: &[f32] = trained_params.as_deref().unwrap_or(base);
-        let payload_bytes = (cur.len() * 4) as u64;
+        let compression = self.spec.compression;
+        let payload_bytes = compression.payload_bytes(cur.len());
         // MEP aggregation against the (stable) neighbor models
         let mut pulls = Vec::with_capacity(job.nbrs.len());
         let mut aggregated = false;
@@ -1034,9 +1055,23 @@ impl<'e> Trainer<'e> {
                 vec![1.0; hood.len()]
             };
             let cur = final_params.as_deref().unwrap_or(base);
-            let models: Vec<&[f32]> = std::iter::once(cur)
-                .chain(job.nbrs.iter().map(|&j| lane.clients[j].params.as_slice()))
-                .collect();
+            // neighbor models arrive through the wire scheme; the
+            // client's own model never travels
+            let wire_models: Option<Vec<Vec<f32>>> =
+                (compression != Compression::None).then(|| {
+                    job.nbrs
+                        .iter()
+                        .map(|&j| compression.roundtrip(&lane.clients[j].params))
+                        .collect()
+                });
+            let models: Vec<&[f32]> = match &wire_models {
+                Some(ws) => std::iter::once(cur)
+                    .chain(ws.iter().map(|v| v.as_slice()))
+                    .collect(),
+                None => std::iter::once(cur)
+                    .chain(job.nbrs.iter().map(|&j| lane.clients[j].params.as_slice()))
+                    .collect(),
+            };
             let k_max = self.engine.manifest.k_max;
             let new = if models.len() <= k_max {
                 let (stack, w) = pack_for_artifact(&models, &weights, k_max);

@@ -4,7 +4,7 @@ use fedlay::baselines;
 use fedlay::bench_util::{engine_suite, micro_suite, render_results, write_bench_json, Table};
 use fedlay::cli::{parse_args, Args, USAGE};
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
-use fedlay::dfl::{multitask, MethodSpec, Trainer};
+use fedlay::dfl::{multitask, Compression, MethodSpec, Trainer};
 use fedlay::ndmp::messages::MS;
 use fedlay::net::{spawn, ClientNodeConfig, SchedTransport};
 use fedlay::runtime::{find_artifacts_dir, Engine};
@@ -172,22 +172,25 @@ fn cmd_scenario(args: &Args) -> anyhow::Result<()> {
     }
 }
 
-/// Apply the `--latency-ms` / `--jitter` overrides. Both transport
-/// backends honor the resulting `NetConfig` — the in-memory network
-/// schedules deliveries with it, the TCP backend stamps the same
-/// per-link delays into its wire frames (docs/transports.md).
+/// Apply the link-model overrides (`--latency-ms`, `--jitter`,
+/// `--bandwidth-mbps`, `--loss`, `--node-up-mbps`, `--node-down-mbps`).
+/// Both transport backends honor the resulting `NetConfig` — the
+/// in-memory network schedules deliveries with it, the TCP backend
+/// stamps the same per-link delays into its wire frames and treats a
+/// loss-lottery hit as a deliberate non-send (docs/transports.md).
 fn apply_net_flags(args: &Args, net: &mut NetConfig) -> anyhow::Result<()> {
     net.latency_ms = args.f64("latency-ms", net.latency_ms)?;
     net.jitter = args.f64("jitter", net.jitter)?;
-    anyhow::ensure!(
-        net.latency_ms.is_finite() && net.latency_ms >= 0.0,
-        "--latency-ms must be a finite value >= 0"
-    );
-    anyhow::ensure!(
-        net.jitter.is_finite() && net.jitter >= 0.0,
-        "--jitter must be a finite value >= 0"
-    );
-    Ok(())
+    net.bandwidth_mbps = args.f64("bandwidth-mbps", net.bandwidth_mbps)?;
+    net.loss = args.f64("loss", net.loss)?;
+    net.node_up_mbps = args.f64("node-up-mbps", net.node_up_mbps)?;
+    net.node_down_mbps = args.f64("node-down-mbps", net.node_down_mbps)?;
+    net.validate()
+}
+
+/// Parse the `--compression none|q8|topk:<keep>` wire-scheme flag.
+fn compression_flag(args: &Args) -> anyhow::Result<Compression> {
+    Compression::parse(&args.str("compression", "none"))
 }
 
 fn scenario_transport(args: &Args, net: &NetConfig) -> anyhow::Result<Option<Box<dyn Transport>>> {
@@ -213,7 +216,8 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
             ..DflConfig::default()
         };
         let method =
-            MethodSpec::fedlay_multi(spec.overlay.clone(), spec.net.clone(), tasks.tasks.len());
+            MethodSpec::fedlay_multi(spec.overlay.clone(), spec.net.clone(), tasks.tasks.len())
+                .with_compression(compression_flag(args)?);
         let report = multitask::run_scenario(
             &engine,
             spec,
@@ -249,7 +253,8 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
     );
     let mut trainer = Trainer::new(
         &engine,
-        MethodSpec::fedlay_dynamic(spec.overlay.clone(), spec.net.clone()),
+        MethodSpec::fedlay_dynamic(spec.overlay.clone(), spec.net.clone())
+            .with_compression(compression_flag(args)?),
         cfg,
         weights[..spec.initial].to_vec(),
     )?;
@@ -289,6 +294,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "complete" => MethodSpec::complete(n),
         other => anyhow::bail!("unknown method {other:?}"),
     };
+    let spec = spec.with_compression(compression_flag(args)?);
     let classes = engine.manifest.task(&cfg.dfl.task)?.classes;
     let weights =
         fedlay::data::shard_labels(n, classes, cfg.dfl.shards_per_client, cfg.dfl.seed);
@@ -373,7 +379,8 @@ fn cmd_train_multi(args: &Args, tasks_path: &str) -> anyhow::Result<()> {
     let joins = args.usize("joins", 0)?;
     let fails = args.usize("fails", 0)?.min(n.saturating_sub(1));
     let churn_at = args.u64("churn-at-min", minutes / 2)? * 60 * 1_000_000;
-    let mspec = MethodSpec::fedlay_multi(cfg.overlay.clone(), cfg.net.clone(), spec.tasks.len());
+    let mspec = MethodSpec::fedlay_multi(cfg.overlay.clone(), cfg.net.clone(), spec.tasks.len())
+        .with_compression(compression_flag(args)?);
     let (mut trainer, tables) =
         multitask::build_trainer(&engine, mspec, cfg.dfl.clone(), &spec, n + joins)?;
     match args.str("transport", "sim").as_str() {
@@ -473,6 +480,7 @@ fn cmd_node(args: &Args) -> anyhow::Result<()> {
         lr: cfg.dfl.lr,
         local_steps: cfg.dfl.local_steps,
         period_ms: 2_000,
+        compression: compression_flag(args)?,
         seed: cfg.dfl.seed,
         book: None,
     };

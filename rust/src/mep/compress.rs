@@ -1,0 +1,131 @@
+//! Model-payload compression for MEP exchange (accuracy-vs-bytes
+//! trade-off studies): symmetric per-tensor i8 quantization and top-k
+//! magnitude sparsification.
+//!
+//! Both schemes are deterministic pure functions of the parameter
+//! vector, so the sim and TCP backends compress identically and the
+//! conformance suite can pin accuracy bitwise. The trainer applies the
+//! *round-trip* (compress then decompress) to every model a client
+//! pulls from a neighbor, so the learning dynamics see exactly the
+//! parameters that would have survived the wire — while the byte
+//! accounting charges the compressed size.
+
+/// Symmetric per-tensor i8 quantization: `level = round(v / scale)`
+/// with `scale = max |v| / 127`. Returns `(scale, levels)`;
+/// an all-zero (or empty) tensor gets scale 0 and zero levels.
+pub fn quantize_q8(params: &[f32]) -> (f32, Vec<i8>) {
+    let max_abs = params.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        return (0.0, vec![0; params.len()]);
+    }
+    let scale = max_abs / 127.0;
+    let levels = params
+        .iter()
+        .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    (scale, levels)
+}
+
+/// Reconstruct a dense tensor from its quantization levels.
+pub fn dequantize_q8(scale: f32, levels: &[i8]) -> Vec<f32> {
+    levels.iter().map(|&l| l as f32 * scale).collect()
+}
+
+/// Keep the `k` largest-magnitude entries (ties broken toward the lower
+/// index, so the selection is deterministic). Returns `(indices,
+/// values)` with indices ascending; `k >= len` degenerates to the dense
+/// tensor.
+pub fn sparsify_topk(params: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+    if k >= params.len() {
+        return (
+            (0..params.len() as u32).collect(),
+            params.to_vec(),
+        );
+    }
+    let mut order: Vec<u32> = (0..params.len() as u32).collect();
+    // total order: magnitude descending, then index ascending — NaN
+    // magnitudes sort last so they are only kept once everything finite
+    // is in
+    order.sort_by(|&a, &b| {
+        let (ma, mb) = (params[a as usize].abs(), params[b as usize].abs());
+        mb.partial_cmp(&ma)
+            .unwrap_or_else(|| mb.is_nan().cmp(&ma.is_nan()))
+            .then(a.cmp(&b))
+    });
+    let mut indices: Vec<u32> = order[..k].to_vec();
+    indices.sort_unstable();
+    let values = indices.iter().map(|&i| params[i as usize]).collect();
+    (indices, values)
+}
+
+/// Reconstruct the dense `dim`-vector from a top-k selection: kept
+/// entries land at their index, everything else is zero. Out-of-range
+/// indices (a corrupt frame) are ignored rather than panicking.
+pub fn densify_topk(dim: usize, indices: &[u32], values: &[f32]) -> Vec<f32> {
+    let mut dense = vec![0.0f32; dim];
+    for (&i, &v) in indices.iter().zip(values.iter()) {
+        if let Some(slot) = dense.get_mut(i as usize) {
+            *slot = v;
+        }
+    }
+    dense
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q8_roundtrip_error_is_bounded_by_half_step() {
+        let params: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) * 0.013).collect();
+        let (scale, levels) = quantize_q8(&params);
+        let back = dequantize_q8(scale, &levels);
+        assert_eq!(back.len(), params.len());
+        for (p, b) in params.iter().zip(back.iter()) {
+            assert!(
+                (p - b).abs() <= scale * 0.5 + f32::EPSILON,
+                "{p} -> {b} off by more than half a step ({scale})"
+            );
+        }
+    }
+
+    #[test]
+    fn q8_is_deterministic_and_handles_degenerate_tensors() {
+        let params = vec![0.5, -1.0, 0.25];
+        assert_eq!(quantize_q8(&params), quantize_q8(&params));
+        // extremes map to the extreme levels
+        let (_, levels) = quantize_q8(&params);
+        assert_eq!(levels[1], -127);
+        // all-zero and empty tensors: scale 0, zero levels, no NaNs
+        assert_eq!(quantize_q8(&[0.0, 0.0]), (0.0, vec![0, 0]));
+        assert_eq!(quantize_q8(&[]), (0.0, vec![]));
+        assert_eq!(dequantize_q8(0.0, &[0, 0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_selects_largest_magnitudes_with_stable_ties() {
+        let params = vec![0.1, -3.0, 0.2, 3.0, -0.2, 2.0];
+        let (indices, values) = sparsify_topk(&params, 3);
+        // |−3.0| and |3.0| tie: the lower index (1) wins first, both fit
+        assert_eq!(indices, vec![1, 3, 5]);
+        assert_eq!(values, vec![-3.0, 3.0, 2.0]);
+        // tie at the cut: k=1 keeps index 1, not 3
+        let (indices, _) = sparsify_topk(&params, 1);
+        assert_eq!(indices, vec![1]);
+        // k >= len degenerates to dense
+        let (indices, values) = sparsify_topk(&params, 99);
+        assert_eq!(indices.len(), params.len());
+        assert_eq!(values, params);
+    }
+
+    #[test]
+    fn topk_densify_roundtrip_zeroes_the_rest() {
+        let params = vec![1.0, 0.0, -2.0, 0.5, 0.0, 4.0];
+        let (indices, values) = sparsify_topk(&params, 2);
+        let dense = densify_topk(params.len(), &indices, &values);
+        assert_eq!(dense, vec![0.0, 0.0, -2.0, 0.0, 0.0, 4.0]);
+        // corrupt out-of-range index: ignored, no panic
+        let dense = densify_topk(3, &[0, 9], &[1.0, 2.0]);
+        assert_eq!(dense, vec![1.0, 0.0, 0.0]);
+    }
+}

@@ -3,11 +3,13 @@
 //! de-duplication.
 
 pub mod aggregate;
+pub mod compress;
 pub mod confidence;
 pub mod fingerprint;
 pub mod schedule;
 
 pub use aggregate::{aggregate_cpu, pack_for_artifact};
+pub use compress::{dequantize_q8, densify_topk, quantize_q8, sparsify_topk};
 pub use confidence::{comm_confidence, data_confidence, ConfidenceParams};
 pub use fingerprint::{fingerprint, FingerprintCache};
 pub use schedule::{Capacity, ExchangeSchedule};

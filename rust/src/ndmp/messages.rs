@@ -84,6 +84,29 @@ pub enum Msg {
         confidence: f32,
         params: Vec<f32>,
     },
+    /// Quantized model payload: per-tensor symmetric i8 quantization
+    /// (`param ≈ scale * level`), ~4× fewer bytes on the wire than
+    /// `ModelPayload` for the same parameter count.
+    ModelPayloadQ8 {
+        task: u32,
+        version: u64,
+        confidence: f32,
+        /// Dequantization scale (`max |param| / 127`).
+        scale: f32,
+        levels: Vec<i8>,
+    },
+    /// Top-k sparsified model payload: only the `k` largest-magnitude
+    /// parameters ride the wire (`dim` total, the rest are zero on
+    /// receive).
+    ModelPayloadTopK {
+        task: u32,
+        version: u64,
+        confidence: f32,
+        /// Dense dimension of the full parameter vector.
+        dim: u32,
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    },
 }
 
 impl Msg {
@@ -91,7 +114,11 @@ impl Msg {
     pub fn is_control(&self) -> bool {
         !matches!(
             self,
-            Msg::ModelOffer { .. } | Msg::ModelRequest { .. } | Msg::ModelPayload { .. }
+            Msg::ModelOffer { .. }
+                | Msg::ModelRequest { .. }
+                | Msg::ModelPayload { .. }
+                | Msg::ModelPayloadQ8 { .. }
+                | Msg::ModelPayloadTopK { .. }
         )
     }
 
@@ -109,6 +136,10 @@ impl Msg {
             Msg::ModelOffer { .. } => 29,
             Msg::ModelRequest { .. } => 17,
             Msg::ModelPayload { params, .. } => 21 + 4 * params.len(),
+            Msg::ModelPayloadQ8 { levels, .. } => 25 + levels.len(),
+            Msg::ModelPayloadTopK { indices, values, .. } => {
+                25 + 4 * indices.len() + 4 * values.len()
+            }
         }
     }
 }
@@ -142,6 +173,23 @@ mod tests {
             params: vec![]
         }
         .is_control());
+        assert!(!Msg::ModelPayloadQ8 {
+            task: 0,
+            version: 0,
+            confidence: 1.0,
+            scale: 1.0,
+            levels: vec![]
+        }
+        .is_control());
+        assert!(!Msg::ModelPayloadTopK {
+            task: 0,
+            version: 0,
+            confidence: 1.0,
+            dim: 0,
+            indices: vec![],
+            values: vec![]
+        }
+        .is_control());
     }
 
     #[test]
@@ -159,6 +207,34 @@ mod tests {
             params: vec![0.0; 1000],
         };
         assert_eq!(big.wire_size() - small.wire_size(), 4 * 990);
+    }
+
+    #[test]
+    fn compressed_payloads_are_smaller_on_the_wire() {
+        let dense = Msg::ModelPayload {
+            task: 0,
+            version: 1,
+            confidence: 1.0,
+            params: vec![0.5; 1000],
+        };
+        let q8 = Msg::ModelPayloadQ8 {
+            task: 0,
+            version: 1,
+            confidence: 1.0,
+            scale: 0.5 / 127.0,
+            levels: vec![127; 1000],
+        };
+        let topk = Msg::ModelPayloadTopK {
+            task: 0,
+            version: 1,
+            confidence: 1.0,
+            dim: 1000,
+            indices: (0..100).collect(),
+            values: vec![0.5; 100],
+        };
+        // q8: ~1 byte/param vs 4; topk at k = dim/10: ~8 bytes * k
+        assert!(q8.wire_size() * 3 < dense.wire_size());
+        assert!(topk.wire_size() * 4 < dense.wire_size());
     }
 
     #[test]

@@ -621,7 +621,11 @@ impl NodeState {
                 self.maybe_adopt(space, side, from, now);
                 Vec::new()
             }
-            Msg::ModelOffer { .. } | Msg::ModelRequest { .. } | Msg::ModelPayload { .. } => {
+            Msg::ModelOffer { .. }
+            | Msg::ModelRequest { .. }
+            | Msg::ModelPayload { .. }
+            | Msg::ModelPayloadQ8 { .. }
+            | Msg::ModelPayloadTopK { .. } => {
                 Vec::new() // MEP handled by the exchange layer
             }
         }

@@ -20,7 +20,11 @@ use super::peer::{addr_of, AddrBook, PeerPool};
 use super::server::Listener;
 use crate::config::OverlayConfig;
 use crate::data::GaussianTask;
-use crate::mep::{fingerprint, pack_for_artifact, ConfidenceParams, FingerprintCache};
+use crate::dfl::Compression;
+use crate::mep::{
+    densify_topk, dequantize_q8, fingerprint, pack_for_artifact, quantize_q8, sparsify_topk,
+    ConfidenceParams, FingerprintCache,
+};
 use crate::ndmp::messages::{Msg, Time, MS};
 use crate::ndmp::node::NodeState;
 use crate::runtime::{Engine, XInput};
@@ -58,6 +62,10 @@ pub struct ClientNodeConfig {
     pub local_steps: usize,
     /// MEP communication period (wall-clock ms; scaled-down prototype).
     pub period_ms: u64,
+    /// Wire scheme for outbound model payload replies. Inbound frames of
+    /// any scheme are always accepted — nodes with different settings
+    /// interoperate, each only deciding what *it* puts on the wire.
+    pub compression: Compression,
     pub seed: u64,
 }
 
@@ -217,6 +225,9 @@ struct Reactor<'e> {
     model_bytes_sent: u64,
     dedup_skips: u64,
     mep_sent: u64,
+    /// `FEDLAY_NET_DEBUG` resolved once at construction: env lookups take
+    /// a process-global lock, far too hot for the per-frame path.
+    debug: bool,
     status: Arc<NodeStatus>,
     start: Instant,
 }
@@ -237,7 +248,7 @@ impl Reactor<'_> {
     /// One inbound frame: MEP messages are handled here, everything else
     /// goes to the NDMP engine and its replies onto the wire.
     fn handle_frame(&mut self, from: NodeId, msg: Msg) {
-        if std::env::var("FEDLAY_NET_DEBUG").is_ok() {
+        if self.debug {
             eprintln!("[node {}] recv from {} : {:?}", self.cfg.id, from, &msg);
         }
         match &msg {
@@ -273,16 +284,10 @@ impl Reactor<'_> {
                     return; // never answer with another task's parameters
                 }
                 self.mep_sent += 1;
-                self.pool.send(
-                    from,
-                    &Msg::ModelPayload {
-                        task: *task,
-                        version: self.version,
-                        confidence: self.my_conf,
-                        params: self.params.clone(),
-                    },
-                );
-                self.model_bytes_sent += (self.params.len() * 4) as u64;
+                let reply = self.payload_reply(*task);
+                self.pool.send(from, &reply);
+                self.model_bytes_sent +=
+                    self.cfg.compression.payload_bytes(self.params.len()) as u64;
             }
             Msg::ModelPayload {
                 task,
@@ -301,11 +306,84 @@ impl Reactor<'_> {
                     },
                 );
             }
+            Msg::ModelPayloadQ8 {
+                task,
+                version: _,
+                confidence,
+                scale,
+                levels,
+            } => {
+                if *task != self.cfg.task_id {
+                    return;
+                }
+                self.neighbor_models.insert(
+                    from,
+                    NeighborModel {
+                        confidence: *confidence,
+                        params: dequantize_q8(*scale, levels),
+                    },
+                );
+            }
+            Msg::ModelPayloadTopK {
+                task,
+                version: _,
+                confidence,
+                dim,
+                indices,
+                values,
+            } => {
+                if *task != self.cfg.task_id {
+                    return;
+                }
+                self.neighbor_models.insert(
+                    from,
+                    NeighborModel {
+                        confidence: *confidence,
+                        params: densify_topk(*dim as usize, indices, values),
+                    },
+                );
+            }
             _ => {
                 let now = self.now_us();
                 let outs = self.ndmp.handle(from, msg.clone(), now);
                 for o in outs {
                     self.pool.send(o.to, &o.msg);
+                }
+            }
+        }
+    }
+
+    /// Encode this node's current model as a payload frame under the
+    /// configured wire scheme (`Compression::None` stays the dense
+    /// `ModelPayload` the fleet always spoke).
+    fn payload_reply(&self, task: u32) -> Msg {
+        match self.cfg.compression {
+            Compression::None => Msg::ModelPayload {
+                task,
+                version: self.version,
+                confidence: self.my_conf,
+                params: self.params.clone(),
+            },
+            Compression::Q8 => {
+                let (scale, levels) = quantize_q8(&self.params);
+                Msg::ModelPayloadQ8 {
+                    task,
+                    version: self.version,
+                    confidence: self.my_conf,
+                    scale,
+                    levels,
+                }
+            }
+            Compression::TopK { .. } => {
+                let keep = self.cfg.compression.kept(self.params.len());
+                let (indices, values) = sparsify_topk(&self.params, keep);
+                Msg::ModelPayloadTopK {
+                    task,
+                    version: self.version,
+                    confidence: self.my_conf,
+                    dim: self.params.len() as u32,
+                    indices,
+                    values,
                 }
             }
         }
@@ -456,6 +534,7 @@ fn run_node(
         model_bytes_sent: 0,
         dedup_skips: 0,
         mep_sent: 0,
+        debug: std::env::var("FEDLAY_NET_DEBUG").is_ok(),
         status,
         start,
     };

@@ -61,7 +61,13 @@ pub struct PeerPool {
     /// Address registry for port-0 fleets; `None` = derived addressing.
     book: Option<Arc<AddrBook>>,
     conns: Mutex<HashMap<NodeId, TcpStream>>,
-    /// send failures (dead peers are detected by NDMP heartbeats, not here)
+    /// Sends dropped because the destination had no registered address —
+    /// the *routine* crash-fail case under churn (dead peers are detected
+    /// by NDMP heartbeats, not here).
+    pub dropped_unreachable: std::sync::atomic::AtomicU64,
+    /// Sends that failed against a *resolved* address (connect refused,
+    /// write error). Unlike `dropped_unreachable` this is an anomaly: on
+    /// a clean run the conformance suite asserts it stays zero.
     pub send_errors: std::sync::atomic::AtomicU64,
 }
 
@@ -72,6 +78,7 @@ impl PeerPool {
             self_id,
             book: None,
             conns: Mutex::new(HashMap::new()),
+            dropped_unreachable: std::sync::atomic::AtomicU64::new(0),
             send_errors: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -84,6 +91,7 @@ impl PeerPool {
             self_id,
             book: Some(book),
             conns: Mutex::new(HashMap::new()),
+            dropped_unreachable: std::sync::atomic::AtomicU64::new(0),
             send_errors: std::sync::atomic::AtomicU64::new(0),
         }
     }
@@ -95,10 +103,7 @@ impl PeerPool {
         }
     }
 
-    fn connect(&self, to: NodeId) -> Result<TcpStream> {
-        let addr = self
-            .resolve(to)
-            .ok_or_else(|| anyhow::anyhow!("no address registered for node {to}"))?;
+    fn connect(&self, addr: SocketAddr) -> Result<TcpStream> {
         let s = TcpStream::connect_timeout(&addr, Duration::from_millis(1_000))?;
         s.set_nodelay(true)?;
         // Bounded writes: two peers simultaneously pushing large model
@@ -117,7 +122,9 @@ impl PeerPool {
     /// Send a message carrying its virtual timing stamp (send sequence,
     /// send time, sampled link delay — see `net::wire::Stamp`),
     /// reconnecting once on a stale cached connection.
-    /// Failures are counted but not fatal (crash-fail peers are expected).
+    /// Failures are counted but not fatal (crash-fail peers are expected):
+    /// an unresolvable destination bumps `dropped_unreachable`, a failed
+    /// connect or write against a live address bumps `send_errors`.
     /// Returns whether a frame was actually written to a socket, so
     /// callers tracking in-flight traffic don't wait for frames that
     /// were dropped on a dead or unregistered peer.
@@ -130,7 +137,15 @@ impl PeerPool {
             }
             conns.remove(&to);
         }
-        match self.connect(to) {
+        let Some(addr) = self.resolve(to) else {
+            // no registered address: the peer is dead or not yet open —
+            // the expected crash-fail drop, tallied apart from real
+            // connect/write failures
+            self.dropped_unreachable
+                .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            return false;
+        };
+        match self.connect(addr) {
             Ok(mut stream) => {
                 if wire::write_frame(&mut stream, self.self_id, stamp, msg).is_ok() {
                     conns.insert(to, stream);
@@ -180,9 +195,16 @@ mod tests {
     fn send_to_dead_peer_counts_error() {
         let pool = PeerPool::new(1, 0); // port 1+id: nothing listens there
         pool.send(7, &Msg::Heartbeat);
+        // derived addressing always resolves, so a refused connect is a
+        // real send error, not an unreachable drop
         assert_eq!(
             pool.send_errors.load(std::sync::atomic::Ordering::Relaxed),
             1
+        );
+        assert_eq!(
+            pool.dropped_unreachable
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0
         );
     }
 
@@ -195,12 +217,18 @@ mod tests {
         assert_eq!(book.len(), 1);
         let pool = PeerPool::with_book(1, book.clone());
         assert_eq!(pool.resolve(4), Some(addr));
-        // unregistered destination: dropped + counted, never panics
+        // unregistered destination: the routine crash-fail drop — counted
+        // apart from real send errors, never panics
         assert_eq!(pool.resolve(9), None);
         pool.send(9, &Msg::Heartbeat);
         assert_eq!(
-            pool.send_errors.load(std::sync::atomic::Ordering::Relaxed),
+            pool.dropped_unreachable
+                .load(std::sync::atomic::Ordering::Relaxed),
             1
+        );
+        assert_eq!(
+            pool.send_errors.load(std::sync::atomic::Ordering::Relaxed),
+            0
         );
         book.unregister(4);
         assert_eq!(pool.resolve(4), None);

@@ -5,11 +5,16 @@
 //! Every node the `Simulator` opens gets an endpoint — a `Listener`
 //! bound to an OS-assigned port (no port-collision flakiness) plus a
 //! `PeerPool` of outbound connections — registered in a shared
-//! `AddrBook`. `send` samples the virtual one-way delay from the same
+//! `AddrBook`. `send` samples the virtual delivery time from the same
 //! seeded per-link component the in-memory backend uses
-//! (`sim::network::LinkDelay`), stamps it with the virtual send time and
-//! a global send sequence into the `net::wire` frame, and writes the
-//! frame to the destination's live address.
+//! (`sim::network::LinkModel`: propagation delay, payload-proportional
+//! bandwidth, loss lottery, per-node capacity queues), stamps the full
+//! virtual delay with the send time and a global send sequence into the
+//! `net::wire` frame, and writes the frame to the destination's live
+//! address. A loss-lottery hit is a **deliberate non-send**: the frame
+//! is never written and the in-flight counter never incremented (so the
+//! poll backstop cannot stall waiting for it) — exactly the frames the
+//! in-memory backend never schedules.
 //!
 //! Timing model: virtual time is the scheduler's, and the wire carries
 //! **virtual latency**. Frames physically arrive early — while the
@@ -36,7 +41,7 @@ use super::server::Listener;
 use super::wire::Stamp;
 use crate::config::NetConfig;
 use crate::ndmp::messages::{Msg, Time};
-use crate::sim::{Arrival, LinkDelay, Transport};
+use crate::sim::{Arrival, LinkModel, Transport};
 use crate::topology::NodeId;
 use anyhow::Result;
 use std::collections::BTreeMap;
@@ -52,10 +57,10 @@ struct Endpoint {
 struct Inner {
     book: Arc<AddrBook>,
     endpoints: BTreeMap<NodeId, Endpoint>,
-    /// The shared per-link virtual delay component (same seeding as
+    /// The shared per-link virtual model (same seeding as
     /// `SimTransport`, so the k-th frame on a link samples the same
-    /// delay on both backends).
-    delay: LinkDelay,
+    /// delay, bandwidth, and loss outcome on both backends).
+    model: LinkModel,
     /// Global send sequence stamped into every written frame — the
     /// tie-breaker that orders equal-due-time arrivals exactly like the
     /// in-memory backend's event-queue insertion order.
@@ -80,6 +85,9 @@ struct Inner {
     /// conformance-threatening case: their `Deliver` is scheduled late
     /// (clamped to the caller's clock), so timestamp pins can diverge.
     late: u64,
+    /// Send errors accumulated from pools of endpoints that have since
+    /// closed, so `dropped_sends` keeps counting them.
+    closed_send_errors: u64,
 }
 
 impl Inner {
@@ -160,7 +168,7 @@ impl SchedTransport {
             inner: Mutex::new(Inner {
                 book: Arc::new(AddrBook::new()),
                 endpoints: BTreeMap::new(),
-                delay: LinkDelay::new(net),
+                model: LinkModel::new(net),
                 send_seq: 0,
                 in_flight: BTreeMap::new(),
                 staged: BTreeMap::new(),
@@ -168,6 +176,7 @@ impl SchedTransport {
                 budget,
                 gave_up: 0,
                 late: 0,
+                closed_send_errors: 0,
             }),
         }
     }
@@ -179,6 +188,25 @@ impl SchedTransport {
     pub fn pacing_anomalies(&self) -> (u64, u64) {
         let inner = self.inner.lock().unwrap();
         (inner.gave_up, inner.late)
+    }
+
+    /// Frames that failed to *write* against a resolved, live address
+    /// (connect refused, write error) across every pool this transport
+    /// ever opened. Unreachable-peer drops — the routine crash-fail case
+    /// — are excluded; on a clean run the conformance suite asserts this
+    /// stays zero.
+    pub fn dropped_sends(&self) -> u64 {
+        let inner = self.inner.lock().unwrap();
+        inner.closed_send_errors
+            + inner
+                .endpoints
+                .values()
+                .map(|ep| {
+                    ep.pool
+                        .send_errors
+                        .load(std::sync::atomic::Ordering::Relaxed)
+                })
+                .sum::<u64>()
     }
 
     /// The shared address registry (exposed for tests/diagnostics).
@@ -200,7 +228,7 @@ impl Transport for SchedTransport {
     fn open(&mut self, node: NodeId) -> Result<()> {
         let mut guard = self.inner.lock().unwrap();
         let inner = &mut *guard;
-        inner.delay.reopen(node);
+        inner.model.reopen(node);
         if inner.endpoints.contains_key(&node) {
             return Ok(());
         }
@@ -221,6 +249,11 @@ impl Transport for SchedTransport {
         if let Some(mut ep) = inner.endpoints.remove(&node) {
             ep.listener.shutdown();
             ep.pool.disconnect_all();
+            // keep the dead pool's anomaly count in the telemetry total
+            inner.closed_send_errors += ep
+                .pool
+                .send_errors
+                .load(std::sync::atomic::Ordering::Relaxed);
         }
         // survivors' cached connections to the dead node would accept
         // writes into the kernel buffer; drop them so later sends fail
@@ -228,10 +261,10 @@ impl Transport for SchedTransport {
         for ep in inner.endpoints.values() {
             ep.pool.forget(node);
         }
-        // prune the dead node's link-delay streams (both backends do,
+        // prune the dead node's link-model streams (both backends do,
         // keeping link state identical) so churn doesn't grow them
         // forever
-        inner.delay.forget(node);
+        inner.model.forget(node);
     }
 
     fn send(&mut self, now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time> {
@@ -239,14 +272,22 @@ impl Transport for SchedTransport {
         let inner = &mut *guard;
         // sample unconditionally — the in-memory backend samples for
         // dropped sends too, and skipping here would shift the link's
-        // delay sequence between backends
-        let delay = inner.delay.sample(from, to);
-        let stamp = Stamp {
-            seq: inner.send_seq,
-            sent_at: now,
-            delay,
-        };
+        // delay or loss sequence between backends
+        let sampled = inner.model.sample(now, from, to, msg.wire_size() as u64);
+        let seq = inner.send_seq;
         inner.send_seq += 1;
+        let Some(at) = sampled else {
+            // loss lottery: a deliberate non-send. The frame is never
+            // written and `in_flight` never incremented, so the poll
+            // backstop has nothing to stall on — the same frame the
+            // in-memory backend never schedules.
+            return None;
+        };
+        let stamp = Stamp {
+            seq,
+            sent_at: now,
+            delay: at.saturating_sub(now),
+        };
         if let Some(ep) = inner.endpoints.get(&from) {
             // only frames actually written count as in-flight: dropped
             // sends (dead/unregistered peers) must not make later polls
@@ -256,6 +297,14 @@ impl Transport for SchedTransport {
             }
         }
         None
+    }
+
+    fn lost_frames(&self) -> u64 {
+        self.inner.lock().unwrap().model.lost()
+    }
+
+    fn dropped_sends(&self) -> u64 {
+        SchedTransport::dropped_sends(self)
     }
 
     fn poll(&mut self) -> Vec<Arrival> {
@@ -309,6 +358,7 @@ mod tests {
             latency_ms,
             jitter,
             seed: 99,
+            ..NetConfig::default()
         }
     }
 
@@ -384,6 +434,62 @@ mod tests {
         assert_eq!(ats, vec![2_100, 2_200, 2_300]);
         for id in 1..=3u64 {
             t.close(id);
+        }
+    }
+
+    /// Under loss, both backends drop the *same* frames: the TCP backend
+    /// treats a loss-lottery hit as a deliberate non-send (nothing
+    /// written, nothing in flight, poll returns immediately), and its
+    /// delivered arrival times still match the in-memory schedule.
+    #[test]
+    fn lossy_sends_are_non_sends_and_match_sim() {
+        let cfg = NetConfig {
+            latency_ms: 10.0,
+            jitter: 0.3,
+            bandwidth_mbps: 8.0,
+            loss: 0.4,
+            node_up_mbps: 16.0,
+            node_down_mbps: 16.0,
+            seed: 7,
+        };
+        let mut sim = SimTransport::new(&cfg);
+        let mut tcp = SchedTransport::new(&cfg);
+        for id in 1..=3u64 {
+            sim.open(id).unwrap();
+            tcp.open(id).unwrap();
+        }
+        let sends: Vec<(Time, NodeId, NodeId)> = (0..40)
+            .map(|i| (i * 50, 1 + i % 3, 1 + (i + 1) % 3))
+            .collect();
+        let sim_times: Vec<Option<Time>> = sends
+            .iter()
+            .map(|&(now, f, to)| sim.send(now, f, to, &Msg::Heartbeat))
+            .collect();
+        for &(now, f, to) in &sends {
+            assert_eq!(tcp.send(now, f, to, &Msg::Heartbeat), None);
+        }
+        let delivered: Vec<Time> = sim_times.iter().filter_map(|t| *t).collect();
+        assert!(!delivered.is_empty(), "seed lost every frame");
+        assert!(
+            delivered.len() < sends.len(),
+            "seed lost no frame — loss path untested"
+        );
+        // identical loss lottery on both backends
+        assert_eq!(tcp.lost_frames(), sim.lost_frames());
+        assert_eq!(
+            tcp.lost_frames(),
+            (sends.len() - delivered.len()) as u64
+        );
+        // the surviving frames arrive with the in-memory delivery times
+        let arrivals = tcp.poll();
+        let mut got: Vec<Time> = arrivals.iter().map(|a| a.at).collect();
+        let mut want = delivered;
+        got.sort_unstable();
+        want.sort_unstable();
+        assert_eq!(got, want, "tcp stamps diverge from sim under loss");
+        assert_eq!(tcp.dropped_sends(), 0, "clean run must not drop writes");
+        for id in 1..=3u64 {
+            tcp.close(id);
         }
     }
 

@@ -71,6 +71,21 @@ const T_REPAIR_STOP: u8 = 7;
 const T_MODEL_OFFER: u8 = 8;
 const T_MODEL_REQUEST: u8 = 9;
 const T_MODEL_PAYLOAD: u8 = 10;
+const T_MODEL_PAYLOAD_Q8: u8 = 11;
+const T_MODEL_PAYLOAD_TOPK: u8 = 12;
+
+/// The frame head's length field is a `u32`, so this is the largest
+/// payload the format can carry. Payloads past it must fail loudly at
+/// encode time: a bare `as u32` cast would silently truncate the length
+/// and desynchronize every frame behind it on the stream.
+pub const MAX_PAYLOAD_LEN: usize = u32::MAX as usize;
+
+fn payload_len_u32(len: usize) -> Result<u32> {
+    if len > MAX_PAYLOAD_LEN {
+        bail!("payload of {len} bytes exceeds the u32 frame length field (max {MAX_PAYLOAD_LEN})");
+    }
+    Ok(len as u32)
+}
 
 struct Writer {
     buf: Vec<u8>,
@@ -82,6 +97,9 @@ impl Writer {
     }
     fn u8(&mut self, v: u8) {
         self.buf.push(v);
+    }
+    fn i8(&mut self, v: i8) {
+        self.buf.push(v as u8);
     }
     fn u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_be_bytes());
@@ -114,6 +132,9 @@ impl<'a> Reader<'a> {
     fn u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
+    fn i8(&mut self) -> Result<i8> {
+        Ok(self.take(1)?[0] as i8)
+    }
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
     }
@@ -125,6 +146,11 @@ impl<'a> Reader<'a> {
     }
     fn done(&self) -> bool {
         self.pos == self.buf.len()
+    }
+    /// Bytes left — bounds `Vec::with_capacity` on decode so a forged
+    /// element count cannot force a huge up-front allocation.
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
 }
 
@@ -161,7 +187,12 @@ fn byte_dir(b: u8) -> Result<Dir> {
 /// Serialize one message into a framed byte vector, stamped with its
 /// send sequence, virtual send time, and sampled link delay
 /// (`Stamp::default()` for wall-clock senders).
-pub fn encode(sender: NodeId, stamp: Stamp, msg: &Msg) -> Vec<u8> {
+///
+/// Errors when the payload cannot be framed: longer than
+/// [`MAX_PAYLOAD_LEN`], or a `ModelPayloadTopK` whose index and value
+/// vectors disagree in length (the wire format carries one count for
+/// both).
+pub fn encode(sender: NodeId, stamp: Stamp, msg: &Msg) -> Result<Vec<u8>> {
     let mut w = Writer::new();
     let ty = match msg {
         Msg::NeighborDiscovery { joiner, space } => {
@@ -237,8 +268,54 @@ pub fn encode(sender: NodeId, stamp: Stamp, msg: &Msg) -> Vec<u8> {
             }
             T_MODEL_PAYLOAD
         }
+        Msg::ModelPayloadQ8 {
+            task,
+            version,
+            confidence,
+            scale,
+            levels,
+        } => {
+            w.u32(*task);
+            w.u64(*version);
+            w.f32(*confidence);
+            w.f32(*scale);
+            w.u32(payload_len_u32(levels.len())?);
+            for l in levels {
+                w.i8(*l);
+            }
+            T_MODEL_PAYLOAD_Q8
+        }
+        Msg::ModelPayloadTopK {
+            task,
+            version,
+            confidence,
+            dim,
+            indices,
+            values,
+        } => {
+            if indices.len() != values.len() {
+                bail!(
+                    "top-k payload with {} indices but {} values",
+                    indices.len(),
+                    values.len()
+                );
+            }
+            w.u32(*task);
+            w.u64(*version);
+            w.f32(*confidence);
+            w.u32(*dim);
+            w.u32(payload_len_u32(indices.len())?);
+            for i in indices {
+                w.u32(*i);
+            }
+            for v in values {
+                w.f32(*v);
+            }
+            T_MODEL_PAYLOAD_TOPK
+        }
     };
     let payload = w.buf;
+    let len = payload_len_u32(payload.len())?;
     let mut frame = Vec::with_capacity(HEAD_LEN + payload.len());
     frame.push(MAGIC);
     frame.extend_from_slice(&sender.to_be_bytes());
@@ -246,9 +323,9 @@ pub fn encode(sender: NodeId, stamp: Stamp, msg: &Msg) -> Vec<u8> {
     frame.extend_from_slice(&stamp.sent_at.to_be_bytes());
     frame.extend_from_slice(&stamp.delay.to_be_bytes());
     frame.push(ty);
-    frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    frame.extend_from_slice(&len.to_be_bytes());
     frame.extend_from_slice(&payload);
-    frame
+    Ok(frame)
 }
 
 /// Decode one payload given its type byte.
@@ -300,7 +377,7 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
             let version = r.u64()?;
             let confidence = r.f32()?;
             let n = r.u32()? as usize;
-            let mut params = Vec::with_capacity(n);
+            let mut params = Vec::with_capacity(n.min(r.remaining() / 4));
             for _ in 0..n {
                 params.push(r.f32()?);
             }
@@ -309,6 +386,47 @@ fn decode_payload(ty: u8, payload: &[u8]) -> Result<Msg> {
                 version,
                 confidence,
                 params,
+            }
+        }
+        T_MODEL_PAYLOAD_Q8 => {
+            let task = r.u32()?;
+            let version = r.u64()?;
+            let confidence = r.f32()?;
+            let scale = r.f32()?;
+            let n = r.u32()? as usize;
+            let mut levels = Vec::with_capacity(n.min(r.remaining()));
+            for _ in 0..n {
+                levels.push(r.i8()?);
+            }
+            Msg::ModelPayloadQ8 {
+                task,
+                version,
+                confidence,
+                scale,
+                levels,
+            }
+        }
+        T_MODEL_PAYLOAD_TOPK => {
+            let task = r.u32()?;
+            let version = r.u64()?;
+            let confidence = r.f32()?;
+            let dim = r.u32()?;
+            let n = r.u32()? as usize;
+            let mut indices = Vec::with_capacity(n.min(r.remaining() / 8));
+            for _ in 0..n {
+                indices.push(r.u32()?);
+            }
+            let mut values = Vec::with_capacity(n.min(r.remaining() / 4));
+            for _ in 0..n {
+                values.push(r.f32()?);
+            }
+            Msg::ModelPayloadTopK {
+                task,
+                version,
+                confidence,
+                dim,
+                indices,
+                values,
             }
         }
         _ => bail!("unknown message type {ty}"),
@@ -353,7 +471,7 @@ pub fn write_frame(
     stamp: Stamp,
     msg: &Msg,
 ) -> Result<()> {
-    let frame = encode(sender, stamp, msg);
+    let frame = encode(sender, stamp, msg).context("encoding frame")?;
     stream.write_all(&frame).context("writing frame")?;
     Ok(())
 }
@@ -372,7 +490,7 @@ mod tests {
             sent_at: 7_000,
             delay: 350,
         };
-        let frame = encode(sender, stamp, &msg);
+        let frame = encode(sender, stamp, &msg).unwrap();
         let mut cursor = std::io::Cursor::new(frame);
         let got = read_frame(&mut cursor).unwrap();
         assert_eq!(got.sender, sender);
@@ -465,6 +583,36 @@ mod tests {
                 confidence: 1.0,
                 params: vec![f32::MAX, f32::MIN, f32::INFINITY, f32::NEG_INFINITY, 0.0],
             },
+            Msg::ModelPayloadQ8 {
+                task: 2,
+                version: 5,
+                confidence: 0.25,
+                scale: 0.01,
+                levels: vec![0, 1, -1, i8::MAX, i8::MIN],
+            },
+            Msg::ModelPayloadQ8 {
+                task: 0,
+                version: 0,
+                confidence: 0.0,
+                scale: 0.0,
+                levels: Vec::new(),
+            },
+            Msg::ModelPayloadTopK {
+                task: 3,
+                version: 6,
+                confidence: 0.75,
+                dim: 10,
+                indices: vec![0, 4, 9],
+                values: vec![1.5, -2.0, 0.125],
+            },
+            Msg::ModelPayloadTopK {
+                task: u32::MAX,
+                version: u64::MAX,
+                confidence: 1.0,
+                dim: 0,
+                indices: Vec::new(),
+                values: Vec::new(),
+            },
         ]
     }
 
@@ -493,7 +641,7 @@ mod tests {
             (42, 90_000_000, 350_123),
         ] {
             let stamp = Stamp { seq, sent_at, delay };
-            let frame = encode(9, stamp, &Msg::Heartbeat);
+            let frame = encode(9, stamp, &Msg::Heartbeat).unwrap();
             let got = read_frame(&mut std::io::Cursor::new(frame)).unwrap();
             assert_eq!(got.stamp, stamp);
         }
@@ -504,10 +652,10 @@ mod tests {
             sent_at: 5,
             delay: 10,
         };
-        let a = encode(1, base, &Msg::Heartbeat);
-        let b = encode(1, Stamp { delay: 11, ..base }, &Msg::Heartbeat);
-        let c = encode(1, Stamp { sent_at: 6, ..base }, &Msg::Heartbeat);
-        let d = encode(1, Stamp { seq: 3, ..base }, &Msg::Heartbeat);
+        let a = encode(1, base, &Msg::Heartbeat).unwrap();
+        let b = encode(1, Stamp { delay: 11, ..base }, &Msg::Heartbeat).unwrap();
+        let c = encode(1, Stamp { sent_at: 6, ..base }, &Msg::Heartbeat).unwrap();
+        let d = encode(1, Stamp { seq: 3, ..base }, &Msg::Heartbeat).unwrap();
         assert_ne!(a, b);
         assert_ne!(a, c);
         assert_ne!(a, d);
@@ -545,8 +693,8 @@ mod tests {
             });
         }
         // two frames differing only in task must not encode identically
-        let a = encode(1, Stamp::default(), &Msg::ModelRequest { task: 0, version: 9 });
-        let b = encode(1, Stamp::default(), &Msg::ModelRequest { task: 1, version: 9 });
+        let a = encode(1, Stamp::default(), &Msg::ModelRequest { task: 0, version: 9 }).unwrap();
+        let b = encode(1, Stamp::default(), &Msg::ModelRequest { task: 1, version: 9 }).unwrap();
         assert_ne!(a, b);
     }
 
@@ -555,7 +703,7 @@ mod tests {
     #[test]
     fn truncation_at_every_byte_errors() {
         for msg in all_variants() {
-            let frame = encode(3, Stamp { seq: 1, sent_at: 1_000, delay: 50 }, &msg);
+            let frame = encode(3, Stamp { seq: 1, sent_at: 1_000, delay: 50 }, &msg).unwrap();
             for cut in 0..frame.len() {
                 let mut cursor = std::io::Cursor::new(&frame[..cut]);
                 assert!(
@@ -572,7 +720,7 @@ mod tests {
     #[test]
     fn rejects_trailing_payload_bytes() {
         for msg in [Msg::Heartbeat, Msg::ModelRequest { task: 0, version: 2 }] {
-            let mut frame = encode(1, Stamp::default(), &msg);
+            let mut frame = encode(1, Stamp::default(), &msg).unwrap();
             let len = u32::from_be_bytes(frame[34..38].try_into().unwrap()) + 1;
             frame[34..38].copy_from_slice(&len.to_be_bytes());
             frame.push(0);
@@ -593,7 +741,8 @@ mod tests {
                 side: Side::Next,
                 node: 5,
             },
-        );
+        )
+        .unwrap();
         frame[HEAD_LEN + 4] = 7;
         assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
         // RepairStop payload: space u32, dir u8 — dir byte at HEAD_LEN + 4.
@@ -604,21 +753,22 @@ mod tests {
                 space: 2,
                 dir: Dir::Cw,
             },
-        );
+        )
+        .unwrap();
         frame[HEAD_LEN + 4] = 9;
         assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
     }
 
     #[test]
     fn rejects_oversized_length_field() {
-        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat);
+        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat).unwrap();
         frame[34..38].copy_from_slice(&u32::MAX.to_be_bytes());
         assert!(read_frame(&mut std::io::Cursor::new(frame)).is_err());
     }
 
     #[test]
     fn rejects_bad_magic() {
-        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat);
+        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat).unwrap();
         frame[0] = 0x00;
         let mut cursor = std::io::Cursor::new(frame);
         assert!(read_frame(&mut cursor).is_err());
@@ -626,17 +776,44 @@ mod tests {
 
     #[test]
     fn rejects_truncated() {
-        let frame = encode(1, Stamp::default(), &Msg::ModelRequest { task: 0, version: 2 });
+        let frame = encode(1, Stamp::default(), &Msg::ModelRequest { task: 0, version: 2 }).unwrap();
         let mut cursor = std::io::Cursor::new(&frame[..frame.len() - 2]);
         assert!(read_frame(&mut cursor).is_err());
     }
 
     #[test]
     fn rejects_unknown_type() {
-        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat);
+        let mut frame = encode(1, Stamp::default(), &Msg::Heartbeat).unwrap();
         frame[33] = 99;
         let mut cursor = std::io::Cursor::new(frame);
         assert!(read_frame(&mut cursor).is_err());
+    }
+
+    /// `payload.len() as u32` used to truncate silently past 4 GiB; the
+    /// checked helper must accept exactly `u32::MAX` and reject one byte
+    /// more — testable without allocating 4 GiB.
+    #[test]
+    fn payload_length_guard_is_exact_at_u32_boundary() {
+        assert_eq!(payload_len_u32(0).unwrap(), 0);
+        assert_eq!(payload_len_u32(MAX_PAYLOAD_LEN).unwrap(), u32::MAX);
+        assert!(payload_len_u32(MAX_PAYLOAD_LEN + 1).is_err());
+        assert!(payload_len_u32(usize::MAX).is_err());
+    }
+
+    /// A top-k payload with mismatched index/value lengths cannot be
+    /// expressed on the wire (one count covers both) — encoding it must
+    /// fail loudly instead of producing a frame that decodes differently.
+    #[test]
+    fn mismatched_topk_lengths_fail_to_encode() {
+        let msg = Msg::ModelPayloadTopK {
+            task: 0,
+            version: 1,
+            confidence: 0.5,
+            dim: 10,
+            indices: vec![1, 2, 3],
+            values: vec![0.5],
+        };
+        assert!(encode(1, Stamp::default(), &msg).is_err());
     }
 
     #[test]
@@ -650,8 +827,23 @@ mod tests {
                 confidence: 1.0,
                 params: vec![0.0; 100],
             },
+            Msg::ModelPayloadQ8 {
+                task: 0,
+                version: 1,
+                confidence: 1.0,
+                scale: 0.5,
+                levels: vec![1; 100],
+            },
+            Msg::ModelPayloadTopK {
+                task: 0,
+                version: 1,
+                confidence: 1.0,
+                dim: 100,
+                indices: (0..10).collect(),
+                values: vec![0.5; 10],
+            },
         ] {
-            let actual = encode(1, Stamp::default(), &msg).len();
+            let actual = encode(1, Stamp::default(), &msg).unwrap().len();
             // estimate excludes the sender id and the three stamp fields
             let estimate = msg.wire_size() + 9 + 24;
             assert!(

@@ -132,6 +132,7 @@ mod tests {
                 latency_ms: 50.0,
                 jitter: 0.1,
                 seed: 3,
+                ..NetConfig::default()
             },
         )
     }

@@ -21,7 +21,7 @@ pub mod transport;
 
 pub use arena::NodeArena;
 pub use event::{Event, EventKind, EventQueue};
-pub use network::{LatencyModel, LinkDelay, SimTransport};
+pub use network::{LatencyModel, LinkDelay, LinkModel, SimTransport};
 pub use runner::{grow_network, CorrectnessSample, FootprintStats, Simulator};
 pub use scenario::{
     quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, MultiTrainerSink, Phase,

@@ -1,9 +1,15 @@
-//! Virtual link latency: one-way delay = `latency_ms` plus an
-//! exponential jitter tail, sampled from a deterministic per-link
-//! stream ([`LinkDelay`]). Both message backends consume the same
-//! component — `SimTransport` turns each sample into a queue-scheduled
-//! delivery time, `net::SchedTransport` stamps it into the wire frame —
-//! which is what makes arrival *timestamps* (not just converged
+//! The virtual link model. [`LinkDelay`] owns propagation latency:
+//! one-way delay = `latency_ms` plus an exponential jitter tail, sampled
+//! from a deterministic per-link stream. [`LinkModel`] layers the rest
+//! of a realistic link on top: seeded per-directed-link bandwidth
+//! (transfer time ∝ payload bytes), an independent per-link loss
+//! lottery, and per-node up/down capacity queues (concurrent sends
+//! share a node's uplink, so large payloads create stragglers). Both
+//! message backends consume the same component — `SimTransport` turns
+//! each sample into a queue-scheduled delivery time (or silently drops
+//! a lost frame), `net::SchedTransport` stamps the full delay into the
+//! wire frame (or deliberately skips the write) — which is what makes
+//! arrival *timestamps* and *drop counts* (not just converged
 //! topologies) conformant across backends (see `docs/transports.md`).
 
 use super::transport::{Arrival, Transport};
@@ -84,8 +90,10 @@ impl LinkDelay {
     }
 
     /// Seed for the directed link `from -> to`: SplitMix64-style mixing
-    /// keeps nearby id pairs statistically independent.
-    fn link_seed(seed: u64, from: NodeId, to: NodeId) -> u64 {
+    /// keeps nearby id pairs statistically independent. `LinkModel`
+    /// derives its loss and bandwidth streams from the same mixer under
+    /// distinct salts, so they never correlate with the delay streams.
+    pub(crate) fn link_seed(seed: u64, from: NodeId, to: NodeId) -> u64 {
         let mut z = seed ^ 0x9E37_79B9_7F4A_7C15;
         for part in [from, to] {
             z = (z ^ part).wrapping_mul(0xBF58_476D_1CE4_E5B9);
@@ -142,19 +150,183 @@ impl LinkDelay {
     }
 }
 
+/// Salt separating the per-link *loss* streams from the delay streams.
+const LOSS_SALT: u64 = 0x4C05_5A17_9E3B_D201;
+
+/// Transfer time in µs of `bytes` over a `mbps` pipe: 1 Mbit/s carries
+/// exactly 1 bit per µs, so `time = bits / mbps`. Ceiled and floored at
+/// 1 µs so serialization always advances virtual time deterministically.
+/// Callers guarantee `mbps > 0`.
+fn transfer_us(bytes: u64, mbps: f64) -> Time {
+    ((bytes as f64 * 8.0) / mbps).ceil().max(1.0) as Time
+}
+
+/// The full per-link model both transport backends sample: propagation
+/// (the wrapped [`LinkDelay`] — its streams, seeds, and open-set
+/// semantics are untouched, so latency-only configs reproduce the
+/// pre-`LinkModel` sequences bitwise), plus
+///
+/// * **per-link bandwidth** — each directed link gets a capacity drawn
+///   deterministically in `[0.5, 1.5) × bandwidth_mbps` from a salted
+///   hash of `(seed, from, to)` (stateless: no stream to keep aligned),
+///   adding `bytes / capacity` of serialization time;
+/// * **per-link loss** — an independent seeded lottery stream per
+///   directed link (salted, so it never correlates with the delay
+///   stream); a hit means the frame is dropped before scheduling.
+///   When `loss == 0` no stream is consumed at all, so lossless configs
+///   carry zero extra state on either backend;
+/// * **per-node capacity queues** — a busy-until horizon per sender
+///   uplink and receiver downlink (`node_up_mbps` / `node_down_mbps`):
+///   concurrent sends from one node queue behind each other, which is
+///   exactly how large model payloads create stragglers.
+///
+/// `sample` returns `None` for a lost frame — after consuming the same
+/// stream draws a delivered frame would have consumed, so outcomes
+/// never shift a link's sequence between backends. Delivery time
+/// composes as `uplink queue+ser → link ser → propagation → downlink
+/// queue+ser`, every stage saturating.
+#[derive(Debug)]
+pub struct LinkModel {
+    cfg: NetConfig,
+    delay: LinkDelay,
+    /// Per-directed-link loss lottery streams (only for links between
+    /// two open nodes, mirroring `LinkDelay`'s ephemeral rule).
+    loss: HashMap<(NodeId, NodeId), Rng>,
+    /// Open endpoints (the loss/busy mirror of `LinkDelay::open`).
+    open: std::collections::HashSet<NodeId>,
+    /// Busy-until horizon of each node's uplink / downlink.
+    up_busy: HashMap<NodeId, Time>,
+    down_busy: HashMap<NodeId, Time>,
+    /// Frames the loss lottery dropped (telemetry; conformance asserts
+    /// this matches across backends).
+    lost: u64,
+}
+
+impl LinkModel {
+    pub fn new(cfg: &NetConfig) -> Self {
+        Self {
+            cfg: cfg.clone(),
+            delay: LinkDelay::new(cfg),
+            loss: HashMap::new(),
+            open: std::collections::HashSet::new(),
+            up_busy: HashMap::new(),
+            down_busy: HashMap::new(),
+            lost: 0,
+        }
+    }
+
+    /// The directed link's capacity in Mbit/s: the configured mean
+    /// scaled by a seeded factor in `[0.5, 1.5)`. Pure function of
+    /// `(seed, from, to)` — no state, nothing to prune or replay.
+    pub fn link_mbps(&self, from: NodeId, to: NodeId) -> f64 {
+        let h = LinkDelay::link_seed(self.cfg.seed ^ BW_SALT, from, to);
+        let frac = (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        self.cfg.bandwidth_mbps * (0.5 + frac)
+    }
+
+    /// Draw the loss lottery for one send on `from -> to`. Links
+    /// touching a non-open node draw ephemerally (fresh stream each
+    /// call) exactly like `LinkDelay::sample` — identical on both
+    /// backends, and departed links leave no state behind.
+    fn draw_loss(&mut self, from: NodeId, to: NodeId) -> bool {
+        let p = self.cfg.loss;
+        let seed = LinkDelay::link_seed(self.cfg.seed ^ LOSS_SALT, from, to);
+        if !self.open.contains(&from) || !self.open.contains(&to) {
+            return Rng::new(seed).next_f64() < p;
+        }
+        self.loss
+            .entry((from, to))
+            .or_insert_with(|| Rng::new(seed))
+            .next_f64()
+            < p
+    }
+
+    /// Sample one send of `bytes` on `from -> to` at virtual time `now`:
+    /// `Some(deliver_at)` or `None` if the loss lottery dropped it.
+    ///
+    /// The propagation and loss streams advance *first, unconditionally,
+    /// in this order* — every send consumes the same stream positions on
+    /// every backend whatever the outcome. Capacity horizons advance
+    /// only for delivered frames (a lost frame never transmits), and in
+    /// send order, which both backends share: sends happen serially as
+    /// events dispatch in global time order.
+    pub fn sample(&mut self, now: Time, from: NodeId, to: NodeId, bytes: u64) -> Option<Time> {
+        let prop = self.delay.sample(from, to);
+        if self.cfg.loss > 0.0 && self.draw_loss(from, to) {
+            self.lost += 1;
+            return None;
+        }
+        let mut t = now;
+        if self.cfg.node_up_mbps > 0.0 {
+            let ser = transfer_us(bytes, self.cfg.node_up_mbps);
+            let start = t.max(self.up_busy.get(&from).copied().unwrap_or(0));
+            let end = start.saturating_add(ser);
+            self.up_busy.insert(from, end);
+            t = end;
+        }
+        if self.cfg.bandwidth_mbps > 0.0 {
+            t = t.saturating_add(transfer_us(bytes, self.link_mbps(from, to)));
+        }
+        t = t.saturating_add(prop);
+        if self.cfg.node_down_mbps > 0.0 {
+            let ser = transfer_us(bytes, self.cfg.node_down_mbps);
+            let start = t.max(self.down_busy.get(&to).copied().unwrap_or(0));
+            let end = start.saturating_add(ser);
+            self.down_busy.insert(to, end);
+            t = end;
+        }
+        Some(t)
+    }
+
+    /// `node`'s endpoint closed: prune its delay and loss streams and
+    /// its capacity horizons. Both backends call this from
+    /// `Transport::close`, so link state stays identical across them.
+    pub fn forget(&mut self, node: NodeId) {
+        self.delay.forget(node);
+        self.loss.retain(|&(from, to), _| from != node && to != node);
+        self.open.remove(&node);
+        self.up_busy.remove(&node);
+        self.down_busy.remove(&node);
+    }
+
+    /// `node`'s endpoint (re)opened: cached streaming for its links. A
+    /// reused id restarts its streams and horizons from scratch — on
+    /// both backends, since both pruned at close.
+    pub fn reopen(&mut self, node: NodeId) {
+        self.delay.reopen(node);
+        self.open.insert(node);
+    }
+
+    /// Frames dropped by the loss lottery so far.
+    pub fn lost(&self) -> u64 {
+        self.lost
+    }
+
+    /// Cached loss streams held (footprint telemetry, bounded by the
+    /// live mesh like `LinkDelay::link_count`).
+    pub fn loss_stream_count(&self) -> usize {
+        self.loss.len()
+    }
+}
+
+/// Salt separating the per-link *bandwidth* factors from everything else.
+const BW_SALT: u64 = 0xBA2D_31D7_0F0E_55ED;
+
 /// The in-memory message backend: every send is scheduled back onto the
-/// caller's event queue after a per-link [`LinkDelay`] sample. Fully
+/// caller's event queue after a per-link [`LinkModel`] sample — or
+/// silently dropped when the loss lottery hits (the caller's
+/// `if let Some(at)` dispatch path never schedules a `Deliver`). Fully
 /// deterministic per seed — the reference behavior the TCP backend is
 /// conformance-tested against.
 #[derive(Debug)]
 pub struct SimTransport {
-    delay: LinkDelay,
+    model: LinkModel,
 }
 
 impl SimTransport {
     pub fn new(cfg: &NetConfig) -> Self {
         Self {
-            delay: LinkDelay::new(cfg),
+            model: LinkModel::new(cfg),
         }
     }
 }
@@ -165,18 +337,19 @@ impl Transport for SimTransport {
     }
 
     fn open(&mut self, node: NodeId) -> anyhow::Result<()> {
-        self.delay.reopen(node);
+        self.model.reopen(node);
         Ok(())
     }
 
     fn close(&mut self, node: NodeId) {
-        self.delay.forget(node);
+        self.model.forget(node);
     }
 
-    fn send(&mut self, now: Time, from: NodeId, to: NodeId, _msg: &Msg) -> Option<Time> {
-        // saturating, to match the wire path's `Stamp::due()` on absurd
-        // configured latencies
-        Some(now.saturating_add(self.delay.sample(from, to)))
+    fn send(&mut self, now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time> {
+        // `LinkModel::sample` saturates internally, matching the wire
+        // path's `Stamp::due()` on absurd configured latencies; `None`
+        // (a loss-lottery hit) drops the frame before scheduling.
+        self.model.sample(now, from, to, msg.wire_size() as u64)
     }
 
     fn poll(&mut self) -> Vec<Arrival> {
@@ -186,19 +359,30 @@ impl Transport for SimTransport {
     fn idle(&self) -> bool {
         true
     }
+
+    fn lost_frames(&self) -> u64 {
+        self.model.lost()
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// A latency-only config (link-model fields at their disabled
+    /// defaults), as every pre-`LinkModel` test used.
+    fn net(latency_ms: f64, jitter: f64, seed: u64) -> NetConfig {
+        NetConfig {
+            latency_ms,
+            jitter,
+            seed,
+            ..NetConfig::default()
+        }
+    }
+
     #[test]
     fn mean_near_base_plus_jitter() {
-        let cfg = NetConfig {
-            latency_ms: 350.0,
-            jitter: 0.2,
-            seed: 1,
-        };
+        let cfg = net(350.0, 0.2, 1);
         let mut m = LatencyModel::new(&cfg);
         let n = 20_000;
         let mean: f64 = (0..n).map(|_| m.sample() as f64).sum::<f64>() / n as f64;
@@ -208,22 +392,14 @@ mod tests {
 
     #[test]
     fn zero_jitter_is_constant() {
-        let cfg = NetConfig {
-            latency_ms: 10.0,
-            jitter: 0.0,
-            seed: 2,
-        };
+        let cfg = net(10.0, 0.0, 2);
         let mut m = LatencyModel::new(&cfg);
         assert!((0..100).all(|_| m.sample() == 10_000));
     }
 
     #[test]
     fn link_delay_is_deterministic_per_seed() {
-        let cfg = NetConfig {
-            latency_ms: 40.0,
-            jitter: 0.3,
-            seed: 11,
-        };
+        let cfg = net(40.0, 0.3, 11);
         let draw = |cfg: &NetConfig| {
             let mut d = LinkDelay::new(cfg);
             for n in 0..5 {
@@ -241,11 +417,7 @@ mod tests {
 
     #[test]
     fn link_delay_respects_distribution_bounds() {
-        let cfg = NetConfig {
-            latency_ms: 25.0,
-            jitter: 0.2,
-            seed: 3,
-        };
+        let cfg = net(25.0, 0.2, 3);
         let mut d = LinkDelay::new(&cfg);
         d.reopen(1);
         d.reopen(2);
@@ -258,11 +430,7 @@ mod tests {
         let want = 25_000.0 * 1.2;
         assert!((mean - want).abs() < want * 0.05, "mean {mean} want {want}");
         // zero-latency configs still produce strictly positive delays
-        let zero = NetConfig {
-            latency_ms: 0.0,
-            jitter: 0.0,
-            seed: 3,
-        };
+        let zero = net(0.0, 0.0, 3);
         let mut z = LinkDelay::new(&zero);
         z.reopen(1);
         z.reopen(2);
@@ -271,11 +439,7 @@ mod tests {
 
     #[test]
     fn links_are_independent_streams() {
-        let cfg = NetConfig {
-            latency_ms: 50.0,
-            jitter: 0.5,
-            seed: 7,
-        };
+        let cfg = net(50.0, 0.5, 7);
         let opened = |cfg: &NetConfig| {
             let mut d = LinkDelay::new(cfg);
             for n in 1..=4 {
@@ -304,11 +468,7 @@ mod tests {
 
     #[test]
     fn forget_prunes_links_and_samples_dead_ones_ephemerally() {
-        let cfg = NetConfig {
-            latency_ms: 50.0,
-            jitter: 0.5,
-            seed: 9,
-        };
+        let cfg = net(50.0, 0.5, 9);
         let mut d = LinkDelay::new(&cfg);
         for n in 1..=3 {
             d.reopen(n);
@@ -338,11 +498,7 @@ mod tests {
 
     #[test]
     fn churned_ids_leave_no_tombstones() {
-        let cfg = NetConfig {
-            latency_ms: 10.0,
-            jitter: 0.1,
-            seed: 6,
-        };
+        let cfg = net(10.0, 0.1, 6);
         let mut d = LinkDelay::new(&cfg);
         d.reopen(0);
         for id in 1..5_000u64 {
@@ -359,11 +515,7 @@ mod tests {
 
     #[test]
     fn sim_transport_schedules_and_never_polls() {
-        let cfg = NetConfig {
-            latency_ms: 5.0,
-            jitter: 0.0,
-            seed: 3,
-        };
+        let cfg = net(5.0, 0.0, 3);
         let mut t = SimTransport::new(&cfg);
         assert!(t.idle());
         assert!(t.open(1).is_ok());
@@ -375,16 +527,238 @@ mod tests {
 
     #[test]
     fn sim_transport_broadcast_schedules_every_destination() {
-        let cfg = NetConfig {
-            latency_ms: 2.0,
-            jitter: 0.0,
-            seed: 4,
-        };
+        let cfg = net(2.0, 0.0, 4);
         let mut t = SimTransport::new(&cfg);
         let scheduled = t.broadcast(50, 1, &[2, 3, 4], &Msg::Heartbeat);
         assert_eq!(
             scheduled,
             vec![(2, 50 + 2_000), (3, 50 + 2_000), (4, 50 + 2_000)]
         );
+    }
+
+    // ------------------------------------------------------------------
+    // LinkModel: the battery mirrors LinkDelay's (seeded determinism,
+    // link independence, pruning) plus loss/bandwidth/capacity behavior
+    // ------------------------------------------------------------------
+
+    /// A full link-model config: bandwidth, loss, and node caps all on.
+    fn rich_net(seed: u64) -> NetConfig {
+        NetConfig {
+            latency_ms: 20.0,
+            jitter: 0.3,
+            bandwidth_mbps: 8.0,
+            loss: 0.2,
+            node_up_mbps: 16.0,
+            node_down_mbps: 16.0,
+            seed,
+        }
+    }
+
+    fn opened_model(cfg: &NetConfig, ids: std::ops::RangeInclusive<u64>) -> LinkModel {
+        let mut m = LinkModel::new(cfg);
+        for n in ids {
+            m.reopen(n);
+        }
+        m
+    }
+
+    #[test]
+    fn link_model_defaults_reduce_to_latency_only() {
+        // with the link-model fields at their disabled defaults, the
+        // model is exactly `now + LinkDelay::sample` and never loses
+        let cfg = net(40.0, 0.3, 11);
+        let mut d = LinkDelay::new(&cfg);
+        let mut m = LinkModel::new(&cfg);
+        for n in 1..=3 {
+            d.reopen(n);
+            m.reopen(n);
+        }
+        for i in 0..200u64 {
+            let now = i * 1_000;
+            let want = now + d.sample(1 + i % 2, 2 + i % 2);
+            assert_eq!(m.sample(now, 1 + i % 2, 2 + i % 2, 10_000), Some(want));
+        }
+        assert_eq!(m.lost(), 0);
+        assert_eq!(m.loss_stream_count(), 0, "lossless configs keep no loss state");
+    }
+
+    #[test]
+    fn link_model_is_deterministic_per_seed() {
+        let draw = |cfg: &NetConfig| {
+            let mut m = opened_model(cfg, 0..=4);
+            (0..300u64)
+                .map(|i| m.sample(i * 500, i % 5, (i + 1) % 5, 2_000 + i * 7))
+                .collect::<Vec<Option<Time>>>()
+        };
+        let cfg = rich_net(11);
+        assert_eq!(draw(&cfg), draw(&cfg), "same seed must replay identically");
+        let a = draw(&cfg);
+        assert!(a.iter().any(|s| s.is_none()), "loss 0.2 must drop some frames");
+        assert!(a.iter().any(|s| s.is_some()), "loss 0.2 must deliver some frames");
+        let other = NetConfig { seed: 12, ..cfg };
+        assert_ne!(a, draw(&other), "different seeds must differ");
+    }
+
+    #[test]
+    fn link_model_per_link_outcomes_are_independent() {
+        // per-link features only (no shared node horizons): foreign
+        // links must not perturb link (1,2)'s outcome sequence
+        let cfg = NetConfig {
+            latency_ms: 30.0,
+            jitter: 0.4,
+            bandwidth_mbps: 10.0,
+            loss: 0.25,
+            node_up_mbps: 0.0,
+            node_down_mbps: 0.0,
+            seed: 21,
+        };
+        let mut solo = opened_model(&cfg, 1..=4);
+        let a_solo: Vec<Option<Time>> =
+            (0..150u64).map(|i| solo.sample(i * 100, 1, 2, 5_000)).collect();
+        let mut mixed = opened_model(&cfg, 1..=4);
+        let a_mixed: Vec<Option<Time>> = (0..150u64)
+            .map(|i| {
+                mixed.sample(i * 100, 3, 4, 9_000);
+                mixed.sample(i * 100, 2, 1, 1_000); // reverse = its own link
+                mixed.sample(i * 100, 1, 2, 5_000)
+            })
+            .collect();
+        assert_eq!(a_solo, a_mixed, "foreign links perturbed link (1,2)");
+    }
+
+    #[test]
+    fn link_model_loss_stream_is_independent_of_delay_stream() {
+        // two configs differing only in `loss`: every delivered frame
+        // must keep the identical delivery time — the loss lottery draws
+        // from its own salted stream, never from the delay stream
+        let lossless = net(25.0, 0.5, 17);
+        let lossy = NetConfig { loss: 0.3, ..lossless.clone() };
+        let mut a = opened_model(&lossless, 1..=2);
+        let mut b = opened_model(&lossy, 1..=2);
+        let mut delivered = 0;
+        for i in 0..400u64 {
+            let now = i * 1_000;
+            let clean = a.sample(now, 1, 2, 3_000).unwrap();
+            match b.sample(now, 1, 2, 3_000) {
+                Some(t) => {
+                    assert_eq!(t, clean, "loss draw shifted the delay stream at send {i}");
+                    delivered += 1;
+                }
+                None => {}
+            }
+        }
+        assert!(b.lost() > 0, "loss 0.3 should drop some of 400 sends");
+        assert_eq!(delivered + b.lost(), 400);
+    }
+
+    #[test]
+    fn link_model_bandwidth_scales_with_bytes() {
+        // zero latency/jitter isolates serialization: delivery is
+        // now + bytes/link_mbps (+ the 1 µs propagation floor)
+        let cfg = NetConfig {
+            latency_ms: 0.0,
+            jitter: 0.0,
+            bandwidth_mbps: 8.0,
+            loss: 0.0,
+            node_up_mbps: 0.0,
+            node_down_mbps: 0.0,
+            seed: 5,
+        };
+        let mut m = opened_model(&cfg, 1..=3);
+        let mbps = m.link_mbps(1, 2);
+        assert!((4.0..12.0).contains(&mbps), "factor outside [0.5,1.5): {mbps}");
+        let small = m.sample(0, 1, 2, 1_000).unwrap();
+        let big = m.sample(0, 1, 2, 100_000).unwrap();
+        assert_eq!(small, transfer_us(1_000, mbps) + 1);
+        assert_eq!(big, transfer_us(100_000, mbps) + 1);
+        assert!(big > 50 * small / 2, "transfer time must scale with bytes");
+        // directed links draw their own seeded capacities
+        assert_ne!(m.link_mbps(1, 2), m.link_mbps(2, 1));
+        assert_ne!(m.link_mbps(1, 2), m.link_mbps(1, 3));
+    }
+
+    #[test]
+    fn link_model_uplink_queue_creates_stragglers() {
+        // one sender, two same-instant sends: the second queues behind
+        // the first on the shared uplink
+        let cfg = NetConfig {
+            latency_ms: 0.0,
+            jitter: 0.0,
+            bandwidth_mbps: 0.0,
+            loss: 0.0,
+            node_up_mbps: 8.0,
+            node_down_mbps: 0.0,
+            seed: 6,
+        };
+        let mut m = opened_model(&cfg, 1..=3);
+        let ser = transfer_us(40_000, 8.0); // 40 kB at 8 Mbit/s = 40 ms
+        let first = m.sample(1_000, 1, 2, 40_000).unwrap();
+        let second = m.sample(1_000, 1, 3, 40_000).unwrap();
+        assert_eq!(first, 1_000 + ser + 1);
+        assert_eq!(second, 1_000 + 2 * ser + 1, "second send must queue");
+        // once the uplink drains, a later send pays only its own time
+        let later = m.sample(first + 2 * ser, 1, 2, 40_000).unwrap();
+        assert_eq!(later, first + 2 * ser + ser + 1);
+    }
+
+    #[test]
+    fn link_model_downlink_queue_serializes_receives() {
+        let cfg = NetConfig {
+            latency_ms: 0.0,
+            jitter: 0.0,
+            bandwidth_mbps: 0.0,
+            loss: 0.0,
+            node_up_mbps: 0.0,
+            node_down_mbps: 8.0,
+            seed: 6,
+        };
+        let mut m = opened_model(&cfg, 1..=3);
+        let ser = transfer_us(8_000, 8.0);
+        let a = m.sample(500, 1, 3, 8_000).unwrap();
+        let b = m.sample(500, 2, 3, 8_000).unwrap();
+        assert_eq!(a, 500 + 1 + ser);
+        assert_eq!(b, a + ser, "receiver downlink must serialize arrivals");
+    }
+
+    #[test]
+    fn link_model_forget_prunes_loss_streams_and_horizons() {
+        let cfg = rich_net(9);
+        let mut m = opened_model(&cfg, 1..=3);
+        let first = m.sample(0, 1, 2, 4_000);
+        for i in 1..40u64 {
+            m.sample(i * 1_000, 1, 2, 4_000);
+            m.sample(i * 1_000, 2, 3, 4_000);
+        }
+        assert!(m.loss_stream_count() >= 2);
+        m.forget(1);
+        m.forget(2);
+        m.forget(3);
+        assert_eq!(m.loss_stream_count(), 0, "forget must prune loss streams");
+        // a reopened (reused) id restarts every stream from its seed
+        m.reopen(1);
+        m.reopen(2);
+        assert_eq!(m.sample(0, 1, 2, 4_000), first);
+    }
+
+    #[test]
+    fn sim_transport_drops_lost_frames_and_counts_them() {
+        let cfg = NetConfig {
+            loss: 0.5,
+            latency_ms: 1.0,
+            jitter: 0.0,
+            seed: 8,
+            ..NetConfig::default()
+        };
+        let mut t = SimTransport::new(&cfg);
+        t.open(1).unwrap();
+        t.open(2).unwrap();
+        let mut dropped = 0u64;
+        for i in 0..200u64 {
+            if t.send(i * 10, 1, 2, &Msg::Heartbeat).is_none() {
+                dropped += 1;
+            }
+        }
+        assert!(dropped > 0 && dropped < 200, "loss 0.5 should drop ~half");
+        assert_eq!(t.lost_frames(), dropped);
     }
 }

@@ -197,6 +197,19 @@ impl Simulator {
         self.transport.name()
     }
 
+    /// Frames the transport's link-model loss lottery dropped so far
+    /// (telemetry; the conformance suite pins sim ≡ tcp on this count).
+    pub fn lost_frames(&self) -> u64 {
+        self.transport.lost_frames()
+    }
+
+    /// Transport-level send failures (connect/write errors against live
+    /// addresses). `0` on the in-memory backend, and asserted `0` for
+    /// clean socket runs by the conformance suite.
+    pub fn dropped_sends(&self) -> u64 {
+        self.transport.dropped_sends()
+    }
+
     /// Drain the set of nodes whose ring views changed since the last
     /// call (see `view_changes`).
     pub fn take_view_changes(&mut self) -> Vec<NodeId> {
@@ -871,6 +884,7 @@ mod tests {
             latency_ms: 50.0,
             jitter: 0.2,
             seed: 5,
+            ..NetConfig::default()
         }
     }
 
@@ -1031,6 +1045,44 @@ mod tests {
         let serial = run(1);
         for k in [2, 4, 7] {
             assert_eq!(serial, run(k), "shard count {k} diverged");
+        }
+    }
+
+    /// The full link model (bandwidth + loss + node caps) is as
+    /// deterministic and sharding-invariant as the latency-only one:
+    /// identical delivered/lost counts, arrival log, and rings at any K.
+    #[test]
+    fn lossy_run_is_deterministic_and_sharding_invariant() {
+        let lossy = NetConfig {
+            latency_ms: 50.0,
+            jitter: 0.2,
+            bandwidth_mbps: 5.0,
+            loss: 0.05,
+            node_up_mbps: 20.0,
+            node_down_mbps: 20.0,
+            seed: 5,
+        };
+        let run = |k: usize| {
+            let mut sim = Simulator::new(overlay(2), lossy.clone());
+            sim.set_shards(k);
+            sim.record_deliveries(true);
+            sim.bootstrap_correct(&(0..24).collect::<Vec<_>>());
+            sim.schedule_fail(5 * MS, 3);
+            sim.schedule_join(6 * MS, 99, 1);
+            sim.run_until(30_000 * MS);
+            (
+                sim.delivered,
+                sim.lost_frames(),
+                sim.delivery_log.clone(),
+                sim.correctness(),
+                sim.ring_snapshot(),
+            )
+        };
+        let serial = run(1);
+        assert!(serial.1 > 0, "5% loss over 30s of heartbeats must drop frames");
+        assert_eq!(serial, run(1), "lossy runs must replay identically");
+        for k in [2, 4] {
+            assert_eq!(serial, run(k), "shard count {k} diverged under loss");
         }
     }
 

@@ -269,14 +269,8 @@ impl ScenarioSpec {
         ensure!(self.overlay.spaces >= 1, "overlay.spaces must be >= 1");
         ensure!(self.min_live >= 1, "scenario.min_live must be >= 1");
         ensure!(self.shards >= 1, "scenario.shards must be >= 1");
-        ensure!(
-            self.net.latency_ms.is_finite() && self.net.latency_ms >= 0.0,
-            "net.latency_ms must be a finite value >= 0"
-        );
-        ensure!(
-            self.net.jitter.is_finite() && self.net.jitter >= 0.0,
-            "net.jitter must be a finite value >= 0"
-        );
+        // latency, jitter, bandwidth, loss, node capacities
+        self.net.validate()?;
         for (i, ph) in self.phases.iter().enumerate() {
             match ph.kind {
                 PhaseKind::Partition { fraction } => {
@@ -634,6 +628,7 @@ impl ScenarioSpec {
             .collect();
         report.cache_hits = cache_hits;
         report.cache_misses = cache_misses;
+        report.model_mb_per_client = trainer.model_mb_per_client();
         Ok(report)
     }
 
@@ -685,6 +680,10 @@ impl ScenarioSpec {
         let net = NetConfig {
             latency_ms: float_key(doc, "net.latency_ms")?.unwrap_or(nd.latency_ms),
             jitter: float_key(doc, "net.jitter")?.unwrap_or(nd.jitter),
+            bandwidth_mbps: float_key(doc, "net.bandwidth_mbps")?.unwrap_or(nd.bandwidth_mbps),
+            loss: float_key(doc, "net.loss")?.unwrap_or(nd.loss),
+            node_up_mbps: float_key(doc, "net.node_up_mbps")?.unwrap_or(nd.node_up_mbps),
+            node_down_mbps: float_key(doc, "net.node_down_mbps")?.unwrap_or(nd.node_down_mbps),
             seed: int_key(doc, "net.seed")?.map(|v| v as u64).unwrap_or(seed),
         };
         let mut indices: BTreeSet<u64> = BTreeSet::new();
@@ -805,6 +804,10 @@ impl ScenarioSpec {
         s.push_str("\n[net]\n");
         s.push_str(&format!("latency_ms = {}\n", self.net.latency_ms));
         s.push_str(&format!("jitter = {}\n", self.net.jitter));
+        s.push_str(&format!("bandwidth_mbps = {}\n", self.net.bandwidth_mbps));
+        s.push_str(&format!("loss = {}\n", self.net.loss));
+        s.push_str(&format!("node_up_mbps = {}\n", self.net.node_up_mbps));
+        s.push_str(&format!("node_down_mbps = {}\n", self.net.node_down_mbps));
         s.push_str(&format!("seed = {}\n", self.net.seed));
         for (i, ph) in self.phases.iter().enumerate() {
             s.push_str(&format!("\n[phase.{}]\n", i + 1));
@@ -866,6 +869,10 @@ const SCALAR_KEYS: &[&str] = &[
     "overlay.repair_probe_ms",
     "net.latency_ms",
     "net.jitter",
+    "net.bandwidth_mbps",
+    "net.loss",
+    "net.node_up_mbps",
+    "net.node_down_mbps",
     "net.seed",
 ];
 
@@ -1052,6 +1059,13 @@ pub struct ScenarioReport {
     /// Trainer neighbor-cache telemetry (zero for overlay-only runs).
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Frames the link model's loss lottery dropped (0 on lossless
+    /// configs — the historical behavior).
+    pub lost_frames: u64,
+    /// Model-payload megabytes sent per client across lanes (0 for
+    /// overlay-only runs) — the bytes axis of accuracy-vs-bytes studies,
+    /// charged at the wire scheme's compressed size.
+    pub model_mb_per_client: f64,
 }
 
 impl ScenarioReport {
@@ -1077,6 +1091,8 @@ impl ScenarioReport {
             task_accuracy: Vec::new(),
             cache_hits: 0,
             cache_misses: 0,
+            lost_frames: sim.lost_frames(),
+            model_mb_per_client: 0.0,
         }
     }
 
@@ -1172,6 +1188,17 @@ impl ScenarioReport {
                 self.cache_hits, self.cache_misses
             ));
         }
+        // link-model telemetry, shown only when the feature is on so
+        // zero-default runs render exactly as before
+        if self.lost_frames > 0 {
+            out.push_str(&format!("lost frames (link loss): {}\n", self.lost_frames));
+        }
+        if self.model_mb_per_client > 0.0 {
+            out.push_str(&format!(
+                "model payload MB/client: {:.2}\n",
+                self.model_mb_per_client
+            ));
+        }
         out
     }
 
@@ -1224,6 +1251,7 @@ mod tests {
             latency_ms: 50.0,
             jitter: 0.1,
             seed,
+            ..NetConfig::default()
         }
     }
 
@@ -1359,9 +1387,30 @@ mod tests {
             kind: PhaseKind::Partition { fraction: 0.2 },
         });
         spec.settle = 60 * SEC;
+        // non-default link-model fields must survive the round trip too
+        spec.net.bandwidth_mbps = 12.5;
+        spec.net.loss = 0.05;
+        spec.net.node_up_mbps = 20.0;
+        spec.net.node_down_mbps = 16.0;
         let text = spec.to_toml();
         let back = ScenarioSpec::from_toml_str(&text).expect("round trip parse");
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn from_doc_rejects_invalid_link_model_fields() {
+        let bad_loss = "[scenario]\ninitial = 10\n[net]\nloss = 1.5\n";
+        assert!(ScenarioSpec::from_toml_str(bad_loss).is_err());
+        let bad_bw = "[scenario]\ninitial = 10\n[net]\nbandwidth_mbps = -4.0\n";
+        assert!(ScenarioSpec::from_toml_str(bad_bw).is_err());
+        // a valid lossy spec parses and carries the fields
+        let ok = "[scenario]\ninitial = 10\n[net]\nbandwidth_mbps = 8.0\nloss = 0.02\n\
+                  node_up_mbps = 16.0\nnode_down_mbps = 16.0\n";
+        let spec = ScenarioSpec::from_toml_str(ok).expect("valid lossy spec");
+        assert_eq!(spec.net.bandwidth_mbps, 8.0);
+        assert_eq!(spec.net.loss, 0.02);
+        assert_eq!(spec.net.node_up_mbps, 16.0);
+        assert_eq!(spec.net.node_down_mbps, 16.0);
     }
 
     #[test]

@@ -8,12 +8,16 @@
 //!   Heartbeats, repair probes, joins, failures, and snapshots are heap
 //!   events popped in virtual-time order — identically on every backend.
 //! * **Message passage** belongs to a `Transport`. The simulated backend
-//!   (`sim::network::SimTransport`) samples a per-link delay
-//!   (`sim::network::LinkDelay`) and hands the message straight back to
-//!   the scheduler; the socket backend (`net::SchedTransport`) samples
-//!   the *same* per-link delay, stamps it into a real TCP frame, and
-//!   surfaces the arrival — tagged with its virtual due time — on the
-//!   next `poll`.
+//!   (`sim::network::SimTransport`) samples the per-link model
+//!   (`sim::network::LinkModel`: propagation delay, payload-proportional
+//!   bandwidth, loss lottery, per-node capacity queues) and hands the
+//!   message straight back to the scheduler; the socket backend
+//!   (`net::SchedTransport`) samples the *same* per-link model, stamps
+//!   the full delay into a real TCP frame, and surfaces the arrival —
+//!   tagged with its virtual due time — on the next `poll`. A
+//!   loss-lottery hit is a silent drop on the in-memory path and a
+//!   deliberate non-send on the socket path — the same frames vanish on
+//!   both.
 //!
 //! A backend therefore answers `send` in one of two ways:
 //!
@@ -73,11 +77,30 @@ pub trait Transport: Send + Sync {
     /// Returns `Some(deliver_at)` when the caller should schedule the
     /// delivery on its own event queue (in-memory backend), or `None`
     /// when the transport moves the bytes itself and the caller should
-    /// `poll` for the arrival (socket backend). Sends to unknown or dead
-    /// endpoints are dropped, never an error — but every backend still
-    /// samples the link delay for them, so dropped sends cannot shift a
-    /// link's delay sequence between backends.
+    /// `poll` for the arrival (socket backend) — **or** when the link
+    /// model's loss lottery dropped the frame (either backend: the
+    /// in-memory path simply never schedules it, the socket path never
+    /// writes it). Sends to unknown or dead endpoints are dropped, never
+    /// an error. In every drop case the backend still samples the link
+    /// model's streams first, so drops cannot shift a link's delay or
+    /// loss sequence between backends.
     fn send(&mut self, now: Time, from: NodeId, to: NodeId, msg: &Msg) -> Option<Time>;
+
+    /// Frames the link model's loss lottery dropped so far. `0` on
+    /// backends without a loss model. The conformance suite asserts the
+    /// two backends agree on this count for a seeded lossy run.
+    fn lost_frames(&self) -> u64 {
+        0
+    }
+
+    /// Sends that failed in the transport itself (connect refused, write
+    /// error against a resolved live address) — *not* loss-lottery drops
+    /// and not unreachable-peer drops, which are routine under churn.
+    /// `0` on the in-memory backend; the conformance suite asserts a
+    /// clean socket run stays at `0`.
+    fn dropped_sends(&self) -> u64 {
+        0
+    }
 
     /// Fan `msg` out to several destinations; returns the scheduled
     /// `(to, deliver_at)` pairs for queue-scheduled deliveries.

@@ -49,6 +49,7 @@ fn net(seed: u64) -> NetConfig {
         latency_ms: 80.0,
         jitter: 0.2,
         seed,
+        ..NetConfig::default()
     }
 }
 

@@ -28,6 +28,7 @@ fn net(seed: u64) -> NetConfig {
         latency_ms: 80.0,
         jitter: 0.3,
         seed,
+        ..NetConfig::default()
     }
 }
 

@@ -33,6 +33,7 @@ fn net(seed: u64) -> NetConfig {
         latency_ms: 350.0,
         jitter: 0.2,
         seed,
+        ..NetConfig::default()
     }
 }
 

@@ -80,6 +80,7 @@ fn random_spec(seed: u64) -> ScenarioSpec {
             latency_ms: 60.0,
             jitter: 0.2,
             seed,
+            ..NetConfig::default()
         },
         phases,
     }

@@ -36,6 +36,7 @@ fn poisson_churn_scenario_scales_to_10k_clients() -> anyhow::Result<()> {
         latency_ms: 100.0,
         jitter: 0.1,
         seed: 71,
+        ..NetConfig::default()
     };
     let spec = ScenarioSpec {
         name: "poisson-10k".into(),
@@ -139,6 +140,7 @@ fn poisson_churn_scenario_scales_to_100k_clients_sharded() -> anyhow::Result<()>
         latency_ms: 100.0,
         jitter: 0.1,
         seed: 73,
+        ..NetConfig::default()
     };
     let spec = ScenarioSpec {
         name: "poisson-100k".into(),

@@ -99,6 +99,7 @@ fn random_spec(seed: u64) -> ScenarioSpec {
             latency_ms: 40.0 + rng.next_f64() * 100.0,
             jitter: 0.2,
             seed,
+            ..NetConfig::default()
         },
         phases,
     }
@@ -154,6 +155,7 @@ fn arena_slots_are_bounded_by_peak_live_set_under_wave_churn() {
             latency_ms: 50.0,
             jitter: 0.2,
             seed: 7,
+            ..NetConfig::default()
         },
         phases,
     };
@@ -199,6 +201,7 @@ fn footprint_stays_bounded_under_long_poisson_churn() {
             latency_ms: 50.0,
             jitter: 0.2,
             seed: 11,
+            ..NetConfig::default()
         },
         phases: vec![Phase {
             at: 2 * SEC,

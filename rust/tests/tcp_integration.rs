@@ -52,6 +52,7 @@ fn spawn_fleet(
             lr: 0.5,
             local_steps: 1,
             period_ms,
+            compression: fedlay::dfl::Compression::None,
             seed: 7,
         };
         // spawn blocks until the listener is bound and registered, so

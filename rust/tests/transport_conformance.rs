@@ -41,6 +41,7 @@ fn net() -> NetConfig {
         latency_ms: 30.0,
         jitter: 0.2,
         seed: 13,
+        ..NetConfig::default()
     }
 }
 
@@ -124,6 +125,59 @@ fn sim_and_tcp_backends_agree_on_churn_schedule() {
     assert_eq!(
         sim.delivery_log, tcp.delivery_log,
         "per-message arrival timestamps diverged between backends"
+    );
+    assert!(!sim.delivery_log.is_empty(), "trace should cover the run");
+}
+
+/// The full-link-model pin: the same churn schedule over *lossy,
+/// bandwidth-constrained* links. Both backends sample the identical
+/// seeded streams (`sim::LinkModel`), so they must drop the identical
+/// frames — same `lost_frames` count — and deliver the survivors at the
+/// identical virtual instants, converging to the identical overlay. On
+/// the socket side a loss-lottery hit is a deliberate non-send, so a
+/// lossy run is still a *clean* run: zero transport-level send errors
+/// and zero pacing anomalies expected.
+#[test]
+fn lossy_links_drop_identical_frames_on_both_backends() {
+    let lossy = NetConfig {
+        bandwidth_mbps: 8.0,
+        loss: 0.05,
+        node_up_mbps: 16.0,
+        node_down_mbps: 16.0,
+        ..net()
+    };
+    let sim = run_schedule(Simulator::new(overlay(), lossy.clone()));
+    let tcp = run_schedule(Simulator::with_transport(
+        overlay(),
+        Box::new(SchedTransport::new(&lossy)),
+    ));
+    assert_eq!(sim.backend(), "sim");
+    assert_eq!(tcp.backend(), "tcp");
+
+    // the loss lottery actually fired, and on the identical frames
+    assert!(sim.lost_frames() > 0, "5% loss should drop some frames");
+    assert_eq!(
+        sim.lost_frames(),
+        tcp.lost_frames(),
+        "backends disagree on which frames the loss lottery dropped"
+    );
+    // loss is modelled, not an error: the socket path never even wrote
+    // the lost frames
+    assert_eq!(sim.dropped_sends(), 0);
+    assert_eq!(tcp.dropped_sends(), 0, "lossy run must not drop writes");
+
+    // the surviving traffic is pinned exactly: same arrival timestamps,
+    // same counts, same converged rings, same membership
+    let sim_ids: Vec<NodeId> = sim.node_ids();
+    let tcp_ids: Vec<NodeId> = tcp.node_ids();
+    assert_eq!(sim_ids, tcp_ids, "backends disagree on live membership");
+    assert!((sim.correctness() - 1.0).abs() < 1e-12, "sim not correct");
+    assert!((tcp.correctness() - 1.0).abs() < 1e-12, "tcp not correct");
+    assert_eq!(sim.ring_snapshot(), tcp.ring_snapshot());
+    assert_eq!(sim.delivered, tcp.delivered, "delivery counts diverged");
+    assert_eq!(
+        sim.delivery_log, tcp.delivery_log,
+        "arrival timestamps diverged under loss + bandwidth"
     );
     assert!(!sim.delivery_log.is_empty(), "trace should cover the run");
 }
@@ -390,6 +444,45 @@ fn nonzero_latency_training_pins_arrivals_rings_and_accuracy() -> anyhow::Result
     assert!(!sim_log.is_empty(), "trace should cover the run");
     assert_eq!(sim_rings, tcp_rings, "ring snapshots diverged");
     assert_eq!(sim_acc, tcp_acc, "accuracy series diverged (bitwise)");
+    Ok(())
+}
+
+/// The accuracy-vs-bytes claim, in executable form: the same seeded
+/// FedLay run with quantized (q8) model exchange must move at least 3×
+/// fewer model bytes per client than dense f32 exchange, at no more
+/// than 0.02 final-accuracy cost (the bandwidth_mix scenario matrix in
+/// docs/scenarios.md is the CLI face of this bound).
+#[test]
+fn quantized_exchange_cuts_bytes_3x_within_accuracy_bound() -> anyhow::Result<()> {
+    use fedlay::dfl::Compression;
+    const MIN: Time = 60_000_000; // µs per simulated minute
+    let dir = find_artifacts_dir(None)?;
+    let engine = Engine::load(&dir, &["mlp"])?;
+    let n = 6usize;
+    let run = |compression: Compression| -> anyhow::Result<(f64, f64)> {
+        let cfg = DflConfig {
+            task: "mlp".into(),
+            clients: n,
+            local_steps: 1,
+            ..DflConfig::default()
+        };
+        let weights = shard_labels(n, 10, 8, cfg.seed);
+        let spec = MethodSpec::fedlay(n, SPACES).with_compression(compression);
+        let mut trainer = Trainer::new(&engine, spec, cfg, weights)?;
+        let last = trainer.run(12 * MIN, 6 * MIN)?;
+        Ok((trainer.model_mb_per_client(), last.mean_accuracy))
+    };
+    let (dense_mb, dense_acc) = run(Compression::None)?;
+    let (q8_mb, q8_acc) = run(Compression::Q8)?;
+    assert!(dense_mb > 0.0, "dense run should move model bytes");
+    assert!(
+        q8_mb * 3.0 <= dense_mb,
+        "q8 must cut bytes at least 3x: {q8_mb:.3} MB vs {dense_mb:.3} MB"
+    );
+    assert!(
+        (dense_acc - q8_acc).abs() <= 0.02,
+        "q8 accuracy drifted beyond the 0.02 bound: {q8_acc:.4} vs {dense_acc:.4}"
+    );
     Ok(())
 }
 

@@ -25,6 +25,7 @@ fn net() -> NetConfig {
         latency_ms: 80.0,
         jitter: 0.2,
         seed: 11,
+        ..NetConfig::default()
     }
 }
 
