@@ -112,6 +112,152 @@ pub fn write_bench_json(
     Ok(path)
 }
 
+/// Parse a `BENCH_*.json` written by `write_bench_json` back into
+/// `(name, mean_s)` pairs. Tolerant of field order within a result
+/// object but expects our own writer's one-object-per-entry shape — this
+/// is a baseline reader for `fedlay bench --compare`, not a general JSON
+/// parser (serde is not in the vendored set).
+pub fn read_bench_json(path: &std::path::Path) -> anyhow::Result<Vec<(String, f64)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read baseline {}: {e}", path.display()))?;
+    let mut out = Vec::new();
+    let mut rest = text.as_str();
+    // skip the header's "suite" string; entries live under "results"
+    let Some(results_at) = rest.find("\"results\"") else {
+        anyhow::bail!("{}: no \"results\" array", path.display());
+    };
+    rest = &rest[results_at..];
+    while let Some(at) = rest.find("\"name\":") {
+        rest = &rest[at + "\"name\":".len()..];
+        let (name, after) = parse_json_string(rest)
+            .ok_or_else(|| anyhow::anyhow!("{}: malformed name string", path.display()))?;
+        rest = after;
+        let mean_at = rest.find("\"mean_s\":").ok_or_else(|| {
+            anyhow::anyhow!("{}: entry {name:?} has no mean_s", path.display())
+        })?;
+        rest = &rest[mean_at + "\"mean_s\":".len()..];
+        let end = rest
+            .find(|c: char| c == ',' || c == '}')
+            .ok_or_else(|| anyhow::anyhow!("{}: unterminated mean_s", path.display()))?;
+        let mean: f64 = rest[..end].trim().parse().map_err(|_| {
+            anyhow::anyhow!("{}: bad mean_s for {name:?}: {:?}", path.display(), &rest[..end])
+        })?;
+        rest = &rest[end..];
+        out.push((name, mean));
+    }
+    anyhow::ensure!(!out.is_empty(), "{}: no bench entries", path.display());
+    Ok(out)
+}
+
+/// Read one JSON string starting at (whitespace before) an opening
+/// quote; returns the unescaped value and the remainder after the
+/// closing quote.
+fn parse_json_string(s: &str) -> Option<(String, &str)> {
+    let s = s.trim_start();
+    let mut chars = s.char_indices();
+    match chars.next() {
+        Some((_, '"')) => {}
+        _ => return None,
+    }
+    let mut out = String::new();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Some((out, &s[i + 1..])),
+            '\\' => match chars.next()?.1 {
+                '"' => out.push('"'),
+                '\\' => out.push('\\'),
+                'u' => {
+                    // our writer only emits \uXXXX for control chars
+                    let mut code = 0u32;
+                    for _ in 0..4 {
+                        code = code * 16 + chars.next()?.1.to_digit(16)?;
+                    }
+                    out.push(char::from_u32(code)?);
+                }
+                other => out.push(other),
+            },
+            c => out.push(c),
+        }
+    }
+    None
+}
+
+/// Should a regression in this entry fail CI? The event-queue and
+/// correctness entries are the scale-critical hot paths (the sharded
+/// engine's heartbeat loop and the incremental Definition-1 tallies);
+/// everything else is informational in the delta table.
+pub fn gated_entry(name: &str) -> bool {
+    name.contains("event_queue") || name.contains("correctness")
+}
+
+/// Compare current results against a baseline: a per-entry delta table
+/// plus the list of gated entries whose mean regressed above
+/// `fail_ratio` (current/baseline). Entries present on only one side
+/// are shown but never gate — a renamed or new bench must not brick CI.
+pub fn compare_results(
+    baseline: &[(String, f64)],
+    current: &[BenchResult],
+    fail_ratio: f64,
+) -> (Table, Vec<String>) {
+    let base: std::collections::BTreeMap<&str, f64> =
+        baseline.iter().map(|(n, m)| (n.as_str(), *m)).collect();
+    let mut t = Table::new(&["benchmark", "baseline", "current", "ratio", "gate"]);
+    let mut regressions = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for r in current {
+        seen.insert(r.name.as_str());
+        let gate = gated_entry(&r.name);
+        match base.get(r.name.as_str()) {
+            Some(&prev) if prev > 0.0 => {
+                let ratio = r.mean_s / prev;
+                let verdict = if gate && ratio > fail_ratio {
+                    regressions.push(format!(
+                        "{}: {} -> {} ({:.2}x > {:.2}x allowed)",
+                        r.name,
+                        fmt_time(prev),
+                        fmt_time(r.mean_s),
+                        ratio,
+                        fail_ratio
+                    ));
+                    "FAIL"
+                } else if gate {
+                    "ok"
+                } else {
+                    "-"
+                };
+                t.row(&[
+                    r.name.clone(),
+                    fmt_time(prev),
+                    fmt_time(r.mean_s),
+                    format!("{ratio:.2}x"),
+                    verdict.to_string(),
+                ]);
+            }
+            _ => {
+                t.row(&[
+                    r.name.clone(),
+                    "(new)".to_string(),
+                    fmt_time(r.mean_s),
+                    "-".to_string(),
+                    "-".to_string(),
+                ]);
+            }
+        }
+    }
+    for (name, prev) in baseline {
+        if !seen.contains(name.as_str()) {
+            t.row(&[
+                name.clone(),
+                fmt_time(*prev),
+                "(absent)".to_string(),
+                "-".to_string(),
+                "-".to_string(),
+            ]);
+        }
+    }
+    (t, regressions)
+}
+
 fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
@@ -263,6 +409,51 @@ mod tests {
         assert!(text.contains("\"throughput_per_s\""));
         assert_eq!(text.matches('{').count(), text.matches('}').count());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn bench_json_roundtrips_for_compare() {
+        let r1 = bench("sim/event_queue unit x10", 0, 3, || (0..100).sum::<u64>());
+        let r2 = bench("other/\"entry\"", 0, 3, || 2 + 2);
+        let path =
+            write_bench_json(&std::env::temp_dir(), "unit_cmp", &[r1.clone(), r2.clone()])
+                .unwrap();
+        let back = read_bench_json(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, r1.name);
+        assert_eq!(back[1].0, r2.name, "escaped names must round-trip");
+        // {:e} prints a round-trippable f64, so means survive exactly
+        assert_eq!(back[0].1, r1.mean_s);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn compare_gates_only_hot_path_entries() {
+        assert!(gated_entry("sim/event_queue push+pop x1000"));
+        assert!(gated_entry("topology/correctness_incremental_vs_batch 1k"));
+        assert!(!gated_entry("mep/merge 1k params"));
+        let r1 = bench("sim/event_queue unit x10", 0, 2, || (0..100).sum::<u64>());
+        let r2 = bench("mep/other", 0, 2, || 2 + 2);
+        let base = vec![(r1.name.clone(), r1.mean_s), (r2.name.clone(), r2.mean_s)];
+        // identical runs never regress
+        let (t, regs) = compare_results(&base, &[r1.clone(), r2.clone()], 1.5);
+        assert!(regs.is_empty(), "{regs:?}");
+        assert!(t.render().contains("1.00x"));
+        // a blown-up gated entry fails; the ungated one never does
+        let mut slow1 = r1.clone();
+        slow1.mean_s *= 10.0;
+        let mut slow2 = r2.clone();
+        slow2.mean_s *= 10.0;
+        let (_, regs) = compare_results(&base, &[slow1, slow2], 1.5);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+        assert!(regs[0].contains("event_queue"));
+        // one-sided entries render but never gate
+        let fresh = bench("sim/event_queue brand-new", 0, 2, || 1 + 1);
+        let (t, regs) = compare_results(&base, &[fresh], 1.5);
+        assert!(regs.is_empty());
+        let rendered = t.render();
+        assert!(rendered.contains("(new)"));
+        assert!(rendered.contains("(absent)"));
     }
 
     #[test]

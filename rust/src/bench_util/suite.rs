@@ -112,6 +112,31 @@ pub fn micro_suite(quick: bool) -> Vec<BenchResult> {
     let name = format!("sim/run_until K=4 mailbox drain ({n} nodes, {secs}s)");
     results.push(bench(&name, 1, iters, || sharded_run(n, 4, horizon)));
 
+    // --- incremental Definition-1 tallies vs the batch rebuild ---
+    // the per-sample cost the tentpole removes: one O(1) read of the
+    // maintained tallies against one full snapshot + ring re-sort. Built
+    // on a converged fleet so both paths see the same membership.
+    let corr_n = if quick { 512usize } else { 2_048 };
+    let mut sim = Simulator::new(OverlayConfig::default(), NetConfig::default());
+    sim.bootstrap_correct(&(0..corr_n as NodeId).collect::<Vec<_>>());
+    let name = format!("topology/correctness_incremental ({corr_n} nodes)");
+    results.push(bench(&name, 10, it(5_000), || sim.correctness()));
+    let name = format!("topology/correctness_batch ({corr_n} nodes)");
+    results.push(bench(&name, 2, it(50), || sim.correctness_batch()));
+    // churn-heavy maintenance: the per-event splice + refresh cost that
+    // replaces nothing (the batch path pays at sample time instead)
+    let name = format!("topology/correctness_incremental_vs_batch churn x64 ({corr_n} nodes)");
+    let mut next_id = corr_n as NodeId;
+    results.push(bench(&name, 1, it(40), || {
+        for i in 0..32u64 {
+            sim.schedule_fail(sim.now + 1, (next_id + i) % corr_n as NodeId);
+            sim.schedule_join(sim.now + 2, next_id + i, i % corr_n as NodeId);
+        }
+        next_id += 32;
+        sim.run_until(sim.now + 3);
+        sim.correctness()
+    }));
+
     // --- MEP: fingerprint + CPU aggregation ---
     let dim: usize = if quick { 10_177 } else { 101_770 };
     let model: Vec<f32> = (0..dim).map(|i| i as f32 * 0.001).collect();

@@ -158,12 +158,17 @@ USAGE:
                   [--compression none|q8|topk:<keep>]
                   (one real TCP client; spawn several for a live network)
   fedlay bench    [--quick] [--out <dir>]
+                  [--compare <prev.json>] [--fail-ratio R]
                   (perf micro-suite over routing, event queue, sharded
-                   engine, MEP, and — when artifacts are present — the
-                   AOT runtime; prints a table and writes
-                   BENCH_micro.json to --out, default the working
-                   directory; --quick is the scaled-down CI smoke run;
-                   schema in docs/perf.md)
+                   engine, correctness tallies, MEP, and — when
+                   artifacts are present — the AOT runtime; prints a
+                   table and writes BENCH_micro.json to --out, default
+                   the working directory; --quick is the scaled-down CI
+                   smoke run; --compare prints a per-entry delta table
+                   against a previous BENCH_*.json and exits non-zero
+                   when a gated hot-path entry (event queue,
+                   correctness) regressed above --fail-ratio, default
+                   2.0; schema in docs/perf.md)
 
 GLOBAL FLAGS:
   --config <file>     TOML-subset config file

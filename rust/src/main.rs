@@ -1,6 +1,7 @@
 //! FedLay launcher: the L3 binary entrypoint.
 
 use fedlay::baselines;
+use fedlay::bench_util;
 use fedlay::bench_util::{engine_suite, micro_suite, render_results, write_bench_json, Table};
 use fedlay::cli::{parse_args, Args, USAGE};
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
@@ -79,6 +80,8 @@ fn cmd_churn(args: &Args) -> anyhow::Result<()> {
     } else {
         churn::mass_fail(&mut sim, initial, fails, 10 * MS, cfg.net.seed);
     }
+    // 40 samples across the horizon; the sampler clamps the cadence to
+    // >= 1 µs so sub-40-tick horizons (until / 40 == 0) stay finite
     churn::sample_correctness(&mut sim, until, until / 40);
     sim.run_until(until);
     let mut t = Table::new(&["t (s)", "correctness", "live nodes"]);
@@ -444,6 +447,23 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
     print!("{}", render_results(&results));
     let path = write_bench_json(&out, "micro", &results)?;
     println!("wrote {}", path.display());
+    // --compare <prev.json>: per-entry delta table against a previous
+    // run (the committed seed baseline in CI); regressions above
+    // --fail-ratio on the gated hot-path entries (event queue,
+    // correctness) fail the command so the trajectory can gate merges.
+    if let Some(prev) = args.flags.get("compare") {
+        let fail_ratio = args.f64("fail-ratio", 2.0)?;
+        anyhow::ensure!(fail_ratio > 0.0, "--fail-ratio must be positive");
+        let baseline = bench_util::read_bench_json(std::path::Path::new(prev))?;
+        let (table, regressions) = bench_util::compare_results(&baseline, &results, fail_ratio);
+        println!("\ndelta vs {prev} (gate: mean > {fail_ratio:.2}x baseline)");
+        print!("{}", table.render());
+        anyhow::ensure!(
+            regressions.is_empty(),
+            "bench regression on gated entries:\n  {}",
+            regressions.join("\n  ")
+        );
+    }
     Ok(())
 }
 

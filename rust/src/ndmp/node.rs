@@ -142,6 +142,27 @@ impl NodeState {
         h
     }
 
+    /// Fingerprint of the full `neighbor_ids` identity set: the ring
+    /// views *plus* the peer-table keyset (routed-traffic acquaintances
+    /// enter and leave the have-set too). The fleet runner compares it
+    /// around every message/tick to decide when the incremental
+    /// correctness tracker must re-read this node's have-set — the
+    /// presence-tally analogue of `view_stamp`. Order-sensitive over a
+    /// sorted iteration, so equal sets always hash equal.
+    pub fn nbr_stamp(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for &id in self.peers.keys() {
+            h = (h ^ id.wrapping_add(1)).wrapping_mul(0x100_0000_01b3);
+        }
+        for v in &self.views {
+            for slot in [v.prev, v.next] {
+                let x = slot.map(|id| id.wrapping_add(1)).unwrap_or(0);
+                h = (h ^ x).wrapping_mul(0x100_0000_01b3);
+            }
+        }
+        h
+    }
+
     /// Neighbors used for routing = peers we believe are alive.
     fn routing_neighbors(&self) -> impl Iterator<Item = NodeId> + '_ {
         self.peers.keys().copied().filter(move |&p| p != self.id)
@@ -703,6 +724,25 @@ mod tests {
         );
         assert_eq!(n.views[0].next, Some(9));
         assert!(!n.neighbor_ids().contains(&7));
+    }
+
+    #[test]
+    fn nbr_stamp_tracks_peers_and_views() {
+        let mut n = NodeState::new(5, cfg(2), 0);
+        n.bootstrap_first();
+        let s0 = n.nbr_stamp();
+        // a routed-traffic acquaintance changes the have-set (and the
+        // stamp) without touching the ring views
+        n.handle(42, Msg::Heartbeat, 1);
+        assert_eq!(n.view_stamp(), n.view_stamp());
+        let s1 = n.nbr_stamp();
+        assert_ne!(s0, s1);
+        // a repeated heartbeat from a known peer changes nothing
+        n.handle(42, Msg::Heartbeat, 2);
+        assert_eq!(n.nbr_stamp(), s1);
+        // view rewires move the stamp too
+        n.views[0].next = Some(9);
+        assert_ne!(n.nbr_stamp(), s1);
     }
 
     #[test]

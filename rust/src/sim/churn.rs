@@ -106,7 +106,13 @@ pub fn uniform_churn(
 }
 
 /// Record correctness samples every `every` from 0 to `until`.
+///
+/// `every == 0` (easy to produce from integer cadence math like
+/// `until / 40` on a tiny horizon) is clamped to 1 — sampling every
+/// microsecond over a horizon that small is harmless, whereas the
+/// unguarded `t += 0` spun forever scheduling snapshots at t = 0.
 pub fn sample_correctness(sim: &mut Simulator, until: Time, every: Time) {
+    let every = every.max(1);
     let mut t = 0;
     while t <= until {
         sim.schedule_snapshot(t);
@@ -215,6 +221,21 @@ mod tests {
         assert_eq!(poisson, poisson2, "mixed_churn not deterministic");
         assert_ne!(poisson, uniform, "uniform_churn should keep the old draw");
         assert_eq!(uniform.len(), 12, "uniform schedules exactly `events`");
+    }
+
+    /// Regression: the CLI passes `until / 40` as the cadence, which is
+    /// 0 for any horizon under 40 ticks — the unguarded loop never
+    /// terminated. A tiny horizon must now schedule (and run) finitely.
+    #[test]
+    fn tiny_horizon_sampling_terminates() {
+        let mut sim = mk_sim();
+        sim.bootstrap_correct(&(0..10).collect::<Vec<_>>());
+        let until = 25; // µs — way under any sane cadence divisor
+        sample_correctness(&mut sim, until, until / 40);
+        sim.run_until(until);
+        // clamped to every-1µs: exactly until+1 samples, all at c = 1
+        assert_eq!(sim.samples.len(), until as usize + 1);
+        assert!(sim.samples.iter().all(|s| s.correctness == 1.0));
     }
 
     #[test]

@@ -26,7 +26,7 @@ use crate::config::{NetConfig, OverlayConfig};
 use crate::ndmp::messages::{Msg, Outgoing, Time, MS};
 use crate::ndmp::node::{NodeCounters, NodeState};
 use crate::ndmp::routing::coord_of;
-use crate::topology::{correctness, NeighborSnapshot, NodeId};
+use crate::topology::{correctness, IdealRings, NeighborSnapshot, NodeId};
 use rayon::prelude::*;
 use std::collections::{BTreeSet, VecDeque};
 
@@ -70,6 +70,11 @@ struct EventOut {
     seq: u64,
     delivered: Option<(NodeId, NodeId)>,
     view_change: Option<NodeId>,
+    /// The event moved the target's `nbr_stamp` (its have-set changed):
+    /// the merge barrier re-reads that node's neighbor set into the
+    /// incremental correctness tracker. Carried as a delta — shard
+    /// workers never touch the shared tracker.
+    nbr_change: Option<NodeId>,
     /// `Tick` re-arm; seq-assigned *before* the sends, matching the
     /// serial loop's tick-first push order.
     rearm: Option<NodeId>,
@@ -98,6 +103,13 @@ pub struct Simulator {
     /// survive failures without O(history) per-node entries).
     retired_nodes: u64,
     retired_tally: NodeCounters,
+    /// Incrementally-maintained Definition-1 ideal topology with running
+    /// required/present tallies: membership events splice the persistent
+    /// rings in O(L·log n) and `correctness()` reads the ratio in O(1)
+    /// instead of re-sorting every ring per sample. Kept equal to the
+    /// batch metric by construction (pinned by `tests/incremental_ideals`
+    /// and `correctness_batch`).
+    ideal: IdealRings,
     pub samples: Vec<CorrectnessSample>,
     /// Messages delivered (for telemetry / debugging).
     pub delivered: u64,
@@ -130,6 +142,7 @@ impl Simulator {
     /// backend; only message passage differs.
     pub fn with_transport(overlay: OverlayConfig, transport: Box<dyn Transport>) -> Self {
         let tick_period = (overlay.heartbeat_ms * 1_000) / 2;
+        let ideal = IdealRings::new(overlay.spaces);
         Self {
             cfg: overlay,
             shards: vec![Shard::default()],
@@ -140,6 +153,7 @@ impl Simulator {
             tick_period: tick_period.max(1),
             retired_nodes: 0,
             retired_tally: NodeCounters::default(),
+            ideal,
             samples: Vec::new(),
             delivered: 0,
             view_changes: BTreeSet::new(),
@@ -272,6 +286,21 @@ impl Simulator {
         self.retired_tally.absorb(&counters);
     }
 
+    /// Re-read the have-sets of `ids` into the incremental tracker.
+    /// Called for the nodes a membership splice touched and for nodes
+    /// whose `nbr_stamp` moved during event processing. Ids that are no
+    /// longer live are skipped — the tracker has already dropped their
+    /// edges.
+    fn refresh_ideal(&mut self, ids: &[NodeId]) {
+        for &id in ids {
+            let s = self.shard_of(id);
+            if let Some(st) = self.shards[s].nodes.get(id) {
+                let have = st.neighbor_ids();
+                self.ideal.refresh(id, &have);
+            }
+        }
+    }
+
     /// Live-state footprint telemetry (see `FootprintStats`).
     pub fn footprint(&self) -> FootprintStats {
         FootprintStats {
@@ -335,9 +364,13 @@ impl Simulator {
             st.counters = NodeCounters::default();
             self.transport.open(id).expect("transport endpoint");
             self.insert_node(st);
+            self.ideal.add(id);
             self.note_view_change(id);
             self.enqueue(self.now + 1, EventKind::Tick { node: id });
         }
+        // seed the presence tallies once every have-set is final (the
+        // per-add touched sets would re-read intermediate states)
+        self.refresh_ideal(ids);
     }
 
     /// Start an empty network with a single node.
@@ -346,6 +379,7 @@ impl Simulator {
         st.bootstrap_first();
         self.transport.open(id).expect("transport endpoint");
         self.insert_node(st);
+        self.ideal.add(id);
         self.note_view_change(id);
         self.enqueue(self.now + 1, EventKind::Tick { node: id });
     }
@@ -469,8 +503,31 @@ impl Simulator {
         correctness::graph_from_snapshot(&self.snapshot())
     }
 
+    /// The §IV-A3 correctness ratio from the incremental tracker's
+    /// running tallies — O(1), no fleet-wide snapshot, no ring sorts.
+    /// Equal (bitwise: same integer tallies, same division) to
+    /// `correctness_batch`, which stays around as the oracle.
     pub fn correctness(&self) -> f64 {
+        self.ideal.correctness()
+    }
+
+    /// The batch-path correctness: materialize the fleet snapshot and
+    /// rebuild the ideal rings from scratch (O(L·n log n)). The oracle
+    /// the incremental path is pinned against; prefer `correctness()`.
+    pub fn correctness_batch(&self) -> f64 {
         correctness(&self.snapshot(), self.cfg.spaces)
+    }
+
+    /// Detailed correctness report, reusing the incrementally-maintained
+    /// ideal instead of re-deriving it from the snapshot's live ids.
+    pub fn correctness_report(&self) -> correctness::CorrectnessReport {
+        correctness::report_against_ideal(&self.snapshot(), &self.ideal.ideal_snapshot())
+    }
+
+    /// Read access to the incremental ideal tracker (generation stamp,
+    /// tallies, per-node `want` sets) for tests and telemetry.
+    pub fn ideal(&self) -> &IdealRings {
+        &self.ideal
     }
 
     /// Total control messages sent per live+retired node.
@@ -532,14 +589,19 @@ impl Simulator {
                     return;
                 };
                 let stamp = node.view_stamp();
+                let nstamp = node.nbr_stamp();
                 let outs = node.handle(from, msg, now);
                 let changed = node.view_stamp() != stamp;
+                let have = (node.nbr_stamp() != nstamp).then(|| node.neighbor_ids());
                 self.delivered += 1;
                 if self.record_deliveries {
                     self.delivery_log.push((now, from, to));
                 }
                 if changed {
                     self.note_view_change(to);
+                }
+                if let Some(have) = have {
+                    self.ideal.refresh(to, &have);
                 }
                 self.dispatch(to, outs);
             }
@@ -549,10 +611,15 @@ impl Simulator {
                     return;
                 };
                 let stamp = st.view_stamp();
+                let nstamp = st.nbr_stamp();
                 let outs = st.tick(now);
                 let changed = st.view_stamp() != stamp;
+                let have = (st.nbr_stamp() != nstamp).then(|| st.neighbor_ids());
                 if changed {
                     self.note_view_change(node);
+                }
+                if let Some(have) = have {
+                    self.ideal.refresh(node, &have);
                 }
                 // push the next tick *before* dispatching: the wire
                 // backend's deliveries enter the queue after the
@@ -572,6 +639,10 @@ impl Simulator {
                 let mut st = NodeState::new(node, self.cfg.clone(), now);
                 let outs = st.start_join(bootstrap, now);
                 self.insert_node(st);
+                // splice the joiner into the persistent ideal rings and
+                // re-read every endpoint the splice touched
+                let touched = self.ideal.add(node);
+                self.refresh_ideal(&touched);
                 self.note_view_change(node);
                 // tick before dispatch: see the Tick arm
                 self.enqueue(now + self.tick_period, EventKind::Tick { node });
@@ -580,6 +651,8 @@ impl Simulator {
             EventKind::Fail { node } => {
                 if let Some(st) = self.remove_node(node) {
                     self.retire(st.counters);
+                    let touched = self.ideal.remove(node);
+                    self.refresh_ideal(&touched);
                     self.note_view_change(node);
                     self.transport.close(node);
                 }
@@ -588,6 +661,8 @@ impl Simulator {
                 if let Some(mut st) = self.remove_node(node) {
                     let outs = st.start_leave();
                     self.retire(st.counters);
+                    let touched = self.ideal.remove(node);
+                    self.refresh_ideal(&touched);
                     self.note_view_change(node);
                     // flush the leave notices, then tear the endpoint
                     // down — in-flight messages to it vanish, exactly
@@ -597,6 +672,8 @@ impl Simulator {
                 }
             }
             EventKind::Snapshot { .. } => {
+                // O(1) read of the running tallies — sampling cadence no
+                // longer serializes the fleet or re-sorts the rings
                 let c = self.correctness();
                 self.samples.push(CorrectnessSample {
                     at: now,
@@ -739,6 +816,7 @@ impl Simulator {
         };
         let mut merged: Vec<EventOut> = outs.into_iter().flatten().collect();
         merged.sort_unstable_by_key(|o| o.seq);
+        let mut nbr_changed: BTreeSet<NodeId> = BTreeSet::new();
         for out in merged {
             if let Some((from, to)) = out.delivered {
                 self.delivered += 1;
@@ -748,6 +826,9 @@ impl Simulator {
             }
             if let Some(id) = out.view_change {
                 self.note_view_change(id);
+            }
+            if let Some(id) = out.nbr_change {
+                nbr_changed.insert(id);
             }
             if let Some(node) = out.rearm {
                 self.enqueue(now + self.tick_period, EventKind::Tick { node });
@@ -765,6 +846,14 @@ impl Simulator {
                 }
             }
         }
+        // refresh each changed node once from its *post-segment* state.
+        // `refresh` is idempotent in the final have-set, so folding a
+        // node's several within-segment refreshes (as the serial loop
+        // performs them) into one is tally-identical: the next control
+        // barrier — the only place tallies are read — sees the same
+        // flags either way.
+        let changed: Vec<NodeId> = nbr_changed.into_iter().collect();
+        self.refresh_ideal(&changed);
     }
 
     /// Convenience: run until correctness reaches `threshold` or `deadline`
@@ -802,12 +891,15 @@ fn process_shard_events(shard: &mut Shard, evs: Vec<Event>, now: Time) -> Vec<Ev
                     continue; // dead target: vanishes, uncounted
                 };
                 let stamp = node.view_stamp();
+                let nstamp = node.nbr_stamp();
                 let emitted = node.handle(from, msg, now);
                 let view_change = (node.view_stamp() != stamp).then_some(to);
+                let nbr_change = (node.nbr_stamp() != nstamp).then_some(to);
                 outs.push(EventOut {
                     seq: ev.seq,
                     delivered: Some((from, to)),
                     view_change,
+                    nbr_change,
                     rearm: None,
                     sends: emitted
                         .into_iter()
@@ -821,12 +913,15 @@ fn process_shard_events(shard: &mut Shard, evs: Vec<Event>, now: Time) -> Vec<Ev
                     continue; // departed: timer chain ends
                 };
                 let stamp = st.view_stamp();
+                let nstamp = st.nbr_stamp();
                 let emitted = st.tick(now);
                 let view_change = (st.view_stamp() != stamp).then_some(node);
+                let nbr_change = (st.nbr_stamp() != nstamp).then_some(node);
                 outs.push(EventOut {
                     seq: ev.seq,
                     delivered: None,
                     view_change,
+                    nbr_change,
                     rearm: Some(node),
                     sends: emitted
                         .into_iter()

@@ -37,15 +37,22 @@ pub fn ideal_neighbor_sets(m: &Membership) -> NeighborSnapshot {
     out
 }
 
-/// Fraction of correct neighbor entries over required entries, following
-/// the paper: "the number of correct neighbors of all nodes over the total
-/// number of neighbors" of the ideal topology built from the live ids.
-pub fn correctness(snapshot: &NeighborSnapshot, spaces: usize) -> f64 {
+/// The Definition-1 ideal neighbor sets of the membership implied by a
+/// snapshot's live ids — the one place the metric and the debug report
+/// build their ground truth, so the two can never drift.
+pub fn ideal_sets_for_live(snapshot: &NeighborSnapshot, spaces: usize) -> NeighborSnapshot {
     let mut ideal = Membership::new(spaces);
     for &id in snapshot.keys() {
         ideal.add(id);
     }
-    let want_all = ideal_neighbor_sets(&ideal);
+    ideal_neighbor_sets(&ideal)
+}
+
+/// Fraction of correct neighbor entries over required entries, following
+/// the paper: "the number of correct neighbors of all nodes over the total
+/// number of neighbors" of the ideal topology built from the live ids.
+pub fn correctness(snapshot: &NeighborSnapshot, spaces: usize) -> f64 {
+    let want_all = ideal_sets_for_live(snapshot, spaces);
     let mut required = 0usize;
     let mut present = 0usize;
     for (id, have) in snapshot {
@@ -93,11 +100,16 @@ pub struct CorrectnessReport {
 }
 
 pub fn report(snapshot: &NeighborSnapshot, spaces: usize) -> CorrectnessReport {
-    let mut ideal = Membership::new(spaces);
-    for &id in snapshot.keys() {
-        ideal.add(id);
-    }
-    let want_all = ideal_neighbor_sets(&ideal);
+    report_against_ideal(snapshot, &ideal_sets_for_live(snapshot, spaces))
+}
+
+/// The report against an already-built ideal — lets callers holding an
+/// incrementally-maintained ideal (`topology::IdealRings::ideal_snapshot`)
+/// skip the O(L·n log n) rebuild entirely.
+pub fn report_against_ideal(
+    snapshot: &NeighborSnapshot,
+    want_all: &NeighborSnapshot,
+) -> CorrectnessReport {
     let mut required = 0usize;
     let mut present = 0usize;
     let mut correct_nodes = 0usize;

@@ -1,0 +1,454 @@
+//! Incrementally-maintained Definition-1 ideal topology.
+//!
+//! The batch path (`correctness::ideal_neighbor_sets`) re-sorts every
+//! ring on every evaluation — O(L·n log n) per sample, which dominates a
+//! 100k-client run the moment correctness is sampled on a cadence. This
+//! module maintains the same ideal *persistently*: each space's ring is a
+//! `BTreeSet<RingPoint>`, membership changes splice a node in or out in
+//! O(L·log n), and the directed required/present tallies of the
+//! correctness metric are running counters updated only on the O(L)
+//! ring edges a join/fail/leave actually touches.
+//!
+//! The tracker is deliberately oblivious to *how* neighbor sets are
+//! obtained: callers feed it membership events (`add`/`remove`) and
+//! presence refreshes (`refresh(id, have)`), and it answers
+//! `correctness()` in O(1). A membership `generation` stamp increments on
+//! every add/remove so consumers (per-shard samplers) can assert they
+//! merged tallies against one consistent membership.
+//!
+//! Batch equivalence is pinned by `tests/incremental_ideals.rs`: after
+//! every event of a random churn schedule, `ideal_snapshot()` must equal
+//! `ideal_neighbor_sets` over the same membership, and the running
+//! tallies must equal `correctness::correctness` over the same have-sets.
+
+use super::coords::{NodeId, RingPoint, VirtualCoords};
+use super::correctness::NeighborSnapshot;
+use super::fedlay::Membership;
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Bound::{Excluded, Unbounded};
+
+/// One directed ideal relation `a -> b` ("a requires b as a neighbor").
+///
+/// `mult` counts in how many spaces the pair is ring-adjacent; the
+/// relation exists (and contributes 1 to `required`, matching the batch
+/// metric's per-node de-duplicated `want` sets) while `mult > 0`.
+/// `present` caches whether the owner's last refreshed have-set contains
+/// `b`, so the global `present` tally is a running counter.
+#[derive(Debug, Clone, Copy)]
+struct DirEdge {
+    mult: u32,
+    present: bool,
+}
+
+/// Persistent Definition-1 ideal rings with running correctness tallies.
+#[derive(Debug, Clone)]
+pub struct IdealRings {
+    spaces: usize,
+    /// One ordered ring per space. `RingPoint`'s total order (coord, then
+    /// id) matches `Membership::ring`, so splice positions agree with the
+    /// batch sort bit-for-bit — including duplicate-coordinate ties.
+    rings: Vec<BTreeSet<RingPoint>>,
+    coords: BTreeMap<NodeId, VirtualCoords>,
+    /// Directed edges keyed `(owner, neighbor)` so one `BTreeMap` range
+    /// scan enumerates a node's ideal set.
+    edges: BTreeMap<(NodeId, NodeId), DirEdge>,
+    /// Bumped on every membership change (add/remove).
+    generation: u64,
+    required: usize,
+    present: usize,
+}
+
+impl IdealRings {
+    pub fn new(spaces: usize) -> Self {
+        Self {
+            spaces,
+            rings: vec![BTreeSet::new(); spaces],
+            coords: BTreeMap::new(),
+            edges: BTreeMap::new(),
+            generation: 0,
+            required: 0,
+            present: 0,
+        }
+    }
+
+    pub fn spaces(&self) -> usize {
+        self.spaces
+    }
+
+    pub fn len(&self) -> usize {
+        self.coords.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.coords.is_empty()
+    }
+
+    pub fn contains(&self, id: NodeId) -> bool {
+        self.coords.contains_key(&id)
+    }
+
+    /// Membership generation stamp: increments on every add/remove.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Total directed ideal relations (Σ over nodes of |want|).
+    pub fn required(&self) -> usize {
+        self.required
+    }
+
+    /// Directed relations whose owner's refreshed have-set holds them.
+    pub fn present(&self) -> usize {
+        self.present
+    }
+
+    /// The §IV-A3 correctness ratio from the running tallies — O(1).
+    pub fn correctness(&self) -> f64 {
+        if self.required == 0 {
+            1.0
+        } else {
+            self.present as f64 / self.required as f64
+        }
+    }
+
+    /// Admit `id` with hash-derived coordinates (the production path).
+    /// Returns every node whose ideal set changed — the caller must
+    /// `refresh` each of them (their presence flags may be stale).
+    pub fn add(&mut self, id: NodeId) -> Vec<NodeId> {
+        let coords = VirtualCoords::from_id(id, self.spaces);
+        self.add_with_coords(id, coords)
+    }
+
+    /// Admit `id` with explicit coordinates (tests inject collisions).
+    pub fn add_with_coords(&mut self, id: NodeId, coords: VirtualCoords) -> Vec<NodeId> {
+        assert_eq!(coords.spaces(), self.spaces, "coordinate arity mismatch");
+        if self.coords.contains_key(&id) {
+            return Vec::new();
+        }
+        let mut touched = BTreeSet::new();
+        touched.insert(id);
+        for s in 0..self.spaces {
+            let pt = RingPoint::new(coords.get(s), id);
+            let n_before = self.rings[s].len();
+            match n_before {
+                0 => {}
+                1 => {
+                    // singleton ring: one new wrap pair
+                    let other = self.rings[s].iter().next().unwrap().id;
+                    self.link(id, other, &mut touched);
+                }
+                _ => {
+                    let (prev, next) = Self::around(&self.rings[s], pt);
+                    // on a 2-ring (prev, next) stays adjacent after the
+                    // splice (every pair of a 3-ring is adjacent); from 3
+                    // nodes up the splice breaks the (prev, next) edge
+                    if n_before >= 3 {
+                        self.unlink(prev, next, &mut touched);
+                    }
+                    self.link(prev, id, &mut touched);
+                    self.link(id, next, &mut touched);
+                }
+            }
+            self.rings[s].insert(pt);
+        }
+        self.coords.insert(id, coords);
+        self.generation += 1;
+        touched.into_iter().collect()
+    }
+
+    /// Retire `id`. Returns every node whose ideal set changed (the
+    /// departed node is *not* included — it has no tallies left).
+    pub fn remove(&mut self, id: NodeId) -> Vec<NodeId> {
+        let Some(coords) = self.coords.remove(&id) else {
+            return Vec::new();
+        };
+        let mut touched = BTreeSet::new();
+        for s in 0..self.spaces {
+            let pt = RingPoint::new(coords.get(s), id);
+            let n_before = self.rings[s].len();
+            match n_before {
+                1 => {}
+                2 => {
+                    let other = self
+                        .rings[s]
+                        .iter()
+                        .find(|p| p.id != id)
+                        .unwrap()
+                        .id;
+                    self.unlink(id, other, &mut touched);
+                }
+                _ => {
+                    let (prev, next) = Self::around(&self.rings[s], pt);
+                    self.unlink(prev, id, &mut touched);
+                    self.unlink(id, next, &mut touched);
+                    // the survivors of a 3-ring are already adjacent
+                    // (all pairs of a 3-ring are); from 4 nodes up the
+                    // removal welds a new (prev, next) edge
+                    if n_before >= 4 {
+                        self.link(prev, next, &mut touched);
+                    }
+                }
+            }
+            self.rings[s].remove(&pt);
+        }
+        touched.remove(&id);
+        self.generation += 1;
+        touched.into_iter().collect()
+    }
+
+    /// Re-evaluate the presence flags of `id`'s ideal relations against
+    /// its current have-set. Idempotent; O(|want| · log n).
+    pub fn refresh(&mut self, id: NodeId, have: &BTreeSet<NodeId>) {
+        let lo = (id, NodeId::MIN);
+        let hi = (id, NodeId::MAX);
+        let mut delta: i64 = 0;
+        for (&(_, nbr), e) in self.edges.range_mut(lo..=hi) {
+            let now = have.contains(&nbr);
+            if now != e.present {
+                delta += if now { 1 } else { -1 };
+                e.present = now;
+            }
+        }
+        self.present = (self.present as i64 + delta) as usize;
+    }
+
+    /// The Definition-1 ideal set of `id` (empty if unknown).
+    pub fn want(&self, id: NodeId) -> BTreeSet<NodeId> {
+        self.edges
+            .range((id, NodeId::MIN)..=(id, NodeId::MAX))
+            .map(|(&(_, nbr), _)| nbr)
+            .collect()
+    }
+
+    /// Materialize the full ideal topology — the shape the batch
+    /// `ideal_neighbor_sets` returns, for oracle comparison and the
+    /// debug report path. O(n + edges), no ring sorts.
+    pub fn ideal_snapshot(&self) -> NeighborSnapshot {
+        let mut out: NeighborSnapshot =
+            self.coords.keys().map(|&id| (id, BTreeSet::new())).collect();
+        for &(a, b) in self.edges.keys() {
+            out.get_mut(&a).unwrap().insert(b);
+        }
+        out
+    }
+
+    /// The tracked membership, rebuilt as the batch type (oracle use).
+    pub fn membership(&self) -> Membership {
+        let mut m = Membership::new(self.spaces);
+        m.nodes = self.coords.clone();
+        m
+    }
+
+    /// The ring neighbors of `pt`'s splice position, with wrap-around.
+    /// Works whether or not `pt` itself is in the set (`Excluded` bounds
+    /// skip it); callers guarantee the ring holds >= 2 *other* points or
+    /// handle the small-ring cases themselves.
+    fn around(ring: &BTreeSet<RingPoint>, pt: RingPoint) -> (NodeId, NodeId) {
+        let next = ring
+            .range((Excluded(pt), Unbounded))
+            .next()
+            .or_else(|| ring.iter().find(|&&p| p != pt))
+            .unwrap()
+            .id;
+        let prev = ring
+            .range((Unbounded, Excluded(pt)))
+            .next_back()
+            .or_else(|| ring.iter().rev().find(|&&p| p != pt))
+            .unwrap()
+            .id;
+        (prev, next)
+    }
+
+    /// Record that `a` and `b` are ring-adjacent in one more space.
+    /// Both directed relations move in lock-step; only a 0 -> 1
+    /// transition touches the tallies (de-dup across spaces).
+    fn link(&mut self, a: NodeId, b: NodeId, touched: &mut BTreeSet<NodeId>) {
+        debug_assert_ne!(a, b, "self-adjacency is impossible on a ring");
+        for (x, y) in [(a, b), (b, a)] {
+            let e = self
+                .edges
+                .entry((x, y))
+                .or_insert(DirEdge { mult: 0, present: false });
+            if e.mult == 0 {
+                self.required += 1;
+                touched.insert(x);
+            }
+            e.mult += 1;
+        }
+    }
+
+    /// Record that `a` and `b` are ring-adjacent in one fewer space.
+    fn unlink(&mut self, a: NodeId, b: NodeId, touched: &mut BTreeSet<NodeId>) {
+        for (x, y) in [(a, b), (b, a)] {
+            let e = self.edges.get_mut(&(x, y)).expect("unlink of absent edge");
+            e.mult -= 1;
+            if e.mult == 0 {
+                if e.present {
+                    self.present -= 1;
+                }
+                self.required -= 1;
+                self.edges.remove(&(x, y));
+                touched.insert(x);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::correctness::ideal_neighbor_sets;
+
+    fn batch_ideal(t: &IdealRings) -> NeighborSnapshot {
+        ideal_neighbor_sets(&t.membership())
+    }
+
+    #[test]
+    fn empty_and_singleton_rings() {
+        let mut t = IdealRings::new(3);
+        assert_eq!(t.correctness(), 1.0);
+        assert_eq!(t.generation(), 0);
+        t.add(7);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.required(), 0);
+        assert_eq!(t.correctness(), 1.0);
+        assert_eq!(t.generation(), 1);
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+    }
+
+    #[test]
+    fn grows_to_match_batch_ideal() {
+        let mut t = IdealRings::new(2);
+        for id in 0..20u64 {
+            let touched = t.add(id);
+            assert!(touched.contains(&id) || t.len() == 1);
+            assert_eq!(t.ideal_snapshot(), batch_ideal(&t), "after add {id}");
+        }
+        // required equals the sum of batch want-set sizes
+        let want_all = batch_ideal(&t);
+        let sum: usize = want_all.values().map(|s| s.len()).sum();
+        assert_eq!(t.required(), sum);
+    }
+
+    #[test]
+    fn shrinks_to_match_batch_ideal() {
+        let mut t = IdealRings::new(2);
+        for id in 0..12u64 {
+            t.add(id);
+        }
+        for id in [5u64, 0, 11, 3, 7, 1, 9, 2, 4, 6, 8, 10] {
+            t.remove(id);
+            assert_eq!(t.ideal_snapshot(), batch_ideal(&t), "after remove {id}");
+        }
+        assert!(t.is_empty());
+        assert_eq!(t.required(), 0);
+        assert_eq!(t.present(), 0);
+    }
+
+    #[test]
+    fn two_and_three_node_ring_transitions() {
+        // the n<4 splice cases all have bespoke edge arithmetic — walk
+        // through them explicitly in both directions
+        let mut t = IdealRings::new(1);
+        t.add(1);
+        t.add(2); // 1-ring -> 2-ring: one pair
+        assert_eq!(t.required(), 2);
+        t.add(3); // 2-ring -> 3-ring: keep the old pair, add two
+        assert_eq!(t.required(), 6);
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+        t.add(4); // 3-ring -> 4-ring: now an unlink happens
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+        t.remove(4); // 4 -> 3: weld suppressed (already adjacent)
+        assert_eq!(t.required(), 6);
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+        t.remove(3); // 3 -> 2: single unlink per side
+        assert_eq!(t.required(), 2);
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+        t.remove(2); // 2 -> 1
+        assert_eq!(t.required(), 0);
+        t.remove(1);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn duplicate_coordinates_order_by_id() {
+        // inject colliding coordinates: the (coord, id) total order must
+        // keep the incremental splice aligned with the batch sort
+        let mut t = IdealRings::new(1);
+        let c = |v: f64| VirtualCoords { coords: vec![v] };
+        t.add_with_coords(10, c(0.5));
+        t.add_with_coords(20, c(0.5));
+        t.add_with_coords(15, c(0.5));
+        t.add_with_coords(1, c(0.2));
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+        t.remove(15);
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+    }
+
+    #[test]
+    fn refresh_drives_running_tallies() {
+        let mut t = IdealRings::new(2);
+        for id in 0..8u64 {
+            t.add(id);
+        }
+        assert_eq!(t.present(), 0);
+        // hand every node its exact ideal set -> correctness 1
+        for id in 0..8u64 {
+            let want = t.want(id);
+            t.refresh(id, &want);
+        }
+        assert_eq!(t.present(), t.required());
+        assert_eq!(t.correctness(), 1.0);
+        // degrade one node to an empty have-set
+        t.refresh(3, &BTreeSet::new());
+        assert!(t.correctness() < 1.0);
+        // refresh is idempotent
+        let (p, r) = (t.present(), t.required());
+        t.refresh(3, &BTreeSet::new());
+        assert_eq!((t.present(), t.required()), (p, r));
+        // restore
+        let want = t.want(3);
+        t.refresh(3, &want);
+        assert_eq!(t.correctness(), 1.0);
+    }
+
+    #[test]
+    fn removal_drops_presence_of_dangling_edges() {
+        let mut t = IdealRings::new(2);
+        for id in 0..6u64 {
+            t.add(id);
+        }
+        for id in 0..6u64 {
+            let want = t.want(id);
+            t.refresh(id, &want);
+        }
+        assert_eq!(t.correctness(), 1.0);
+        // removing a node must retire its own directed edges (and their
+        // presence) without help from the caller
+        let touched = t.remove(2);
+        assert!(!touched.contains(&2));
+        assert!(t.present() <= t.required());
+        // survivors' flags are stale until refreshed — that's the
+        // caller's contract; refresh the touched set and compare
+        for id in touched {
+            let want = t.want(id);
+            t.refresh(id, &want);
+        }
+        assert_eq!(t.correctness(), 1.0);
+        assert_eq!(t.ideal_snapshot(), batch_ideal(&t));
+    }
+
+    #[test]
+    fn generation_stamps_every_membership_change() {
+        let mut t = IdealRings::new(2);
+        t.add(1);
+        t.add(2);
+        let g = t.generation();
+        t.refresh(1, &BTreeSet::new()); // presence does not bump
+        assert_eq!(t.generation(), g);
+        t.remove(1);
+        assert_eq!(t.generation(), g + 1);
+        t.remove(99); // no-op remove does not bump
+        assert_eq!(t.generation(), g + 1);
+    }
+}

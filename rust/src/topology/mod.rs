@@ -4,12 +4,14 @@
 pub mod coords;
 pub mod correctness;
 pub mod fedlay;
+pub mod incremental;
 
 pub use coords::{
     ccw_arc, circular_distance, closer, cw_arc, Coord, NodeId, RingPoint, VirtualCoords,
 };
 pub use correctness::{
-    correctness, graph_from_snapshot, ideal_neighbor_sets, report, CorrectnessReport,
-    NeighborSnapshot,
+    correctness, graph_from_snapshot, ideal_neighbor_sets, ideal_sets_for_live, report,
+    report_against_ideal, CorrectnessReport, NeighborSnapshot,
 };
 pub use fedlay::{build_overlay, fedlay_graph, Membership};
+pub use incremental::IdealRings;

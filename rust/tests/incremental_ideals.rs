@@ -1,0 +1,220 @@
+//! Property suite for the incrementally-maintained Definition-1 ideal
+//! topology (`topology::IdealRings`, docs/perf.md) — seeded sweeps in
+//! the style of `tests/scenario_properties.rs` (proptest is not in the
+//! vendored set). Two layers:
+//!
+//!   * tracker vs oracle: after EVERY event of a random add/remove
+//!     schedule — including the n < 2 rings and injected
+//!     duplicate-coordinate ties — `ideal_snapshot()` must equal the
+//!     batch `ideal_neighbor_sets` over the same membership, and the
+//!     running `required`/`present` tallies must match the batch sums,
+//!   * engine end to end: during live churn runs, the O(1)
+//!     `Simulator::correctness()` must stay *bitwise* equal to the
+//!     O(L·n log n) `correctness_batch()` rebuild at every sample
+//!     point, on the serial engine and across shard counts — and the
+//!     K-shard sample series must be bitwise identical to K=1.
+
+use fedlay::config::{NetConfig, OverlayConfig};
+use fedlay::ndmp::messages::{MS, SEC};
+use fedlay::sim::Simulator;
+use fedlay::topology::{ideal_neighbor_sets, IdealRings, NodeId, VirtualCoords};
+use fedlay::util::Rng;
+use std::collections::BTreeSet;
+
+// ----------------------------------------------------------------------
+// Layer 1: the tracker against the batch oracle, event by event
+// ----------------------------------------------------------------------
+
+/// Assert tracker ≡ oracle on the current membership, then hand every
+/// touched node its exact ideal set so the presence invariant ("every
+/// live node's flags match a converged overlay") carries to the next
+/// event. Returns a readable violation description on mismatch.
+fn check_event(t: &mut IdealRings, touched: &[NodeId], what: &str) -> Result<(), String> {
+    let batch = ideal_neighbor_sets(&t.membership());
+    if t.ideal_snapshot() != batch {
+        return Err(format!("{what}: ideal_snapshot diverged from batch oracle"));
+    }
+    let sum: usize = batch.values().map(|s| s.len()).sum();
+    if t.required() != sum {
+        return Err(format!(
+            "{what}: required tally {} != Σ|want| {sum}",
+            t.required()
+        ));
+    }
+    for &id in touched {
+        if t.contains(id) {
+            let want = t.want(id);
+            t.refresh(id, &want);
+        }
+    }
+    // untouched nodes kept their (unchanged) exact sets, touched ones
+    // were just restored — the converged tallies must read exactly 1.0
+    if t.correctness() != 1.0 {
+        return Err(format!(
+            "{what}: converged tallies read {} ({} / {})",
+            t.correctness(),
+            t.present(),
+            t.required()
+        ));
+    }
+    Ok(())
+}
+
+fn check_tracker_schedule(seed: u64) -> Result<(), String> {
+    let mut rng = Rng::new(seed ^ 0x1DEA);
+    let spaces = 1 + rng.index(3);
+    let mut t = IdealRings::new(spaces);
+    let mut live: Vec<NodeId> = Vec::new();
+    let mut next_id: NodeId = 0;
+    let mut generations = 0u64;
+    for step in 0..120 {
+        if !live.is_empty() && rng.index(3) == 0 {
+            let id = live.swap_remove(rng.index(live.len()));
+            let touched = t.remove(id);
+            generations += 1;
+            check_event(&mut t, &touched, &format!("step {step}: remove {id}"))?;
+        } else {
+            let id = next_id;
+            next_id += 1;
+            // one add in four collides its coordinates with a live node:
+            // the (coord, id) tie-break must agree with the batch sort
+            let touched = if !live.is_empty() && rng.index(4) == 0 {
+                let other = live[rng.index(live.len())];
+                t.add_with_coords(id, VirtualCoords::from_id(other, spaces))
+            } else {
+                t.add(id)
+            };
+            live.push(id);
+            generations += 1;
+            check_event(&mut t, &touched, &format!("step {step}: add {id}"))?;
+        }
+        if t.generation() != generations {
+            return Err(format!(
+                "step {step}: generation {} != {generations} membership events",
+                t.generation()
+            ));
+        }
+    }
+    // drain to empty in random order: every shrink through the bespoke
+    // n < 4 ring arithmetic is exercised on the way down
+    while !live.is_empty() {
+        let id = live.swap_remove(rng.index(live.len()));
+        let touched = t.remove(id);
+        check_event(&mut t, &touched, &format!("drain: remove {id}"))?;
+    }
+    if !t.is_empty() || t.required() != 0 || t.present() != 0 {
+        return Err("tracker not empty after full drain".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn property_tracker_matches_batch_ideal_after_every_event() {
+    for seed in 0..8u64 {
+        if let Err(msg) = check_tracker_schedule(seed) {
+            panic!("seed {seed}: incremental/batch divergence: {msg}");
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Layer 2: the engine end to end — live churn, serial and sharded
+// ----------------------------------------------------------------------
+
+/// Drive a seeded join/fail/leave schedule through a `shards`-way
+/// engine, asserting incremental ≡ batch (bitwise) at every sample
+/// point; returns the sample series for cross-K comparison. The
+/// schedule is derived from the seed and a local membership mirror, so
+/// identical seeds produce identical schedules at any shard count.
+fn churn_run(shards: usize, seed: u64) -> Vec<f64> {
+    let overlay = OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 500,
+        failure_multiple: 3,
+        repair_probe_ms: 2_000,
+    };
+    let net = NetConfig {
+        latency_ms: 60.0,
+        jitter: 0.2,
+        seed,
+        ..NetConfig::default()
+    };
+    let mut sim = Simulator::new(overlay, net);
+    if shards > 1 {
+        sim.set_shards(shards);
+    }
+    let n: NodeId = 24;
+    let ids: Vec<NodeId> = (0..n).collect();
+    sim.bootstrap_correct(&ids);
+    let mut alive: BTreeSet<NodeId> = ids.iter().copied().collect();
+    let mut next_id: NodeId = n;
+    let mut rng = Rng::new(seed ^ 0xC0FFEE);
+    let mut samples = Vec::new();
+    let pick = |alive: &BTreeSet<NodeId>, k: usize| *alive.iter().nth(k).unwrap();
+    for step in 0..12 {
+        // one membership op per step, executed before the next is drawn,
+        // so the mirror always agrees with the engine's live set
+        match rng.index(3) {
+            0 => {
+                let boot = pick(&alive, rng.index(alive.len()));
+                sim.schedule_join(sim.now + 50 * MS, next_id, boot);
+                alive.insert(next_id);
+                next_id += 1;
+            }
+            1 if alive.len() > 4 => {
+                let node = pick(&alive, rng.index(alive.len()));
+                sim.schedule_fail(sim.now + 50 * MS, node);
+                alive.remove(&node);
+            }
+            _ if alive.len() > 4 => {
+                let node = pick(&alive, rng.index(alive.len()));
+                sim.schedule_leave(sim.now + 50 * MS, node);
+                alive.remove(&node);
+            }
+            _ => {}
+        }
+        // advance mid-repair: the equality must hold on degraded rings,
+        // not just at quiescence
+        sim.run_until(sim.now + 2 * SEC);
+        let inc = sim.correctness();
+        let batch = sim.correctness_batch();
+        assert_eq!(
+            inc.to_bits(),
+            batch.to_bits(),
+            "seed {seed} K={shards} step {step}: incremental {inc} != batch {batch}"
+        );
+        assert_eq!(
+            sim.ideal().len(),
+            sim.live_count(),
+            "seed {seed} K={shards} step {step}: tracker membership drifted"
+        );
+        samples.push(inc);
+    }
+    let live: BTreeSet<NodeId> = sim.node_ids().into_iter().collect();
+    assert_eq!(live, alive, "seed {seed} K={shards}: membership mirror diverged");
+    samples
+}
+
+#[test]
+fn property_engine_correctness_incremental_equals_batch_under_churn() {
+    for seed in 0..4u64 {
+        let serial = churn_run(1, seed);
+        assert!(
+            serial.iter().all(|c| (0.0..=1.0).contains(c)),
+            "seed {seed}: correctness out of range: {serial:?}"
+        );
+    }
+}
+
+#[test]
+fn property_sharded_sampling_is_bitwise_identical_to_serial() {
+    for seed in 0..3u64 {
+        let serial = churn_run(1, seed);
+        for k in [4usize, 16] {
+            let sharded = churn_run(k, seed);
+            let a: Vec<u64> = serial.iter().map(|c| c.to_bits()).collect();
+            let b: Vec<u64> = sharded.iter().map(|c| c.to_bits()).collect();
+            assert_eq!(a, b, "seed {seed}: K={k} sample series != K=1");
+        }
+    }
+}

@@ -1,11 +1,13 @@
-//! 10,000- and 100,000-client scale: `PoissonChurn` scenarios driving
-//! the *full* unified trainer (frozen training, real NDMP overlay, real
-//! MEP aggregation paths) on the in-memory transport. Exercises the
+//! 10,000-, 100,000- and 500,000-client scale: `PoissonChurn` scenarios
+//! driving the *full* unified trainer (frozen training, real NDMP
+//! overlay, real MEP aggregation paths) on the in-memory transport —
+//! and, at 500k, the bare overlay simulation alone. Exercises the
 //! neighbor-set cache (`Trainer::neighbor_cache_stats`) that makes
-//! `Neighborhood::Dynamic` tractable at this scale, the batch
-//! Definition-1 ideal computation, the O(L·n log n) bootstrap, and — at
-//! 100k — the sharded event engine (`Simulator::set_shards`,
-//! docs/perf.md) plus the O(live-set) footprint guarantees.
+//! `Neighborhood::Dynamic` tractable at this scale, the incremental
+//! Definition-1 ideal tallies (`Simulator::correctness` is O(1) per
+//! sample; docs/perf.md), the O(L·n log n) bootstrap, and — at 100k and
+//! above — the sharded event engine (`Simulator::set_shards`) plus the
+//! O(live-set) footprint guarantees.
 //!
 //! Ignored under plain `cargo test` (they are release-mode budget
 //! tests); CI runs them explicitly under `timeout`:
@@ -222,6 +224,92 @@ fn poisson_churn_scenario_scales_to_100k_clients_sharded() -> anyhow::Result<()>
         settled.is_some(),
         "100k overlay did not quiesce: correctness {:.4}",
         sim.correctness()
+    );
+    Ok(())
+}
+
+/// Half a million clients through the bare overlay simulation (no
+/// trainer, no artifacts): the road-to-1M pin. Feasible only because
+/// correctness sampling reads the maintained incremental tallies —
+/// the batch rebuild alone would dominate the run at this size.
+/// Maintenance timers slow another 2x against the 100k pin to keep the
+/// protocol event volume per virtual minute bounded.
+#[test]
+#[ignore = "500k-client release-mode scale run; CI invokes it explicitly"]
+fn poisson_churn_scenario_scales_to_500k_clients_sim_only() -> anyhow::Result<()> {
+    let n = 500_000usize;
+    let overlay = OverlayConfig {
+        spaces: 2,
+        heartbeat_ms: 120_000,
+        failure_multiple: 3,
+        repair_probe_ms: 240_000,
+    };
+    let net = NetConfig {
+        latency_ms: 100.0,
+        jitter: 0.1,
+        seed: 79,
+        ..NetConfig::default()
+    };
+    let spec = ScenarioSpec {
+        name: "poisson-500k".into(),
+        initial: n,
+        seed: 79,
+        horizon: 10 * MIN,
+        sample_every: 10 * MIN, // endpoints only: eval cost, not protocol
+        settle: 0,
+        min_live: n / 2,
+        shards: 16,
+        overlay,
+        net,
+        phases: vec![Phase {
+            at: MIN,
+            kind: PhaseKind::PoissonChurn {
+                join_per_min: 8.0,
+                fail_per_min: 5.0,
+                leave_per_min: 3.0,
+                window: 5 * MIN,
+            },
+        }],
+    };
+    let events = spec.compile();
+    let joins = events
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    assert!(joins > 0, "scenario scheduled no joins");
+
+    let (sim, report) = spec.run_sim(None)?;
+
+    assert!(sim.shard_count() >= 16, "500k pin must run sharded");
+    assert_eq!(
+        report.live_nodes,
+        n + report.counts.joins - report.counts.fails - report.counts.leaves,
+        "lost or zombie overlay members"
+    );
+    assert!(
+        report.final_correctness > 0.99,
+        "500k overlay badly degraded: correctness {:.4}",
+        report.final_correctness
+    );
+
+    // O(live-set) guarantees at scale: departed nodes fold into scalar
+    // tallies and recycled arena slots never exceed the peak live set
+    let fp = sim.footprint();
+    assert_eq!(fp.retired_nodes, (report.counts.fails + report.counts.leaves) as u64);
+    assert!(
+        fp.arena_slots <= n + report.counts.joins,
+        "arena slots {} exceed peak possible live set",
+        fp.arena_slots
+    );
+
+    // the incremental tallies must agree exactly with the batch oracle
+    // on the final membership — one O(n log n) rebuild, paid once
+    let inc = sim.correctness();
+    let batch = sim.correctness_batch();
+    assert_eq!(
+        inc.to_bits(),
+        batch.to_bits(),
+        "incremental {inc} != batch {batch} at 500k"
     );
     Ok(())
 }
