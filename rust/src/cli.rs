@@ -122,6 +122,7 @@ USAGE:
                                    [--bandwidth-mbps B] [--loss P]
                                    [--node-up-mbps U] [--node-down-mbps D]
                                    [--compression none|q8|topk:<keep>]
+                                   [--aggregation mean|trimmed:<beta>|median|krum:<f>]
   fedlay scenario show <spec.toml>
                   (declarative churn scenarios — TOML format in
                    docs/scenarios.md, examples under configs/scenarios/;
@@ -129,8 +130,11 @@ USAGE:
                    --trainer a full fedlay-dyn training run whose join
                    wave enters through the NDMP protocol; --trainer
                    --tasks runs every task of a multi-task spec over the
-                   one churned overlay; `show` prints the compiled event
-                   schedule without running it)
+                   one churned overlay; adversarial phases (poison /
+                   stale_replay / eclipse) compromise a deterministic
+                   attacker set, and --aggregation picks the robust rule
+                   honest clients defend with; `show` prints the
+                   compiled event schedule without running it)
   fedlay train    [--method fedlay|fedlay-dyn|fedavg|gaia|dfl-dds|chord]
                   [--set dfl.task=mlp] [--set dfl.clients=16]
                   [--minutes M] [--sample-minutes S]
@@ -140,6 +144,7 @@ USAGE:
                   [--bandwidth-mbps B] [--loss P]
                   [--node-up-mbps U] [--node-down-mbps D]
                   [--compression none|q8|topk:<keep>]
+                  [--aggregation mean|trimmed:<beta>|median|krum:<f>]
                   [--tasks <tasks.toml>]
                   (fedlay-dyn runs on the live NDMP overlay; --joins adds
                    J clients mid-run through the protocol join; --transport
@@ -150,13 +155,19 @@ USAGE:
                    loss and per-node capacity, overridable via the net
                    flags above (docs/transports.md); --compression sends
                    model payloads quantized (q8) or top-k sparsified
-                   instead of dense f32; --tasks runs the multi-task
+                   instead of dense f32; --aggregation replaces the
+                   confidence-weighted mean with a Byzantine-robust rule
+                   (trimmed mean, coordinate median, or Krum selection);
+                   --tasks runs the multi-task
                    engine — N model tasks from a TOML spec,
                    docs/multitask.md, over one shared overlay, one
                    accuracy column per task)
   fedlay node     --id I --base-port P [--bootstrap B] [--run-ms T]
                   [--compression none|q8|topk:<keep>]
-                  (one real TCP client; spawn several for a live network)
+                  [--aggregation mean|trimmed:<beta>|median|krum:<f>]
+                  (one real TCP client; spawn several for a live network;
+                   non-finite inbound payloads are always rejected at the
+                   frame boundary, whatever the aggregation rule)
   fedlay bench    [--quick] [--out <dir>]
                   [--compare <prev.json>] [--fail-ratio R]
                   (perf micro-suite over routing, event queue, sharded

@@ -255,6 +255,12 @@ impl Config {
         self.net.validate()?;
         anyhow::ensure!(self.dfl.clients >= 1, "dfl.clients must be >= 1");
         anyhow::ensure!(self.dfl.lr > 0.0, "dfl.lr must be positive");
+        // a zero period would panic deep in MEP (`comm_confidence`) and
+        // wedge the wake scheduler; reject it where the user typed it
+        anyhow::ensure!(
+            self.dfl.comm_period_ms > 0,
+            "dfl.comm_period_ms must be positive"
+        );
         anyhow::ensure!(
             self.dfl.alpha_d >= 0.0 && self.dfl.alpha_c >= 0.0,
             "confidence weights must be non-negative"
@@ -312,6 +318,8 @@ mod tests {
     fn invalid_rejected() {
         assert!(Config::load(None, &["overlay.spaces=0".into()]).is_err());
         assert!(Config::load(None, &["dfl.lr=-1".into()]).is_err());
+        // zero exchange period used to reach an assert! inside MEP
+        assert!(Config::load(None, &["dfl.comm_period_ms=0".into()]).is_err());
         assert!(Config::load(None, &["garbage".into()]).is_err());
         // negative latency would underflow the delay floor; a non-finite
         // one saturates to u64::MAX µs and corrupts virtual time

@@ -34,6 +34,14 @@ pub struct ClientState {
     pub dedup_skips: u64,
     pub exchanges: u64,
     pub train_steps: u64,
+    /// Compromised by an adversarial scenario phase. Byzantine clients
+    /// stay alive (neighbors still pull their models — that *is* the
+    /// attack) but stop training and aggregating, so their payload never
+    /// self-heals through honest averages.
+    pub byzantine: bool,
+    /// Neighbor models this client rejected for non-finite parameters or
+    /// weights (the Byzantine guard in front of every aggregation).
+    pub rejected_models: u64,
 }
 
 impl ClientState {
@@ -69,6 +77,8 @@ impl ClientState {
             dedup_skips: 0,
             exchanges: 0,
             train_steps: 0,
+            byzantine: false,
+            rejected_models: 0,
         }
     }
 

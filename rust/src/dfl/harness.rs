@@ -100,6 +100,7 @@ mod tests {
             at: at_min * 60_000_000,
             mean_accuracy: acc,
             mean_loss: 1.0,
+            byz_mean_accuracy: None,
             per_client: vec![acc],
         }
     }
@@ -110,6 +111,7 @@ mod tests {
             at: 0,
             mean_accuracy: 0.5,
             mean_loss: 1.0,
+            byz_mean_accuracy: None,
             per_client: vec![0.2, 0.4, 0.6, 0.8],
         };
         assert!((cohort_acc(&s, 0..2) - 0.3).abs() < 1e-12);

@@ -5,7 +5,7 @@
 
 use crate::baselines;
 use crate::graph::Graph;
-use crate::mep::{densify_topk, dequantize_q8, quantize_q8, sparsify_topk};
+use crate::mep::{densify_topk, dequantize_q8, quantize_q8, sparsify_topk, Aggregation};
 use crate::topology::fedlay_graph;
 use crate::util::Rng;
 
@@ -140,6 +140,10 @@ pub struct MethodSpec {
     /// Model-payload wire scheme (`Compression::None` = dense f32, the
     /// historical behavior of every constructor).
     pub compression: Compression,
+    /// How pulled neighbor models are combined (`Aggregation::Mean` =
+    /// the paper's confidence-weighted mean, bitwise-identical to the
+    /// historical behavior; the robust rules tolerate Byzantine peers).
+    pub aggregation: Aggregation,
 }
 
 impl MethodSpec {
@@ -154,6 +158,17 @@ impl MethodSpec {
         self
     }
 
+    /// Same method under a Byzantine-robust aggregation rule
+    /// (`mep::Aggregation`). `Mean` leaves the method name — and every
+    /// clean-run trajectory — untouched.
+    pub fn with_aggregation(mut self, aggregation: Aggregation) -> Self {
+        self.aggregation = aggregation;
+        if aggregation != Aggregation::Mean {
+            self.name = format!("{}+{}", self.name, aggregation.label());
+        }
+        self
+    }
+
     pub fn fedlay(n: usize, spaces: usize) -> Self {
         Self {
             name: format!("fedlay-L{spaces}"),
@@ -161,6 +176,7 @@ impl MethodSpec {
             confidence: true,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -177,6 +193,7 @@ impl MethodSpec {
             confidence: true,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -195,6 +212,7 @@ impl MethodSpec {
             confidence: true,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -206,6 +224,7 @@ impl MethodSpec {
             confidence: true,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -217,6 +236,7 @@ impl MethodSpec {
             confidence: false,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -228,6 +248,7 @@ impl MethodSpec {
             confidence: true,
             asynchronous: false,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -238,6 +259,7 @@ impl MethodSpec {
             confidence: false,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -252,6 +274,7 @@ impl MethodSpec {
             confidence: false,
             asynchronous: false,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -262,6 +285,7 @@ impl MethodSpec {
             confidence: false,
             asynchronous: false, // central rounds are synchronous
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -274,6 +298,7 @@ impl MethodSpec {
             confidence: false,
             asynchronous: false,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 
@@ -288,6 +313,7 @@ impl MethodSpec {
             confidence: false,
             asynchronous: true,
             compression: Compression::None,
+            aggregation: Aggregation::Mean,
         }
     }
 }

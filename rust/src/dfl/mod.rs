@@ -15,5 +15,10 @@ pub mod trainer;
 
 pub use client::ClientState;
 pub use methods::{Compression, MethodSpec, Mobility, Neighborhood};
-pub use trainer::{AccuracySample, TaskData, TaskLane, TrainEvent, Trainer};
+pub use trainer::{AccuracySample, AttackKind, TaskData, TaskLane, TrainEvent, Trainer};
+
+/// Robust aggregation rules (re-exported from `mep::aggregate` so DFL
+/// callers configure `MethodSpec::with_aggregation` without reaching
+/// into MEP internals).
+pub use crate::mep::Aggregation;
 pub mod harness;

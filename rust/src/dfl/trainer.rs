@@ -39,10 +39,12 @@ use super::client::ClientState;
 use super::methods::{Compression, MethodSpec, Mobility, Neighborhood};
 use crate::config::{DflConfig, TaskSpec};
 use crate::data::{CharStream, GaussianTask};
-use crate::mep::{aggregate_cpu, fingerprint, pack_for_artifact, Capacity, ConfidenceParams};
+use crate::mep::{
+    aggregate_cpu, fingerprint, pack_for_artifact, Aggregation, Capacity, ConfidenceParams,
+};
 use crate::ndmp::messages::Time;
 use crate::runtime::{Engine, XInput};
-use crate::sim::{Scheduler, Simulator, Transport};
+use crate::sim::{AttackOp, PoisonMode, Scheduler, Simulator, Transport};
 use crate::topology::NodeId;
 
 use anyhow::Result;
@@ -58,12 +60,17 @@ pub enum TaskData {
 
 /// One recorded accuracy sample. `per_client[i]` is client `i`'s accuracy
 /// (placeholders/failed clients are evaluated too, so cohort slices stay
-/// index-aligned across churn); the means cover live clients only.
+/// index-aligned across churn); the means cover live *honest* clients
+/// only — compromised clients report through `byz_mean_accuracy` instead,
+/// which stays `None` while no live client is byzantine (clean runs are
+/// bitwise-unchanged).
 #[derive(Debug, Clone)]
 pub struct AccuracySample {
     pub at: Time,
     pub mean_accuracy: f64,
     pub mean_loss: f64,
+    /// Mean accuracy over live byzantine clients, when any exist.
+    pub byz_mean_accuracy: Option<f64>,
     pub per_client: Vec<f64>,
 }
 
@@ -89,6 +96,23 @@ pub enum TrainEvent {
     Fail { client: usize },
     /// Graceful NDMP leave.
     Leave { client: usize },
+    /// Adversarial compromise of one client (scenario `poison` /
+    /// `stale_replay` / `eclipse` phases). Task-less: an attacker is
+    /// compromised in every lane at once, like churn flips aliveness.
+    Attack { client: usize, kind: AttackKind },
+}
+
+/// What an [`TrainEvent::Attack`] does when it fires. `StaleMark`
+/// snapshots the victim's current models and schedules `StaleApply`
+/// `lag` later, which replays the stale snapshot as the client's
+/// permanent payload (the freshness attack); the other kinds compromise
+/// immediately.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttackKind {
+    Poison(PoisonMode),
+    StaleMark { lag: Time },
+    StaleApply,
+    Eclipse,
 }
 
 /// A fully resolved MEP aggregation for one client: the participants
@@ -131,6 +155,8 @@ struct WakeOutcome {
     /// neighborhood order.
     pulls: Vec<(usize, u64, bool)>,
     payload_bytes: u64,
+    /// Neighbor models dropped by the non-finite guard before aggregation.
+    rejected: u64,
 }
 
 /// Everything one model task owns: per-client per-task state, dataset
@@ -275,6 +301,9 @@ pub struct Trainer<'e> {
     /// builds it (`Simulator::set_shards`); 1 = serial engine. Adopted
     /// overlays and custom transports keep their own configuration.
     overlay_shards: usize,
+    /// Per-victim model snapshots captured by `AttackKind::StaleMark`,
+    /// consumed by the matching `StaleApply` (one entry per lane).
+    stale_snapshots: HashMap<usize, Vec<Vec<f32>>>,
     /// Skip real training (scalability mode: reuse pre-trained params).
     pub freeze_training: bool,
 }
@@ -357,6 +386,7 @@ impl<'e> Trainer<'e> {
             nbr_cache_hits: 0,
             nbr_cache_misses: 0,
             overlay_shards: 1,
+            stale_snapshots: HashMap::new(),
             freeze_training: false,
         })
     }
@@ -495,6 +525,25 @@ impl<'e> Trainer<'e> {
         self.queue.push(at, TrainEvent::Leave { client });
     }
 
+    /// Schedule one compiled adversarial op (scenario `poison` /
+    /// `stale_replay` / `eclipse` phases). The victim is compromised in
+    /// every lane when the event fires: it stays alive — neighbors keep
+    /// pulling its model, which *is* the attack — but stops training and
+    /// aggregating, so honest averages never wash its payload out.
+    pub fn schedule_attack(&mut self, at: Time, op: AttackOp) -> Result<()> {
+        let (client, kind) = match op {
+            AttackOp::Poison { node, mode } => (node as usize, AttackKind::Poison(mode)),
+            AttackOp::StaleReplay { node, lag } => (node as usize, AttackKind::StaleMark { lag }),
+            AttackOp::Eclipse { node } => (node as usize, AttackKind::Eclipse),
+        };
+        anyhow::ensure!(
+            client < self.lanes[0].clients.len(),
+            "attack target {client} unknown"
+        );
+        self.queue.push(at, TrainEvent::Attack { client, kind });
+        Ok(())
+    }
+
     /// Replace the embedded overlay with an existing simulation — e.g. a
     /// network grown *decentralized* via `sim::grow_network` — so training
     /// continues on that exact protocol state instead of a fresh
@@ -623,6 +672,17 @@ impl<'e> Trainer<'e> {
     /// verify the cache actually carries the load.
     pub fn neighbor_cache_stats(&self) -> (u64, u64) {
         (self.nbr_cache_hits, self.nbr_cache_misses)
+    }
+
+    /// Total neighbor models rejected by the non-finite guard, summed
+    /// over every lane and client — `ScenarioReport`'s rejected-model
+    /// telemetry.
+    pub fn rejected_models_total(&self) -> u64 {
+        self.lanes
+            .iter()
+            .flat_map(|l| l.clients.iter())
+            .map(|c| c.rejected_models)
+            .sum()
     }
 
     /// Schedule correctness snapshots on the embedded overlay every
@@ -826,13 +886,39 @@ impl<'e> Trainer<'e> {
                 .map(|&j| snapshot[j].as_slice())
                 .collect(),
         };
-        let new = if models.len() <= k_max {
-            // hot path: the L1 Pallas kernel inside the agg artifact
-            let (stack, w) = pack_for_artifact(&models, &plan.weights, k_max);
-            engine.aggregate(&lane.spec.task, &stack, &w)?
-        } else {
-            // oversized neighborhood (complete graph / star): CPU fallback
-            aggregate_cpu(&models, &plan.weights)
+        // Byzantine guard: drop non-finite rows *before* anything reaches
+        // the AOT kernel (which would propagate NaN into every survivor).
+        // Clean runs keep every row, so the Mean path below is
+        // bitwise-identical to the historical behavior.
+        let mut kept: Vec<&[f32]> = Vec::with_capacity(models.len());
+        let mut kept_w: Vec<f64> = Vec::with_capacity(plan.weights.len());
+        let mut rejected = 0u64;
+        for (&m, &w) in models.iter().zip(&plan.weights) {
+            if w.is_finite() && m.iter().all(|v| v.is_finite()) {
+                kept.push(m);
+                kept_w.push(w);
+            } else {
+                rejected += 1;
+            }
+        }
+        let task_name = lane.spec.task.clone();
+        let aggregation = self.spec.aggregation;
+        let lane = &mut self.lanes[task];
+        lane.clients[i].rejected_models += rejected;
+        if kept.is_empty() {
+            // every participant (including self) was non-finite: keep the
+            // current model rather than overwrite it with a zero vector
+            return Ok(());
+        }
+        let new = match aggregation {
+            Aggregation::Mean if kept.len() <= k_max => {
+                // hot path: the L1 Pallas kernel inside the agg artifact
+                let (stack, w) = pack_for_artifact(&kept, &kept_w, k_max);
+                engine.aggregate(&task_name, &stack, &w)?
+            }
+            // oversized neighborhood (complete graph / star) or a robust
+            // rule: CPU path
+            agg => agg.apply(&kept, &kept_w),
         };
         let lane = &mut self.lanes[task];
         lane.clients[i].params = new;
@@ -859,7 +945,9 @@ impl<'e> Trainer<'e> {
         // the broadcast global model travels through the wire scheme too
         let global = compression.roundtrip(&aggregate_cpu(&models, &weights));
         let p_bytes = compression.payload_bytes(global.len());
-        for c in lane.clients.iter_mut().filter(|c| c.alive) {
+        // byzantine clients keep their adversarial payload rather than
+        // accept the broadcast (the attack would self-heal otherwise)
+        for c in lane.clients.iter_mut().filter(|c| c.alive && !c.byzantine) {
             c.params = global.clone();
             c.version += 1;
             c.exchanges += 1;
@@ -896,7 +984,7 @@ impl<'e> Trainer<'e> {
         let global = compression.roundtrip(&aggregate_cpu(&refs, &vec![1.0; refs.len()]));
         let p_bytes = compression.payload_bytes(p);
         let members_per_region = (lane.clients.len() / regions.max(1)).max(1) as u64;
-        for c in lane.clients.iter_mut().filter(|c| c.alive) {
+        for c in lane.clients.iter_mut().filter(|c| c.alive && !c.byzantine) {
             c.params = global.clone();
             c.version += 1;
             c.exchanges += 1;
@@ -961,10 +1049,20 @@ impl<'e> Trainer<'e> {
         let lane = &self.lanes[task];
         let mut per_client = Vec::with_capacity(lane.clients.len());
         let (mut acc_sum, mut loss_sum, mut live) = (0.0, 0.0, 0usize);
+        let (mut byz_sum, mut byz) = (0.0, 0usize);
         for (i, c) in lane.clients.iter().enumerate() {
             let (acc, lo) = lane.eval_cache[&fps[i]];
             per_client.push(acc);
-            if c.alive {
+            if !c.alive {
+                continue;
+            }
+            if c.byzantine {
+                // compromised clients report separately; folding a
+                // NaN-poisoned model's loss into the honest mean would
+                // wreck the whole series
+                byz_sum += acc;
+                byz += 1;
+            } else {
                 acc_sum += acc;
                 loss_sum += lo;
                 live += 1;
@@ -975,6 +1073,7 @@ impl<'e> Trainer<'e> {
             at: self.now,
             mean_accuracy: acc_sum / denom,
             mean_loss: loss_sum / denom,
+            byz_mean_accuracy: (byz > 0).then(|| byz_sum / byz as f64),
             per_client,
         })
     }
@@ -1036,6 +1135,7 @@ impl<'e> Trainer<'e> {
         // MEP aggregation against the (stable) neighbor models
         let mut pulls = Vec::with_capacity(job.nbrs.len());
         let mut aggregated = false;
+        let mut rejected = 0u64;
         let mut final_params = trained_params;
         if !job.nbrs.is_empty() {
             let task_key = job.task as u32;
@@ -1072,15 +1172,31 @@ impl<'e> Trainer<'e> {
                     .chain(job.nbrs.iter().map(|&j| lane.clients[j].params.as_slice()))
                     .collect(),
             };
-            let k_max = self.engine.manifest.k_max;
-            let new = if models.len() <= k_max {
-                let (stack, w) = pack_for_artifact(&models, &weights, k_max);
-                self.engine.aggregate(&spec.task, &stack, &w)?
-            } else {
-                aggregate_cpu(&models, &weights)
-            };
-            final_params = Some(new);
-            aggregated = true;
+            // Byzantine guard: reject non-finite rows before the AOT
+            // kernel sees them (NaN would poison every survivor). Clean
+            // runs keep every row — the Mean path stays bitwise-identical.
+            let mut kept: Vec<&[f32]> = Vec::with_capacity(models.len());
+            let mut kept_w: Vec<f64> = Vec::with_capacity(weights.len());
+            for (&m, &w) in models.iter().zip(&weights) {
+                if w.is_finite() && m.iter().all(|v| v.is_finite()) {
+                    kept.push(m);
+                    kept_w.push(w);
+                } else {
+                    rejected += 1;
+                }
+            }
+            if !kept.is_empty() {
+                let k_max = self.engine.manifest.k_max;
+                let new = match self.spec.aggregation {
+                    Aggregation::Mean if kept.len() <= k_max => {
+                        let (stack, w) = pack_for_artifact(&kept, &kept_w, k_max);
+                        self.engine.aggregate(&spec.task, &stack, &w)?
+                    }
+                    agg => agg.apply(&kept, &kept_w),
+                };
+                final_params = Some(new);
+                aggregated = true;
+            }
         }
         Ok(WakeOutcome {
             task: job.task,
@@ -1091,6 +1207,7 @@ impl<'e> Trainer<'e> {
             aggregated,
             pulls,
             payload_bytes,
+            rejected,
         })
     }
 
@@ -1116,6 +1233,7 @@ impl<'e> Trainer<'e> {
         if let Some(p) = o.params {
             lane.clients[i].params = p;
         }
+        lane.clients[i].rejected_models += o.rejected;
         if o.aggregated {
             lane.clients[i].version += 1;
             lane.clients[i].exchanges += 1;
@@ -1225,6 +1343,13 @@ impl<'e> Trainer<'e> {
                         if !self.lanes[task].clients[i].alive {
                             continue; // failed/left while the wake was queued
                         }
+                        if self.lanes[task].clients[i].byzantine {
+                            // compromised clients stop training and
+                            // aggregating (no re-wake either) but stay
+                            // alive, so neighbors keep pulling their
+                            // frozen adversarial payload
+                            continue;
+                        }
                         let nbrs = self.neighbors_of(i);
                         if touched[task].contains(&i)
                             || nbrs.iter().any(|j| touched[task].contains(j))
@@ -1270,7 +1395,7 @@ impl<'e> Trainer<'e> {
             TrainEvent::Wake { .. } => unreachable!("wake events batch in the run loop"),
             TrainEvent::Round => {
                 for i in 0..self.lanes[0].clients.len() {
-                    if self.lanes[0].clients[i].alive {
+                    if self.lanes[0].clients[i].alive && !self.lanes[0].clients[i].byzantine {
                         self.local_train(0, i)?;
                     }
                 }
@@ -1288,7 +1413,9 @@ impl<'e> Trainer<'e> {
                             .map(|c| c.params.clone())
                             .collect();
                         for i in 0..self.lanes[0].clients.len() {
-                            if !self.lanes[0].clients[i].alive {
+                            if !self.lanes[0].clients[i].alive
+                                || self.lanes[0].clients[i].byzantine
+                            {
                                 continue;
                             }
                             let nbrs = self.neighbors_of(i);
@@ -1358,6 +1485,73 @@ impl<'e> Trainer<'e> {
                     sim.schedule_leave(self.now, client as NodeId);
                 }
                 self.retire_client(client);
+            }
+            TrainEvent::Attack { client, kind } => {
+                if client >= self.lanes[0].clients.len() {
+                    return Ok(());
+                }
+                match kind {
+                    AttackKind::Poison(mode) => {
+                        for lane in &mut self.lanes {
+                            let c = &mut lane.clients[client];
+                            match mode {
+                                PoisonMode::Nan => {
+                                    c.params.iter_mut().for_each(|v| *v = f32::NAN)
+                                }
+                                PoisonMode::Scale => {
+                                    c.params.iter_mut().for_each(|v| *v *= -10.0)
+                                }
+                                PoisonMode::SignFlip => {
+                                    c.params.iter_mut().for_each(|v| *v = -*v)
+                                }
+                            }
+                            c.version += 1;
+                            c.byzantine = true;
+                        }
+                    }
+                    AttackKind::StaleMark { lag } => {
+                        // the victim keeps training honestly until `lag`
+                        // elapses, then replays today's model forever
+                        let snap: Vec<Vec<f32>> = self
+                            .lanes
+                            .iter()
+                            .map(|l| l.clients[client].params.clone())
+                            .collect();
+                        self.stale_snapshots.insert(client, snap);
+                        self.queue.push(
+                            self.now + lag.max(1),
+                            TrainEvent::Attack {
+                                client,
+                                kind: AttackKind::StaleApply,
+                            },
+                        );
+                    }
+                    AttackKind::StaleApply => {
+                        // skip if the victim churned out in the meantime
+                        if let Some(snap) = self.stale_snapshots.remove(&client) {
+                            if self.lanes[0].clients[client].alive {
+                                for (lane, p) in self.lanes.iter_mut().zip(snap) {
+                                    let c = &mut lane.clients[client];
+                                    c.params = p;
+                                    c.version += 1;
+                                    c.byzantine = true;
+                                }
+                            }
+                        }
+                    }
+                    AttackKind::Eclipse => {
+                        // the eclipsed arc serves the common init — the
+                        // "stuck at birth" payload an isolated attacker
+                        // region would present to the rest of the ring
+                        for lane in &mut self.lanes {
+                            let p = lane.init_params.clone();
+                            let c = &mut lane.clients[client];
+                            c.params = p;
+                            c.version += 1;
+                            c.byzantine = true;
+                        }
+                    }
+                }
             }
         }
         Ok(())

@@ -58,6 +58,25 @@
 //! which carries scenario runs to 10k clients
 //! (`tests/scenario_scale.rs`).
 //!
+//! ## Byzantine resilience & robust aggregation
+//!
+//! Scenarios also carry an *adversarial* phase family (`poison` with
+//! NaN/scale/sign-flip modes, `stale_replay`, ring-arc `eclipse` —
+//! `docs/scenarios.md`): attackers are chosen in the same deterministic
+//! compile replay as churn victims, stay alive serving their corrupted
+//! payload, and stop training — on both backends identically. Defenses
+//! live in [`mep::Aggregation`]: next to the historical
+//! confidence-weighted `Mean` (bitwise-unchanged for clean runs) sit
+//! coordinate-wise `TrimmedMean`/`Median` and `Krum` selection, wired
+//! through `dfl::MethodSpec::with_aggregation`, the TCP node's config,
+//! and `--aggregation` on the CLI. Independent of the rule, a
+//! non-finite guard in front of every aggregation ([`mep::aggregate_cpu_guarded`],
+//! the trainer's wake/round paths, and the TCP node's frame boundary)
+//! counts and drops NaN/Inf rows so a single poisoned model can never
+//! silently zero a neighborhood average — the rejected-model count and
+//! an honest-vs-byzantine accuracy-gap series surface in
+//! [`sim::ScenarioReport`]. Pinned by `tests/adversarial_aggregation.rs`.
+//!
 //! ## Multi-task engine
 //!
 //! One [`dfl::Trainer`] drives N independent model tasks — each a

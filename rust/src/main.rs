@@ -5,7 +5,7 @@ use fedlay::bench_util;
 use fedlay::bench_util::{engine_suite, micro_suite, render_results, write_bench_json, Table};
 use fedlay::cli::{parse_args, Args, USAGE};
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
-use fedlay::dfl::{multitask, Compression, MethodSpec, Trainer};
+use fedlay::dfl::{multitask, Aggregation, Compression, MethodSpec, Trainer};
 use fedlay::ndmp::messages::MS;
 use fedlay::net::{spawn, ClientNodeConfig, SchedTransport};
 use fedlay::runtime::{find_artifacts_dir, Engine};
@@ -196,6 +196,11 @@ fn compression_flag(args: &Args) -> anyhow::Result<Compression> {
     Compression::parse(&args.str("compression", "none"))
 }
 
+/// Parse the `--aggregation mean|trimmed:<beta>|median|krum:<f>` rule.
+fn aggregation_flag(args: &Args) -> anyhow::Result<Aggregation> {
+    Aggregation::parse(&args.str("aggregation", "mean"))
+}
+
 fn scenario_transport(args: &Args, net: &NetConfig) -> anyhow::Result<Option<Box<dyn Transport>>> {
     match args.str("transport", "sim").as_str() {
         "sim" => Ok(None),
@@ -220,7 +225,8 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
         };
         let method =
             MethodSpec::fedlay_multi(spec.overlay.clone(), spec.net.clone(), tasks.tasks.len())
-                .with_compression(compression_flag(args)?);
+                .with_compression(compression_flag(args)?)
+                .with_aggregation(aggregation_flag(args)?);
         let report = multitask::run_scenario(
             &engine,
             spec,
@@ -257,7 +263,8 @@ fn run_scenario_trainer(args: &Args, spec: &ScenarioSpec) -> anyhow::Result<()> 
     let mut trainer = Trainer::new(
         &engine,
         MethodSpec::fedlay_dynamic(spec.overlay.clone(), spec.net.clone())
-            .with_compression(compression_flag(args)?),
+            .with_compression(compression_flag(args)?)
+            .with_aggregation(aggregation_flag(args)?),
         cfg,
         weights[..spec.initial].to_vec(),
     )?;
@@ -297,7 +304,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "complete" => MethodSpec::complete(n),
         other => anyhow::bail!("unknown method {other:?}"),
     };
-    let spec = spec.with_compression(compression_flag(args)?);
+    let spec = spec
+        .with_compression(compression_flag(args)?)
+        .with_aggregation(aggregation_flag(args)?);
     let classes = engine.manifest.task(&cfg.dfl.task)?.classes;
     let weights =
         fedlay::data::shard_labels(n, classes, cfg.dfl.shards_per_client, cfg.dfl.seed);
@@ -383,7 +392,8 @@ fn cmd_train_multi(args: &Args, tasks_path: &str) -> anyhow::Result<()> {
     let fails = args.usize("fails", 0)?.min(n.saturating_sub(1));
     let churn_at = args.u64("churn-at-min", minutes / 2)? * 60 * 1_000_000;
     let mspec = MethodSpec::fedlay_multi(cfg.overlay.clone(), cfg.net.clone(), spec.tasks.len())
-        .with_compression(compression_flag(args)?);
+        .with_compression(compression_flag(args)?)
+        .with_aggregation(aggregation_flag(args)?);
     let (mut trainer, tables) =
         multitask::build_trainer(&engine, mspec, cfg.dfl.clone(), &spec, n + joins)?;
     match args.str("transport", "sim").as_str() {
@@ -501,6 +511,7 @@ fn cmd_node(args: &Args) -> anyhow::Result<()> {
         local_steps: cfg.dfl.local_steps,
         period_ms: 2_000,
         compression: compression_flag(args)?,
+        aggregation: aggregation_flag(args)?,
         seed: cfg.dfl.seed,
         book: None,
     };

@@ -12,16 +12,63 @@
 //!
 //! This module also owns the padding convention shared with L2:
 //! `K_MAX` rows, zero weight ⇒ row ignored.
+//!
+//! # Byzantine-resilient aggregation
+//!
+//! A peer is not necessarily honest: one NaN/Inf model row (or weight)
+//! fed to a plain weighted mean turns the whole aggregate non-finite
+//! and the corruption spreads fleet-wide on the next exchange. Two
+//! defenses live here:
+//!
+//! * every entry point skips rows carrying non-finite parameters or a
+//!   non-finite weight — `aggregate_cpu_guarded` additionally reports
+//!   how many rows were rejected so callers can surface the count as
+//!   telemetry rather than averaging poison silently;
+//! * [`Aggregation`] selects the combination rule: plain [`Mean`]
+//!   (bitwise-identical to `aggregate_cpu`), coordinate-wise
+//!   [`TrimmedMean`] and [`Median`], and [`Krum`] selection — the
+//!   classic defenses against *finite* poison (scaled or sign-flipped
+//!   models) that a NaN guard cannot catch.
+//!
+//! [`Mean`]: Aggregation::Mean
+//! [`TrimmedMean`]: Aggregation::TrimmedMean
+//! [`Median`]: Aggregation::Median
+//! [`Krum`]: Aggregation::Krum
+
+/// True when the row may participate in an aggregate: finite weight,
+/// every parameter finite.
+fn row_is_finite(model: &[f32], weight: f64) -> bool {
+    weight.is_finite() && model.iter().all(|v| v.is_finite())
+}
 
 /// Aggregate models row-major `[k][p]` with weights `[k]` on the CPU.
+///
+/// Rows with a non-finite weight or any non-finite parameter are
+/// skipped (never averaged). Use [`aggregate_cpu_guarded`] when the
+/// caller needs the rejected-row count for telemetry.
 pub fn aggregate_cpu(models: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+    aggregate_cpu_guarded(models, weights).0
+}
+
+/// [`aggregate_cpu`] plus the number of rows rejected as non-finite.
+///
+/// When *every* row is rejected the aggregate is the all-zero vector —
+/// a documented sentinel (the caller should treat `rejected == k` as
+/// "no usable models", exactly like an empty neighborhood).
+pub fn aggregate_cpu_guarded(models: &[&[f32]], weights: &[f64]) -> (Vec<f32>, usize) {
     assert_eq!(models.len(), weights.len());
     assert!(!models.is_empty(), "aggregate of nothing");
     let p = models[0].len();
     assert!(models.iter().all(|m| m.len() == p), "ragged model stack");
-    let denom: f64 = weights.iter().sum::<f64>().max(1e-12);
+    let mut rejected = 0usize;
+    let mut denom = 0.0f64;
     let mut out = vec![0.0f64; p];
     for (m, &w) in models.iter().zip(weights) {
+        if !row_is_finite(m, w) {
+            rejected += 1;
+            continue;
+        }
+        denom += w;
         if w == 0.0 {
             continue;
         }
@@ -29,7 +76,197 @@ pub fn aggregate_cpu(models: &[&[f32]], weights: &[f64]) -> Vec<f32> {
             *o += w * x as f64;
         }
     }
-    out.into_iter().map(|x| (x / denom) as f32).collect()
+    let denom = denom.max(1e-12);
+    (out.into_iter().map(|x| (x / denom) as f32).collect(), rejected)
+}
+
+/// How a client combines its neighborhood's models: the paper's
+/// confidence-weighted mean, or a Byzantine-robust rule.
+///
+/// `Mean` reduces bitwise to [`aggregate_cpu`]; the robust rules trade
+/// some statistical efficiency for tolerance of poisoned rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregation {
+    /// Confidence-weighted mean (paper §III-C2) — the default.
+    Mean,
+    /// Coordinate-wise trimmed mean: drop the `⌊beta·k⌋` smallest and
+    /// largest values per coordinate, weighted-average the rest.
+    /// `beta ∈ (0, 0.5)`.
+    TrimmedMean { beta: f64 },
+    /// Coordinate-wise (unweighted) median.
+    Median,
+    /// Krum selection: keep the single model minimizing the summed
+    /// squared distance to its `k − f − 2` nearest peers, assuming at
+    /// most `f` Byzantine rows.
+    Krum { f: usize },
+}
+
+impl Aggregation {
+    /// Parse a CLI/TOML spelling: `mean`, `trimmed:<beta>`, `median`,
+    /// `krum:<f>`.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        if let Some(beta) = s.strip_prefix("trimmed:") {
+            let beta: f64 = beta
+                .parse()
+                .map_err(|_| anyhow::anyhow!("trimmed:<beta> expects a number, got {beta:?}"))?;
+            anyhow::ensure!(
+                beta > 0.0 && beta < 0.5,
+                "trimmed beta must be in (0, 0.5), got {beta}"
+            );
+            return Ok(Self::TrimmedMean { beta });
+        }
+        if let Some(f) = s.strip_prefix("krum:") {
+            let f: usize = f
+                .parse()
+                .map_err(|_| anyhow::anyhow!("krum:<f> expects an integer, got {f:?}"))?;
+            return Ok(Self::Krum { f });
+        }
+        match s {
+            "mean" => Ok(Self::Mean),
+            "median" => Ok(Self::Median),
+            other => anyhow::bail!(
+                "unknown aggregation {other:?} (expected mean|trimmed:<beta>|median|krum:<f>)"
+            ),
+        }
+    }
+
+    /// Short suffix for method names and reports.
+    pub fn label(&self) -> String {
+        match self {
+            Self::Mean => "mean".into(),
+            Self::TrimmedMean { beta } => format!("trimmed{}", (beta * 100.0).round() as u32),
+            Self::Median => "median".into(),
+            Self::Krum { f } => format!("krum{f}"),
+        }
+    }
+
+    /// Apply the rule to finite rows. `Mean` is bitwise-identical to
+    /// [`aggregate_cpu`]; the robust rules assume the caller already
+    /// filtered non-finite rows (use [`apply_guarded`] otherwise).
+    ///
+    /// [`apply_guarded`]: Aggregation::apply_guarded
+    pub fn apply(&self, models: &[&[f32]], weights: &[f64]) -> Vec<f32> {
+        match *self {
+            Self::Mean => aggregate_cpu(models, weights),
+            Self::TrimmedMean { beta } => trimmed_mean_cpu(models, weights, beta),
+            Self::Median => median_cpu(models),
+            Self::Krum { f } => krum_cpu(models, f),
+        }
+    }
+
+    /// Filter non-finite rows, then apply the rule to the survivors.
+    /// Returns the aggregate plus the rejected-row count; all rows
+    /// rejected ⇒ the all-zero vector (same sentinel as
+    /// [`aggregate_cpu_guarded`]).
+    pub fn apply_guarded(&self, models: &[&[f32]], weights: &[f64]) -> (Vec<f32>, usize) {
+        assert_eq!(models.len(), weights.len());
+        assert!(!models.is_empty(), "aggregate of nothing");
+        if let Self::Mean = self {
+            // single pass, bitwise-identical to aggregate_cpu
+            return aggregate_cpu_guarded(models, weights);
+        }
+        let mut kept_m: Vec<&[f32]> = Vec::with_capacity(models.len());
+        let mut kept_w: Vec<f64> = Vec::with_capacity(weights.len());
+        for (m, &w) in models.iter().zip(weights) {
+            if row_is_finite(m, w) {
+                kept_m.push(m);
+                kept_w.push(w);
+            }
+        }
+        let rejected = models.len() - kept_m.len();
+        if kept_m.is_empty() {
+            return (vec![0.0f32; models[0].len()], rejected);
+        }
+        (self.apply(&kept_m, &kept_w), rejected)
+    }
+}
+
+/// Coordinate-wise trimmed mean: per coordinate, sort the `k` values,
+/// drop `⌊beta·k⌋` from each end (capped so at least one survives) and
+/// take the weighted mean of the remainder.
+pub fn trimmed_mean_cpu(models: &[&[f32]], weights: &[f64], beta: f64) -> Vec<f32> {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty(), "aggregate of nothing");
+    let k = models.len();
+    let p = models[0].len();
+    assert!(models.iter().all(|m| m.len() == p), "ragged model stack");
+    let trim = ((beta * k as f64).floor() as usize).min((k - 1) / 2);
+    let mut col: Vec<(f32, f64)> = Vec::with_capacity(k);
+    let mut out = vec![0.0f32; p];
+    for (c, o) in out.iter_mut().enumerate() {
+        col.clear();
+        col.extend(models.iter().zip(weights).map(|(m, &w)| (m[c], w)));
+        col.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let kept = &col[trim..k - trim];
+        let denom: f64 = kept.iter().map(|&(_, w)| w).sum::<f64>().max(1e-12);
+        let num: f64 = kept.iter().map(|&(v, w)| w * v as f64).sum();
+        *o = (num / denom) as f32;
+    }
+    out
+}
+
+/// Coordinate-wise unweighted median (even counts average the two
+/// central values).
+pub fn median_cpu(models: &[&[f32]]) -> Vec<f32> {
+    assert!(!models.is_empty(), "aggregate of nothing");
+    let k = models.len();
+    let p = models[0].len();
+    assert!(models.iter().all(|m| m.len() == p), "ragged model stack");
+    let mut col: Vec<f32> = Vec::with_capacity(k);
+    let mut out = vec![0.0f32; p];
+    for (c, o) in out.iter_mut().enumerate() {
+        col.clear();
+        col.extend(models.iter().map(|m| m[c]));
+        col.sort_by(f32::total_cmp);
+        *o = if k % 2 == 1 {
+            col[k / 2]
+        } else {
+            ((col[k / 2 - 1] as f64 + col[k / 2] as f64) / 2.0) as f32
+        };
+    }
+    out
+}
+
+/// Krum: score each row by the sum of its `k − f − 2` smallest squared
+/// distances to the other rows (at least one), return the
+/// lowest-scoring row (ties → lowest index, so selection is
+/// deterministic).
+pub fn krum_cpu(models: &[&[f32]], f: usize) -> Vec<f32> {
+    assert!(!models.is_empty(), "aggregate of nothing");
+    let k = models.len();
+    let p = models[0].len();
+    assert!(models.iter().all(|m| m.len() == p), "ragged model stack");
+    if k == 1 {
+        return models[0].to_vec();
+    }
+    let closest = k.saturating_sub(f + 2).max(1).min(k - 1);
+    let mut best = 0usize;
+    let mut best_score = f64::INFINITY;
+    let mut dists: Vec<f64> = Vec::with_capacity(k - 1);
+    for (i, mi) in models.iter().enumerate() {
+        dists.clear();
+        for (j, mj) in models.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            let d2: f64 = mi
+                .iter()
+                .zip(mj.iter())
+                .map(|(a, b)| {
+                    let d = *a as f64 - *b as f64;
+                    d * d
+                })
+                .sum();
+            dists.push(d2);
+        }
+        dists.sort_by(f64::total_cmp);
+        let score: f64 = dists[..closest].iter().sum();
+        if score < best_score {
+            best_score = score;
+            best = i;
+        }
+    }
+    models[best].to_vec()
 }
 
 /// Pack a model stack into the fixed `[K_MAX, P]` buffer + `[K_MAX]`
@@ -89,6 +326,123 @@ mod tests {
         let y = aggregate_cpu(&[&a, &b], &[3.0, 7.0]);
         for (p, q) in x.iter().zip(&y) {
             assert!((p - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn nan_row_is_rejected_not_averaged() {
+        // regression: one poisoned neighbor used to turn the whole
+        // aggregate NaN and spread through every subsequent exchange
+        let honest = vec![1.0f32, 2.0, 3.0];
+        let poison = vec![f32::NAN; 3];
+        let (out, rejected) = aggregate_cpu_guarded(&[&honest, &poison], &[1.0, 1.0]);
+        assert_eq!(rejected, 1);
+        assert!(out.iter().all(|v| v.is_finite()));
+        for (a, b) in out.iter().zip(&honest) {
+            assert!((a - b).abs() < 1e-6, "honest model should survive intact");
+        }
+    }
+
+    #[test]
+    fn inf_params_and_nan_weights_are_rejected() {
+        let honest = vec![0.5f32, -0.5];
+        let inf = vec![f32::INFINITY, 0.0];
+        let fine = vec![1.5f32, -1.5];
+        let (out, rejected) =
+            aggregate_cpu_guarded(&[&honest, &inf, &fine], &[1.0, 1.0, f64::NAN]);
+        assert_eq!(rejected, 2);
+        assert_eq!(out, honest);
+        // all rows poisoned: zero sentinel, everything counted
+        let (out, rejected) = aggregate_cpu_guarded(&[&inf], &[1.0]);
+        assert_eq!(rejected, 1);
+        assert_eq!(out, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_variant_is_bitwise_aggregate_cpu() {
+        let a = vec![0.25f32, -1.5, 3.0];
+        let b = vec![2.0f32, 0.125, -0.75];
+        let c = vec![-1.0f32, 1.0, 0.5];
+        let w = [0.3, 1.7, 0.9];
+        let direct = aggregate_cpu(&[&a, &b, &c], &w);
+        let via_enum = Aggregation::Mean.apply(&[&a, &b, &c], &w);
+        assert_eq!(direct, via_enum, "Mean must reduce bitwise to aggregate_cpu");
+        let (guarded, rejected) = Aggregation::Mean.apply_guarded(&[&a, &b, &c], &w);
+        assert_eq!(direct, guarded);
+        assert_eq!(rejected, 0);
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, 10.0],
+            vec![2.0, 20.0],
+            vec![3.0, 30.0],
+            vec![1000.0, -1000.0], // attacker
+        ];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = trimmed_mean_cpu(&refs, &[1.0; 4], 0.25);
+        // trim 1 from each end per coordinate: {2,3} and {10,20} survive
+        assert!((out[0] - 2.5).abs() < 1e-6);
+        assert!((out[1] - 15.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn median_is_coordinate_wise() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, -5.0],
+            vec![2.0, 0.0],
+            vec![9.0, 5.0],
+        ];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(median_cpu(&refs), vec![2.0, 0.0]);
+        // even count averages the central pair
+        let rows2 = [vec![1.0f32], vec![3.0f32]];
+        let refs2: Vec<&[f32]> = rows2.iter().map(|r| r.as_slice()).collect();
+        assert_eq!(median_cpu(&refs2), vec![2.0]);
+    }
+
+    #[test]
+    fn krum_picks_a_clustered_row() {
+        let rows: Vec<Vec<f32>> = vec![
+            vec![1.0, 1.0],
+            vec![1.1, 0.9],
+            vec![0.9, 1.1],
+            vec![-50.0, 50.0], // attacker far from the cluster
+        ];
+        let refs: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let out = krum_cpu(&refs, 1);
+        assert!(rows[..3].iter().any(|r| r.as_slice() == out.as_slice()));
+    }
+
+    #[test]
+    fn aggregation_parse_and_labels_round_trip() {
+        assert_eq!(Aggregation::parse("mean").unwrap(), Aggregation::Mean);
+        assert_eq!(Aggregation::parse("median").unwrap(), Aggregation::Median);
+        assert_eq!(
+            Aggregation::parse("trimmed:0.2").unwrap(),
+            Aggregation::TrimmedMean { beta: 0.2 }
+        );
+        assert_eq!(Aggregation::parse("krum:2").unwrap(), Aggregation::Krum { f: 2 });
+        assert_eq!(Aggregation::TrimmedMean { beta: 0.2 }.label(), "trimmed20");
+        assert_eq!(Aggregation::Krum { f: 2 }.label(), "krum2");
+        assert!(Aggregation::parse("trimmed:0.6").is_err());
+        assert!(Aggregation::parse("zork").is_err());
+        assert!(Aggregation::parse("krum:x").is_err());
+    }
+
+    #[test]
+    fn robust_rules_guard_non_finite_rows_too() {
+        let honest = vec![1.0f32, 2.0];
+        let poison = vec![f32::NAN, 1.0];
+        for agg in [
+            Aggregation::TrimmedMean { beta: 0.2 },
+            Aggregation::Median,
+            Aggregation::Krum { f: 1 },
+        ] {
+            let (out, rejected) = agg.apply_guarded(&[&honest, &poison], &[1.0, 1.0]);
+            assert_eq!(rejected, 1, "{agg:?}");
+            assert_eq!(out, honest, "{agg:?}");
         }
     }
 

@@ -13,15 +13,29 @@
 /// Symmetric per-tensor i8 quantization: `level = round(v / scale)`
 /// with `scale = max |v| / 127`. Returns `(scale, levels)`;
 /// an all-zero (or empty) tensor gets scale 0 and zero levels.
+///
+/// Non-finite entries (NaN/±Inf — a poisoned payload) are *sanitized*:
+/// they quantize to level 0 and are excluded from the scale
+/// computation, so one corrupt parameter can neither smuggle NaN
+/// through the wire nor zero the entire tensor. `-0.0` behaves as 0.
 pub fn quantize_q8(params: &[f32]) -> (f32, Vec<i8>) {
-    let max_abs = params.iter().fold(0.0f32, |m, v| m.max(v.abs()));
-    if max_abs == 0.0 || !max_abs.is_finite() {
+    let max_abs = params
+        .iter()
+        .filter(|v| v.is_finite())
+        .fold(0.0f32, |m, v| m.max(v.abs()));
+    if max_abs == 0.0 {
         return (0.0, vec![0; params.len()]);
     }
     let scale = max_abs / 127.0;
     let levels = params
         .iter()
-        .map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+        .map(|v| {
+            if v.is_finite() {
+                (v / scale).round().clamp(-127.0, 127.0) as i8
+            } else {
+                0
+            }
+        })
         .collect();
     (scale, levels)
 }
@@ -35,26 +49,27 @@ pub fn dequantize_q8(scale: f32, levels: &[i8]) -> Vec<f32> {
 /// index, so the selection is deterministic). Returns `(indices,
 /// values)` with indices ascending; `k >= len` degenerates to the dense
 /// tensor.
+///
+/// Non-finite entries are *sanitized* to 0.0 — they rank as magnitude
+/// zero and emit 0.0 when selected, matching [`quantize_q8`]'s handling
+/// of the same corrupt input: no wire scheme forwards NaN/Inf.
 pub fn sparsify_topk(params: &[f32], k: usize) -> (Vec<u32>, Vec<f32>) {
+    let sane = |v: f32| if v.is_finite() { v } else { 0.0 };
     if k >= params.len() {
         return (
             (0..params.len() as u32).collect(),
-            params.to_vec(),
+            params.iter().map(|&v| sane(v)).collect(),
         );
     }
     let mut order: Vec<u32> = (0..params.len() as u32).collect();
-    // total order: magnitude descending, then index ascending — NaN
-    // magnitudes sort last so they are only kept once everything finite
-    // is in
+    // total order: sanitized magnitude descending, then index ascending
     order.sort_by(|&a, &b| {
-        let (ma, mb) = (params[a as usize].abs(), params[b as usize].abs());
-        mb.partial_cmp(&ma)
-            .unwrap_or_else(|| mb.is_nan().cmp(&ma.is_nan()))
-            .then(a.cmp(&b))
+        let (ma, mb) = (sane(params[a as usize]).abs(), sane(params[b as usize]).abs());
+        mb.total_cmp(&ma).then(a.cmp(&b))
     });
     let mut indices: Vec<u32> = order[..k].to_vec();
     indices.sort_unstable();
-    let values = indices.iter().map(|&i| params[i as usize]).collect();
+    let values = indices.iter().map(|&i| sane(params[i as usize])).collect();
     (indices, values)
 }
 
@@ -116,6 +131,48 @@ mod tests {
         let (indices, values) = sparsify_topk(&params, 99);
         assert_eq!(indices.len(), params.len());
         assert_eq!(values, params);
+    }
+
+    #[test]
+    fn q8_sanitizes_non_finite_without_zeroing_the_tensor() {
+        // NaN and Inf entries quantize to level 0; finite entries keep
+        // their scale (the old behavior zeroed the whole tensor on Inf)
+        let params = vec![f32::NAN, 1.0, f32::INFINITY, -2.0, f32::NEG_INFINITY];
+        let (scale, levels) = quantize_q8(&params);
+        assert!((scale - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(levels[0], 0);
+        assert_eq!(levels[2], 0);
+        assert_eq!(levels[4], 0);
+        assert_eq!(levels[3], -127);
+        let back = dequantize_q8(scale, &levels);
+        assert!(back.iter().all(|v| v.is_finite()));
+        assert!((back[1] - 1.0).abs() <= scale * 0.5 + f32::EPSILON);
+        // an all-non-finite tensor degenerates like all-zero
+        assert_eq!(quantize_q8(&[f32::NAN, f32::INFINITY]), (0.0, vec![0, 0]));
+        // -0.0 behaves as zero on both sides of the round trip
+        let (scale, levels) = quantize_q8(&[-0.0, 1.0]);
+        assert_eq!(levels[0], 0);
+        assert_eq!(dequantize_q8(scale, &levels)[0], 0.0);
+    }
+
+    #[test]
+    fn topk_sanitizes_non_finite_and_never_prefers_them() {
+        let params = vec![f32::NAN, 0.5, f32::INFINITY, 2.0, -1.0];
+        let (indices, values) = sparsify_topk(&params, 3);
+        // non-finite entries rank as magnitude 0: the three finite
+        // entries win, in index order
+        assert_eq!(indices, vec![1, 3, 4]);
+        assert_eq!(values, vec![0.5, 2.0, -1.0]);
+        // even when forced in (k >= finite count), they emit 0.0
+        let (_, values) = sparsify_topk(&params, 5);
+        assert!(values.iter().all(|v| v.is_finite()));
+        assert_eq!(values, vec![0.0, 0.5, 0.0, 2.0, -1.0]);
+        // -0.0 survives as a zero-magnitude finite value
+        let (indices, values) = sparsify_topk(&[-0.0, 3.0], 1);
+        assert_eq!(indices, vec![1]);
+        assert_eq!(values, vec![3.0]);
+        let dense = densify_topk(2, &indices, &values);
+        assert_eq!(dense, vec![0.0, 3.0]);
     }
 
     #[test]

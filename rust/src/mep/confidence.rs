@@ -21,9 +21,17 @@ pub fn data_confidence(label_counts: &[u64]) -> f64 {
 
 /// Communication confidence from the exchange period (any time unit —
 /// normalization cancels it).
-pub fn comm_confidence(period: f64) -> f64 {
-    assert!(period > 0.0, "period must be positive");
-    1.0 / period
+///
+/// A non-positive or non-finite period is a configuration error — the
+/// `Config`/`TaskSpec` validators reject it before any exchange runs —
+/// so this reports an error instead of panicking (the old `assert!`
+/// was reachable from user TOML/CLI input).
+pub fn comm_confidence(period: f64) -> anyhow::Result<f64> {
+    anyhow::ensure!(
+        period.is_finite() && period > 0.0,
+        "exchange period must be positive and finite, got {period}"
+    );
+    Ok(1.0 / period)
 }
 
 /// Combined confidence of one client relative to its neighborhood
@@ -79,8 +87,17 @@ mod tests {
 
     #[test]
     fn comm_confidence_inverse() {
-        assert!(comm_confidence(5.0) > comm_confidence(10.0));
-        assert_eq!(comm_confidence(2.0), 0.5);
+        assert!(comm_confidence(5.0).unwrap() > comm_confidence(10.0).unwrap());
+        assert_eq!(comm_confidence(2.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn comm_confidence_rejects_degenerate_periods() {
+        // previously an assert! panic, reachable from user config
+        assert!(comm_confidence(0.0).is_err());
+        assert!(comm_confidence(-1.0).is_err());
+        assert!(comm_confidence(f64::NAN).is_err());
+        assert!(comm_confidence(f64::INFINITY).is_err());
     }
 
     #[test]

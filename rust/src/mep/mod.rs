@@ -8,7 +8,10 @@ pub mod confidence;
 pub mod fingerprint;
 pub mod schedule;
 
-pub use aggregate::{aggregate_cpu, pack_for_artifact};
+pub use aggregate::{
+    aggregate_cpu, aggregate_cpu_guarded, krum_cpu, median_cpu, pack_for_artifact,
+    trimmed_mean_cpu, Aggregation,
+};
 pub use compress::{dequantize_q8, densify_topk, quantize_q8, sparsify_topk};
 pub use confidence::{comm_confidence, data_confidence, ConfidenceParams};
 pub use fingerprint::{fingerprint, FingerprintCache};

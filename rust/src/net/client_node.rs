@@ -23,7 +23,7 @@ use crate::data::GaussianTask;
 use crate::dfl::Compression;
 use crate::mep::{
     densify_topk, dequantize_q8, fingerprint, pack_for_artifact, quantize_q8, sparsify_topk,
-    ConfidenceParams, FingerprintCache,
+    Aggregation, ConfidenceParams, FingerprintCache,
 };
 use crate::ndmp::messages::{Msg, Time, MS};
 use crate::ndmp::node::NodeState;
@@ -66,6 +66,11 @@ pub struct ClientNodeConfig {
     /// any scheme are always accepted — nodes with different settings
     /// interoperate, each only deciding what *it* puts on the wire.
     pub compression: Compression,
+    /// Aggregation rule for the MEP round (`Mean` = the historical
+    /// confidence-weighted average; the robust rules tolerate Byzantine
+    /// neighbors). Independent of the non-finite payload guard, which is
+    /// always on.
+    pub aggregation: Aggregation,
     pub seed: u64,
 }
 
@@ -80,6 +85,9 @@ pub struct ClientReport {
     pub data_sent: u64,
     pub model_bytes_sent: u64,
     pub dedup_skips: u64,
+    /// Inbound models dropped for non-finite parameters or confidence
+    /// (the Byzantine guard at the frame boundary).
+    pub rejected_models: u64,
     pub joined: bool,
 }
 
@@ -225,6 +233,9 @@ struct Reactor<'e> {
     model_bytes_sent: u64,
     dedup_skips: u64,
     mep_sent: u64,
+    /// Inbound models rejected by the non-finite guard (never cached, so
+    /// NaN can never reach this node's aggregation or its own params).
+    rejected_models: u64,
     /// `FEDLAY_NET_DEBUG` resolved once at construction: env lookups take
     /// a process-global lock, far too hot for the per-frame path.
     debug: bool,
@@ -243,6 +254,21 @@ impl Reactor<'_> {
         self.status.data_sent.store(self.mep_sent, Ordering::Relaxed);
         *self.status.neighbors.lock().unwrap() = self.ndmp.neighbor_ids();
         *self.status.ring.lock().unwrap() = self.ndmp.ring_neighbor_ids();
+    }
+
+    /// Cache one inbound neighbor model — unless anything about it is
+    /// non-finite, in which case it is counted and dropped at the frame
+    /// boundary. This is the TCP path's Byzantine guard: a poisoned (or
+    /// bit-flipped) payload must never be stored, because a single NaN
+    /// row fed to the aggregation kernel would poison this node's own
+    /// parameters on the next round.
+    fn accept_model(&mut self, from: NodeId, confidence: f32, params: Vec<f32>) {
+        if !confidence.is_finite() || params.iter().any(|v| !v.is_finite()) {
+            self.rejected_models += 1;
+            return;
+        }
+        self.neighbor_models
+            .insert(from, NeighborModel { confidence, params });
     }
 
     /// One inbound frame: MEP messages are handled here, everything else
@@ -298,13 +324,7 @@ impl Reactor<'_> {
                 if *task != self.cfg.task_id {
                     return; // foreign-task payloads must never be aggregated
                 }
-                self.neighbor_models.insert(
-                    from,
-                    NeighborModel {
-                        confidence: *confidence,
-                        params: p.clone(),
-                    },
-                );
+                self.accept_model(from, *confidence, p.clone());
             }
             Msg::ModelPayloadQ8 {
                 task,
@@ -316,13 +336,8 @@ impl Reactor<'_> {
                 if *task != self.cfg.task_id {
                     return;
                 }
-                self.neighbor_models.insert(
-                    from,
-                    NeighborModel {
-                        confidence: *confidence,
-                        params: dequantize_q8(*scale, levels),
-                    },
-                );
+                let params = dequantize_q8(*scale, levels);
+                self.accept_model(from, *confidence, params);
             }
             Msg::ModelPayloadTopK {
                 task,
@@ -335,13 +350,8 @@ impl Reactor<'_> {
                 if *task != self.cfg.task_id {
                     return;
                 }
-                self.neighbor_models.insert(
-                    from,
-                    NeighborModel {
-                        confidence: *confidence,
-                        params: densify_topk(*dim as usize, indices, values),
-                    },
-                );
+                let params = densify_topk(*dim as usize, indices, values);
+                self.accept_model(from, *confidence, params);
             }
             _ => {
                 let now = self.now_us();
@@ -461,11 +471,15 @@ impl Reactor<'_> {
             let models: Vec<&[f32]> = std::iter::once(self.params.as_slice())
                 .chain(self.neighbor_models.values().map(|m| m.params.as_slice()))
                 .collect();
-            let new = if models.len() <= self.k_max {
-                let (stack, w) = pack_for_artifact(&models, &weights, self.k_max);
-                self.engine.aggregate(&self.cfg.task, &stack, &w)?
-            } else {
-                crate::mep::aggregate_cpu(&models, &weights)
+            // cached neighbor models are guarded on arrival, so every
+            // row here is finite; dispatch on the configured rule, with
+            // Mean keeping the historical AOT-kernel hot path
+            let new = match self.cfg.aggregation {
+                Aggregation::Mean if models.len() <= self.k_max => {
+                    let (stack, w) = pack_for_artifact(&models, &weights, self.k_max);
+                    self.engine.aggregate(&self.cfg.task, &stack, &w)?
+                }
+                agg => agg.apply(&models, &weights),
             };
             self.params = new;
             self.version += 1;
@@ -534,6 +548,7 @@ fn run_node(
         model_bytes_sent: 0,
         dedup_skips: 0,
         mep_sent: 0,
+        rejected_models: 0,
         debug: std::env::var("FEDLAY_NET_DEBUG").is_ok(),
         status,
         start,
@@ -623,6 +638,7 @@ fn run_node(
         data_sent: r.mep_sent,
         model_bytes_sent: r.model_bytes_sent,
         dedup_skips: r.dedup_skips,
+        rejected_models: r.rejected_models,
         joined: r.ndmp.joined,
     })
 }

@@ -24,8 +24,9 @@ pub use event::{Event, EventKind, EventQueue};
 pub use network::{LatencyModel, LinkDelay, LinkModel, SimTransport};
 pub use runner::{grow_network, CorrectnessSample, FootprintStats, Simulator};
 pub use scenario::{
-    quiesce, ring_quality, ChurnCounts, ChurnEvent, ChurnOp, ChurnSink, MultiTrainerSink, Phase,
-    PhaseKind, RingQuality, ScenarioReport, ScenarioSpec,
+    quiesce, ring_quality, AttackCounts, AttackEvent, AttackOp, ChurnCounts, ChurnEvent, ChurnOp,
+    ChurnSink, MultiTrainerSink, Phase, PhaseKind, PoisonMode, RingQuality, ScenarioReport,
+    ScenarioSpec,
 };
 pub use sched::{EventId, Scheduled, Scheduler};
 pub use transport::{Arrival, Transport};

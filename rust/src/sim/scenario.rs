@@ -62,6 +62,52 @@ pub enum PhaseKind {
     /// failures of ring-adjacent nodes are the worst case for repair
     /// (random failures rarely hit both adjacents of anyone).
     Partition { fraction: f64 },
+    /// Byzantine model poisoning: `frac` of the live clients turn
+    /// adversarial at the phase instant and serve `mode`-poisoned
+    /// models from then on (they stay protocol-live, so the overlay
+    /// never notices them).
+    Poison { mode: PoisonMode, frac: f64 },
+    /// Stale-model replay: `frac` of the live clients snapshot their
+    /// model at the phase instant and, from `lag` later, serve that
+    /// (by then `lag`-old) snapshot forever instead of fresh updates.
+    StaleReplay { frac: f64, lag: Time },
+    /// Eclipse misdirection: a contiguous arc of the space-0 ring —
+    /// `arc` of the live nodes — keeps answering the protocol but
+    /// serves only the initial model, starving the clients whose
+    /// neighborhoods the arc dominates.
+    Eclipse { arc: f64 },
+}
+
+/// How a poisoned client corrupts the model it serves.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PoisonMode {
+    /// Every parameter becomes NaN — caught by the non-finite guard in
+    /// `mep::aggregate`, so it tests the telemetry path.
+    Nan,
+    /// Parameters scaled by −10: finite, so only robust aggregation
+    /// rules (trimmed mean / median / Krum) reject it.
+    Scale,
+    /// Parameters negated (sign-flip attack).
+    SignFlip,
+}
+
+impl PoisonMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "nan" => Ok(Self::Nan),
+            "scale" => Ok(Self::Scale),
+            "signflip" => Ok(Self::SignFlip),
+            other => bail!("unknown poison mode {other:?} (nan | scale | signflip)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Nan => "nan",
+            Self::Scale => "scale",
+            Self::SignFlip => "signflip",
+        }
+    }
 }
 
 /// A resolved churn operation in the compiled schedule.
@@ -101,6 +147,54 @@ impl ChurnCounts {
     }
 }
 
+/// A resolved Byzantine attack in the compiled schedule. Attacker
+/// selection happens at compile time against the same virtual live-set
+/// replay (and rng stream) as churn victims, so the identical attacker
+/// set fires on every backend — sim ≡ tcp conformance holds for
+/// adversarial scenarios for the same reason it does for churn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AttackOp {
+    /// `node` starts serving `mode`-poisoned models.
+    Poison { node: NodeId, mode: PoisonMode },
+    /// `node` snapshots its model now and serves the frozen snapshot
+    /// from `lag` later.
+    StaleReplay { node: NodeId, lag: Time },
+    /// `node` serves only the initial model from now on.
+    Eclipse { node: NodeId },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AttackEvent {
+    pub at: Time,
+    pub op: AttackOp,
+}
+
+/// Tally of the compiled attack schedule.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AttackCounts {
+    pub poisoned: usize,
+    pub stale: usize,
+    pub eclipsed: usize,
+}
+
+impl AttackCounts {
+    pub fn of(events: &[AttackEvent]) -> Self {
+        let mut c = AttackCounts::default();
+        for e in events {
+            match e.op {
+                AttackOp::Poison { .. } => c.poisoned += 1,
+                AttackOp::StaleReplay { .. } => c.stale += 1,
+                AttackOp::Eclipse { .. } => c.eclipsed += 1,
+            }
+        }
+        c
+    }
+
+    pub fn total(&self) -> usize {
+        self.poisoned + self.stale + self.eclipsed
+    }
+}
+
 /// Anything that can receive a compiled churn schedule: the bare overlay
 /// simulator and the DFL trainer implement this, which is what lets one
 /// scenario description drive both.
@@ -108,6 +202,13 @@ pub trait ChurnSink {
     fn join(&mut self, at: Time, node: NodeId, bootstrap: NodeId) -> Result<()>;
     fn fail(&mut self, at: Time, node: NodeId) -> Result<()>;
     fn leave(&mut self, at: Time, node: NodeId) -> Result<()>;
+    /// Byzantine attack event. Defaults to a no-op: attackers stay
+    /// protocol-live, so the bare overlay simulator is unaffected (NDMP
+    /// carries no model traffic); the trainer sink overrides this to
+    /// flip the victim's Byzantine state at `at`.
+    fn attack(&mut self, _at: Time, _op: AttackOp) -> Result<()> {
+        Ok(())
+    }
 }
 
 impl ChurnSink for Simulator {
@@ -161,6 +262,10 @@ impl<F: FnMut(usize, usize) -> Vec<f64>> ChurnSink for MultiTrainerSink<'_, '_, 
         self.trainer.schedule_leave(at, node as usize);
         Ok(())
     }
+
+    fn attack(&mut self, at: Time, op: AttackOp) -> Result<()> {
+        self.trainer.schedule_attack(at, op)
+    }
 }
 
 /// A declarative churn scenario. Serializable to the repo's TOML subset
@@ -203,6 +308,9 @@ enum Intent {
     /// Scheduled graceful departure of a specific flash-crowd node.
     Depart(NodeId),
     Partition { fraction: f64 },
+    Poison { mode: PoisonMode, frac: f64 },
+    StaleReplay { frac: f64, lag: Time },
+    Eclipse { arc: f64 },
 }
 
 impl ScenarioSpec {
@@ -293,6 +401,28 @@ impl ScenarioSpec {
                     );
                     ensure!(window > 0, "phase {}: window_ms must be positive", i + 1);
                 }
+                PhaseKind::Poison { frac, .. } => {
+                    ensure!(
+                        frac > 0.0 && frac <= 1.0,
+                        "phase {}: poison frac must be in (0, 1]",
+                        i + 1
+                    );
+                }
+                PhaseKind::StaleReplay { frac, lag } => {
+                    ensure!(
+                        frac > 0.0 && frac <= 1.0,
+                        "phase {}: stale_replay frac must be in (0, 1]",
+                        i + 1
+                    );
+                    ensure!(lag > 0, "phase {}: lag_ms must be positive", i + 1);
+                }
+                PhaseKind::Eclipse { arc } => {
+                    ensure!(
+                        arc > 0.0 && arc < 1.0,
+                        "phase {}: eclipse arc must be in (0, 1)",
+                        i + 1
+                    );
+                }
                 _ => {}
             }
         }
@@ -310,6 +440,21 @@ impl ScenarioSpec {
     /// fires — on any backend, and on the trainer (whose sequential id
     /// assignment matches the schedule's emission order by construction).
     pub fn compile(&self) -> Vec<ChurnEvent> {
+        self.compile_all().0
+    }
+
+    /// The Byzantine half of the compiled schedule (empty for purely
+    /// churn scenarios).
+    pub fn compile_attacks(&self) -> Vec<AttackEvent> {
+        self.compile_all().1
+    }
+
+    /// Compile churn and attacks together: attacker selection consumes
+    /// the same replay rng stream as churn victims, interleaved in time
+    /// order, so adding an adversarial phase reshuffles nothing before
+    /// it and a spec without one compiles to the bitwise-identical
+    /// churn schedule as ever.
+    pub fn compile_all(&self) -> (Vec<ChurnEvent>, Vec<AttackEvent>) {
         let mut work: BTreeMap<(Time, u64), Intent> = BTreeMap::new();
         let mut seq = 0u64;
         for (pi, phase) in self.phases.iter().enumerate() {
@@ -379,6 +524,18 @@ impl ScenarioSpec {
                     work.insert((at, seq), Intent::Partition { fraction });
                     seq += 1;
                 }
+                PhaseKind::Poison { mode, frac } => {
+                    work.insert((at, seq), Intent::Poison { mode, frac });
+                    seq += 1;
+                }
+                PhaseKind::StaleReplay { frac, lag } => {
+                    work.insert((at, seq), Intent::StaleReplay { frac, lag });
+                    seq += 1;
+                }
+                PhaseKind::Eclipse { arc } => {
+                    work.insert((at, seq), Intent::Eclipse { arc });
+                    seq += 1;
+                }
             }
         }
 
@@ -388,6 +545,10 @@ impl ScenarioSpec {
         let mut next_id = self.initial as NodeId;
         let min_live = self.min_live.max(1);
         let mut out = Vec::new();
+        let mut attacks = Vec::new();
+        // nodes already turned Byzantine: never re-selected by a later
+        // adversarial phase (they keep their first behavior)
+        let mut attackers: BTreeSet<NodeId> = BTreeSet::new();
         while let Some(((at, _), intent)) = work.pop_first() {
             match intent {
                 Intent::Join { dwell } => {
@@ -464,17 +625,77 @@ impl ScenarioSpec {
                         }
                     }
                 }
+                Intent::Poison { mode, frac } => {
+                    let want = (frac * live.len() as f64).round() as usize;
+                    let mut pool: Vec<NodeId> = live
+                        .iter()
+                        .copied()
+                        .filter(|id| !attackers.contains(id))
+                        .collect();
+                    for _ in 0..want.min(pool.len()) {
+                        let node = pool.swap_remove(rng.index(pool.len()));
+                        attackers.insert(node);
+                        attacks.push(AttackEvent {
+                            at,
+                            op: AttackOp::Poison { node, mode },
+                        });
+                    }
+                }
+                Intent::StaleReplay { frac, lag } => {
+                    let want = (frac * live.len() as f64).round() as usize;
+                    let mut pool: Vec<NodeId> = live
+                        .iter()
+                        .copied()
+                        .filter(|id| !attackers.contains(id))
+                        .collect();
+                    for _ in 0..want.min(pool.len()) {
+                        let node = pool.swap_remove(rng.index(pool.len()));
+                        attackers.insert(node);
+                        attacks.push(AttackEvent {
+                            at,
+                            op: AttackOp::StaleReplay { node, lag },
+                        });
+                    }
+                }
+                Intent::Eclipse { arc } => {
+                    let want = (arc * live.len() as f64).round() as usize;
+                    if want == 0 || live.is_empty() {
+                        continue;
+                    }
+                    // contiguous arc of the space-0 ring, like Partition —
+                    // but the arc stays protocol-live
+                    let mut m = Membership::new(self.overlay.spaces);
+                    for &id in &live {
+                        m.add(id);
+                    }
+                    let ring = m.ring(0);
+                    let start = rng.index(ring.len());
+                    let mut added = 0usize;
+                    let mut k = 0usize;
+                    while added < want && k < ring.len() {
+                        let node = ring[(start + k) % ring.len()].id;
+                        k += 1;
+                        if attackers.insert(node) {
+                            attacks.push(AttackEvent {
+                                at,
+                                op: AttackOp::Eclipse { node },
+                            });
+                            added += 1;
+                        }
+                    }
+                }
             }
         }
-        out
+        (out, attacks)
     }
 
     /// Schedule the compiled events onto any sink (simulator or trainer)
     /// — the single code path shared by benches, tests, and the CLI.
     pub fn schedule(&self, sink: &mut dyn ChurnSink) -> Result<ChurnCounts> {
-        let events = self.compile();
+        let (events, attacks) = self.compile_all();
         let counts = ChurnCounts::of(&events);
         schedule_events(&events, sink)?;
+        schedule_attacks(&attacks, sink)?;
         Ok(counts)
     }
 
@@ -486,9 +707,10 @@ impl ScenarioSpec {
     /// compiled churn event so the whole schedule always executes (a
     /// Poisson tail or flash-crowd departure may spill past the sampled
     /// horizon) and the membership arithmetic holds unconditionally.
-    fn run_end(&self, events: &[ChurnEvent]) -> Time {
+    fn run_end(&self, events: &[ChurnEvent], attacks: &[AttackEvent]) -> Time {
         let last = events.last().map(|e| e.at).unwrap_or(0);
-        self.horizon.max(last.saturating_add(1))
+        let last_attack = attacks.last().map(|e| e.at).unwrap_or(0);
+        self.horizon.max(last.max(last_attack).saturating_add(1))
     }
 
     /// Run the scenario on a bare overlay simulator. `transport` selects
@@ -515,9 +737,10 @@ impl ScenarioSpec {
         }
         let ids: Vec<NodeId> = (0..self.initial as NodeId).collect();
         sim.bootstrap_correct(&ids);
-        let events = self.compile();
+        let (events, attacks) = self.compile_all();
         let counts = ChurnCounts::of(&events);
         schedule_events(&events, &mut sim)?;
+        schedule_attacks(&attacks, &mut sim)?;
         if self.sample_every > 0 {
             let mut t = 0;
             while t <= self.horizon {
@@ -529,14 +752,15 @@ impl ScenarioSpec {
             sim.schedule_snapshot(0);
             sim.schedule_snapshot(self.horizon);
         }
-        sim.run_until(self.run_end(&events));
+        sim.run_until(self.run_end(&events, &attacks));
         let settled_at = if self.settle > 0 {
             let deadline = sim.now + self.settle;
             quiesce(&mut sim, deadline, SEC)
         } else {
             None
         };
-        let report = ScenarioReport::from_sim(self, &sim, counts, settled_at);
+        let mut report = ScenarioReport::from_sim(self, &sim, counts, settled_at);
+        report.attacks = AttackCounts::of(&attacks);
         Ok((sim, report))
     }
 
@@ -581,7 +805,7 @@ impl ScenarioSpec {
             trainer.clients().len(),
             self.initial
         );
-        let events = self.compile();
+        let (events, attacks) = self.compile_all();
         let counts = ChurnCounts::of(&events);
         {
             let mut sink = MultiTrainerSink {
@@ -589,12 +813,13 @@ impl ScenarioSpec {
                 weights_for,
             };
             schedule_events(&events, &mut sink)?;
+            schedule_attacks(&attacks, &mut sink)?;
         }
         // applies when the trainer builds its own in-memory overlay;
         // adopted overlays and custom transports keep their own engine
         trainer.set_overlay_shards(self.shards);
         trainer.schedule_overlay_snapshots(self.horizon, self.sample_every)?;
-        trainer.run(self.run_end(&events), self.sample_every)?;
+        trainer.run(self.run_end(&events, &attacks), self.sample_every)?;
         let (cache_hits, cache_misses) = trainer.neighbor_cache_stats();
         let settled_at = if self.settle > 0 {
             let sim = trainer
@@ -629,6 +854,15 @@ impl ScenarioSpec {
         report.cache_hits = cache_hits;
         report.cache_misses = cache_misses;
         report.model_mb_per_client = trainer.model_mb_per_client();
+        report.attacks = AttackCounts::of(&attacks);
+        report.rejected_models = trainer.rejected_models_total();
+        // honest-vs-Byzantine gap of the primary lane, where both
+        // cohorts had a live member at the sample instant
+        report.accuracy_gap = trainer
+            .samples()
+            .iter()
+            .filter_map(|s| s.byz_mean_accuracy.map(|b| (s.at, s.mean_accuracy - b)))
+            .collect();
         Ok(report)
     }
 
@@ -716,6 +950,9 @@ impl ScenarioSpec {
                     "window_ms",
                 ],
                 "partition" => &["kind", "at_ms", "fraction"],
+                "poison" => &["kind", "at_ms", "mode", "frac"],
+                "stale_replay" => &["kind", "at_ms", "frac", "lag_ms"],
+                "eclipse" => &["kind", "at_ms", "arc"],
                 other => bail!("phase.{i}: unknown kind {other:?}"),
             };
             let prefix = format!("phase.{i}.");
@@ -755,6 +992,17 @@ impl ScenarioSpec {
                 },
                 "partition" => PhaseKind::Partition {
                     fraction: float_key(doc, &path("fraction"))?.unwrap_or(0.25),
+                },
+                "poison" => PhaseKind::Poison {
+                    mode: PoisonMode::parse(doc.str(&path("mode")).unwrap_or("nan"))?,
+                    frac: float_key(doc, &path("frac"))?.unwrap_or(0.1),
+                },
+                "stale_replay" => PhaseKind::StaleReplay {
+                    frac: float_key(doc, &path("frac"))?.unwrap_or(0.1),
+                    lag: ms_key(doc, &path("lag_ms"))?.unwrap_or(30 * SEC),
+                },
+                "eclipse" => PhaseKind::Eclipse {
+                    arc: float_key(doc, &path("arc"))?.unwrap_or(0.1),
                 },
                 other => bail!("phase.{i}: unknown kind {other:?}"),
             };
@@ -846,6 +1094,20 @@ impl ScenarioSpec {
                     s.push_str("kind = \"partition\"\n");
                     s.push_str(&format!("fraction = {fraction}\n"));
                 }
+                PhaseKind::Poison { mode, frac } => {
+                    s.push_str("kind = \"poison\"\n");
+                    s.push_str(&format!("mode = \"{}\"\n", mode.name()));
+                    s.push_str(&format!("frac = {frac}\n"));
+                }
+                PhaseKind::StaleReplay { frac, lag } => {
+                    s.push_str("kind = \"stale_replay\"\n");
+                    s.push_str(&format!("frac = {frac}\n"));
+                    s.push_str(&format!("lag_ms = {}\n", lag / MS));
+                }
+                PhaseKind::Eclipse { arc } => {
+                    s.push_str("kind = \"eclipse\"\n");
+                    s.push_str(&format!("arc = {arc}\n"));
+                }
             }
         }
         s
@@ -886,6 +1148,10 @@ const PHASE_FIELDS: &[&str] = &[
     "fail_per_min",
     "leave_per_min",
     "fraction",
+    "mode",
+    "frac",
+    "lag_ms",
+    "arc",
 ];
 
 fn check_known_keys(doc: &Doc) -> Result<()> {
@@ -947,6 +1213,13 @@ fn schedule_events(events: &[ChurnEvent], sink: &mut dyn ChurnSink) -> Result<()
             ChurnOp::Fail { node } => sink.fail(ev.at, node)?,
             ChurnOp::Leave { node } => sink.leave(ev.at, node)?,
         }
+    }
+    Ok(())
+}
+
+fn schedule_attacks(attacks: &[AttackEvent], sink: &mut dyn ChurnSink) -> Result<()> {
+    for ev in attacks {
+        sink.attack(ev.at, ev.op)?;
     }
     Ok(())
 }
@@ -1066,6 +1339,17 @@ pub struct ScenarioReport {
     /// overlay-only runs) — the bytes axis of accuracy-vs-bytes studies,
     /// charged at the wire scheme's compressed size.
     pub model_mb_per_client: f64,
+    /// `(t, honest mean − Byzantine mean)` accuracy-gap series of the
+    /// primary lane — empty unless the scenario scheduled attacks on a
+    /// trainer run (a healthy defense keeps honest accuracy climbing
+    /// while attackers stay at chance, so the gap *grows*; a poisoned
+    /// mean drags both down).
+    pub accuracy_gap: Vec<(Time, f64)>,
+    /// Neighbor models rejected as non-finite across every honest
+    /// client and lane (the counted telemetry of the NaN guard).
+    pub rejected_models: u64,
+    /// Compiled attack tally (all zero for purely-churn scenarios).
+    pub attacks: AttackCounts,
 }
 
 impl ScenarioReport {
@@ -1093,6 +1377,9 @@ impl ScenarioReport {
             cache_misses: 0,
             lost_frames: sim.lost_frames(),
             model_mb_per_client: 0.0,
+            accuracy_gap: Vec::new(),
+            rejected_models: 0,
+            attacks: AttackCounts::default(),
         }
     }
 
@@ -1199,6 +1486,22 @@ impl ScenarioReport {
                 self.model_mb_per_client
             ));
         }
+        // adversarial telemetry, shown only when the scenario scheduled
+        // attacks so clean runs render exactly as before
+        if !self.accuracy_gap.is_empty() {
+            let mut g = Table::new(&["t (min)", "honest-byz acc gap"]);
+            for (at, gap) in &self.accuracy_gap {
+                g.row(&[format!("{:.1}", *at as f64 / 60e6), format!("{gap:.4}")]);
+            }
+            out.push_str(&g.render());
+        }
+        if self.attacks.total() > 0 {
+            out.push_str(&format!(
+                "attacks: poisoned={} stale={} eclipsed={} rejected models={}\n",
+                self.attacks.poisoned, self.attacks.stale, self.attacks.eclipsed,
+                self.rejected_models
+            ));
+        }
         out
     }
 
@@ -1224,6 +1527,19 @@ impl ScenarioReport {
             for (at, acc) in series {
                 out.push_str(&format!("task={name} t_ms={} acc={acc:.4}\n", at / MS));
             }
+        }
+        // adversarial runs additionally pin the honest-vs-Byzantine gap
+        // and the attack/rejection tallies (absent for clean scenarios,
+        // so every existing golden is byte-stable)
+        for (at, gap) in &self.accuracy_gap {
+            out.push_str(&format!("gap t_ms={} gap={gap:.4}\n", at / MS));
+        }
+        if self.attacks.total() > 0 {
+            out.push_str(&format!(
+                "attacks poisoned={} stale={} eclipsed={} rejected={}\n",
+                self.attacks.poisoned, self.attacks.stale, self.attacks.eclipsed,
+                self.rejected_models
+            ));
         }
         out.push_str(&format!(
             "final c={:.4} live={}\n",
@@ -1368,6 +1684,107 @@ mod tests {
         let interior = positions.windows(2).filter(|w| w[1] - w[0] > 1).count();
         let wrap = usize::from((positions[0] + n) - positions[positions.len() - 1] > 1);
         assert!(interior + wrap <= 1, "positions not contiguous: {positions:?}");
+    }
+
+    #[test]
+    fn adversarial_phases_compile_deterministically() {
+        let mut spec = ScenarioSpec::poisson_mix(30, 10.0, 20 * SEC, 7);
+        spec.phases.push(Phase {
+            at: 5 * SEC,
+            kind: PhaseKind::Poison {
+                mode: PoisonMode::Nan,
+                frac: 0.2,
+            },
+        });
+        spec.phases.push(Phase {
+            at: 8 * SEC,
+            kind: PhaseKind::StaleReplay {
+                frac: 0.1,
+                lag: 10 * SEC,
+            },
+        });
+        spec.phases.push(Phase {
+            at: 12 * SEC,
+            kind: PhaseKind::Eclipse { arc: 0.15 },
+        });
+        let (e1, a1) = spec.compile_all();
+        let (e2, a2) = spec.compile_all();
+        assert_eq!(e1, e2);
+        assert_eq!(a1, a2);
+        let counts = AttackCounts::of(&a1);
+        assert!(counts.poisoned > 0 && counts.stale > 0 && counts.eclipsed > 0);
+        assert_eq!(counts.total(), a1.len());
+        // no node is ever selected by two adversarial phases
+        let mut nodes: Vec<NodeId> = a1
+            .iter()
+            .map(|e| match e.op {
+                AttackOp::Poison { node, .. }
+                | AttackOp::StaleReplay { node, .. }
+                | AttackOp::Eclipse { node } => node,
+            })
+            .collect();
+        let before = nodes.len();
+        nodes.sort_unstable();
+        nodes.dedup();
+        assert_eq!(nodes.len(), before, "attacker selected twice");
+    }
+
+    #[test]
+    fn attack_phase_leaves_earlier_churn_schedule_untouched() {
+        // the replay is time-ordered, so an adversarial phase after the
+        // churn window consumes rng draws only after every churn victim
+        // was already resolved — the churn half is bitwise-unchanged
+        let base = ScenarioSpec::poisson_mix(30, 10.0, 20 * SEC, 7);
+        let churn_only = base.compile();
+        let mut with_attack = base.clone();
+        with_attack.phases.push(Phase {
+            at: 50 * SEC,
+            kind: PhaseKind::Poison {
+                mode: PoisonMode::Scale,
+                frac: 0.2,
+            },
+        });
+        let (churn, attacks) = with_attack.compile_all();
+        assert_eq!(churn_only, churn);
+        assert!(!attacks.is_empty());
+    }
+
+    #[test]
+    fn adversarial_toml_round_trip_and_field_check() {
+        let mut spec = ScenarioSpec::base("adv", 20, 3);
+        spec.phases.push(Phase {
+            at: 2 * SEC,
+            kind: PhaseKind::Poison {
+                mode: PoisonMode::SignFlip,
+                frac: 0.25,
+            },
+        });
+        spec.phases.push(Phase {
+            at: 4 * SEC,
+            kind: PhaseKind::StaleReplay {
+                frac: 0.1,
+                lag: 6 * SEC,
+            },
+        });
+        spec.phases.push(Phase {
+            at: 6 * SEC,
+            kind: PhaseKind::Eclipse { arc: 0.2 },
+        });
+        let back = ScenarioSpec::from_toml_str(&spec.to_toml()).expect("round trip");
+        assert_eq!(spec, back);
+        // a known field on the wrong adversarial kind fails loudly
+        let wrong =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"poison\"\nat_ms = 5\nfraction = 0.2\n";
+        assert!(ScenarioSpec::from_toml_str(wrong).is_err());
+        let bad_mode =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"poison\"\nat_ms = 5\nmode = \"zero\"\n";
+        assert!(ScenarioSpec::from_toml_str(bad_mode).is_err());
+        let bad_frac =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"poison\"\nat_ms = 5\nfrac = 1.5\n";
+        assert!(ScenarioSpec::from_toml_str(bad_frac).is_err());
+        let bad_arc =
+            "[scenario]\ninitial = 10\n[phase.1]\nkind = \"eclipse\"\nat_ms = 5\narc = 1.0\n";
+        assert!(ScenarioSpec::from_toml_str(bad_arc).is_err());
     }
 
     #[test]

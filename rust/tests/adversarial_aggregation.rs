@@ -1,0 +1,308 @@
+//! Byzantine-resilient aggregation: the property suite over the robust
+//! rules and the end-to-end acceptance pin for the adversarial scenario
+//! family.
+//!
+//! Part A (pure CPU, always runs) checks the `mep::Aggregation` rules
+//! against a k-honest + f-Byzantine cluster for every poison mode:
+//! NaN rows are rejected by the guard under *every* rule (bitwise equal
+//! to the honest-only aggregate), finite attacks (scale / sign-flip)
+//! corrupt the mean but leave the robust rules near the honest cluster,
+//! and `Mean` with clean inputs is bitwise-identical to the historical
+//! `aggregate_cpu` (clean goldens unchanged).
+//!
+//! Part B drives full trainer runs through a PoissonChurn + Poison{nan}
+//! scenario: under `Mean` the honest-vs-Byzantine accuracy gap opens
+//! while the robust rules stay within 0.05 of the clean run's final
+//! accuracy — and no honest client ever stores a non-finite parameter,
+//! under any rule (the zero-NaN acceptance invariant).
+
+use fedlay::config::DflConfig;
+use fedlay::data::shard_labels;
+use fedlay::dfl::{MethodSpec, Trainer};
+use fedlay::mep::{aggregate_cpu, Aggregation};
+use fedlay::runtime::{find_artifacts_dir, Engine};
+use fedlay::sim::{ChurnOp, ScenarioReport, ScenarioSpec};
+use fedlay::util::Rng;
+
+// ---------------------------------------------------------------------
+// Part A: property suite over the aggregation rules (no engine needed)
+// ---------------------------------------------------------------------
+
+const DIM: usize = 32;
+const HONEST: usize = 8;
+const BYZ: usize = 2;
+
+/// `k` models clustered around one random center (σ = 0.05 per coord).
+fn honest_cluster(seed: u64) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let center: Vec<f32> = (0..DIM).map(|_| rng.gaussian() as f32).collect();
+    let models = (0..HONEST)
+        .map(|_| center.iter().map(|&c| c + 0.05 * rng.gaussian() as f32).collect())
+        .collect();
+    (center, models)
+}
+
+fn poisoned(mode: &str, victim: &[f32]) -> Vec<f32> {
+    match mode {
+        "nan" => vec![f32::NAN; victim.len()],
+        "scale" => victim.iter().map(|v| v * -10.0).collect(),
+        "signflip" => victim.iter().map(|v| -v).collect(),
+        other => panic!("unknown mode {other}"),
+    }
+}
+
+fn refs(models: &[Vec<f32>]) -> Vec<&[f32]> {
+    models.iter().map(|m| m.as_slice()).collect()
+}
+
+fn max_abs_dev(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+const ROBUST: [Aggregation; 3] = [
+    Aggregation::TrimmedMean { beta: 0.25 },
+    Aggregation::Median,
+    Aggregation::Krum { f: BYZ },
+];
+
+/// NaN poisoning is neutralized by the non-finite guard under EVERY
+/// rule: the mixed aggregate is bitwise equal to the honest-only one
+/// and exactly the Byzantine rows are counted as rejected.
+#[test]
+fn nan_rows_are_rejected_under_every_rule() {
+    let (_, honest) = honest_cluster(42);
+    let mut mixed = honest.clone();
+    for _ in 0..BYZ {
+        mixed.push(poisoned("nan", &honest[0]));
+    }
+    let w_honest = vec![1.0f64; HONEST];
+    let w_mixed = vec![1.0f64; HONEST + BYZ];
+    for rule in [Aggregation::Mean].iter().chain(ROBUST.iter()) {
+        let (clean, rej0) = rule.apply_guarded(&refs(&honest), &w_honest);
+        let (guarded, rej) = rule.apply_guarded(&refs(&mixed), &w_mixed);
+        assert_eq!(rej0, 0, "{rule:?} rejected honest rows");
+        assert_eq!(rej, BYZ, "{rule:?} miscounted rejected rows");
+        assert_eq!(clean, guarded, "{rule:?} not bitwise honest-only under nan poison");
+        assert!(guarded.iter().all(|v| v.is_finite()), "{rule:?} emitted non-finite");
+    }
+}
+
+/// Finite poison (scale ×−10, sign-flip): nothing for the guard to
+/// reject, so only the robust rules resist — the mean is dragged far
+/// from the honest cluster while trimmed/median/krum stay close.
+#[test]
+fn robust_rules_resist_finite_poison_where_mean_corrupts() {
+    for mode in ["scale", "signflip"] {
+        let (_, honest) = honest_cluster(7);
+        let honest_mean = aggregate_cpu(&refs(&honest), &[1.0f64; HONEST]);
+        let mut mixed = honest.clone();
+        for b in 0..BYZ {
+            mixed.push(poisoned(mode, &honest[b]));
+        }
+        let w = vec![1.0f64; HONEST + BYZ];
+        let (mean_out, rej) = Aggregation::Mean.apply_guarded(&refs(&mixed), &w);
+        assert_eq!(rej, 0, "finite {mode} rows must not be guard-rejected");
+        let mean_dev = max_abs_dev(&mean_out, &honest_mean);
+        assert!(mean_dev > 0.25, "{mode}: mean barely moved ({mean_dev})");
+        for rule in ROBUST {
+            let (out, rej) = rule.apply_guarded(&refs(&mixed), &w);
+            assert_eq!(rej, 0);
+            assert!(out.iter().all(|v| v.is_finite()));
+            let dev = max_abs_dev(&out, &honest_mean);
+            assert!(
+                dev < 0.2,
+                "{rule:?} under {mode}: deviation {dev} from honest mean (mean rule: {mean_dev})"
+            );
+        }
+    }
+}
+
+/// Every robust rule over honest-only inputs lands near the honest
+/// mean (they are all location estimators of the same cluster).
+#[test]
+fn robust_rules_agree_with_mean_on_clean_inputs() {
+    let (_, honest) = honest_cluster(99);
+    let w = vec![1.0f64; HONEST];
+    let mean = aggregate_cpu(&refs(&honest), &w);
+    for rule in ROBUST {
+        let (out, rej) = rule.apply_guarded(&refs(&honest), &w);
+        assert_eq!(rej, 0);
+        let dev = max_abs_dev(&out, &mean);
+        assert!(dev < 0.2, "{rule:?} clean deviation {dev}");
+    }
+}
+
+/// `Aggregation::Mean` is the historical confidence-weighted average,
+/// bitwise: random models, random positive weights.
+#[test]
+fn mean_rule_is_bitwise_aggregate_cpu() {
+    let mut rng = Rng::new(3);
+    for k in 1..=6 {
+        let models: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..DIM).map(|_| rng.gaussian() as f32).collect())
+            .collect();
+        let weights: Vec<f64> = (0..k).map(|_| rng.next_f64() + 0.1).collect();
+        let direct = aggregate_cpu(&refs(&models), &weights);
+        let via_rule = Aggregation::Mean.apply(&refs(&models), &weights);
+        assert_eq!(direct, via_rule, "Mean diverged from aggregate_cpu at k={k}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Part B: end-to-end acceptance — PoissonChurn + Poison{nan} trainer runs
+// ---------------------------------------------------------------------
+
+/// Clean baseline: background Poisson churn only.
+const CLEAN_SPEC: &str = r#"
+[scenario]
+name = "adversarial-accept-clean"
+initial = 12
+seed = 9
+horizon_ms = 300000
+sample_every_ms = 60000
+min_live = 8
+
+[overlay]
+spaces = 2
+heartbeat_ms = 500
+failure_multiple = 3
+repair_probe_ms = 2000
+
+[net]
+latency_ms = 0.0
+jitter = 0.0
+seed = 9
+
+[phase.1]
+kind = "poisson_churn"
+at_ms = 5000
+join_per_min = 2.0
+fail_per_min = 1.0
+leave_per_min = 0.0
+window_ms = 60000
+"#;
+
+/// Same seed + churn, plus a NaN poisoning wave after the churn window
+/// (so the churn schedule is identical to the clean spec's — pinned by
+/// `attack_phase_leaves_earlier_churn_schedule_untouched` in the unit
+/// suite).
+const ATTACKED_SPEC: &str = r#"
+[scenario]
+name = "adversarial-accept-nan"
+initial = 12
+seed = 9
+horizon_ms = 300000
+sample_every_ms = 60000
+min_live = 8
+
+[overlay]
+spaces = 2
+heartbeat_ms = 500
+failure_multiple = 3
+repair_probe_ms = 2000
+
+[net]
+latency_ms = 0.0
+jitter = 0.0
+seed = 9
+
+[phase.1]
+kind = "poisson_churn"
+at_ms = 5000
+join_per_min = 2.0
+fail_per_min = 1.0
+leave_per_min = 0.0
+window_ms = 60000
+
+[phase.2]
+kind = "poison"
+at_ms = 70000
+mode = "nan"
+frac = 0.25
+"#;
+
+/// One full scenario trainer run. Returns the report, whether every
+/// honest (non-Byzantine) client's parameters are finite, and the total
+/// guard-rejected model count.
+fn run_spec(engine: &Engine, spec: &ScenarioSpec, agg: Aggregation) -> (ScenarioReport, bool, u64) {
+    let classes = engine.manifest.task("mlp").expect("mlp task").classes;
+    let joins = spec
+        .compile()
+        .iter()
+        .filter(|e| matches!(e.op, ChurnOp::Join { .. }))
+        .count();
+    let cfg = DflConfig {
+        clients: spec.initial,
+        seed: spec.seed,
+        // wake every 20 sim-seconds so the 5-minute horizon holds ~15
+        // exchange rounds per client
+        comm_period_ms: 20_000,
+        ..DflConfig::default()
+    };
+    let weights = shard_labels(spec.initial + joins, classes, cfg.shards_per_client, cfg.seed);
+    let method = MethodSpec::fedlay_dynamic(spec.overlay.clone(), spec.net.clone())
+        .with_aggregation(agg);
+    let mut trainer =
+        Trainer::new(engine, method, cfg, weights[..spec.initial].to_vec()).expect("trainer");
+    let report = spec
+        .run_trainer(&mut trainer, |id| weights[id].clone())
+        .expect("scenario trainer run");
+    let honest_finite = trainer
+        .clients()
+        .iter()
+        .filter(|c| !c.byzantine)
+        .all(|c| c.params.iter().all(|v| v.is_finite()));
+    let rejected = trainer.rejected_models_total();
+    (report, honest_finite, rejected)
+}
+
+/// The ISSUE acceptance pin: PoissonChurn + Poison{nan}. The guard
+/// keeps every rule's honest clients NaN-free; the honest-vs-Byzantine
+/// accuracy gap opens under Mean; TrimmedMean / Median / Krum on the
+/// same seed end within 0.05 of the clean run's final accuracy.
+#[test]
+fn nan_poison_acceptance_gap_opens_and_robust_rules_track_clean() {
+    let dir = find_artifacts_dir(None).expect("artifacts");
+    let engine = Engine::load(&dir, &["mlp"]).expect("engine");
+    let clean_spec = ScenarioSpec::from_toml_str(CLEAN_SPEC).expect("clean spec");
+    let attacked_spec = ScenarioSpec::from_toml_str(ATTACKED_SPEC).expect("attacked spec");
+
+    // clean baseline: no attacks compiled, no gap series, nothing rejected
+    let (clean, clean_finite, clean_rejected) = run_spec(&engine, &clean_spec, Aggregation::Mean);
+    assert!(clean_finite);
+    assert_eq!(clean_rejected, 0, "clean run rejected models");
+    assert_eq!(clean.attacks.total(), 0);
+    assert!(clean.accuracy_gap.is_empty(), "clean run grew a gap series");
+    let clean_final = clean.accuracy.last().expect("clean accuracy").1;
+    assert!(clean_final > 0.2, "clean run failed to learn: {clean_final}");
+
+    // Mean under NaN poison: attackers serve NaN forever, the guard
+    // rejects every pull, honest params stay finite, and the gap series
+    // shows honest clients pulling away from the chance-level attackers
+    let (mean_r, mean_finite, mean_rejected) =
+        run_spec(&engine, &attacked_spec, Aggregation::Mean);
+    assert!(mean_finite, "NaN leaked into an honest model under Mean");
+    assert!(mean_rejected > 0, "guard never fired under Mean");
+    assert!(mean_r.attacks.poisoned > 0, "no attackers compiled");
+    assert!(!mean_r.accuracy_gap.is_empty(), "no gap series under attack");
+    let first_gap = mean_r.accuracy_gap.first().unwrap().1;
+    let last_gap = mean_r.accuracy_gap.last().unwrap().1;
+    assert!(last_gap >= 0.05, "accuracy gap never opened: {last_gap}");
+    assert!(
+        last_gap >= first_gap - 0.05,
+        "gap collapsed: first {first_gap}, last {last_gap}"
+    );
+
+    // robust rules, same seed: final accuracy within 0.05 of the clean run
+    for agg in ROBUST {
+        let (r, finite, rejected) = run_spec(&engine, &attacked_spec, agg);
+        assert!(finite, "NaN leaked into an honest model under {agg:?}");
+        assert!(rejected > 0, "guard never fired under {agg:?}");
+        assert!(!r.accuracy_gap.is_empty());
+        let final_acc = r.accuracy.last().expect("accuracy").1;
+        assert!(
+            (final_acc - clean_final).abs() <= 0.05,
+            "{agg:?} drifted from clean: attacked {final_acc}, clean {clean_final}"
+        );
+    }
+}

@@ -53,6 +53,7 @@ fn spawn_fleet(
             local_steps: 1,
             period_ms,
             compression: fedlay::dfl::Compression::None,
+            aggregation: fedlay::dfl::Aggregation::Mean,
             seed: 7,
         };
         // spawn blocks until the listener is bound and registered, so
