@@ -1,0 +1,445 @@
+//! Exhaustive BFS over the NDMP interleaving space.
+//!
+//! Starting from the bootstrapped ideal rings, the explorer enumerates
+//! every enabled [`Action`] of every reachable state, dedups states by
+//! their canonical encoding, and checks:
+//!
+//! * **safety** on every state (the tiered [`crate::check::props`]
+//!   predicates),
+//! * **deadlock**: a non-converged state with no enabled action at all
+//!   (structurally impossible for the clean protocol — kept as a
+//!   defensive verdict), and
+//! * **liveness** after the sweep: from every reachable state, some
+//!   churn-free schedule must reach a converged state. Computed as
+//!   backward reachability from the converged states over the
+//!   non-churn transition edges; any unreached state yields a minimal
+//!   counterexample via the BFS parent pointers.
+//!
+//! Depth- or state-capped sweeps are *truncated*: safety still holds on
+//! everything visited, but the liveness verdict is skipped (an
+//! unconverged frontier state is not a counterexample).
+
+use crate::check::model::{Action, Model, ModelConfig};
+use crate::check::props;
+use crate::sim::invariants::Violation;
+use std::collections::{HashMap, VecDeque};
+use std::fmt;
+
+/// How many counterexamples and converged-schedule samples to retain.
+const CX_CAP: usize = 8;
+const SAMPLE_CAP: usize = 8;
+
+/// Sweep bounds. `max_depth == 0` means unbounded.
+#[derive(Debug, Clone)]
+pub struct ExploreLimits {
+    /// Maximum schedule length explored (0 = exhaust the space).
+    pub max_depth: u32,
+    /// Hard cap on distinct states (memory guard).
+    pub max_states: usize,
+}
+
+impl Default for ExploreLimits {
+    fn default() -> Self {
+        Self {
+            max_depth: 0,
+            max_states: 2_000_000,
+        }
+    }
+}
+
+/// What class of property a counterexample violates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ViolationKind {
+    Safety,
+    Liveness,
+    Deadlock,
+}
+
+impl fmt::Display for ViolationKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ViolationKind::Safety => write!(f, "safety"),
+            ViolationKind::Liveness => write!(f, "liveness"),
+            ViolationKind::Deadlock => write!(f, "deadlock"),
+        }
+    }
+}
+
+/// A minimal-depth schedule from the initial state to a violating
+/// state, replayable through [`crate::check::replay`].
+#[derive(Debug, Clone)]
+pub struct Counterexample {
+    pub kind: ViolationKind,
+    /// Actions from the initial state to the violating state.
+    pub schedule: Vec<Action>,
+    /// The violated predicates (safety only; empty for liveness and
+    /// deadlock, where the defect is the *absence* of a path onward).
+    pub violations: Vec<Violation>,
+    pub depth: u32,
+}
+
+/// Everything a sweep learned.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    pub cfg: ModelConfig,
+    /// Distinct canonical states discovered.
+    pub states: usize,
+    /// Transitions taken (edges, counting re-derivations of known states).
+    pub transitions: u64,
+    /// Transitions that landed on an already-known state.
+    pub dedup_hits: u64,
+    pub max_depth_seen: u32,
+    pub converged_states: usize,
+    /// A depth or state cap cut the sweep short.
+    pub truncated: bool,
+    /// The liveness sweep ran (requires an untruncated sweep).
+    pub liveness_checked: bool,
+    pub safety_violation_count: u64,
+    pub liveness_violation_count: u64,
+    pub deadlock_count: u64,
+    /// Up to [`CX_CAP`] minimal counterexamples, safety (BFS order,
+    /// shallowest first) before liveness.
+    pub counterexamples: Vec<Counterexample>,
+    /// Sample schedules for refinement replay: paths to the first few
+    /// converged states plus the deepest state reached.
+    pub schedules: Vec<Vec<Action>>,
+}
+
+impl ExploreReport {
+    /// No violation of any kind found.
+    pub fn ok(&self) -> bool {
+        self.safety_violation_count == 0
+            && self.liveness_violation_count == 0
+            && self.deadlock_count == 0
+    }
+
+    /// Fraction of transitions that hit an already-known state.
+    pub fn dedup_ratio(&self) -> f64 {
+        self.dedup_hits as f64 / (self.transitions.max(1)) as f64
+    }
+}
+
+impl fmt::Display for ExploreReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "explored {} states, {} transitions (dedup ratio {:.3}), max depth {}",
+            self.states,
+            self.transitions,
+            self.dedup_ratio(),
+            self.max_depth_seen
+        )?;
+        writeln!(
+            f,
+            "converged states: {}{}",
+            self.converged_states,
+            if self.truncated {
+                " (sweep truncated: liveness not judged)"
+            } else {
+                ""
+            }
+        )?;
+        write!(
+            f,
+            "violations: {} safety, {} liveness{}, {} deadlock",
+            self.safety_violation_count,
+            self.liveness_violation_count,
+            if self.liveness_checked { "" } else { " (skipped)" },
+            self.deadlock_count
+        )
+    }
+}
+
+/// Path from the root to `id` via the BFS parent pointers.
+fn schedule_to(parent: &[Option<(u32, Action)>], id: u32) -> Vec<Action> {
+    let mut path = Vec::new();
+    let mut cur = id;
+    while let Some((p, a)) = &parent[cur as usize] {
+        path.push(a.clone());
+        cur = *p;
+    }
+    path.reverse();
+    path
+}
+
+/// Exhaustively sweep the interleaving space of `cfg` under `limits`.
+pub fn explore(cfg: &ModelConfig, limits: &ExploreLimits) -> anyhow::Result<ExploreReport> {
+    cfg.validate()?;
+    let max_states = limits.max_states.min(u32::MAX as usize - 1);
+
+    let root = Model::init(cfg.clone());
+    let root_key = root.canonical_key();
+
+    // Per-state bookkeeping, indexed by discovery order. Only canonical
+    // keys are retained (a full `Model` per state would be
+    // memory-prohibitive); the frontier carries the key so expansion can
+    // decode without a second map lookup.
+    let mut index: HashMap<Vec<u8>, u32> = HashMap::new();
+    let mut parent: Vec<Option<(u32, Action)>> = Vec::new();
+    let mut depth: Vec<u32> = Vec::new();
+    let mut preds: Vec<Vec<u32>> = Vec::new(); // non-churn edges, reversed
+    let mut converged: Vec<bool> = Vec::new();
+    let mut deadlocked: Vec<bool> = Vec::new();
+    let mut frontier: VecDeque<(u32, Vec<u8>)> = VecDeque::new();
+
+    index.insert(root_key.clone(), 0);
+    parent.push(None);
+    depth.push(0);
+    preds.push(Vec::new());
+    converged.push(false);
+    deadlocked.push(false);
+    frontier.push_back((0, root_key));
+
+    let mut states = 1usize;
+    let mut transitions = 0u64;
+    let mut dedup_hits = 0u64;
+    let mut max_depth_seen = 0u32;
+    let mut truncated = false;
+    let mut converged_count = 0usize;
+    let mut safety_count = 0u64;
+    let mut deadlock_count = 0u64;
+    let mut counterexamples: Vec<Counterexample> = Vec::new();
+    let mut converged_samples: Vec<u32> = Vec::new();
+    let mut deepest: u32 = 0;
+
+    while let Some((cur, key)) = frontier.pop_front() {
+        let m = Model::decode(cfg, &key);
+        let cur_depth = depth[cur as usize];
+        if cur_depth > depth[deepest as usize] {
+            deepest = cur;
+        }
+
+        let mut viols = props::step_violations(&m);
+        viols.extend(props::settled_violations(&m));
+        let is_conv = m.converged();
+        if is_conv {
+            converged[cur as usize] = true;
+            converged_count += 1;
+            if converged_samples.len() < SAMPLE_CAP {
+                converged_samples.push(cur);
+            }
+            viols.extend(props::converged_violations(&m));
+        }
+        if !viols.is_empty() {
+            safety_count += 1;
+            if counterexamples.len() < CX_CAP {
+                counterexamples.push(Counterexample {
+                    kind: ViolationKind::Safety,
+                    schedule: schedule_to(&parent, cur),
+                    violations: viols,
+                    depth: cur_depth,
+                });
+            }
+        }
+
+        let actions = m.enabled_actions();
+        if actions.is_empty() && !is_conv {
+            deadlocked[cur as usize] = true;
+            deadlock_count += 1;
+            if counterexamples.len() < CX_CAP {
+                counterexamples.push(Counterexample {
+                    kind: ViolationKind::Deadlock,
+                    schedule: schedule_to(&parent, cur),
+                    violations: Vec::new(),
+                    depth: cur_depth,
+                });
+            }
+        }
+        if limits.max_depth > 0 && cur_depth >= limits.max_depth {
+            if !actions.is_empty() {
+                truncated = true;
+            }
+            continue;
+        }
+
+        for a in actions {
+            let mut succ = m.clone();
+            succ.apply(&a);
+            let skey = succ.canonical_key();
+            transitions += 1;
+            let sid = if let Some(&sid) = index.get(&skey) {
+                dedup_hits += 1;
+                sid
+            } else {
+                if states >= max_states {
+                    truncated = true;
+                    continue;
+                }
+                let sid = states as u32;
+                states += 1;
+                index.insert(skey.clone(), sid);
+                parent.push(Some((cur, a.clone())));
+                depth.push(cur_depth + 1);
+                preds.push(Vec::new());
+                converged.push(false);
+                deadlocked.push(false);
+                max_depth_seen = max_depth_seen.max(cur_depth + 1);
+                frontier.push_back((sid, skey));
+                sid
+            };
+            if !a.is_churn() {
+                preds[sid as usize].push(cur);
+            }
+        }
+    }
+
+    // Liveness: backward reachability from converged states over the
+    // non-churn edges. Only meaningful on an exhausted space.
+    let liveness_checked = !truncated;
+    let mut liveness_count = 0u64;
+    if liveness_checked {
+        let mut good = converged.clone();
+        let mut queue: VecDeque<u32> = (0..states as u32)
+            .filter(|&s| good[s as usize])
+            .collect();
+        while let Some(g) = queue.pop_front() {
+            for &p in &preds[g as usize] {
+                if !good[p as usize] {
+                    good[p as usize] = true;
+                    queue.push_back(p);
+                }
+            }
+        }
+        // BFS ids are in nondecreasing depth order, so the first
+        // unmarked id is a minimal-depth counterexample.
+        for s in 0..states as u32 {
+            if good[s as usize] || deadlocked[s as usize] {
+                continue;
+            }
+            liveness_count += 1;
+            if counterexamples.len() < CX_CAP {
+                counterexamples.push(Counterexample {
+                    kind: ViolationKind::Liveness,
+                    schedule: schedule_to(&parent, s),
+                    violations: Vec::new(),
+                    depth: depth[s as usize],
+                });
+            }
+        }
+    }
+
+    let mut schedules: Vec<Vec<Action>> = converged_samples
+        .iter()
+        .map(|&s| schedule_to(&parent, s))
+        .collect();
+    let deepest_path = schedule_to(&parent, deepest);
+    if !schedules.contains(&deepest_path) {
+        schedules.push(deepest_path);
+    }
+
+    Ok(ExploreReport {
+        cfg: cfg.clone(),
+        states,
+        transitions,
+        dedup_hits,
+        max_depth_seen,
+        converged_states: converged_count,
+        truncated,
+        liveness_checked,
+        safety_violation_count: safety_count,
+        liveness_violation_count: liveness_count,
+        deadlock_count,
+        counterexamples,
+        schedules,
+    })
+}
+
+/// Can `start` reach a converged state using non-churn actions only?
+/// Bounded forward search used by the counterexample-replay harness to
+/// demonstrate that a pinned schedule really strands the network.
+pub fn churn_free_converges(start: &Model, max_states: usize) -> bool {
+    let mut seen: HashMap<Vec<u8>, ()> = HashMap::new();
+    let mut frontier: VecDeque<Vec<u8>> = VecDeque::new();
+    let key = start.canonical_key();
+    seen.insert(key.clone(), ());
+    frontier.push_back(key);
+    while let Some(key) = frontier.pop_front() {
+        let m = Model::decode(&start.cfg, &key);
+        if m.converged() {
+            return true;
+        }
+        for a in m.enabled_actions() {
+            if a.is_churn() {
+                continue;
+            }
+            let mut succ = m.clone();
+            succ.apply(&a);
+            let skey = succ.canonical_key();
+            if seen.len() >= max_states {
+                return false;
+            }
+            if !seen.contains_key(&skey) {
+                seen.insert(skey.clone(), ());
+                frontier.push_back(skey);
+            }
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ndmp::node::Mutation;
+
+    #[test]
+    fn tiny_clean_sweep_is_exhaustive_and_clean() {
+        let cfg = ModelConfig {
+            n: 3,
+            spaces: 1,
+            joins: 1,
+            fails: 0,
+            leaves: 0,
+            mutation: Mutation::None,
+        };
+        let report = explore(&cfg, &ExploreLimits::default()).unwrap();
+        assert!(report.ok(), "violations: {:?}", report.counterexamples);
+        assert!(!report.truncated);
+        assert!(report.liveness_checked);
+        assert!(report.converged_states >= 2, "root + post-join ideal");
+        assert!(report.dedup_hits > 0, "interleaving space must reconverge");
+        assert!(!report.schedules.is_empty());
+    }
+
+    #[test]
+    fn depth_cap_truncates_and_skips_liveness() {
+        let cfg = ModelConfig {
+            n: 3,
+            spaces: 1,
+            joins: 1,
+            fails: 0,
+            leaves: 0,
+            mutation: Mutation::None,
+        };
+        let report = explore(
+            &cfg,
+            &ExploreLimits {
+                max_depth: 1,
+                ..ExploreLimits::default()
+            },
+        )
+        .unwrap();
+        assert!(report.truncated);
+        assert!(!report.liveness_checked);
+        assert_eq!(report.liveness_violation_count, 0);
+        assert!(report.ok(), "a truncated sweep must not invent violations");
+    }
+
+    #[test]
+    fn churn_free_convergence_from_mid_join() {
+        let cfg = ModelConfig {
+            n: 3,
+            spaces: 1,
+            joins: 1,
+            fails: 0,
+            leaves: 0,
+            mutation: Mutation::None,
+        };
+        let mut m = Model::init(cfg);
+        m.apply(&Action::Join {
+            node: 2,
+            bootstrap: 0,
+        });
+        assert!(churn_free_converges(&m, 100_000));
+    }
+}

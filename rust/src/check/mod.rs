@@ -1,0 +1,38 @@
+//! Exhaustive model checking for the NDMP join / fail / leave and ring
+//! repair protocols (see `docs/model-checking.md`).
+//!
+//! The pieces:
+//!
+//! * [`model`] — the abstract network state: the *real*
+//!   [`crate::ndmp::NodeState`] engines under abstracted time, an
+//!   in-flight message multiset, and an enumerable [`model::Action`]
+//!   alphabet (deliver any pending message, tick any node, join / fail
+//!   / leave any id), deduped by a canonical byte encoding.
+//! * [`explore`] — BFS over the full interleaving space for small `n`,
+//!   checking safety on every state and churn-free convergence
+//!   (liveness) after the sweep, with minimal counterexample schedules
+//!   recovered through parent pointers.
+//! * [`props`] — the tiered safety predicates, built on the same
+//!   [`crate::sim::invariants`] the sampled scenario suites assert.
+//! * [`mutations`] — known-critical ring-repair lines flipped behind
+//!   the [`crate::ndmp::Mutation`] hook, each with a scenario where the
+//!   explorer provably catches it: the battery that proves the checker
+//!   can actually find bugs.
+//! * [`replay`] — counterexamples as parseable text schedules, replayed
+//!   through the abstract model and through the concrete
+//!   [`crate::sim::Simulator`] (the refinement link).
+//!
+//! Driven by `fedlay check` (CLI) and the `check_model` /
+//! `check_refinement` integration suites.
+
+pub mod explore;
+pub mod model;
+pub mod mutations;
+pub mod props;
+pub mod replay;
+
+pub use explore::{explore, Counterexample, ExploreLimits, ExploreReport, ViolationKind};
+pub use model::{Action, Envelope, Model, ModelConfig};
+pub use replay::{
+    format_schedule, parse_schedule, replay_abstract, replay_concrete, ConcreteReplay,
+};

@@ -1,0 +1,781 @@
+//! Abstract NDMP model: the real protocol engines under abstracted time.
+//!
+//! A [`Model`] is one state of the whole network — the live fleet's
+//! [`NodeState`] machines, the multiset of in-flight control messages,
+//! the ids still waiting to join, and the remaining churn budgets. The
+//! message handlers are **the shipped `ndmp::node` code**, not a
+//! re-implementation: what the explorer sweeps is the protocol the
+//! simulator and the TCP prototype run.
+//!
+//! Time is abstracted away, which is what makes the interleaving space
+//! finite:
+//!
+//! * every handler runs at `now = 0`, so `last_seen` stamps and the
+//!   heartbeat/probe timers are never consulted;
+//! * heartbeats never enter the in-flight multiset (they carry no
+//!   protocol state — their only job, failure detection, is replaced by
+//!   a global-liveness oracle);
+//! * [`Action::Tick`] condenses the periodic driver into "purge peers
+//!   the oracle says are dead, then self-probe if the views are off the
+//!   ideal", and is *enabled* only while the node has such work and has
+//!   no repair traffic outstanding — otherwise re-probing could grow the
+//!   multiset without bound.
+//!
+//! Because no transition reads a timestamp or a counter, two states with
+//! equal [`Model::canonical_key`] encodings (which skip those fields)
+//! have identical futures — the dedup-soundness argument spelled out in
+//! `docs/model-checking.md`.
+
+use crate::config::OverlayConfig;
+use crate::ndmp::node::{Mutation, NodeState, PeerInfo, SpaceView};
+use crate::ndmp::{Dir, Msg, Outgoing, Side};
+use crate::topology::{Membership, NeighborSnapshot, NodeId};
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+/// Exploration scenario: universe size, ring spaces, churn budgets, and
+/// the injected [`Mutation`] (`None` for the clean protocol).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    /// Universe size: node ids `0..n`. The last `joins` ids start
+    /// *pending* (they enter mid-exploration through the join protocol);
+    /// the first `n - joins` are live in the bootstrapped initial rings.
+    pub n: usize,
+    /// Virtual ring spaces `L` (degree bound `2L`).
+    pub spaces: usize,
+    /// How many universe ids start pending.
+    pub joins: usize,
+    /// Crash-failure budget.
+    pub fails: usize,
+    /// Graceful-leave budget.
+    pub leaves: usize,
+    /// Fault injection installed on every node (`Mutation::None` sweeps
+    /// the unmodified protocol).
+    pub mutation: Mutation,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        Self {
+            n: 4,
+            spaces: 2,
+            joins: 1,
+            fails: 1,
+            leaves: 1,
+            mutation: Mutation::None,
+        }
+    }
+}
+
+impl ModelConfig {
+    /// The overlay parameters the abstract fleet runs under. Timer
+    /// periods are irrelevant (time is abstracted) but kept at the
+    /// defaults so a concrete replay can reuse the same struct.
+    pub fn overlay(&self) -> OverlayConfig {
+        OverlayConfig {
+            spaces: self.spaces,
+            ..OverlayConfig::default()
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n >= 2, "need a universe of at least 2 ids");
+        anyhow::ensure!(
+            self.n <= 32,
+            "universe of {} ids is beyond exhaustive reach (max 32)",
+            self.n
+        );
+        anyhow::ensure!(self.spaces >= 1 && self.spaces <= 4, "spaces must be 1..=4");
+        anyhow::ensure!(
+            self.joins < self.n,
+            "at least one id must be live initially (joins < n)"
+        );
+        Ok(())
+    }
+
+    /// The ids live in the bootstrapped initial state.
+    pub fn initial_ids(&self) -> Vec<NodeId> {
+        (0..(self.n - self.joins) as NodeId).collect()
+    }
+}
+
+/// One in-flight protocol message. Delivery removes one instance of
+/// exactly this `(from, to, msg)` value from the multiset — mirroring
+/// the simulator, a message addressed to a dead node vanishes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub msg: Msg,
+}
+
+// Control messages carry no floats, so value equality is total here.
+impl Eq for Envelope {}
+
+impl Ord for Envelope {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.from, self.to, msg_rank(&self.msg)).cmp(&(
+            other.from,
+            other.to,
+            msg_rank(&other.msg),
+        ))
+    }
+}
+
+impl PartialOrd for Envelope {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+fn side_rank(side: Side) -> u64 {
+    match side {
+        Side::Prev => 0,
+        Side::Next => 1,
+    }
+}
+
+fn dir_rank(dir: Dir) -> u64 {
+    match dir {
+        Dir::Ccw => 0,
+        Dir::Cw => 1,
+    }
+}
+
+/// Total order key over the control subset of [`Msg`] (injective per
+/// variant), used for the canonical multiset order and the byte
+/// encoding. MEP payload variants never enter the abstract model.
+fn msg_rank(msg: &Msg) -> (u8, u64, u64, u64) {
+    match msg {
+        Msg::NeighborDiscovery { joiner, space } => (0, *joiner, *space as u64, 0),
+        Msg::DiscoveryResult { space, prev, next } => (1, *space as u64, *prev, *next),
+        Msg::AdjacentUpdate { space, side, node } => (2, *space as u64, side_rank(*side), *node),
+        Msg::Leave { space, side, other } => (3, *space as u64, side_rank(*side), *other),
+        Msg::Heartbeat => (4, 0, 0, 0),
+        Msg::NeighborRepair {
+            origin,
+            target,
+            space,
+            dir,
+        } => (5, *origin, *target, *space as u64 * 2 + dir_rank(*dir)),
+        Msg::RepairStop { space, dir } => (6, *space as u64, dir_rank(*dir), 0),
+        _ => (7, 0, 0, 0),
+    }
+}
+
+fn side_token(side: Side) -> &'static str {
+    match side {
+        Side::Prev => "prev",
+        Side::Next => "next",
+    }
+}
+
+fn dir_token(dir: Dir) -> &'static str {
+    match dir {
+        Dir::Ccw => "ccw",
+        Dir::Cw => "cw",
+    }
+}
+
+/// The schedule-text token of a control message (parsed back by
+/// [`crate::check::replay::parse_schedule`]).
+pub fn msg_token(msg: &Msg) -> String {
+    match msg {
+        Msg::NeighborDiscovery { joiner, space } => format!("discovery {joiner} {space}"),
+        Msg::DiscoveryResult { space, prev, next } => format!("result {space} {prev} {next}"),
+        Msg::AdjacentUpdate { space, side, node } => {
+            format!("update {space} {} {node}", side_token(*side))
+        }
+        Msg::Leave { space, side, other } => {
+            format!("leavemsg {space} {} {other}", side_token(*side))
+        }
+        Msg::Heartbeat => "heartbeat".to_string(),
+        Msg::NeighborRepair {
+            origin,
+            target,
+            space,
+            dir,
+        } => format!("repair {origin} {target} {space} {}", dir_token(*dir)),
+        Msg::RepairStop { space, dir } => format!("stop {space} {}", dir_token(*dir)),
+        _ => "mep".to_string(),
+    }
+}
+
+/// One step of a schedule: the enumerable transition alphabet.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Action {
+    /// A pending id starts the join protocol through a live bootstrap.
+    Join { node: NodeId, bootstrap: NodeId },
+    /// A live node crash-fails (silent; in-flight messages to it vanish
+    /// on delivery).
+    Fail { node: NodeId },
+    /// A live node departs gracefully (its `Leave` notices go in flight,
+    /// then it is gone).
+    Leave { node: NodeId },
+    /// The maintenance oracle fires at one node: purge globally-dead
+    /// peers (emitting directional repair probes) and self-probe if the
+    /// views are off the ideal adjacency.
+    Tick { node: NodeId },
+    /// Deliver one in-flight message.
+    Deliver(Envelope),
+}
+
+impl Action {
+    /// Churn actions are excluded from the liveness subgraph ("every
+    /// schedule with no *further* churn reaches correctness 1.0").
+    pub fn is_churn(&self) -> bool {
+        matches!(
+            self,
+            Action::Join { .. } | Action::Fail { .. } | Action::Leave { .. }
+        )
+    }
+}
+
+impl fmt::Display for Action {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Action::Join { node, bootstrap } => write!(f, "join {node} via {bootstrap}"),
+            Action::Fail { node } => write!(f, "fail {node}"),
+            Action::Leave { node } => write!(f, "leave {node}"),
+            Action::Tick { node } => write!(f, "tick {node}"),
+            Action::Deliver(e) => write!(f, "deliver {} {} {}", e.from, e.to, msg_token(&e.msg)),
+        }
+    }
+}
+
+/// Per-side ideal adjacency (the exact `SpaceView` per space) for every
+/// id of a live set: what a fully converged node's views must equal.
+/// Computed the same way `Simulator::bootstrap_correct` seeds a correct
+/// network — one `Membership` ring sort per space.
+pub fn ideal_views(ids: &[NodeId], spaces: usize) -> BTreeMap<NodeId, Vec<SpaceView>> {
+    let mut m = Membership::new(spaces);
+    for &id in ids {
+        m.add(id);
+    }
+    let mut tabs: Vec<BTreeMap<NodeId, (NodeId, NodeId)>> = Vec::with_capacity(spaces);
+    for s in 0..spaces {
+        let ring = m.ring(s);
+        let n = ring.len();
+        let mut tab = BTreeMap::new();
+        if n >= 2 {
+            for pos in 0..n {
+                tab.insert(
+                    ring[pos].id,
+                    (ring[(pos + n - 1) % n].id, ring[(pos + 1) % n].id),
+                );
+            }
+        }
+        tabs.push(tab);
+    }
+    ids.iter()
+        .map(|&id| {
+            let views = (0..spaces)
+                .map(|s| match tabs[s].get(&id) {
+                    Some(&(prev, next)) => SpaceView {
+                        prev: Some(prev),
+                        next: Some(next),
+                    },
+                    None => SpaceView::default(),
+                })
+                .collect();
+            (id, views)
+        })
+        .collect()
+}
+
+/// One abstract network state. See the module docs for the time
+/// abstraction and the finiteness argument.
+#[derive(Debug, Clone)]
+pub struct Model {
+    pub cfg: ModelConfig,
+    /// Live protocol engines, keyed by id.
+    pub nodes: BTreeMap<NodeId, NodeState>,
+    /// Universe ids that have not joined yet.
+    pub pending: BTreeSet<NodeId>,
+    pub fails_left: usize,
+    pub leaves_left: usize,
+    /// In-flight control messages, kept sorted (canonical multiset).
+    pub inflight: Vec<Envelope>,
+}
+
+impl Model {
+    /// The initial state: the first `n - joins` ids bootstrapped into
+    /// ideal rings (mirroring `Simulator::bootstrap_correct` — ideal
+    /// per-side views, peer tables seeded from the views), the rest
+    /// pending, nothing in flight.
+    pub fn init(cfg: ModelConfig) -> Self {
+        let overlay = cfg.overlay();
+        let initial = cfg.initial_ids();
+        let pending: BTreeSet<NodeId> =
+            ((cfg.n - cfg.joins) as NodeId..cfg.n as NodeId).collect();
+        let ideal = ideal_views(&initial, cfg.spaces);
+        let mut nodes = BTreeMap::new();
+        for &id in &initial {
+            let mut st = NodeState::new(id, overlay.clone(), 0);
+            st.mutation = cfg.mutation;
+            st.bootstrap_first();
+            st.views = ideal[&id].clone();
+            for v in ideal[&id].clone() {
+                for peer in [v.prev, v.next].into_iter().flatten() {
+                    st.peers.entry(peer).or_insert(PeerInfo { last_seen: 0 });
+                }
+            }
+            nodes.insert(id, st);
+        }
+        Model {
+            fails_left: cfg.fails,
+            leaves_left: cfg.leaves,
+            cfg,
+            nodes,
+            pending,
+            inflight: Vec::new(),
+        }
+    }
+
+    pub fn live_ids(&self) -> Vec<NodeId> {
+        self.nodes.keys().copied().collect()
+    }
+
+    /// Ring-adjacency snapshot of the live fleet, for the shared
+    /// [`crate::sim::invariants`] predicates.
+    pub fn ring_snapshot(&self) -> NeighborSnapshot {
+        self.nodes
+            .iter()
+            .map(|(&id, st)| (id, st.ring_neighbor_ids()))
+            .collect()
+    }
+
+    /// Does `u` have maintenance work: a peer the global-liveness oracle
+    /// knows is dead, or views off the ideal per-side adjacency?
+    fn tick_work(&self, u: NodeId, ideal: &BTreeMap<NodeId, Vec<SpaceView>>) -> bool {
+        let st = &self.nodes[&u];
+        let has_dead_peer = st.peers.keys().any(|p| !self.nodes.contains_key(p));
+        has_dead_peer || st.views != ideal[&u]
+    }
+
+    /// Finiteness gate: `u` still has repair traffic outstanding — a
+    /// probe it originated, or a `RepairStop` addressed to it. Ticking
+    /// again before that drains would accumulate probes without bound.
+    fn repair_outstanding(&self, u: NodeId) -> bool {
+        self.inflight.iter().any(|e| match &e.msg {
+            Msg::NeighborRepair { origin, .. } => *origin == u,
+            Msg::RepairStop { .. } => e.to == u,
+            _ => false,
+        })
+    }
+
+    /// Every enabled action, in a deterministic canonical order: churn
+    /// (joins, fails, leaves), then ticks, then one `Deliver` per
+    /// *distinct* in-flight envelope.
+    pub fn enabled_actions(&self) -> Vec<Action> {
+        let mut out = Vec::new();
+        if !self.nodes.is_empty() {
+            for &j in &self.pending {
+                for &b in self.nodes.keys() {
+                    out.push(Action::Join { node: j, bootstrap: b });
+                }
+            }
+        }
+        // keep at least one node alive so the network never vanishes
+        if self.nodes.len() >= 2 {
+            if self.fails_left > 0 {
+                for &u in self.nodes.keys() {
+                    out.push(Action::Fail { node: u });
+                }
+            }
+            if self.leaves_left > 0 {
+                for &u in self.nodes.keys() {
+                    out.push(Action::Leave { node: u });
+                }
+            }
+        }
+        let ideal = ideal_views(&self.live_ids(), self.cfg.spaces);
+        for &u in self.nodes.keys() {
+            if self.tick_work(u, &ideal) && !self.repair_outstanding(u) {
+                out.push(Action::Tick { node: u });
+            }
+        }
+        let mut prev: Option<&Envelope> = None;
+        for e in &self.inflight {
+            if prev != Some(e) {
+                out.push(Action::Deliver(e.clone()));
+            }
+            prev = Some(e);
+        }
+        out
+    }
+
+    /// Apply one action. Panics if the action is not applicable in this
+    /// state (a schedule replayed against the wrong state).
+    pub fn apply(&mut self, a: &Action) {
+        match a {
+            Action::Join { node, bootstrap } => {
+                assert!(self.pending.remove(node), "join of non-pending id {node}");
+                assert!(
+                    self.nodes.contains_key(bootstrap),
+                    "join via dead bootstrap {bootstrap}"
+                );
+                let mut st = NodeState::new(*node, self.cfg.overlay(), 0);
+                st.mutation = self.cfg.mutation;
+                let outs = st.start_join(*bootstrap, 0);
+                self.nodes.insert(*node, st);
+                self.enqueue(*node, outs);
+            }
+            Action::Fail { node } => {
+                self.nodes.remove(node).expect("fail of dead node");
+                self.fails_left -= 1;
+            }
+            Action::Leave { node } => {
+                let mut st = self.nodes.remove(node).expect("leave of dead node");
+                let outs = st.start_leave();
+                self.leaves_left -= 1;
+                self.enqueue(*node, outs);
+            }
+            Action::Tick { node } => {
+                let u = *node;
+                let dead: Vec<NodeId> = self.nodes[&u]
+                    .peers
+                    .keys()
+                    .filter(|p| !self.nodes.contains_key(*p))
+                    .copied()
+                    .collect();
+                let mut outs = Vec::new();
+                {
+                    let st = self.nodes.get_mut(&u).expect("tick of dead node");
+                    for d in &dead {
+                        outs.extend(st.declare_failed(*d, 0));
+                    }
+                }
+                // self-probe only if the purge left the views off the
+                // ideal (a survivor of a 2-ring has nothing to repair)
+                let ideal = ideal_views(&self.live_ids(), self.cfg.spaces);
+                let st = self.nodes.get_mut(&u).expect("tick of dead node");
+                if st.views != ideal[&u] {
+                    outs.extend(st.emit_self_probes());
+                }
+                self.enqueue(u, outs);
+            }
+            Action::Deliver(env) => {
+                let idx = self
+                    .inflight
+                    .iter()
+                    .position(|e| e == env)
+                    .expect("deliver of a message not in flight");
+                self.inflight.remove(idx);
+                // dead target: the message vanishes (crash-fail rule,
+                // identical to the simulator's Deliver arm)
+                if let Some(st) = self.nodes.get_mut(&env.to) {
+                    let outs = st.handle(env.from, env.msg.clone(), 0);
+                    self.enqueue(env.to, outs);
+                }
+            }
+        }
+    }
+
+    fn enqueue(&mut self, from: NodeId, outs: Vec<Outgoing>) {
+        for o in outs {
+            // self-sends are dropped exactly like `Simulator::dispatch`;
+            // heartbeats carry no protocol state and liveness is the
+            // oracle's job, so they never enter the multiset
+            if o.to == from || matches!(o.msg, Msg::Heartbeat) {
+                continue;
+            }
+            self.inflight.push(Envelope {
+                from,
+                to: o.to,
+                msg: o.msg,
+            });
+        }
+        self.inflight.sort_unstable();
+    }
+
+    /// A state is *converged* when nothing is in flight, every peer
+    /// table references live nodes only, and every node's per-side views
+    /// equal the ideal adjacency — which makes Definition-1 correctness
+    /// exactly 1.0 by construction (and implies ring symmetry and
+    /// ghost-freedom; the explorer cross-checks that with the shared
+    /// `sim::invariants` predicates).
+    pub fn converged(&self) -> bool {
+        if !self.inflight.is_empty() {
+            return false;
+        }
+        let ideal = ideal_views(&self.live_ids(), self.cfg.spaces);
+        self.nodes.iter().all(|(id, st)| {
+            st.peers.keys().all(|p| self.nodes.contains_key(p)) && st.views == ideal[id]
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // Canonical encoding
+    // ------------------------------------------------------------------
+
+    /// Canonical byte encoding of the behavior-relevant state: live ids
+    /// with joined flags, per-space views, peer keysets, the pending
+    /// set, churn budgets, and the sorted in-flight multiset. Timers,
+    /// counters, and `last_seen` stamps are deliberately excluded — with
+    /// time pinned to 0 no transition reads them, so equal encodings
+    /// imply identical futures.
+    pub fn canonical_key(&self) -> Vec<u8> {
+        let id8 = |id: NodeId| -> u8 {
+            debug_assert!(id < 255);
+            id as u8
+        };
+        let slot8 = |slot: Option<NodeId>| -> u8 { slot.map(|w| w as u8 + 1).unwrap_or(0) };
+        let mut k = Vec::with_capacity(64);
+        k.push(self.nodes.len() as u8);
+        for (&id, st) in &self.nodes {
+            k.push(id8(id));
+            k.push(st.joined as u8);
+            for v in &st.views {
+                k.push(slot8(v.prev));
+                k.push(slot8(v.next));
+            }
+            k.push(st.peers.len() as u8);
+            k.extend(st.peers.keys().map(|&p| id8(p)));
+        }
+        k.push(self.pending.len() as u8);
+        k.extend(self.pending.iter().map(|&p| id8(p)));
+        k.push(self.fails_left as u8);
+        k.push(self.leaves_left as u8);
+        k.extend((self.inflight.len() as u16).to_le_bytes());
+        for e in &self.inflight {
+            k.push(id8(e.from));
+            k.push(id8(e.to));
+            let (tag, a, b, c) = msg_rank(&e.msg);
+            k.push(tag);
+            k.push(a as u8);
+            k.push(b as u8);
+            k.push(c as u8);
+        }
+        k
+    }
+
+    /// Rebuild the full state from a canonical key (the explorer stores
+    /// only keys — a `Model` per state would be memory-prohibitive).
+    /// Exact inverse of [`Model::canonical_key`], pinned by a round-trip
+    /// test.
+    pub fn decode(cfg: &ModelConfig, key: &[u8]) -> Model {
+        let overlay = cfg.overlay();
+        let mut i = 0usize;
+        let mut next = |i: &mut usize| -> u8 {
+            let b = key[*i];
+            *i += 1;
+            b
+        };
+        let slot = |b: u8| -> Option<NodeId> {
+            if b == 0 {
+                None
+            } else {
+                Some(b as NodeId - 1)
+            }
+        };
+        let n_live = next(&mut i) as usize;
+        let mut nodes = BTreeMap::new();
+        for _ in 0..n_live {
+            let id = next(&mut i) as NodeId;
+            let joined = next(&mut i) != 0;
+            let mut st = NodeState::new(id, overlay.clone(), 0);
+            st.mutation = cfg.mutation;
+            st.joined = joined;
+            for s in 0..cfg.spaces {
+                let prev = slot(next(&mut i));
+                let nextn = slot(next(&mut i));
+                st.views[s] = SpaceView { prev, next: nextn };
+            }
+            let n_peers = next(&mut i) as usize;
+            for _ in 0..n_peers {
+                let p = next(&mut i) as NodeId;
+                st.peers.insert(p, PeerInfo { last_seen: 0 });
+            }
+            nodes.insert(id, st);
+        }
+        let n_pending = next(&mut i) as usize;
+        let mut pending = BTreeSet::new();
+        for _ in 0..n_pending {
+            pending.insert(next(&mut i) as NodeId);
+        }
+        let fails_left = next(&mut i) as usize;
+        let leaves_left = next(&mut i) as usize;
+        let n_msgs = u16::from_le_bytes([next(&mut i), next(&mut i)]) as usize;
+        let mut inflight = Vec::with_capacity(n_msgs);
+        for _ in 0..n_msgs {
+            let from = next(&mut i) as NodeId;
+            let to = next(&mut i) as NodeId;
+            let tag = next(&mut i);
+            let a = next(&mut i);
+            let b = next(&mut i);
+            let c = next(&mut i);
+            inflight.push(Envelope {
+                from,
+                to,
+                msg: decode_msg(tag, a, b, c),
+            });
+        }
+        debug_assert_eq!(i, key.len(), "canonical key not fully consumed");
+        Model {
+            cfg: cfg.clone(),
+            nodes,
+            pending,
+            fails_left,
+            leaves_left,
+            inflight,
+        }
+    }
+}
+
+fn decode_side(b: u8) -> Side {
+    if b == 0 {
+        Side::Prev
+    } else {
+        Side::Next
+    }
+}
+
+fn decode_dir(b: u8) -> Dir {
+    if b == 0 {
+        Dir::Ccw
+    } else {
+        Dir::Cw
+    }
+}
+
+fn decode_msg(tag: u8, a: u8, b: u8, c: u8) -> Msg {
+    match tag {
+        0 => Msg::NeighborDiscovery {
+            joiner: a as NodeId,
+            space: b as u32,
+        },
+        1 => Msg::DiscoveryResult {
+            space: a as u32,
+            prev: b as NodeId,
+            next: c as NodeId,
+        },
+        2 => Msg::AdjacentUpdate {
+            space: a as u32,
+            side: decode_side(b),
+            node: c as NodeId,
+        },
+        3 => Msg::Leave {
+            space: a as u32,
+            side: decode_side(b),
+            other: c as NodeId,
+        },
+        4 => Msg::Heartbeat,
+        5 => Msg::NeighborRepair {
+            origin: a as NodeId,
+            target: b as NodeId,
+            space: (c / 2) as u32,
+            dir: decode_dir(c % 2),
+        },
+        6 => Msg::RepairStop {
+            space: a as u32,
+            dir: decode_dir(b),
+        },
+        other => unreachable!("MEP tag {other} can never be in the abstract multiset"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_state_is_converged_and_stable() {
+        for n in 2..=5 {
+            for spaces in 1..=2 {
+                let cfg = ModelConfig {
+                    n,
+                    spaces,
+                    joins: 1,
+                    fails: 0,
+                    leaves: 0,
+                    mutation: Mutation::None,
+                };
+                let m = Model::init(cfg);
+                assert!(m.converged(), "n={n} L={spaces}: bootstrap not converged");
+                // no ticks enabled: the only enabled actions are joins
+                assert!(
+                    m.enabled_actions().iter().all(Action::is_churn),
+                    "n={n} L={spaces}: non-churn action enabled at the ideal state"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_key_round_trips_through_decode() {
+        let cfg = ModelConfig::default();
+        let mut m = Model::init(cfg.clone());
+        // walk a few transitions to cover joins, deliveries, and churn
+        for _ in 0..12 {
+            let key = m.canonical_key();
+            let back = Model::decode(&cfg, &key);
+            assert_eq!(back.canonical_key(), key);
+            assert_eq!(back.enabled_actions(), m.enabled_actions());
+            let acts = m.enabled_actions();
+            match acts.into_iter().next() {
+                Some(a) => m.apply(&a),
+                None => break,
+            }
+        }
+    }
+
+    #[test]
+    fn join_then_drain_converges() {
+        // deliver everything, tick anyone with work, repeat: the 2+1
+        // network must reach the ideal 3-ring
+        let cfg = ModelConfig {
+            n: 3,
+            spaces: 2,
+            joins: 1,
+            fails: 0,
+            leaves: 0,
+            mutation: Mutation::None,
+        };
+        let mut m = Model::init(cfg);
+        m.apply(&Action::Join {
+            node: 2,
+            bootstrap: 0,
+        });
+        for _ in 0..500 {
+            if m.converged() {
+                break;
+            }
+            let a = m
+                .enabled_actions()
+                .into_iter()
+                .find(|a| !a.is_churn())
+                .expect("not converged but no non-churn action enabled");
+            m.apply(&a);
+        }
+        assert!(m.converged(), "drain schedule did not converge");
+        assert_eq!(m.nodes.len(), 3);
+    }
+
+    #[test]
+    fn action_display_is_stable() {
+        let e = Envelope {
+            from: 1,
+            to: 2,
+            msg: Msg::NeighborRepair {
+                origin: 1,
+                target: 3,
+                space: 1,
+                dir: Dir::Ccw,
+            },
+        };
+        assert_eq!(
+            Action::Deliver(e).to_string(),
+            "deliver 1 2 repair 1 3 1 ccw"
+        );
+        assert_eq!(
+            Action::Join {
+                node: 4,
+                bootstrap: 0
+            }
+            .to_string(),
+            "join 4 via 0"
+        );
+    }
+}

@@ -1,0 +1,122 @@
+//! Mutation harness: known-critical ring-repair lines, flipped behind
+//! the test-only [`Mutation`] hook in `ndmp::node`, each paired with a
+//! small scenario where the explorer is *guaranteed* to catch it.
+//!
+//! This is the checker checking itself: if a future refactor weakens
+//! the explorer (or the tick gate accidentally masks real behavior),
+//! the mutation battery in `tests/check_model.rs` fails because an
+//! injected, known-real bug stops being detected.
+//!
+//! | mutation | broken line | caught as |
+//! |---|---|---|
+//! | `no-probes` | `fail_neighbor` / `tick` emit no self-probes | liveness: a failed adjacent's slot never heals |
+//! | `adopt-farther` | `maybe_adopt` prefers the arc-*farther* candidate | liveness: the true adjacent is rejected forever |
+//! | `flip-repair-sides` | repair terminal adopts on the wrong side (and `RepairStop` ditto) | liveness: correct adoptions monotone-rejected |
+//! | `adopt-untracked` | adoption skips `track_peer` | safety: `view-not-tracked` on first update-before-discovery interleaving |
+
+use crate::check::explore::ViolationKind;
+use crate::check::model::ModelConfig;
+use crate::ndmp::node::Mutation;
+
+/// Every injectable mutation, in battery order.
+pub const ALL: [Mutation; 4] = [
+    Mutation::NoRepairProbes,
+    Mutation::AdoptFarther,
+    Mutation::RepairSidesFlipped,
+    Mutation::AdoptUntracked,
+];
+
+/// Stable CLI / fixture name of a mutation.
+pub fn name(m: Mutation) -> &'static str {
+    match m {
+        Mutation::None => "none",
+        Mutation::NoRepairProbes => "no-probes",
+        Mutation::AdoptFarther => "adopt-farther",
+        Mutation::RepairSidesFlipped => "flip-repair-sides",
+        Mutation::AdoptUntracked => "adopt-untracked",
+    }
+}
+
+/// Inverse of [`name`].
+pub fn parse(s: &str) -> Option<Mutation> {
+    match s {
+        "none" => Some(Mutation::None),
+        "no-probes" => Some(Mutation::NoRepairProbes),
+        "adopt-farther" => Some(Mutation::AdoptFarther),
+        "flip-repair-sides" => Some(Mutation::RepairSidesFlipped),
+        "adopt-untracked" => Some(Mutation::AdoptUntracked),
+        _ => None,
+    }
+}
+
+/// One-line description for `fedlay check --mutation` output.
+pub fn describe(m: Mutation) -> &'static str {
+    match m {
+        Mutation::None => "unmodified protocol",
+        Mutation::NoRepairProbes => "failure handling and tick emit no repair self-probes",
+        Mutation::AdoptFarther => "repair adoption prefers the arc-farther candidate",
+        Mutation::RepairSidesFlipped => "repair terminal and RepairStop adopt on the wrong side",
+        Mutation::AdoptUntracked => "repair adoption skips peer tracking",
+    }
+}
+
+/// The smallest scenario on which the explorer provably detects `m`
+/// (argued case-by-case in `docs/model-checking.md`). Detection configs
+/// deliberately use `spaces = 1`: the per-side convergence predicate
+/// already distinguishes flipped sides, and one space keeps the
+/// guaranteed-detection sweep in the low thousands of states.
+pub fn detection_config(m: Mutation) -> ModelConfig {
+    let (n, joins, fails) = match m {
+        // a crash with no probes leaves per-side `None` slots that
+        // nothing can ever heal
+        Mutation::NoRepairProbes => (4, 0, 1),
+        // the displaced node can never adopt the closer joiner
+        Mutation::AdoptFarther => (3, 1, 0),
+        // needs 3+ survivors: in a 2-ring both sides point at the same
+        // node, which masks a side flip
+        Mutation::RepairSidesFlipped => (4, 0, 1),
+        // the joiner is adopted into views without being tracked on the
+        // deliver-update-before-discovery interleaving
+        Mutation::AdoptUntracked => (3, 1, 0),
+        Mutation::None => return ModelConfig::default(),
+    };
+    ModelConfig {
+        n,
+        spaces: 1,
+        joins,
+        fails,
+        leaves: 0,
+        mutation: m,
+    }
+}
+
+/// The property class the first counterexample must have when `m` is
+/// explored under its [`detection_config`].
+pub fn expected_kind(m: Mutation) -> ViolationKind {
+    match m {
+        Mutation::AdoptUntracked => ViolationKind::Safety,
+        _ => ViolationKind::Liveness,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for m in ALL.into_iter().chain([Mutation::None]) {
+            assert_eq!(parse(name(m)), Some(m));
+        }
+        assert_eq!(parse("bogus"), None);
+    }
+
+    #[test]
+    fn detection_configs_validate() {
+        for m in ALL {
+            let cfg = detection_config(m);
+            cfg.validate().unwrap();
+            assert_eq!(cfg.mutation, m);
+        }
+    }
+}

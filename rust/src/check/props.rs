@@ -1,0 +1,172 @@
+//! Safety properties checked on every explored state.
+//!
+//! Three tiers, by how much quiescence they assume:
+//!
+//! * [`step_violations`] must hold on **every** reachable state, even
+//!   mid-repair: degree ≤ 2L, no self-referencing view slot, every view
+//!   slot tracked in the peer table, no view slot pointing at an id that
+//!   has never joined, and the incremental [`IdealRings`] tally never
+//!   counting more correct links than Definition 1 requires.
+//! * [`settled_violations`] additionally apply once nothing is in
+//!   flight and no node still tracks a dead peer: ghost ring entries
+//!   are a bug the maintenance protocol should already have purged.
+//! * [`converged_violations`] apply to converged states only and defer
+//!   to the shared [`crate::sim::invariants`] battery (degree, ghosts,
+//!   symmetry, ring ≡ ideal) — the same predicates the sampled scenario
+//!   suites assert, so the two batteries cannot drift apart.
+
+use crate::check::model::Model;
+use crate::sim::invariants::{self, Violation};
+use crate::topology::IdealRings;
+
+fn violation(invariant: &'static str, detail: String) -> Violation {
+    Violation { invariant, detail }
+}
+
+/// Invariants of every reachable state (see module docs).
+pub fn step_violations(m: &Model) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let rings = m.ring_snapshot();
+    out.extend(invariants::degree_violations(&rings, m.cfg.spaces));
+    for (&id, st) in &m.nodes {
+        for (s, v) in st.views.iter().enumerate() {
+            for slot in [v.prev, v.next].into_iter().flatten() {
+                if slot == id {
+                    out.push(violation(
+                        "self-view",
+                        format!("node {id} space {s} points at itself"),
+                    ));
+                }
+                if !st.peers.contains_key(&slot) {
+                    out.push(violation(
+                        "view-not-tracked",
+                        format!("node {id} space {s} references untracked {slot}"),
+                    ));
+                }
+                if m.pending.contains(&slot) {
+                    out.push(violation(
+                        "view-of-unjoined",
+                        format!("node {id} space {s} references never-joined {slot}"),
+                    ));
+                }
+            }
+        }
+    }
+    out.extend(tally_violations(m));
+    out
+}
+
+/// Ghost-freedom once the network is *settled*: no messages in flight
+/// and every peer table references live nodes only. Any remaining ring
+/// entry pointing at a dead node can never be repaired.
+pub fn settled_violations(m: &Model) -> Vec<Violation> {
+    if !m.inflight.is_empty() {
+        return Vec::new();
+    }
+    let tracking_dead = m
+        .nodes
+        .values()
+        .any(|st| st.peers.keys().any(|p| !m.nodes.contains_key(p)));
+    if tracking_dead {
+        return Vec::new();
+    }
+    invariants::ghost_violations(&m.ring_snapshot())
+}
+
+/// The full shared converged-ring battery, applied to states the model
+/// itself claims are converged — a cross-check that [`Model::converged`]
+/// (per-side view equality) really implies Definition-1 set equality.
+pub fn converged_violations(m: &Model) -> Vec<Violation> {
+    invariants::converged_ring_violations(&m.ring_snapshot(), m.cfg.spaces)
+}
+
+/// Feed the state's live membership and ring views through the
+/// incremental [`IdealRings`] tally and require `present ≤ required`:
+/// the O(1) correctness maintenance may never report more correct links
+/// than Definition 1 defines.
+pub fn tally_violations(m: &Model) -> Vec<Violation> {
+    let mut tally = IdealRings::new(m.cfg.spaces);
+    for &id in m.nodes.keys() {
+        tally.add(id);
+    }
+    for (&id, st) in &m.nodes {
+        tally.refresh(id, &st.ring_neighbor_ids());
+    }
+    if tally.present() > tally.required() {
+        vec![violation(
+            "tally-overcount",
+            format!(
+                "IdealRings tally counts {} correct links but only {} are required",
+                tally.present(),
+                tally.required()
+            ),
+        )]
+    } else {
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::check::model::{Action, Model, ModelConfig};
+
+    #[test]
+    fn bootstrap_state_is_clean_at_all_tiers() {
+        let m = Model::init(ModelConfig::default());
+        assert!(step_violations(&m).is_empty());
+        assert!(settled_violations(&m).is_empty());
+        assert!(converged_violations(&m).is_empty());
+    }
+
+    #[test]
+    fn mid_join_states_stay_step_clean() {
+        let mut m = Model::init(ModelConfig {
+            n: 4,
+            spaces: 2,
+            joins: 1,
+            fails: 0,
+            leaves: 0,
+            ..ModelConfig::default()
+        });
+        m.apply(&Action::Join {
+            node: 3,
+            bootstrap: 0,
+        });
+        for _ in 0..300 {
+            assert!(
+                step_violations(&m).is_empty(),
+                "step violation mid-join: {:?}",
+                step_violations(&m)
+            );
+            let Some(a) = m.enabled_actions().into_iter().find(|a| !a.is_churn()) else {
+                break;
+            };
+            m.apply(&a);
+        }
+        assert!(m.converged());
+        assert!(converged_violations(&m).is_empty());
+    }
+
+    #[test]
+    fn ghost_in_settled_state_is_flagged() {
+        // force a settled state with a ghost by surgically removing a
+        // node without letting anyone purge it
+        let mut m = Model::init(ModelConfig {
+            n: 3,
+            spaces: 1,
+            joins: 0,
+            fails: 1,
+            leaves: 0,
+            ..ModelConfig::default()
+        });
+        m.apply(&Action::Fail { node: 2 });
+        // survivors still track node 2 => not settled yet
+        assert!(settled_violations(&m).is_empty());
+        for st in m.nodes.values_mut() {
+            st.peers.remove(&2);
+        }
+        // now settled, and views still reference 2: ghost
+        assert!(!settled_violations(&m).is_empty());
+    }
+}

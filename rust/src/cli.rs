@@ -7,6 +7,7 @@
 //!   train     — run a DFL method over the AOT runtime (Figs. 9-19)
 //!   node      — run one real TCP FedLay client (prototype mode)
 //!   bench     — run the perf micro-suite, emit BENCH_<suite>.json
+//!   check     — exhaustively model-check NDMP for a small universe
 //!
 //! Global flags: `--config <file>` and repeatable `--set key=value`.
 
@@ -29,7 +30,9 @@ pub fn parse_args(argv: &[String]) -> anyhow::Result<Args> {
     match it.next() {
         Some(cmd) if !cmd.starts_with("--") => args.command = cmd.clone(),
         Some(flag) => anyhow::bail!("expected a subcommand before {flag:?}"),
-        None => anyhow::bail!("usage: fedlay <topology|churn|scenario|train|node|bench> [flags]"),
+        None => {
+            anyhow::bail!("usage: fedlay <topology|churn|scenario|train|node|bench|check> [flags]")
+        }
     }
     while let Some(a) = it.next() {
         let Some(name) = a.strip_prefix("--") else {
@@ -180,6 +183,24 @@ USAGE:
                    when a gated hot-path entry (event queue,
                    correctness) regressed above --fail-ratio, default
                    2.0; schema in docs/perf.md)
+
+  fedlay check    [--n N] [--spaces L] [--joins J] [--fails F] [--leaves V]
+                  [--max-depth D] [--max-states S]
+                  [--mutation none|no-probes|adopt-farther|
+                              flip-repair-sides|adopt-untracked]
+                  [--expect-violation]
+                  (exhaustive model checking of the NDMP join/fail/leave
+                   and ring-repair protocols: BFS over every message /
+                   tick / churn interleaving of an N-id universe, safety
+                   invariants on every state, churn-free convergence as
+                   liveness, counterexamples printed as replayable
+                   schedules — docs/model-checking.md; --mutation
+                   injects a known repair bug and, with
+                   --expect-violation, requires the checker to catch it;
+                   the scenario sizing then defaults to that mutation's
+                   guaranteed-detection configuration; --max-depth /
+                   --max-states truncate the sweep, which skips the
+                   liveness verdict)
 
 GLOBAL FLAGS:
   --config <file>     TOML-subset config file

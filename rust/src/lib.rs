@@ -114,6 +114,23 @@
 //! archived per CI run. Architecture and the determinism argument live
 //! in `docs/perf.md`.
 //!
+//! ## Exhaustive model checking
+//!
+//! The NDMP join / fail / leave and ring-repair protocols are swept
+//! *exhaustively* for small networks by the [`check`] subsystem: an
+//! abstract model that runs the real [`ndmp::NodeState`] engines under
+//! abstracted time, a BFS explorer over every message/tick/churn
+//! interleaving (canonical-form dedup), tiered safety invariants shared
+//! with the scenario suites ([`sim::invariants`]), and churn-free
+//! convergence as the liveness property. A mutation harness
+//! ([`check::mutations`]) flips known-critical repair lines behind the
+//! test-only [`ndmp::Mutation`] hook and demands the explorer catch
+//! each one with a minimal counterexample, printed as a text schedule
+//! that replays through both the abstract model and the concrete
+//! [`sim::Simulator`] ([`check::replay`]). Run it with `fedlay check`;
+//! the design and the dedup-soundness argument live in
+//! `docs/model-checking.md`.
+//!
 //! The `runtime` module executes models behind a single `Engine` API:
 //! the PJRT CPU client running the AOT artifacts (feature `xla`), or a
 //! pure-Rust reference backend with the identical ABI that needs no
@@ -121,6 +138,7 @@
 
 pub mod baselines;
 pub mod bench_util;
+pub mod check;
 pub mod config;
 pub mod data;
 pub mod dfl;

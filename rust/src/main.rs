@@ -2,6 +2,7 @@
 
 use fedlay::baselines;
 use fedlay::bench_util;
+use fedlay::check::{self, mutations, ExploreLimits, ModelConfig};
 use fedlay::bench_util::{engine_suite, micro_suite, render_results, write_bench_json, Table};
 use fedlay::cli::{parse_args, Args, USAGE};
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
@@ -27,6 +28,7 @@ fn main() {
         "train" => args.no_positionals().and_then(|()| cmd_train(&args)),
         "node" => args.no_positionals().and_then(|()| cmd_node(&args)),
         "bench" => args.no_positionals().and_then(|()| cmd_bench(&args)),
+        "check" => args.no_positionals().and_then(|()| cmd_check(&args)),
         "help" | "--help" => {
             println!("{USAGE}");
             Ok(())
@@ -473,6 +475,92 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
             "bench regression on gated entries:\n  {}",
             regressions.join("\n  ")
         );
+    }
+    Ok(())
+}
+
+/// `fedlay check`: exhaustive model checking of the NDMP protocols
+/// (`check::explore`, design in docs/model-checking.md). With
+/// `--mutation` the scenario sizing defaults to that mutation's
+/// guaranteed-detection configuration, and `--expect-violation` inverts
+/// the exit semantics: *not* catching the injected bug is the failure.
+fn cmd_check(args: &Args) -> anyhow::Result<()> {
+    let mutation_name = args.str("mutation", "none");
+    let mutation = mutations::parse(&mutation_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown mutation {mutation_name:?} (expected none|no-probes|adopt-farther|\
+             flip-repair-sides|adopt-untracked)"
+        )
+    })?;
+    let base = mutations::detection_config(mutation);
+    let cfg = ModelConfig {
+        n: args.usize("n", base.n)?,
+        spaces: args.usize("spaces", base.spaces)?,
+        joins: args.usize("joins", base.joins)?,
+        fails: args.usize("fails", base.fails)?,
+        leaves: args.usize("leaves", base.leaves)?,
+        mutation,
+    };
+    let defaults = ExploreLimits::default();
+    let limits = ExploreLimits {
+        max_depth: args.u64("max-depth", defaults.max_depth as u64)? as u32,
+        max_states: args.usize("max-states", defaults.max_states)?,
+    };
+    println!(
+        "model checking NDMP: n={} spaces={} joins={} fails={} leaves={} mutation={}",
+        cfg.n,
+        cfg.spaces,
+        cfg.joins,
+        cfg.fails,
+        cfg.leaves,
+        mutations::name(mutation)
+    );
+    if mutation != fedlay::ndmp::Mutation::None {
+        println!("injected fault: {}", mutations::describe(mutation));
+    }
+    let report = check::explore(&cfg, &limits)?;
+    println!("{report}");
+    for (i, cx) in report.counterexamples.iter().enumerate() {
+        println!(
+            "\ncounterexample {} of {} ({}, depth {}) — replayable schedule:",
+            i + 1,
+            report.counterexamples.len(),
+            cx.kind,
+            cx.depth
+        );
+        for v in &cx.violations {
+            println!("# violated {v}");
+        }
+        if cx.schedule.is_empty() {
+            println!("# (initial state)");
+        }
+        print!("{}", check::format_schedule(&cx.schedule));
+    }
+    if args.bool("expect-violation") {
+        anyhow::ensure!(
+            !report.ok(),
+            "mutation {:?} was NOT caught — the checker has lost detection power",
+            mutations::name(mutation)
+        );
+        let first = &report.counterexamples[0];
+        let expected = mutations::expected_kind(mutation);
+        anyhow::ensure!(
+            first.kind == expected,
+            "mutation {:?} caught as {} but {} was expected",
+            mutations::name(mutation),
+            first.kind,
+            expected
+        );
+        println!("\ninjected violation detected as {expected}, as required");
+    } else {
+        anyhow::ensure!(
+            report.ok(),
+            "{} safety, {} liveness, {} deadlock violations found",
+            report.safety_violation_count,
+            report.liveness_violation_count,
+            report.deadlock_count
+        );
+        println!("\nno violations");
     }
     Ok(())
 }

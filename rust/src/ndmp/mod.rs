@@ -7,4 +7,4 @@ pub mod node;
 pub mod routing;
 
 pub use messages::{Dir, Msg, Outgoing, Side, Time, MS, SEC};
-pub use node::{NodeCounters, NodeState, PeerInfo, SpaceView};
+pub use node::{Mutation, NodeCounters, NodeState, PeerInfo, SpaceView};

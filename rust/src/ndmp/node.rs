@@ -59,6 +59,35 @@ impl NodeCounters {
     }
 }
 
+/// Fault injection for the model checker's mutation harness
+/// (`check::mutations`): each variant flips one known-critical line of
+/// the ring-repair logic so the exhaustive explorer can prove it *finds*
+/// the resulting violation. `Mutation::None` — the default everywhere —
+/// leaves every code path bitwise unchanged; production paths never set
+/// anything else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mutation {
+    /// Unmodified protocol.
+    #[default]
+    None,
+    /// Failure handling purges the dead neighbor but emits no directional
+    /// repair probes, and the proactive self-probes are suppressed — the
+    /// ring loses both of its repair mechanisms.
+    NoRepairProbes,
+    /// The monotone adoption guard is inverted: `maybe_adopt` keeps the
+    /// *farther* candidate whenever an incumbent exists.
+    AdoptFarther,
+    /// The probe-direction → ring-side mapping is flipped at *both*
+    /// repair adoption sites (the Theorem-2 terminal and the `RepairStop`
+    /// reply). A single flipped site is masked by the redundant
+    /// dual-channel repair; flipping both defeats it.
+    RepairSidesFlipped,
+    /// `maybe_adopt` installs the candidate in the ring view without
+    /// recording it in the peer table, so a view can reference a node the
+    /// failure detector will never observe.
+    AdoptUntracked,
+}
+
 #[derive(Debug, Clone)]
 pub struct NodeState {
     pub id: NodeId,
@@ -67,6 +96,9 @@ pub struct NodeState {
     pub peers: BTreeMap<NodeId, PeerInfo>,
     pub joined: bool,
     pub counters: NodeCounters,
+    /// Fault injection for the model-checking mutation harness; `None`
+    /// on every production path.
+    pub mutation: Mutation,
     next_heartbeat: Time,
     next_probe: Time,
 }
@@ -83,6 +115,7 @@ impl NodeState {
             peers: BTreeMap::new(),
             joined: false,
             counters: NodeCounters::default(),
+            mutation: Mutation::None,
             next_heartbeat: now + stagger,
             next_probe: now + stagger + cfg.repair_probe_ms * 500,
             cfg,
@@ -411,7 +444,12 @@ impl NodeState {
             Some(inc) => {
                 let cand_arc = dir_arc(dir, my_x, cand_x);
                 let inc_arc = dir_arc(dir, my_x, coord_of(inc, space));
-                cand_arc < inc_arc || (cand_arc == inc_arc && cand < inc)
+                let closer = cand_arc < inc_arc || (cand_arc == inc_arc && cand < inc);
+                if self.mutation == Mutation::AdoptFarther {
+                    !closer
+                } else {
+                    closer
+                }
             }
         };
         if adopt {
@@ -419,7 +457,9 @@ impl NodeState {
                 Side::Next => self.views[s].next.replace(cand),
                 Side::Prev => self.views[s].prev.replace(cand),
             };
-            self.track_peer(cand, now);
+            if self.mutation != Mutation::AdoptUntracked {
+                self.track_peer(cand, now);
+            }
             if let Some(o) = old {
                 self.forget_if_unreferenced(o);
             }
@@ -460,10 +500,16 @@ impl NodeState {
                 // of `target` from `origin`. The probe travelled `dir`, so
                 // the origin sits on our `dir` side.
                 if origin != self.id {
-                    let my_side = match dir {
+                    let mut my_side = match dir {
                         Dir::Ccw => Side::Prev, // probe moved ccw; origin is ccw of us
                         Dir::Cw => Side::Next,
                     };
+                    if self.mutation == Mutation::RepairSidesFlipped {
+                        my_side = match my_side {
+                            Side::Prev => Side::Next,
+                            Side::Next => Side::Prev,
+                        };
+                    }
                     self.maybe_adopt(space, my_side, origin, now);
                     self.send(&mut out, origin, Msg::RepairStop { space, dir });
                 }
@@ -486,6 +532,9 @@ impl NodeState {
             }
             if was_prev {
                 self.views[s].prev = None;
+            }
+            if self.mutation == Mutation::NoRepairProbes {
+                continue;
             }
             if was_next {
                 // dead was clockwise of us: probe counterclockwise (paper
@@ -567,25 +616,48 @@ impl NodeState {
         }
         if now >= self.next_probe {
             self.next_probe = now + self.cfg.repair_probe_ms * 1_000;
-            // proactive self-probes in both directions, every space
-            for space in 0..self.cfg.spaces as u32 {
-                for dir in [Dir::Ccw, Dir::Cw] {
-                    if let Some(w) = self.first_self_probe_hop(space, dir) {
-                        self.send(
-                            &mut out,
-                            w,
-                            Msg::NeighborRepair {
-                                origin: self.id,
-                                target: self.id,
-                                space,
-                                dir,
-                            },
-                        );
-                    }
+            out.extend(self.emit_self_probes());
+        }
+        out
+    }
+
+    /// Proactive bidirectional self-probes for every space (§III-B3,
+    /// "Neighbor repair for concurrent joins and failures"): hand a
+    /// directional probe targeting our own coordinate to the neighbor
+    /// with the smallest remaining arc and let routing take over. `tick`
+    /// fires this on the `repair_probe_ms` cadence; the model checker
+    /// (`check`), which abstracts timers away, calls it directly.
+    pub fn emit_self_probes(&mut self) -> Vec<Outgoing> {
+        let mut out = Vec::new();
+        if self.mutation == Mutation::NoRepairProbes {
+            return out;
+        }
+        for space in 0..self.cfg.spaces as u32 {
+            for dir in [Dir::Ccw, Dir::Cw] {
+                if let Some(w) = self.first_self_probe_hop(space, dir) {
+                    self.send(
+                        &mut out,
+                        w,
+                        Msg::NeighborRepair {
+                            origin: self.id,
+                            target: self.id,
+                            space,
+                            dir,
+                        },
+                    );
                 }
             }
         }
         out
+    }
+
+    /// Public entry to the failure-handling path: purge `dead` from views
+    /// and peers and emit directional repair probes for every space where
+    /// it was an adjacent. The simulator reaches this through `tick`'s
+    /// silence detector; the model checker, which abstracts time away,
+    /// declares failures through a global-liveness oracle instead.
+    pub fn declare_failed(&mut self, dead: NodeId, now: Time) -> Vec<Outgoing> {
+        self.fail_neighbor(dead, now)
     }
 
     // ------------------------------------------------------------------
@@ -635,10 +707,16 @@ impl NodeState {
                 // lies just *beyond* the target on the opposite side. A
                 // Ccw probe (fired when our NEXT died, paper Fig. 7) stops
                 // at the node clockwise of the target: our new NEXT.
-                let side = match dir {
+                let mut side = match dir {
                     Dir::Ccw => Side::Next,
                     Dir::Cw => Side::Prev,
                 };
+                if self.mutation == Mutation::RepairSidesFlipped {
+                    side = match side {
+                        Side::Prev => Side::Next,
+                        Side::Next => Side::Prev,
+                    };
+                }
                 self.maybe_adopt(space, side, from, now);
                 Vec::new()
             }

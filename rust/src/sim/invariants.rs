@@ -1,0 +1,196 @@
+//! Shared NDMP ring-invariant predicates.
+//!
+//! One definition of "the overlay is correct", consumed by both
+//! confidence suites so the sampled and exhaustive batteries can never
+//! drift apart:
+//!
+//! * the seeded property sweeps (`tests/scenario_properties.rs`) assert
+//!   these after quiescing a random churn scenario, and
+//! * the exhaustive model checker ([`crate::check`]) asserts them on
+//!   every converged state of the swept interleaving space, and its
+//!   counterexample-replay harness re-checks them on the concrete
+//!   [`crate::sim::Simulator`].
+//!
+//! Every predicate operates on plain [`NeighborSnapshot`] data so it is
+//! equally applicable to a live simulator (`Simulator::ring_snapshot`)
+//! and to the checker's abstract states.
+
+use crate::topology::{ideal_neighbor_sets, Membership, NeighborSnapshot, NodeId};
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// One violated invariant: which predicate failed plus a human-readable
+/// description of the offending node(s).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.invariant, self.detail)
+    }
+}
+
+fn violation(invariant: &'static str, detail: String) -> Violation {
+    Violation { invariant, detail }
+}
+
+/// Definition-1 degree bound: every ring view set has at most `2L`
+/// members (two adjacents per virtual space).
+pub fn degree_violations(rings: &NeighborSnapshot, spaces: usize) -> Vec<Violation> {
+    let cap = 2 * spaces;
+    rings
+        .iter()
+        .filter(|(_, nbrs)| nbrs.len() > cap)
+        .map(|(id, nbrs)| {
+            violation(
+                "degree",
+                format!("node {id} has ring degree {} > 2L = {cap}", nbrs.len()),
+            )
+        })
+        .collect()
+}
+
+/// No ghost neighbors: every ring entry points at a live node (a key of
+/// the snapshot).
+pub fn ghost_violations(rings: &NeighborSnapshot) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (id, nbrs) in rings {
+        for g in nbrs.iter().filter(|n| !rings.contains_key(n)) {
+            out.push(violation(
+                "no-ghosts",
+                format!("node {id} references departed node {g}"),
+            ));
+        }
+    }
+    out
+}
+
+/// Ring symmetry: `u ∈ ring(v)` ⇔ `v ∈ ring(u)` for live endpoints
+/// (entries pointing at dead nodes are [`ghost_violations`]' findings,
+/// not double-reported here).
+pub fn symmetry_violations(rings: &NeighborSnapshot) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (u, nbrs) in rings {
+        for v in nbrs {
+            if let Some(back) = rings.get(v) {
+                if !back.contains(u) {
+                    out.push(violation(
+                        "symmetry",
+                        format!("ring link {u} -> {v} has no reverse entry"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Ring ≡ ideal: the snapshot equals the Definition-1 ideal neighbor
+/// sets of exactly its live membership (stronger than correctness 1.0 —
+/// stale extra entries fail too).
+pub fn ideal_violations(rings: &NeighborSnapshot, spaces: usize) -> Vec<Violation> {
+    let mut m = Membership::new(spaces);
+    for &id in rings.keys() {
+        m.add(id);
+    }
+    let ideal = ideal_neighbor_sets(&m);
+    let mut out = Vec::new();
+    for (id, nbrs) in rings {
+        let want = ideal.get(id).cloned().unwrap_or_default();
+        if *nbrs != want {
+            out.push(violation(
+                "ring-vs-ideal",
+                format!("node {id} ring views {nbrs:?} != ideal {want:?}"),
+            ));
+        }
+    }
+    out
+}
+
+/// Membership arithmetic: the live set equals the expected set
+/// (initial + joins − fails − leaves). Reports *lost* nodes (expected
+/// but missing) and *zombies* (live but not expected).
+pub fn membership_violations(
+    live: &BTreeSet<NodeId>,
+    expected: &BTreeSet<NodeId>,
+) -> Vec<Violation> {
+    if live == expected {
+        return Vec::new();
+    }
+    let lost: Vec<_> = expected.difference(live).collect();
+    let zombies: Vec<_> = live.difference(expected).collect();
+    vec![violation(
+        "membership",
+        format!("lost {lost:?}, zombies {zombies:?}"),
+    )]
+}
+
+/// Every ring invariant a *converged* overlay must satisfy at once:
+/// degree ≤ 2L, no ghosts, symmetric links, and ring ≡ ideal.
+pub fn converged_ring_violations(rings: &NeighborSnapshot, spaces: usize) -> Vec<Violation> {
+    let mut out = degree_violations(rings, spaces);
+    out.extend(ghost_violations(rings));
+    out.extend(symmetry_violations(rings));
+    out.extend(ideal_violations(rings, spaces));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(edges: &[(NodeId, &[NodeId])]) -> NeighborSnapshot {
+        edges
+            .iter()
+            .map(|(id, nbrs)| (*id, nbrs.iter().copied().collect()))
+            .collect()
+    }
+
+    #[test]
+    fn clean_two_ring_passes_everything() {
+        let rings = snap(&[(1, &[2]), (2, &[1])]);
+        assert!(converged_ring_violations(&rings, 1).is_empty());
+    }
+
+    #[test]
+    fn ghost_and_asymmetry_are_reported_separately() {
+        // 1 -> 9 is a ghost (9 not live); 2 -> 1 lacks a reverse entry
+        let rings = snap(&[(1, &[9]), (2, &[1])]);
+        assert_eq!(ghost_violations(&rings).len(), 1);
+        assert_eq!(symmetry_violations(&rings).len(), 1);
+    }
+
+    #[test]
+    fn degree_bound_uses_2l() {
+        let rings = snap(&[(1, &[2, 3, 4]), (2, &[1]), (3, &[1]), (4, &[1])]);
+        assert_eq!(degree_violations(&rings, 1).len(), 1);
+        assert!(degree_violations(&rings, 2).is_empty());
+    }
+
+    #[test]
+    fn ideal_comparison_catches_stale_extras() {
+        // the true 3-ring for ids {1,2,3} is all-pairs at L=1; drop one
+        // link and add nothing: ideal check must flag both endpoints
+        let mut m = Membership::new(1);
+        for id in [1, 2, 3] {
+            m.add(id);
+        }
+        let mut rings: NeighborSnapshot = ideal_neighbor_sets(&m);
+        let removed = rings.get_mut(&1).unwrap().pop_last().unwrap();
+        rings.get_mut(&removed).unwrap().remove(&1);
+        assert_eq!(ideal_violations(&rings, 1).len(), 2);
+    }
+
+    #[test]
+    fn membership_reports_lost_and_zombies() {
+        let live: BTreeSet<NodeId> = [1, 2, 9].into_iter().collect();
+        let expected: BTreeSet<NodeId> = [1, 2, 3].into_iter().collect();
+        let v = membership_violations(&live, &expected);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains('3') && v[0].detail.contains('9'));
+        assert!(membership_violations(&expected, &expected).is_empty());
+    }
+}

@@ -13,6 +13,7 @@
 pub mod arena;
 pub mod churn;
 pub mod event;
+pub mod invariants;
 pub mod network;
 pub mod runner;
 pub mod sched;

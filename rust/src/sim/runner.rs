@@ -24,7 +24,7 @@ use super::network::SimTransport;
 use super::transport::Transport;
 use crate::config::{NetConfig, OverlayConfig};
 use crate::ndmp::messages::{Msg, Outgoing, Time, MS};
-use crate::ndmp::node::{NodeCounters, NodeState};
+use crate::ndmp::node::{Mutation, NodeCounters, NodeState};
 use crate::ndmp::routing::coord_of;
 use crate::topology::{correctness, IdealRings, NeighborSnapshot, NodeId};
 use rayon::prelude::*;
@@ -127,6 +127,9 @@ pub struct Simulator {
     /// default (the trace grows with every message).
     record_deliveries: bool,
     pub delivery_log: Vec<(Time, NodeId, NodeId)>,
+    /// Fault injection installed on every node this simulator creates
+    /// (`Mutation::None` outside the model checker's replay harness).
+    mutation: Mutation,
 }
 
 impl Simulator {
@@ -160,7 +163,21 @@ impl Simulator {
             view_change_count: 0,
             record_deliveries: false,
             delivery_log: Vec::new(),
+            mutation: Mutation::None,
         }
+    }
+
+    /// Install a fault-injection [`Mutation`] on every node this
+    /// simulator creates, so the model checker's counterexample schedules
+    /// replay concretely against the *same* mutated protocol the abstract
+    /// explorer swept. Must be called before any bootstrap or join so the
+    /// whole fleet runs one protocol variant.
+    pub fn set_mutation(&mut self, m: Mutation) {
+        assert!(
+            self.live_count() == 0,
+            "set_mutation must be called before any bootstrap"
+        );
+        self.mutation = m;
     }
 
     /// Partition the simulator into `k` coordinate-arc shards. Must be
@@ -344,6 +361,7 @@ impl Simulator {
         }
         for &id in ids {
             let mut st = NodeState::new(id, self.cfg.clone(), self.now);
+            st.mutation = self.mutation;
             st.bootstrap_first();
             for (s, tab) in adjacency.iter().enumerate() {
                 if let Some(&(prev, next)) = tab.get(&id) {
@@ -376,6 +394,7 @@ impl Simulator {
     /// Start an empty network with a single node.
     pub fn bootstrap_single(&mut self, id: NodeId) {
         let mut st = NodeState::new(id, self.cfg.clone(), self.now);
+        st.mutation = self.mutation;
         st.bootstrap_first();
         self.transport.open(id).expect("transport endpoint");
         self.insert_node(st);
@@ -637,6 +656,7 @@ impl Simulator {
                     return; // endpoint unavailable: the join is lost
                 }
                 let mut st = NodeState::new(node, self.cfg.clone(), now);
+                st.mutation = self.mutation;
                 let outs = st.start_join(bootstrap, now);
                 self.insert_node(st);
                 // splice the joiner into the persistent ideal rings and

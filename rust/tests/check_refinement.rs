@@ -1,0 +1,117 @@
+//! Refinement between the abstract model and the concrete engine
+//! (tier: exhaustive).
+//!
+//! Two directions:
+//!
+//! * schedules the explorer sampled on the *clean* protocol replay
+//!   through the real `sim::Simulator` and land on a converged overlay
+//!   satisfying the shared invariant battery — the abstract convergence
+//!   verdict holds concretely;
+//! * the pinned mutation counterexample (`fixtures/mutation_noprobes.schedule`)
+//!   reproduces the same defect concretely: under the mutation the
+//!   simulator never quiesces and the final state violates the shared
+//!   invariants; without it the identical churn converges cleanly.
+
+use fedlay::check::{
+    explore, mutations, parse_schedule, replay_abstract, replay_concrete, ExploreLimits,
+    ModelConfig, ViolationKind,
+};
+use fedlay::check::explore::churn_free_converges;
+use fedlay::ndmp::Mutation;
+
+#[test]
+fn clean_sampled_schedules_replay_concretely() {
+    let cfg = ModelConfig {
+        n: 3,
+        spaces: 2,
+        joins: 1,
+        fails: 1,
+        leaves: 0,
+        mutation: Mutation::None,
+    };
+    let report = explore(&cfg, &ExploreLimits::default()).unwrap();
+    assert!(report.ok() && !report.truncated);
+    assert!(!report.schedules.is_empty());
+    for schedule in &report.schedules {
+        // abstractly: the sampled state (or any state, after the churn
+        // in the schedule) still converges without further churn
+        let m = replay_abstract(&cfg, schedule);
+        assert!(
+            churn_free_converges(&m, 200_000),
+            "abstract state after {schedule:?} cannot converge"
+        );
+        // concretely: the same churn through the real simulator reaches
+        // a correct overlay satisfying the shared invariant battery
+        let concrete = replay_concrete(&cfg, schedule);
+        assert!(
+            concrete.converged,
+            "concrete replay of {schedule:?} did not quiesce"
+        );
+        assert!(
+            concrete.violations.is_empty(),
+            "concrete replay of {schedule:?} violated: {:?}",
+            concrete.violations
+        );
+        assert!(
+            (concrete.correctness - 1.0).abs() < 1e-12,
+            "correctness {} != 1.0",
+            concrete.correctness
+        );
+    }
+}
+
+#[test]
+fn pinned_noprobes_counterexample_is_current_and_replays() {
+    let text = std::fs::read_to_string(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/tests/fixtures/mutation_noprobes.schedule"
+    ))
+    .unwrap();
+    let pinned = parse_schedule(&text).unwrap();
+
+    // the fixture is exactly what the explorer reports today: first
+    // liveness counterexample under the guaranteed-detection config
+    let cfg = mutations::detection_config(Mutation::NoRepairProbes);
+    let report = explore(&cfg, &ExploreLimits::default()).unwrap();
+    let first = report
+        .counterexamples
+        .iter()
+        .find(|c| c.kind == ViolationKind::Liveness)
+        .expect("no-probes must yield a liveness counterexample");
+    assert_eq!(
+        first.schedule, pinned,
+        "explorer's minimal counterexample drifted from the pinned fixture \
+         — regenerate tests/fixtures/mutation_noprobes.schedule"
+    );
+
+    // abstract replay: the post-schedule state can never converge
+    let stranded = replay_abstract(&cfg, &pinned);
+    assert!(
+        !churn_free_converges(&stranded, 200_000),
+        "pinned schedule no longer strands the abstract model"
+    );
+
+    // concrete replay under the mutation: same defect in the real engine
+    let broken = replay_concrete(&cfg, &pinned);
+    assert!(
+        !broken.converged,
+        "mutated simulator quiesced despite the missing repair probes"
+    );
+    assert!(
+        !broken.violations.is_empty(),
+        "mutated simulator final state unexpectedly satisfies all invariants"
+    );
+
+    // control: identical churn without the mutation heals completely
+    let clean_cfg = ModelConfig {
+        mutation: Mutation::None,
+        ..cfg
+    };
+    let healed = replay_concrete(&clean_cfg, &pinned);
+    assert!(healed.converged, "clean replay failed to quiesce");
+    assert!(
+        healed.violations.is_empty(),
+        "clean replay violated: {:?}",
+        healed.violations
+    );
+}

@@ -22,6 +22,103 @@ use fedlay::util::Rng;
 use std::collections::BTreeSet;
 
 // ----------------------------------------------------------------------
+// Layer 0: direct n < 4 edge arithmetic — literal expectations, no
+// oracle, so a bug shared by tracker and batch builder still fails
+// ----------------------------------------------------------------------
+
+fn set(ids: &[NodeId]) -> BTreeSet<NodeId> {
+    ids.iter().copied().collect()
+}
+
+#[test]
+fn inserting_into_a_two_ring_never_unlinks_the_pair() {
+    for spaces in 1..=3 {
+        let mut t = IdealRings::new(spaces);
+        t.add(0);
+        assert!(
+            t.ideal_snapshot()[&0].is_empty(),
+            "L={spaces}: a singleton has no ideal links"
+        );
+        t.add(1);
+        assert_eq!(t.ideal_snapshot()[&0], set(&[1]));
+        assert_eq!(t.ideal_snapshot()[&1], set(&[0]));
+        assert_eq!(t.required(), 2, "L={spaces}: 2-ring union is one link");
+        // growing 2 -> 3: splicing the newcomer between the pair must not
+        // drop the existing link (a 3-ring is all-pairs in every space)
+        t.add(2);
+        let snap = t.ideal_snapshot();
+        assert_eq!(snap[&0], set(&[1, 2]), "L={spaces}: 0 lost a link at 2 -> 3");
+        assert_eq!(snap[&1], set(&[0, 2]), "L={spaces}: 1 lost a link at 2 -> 3");
+        assert_eq!(snap[&2], set(&[0, 1]));
+        assert_eq!(t.required(), 6);
+    }
+}
+
+#[test]
+fn removing_from_a_three_ring_never_rewelds_extras() {
+    for spaces in 1..=3 {
+        for victim in 0..3u64 {
+            let mut t = IdealRings::new(spaces);
+            for id in 0..3 {
+                t.add(id);
+            }
+            let touched = t.remove(victim);
+            let survivors: Vec<NodeId> = (0..3).filter(|&x| x != victim).collect();
+            for s in &survivors {
+                assert!(
+                    touched.contains(s),
+                    "L={spaces}: survivor {s} not reported touched by remove({victim})"
+                );
+            }
+            let snap = t.ideal_snapshot();
+            assert_eq!(snap.len(), 2, "L={spaces}: victim {victim} still present");
+            // exactly the pair link: no duplicate entries, no self-link,
+            // and no stale edge back to the removed node
+            assert_eq!(snap[&survivors[0]], set(&[survivors[1]]));
+            assert_eq!(snap[&survivors[1]], set(&[survivors[0]]));
+            assert_eq!(t.required(), 2);
+            // shrink to a singleton: the self-weld must not appear
+            t.remove(survivors[0]);
+            assert!(
+                t.ideal_snapshot()[&survivors[1]].is_empty(),
+                "L={spaces}: singleton acquired a link after shrink to 1"
+            );
+            assert_eq!(t.required(), 0);
+        }
+    }
+}
+
+#[test]
+fn duplicate_coordinate_ties_resolve_deterministically_and_stay_exact() {
+    for spaces in 1..=3 {
+        let mut t = IdealRings::new(spaces);
+        t.add(7);
+        // 3 and 11 collide with 7's coordinates in every space: ring
+        // order among the tie group falls back to the id tie-break
+        t.add_with_coords(3, VirtualCoords::from_id(7, spaces));
+        t.add_with_coords(11, VirtualCoords::from_id(7, spaces));
+        let snap = t.ideal_snapshot();
+        assert_eq!(snap[&3], set(&[7, 11]), "L={spaces}: tie trio not all-pairs");
+        assert_eq!(snap[&7], set(&[3, 11]));
+        assert_eq!(snap[&11], set(&[3, 7]));
+        // removing the coordinate owner leaves the two imposters as a
+        // clean pair (their edges spliced, nothing re-welded to 7)
+        let touched = t.remove(7);
+        for s in [3u64, 11] {
+            assert!(touched.contains(&s), "L={spaces}: {s} not touched");
+        }
+        let snap = t.ideal_snapshot();
+        assert_eq!(snap[&3], set(&[11]));
+        assert_eq!(snap[&11], set(&[3]));
+        // the survivors' tallies still reach exactly 1.0 on exact sets
+        t.refresh(3, &set(&[11]));
+        t.refresh(11, &set(&[3]));
+        assert_eq!(t.present(), t.required(), "L={spaces}: tally drift");
+        assert_eq!(t.correctness(), 1.0);
+    }
+}
+
+// ----------------------------------------------------------------------
 // Layer 1: the tracker against the batch oracle, event by event
 // ----------------------------------------------------------------------
 

@@ -9,7 +9,11 @@
 //!   * goldens live in `tests/golden/<name>.txt`;
 //!   * a missing golden is blessed from the current run (first run on a
 //!     fresh scenario) — commit the generated file;
-//!   * an intentional change is re-blessed with `FEDLAY_BLESS=1`.
+//!   * an intentional change is re-blessed with `FEDLAY_BLESS=1`;
+//!   * with `FEDLAY_REQUIRE_GOLDEN=1` (set in CI) a missing golden is a
+//!     hard failure instead of a self-bless, so the suite actually
+//!     *gates*: a deleted or never-committed golden cannot silently
+//!     bless itself green on a fresh checkout.
 
 use fedlay::config::{DflConfig, MultiTaskSpec, NetConfig, OverlayConfig};
 use fedlay::dfl::{multitask, MethodSpec};
@@ -76,10 +80,19 @@ fn run_golden(name: &str, spec: &ScenarioSpec) {
 }
 
 /// Compare `got` against `tests/golden/<name>.txt`, blessing a missing
-/// golden from the current run (`FEDLAY_BLESS=1` re-blesses).
+/// golden from the current run (`FEDLAY_BLESS=1` re-blesses;
+/// `FEDLAY_REQUIRE_GOLDEN=1` turns a missing golden into a failure).
 fn compare_golden(name: &str, got: &str) {
     let path = golden_dir().join(format!("{name}.txt"));
     let bless = std::env::var("FEDLAY_BLESS").is_ok();
+    if !bless && !path.exists() && std::env::var("FEDLAY_REQUIRE_GOLDEN").is_ok() {
+        panic!(
+            "golden {} is missing and FEDLAY_REQUIRE_GOLDEN is set.\n\
+             Generate it locally with `FEDLAY_BLESS=1 cargo test --test \
+             scenario_golden` and commit tests/golden/{name}.txt.",
+            path.display()
+        );
+    }
     if bless || !path.exists() {
         fs::create_dir_all(golden_dir()).expect("create golden dir");
         fs::write(&path, got).expect("write golden");

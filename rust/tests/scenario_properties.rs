@@ -17,10 +17,8 @@
 
 use fedlay::config::{NetConfig, OverlayConfig};
 use fedlay::ndmp::messages::{MS, SEC};
-use fedlay::sim::scenario::ring_matches_ideal;
-use fedlay::sim::{
-    quiesce, ring_quality, ChurnCounts, ChurnOp, Phase, PhaseKind, ScenarioSpec,
-};
+use fedlay::sim::invariants;
+use fedlay::sim::{quiesce, ChurnCounts, ChurnOp, Phase, PhaseKind, ScenarioSpec};
 use fedlay::topology::NodeId;
 use fedlay::util::Rng;
 use std::collections::BTreeSet;
@@ -110,7 +108,8 @@ fn check(spec: &ScenarioSpec) -> Result<(), String> {
     }
 
     // membership arithmetic: exactly the scheduled joins entered, exactly
-    // the scheduled fails/leaves left
+    // the scheduled fails/leaves left (shared `sim::invariants` battery —
+    // the exhaustive model checker asserts the same predicates)
     let mut expected: BTreeSet<NodeId> = (0..spec.initial as NodeId).collect();
     let mut removed: BTreeSet<NodeId> = BTreeSet::new();
     for e in &events {
@@ -125,33 +124,23 @@ fn check(spec: &ScenarioSpec) -> Result<(), String> {
         }
     }
     let live: BTreeSet<NodeId> = sim.node_ids().into_iter().collect();
-    if live != expected {
-        let lost: Vec<_> = expected.difference(&live).collect();
-        let zombies: Vec<_> = live.difference(&expected).collect();
+    if let Some(v) = invariants::membership_violations(&live, &expected).first() {
         return Err(format!(
-            "membership mismatch: lost {lost:?}, zombies {zombies:?} \
-             (initial {} + {} joins - {} fails - {} leaves)",
+            "{v} (initial {} + {} joins - {} fails - {} leaves)",
             spec.initial, counts.joins, counts.fails, counts.leaves
         ));
     }
 
-    // ring quality: symmetric, degree-bounded, correctness exactly 1.0
-    let q = ring_quality(&sim);
-    if (q.correctness - 1.0).abs() > 1e-12 {
-        return Err(format!("ring correctness {:.6} != 1.0", q.correctness));
+    // correctness exactly 1.0, then the full converged-ring battery:
+    // degree ≤ 2L, no ghosts, symmetric links, ring ≡ ideal
+    let correctness = sim.correctness();
+    if (correctness - 1.0).abs() > 1e-12 {
+        return Err(format!("ring correctness {correctness:.6} != 1.0"));
     }
-    if q.asymmetric_links != 0 {
-        return Err(format!("{} asymmetric ring links", q.asymmetric_links));
-    }
-    if q.ghost_entries != 0 {
-        return Err(format!("{} ghost ring entries", q.ghost_entries));
-    }
-    if q.max_degree > 2 * spec.overlay.spaces {
-        return Err(format!(
-            "degree bound violated: {} > 2L = {}",
-            q.max_degree,
-            2 * spec.overlay.spaces
-        ));
+    if let Some(v) =
+        invariants::converged_ring_violations(&sim.ring_snapshot(), spec.overlay.spaces).first()
+    {
+        return Err(v.to_string());
     }
 
     // ghost entries for departed nodes must also drain from the peer
@@ -162,8 +151,10 @@ fn check(spec: &ScenarioSpec) -> Result<(), String> {
             return Err(format!("node {id} still references departed node {g}"));
         }
     }
-    if !ring_matches_ideal(&sim) {
-        return Err("rings drifted off the ideal after quiescence".into());
+    if let Some(v) =
+        invariants::converged_ring_violations(&sim.ring_snapshot(), spec.overlay.spaces).first()
+    {
+        return Err(format!("after settle window: {v}"));
     }
     Ok(())
 }
